@@ -1,0 +1,82 @@
+//! L3 coordinator profile: where a training step's wall-clock goes.
+//!
+//! Decomposes the hot loop into (a) batch synthesis, (b) host->literal
+//! conversion, (c) XLA execution + readback, and separately times the PTQ
+//! pipeline stages (act_collect, range estimation, eval_quant). This is
+//! the measurement behind EXPERIMENTS.md §Perf / DESIGN.md §8.
+//!
+//! Run: cargo bench --bench bench_pipeline
+
+use std::time::Instant;
+
+use qtx::coordinator::calibrator::{calibrate, CollectOptions};
+use qtx::coordinator::evaluator::evaluate;
+use qtx::coordinator::quantize::{quantized_eval, QuantSpec};
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream};
+use qtx::quant::estimators::EstimatorKind;
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let (root, _) = qtx::coordinator::experiment::default_paths();
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&root, "bert_tiny_softmax")?;
+    let cfg = art.manifest.config.clone();
+    let n = std::env::var("QTX_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(16usize);
+
+    // (a) batch synthesis alone
+    let mut provider = make_provider(&cfg, 0, Stream::Train);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(provider.next_batch());
+    }
+    let batch_ms = t0.elapsed().as_secs_f64() * 1000.0 / n as f64;
+
+    // (b) literal conversion alone
+    let batch = provider.next_batch();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        for (_, v) in &batch.values {
+            std::hint::black_box(v.to_literal()?);
+        }
+    }
+    let lit_ms = t0.elapsed().as_secs_f64() * 1000.0 / n as f64;
+
+    // (c) full training step (execution dominates)
+    let warm = TrainOptions { log_every: 0, ..TrainOptions::new(0, 3) };
+    train(&rt, &art, &warm, provider.as_mut())?;
+    let opts = TrainOptions { log_every: 0, ..TrainOptions::new(0, n) };
+    let res = train(&rt, &art, &opts, provider.as_mut())?;
+    let step_ms = 1000.0 / res.steps_per_sec;
+
+    // PTQ stages
+    let params = res.params;
+    let copts = CollectOptions { gamma: 0.0, zeta: 1.0, gate_scale: 1.0 };
+    let mut calib_p = make_provider(&cfg, 1, Stream::Calibration);
+    let t0 = Instant::now();
+    let cal = calibrate(&rt, &art, &params, calib_p.as_mut(), 4, EstimatorKind::Percentile { pct: 99.999 }, &copts, 1)?;
+    let calib_ms = t0.elapsed().as_secs_f64() * 1000.0 / 4.0;
+    let t0 = Instant::now();
+    std::hint::black_box(cal.finalize(8));
+    let finalize_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    let mut eval_p = make_provider(&cfg, 0, Stream::Eval);
+    let t0 = Instant::now();
+    evaluate(&rt, &art, &params, eval_p.as_mut(), 4, 0.0, 1.0, 1.0)?;
+    let eval_ms = t0.elapsed().as_secs_f64() * 1000.0 / 4.0;
+
+    let t0 = Instant::now();
+    quantized_eval(&rt, &art, &params, &QuantSpec { calib_batches: 4, ..QuantSpec::w8a8() }, 0.0, 1.0, 1.0, 4, 1)?;
+    let ptq_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    println!("\n## L3 pipeline profile (bert_tiny, ms)\n");
+    println!("batch synthesis        {batch_ms:9.3} /batch");
+    println!("literal conversion     {lit_ms:9.3} /batch");
+    println!("train_step total       {step_ms:9.3} /step   (execute+readback = total - batch - lit ≈ {:.3})", step_ms - batch_ms - lit_ms);
+    println!("act_collect            {calib_ms:9.3} /batch");
+    println!("range finalize (8b)    {finalize_ms:9.3} once");
+    println!("eval_step              {eval_ms:9.3} /batch");
+    println!("full PTQ (4+4 batches) {ptq_ms:9.3} once");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Table 11 analogue: training-step runtime of vanilla / clipped softmax /
+//! gated attention across the three model families.
+//!
+//! The paper reports wall-clock pre-training hours on A100s (Table 11,
+//! Appendix D); here we measure per-step latency of the AOT train_step on
+//! the CPU PJRT runtime — same comparison (clipped softmax ≈ vanilla,
+//! gating adds a few percent), different absolute scale.
+//!
+//! Run: cargo bench --bench bench_runtime   (needs `make artifacts`)
+//! Env: QTX_BENCH_STEPS (default 12) timed steps after 3 warmup.
+
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream};
+use qtx::metrics::table::render;
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn steps_budget() -> usize {
+    std::env::var("QTX_BENCH_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(12)
+}
+
+fn time_config(rt: &Runtime, root: &std::path::Path, config: &str, gamma: f32) -> anyhow::Result<(f64, f64)> {
+    let art = Artifact::load(root, config)?;
+    let cfg = &art.manifest.config;
+    let steps = steps_budget();
+    // Warmup (includes XLA compile) then timed run.
+    let mut provider = make_provider(cfg, 0, Stream::Train);
+    let warm = TrainOptions { gamma, log_every: 0, ..TrainOptions::new(0, 3) };
+    train(rt, &art, &warm, provider.as_mut())?;
+    let opts = TrainOptions { gamma, log_every: 0, ..TrainOptions::new(0, steps) };
+    let res = train(rt, &art, &opts, provider.as_mut())?;
+    Ok((1000.0 / res.steps_per_sec, res.steps_per_sec))
+}
+
+fn main() -> anyhow::Result<()> {
+    let (root, _) = qtx::coordinator::experiment::default_paths();
+    let rt = Runtime::cpu()?;
+    let rows_def: Vec<(&str, &str, f32)> = vec![
+        ("BERT  Vanilla", "bert_tiny_softmax", 0.0),
+        ("BERT  Clipped softmax", "bert_tiny_softmax", -0.03),
+        ("BERT  Gated (Linear)", "bert_tiny_gated_linear", 0.0),
+        ("BERT  Gated (MLP)", "bert_tiny_gated_mlp", 0.0),
+        ("OPT   Vanilla", "opt_tiny_softmax", 0.0),
+        ("OPT   Clipped softmax", "opt_tiny_softmax", -0.1875),
+        ("OPT   Gated (Linear)", "opt_tiny_gated_linear", 0.0),
+        ("ViT   Vanilla", "vit_tiny_softmax", 0.0),
+        ("ViT   Clipped softmax", "vit_tiny_softmax", -0.001),
+        ("ViT   Gated (Linear)", "vit_tiny_gated_linear", 0.0),
+    ];
+    let mut rows = Vec::new();
+    let mut baseline_ms = 0.0;
+    for (label, config, gamma) in rows_def {
+        let (ms, sps) = time_config(&rt, &root, config, gamma)?;
+        if label.ends_with("Vanilla") {
+            baseline_ms = ms;
+        }
+        rows.push(vec![
+            label.to_string(),
+            format!("{ms:.1}"),
+            format!("{sps:.2}"),
+            format!("{:+.1}%", 100.0 * (ms - baseline_ms) / baseline_ms),
+        ]);
+        eprintln!("[bench_runtime] {label}: {ms:.1} ms/step");
+    }
+    println!(
+        "\n## Table 11 analogue — train-step runtime (CPU PJRT)\n\n{}",
+        render(&["Method", "ms/step", "steps/s", "vs family vanilla"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Bench target regenerating the paper's Table 3 at miniature scale.
+//!
+//! This drives exactly the same code path as `qtx table3`; the full-scale
+//! regeneration is `./target/release/qtx table3 --steps 800`. Bench defaults
+//! keep `cargo bench` tractable on this single-core testbed (override via
+//! QTX_BENCH_STEPS / QTX_BENCH_SEEDS).
+
+fn main() -> anyhow::Result<()> {
+    for (k, v) in [("QTX_EVAL_BATCHES", "2"), ("QTX_METRIC_BATCHES", "2"), ("QTX_CALIB_BATCHES", "2")] {
+        if std::env::var(k).is_err() {
+            std::env::set_var(k, v);
+        }
+    }
+    let steps = std::env::var("QTX_BENCH_STEPS").unwrap_or_else(|_| "12".into());
+    let seeds = std::env::var("QTX_BENCH_SEEDS").unwrap_or_else(|_| "0".into());
+    let argv = vec![
+        "table3".to_string(),
+        "--steps".to_string(), steps,
+        "--seeds".to_string(), seeds,
+        "--out".to_string(), "none".to_string(),
+    ];
+    let args = qtx::util::cli::Args::parse(&argv)?;
+    qtx::cli::tables::run("table3", &args)
+}

@@ -1,0 +1,70 @@
+//! Outlier & attention analysis example (the paper's §3 investigation,
+//! Figs 1-2, as a library-API walkthrough).
+//!
+//! Trains a vanilla BERT-tiny briefly, then localizes >6σ outliers by
+//! hidden dimension / token position / token identity and summarizes which
+//! attention heads implement the "no-op" pattern (probability mass dumped
+//! on delimiter tokens whose values are small).
+//!
+//! Run:  cargo run --release --example outlier_analysis [STEPS]
+
+use qtx::analysis::attention::{ascii_heatmap, summarize_heads};
+use qtx::analysis::outliers::OutlierCounts;
+use qtx::coordinator::calibrator::{collect, CollectOptions};
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream, EVAL_SEED};
+use qtx::data::vocab;
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(400);
+    let (artifacts, _) = qtx::coordinator::experiment::default_paths();
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&artifacts, "bert_tiny_softmax")?;
+    let cfg = art.manifest.config.clone();
+
+    let opts = TrainOptions { log_every: 0, ..TrainOptions::new(0, steps) };
+    let mut provider = make_provider(&cfg, 0, Stream::Train);
+    let result = train(&rt, &art, &opts, provider.as_mut())?;
+    println!("trained {} steps (final loss {:.3})", steps, result.losses.last().unwrap());
+
+    let last = cfg.n_layers - 1;
+    let mut counts = OutlierCounts::default();
+    let copts = CollectOptions { gamma: 0.0, zeta: 1.0, gate_scale: 1.0 };
+    let mut eval_p = make_provider(&cfg, EVAL_SEED, Stream::Eval);
+    let mut shown = false;
+    collect(&rt, &art, &result.params, eval_p.as_mut(), 4, &copts, |ab| {
+        let t = ab.get(&format!("L{last}.block_out")).unwrap();
+        counts.observe(t, ab.tokens.as_deref());
+        if !shown {
+            shown = true;
+            let probs = ab.get(&format!("L{last}.probs")).unwrap();
+            let values = ab.get(&format!("L{last}.values")).unwrap();
+            let s = summarize_heads(probs, values, None, ab.tokens.as_deref(), None);
+            println!("\nhead summaries (layer {last}):");
+            for h in &s {
+                println!(
+                    "  head {}: delimiter mass {:.2}, |v| at delimiters {:.3} vs mean {:.3}, update |p·v| {:.3}",
+                    h.head, h.delim_mass, h.delim_value_norm, h.mean_value_norm, h.update_norm
+                );
+            }
+            let noop = s.iter().max_by(|a, b| a.delim_mass.total_cmp(&b.delim_mass)).unwrap();
+            println!("\nmost delimiter-focused head ({}):", noop.head);
+            println!("{}", ascii_heatmap(probs, 0, noop.head, 16));
+        }
+        Ok(())
+    })?;
+
+    println!("outliers (>6σ) in layer {last} block output: {}", counts.total);
+    println!("  by hidden dim: {:?}", counts.top_dims(6));
+    println!(
+        "  fraction at delimiter tokens: {:.1}%",
+        100.0 * counts.token_fraction(&vocab::DELIMITERS)
+    );
+    Ok(())
+}

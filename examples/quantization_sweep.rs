@@ -1,0 +1,63 @@
+//! Bitwidth / range-estimator sweep on one trained model (the Table 10 /
+//! §C.4 design space as a library-API example).
+//!
+//! Trains once, then evaluates every (weight bits, activation bits, weight
+//! estimator, activation estimator) combination — all from the same AOT
+//! artifact, because qmax and the activation scales are runtime inputs.
+//!
+//! Run:  cargo run --release --example quantization_sweep [STEPS]
+
+use qtx::coordinator::evaluator::evaluate;
+use qtx::coordinator::quantize::{quantized_eval, QuantSpec};
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream, EVAL_SEED};
+use qtx::quant::estimators::EstimatorKind;
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(400);
+    let (artifacts, _) = qtx::coordinator::experiment::default_paths();
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&artifacts, "bert_tiny_softmax")?;
+    let cfg = art.manifest.config.clone();
+
+    // Clipped softmax so the quantized numbers are meaningful at low bits.
+    let gamma = -0.03f32;
+    let opts = TrainOptions { gamma, log_every: 0, ..TrainOptions::new(0, steps) };
+    let mut provider = make_provider(&cfg, 0, Stream::Train);
+    let result = train(&rt, &art, &opts, provider.as_mut())?;
+    let mut eval_p = make_provider(&cfg, EVAL_SEED, Stream::Eval);
+    let fp = evaluate(&rt, &art, &result.params, eval_p.as_mut(), 16, gamma, 1.0, 1.0)?;
+    println!("FP perplexity: {:.3}\n", fp.ppl);
+    println!("{:<10} {:<10} {:<12} {:>10}", "weights", "acts", "estimators", "ppl");
+
+    let acts: [(u32, EstimatorKind); 4] = [
+        (8, EstimatorKind::Percentile { pct: 99.999 }),
+        (8, EstimatorKind::MinMax),
+        (8, EstimatorKind::RunningMinMax { momentum: 0.9 }),
+        (6, EstimatorKind::Mse),
+    ];
+    for w_bits in [8u32, 6, 4] {
+        for w_est in [EstimatorKind::MinMax, EstimatorKind::Mse] {
+            for (a_bits, a_est) in acts {
+                let spec = QuantSpec { w_bits, a_bits, w_est, a_est, calib_batches: 8 };
+                let out = quantized_eval(
+                    &rt, &art, &result.params, &spec, gamma, 1.0, 1.0, 8, 1,
+                )?;
+                println!(
+                    "W{:<9} A{:<9} {:<12} {:>10.3}",
+                    w_bits,
+                    a_bits,
+                    format!("{}/{}", w_est.name(), a_est.name()),
+                    out.result.ppl
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the smallest useful tour of the qtx public API.
+//!
+//! Loads a pre-built artifact, trains a tiny BERT on the synthetic
+//! delimiter language for a handful of steps, and evaluates perplexity —
+//! all from rust, no python on the path.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use qtx::coordinator::evaluator::evaluate;
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream, EVAL_SEED};
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let (artifacts, _) = qtx::coordinator::experiment::default_paths();
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&artifacts, "bert_tiny_softmax")?;
+    let cfg = &art.manifest.config;
+    println!(
+        "loaded {}: {} layers, d_model {}, {} quant points",
+        cfg.name,
+        cfg.n_layers,
+        cfg.d_model,
+        art.manifest.quant_points.len()
+    );
+
+    // Train for 100 steps on the synthetic corpus (vanilla softmax:
+    // gamma=0, zeta=1 — clipped softmax is the same artifact with
+    // different runtime inputs).
+    let opts = TrainOptions { log_every: 25, ..TrainOptions::new(0, 100) };
+    let mut provider = make_provider(cfg, 0, Stream::Train);
+    let result = train(&rt, &art, &opts, provider.as_mut())?;
+    println!(
+        "trained 100 steps: loss {:.3} -> {:.3} ({:.1} steps/s)",
+        result.losses[0],
+        result.losses.last().unwrap(),
+        result.steps_per_sec
+    );
+
+    // Evaluate on the shared validation stream.
+    let mut eval_provider = make_provider(cfg, EVAL_SEED, Stream::Eval);
+    let fp = evaluate(&rt, &art, &result.params, eval_provider.as_mut(), 8, 0.0, 1.0, 1.0)?;
+    println!("validation perplexity: {:.2} (uniform would be {})", fp.ppl, cfg.vocab_size);
+    Ok(())
+}

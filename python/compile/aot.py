@@ -1,0 +1,136 @@
+"""AOT compile path: lower every program of every config to HLO text.
+
+This is the ONLY place python runs in the whole system, and it runs once
+(`make artifacts`). The interchange format is HLO *text*, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs a,b,c] [--force]
+
+Outputs per config:
+    artifacts/<name>/{init,train_step,eval_step,act_collect,eval_quant}.hlo.txt
+    artifacts/<name>/manifest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .configs import DEFAULT_BUILD, REGISTRY, ModelConfig
+from .model import param_specs
+from .train import PROGRAM_BUILDERS
+
+MANIFEST_VERSION = 4  # bump to invalidate stale artifact directories
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def config_fingerprint(cfg: ModelConfig) -> str:
+    blob = json.dumps(cfg.to_dict(), sort_keys=True) + f"|v{MANIFEST_VERSION}"
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def lower_config(cfg: ModelConfig, out_dir: Path, force: bool = False) -> bool:
+    """Lower all programs for one config. Returns True if work was done."""
+    cdir = out_dir / cfg.name
+    manifest_path = cdir / "manifest.json"
+    fp = config_fingerprint(cfg)
+    if manifest_path.exists() and not force:
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("fingerprint") == fp and all(
+                (cdir / prog["file"]).exists() for prog in old["programs"].values()
+            ):
+                return False  # up to date
+        except (json.JSONDecodeError, KeyError):
+            pass
+    cdir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {
+        "fingerprint": fp,
+        "config": cfg.to_dict(),
+        "params": [s.to_dict() for s in param_specs(cfg)],
+        "programs": {},
+        "quant_points": [],
+    }
+
+    for prog_name, builder in PROGRAM_BUILDERS.items():
+        t0 = time.time()
+        built = builder(cfg)
+        if prog_name == "eval_quant":
+            fn, inputs, outputs, points = built
+            manifest["quant_points"] = points
+        else:
+            fn, inputs, outputs = built
+        specs = [d.spec() for d in inputs]
+        # keep_unused: the manifest promises every input is a real program
+        # parameter (e.g. b_init on non-gated configs, gate_scale on softmax
+        # configs) — never let jit DCE them away.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{prog_name}.hlo.txt"
+        (cdir / fname).write_text(text)
+        manifest["programs"][prog_name] = {
+            "file": fname,
+            "inputs": [d.to_dict() for d in inputs],
+            "outputs": [d.to_dict() for d in outputs],
+        }
+        print(
+            f"  [{cfg.name}] {prog_name}: {len(inputs)} in / {len(outputs)} out, "
+            f"{len(text) / 1e6:.1f} MB HLO, {time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    return True
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated config names (default: all)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true", help="list configs and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in DEFAULT_BUILD:
+            print(name)
+        return
+
+    names = args.configs.split(",") if args.configs else DEFAULT_BUILD
+    out_dir = Path(args.out_dir)
+    t0 = time.time()
+    done = skipped = 0
+    for name in names:
+        if name not in REGISTRY:
+            print(f"unknown config {name!r}; use --list", file=sys.stderr)
+            sys.exit(2)
+        if lower_config(REGISTRY[name], out_dir, force=args.force):
+            done += 1
+        else:
+            skipped += 1
+    print(f"artifacts: {done} built, {skipped} up-to-date, "
+          f"{time.time() - t0:.1f}s total")
+
+
+if __name__ == "__main__":
+    main()

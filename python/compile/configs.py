@@ -1,0 +1,165 @@
+"""Model / experiment configuration registry (mirrored into manifests).
+
+Every named config here becomes one artifact directory
+(``artifacts/<name>/``) holding the five AOT programs plus a manifest. The
+rust coordinator only ever consumes the manifest — this module is the single
+source of truth for shapes.
+
+Families follow the paper's three testbeds, scaled to this CPU testbed (see
+DESIGN.md "Hardware adaptation"):
+
+  * ``bert_*`` — post-LN encoder, MLM objective (paper §5 "BERT").
+  * ``opt_*``  — pre-LN causal decoder, CLM objective (paper §5 "OPT").
+  * ``vit_*``  — pre-LN encoder over patch embeddings + CLS classification
+                 (paper §5 "ViT"), with the optional patch-embedding
+                 LayerNorm ablation of Table 7.
+
+Attention variants: ``softmax`` covers BOTH vanilla and clipped softmax
+(gamma/zeta are runtime inputs; gamma=0, zeta=1 is exactly vanilla), and the
+three gating architectures of Table 4 are separate configs because they
+change the parameter set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+ATTENTION_VARIANTS = ("softmax", "gated_linear", "gated_mlp", "gated_allheads")
+FAMILIES = ("bert", "opt", "vit")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # bert | opt | vit
+    attention: str  # see ATTENTION_VARIANTS
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    seq_len: int  # T; for vit: n_patches + 1 (CLS)
+    vocab_size: int = 0  # bert/opt
+    n_classes: int = 0  # vit
+    patch_dim: int = 0  # vit: patch_size^2 * channels
+    patch_ln: bool = False  # vit Table 7 ablation
+    ln_placement: str = "post"  # post (bert) | pre (opt, vit)
+    causal: bool = False
+    objective: str = "mlm"  # mlm | clm | cls
+    batch_size: int = 32
+    gate_hidden: int = 4  # MLP gating hidden width (Table 4)
+    init_std: float = 0.02  # 0.006 for OPT per §C.2
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999  # (0.9, 0.95) for OPT per §C.2
+    weight_decay: float = 0.01  # 0.1 OPT, 0.03 ViT
+    grad_clip: float = 1.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def use_gate(self) -> bool:
+        return self.attention.startswith("gated")
+
+    def validate(self) -> None:
+        assert self.family in FAMILIES, self.family
+        assert self.attention in ATTENTION_VARIANTS, self.attention
+        assert self.d_model % self.n_heads == 0
+        assert self.ln_placement in ("pre", "post")
+        assert self.objective in ("mlm", "clm", "cls")
+        if self.family == "vit":
+            assert self.n_classes > 0 and self.patch_dim > 0
+        else:
+            assert self.vocab_size > 0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["d_head"] = self.d_head
+        d["use_gate"] = self.use_gate
+        return d
+
+
+def _bert(name: str, attention: str, *, n_layers=4, d_model=64, n_heads=4,
+          seq_len=64, vocab_size=256, batch_size=32) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="bert", attention=attention, n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, d_ff=4 * d_model, seq_len=seq_len,
+        vocab_size=vocab_size, ln_placement="post", causal=False,
+        objective="mlm", batch_size=batch_size, init_std=0.02,
+        adam_b2=0.999, weight_decay=0.01,
+    )
+
+
+def _opt(name: str, attention: str, *, n_layers=4, d_model=64, n_heads=4,
+         seq_len=64, vocab_size=256, batch_size=16) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="opt", attention=attention, n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, d_ff=4 * d_model, seq_len=seq_len,
+        vocab_size=vocab_size, ln_placement="pre", causal=True,
+        objective="clm", batch_size=batch_size, init_std=0.006,
+        adam_b2=0.95, weight_decay=0.1,
+    )
+
+
+def _vit(name: str, attention: str, *, n_layers=4, d_model=64, n_heads=4,
+         n_patches=16, patch_dim=64, n_classes=8, batch_size=32,
+         patch_ln=False) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="vit", attention=attention, n_layers=n_layers,
+        d_model=d_model, n_heads=n_heads, d_ff=4 * d_model,
+        seq_len=n_patches + 1, n_classes=n_classes, patch_dim=patch_dim,
+        patch_ln=patch_ln, ln_placement="pre", causal=False, objective="cls",
+        batch_size=batch_size, init_std=0.02, adam_b2=0.999,
+        weight_decay=0.03,
+    )
+
+
+def build_registry() -> dict[str, ModelConfig]:
+    cfgs: list[ModelConfig] = []
+
+    # --- BERT family (Tables 1, 2, 5, 10; Figs 1, 2, 7, 8) ---------------
+    for att in ATTENTION_VARIANTS:
+        cfgs.append(_bert(f"bert_tiny_{att}", att))
+    # Table 5 "GA, MLP (n_hid=64)" ablation, scaled (n_hid 4 -> 16).
+    big_mlp = dataclasses.replace(_bert("bert_tiny_gated_mlp16", "gated_mlp"),
+                                  gate_hidden=16)
+    cfgs.append(big_mlp)
+
+    # BERT-6L sequence-length sweep (Fig 6): gamma = -alpha/T is a runtime
+    # input, so only T varies structurally.
+    for t in (16, 32, 64):
+        cfgs.append(_bert(f"bert6l_t{t}_softmax", "softmax", n_layers=6,
+                          d_model=64, seq_len=t, batch_size=32))
+    # Fig 7 (b_init sweep) reuses bert6l_t64 gated config.
+    cfgs.append(_bert("bert6l_t64_gated_linear", "gated_linear", n_layers=6,
+                      d_model=64, seq_len=64, batch_size=32))
+
+    # --- OPT family (Tables 2, 3, 6, 9) ----------------------------------
+    for att in ("softmax", "gated_linear", "gated_allheads"):
+        cfgs.append(_opt(f"opt_tiny_{att}", att))
+    # "Bigger variants" of Table 3, scaled to this testbed.
+    for att in ("softmax", "gated_linear"):
+        cfgs.append(_opt(f"opt_mid_{att}", att, n_layers=6, d_model=96,
+                         n_heads=6))
+        cfgs.append(_opt(f"opt_big_{att}", att, n_layers=8, d_model=128,
+                         n_heads=8, batch_size=8))
+
+    # --- ViT family (Tables 2, 7, 8; Fig 3, 7) ---------------------------
+    for att in ("softmax", "gated_linear", "gated_mlp"):
+        cfgs.append(_vit(f"vit_tiny_{att}", att))
+        cfgs.append(_vit(f"vit_tiny_{att}_patchln", att, patch_ln=True))
+
+    registry = {}
+    for c in cfgs:
+        c.validate()
+        assert c.name not in registry, f"duplicate config {c.name}"
+        registry[c.name] = c
+    return registry
+
+
+REGISTRY = build_registry()
+
+# The subset built by a default `make artifacts` (everything; kept explicit
+# so CI-style smoke builds can trim it with --configs).
+DEFAULT_BUILD = sorted(REGISTRY)

@@ -1,0 +1,262 @@
+"""L1 Pallas kernel: fused multi-head attention with clipped softmax + gating.
+
+This is the paper's compute hot-spot. One fused kernel computes
+
+    out = sigmoid(gate) * clip((zeta-gamma)*softmax(q k^T / sqrt(d)) + gamma, 0, 1) @ v
+
+covering all three attention variants studied in the paper:
+
+  * vanilla softmax      — gamma=0, zeta=1, no gate      (eq. 3)
+  * clipped softmax      — gamma<0 (and/or zeta>1)       (eq. 4)
+  * gated attention      — gate logits from G(x)         (eq. 5)
+
+gamma/zeta are *runtime scalars* (not trace-time constants), so a single AOT
+artifact serves the whole hyperparameter sweep of Tables 1/5/8 and Fig. 6.
+
+Both the forward and the backward pass are Pallas kernels, tied together with
+``jax.custom_vjp`` (pallas_call has no automatic differentiation rule). The
+backward recomputes the probability matrix flash-attention style instead of
+saving it, so the residuals are just (q, k, v, gate): per-tile VMEM stays at
+O(T*d_head + T^2) and no (B,H,T,T) tensor hits HBM between passes.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"): the natural TPU grid is
+(B, H) with T-tiling in BlockSpec; both matmuls (T x d_head x T) land on the
+MXU and the stretch-clip epilogue is fused VPU elementwise work. Because this
+environment executes the kernel through ``interpret=True`` on a CPU PJRT
+plugin (real-TPU lowering emits a Mosaic custom-call the CPU cannot run), we
+keep the whole tensor in one block: measured on this testbed, the single-block
+mapping is ~25% faster than grid-over-heads (the XLA while-loop emitted per
+grid step dominates at these tile sizes) — see EXPERIMENTS.md §Perf. The
+TPU grid would reintroduce (B, H) tiling via BlockSpec index maps.
+
+Clipping semantics match the paper exactly: values clipped to 0 or 1 get a
+*zero* gradient ("whenever values are clipped they will not give a gradient",
+Section 4.1), which is what stops the outlier growth during training.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _stable_softmax(scores: jax.Array) -> jax.Array:
+    """Numerically stable softmax over the last axis (in-kernel)."""
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _scores(q: jax.Array, k: jax.Array, causal: bool) -> jax.Array:
+    """(B, H, T, D) x (B, H, S, D) -> (B, H, T, S) scaled scores."""
+    d_head = q.shape[-1]
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k, preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(d_head))
+    if causal:
+        t = s.shape[-1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+    return s
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, g_ref, gam_ref, zet_ref, o_ref, *, causal, use_gate):
+    """Forward tile: all heads, full batch in-block (see module docs)."""
+    q = q_ref[...]  # (B, H, T, D)
+    k = k_ref[...]
+    v = v_ref[...]
+    gamma = gam_ref[0]
+    zeta = zet_ref[0]
+    p0 = _stable_softmax(_scores(q, k, causal))
+    p = jnp.clip((zeta - gamma) * p0 + gamma, 0.0, 1.0)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, v, preferred_element_type=jnp.float32)
+    if use_gate:
+        out = jax.nn.sigmoid(g_ref[...]) * out
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _probs_kernel(q_ref, k_ref, gam_ref, zet_ref, p_ref, *, causal):
+    """Probability-matrix tile (used by act_collect / analysis programs)."""
+    q = q_ref[...]
+    k = k_ref[...]
+    gamma = gam_ref[0]
+    zeta = zet_ref[0]
+    p0 = _stable_softmax(_scores(q, k, causal))
+    p_ref[...] = jnp.clip((zeta - gamma) * p0 + gamma, 0.0, 1.0).astype(p_ref.dtype)
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, g_ref, gam_ref, zet_ref, do_ref,
+    dq_ref, dk_ref, dv_ref, dg_ref, *, causal, use_gate,
+):
+    """Backward tile: recompute probs, propagate through clip -> softmax.
+
+    The clip derivative is an interior mask: positions where the stretched
+    probability left (0, 1) contribute zero gradient — the mechanism that
+    stops outlier growth (Section 4.1).
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    gamma = gam_ref[0]
+    zeta = zet_ref[0]
+    do = do_ref[...]
+
+    p0 = _stable_softmax(_scores(q, k, causal))
+    y = (zeta - gamma) * p0 + gamma
+    p = jnp.clip(y, 0.0, 1.0)
+
+    if use_gate:
+        glog = g_ref[...]  # (B, H, T, 1)
+        sig = jax.nn.sigmoid(glog)
+        pv = jnp.einsum("bhts,bhsd->bhtd", p, v, preferred_element_type=jnp.float32)
+        dgate = jnp.sum(do * pv, axis=-1, keepdims=True) * sig * (1.0 - sig)
+        dpv = sig * do
+        dg_ref[...] = dgate.astype(dg_ref.dtype)
+    else:
+        dpv = do
+        dg_ref[...] = jnp.zeros_like(g_ref[...])
+
+    dp = jnp.einsum("bhtd,bhsd->bhts", dpv, v, preferred_element_type=jnp.float32)
+    dv = jnp.einsum("bhts,bhtd->bhsd", p, dpv, preferred_element_type=jnp.float32)
+
+    interior = jnp.logical_and(y > 0.0, y < 1.0).astype(jnp.float32)
+    dp0 = dp * (zeta - gamma) * interior
+    # softmax VJP (rowwise): ds = p0 * (dp0 - <dp0, p0>)
+    ds = p0 * (dp0 - jnp.sum(dp0 * p0, axis=-1, keepdims=True))
+    inv_sqrt_d = 1.0 / math.sqrt(q.shape[-1])
+    dq = jnp.einsum("bhts,bhsd->bhtd", ds, k, preferred_element_type=jnp.float32) * inv_sqrt_d
+    dk = jnp.einsum("bhts,bhtd->bhsd", ds, q, preferred_element_type=jnp.float32) * inv_sqrt_d
+
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _head_spec(b, h, t, d):
+    """Single whole-tensor block (B, H, T, D) — see module docs for the
+    measured grid-over-heads comparison and the TPU mapping."""
+    return pl.BlockSpec((b, h, t, d), lambda: (0, 0, 0, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda: (0,))
+
+
+def _as_scalar_array(x) -> jax.Array:
+    return jnp.reshape(jnp.asarray(x, dtype=jnp.float32), (1,))
+
+
+def _fwd_call(q, k, v, g, gamma, zeta, *, causal, use_gate):
+    b, h, t, d = q.shape
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, causal=causal, use_gate=use_gate),
+        in_specs=[
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, 1),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=_head_spec(b, h, t, d),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v, g, gamma, zeta)
+
+
+def _bwd_call(q, k, v, g, gamma, zeta, do, *, causal, use_gate):
+    b, h, t, d = q.shape
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, causal=causal, use_gate=use_gate),
+        in_specs=[
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, 1),
+            _scalar_spec(),
+            _scalar_spec(),
+            _head_spec(b, h, t, d),
+        ],
+        out_specs=(
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, 1),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t, 1), q.dtype),
+        ),
+        interpret=True,
+    )(q, k, v, g, gamma, zeta, do)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention_op(causal: bool, use_gate: bool):
+    """Build the custom-VJP attention op for a (causal, use_gate) variant."""
+
+    @jax.custom_vjp
+    def op(q, k, v, g, gamma, zeta):
+        return _fwd_call(q, k, v, g, gamma, zeta, causal=causal, use_gate=use_gate)
+
+    def fwd(q, k, v, g, gamma, zeta):
+        out = _fwd_call(q, k, v, g, gamma, zeta, causal=causal, use_gate=use_gate)
+        return out, (q, k, v, g, gamma, zeta)
+
+    def bwd(res, do):
+        q, k, v, g, gamma, zeta = res
+        dq, dk, dv, dg = _bwd_call(
+            q, k, v, g, gamma, zeta, do, causal=causal, use_gate=use_gate
+        )
+        # gamma/zeta are hyperparameter inputs, never trained: zero cotangent.
+        return dq, dk, dv, dg, jnp.zeros_like(gamma), jnp.zeros_like(zeta)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def attention(q, k, v, gamma, zeta, gate_logits=None, *, causal: bool = False):
+    """Fused attention, the public L1 entry point.
+
+    Args:
+      q, k, v: (B, H, T, Dh) projections.
+      gamma, zeta: clipped-softmax stretch factors (runtime scalars; 0/1 for
+        vanilla softmax).
+      gate_logits: optional (B, H, T, 1) gating logits G(x) — eq. (5).
+      causal: apply a causal mask (decoder / OPT family).
+
+    Returns: (B, H, T, Dh) attention output, differentiable w.r.t. q, k, v
+    and gate_logits.
+    """
+    use_gate = gate_logits is not None
+    if gate_logits is None:
+        b, h, t, _ = q.shape
+        gate_logits = jnp.zeros((b, h, t, 1), dtype=q.dtype)
+    op = _make_attention_op(bool(causal), use_gate)
+    return op(q, k, v, gate_logits, _as_scalar_array(gamma), _as_scalar_array(zeta))
+
+
+def attention_probs(q, k, gamma, zeta, *, causal: bool = False):
+    """The clipped-softmax probability matrix (B, H, T, T); forward-only,
+    used by the act_collect / analysis programs for Figs 1-3, 8."""
+    b, h, t, d = q.shape
+    return pl.pallas_call(
+        functools.partial(_probs_kernel, causal=bool(causal)),
+        in_specs=[
+            _head_spec(b, h, t, d),
+            _head_spec(b, h, t, d),
+            _scalar_spec(),
+            _scalar_spec(),
+        ],
+        out_specs=pl.BlockSpec((b, h, t, t), lambda: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, t), q.dtype),
+        interpret=True,
+    )(q, k, _as_scalar_array(gamma), _as_scalar_array(zeta))

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: uniform affine fake quantization (eq. 1).
+
+Used by the ``eval_quant`` program to simulate INT-b activation quantization
+in-graph. ``scale``/``zero_point``/``qmax`` are runtime scalars: the rust
+calibrator estimates ranges on the host and feeds them in, and ``qmax``
+(= 2^b - 1) selects the bitwidth, so the same lowered artifact serves the
+whole W*A{4,6,8} sweep of Table 10.
+
+Forward-only (PTQ simulation never backpropagates); a straight-through
+estimator VJP is still provided so the op composes if a QAT-style program is
+ever traced through it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fq_kernel(x_ref, s_ref, z_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    s = s_ref[0]
+    z = z_ref[0]
+    qmax = qmax_ref[0]
+    q = jnp.clip(jnp.round(x / s) + z, 0.0, qmax)
+    o_ref[...] = (s * (q - z)).astype(o_ref.dtype)
+
+
+def _fq_call(x2d, s, z, qmax):
+    n, m = x2d.shape
+    full = lambda i: (0, 0)
+    return pl.pallas_call(
+        _fq_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, m), full),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, m), full),
+        out_shape=jax.ShapeDtypeStruct((n, m), x2d.dtype),
+        interpret=True,
+    )(x2d, s, z, qmax)
+
+
+@jax.custom_vjp
+def _fq_op(x2d, s, z, qmax):
+    return _fq_call(x2d, s, z, qmax)
+
+
+def _fq_fwd(x2d, s, z, qmax):
+    return _fq_call(x2d, s, z, qmax), None
+
+
+def _fq_bwd(_, g):
+    # Straight-through: pass the gradient to x, none to the quant params.
+    return g, jnp.zeros((1,), g.dtype), jnp.zeros((1,), g.dtype), jnp.zeros((1,), g.dtype)
+
+
+_fq_op.defvjp(_fq_fwd, _fq_bwd)
+
+
+def _as_scalar_array(v) -> jax.Array:
+    return jnp.reshape(jnp.asarray(v, dtype=jnp.float32), (1,))
+
+
+def fake_quant(x: jax.Array, scale, zero_point, qmax) -> jax.Array:
+    """Fake-quantize ``x`` (any rank) with per-tensor affine parameters."""
+    shape = x.shape
+    x2d = jnp.reshape(x, (1, -1)) if x.ndim < 2 else jnp.reshape(x, (-1, shape[-1]))
+    out = _fq_op(
+        x2d,
+        _as_scalar_array(scale),
+        _as_scalar_array(zero_point),
+        _as_scalar_array(qmax),
+    )
+    return jnp.reshape(out, shape)

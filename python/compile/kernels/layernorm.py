@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: LayerNorm (forward + backward via custom VJP).
+
+LayerNorm is on the paper's critical path twice over: it is part of the
+outlier *mechanism* (Section 3: the FFN output must blow up to survive the
+LN normalization and still give softmax a big dynamic range) and it runs in
+every block of every model family. The kernel normalizes the trailing
+feature dimension of a (rows, d) tile.
+
+Single-block grid: the reductions for d_gamma/d_beta span all rows, and at
+the tiny-repro sizes used here the whole tensor fits one tile comfortably
+(the TPU version would accumulate partial dγ/dβ across row tiles in VMEM
+scratch — noted in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-5
+
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + _EPS)
+    o_ref[...] = (xhat * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _ln_bwd_kernel(x_ref, g_ref, do_ref, dx_ref, dg_ref, db_ref):
+    x = x_ref[...]
+    gamma = g_ref[...]
+    do = do_ref[...]
+    d = x.shape[-1]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + _EPS)
+    xhat = (x - mu) * rstd
+    dgx = do * gamma
+    # dx = rstd * (dgx - mean(dgx) - xhat * mean(dgx * xhat))
+    m1 = jnp.mean(dgx, axis=-1, keepdims=True)
+    m2 = jnp.mean(dgx * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (rstd * (dgx - m1 - xhat * m2)).astype(dx_ref.dtype)
+    dg_ref[...] = jnp.sum(do * xhat, axis=0).astype(dg_ref.dtype)
+    db_ref[...] = jnp.sum(do, axis=0).astype(db_ref.dtype)
+
+
+def _full(n, d):
+    return pl.BlockSpec((n, d), lambda: (0, 0))
+
+
+def _vec(d):
+    return pl.BlockSpec((d,), lambda: (0,))
+
+
+def _ln_fwd_call(x2d, gamma, beta):
+    n, d = x2d.shape
+    return pl.pallas_call(
+        _ln_fwd_kernel,
+        in_specs=[_full(n, d), _vec(d), _vec(d)],
+        out_specs=_full(n, d),
+        out_shape=jax.ShapeDtypeStruct((n, d), x2d.dtype),
+        interpret=True,
+    )(x2d, gamma, beta)
+
+
+def _ln_bwd_call(x2d, gamma, do):
+    n, d = x2d.shape
+    return pl.pallas_call(
+        _ln_bwd_kernel,
+        in_specs=[_full(n, d), _vec(d), _full(n, d)],
+        out_specs=(_full(n, d), _vec(d), _vec(d)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, d), x2d.dtype),
+            jax.ShapeDtypeStruct((d,), x2d.dtype),
+            jax.ShapeDtypeStruct((d,), x2d.dtype),
+        ),
+        interpret=True,
+    )(x2d, gamma, do)
+
+
+@jax.custom_vjp
+def _ln_op(x2d, gamma, beta):
+    return _ln_fwd_call(x2d, gamma, beta)
+
+
+def _ln_vjp_fwd(x2d, gamma, beta):
+    return _ln_fwd_call(x2d, gamma, beta), (x2d, gamma)
+
+
+def _ln_vjp_bwd(res, do):
+    x2d, gamma = res
+    dx, dg, db = _ln_bwd_call(x2d, gamma, do)
+    return dx, dg, db
+
+
+_ln_op.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """LayerNorm over the trailing dimension of ``x`` (any leading rank)."""
+    shape = x.shape
+    x2d = jnp.reshape(x, (-1, shape[-1]))
+    return jnp.reshape(_ln_op(x2d, gamma, beta), shape)

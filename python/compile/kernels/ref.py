@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` asserts
+``assert_allclose(kernel(...), ref(...))`` across shape/dtype/hyperparameter
+sweeps (hypothesis), which is the build-time correctness gate for the whole
+stack: the L2 model calls the kernels, and the AOT HLO the rust runtime
+executes is lowered from exactly these traced ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clipped_softmax(x: jax.Array, gamma, zeta, axis: int = -1) -> jax.Array:
+    """Eq. (4) of the paper: ``clip((zeta - gamma)*softmax(x) + gamma, 0, 1)``.
+
+    gamma <= 0 stretches the lower end so exact zeros are representable with a
+    finite softmax-input range; zeta >= 1 does the same for exact ones.
+    gamma=0, zeta=1 recovers the vanilla softmax exactly.
+    """
+    p = jax.nn.softmax(x, axis=axis)
+    return jnp.clip((zeta - gamma) * p + gamma, 0.0, 1.0)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    gate_logits,
+    gamma,
+    zeta,
+    *,
+    causal: bool = False,
+) -> jax.Array:
+    """Reference (multi-head) attention with clipped softmax and optional
+    per-token gating (eqs. 3-5).
+
+    Shapes: q, k, v are (B, H, T, Dh); gate_logits is (B, H, T, 1) or None.
+    Returns (B, H, T, Dh).
+    """
+    d_head = q.shape[-1]
+    scores = jnp.einsum(
+        "bhtd,bhsd->bhts", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.asarray(d_head, dtype=jnp.float32))
+    if causal:
+        t = scores.shape[-1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    probs = clipped_softmax(scores, gamma, zeta, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v, preferred_element_type=jnp.float32)
+    if gate_logits is not None:
+        out = jax.nn.sigmoid(gate_logits) * out
+    return out.astype(q.dtype)
+
+
+def attention_probs_ref(
+    q: jax.Array, k: jax.Array, gamma, zeta, *, causal: bool = False
+) -> jax.Array:
+    """The (clipped) attention probability matrix alone, (B, H, T, T)."""
+    d_head = q.shape[-1]
+    scores = jnp.einsum(
+        "bhtd,bhsd->bhts", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.asarray(d_head, dtype=jnp.float32))
+    if causal:
+        t = scores.shape[-1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    return clipped_softmax(scores, gamma, zeta, axis=-1).astype(q.dtype)
+
+
+def fake_quant_ref(x: jax.Array, scale, zero_point, qmax) -> jax.Array:
+    """Eq. (1): uniform affine fake quantization.
+
+    ``s * (clip(round(x/s) + z, 0, qmax) - z)`` with round-to-nearest-even
+    (jnp.round). qmax = 2^b - 1 is passed as a runtime value so one lowered
+    program serves every bitwidth.
+    """
+    s = jnp.asarray(scale, dtype=x.dtype)
+    z = jnp.asarray(zero_point, dtype=x.dtype)
+    q = jnp.clip(jnp.round(x / s) + z, 0.0, jnp.asarray(qmax, dtype=x.dtype))
+    return s * (q - z)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    """Standard LayerNorm over the trailing dimension."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta

@@ -1,0 +1,363 @@
+"""L2: the transformer model (forward graph) for all three families.
+
+Plain-JAX (no flax): parameters are an ordered ``name -> array`` mapping
+whose canonical order is defined by :func:`param_specs`. The forward pass
+calls the L1 Pallas kernels (``kernels.attention``, ``kernels.layernorm``)
+so they lower into the same AOT HLO the rust runtime executes.
+
+Activation *taps* are the mechanism behind both quantization simulation and
+the activation-analysis programs: every quantizable activation (paper §5
+"Quantization setup": all activations except after the final linear layer)
+flows through ``tap(name, x)``. The tap is
+
+  * identity                       for train/eval programs,
+  * a fake-quant wrapper           for the ``eval_quant`` program,
+  * a recorder                     for the ``act_collect`` program.
+
+The tap-call order is deterministic, which gives a stable quant-point index
+shared between the manifest and the rust calibrator.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import attention, attention_probs
+from .kernels.fake_quant import fake_quant
+from .kernels.layernorm import layernorm
+
+Params = dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# Parameter specification
+# --------------------------------------------------------------------------
+
+class ParamSpec:
+    """Static description of one parameter tensor.
+
+    ``init``: one of normal | zeros | ones | he | gate_bias.
+    ``decay``: subject to L2 weight decay (paper: weights yes; biases and
+    LN params no — except LN gammas when the ``wd_ln`` runtime toggle of
+    Table 6 is on, flagged by ``ln_gamma``).
+    ``quantize``: weight-quantized by the rust PTQ pipeline (2D+ weights and
+    embeddings; the final head is excluded per §5).
+    """
+
+    def __init__(self, name: str, shape: tuple[int, ...], init: str = "normal",
+                 decay: bool = False, quantize: bool = False,
+                 ln_gamma: bool = False):
+        self.name = name
+        self.shape = shape
+        self.init = init
+        self.decay = decay
+        self.quantize = quantize
+        self.ln_gamma = ln_gamma
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "init": self.init,
+            "decay": self.decay,
+            "quantize": self.quantize,
+            "ln_gamma": self.ln_gamma,
+        }
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    """The canonical, ordered parameter list for a config."""
+    d, ff, t = cfg.d_model, cfg.d_ff, cfg.seq_len
+    h, dh = cfg.n_heads, cfg.d_head
+    specs: list[ParamSpec] = []
+
+    def p(*args, **kw):
+        specs.append(ParamSpec(*args, **kw))
+
+    # Embeddings.
+    if cfg.family == "vit":
+        p("patch_emb.w", (cfg.patch_dim, d), "normal", decay=True, quantize=True)
+        p("patch_emb.b", (d,), "zeros")
+        p("cls_token", (d,), "normal")
+        p("pos_emb", (t, d), "normal", quantize=True)
+        if cfg.patch_ln:
+            p("patch_ln.g", (d,), "ones", ln_gamma=True)
+            p("patch_ln.b", (d,), "zeros")
+    else:
+        p("tok_emb", (cfg.vocab_size, d), "normal", decay=True, quantize=True)
+        p("pos_emb", (t, d), "normal", quantize=True)
+        if cfg.family == "bert":
+            p("emb_ln.g", (d,), "ones", ln_gamma=True)
+            p("emb_ln.b", (d,), "zeros")
+
+    # Transformer blocks.
+    for i in range(cfg.n_layers):
+        L = f"L{i}"
+        p(f"{L}.wq", (d, d), "normal", decay=True, quantize=True)
+        p(f"{L}.bq", (d,), "zeros")
+        p(f"{L}.wk", (d, d), "normal", decay=True, quantize=True)
+        p(f"{L}.bk", (d,), "zeros")
+        p(f"{L}.wv", (d, d), "normal", decay=True, quantize=True)
+        p(f"{L}.bv", (d,), "zeros")
+        p(f"{L}.wo", (d, d), "normal", decay=True, quantize=True)
+        p(f"{L}.bo", (d,), "zeros")
+        if cfg.attention == "gated_linear":
+            p(f"{L}.gate.w", (h, dh), "he", decay=True)
+            p(f"{L}.gate.b", (h,), "gate_bias")
+        elif cfg.attention == "gated_mlp":
+            p(f"{L}.gate.w1", (h, dh, cfg.gate_hidden), "he", decay=True)
+            p(f"{L}.gate.b1", (h, cfg.gate_hidden), "zeros")
+            p(f"{L}.gate.w2", (h, cfg.gate_hidden), "he", decay=True)
+            p(f"{L}.gate.b2", (h,), "gate_bias")
+        elif cfg.attention == "gated_allheads":
+            p(f"{L}.gate.w", (d, h), "he", decay=True)
+            p(f"{L}.gate.b", (h,), "gate_bias")
+        p(f"{L}.ln1.g", (d,), "ones", ln_gamma=True)
+        p(f"{L}.ln1.b", (d,), "zeros")
+        p(f"{L}.w1", (d, ff), "normal", decay=True, quantize=True)
+        p(f"{L}.b1", (ff,), "zeros")
+        p(f"{L}.w2", (ff, d), "normal", decay=True, quantize=True)
+        p(f"{L}.b2", (d,), "zeros")
+        p(f"{L}.ln2.g", (d,), "ones", ln_gamma=True)
+        p(f"{L}.ln2.b", (d,), "zeros")
+
+    if cfg.ln_placement == "pre":
+        p("final_ln.g", (d,), "ones", ln_gamma=True)
+        p("final_ln.b", (d,), "zeros")
+
+    # Output head — excluded from quantization per §5.
+    out_dim = cfg.n_classes if cfg.family == "vit" else cfg.vocab_size
+    p("head.w", (d, out_dim), "normal", decay=True, quantize=False)
+    p("head.b", (out_dim,), "zeros")
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed, b_init) -> list[jax.Array]:
+    """Initialize the parameter list (traceable: seed/b_init may be traced).
+
+    normal: N(0, init_std) following §C.1/C.2; he: He-normal fan-in init for
+    gating weights (paper §5.3 cites He et al. [22]); gate_bias: the b_init
+    runtime input controlling the initial gate openness pi_init (Fig 7).
+    """
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for idx, spec in enumerate(param_specs(cfg)):
+        k = jax.random.fold_in(key, idx)
+        if spec.init == "normal":
+            arr = cfg.init_std * jax.random.normal(k, spec.shape, jnp.float32)
+        elif spec.init == "he":
+            fan_in = spec.shape[-1] if len(spec.shape) <= 2 else spec.shape[-2]
+            std = math.sqrt(2.0 / fan_in)
+            arr = std * jax.random.normal(k, spec.shape, jnp.float32)
+        elif spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, jnp.float32)
+        elif spec.init == "gate_bias":
+            arr = jnp.full(spec.shape, jnp.asarray(b_init, jnp.float32))
+        else:  # pragma: no cover
+            raise ValueError(spec.init)
+        out.append(arr)
+    return out
+
+
+def params_to_dict(cfg: ModelConfig, flat: list[jax.Array]) -> Params:
+    specs = param_specs(cfg)
+    assert len(specs) == len(flat), (len(specs), len(flat))
+    return {s.name: a for s, a in zip(specs, flat)}
+
+
+# --------------------------------------------------------------------------
+# Taps (identity / fake-quant / record)
+# --------------------------------------------------------------------------
+
+class IdentityTap:
+    def __call__(self, name: str, x: jax.Array) -> jax.Array:
+        return x
+
+
+class RecordTap:
+    """Records every tapped activation; used to enumerate quant points and
+    by the act_collect program."""
+
+    def __init__(self):
+        self.records: dict[str, jax.Array] = {}
+
+    def __call__(self, name: str, x: jax.Array) -> jax.Array:
+        assert name not in self.records, f"duplicate tap {name}"
+        self.records[name] = x
+        return x
+
+
+class QuantTap:
+    """Applies the L1 fake-quant kernel at every quant point, with per-point
+    scale/zero-point taken from runtime input vectors (asymmetric static
+    activation quantization, §5)."""
+
+    def __init__(self, point_index: dict[str, int], scales: jax.Array,
+                 zps: jax.Array, qmax: jax.Array):
+        self.point_index = point_index
+        self.scales = scales
+        self.zps = zps
+        self.qmax = qmax
+
+    def __call__(self, name: str, x: jax.Array) -> jax.Array:
+        if name not in self.point_index:  # analysis-only taps pass through
+            return x
+        i = self.point_index[name]
+        return fake_quant(x, self.scales[i], self.zps[i], self.qmax)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _gate_logits(cfg: ModelConfig, p: Params, layer: int, xh: jax.Array):
+    """Gating module G (Table 4 architectures). xh: (B, H, T, Dh) per-head
+    input (gates are shared across positions, not across heads — §4.2)."""
+    L = f"L{layer}"
+    if cfg.attention == "gated_linear":
+        g = jnp.einsum("bhtd,hd->bht", xh, p[f"{L}.gate.w"]) + p[f"{L}.gate.b"][None, :, None]
+    elif cfg.attention == "gated_mlp":
+        hmid = jnp.einsum("bhtd,hdk->bhtk", xh, p[f"{L}.gate.w1"])
+        hmid = jax.nn.relu(hmid + p[f"{L}.gate.b1"][None, :, None, :])
+        g = jnp.einsum("bhtk,hk->bht", hmid, p[f"{L}.gate.w2"]) + p[f"{L}.gate.b2"][None, :, None]
+    elif cfg.attention == "gated_allheads":
+        b, h, t, dh = xh.shape
+        flat = jnp.reshape(jnp.transpose(xh, (0, 2, 1, 3)), (b, t, h * dh))
+        g = jnp.transpose(flat @ p["%s.gate.w" % L] + p[f"{L}.gate.b"], (0, 2, 1))
+    else:  # pragma: no cover
+        raise ValueError(cfg.attention)
+    return g[..., None]  # (B, H, T, 1)
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    b, t, d = x.shape
+    return jnp.transpose(jnp.reshape(x, (b, t, h, d // h)), (0, 2, 1, 3))
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, t, dh = x.shape
+    return jnp.reshape(jnp.transpose(x, (0, 2, 1, 3)), (b, t, h * dh))
+
+
+def _ln(p: Params, prefix: str, x: jax.Array) -> jax.Array:
+    return layernorm(x, p[f"{prefix}.g"], p[f"{prefix}.b"])
+
+
+def forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    gamma,
+    zeta,
+    gate_scale,
+    tap: Callable[[str, jax.Array], jax.Array] | None = None,
+    *,
+    decompose_attention: bool = False,
+) -> jax.Array:
+    """Run the model; returns logits (B, T, V) or (B, n_classes) for vit.
+
+    decompose_attention=True computes the probability matrix explicitly
+    (attention_probs kernel + matmul) so the probs can be tapped — used by
+    act_collect (Figs 1-3, 8 need P, V, P·V) and eval_quant (P is itself a
+    quantized activation). The fused kernel path is numerically identical.
+    """
+    tap = tap or IdentityTap()
+    gamma = jnp.asarray(gamma, jnp.float32)
+    zeta = jnp.asarray(zeta, jnp.float32)
+    gate_scale = jnp.asarray(gate_scale, jnp.float32)
+
+    # ---- embeddings ----
+    if cfg.family == "vit":
+        hthis = x @ p["patch_emb.w"] + p["patch_emb.b"]
+        if cfg.patch_ln:
+            hthis = _ln(p, "patch_ln", hthis)
+        b = hthis.shape[0]
+        cls = jnp.broadcast_to(p["cls_token"], (b, 1, cfg.d_model))
+        hthis = jnp.concatenate([cls, hthis], axis=1) + p["pos_emb"][None]
+    else:
+        hthis = p["tok_emb"][x] + p["pos_emb"][None]
+        if cfg.family == "bert":
+            hthis = _ln(p, "emb_ln", hthis)
+    hthis = tap("embed", hthis)
+
+    # ---- blocks ----
+    for i in range(cfg.n_layers):
+        L = f"L{i}"
+        resid = hthis
+        xin = _ln(p, f"{L}.ln1", hthis) if cfg.ln_placement == "pre" else hthis
+
+        q = tap(f"{L}.q", xin @ p[f"{L}.wq"] + p[f"{L}.bq"])
+        k = tap(f"{L}.k", xin @ p[f"{L}.wk"] + p[f"{L}.bk"])
+        v = tap(f"{L}.v", xin @ p[f"{L}.wv"] + p[f"{L}.bv"])
+        qh, kh, vh = (_split_heads(t_, cfg.n_heads) for t_ in (q, k, v))
+        xh = _split_heads(xin, cfg.n_heads)
+        glog = _gate_logits(cfg, p, i, xh) if cfg.use_gate else None
+
+        if decompose_attention:
+            probs = attention_probs(qh, kh, gamma, zeta, causal=cfg.causal)
+            probs = tap(f"{L}.probs", probs)
+            tap(f"{L}.values", vh)  # analysis-only tap (same tensor as .v)
+            ctx = jnp.einsum("bhts,bhsd->bhtd", probs, vh,
+                             preferred_element_type=jnp.float32)
+            if cfg.use_gate:
+                gp = jax.nn.sigmoid(glog)
+                tap(f"{L}.gate_probs", gp[..., 0])
+                ctx = gp * ctx
+        else:
+            ctx = attention(qh, kh, vh, gamma, zeta, gate_logits=glog,
+                            causal=cfg.causal)
+        if cfg.use_gate:
+            ctx = gate_scale * ctx  # x2 at fine-tuning time, §B.6
+        ctx = tap(f"{L}.ctx", ctx)
+
+        attn_out = tap(f"{L}.attn_out", _merge_heads(ctx) @ p[f"{L}.wo"] + p[f"{L}.bo"])
+        res1 = tap(f"{L}.res1", resid + attn_out)
+        if cfg.ln_placement == "post":
+            res1 = tap(f"{L}.ln1_out", _ln(p, f"{L}.ln1", res1))
+            fin = res1
+        else:
+            fin = tap(f"{L}.ln2_out", _ln(p, f"{L}.ln2", res1))
+
+        ffn_h = tap(f"{L}.ffn_h", jax.nn.gelu(fin @ p[f"{L}.w1"] + p[f"{L}.b1"]))
+        ffn_out = tap(f"{L}.ffn_out", ffn_h @ p[f"{L}.w2"] + p[f"{L}.b2"])
+        res2 = tap(f"{L}.res2", res1 + ffn_out)
+        if cfg.ln_placement == "post":
+            res2 = tap(f"{L}.ln2_out", _ln(p, f"{L}.ln2", res2))
+        # Block output: the tensor the paper's inf-norm/kurtosis metrics are
+        # computed on ("the output of an attention layer", §5).
+        hthis = tap(f"{L}.block_out", res2)
+
+    if cfg.ln_placement == "pre":
+        hthis = tap("final_out", _ln(p, "final_ln", hthis))
+
+    # ---- head (not quantized) ----
+    if cfg.family == "vit":
+        return hthis[:, 0] @ p["head.w"] + p["head.b"]
+    return hthis @ p["head.w"] + p["head.b"]
+
+
+def quant_point_names(cfg: ModelConfig) -> list[str]:
+    """Ordered activation quant points = taps hit by the decomposed forward,
+    minus analysis-only taps (values/gate_probs duplicate other tensors, and
+    block_out aliases res2/ln2_out)."""
+    skip_suffix = (".values", ".gate_probs", ".block_out")
+    rec = RecordTap()
+    specs = param_specs(cfg)
+    p = {s.name: jnp.zeros(s.shape, jnp.float32) for s in specs}
+    x = example_model_input(cfg, batch=2)
+    forward(cfg, p, x, 0.0, 1.0, 1.0, rec, decompose_attention=True)
+    return [n for n in rec.records if not n.endswith(skip_suffix)]
+
+
+def example_model_input(cfg: ModelConfig, batch: int | None = None):
+    b = batch or cfg.batch_size
+    if cfg.family == "vit":
+        return jnp.zeros((b, cfg.seq_len - 1, cfg.patch_dim), jnp.float32)
+    return jnp.zeros((b, cfg.seq_len), jnp.int32)

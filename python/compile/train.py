@@ -1,0 +1,286 @@
+"""L2: losses, AdamW, and the five AOT program builders.
+
+Each builder returns ``(fn, input_descs, output_descs)`` where ``fn`` takes a
+*flat positional* argument list in exactly the order of ``input_descs`` and
+returns a flat tuple in the order of ``output_descs``. ``aot.py`` lowers the
+fn and writes the descs into the manifest, which is the rust runtime's only
+source of truth for program IO.
+
+Runtime hyperparameter scalars (all f32 unless noted):
+
+  gamma, zeta   clipped-softmax stretch (γ=0, ζ=1 ⇒ vanilla) — Tables 1/5/8
+  gate_scale    multiplier on the gate output (2.0 in §B.6 fine-tuning)
+  lr            learning-rate for the step (schedule computed in rust)
+  wd_ln         0/1 toggle: weight decay on LayerNorm γ (Table 6)
+  act_reg       FFN-output L2 activation-regularization coefficient (§B.6)
+  qmax          2^bits − 1 activation grid size (Table 10)
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import (
+    IdentityTap,
+    QuantTap,
+    RecordTap,
+    example_model_input,
+    forward,
+    init_params,
+    param_specs,
+    params_to_dict,
+    quant_point_names,
+)
+
+ADAM_EPS = 1e-8
+
+
+class IODesc:
+    def __init__(self, name: str, shape: tuple[int, ...], dtype: str):
+        self.name, self.shape, self.dtype = name, tuple(shape), dtype
+
+    def spec(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+def _scalar(name: str, dtype: str = "float32") -> IODesc:
+    return IODesc(name, (), dtype)
+
+
+def _param_descs(cfg: ModelConfig, prefix: str) -> list[IODesc]:
+    return [IODesc(f"{prefix}::{s.name}", s.shape, "float32") for s in param_specs(cfg)]
+
+
+def _batch_descs(cfg: ModelConfig) -> list[IODesc]:
+    b, t = cfg.batch_size, cfg.seq_len
+    if cfg.family == "vit":
+        return [
+            IODesc("batch::x", (b, t - 1, cfg.patch_dim), "float32"),
+            IODesc("batch::targets", (b,), "int32"),
+        ]
+    return [
+        IODesc("batch::x", (b, t), "int32"),
+        IODesc("batch::targets", (b, t), "int32"),
+        IODesc("batch::mask", (b, t), "float32"),
+    ]
+
+
+def _token_loss(logits: jax.Array, targets: jax.Array, mask: jax.Array):
+    """Masked token-level cross entropy. Returns (sum_nll, count, correct)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    sum_nll = jnp.sum(nll * mask)
+    count = jnp.sum(mask)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == targets).astype(jnp.float32) * mask)
+    return sum_nll, count, correct
+
+
+def _cls_loss(logits: jax.Array, targets: jax.Array):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+    return jnp.sum(nll), jnp.asarray(nll.shape[0], jnp.float32), correct
+
+
+def _loss_from_batch(cfg: ModelConfig, logits, batch):
+    if cfg.family == "vit":
+        return _cls_loss(logits, batch[1])
+    return _token_loss(logits, batch[1], batch[2])
+
+
+# --------------------------------------------------------------------------
+# Programs
+# --------------------------------------------------------------------------
+
+def build_init(cfg: ModelConfig):
+    inputs = [_scalar("seed", "int32"), _scalar("b_init")]
+    outputs = _param_descs(cfg, "param")
+
+    def fn(seed, b_init):
+        return tuple(init_params(cfg, seed, b_init))
+
+    return fn, inputs, outputs
+
+
+def build_train_step(cfg: ModelConfig):
+    """One fused AdamW step: fwd, bwd, global-norm clip, decoupled decay.
+
+    State layout: params, first moment (m), second moment (v), step counter.
+    The step counter drives bias correction; the LR schedule itself lives in
+    rust (lr arrives as an input), keeping all schedule experiments out of
+    the artifact.
+    """
+    specs = param_specs(cfg)
+    n = len(specs)
+    inputs = (
+        _param_descs(cfg, "param")
+        + _param_descs(cfg, "m")
+        + _param_descs(cfg, "v")
+        + [_scalar("step")]
+        + _batch_descs(cfg)
+        + [_scalar("lr"), _scalar("gamma"), _scalar("zeta"),
+           _scalar("gate_scale"), _scalar("wd_ln"), _scalar("act_reg")]
+    )
+    outputs = (
+        _param_descs(cfg, "param")
+        + _param_descs(cfg, "m")
+        + _param_descs(cfg, "v")
+        + [_scalar("step"), _scalar("loss")]
+    )
+    nb = len(_batch_descs(cfg))
+
+    def fn(*args):
+        params = list(args[0:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        step = args[3 * n]
+        batch = args[3 * n + 1:3 * n + 1 + nb]
+        lr, gamma, zeta, gate_scale, wd_ln, act_reg = args[3 * n + 1 + nb:]
+
+        def loss_fn(plist):
+            pdict = params_to_dict(cfg, plist)
+            rec = RecordTap()
+            logits = forward(cfg, pdict, batch[0], gamma, zeta, gate_scale,
+                             tap=rec)
+            sum_nll, count, _ = _loss_from_batch(cfg, logits, batch)
+            loss = sum_nll / jnp.maximum(count, 1.0)
+            # §B.6 activation regularization on FFN outputs (0 when act_reg=0).
+            reg = sum(
+                jnp.mean(jnp.square(t_))
+                for name, t_ in rec.records.items()
+                if name.endswith(".ffn_out")
+            ) / cfg.n_layers
+            return loss + act_reg * reg, loss
+
+        (_total, loss), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        # Global-norm gradient clipping (1.0 in all paper setups, §C).
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+        grads = [g * scale for g in grads]
+
+        step1 = step + 1.0
+        b1, b2 = cfg.adam_b1, cfg.adam_b2
+        bc1 = 1.0 - jnp.power(b1, step1)
+        bc2 = 1.0 - jnp.power(b2, step1)
+        new_p, new_m, new_v = [], [], []
+        for spec, pp, mm, vv, gg in zip(specs, params, m, v, grads):
+            mm = b1 * mm + (1.0 - b1) * gg
+            vv = b2 * vv + (1.0 - b2) * jnp.square(gg)
+            upd = (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS)
+            wd = cfg.weight_decay if spec.decay else 0.0
+            wd_dynamic = cfg.weight_decay * wd_ln if spec.ln_gamma else wd
+            pp = pp - lr * (upd + wd_dynamic * pp)
+            new_p.append(pp)
+            new_m.append(mm)
+            new_v.append(vv)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (step1, loss)
+
+    return fn, inputs, outputs
+
+
+def build_eval_step(cfg: ModelConfig):
+    inputs = (
+        _param_descs(cfg, "param")
+        + _batch_descs(cfg)
+        + [_scalar("gamma"), _scalar("zeta"), _scalar("gate_scale")]
+    )
+    outputs = [_scalar("sum_nll"), _scalar("count"), _scalar("correct")]
+    n = len(param_specs(cfg))
+    nb = len(_batch_descs(cfg))
+
+    def fn(*args):
+        pdict = params_to_dict(cfg, list(args[0:n]))
+        batch = args[n:n + nb]
+        gamma, zeta, gate_scale = args[n + nb:]
+        logits = forward(cfg, pdict, batch[0], gamma, zeta, gate_scale)
+        return _loss_from_batch(cfg, logits, batch)
+
+    return fn, inputs, outputs
+
+
+def build_act_collect(cfg: ModelConfig):
+    """Collect every tapped activation (quant points + analysis tensors) for
+    one batch — feeds the rust calibrator (ranges), the §5 outlier metrics,
+    and the Fig 1-3/8 analysis dumps."""
+    inputs = (
+        _param_descs(cfg, "param")
+        + _batch_descs(cfg)
+        + [_scalar("gamma"), _scalar("zeta"), _scalar("gate_scale")]
+    )
+    n = len(param_specs(cfg))
+    nb = len(_batch_descs(cfg))
+
+    # Determine tap names/shapes by abstract evaluation.
+    def raw(*args):
+        pdict = params_to_dict(cfg, list(args[0:n]))
+        batch = args[n:n + nb]
+        gamma, zeta, gate_scale = args[n + nb:]
+        rec = RecordTap()
+        logits = forward(cfg, pdict, batch[0], gamma, zeta, gate_scale,
+                         tap=rec, decompose_attention=True)
+        sum_nll, count, correct = _loss_from_batch(cfg, logits, batch)
+        return rec.records, (sum_nll, count, correct)
+
+    in_specs = [d.spec() for d in inputs]
+    shaped = jax.eval_shape(raw, *in_specs)
+    names = list(shaped[0].keys())
+    outputs = [
+        IODesc(f"act::{k}", shaped[0][k].shape, "float32") for k in names
+    ] + [_scalar("sum_nll"), _scalar("count"), _scalar("correct")]
+
+    def fn(*args):
+        records, stats = raw(*args)
+        return tuple(records[k] for k in names) + stats
+
+    return fn, inputs, outputs
+
+
+def build_eval_quant(cfg: ModelConfig):
+    """Quantized evaluation: weights arrive already fake-quantized (rust does
+    symmetric weight PTQ on the host); activations are fake-quantized
+    in-graph at every quant point with runtime scale/zero-point vectors and
+    runtime qmax (so one artifact serves W*A8/A6/A4 — Table 10)."""
+    points = quant_point_names(cfg)
+    idx = {nm: i for i, nm in enumerate(points)}
+    npts = len(points)
+    inputs = (
+        _param_descs(cfg, "param")
+        + [IODesc("act_scale", (npts,), "float32"),
+           IODesc("act_zp", (npts,), "float32"),
+           _scalar("qmax")]
+        + _batch_descs(cfg)
+        + [_scalar("gamma"), _scalar("zeta"), _scalar("gate_scale")]
+    )
+    outputs = [_scalar("sum_nll"), _scalar("count"), _scalar("correct")]
+    n = len(param_specs(cfg))
+    nb = len(_batch_descs(cfg))
+
+    def fn(*args):
+        pdict = params_to_dict(cfg, list(args[0:n]))
+        scales, zps, qmax = args[n:n + 3]
+        batch = args[n + 3:n + 3 + nb]
+        gamma, zeta, gate_scale = args[n + 3 + nb:]
+        tap = QuantTap(idx, scales, zps, qmax)
+        logits = forward(cfg, pdict, batch[0], gamma, zeta, gate_scale,
+                         tap=tap, decompose_attention=True)
+        return _loss_from_batch(cfg, logits, batch)
+
+    return fn, inputs, outputs, points
+
+
+PROGRAM_BUILDERS: dict[str, Callable] = {
+    "init": build_init,
+    "train_step": build_train_step,
+    "eval_step": build_eval_step,
+    "act_collect": build_act_collect,
+    "eval_quant": build_eval_quant,
+}

@@ -1,0 +1,70 @@
+"""Shared fixtures: micro model configs that trace in milliseconds."""
+
+import dataclasses
+
+import pytest
+
+from compile.configs import ModelConfig
+
+
+def micro_config(**overrides) -> ModelConfig:
+    base = dict(
+        name="micro",
+        family="bert",
+        attention="softmax",
+        n_layers=2,
+        d_model=16,
+        n_heads=2,
+        d_ff=32,
+        seq_len=8,
+        vocab_size=32,
+        ln_placement="post",
+        causal=False,
+        objective="mlm",
+        batch_size=2,
+        gate_hidden=3,
+    )
+    base.update(overrides)
+    cfg = ModelConfig(**base)
+    cfg.validate()
+    return cfg
+
+
+def micro_opt(**overrides) -> ModelConfig:
+    return micro_config(
+        name="micro_opt", family="opt", ln_placement="pre", causal=True,
+        objective="clm", adam_b2=0.95, init_std=0.006, **overrides,
+    )
+
+
+def micro_vit(**overrides) -> ModelConfig:
+    return micro_config(
+        name="micro_vit", family="vit", ln_placement="pre", objective="cls",
+        vocab_size=0, n_classes=4, patch_dim=12, seq_len=5, **overrides,
+    )
+
+
+@pytest.fixture
+def bert_cfg():
+    return micro_config()
+
+
+@pytest.fixture
+def opt_cfg():
+    return micro_opt()
+
+
+@pytest.fixture
+def vit_cfg():
+    return micro_vit()
+
+
+def all_attention_variants(cfg_fn):
+    return [
+        cfg_fn(attention=a, name=f"{cfg_fn.__name__}_{a}")
+        for a in ("softmax", "gated_linear", "gated_mlp", "gated_allheads")
+    ]
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

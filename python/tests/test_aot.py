@@ -1,0 +1,74 @@
+"""AOT emission tests: HLO text + manifest integrity for a micro config
+(the contract consumed by rust/src/runtime/artifact.rs)."""
+
+import json
+
+import pytest
+
+from compile import aot
+from compile.train import PROGRAM_BUILDERS
+from tests.conftest import micro_config
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = micro_config(name="micro_aot")
+    did = aot.lower_config(cfg, out)
+    assert did
+    return cfg, out / "micro_aot"
+
+
+def test_all_programs_emitted(built):
+    _, cdir = built
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    assert set(manifest["programs"]) == set(PROGRAM_BUILDERS)
+    for prog in manifest["programs"].values():
+        hlo = (cdir / prog["file"]).read_text()
+        assert hlo.startswith("HloModule"), prog["file"]
+        assert "ENTRY" in hlo
+
+
+def test_manifest_io_counts(built):
+    cfg, cdir = built
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    n = len(manifest["params"])
+    ts = manifest["programs"]["train_step"]
+    # params + m + v + step + (x,targets,mask) + 6 hyper scalars
+    assert len(ts["inputs"]) == 3 * n + 1 + 3 + 6
+    assert len(ts["outputs"]) == 3 * n + 2
+    eq = manifest["programs"]["eval_quant"]
+    npts = len(manifest["quant_points"])
+    scale_in = next(d for d in eq["inputs"] if d["name"] == "act_scale")
+    assert scale_in["shape"] == [npts]
+
+
+def test_hlo_parameter_count_matches_manifest(built):
+    """keep_unused must hold: the HLO entry takes exactly the manifest's
+    inputs (this is the bug class that broke the first smoke run)."""
+    _, cdir = built
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    for name, prog in manifest["programs"].items():
+        hlo = (cdir / prog["file"]).read_text()
+        entry = hlo[hlo.index("\nENTRY") :]
+        count = sum(
+            " parameter(" in line
+            for line in entry.splitlines()
+        )
+        assert count == len(prog["inputs"]), (
+            f"{name}: HLO entry has {count} params, manifest {len(prog['inputs'])}"
+        )
+
+
+def test_fingerprint_skips_rebuild(built, tmp_path):
+    cfg, _ = built
+    assert aot.lower_config(cfg, tmp_path) is True
+    assert aot.lower_config(cfg, tmp_path) is False  # up to date
+    assert aot.lower_config(cfg, tmp_path, force=True) is True
+
+
+def test_fingerprint_changes_with_config(built):
+    cfg, _ = built
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, n_layers=cfg.n_layers + 1)
+    assert aot.config_fingerprint(cfg) != aot.config_fingerprint(cfg2)

@@ -1,0 +1,230 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the whole stack: the AOT HLO the
+rust runtime executes is lowered from exactly these traced ops. Hypothesis
+sweeps shapes, dtypes and the clipped-softmax stretch factors, including the
+exact-zero / clipped-gradient regimes the paper's method depends on.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention as A
+from compile.kernels import fake_quant as FQ
+from compile.kernels import layernorm as LN
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 3),   # batch
+    st.integers(1, 4),   # heads
+    st.sampled_from([2, 5, 8]),  # seq
+    st.sampled_from([4, 8, 16]),  # d_head
+)
+
+
+class TestAttentionForward:
+    @hypothesis.given(
+        dims=shape_strategy,
+        gamma=st.sampled_from([0.0, -0.003, -0.03, -0.2]),
+        zeta=st.sampled_from([1.0, 1.003, 1.03]),
+        causal=st.booleans(),
+        gated=st.booleans(),
+    )
+    def test_matches_ref(self, dims, gamma, zeta, causal, gated):
+        b, h, t, d = dims
+        q, k, v = (rand(i, (b, h, t, d)) for i in range(3))
+        g = rand(3, (b, h, t, 1)) if gated else None
+        out = A.attention(q, k, v, gamma, zeta, gate_logits=g, causal=causal)
+        expect = ref.attention_ref(q, k, v, g, gamma, zeta, causal=causal)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(dims=shape_strategy, gamma=st.sampled_from([0.0, -0.05]))
+    def test_probs_match_ref(self, dims, gamma):
+        b, h, t, d = dims
+        q, k = rand(0, (b, h, t, d)), rand(1, (b, h, t, d))
+        p = A.attention_probs(q, k, gamma, 1.0)
+        expect = ref.attention_probs_ref(q, k, gamma, 1.0)
+        np.testing.assert_allclose(p, expect, rtol=1e-5, atol=1e-5)
+
+    def test_vanilla_rows_sum_to_one(self):
+        q, k = rand(0, (2, 2, 8, 8)), rand(1, (2, 2, 8, 8))
+        p = A.attention_probs(q, k, 0.0, 1.0)
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+
+    def test_clipped_softmax_reaches_exact_zero(self):
+        # gamma < 0 must produce exact zeros at *moderate* score ranges —
+        # the paper's core mechanism: zeros with finite dynamic range. At
+        # the same range the vanilla softmax stays strictly positive (it
+        # only reaches 0 by f32 underflow at ~90+ logit gaps).
+        q = 1.5 * rand(0, (1, 1, 8, 8))
+        k = 1.5 * rand(1, (1, 1, 8, 8))
+        p = A.attention_probs(q, k, -0.03, 1.0)
+        assert (np.asarray(p) == 0.0).any(), "no exact zeros with gamma<0"
+        p0 = np.asarray(A.attention_probs(q, k, 0.0, 1.0))
+        assert (p0 > 0.0).all(), f"vanilla underflowed: min {p0.min()}"
+
+    def test_causal_masks_future(self):
+        q, k = rand(0, (1, 1, 6, 4)), rand(1, (1, 1, 6, 4))
+        p = np.asarray(A.attention_probs(q, k, 0.0, 1.0, causal=True))
+        upper = np.triu(np.ones((6, 6), bool), 1)
+        assert (p[0, 0][upper] == 0).all()
+
+    def test_gamma_zero_equals_vanilla(self):
+        q, k, v = (rand(i, (2, 2, 6, 8)) for i in range(3))
+        a = A.attention(q, k, v, 0.0, 1.0)
+        b = ref.attention_ref(q, k, v, None, 0.0, 1.0)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+class TestAttentionBackward:
+    @hypothesis.given(
+        dims=shape_strategy,
+        gamma=st.sampled_from([0.0, -0.03]),
+        causal=st.booleans(),
+        gated=st.booleans(),
+    )
+    def test_grads_match_ref(self, dims, gamma, causal, gated):
+        b, h, t, d = dims
+        q, k, v = (rand(i, (b, h, t, d)) for i in range(3))
+        g = rand(3, (b, h, t, 1)) if gated else jnp.zeros((b, h, t, 1))
+        use_g = g if gated else None
+
+        def loss_k(q, k, v, g):
+            gl = g if gated else None
+            return jnp.sum(jnp.sin(A.attention(q, k, v, gamma, 1.0, gate_logits=gl, causal=causal)))
+
+        def loss_r(q, k, v, g):
+            gl = g if gated else None
+            return jnp.sum(jnp.sin(ref.attention_ref(q, k, v, gl, gamma, 1.0, causal=causal)))
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2, 3))(q, k, v, g)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2, 3))(q, k, v, g)
+        for a, b_, name in zip(gk, gr, "qkvg"):
+            np.testing.assert_allclose(
+                a, b_, rtol=1e-4, atol=1e-5, err_msg=f"grad {name}"
+            )
+        _ = use_g
+
+    def test_clipped_entries_stop_gradient(self):
+        # Section 4.1: entries clipped to 0 give exactly zero gradient —
+        # the property that stops outlier growth. Diagonal-dominant scores
+        # chosen so p0_diag ≈ 0.95 (NOT f32-saturated: the vanilla softmax
+        # still has gradients everywhere) while every off-diagonal falls
+        # below the gamma=-0.03 clip threshold gamma/(zeta-gamma) ≈ 0.029.
+        t = 6
+        a = float(np.log(5.0 * 0.95 / 0.05))  # p0_diag = 0.95 for 6 keys
+        scale = a * np.sqrt(8.0)
+        q = np.sqrt(scale) * jnp.eye(t, 8)[None, None]
+        k = np.sqrt(scale) * jnp.eye(t, 8)[None, None]
+
+        p_clip = np.asarray(A.attention_probs(q, k, -0.03, 1.0))[0, 0]
+        off = ~np.eye(t, dtype=bool)
+        assert (p_clip[off] == 0.0).all(), "off-diagonals not clipped"
+        assert (p_clip.diagonal() < 1.0).all(), "diag should stay interior"
+
+        # v = one-hot rows so attention output == probability matrix (the
+        # probs-only kernel is forward-only; the fused op has the VJP).
+        v = jnp.eye(t, 8)[None, None]
+
+        def off_mass(kk, gamma):
+            p = A.attention(q, kk, v, gamma, 1.0)[0, 0, :, :t]
+            return jnp.sum(p * off)
+
+        g_clipped = jax.grad(off_mass)(k, -0.03)
+        g_vanilla = jax.grad(off_mass)(k, 0.0)
+        # clipped-to-zero outputs are constants: zero gradient to k
+        assert float(jnp.abs(g_clipped).max()) == 0.0
+        assert float(jnp.abs(g_vanilla).max()) > 1e-7
+
+
+class TestFakeQuant:
+    @hypothesis.given(
+        n=st.integers(1, 64),
+        m=st.integers(1, 16),
+        bits=st.sampled_from([4, 6, 8]),
+        scale=st.sampled_from([0.01, 0.05, 0.3]),
+        zp=st.sampled_from([0.0, 7.0, 128.0]),
+    )
+    def test_matches_ref(self, n, m, bits, scale, zp):
+        x = 3.0 * rand(0, (n, m))
+        qmax = float(2**bits - 1)
+        out = FQ.fake_quant(x, scale, zp, qmax)
+        expect = ref.fake_quant_ref(x, scale, zp, qmax)
+        np.testing.assert_allclose(out, expect, rtol=1e-6, atol=1e-6)
+
+    def test_output_is_on_grid(self):
+        x = rand(0, (16, 16))
+        s, z, qmax = 0.05, 12.0, 255.0
+        y = np.asarray(FQ.fake_quant(x, s, z, qmax))
+        q = y / s + z
+        np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+        assert q.min() >= -1e-4 and q.max() <= qmax + 1e-4
+
+    def test_rank_handling(self):
+        for shape in [(5,), (3, 4), (2, 3, 4), (2, 2, 2, 2)]:
+            x = rand(1, shape)
+            y = FQ.fake_quant(x, 0.1, 8.0, 255.0)
+            assert y.shape == x.shape
+
+    def test_straight_through_gradient(self):
+        x = rand(0, (4, 4))
+        g = jax.grad(lambda x: jnp.sum(FQ.fake_quant(x, 0.1, 8.0, 255.0)))(x)
+        np.testing.assert_allclose(g, jnp.ones_like(x), atol=1e-6)
+
+
+class TestLayerNorm:
+    @hypothesis.given(
+        rows=st.integers(1, 16),
+        d=st.sampled_from([4, 16, 32]),
+        lead=st.booleans(),
+    )
+    def test_matches_ref(self, rows, d, lead):
+        shape = (2, rows, d) if lead else (rows, d)
+        x = 2.0 * rand(0, shape)
+        g = rand(1, (d,)) + 1.0
+        b = rand(2, (d,))
+        np.testing.assert_allclose(
+            LN.layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_grads_match_ref(self):
+        x, g, b = 2.0 * rand(0, (6, 16)), rand(1, (16,)) + 1.0, rand(2, (16,))
+
+        def lk(x, g, b):
+            return jnp.sum(jnp.cos(LN.layernorm(x, g, b)))
+
+        def lr(x, g, b):
+            return jnp.sum(jnp.cos(ref.layernorm_ref(x, g, b)))
+
+        gk = jax.grad(lk, argnums=(0, 1, 2))(x, g, b)
+        gr = jax.grad(lr, argnums=(0, 1, 2))(x, g, b)
+        for a, e, n in zip(gk, gr, ["x", "gamma", "beta"]):
+            np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5, err_msg=n)
+
+    def test_normalizes_huge_outliers(self):
+        # The paper's mechanism needs LN to normalize outliers (Fig 4): a
+        # 1000x outlier row still comes out with bounded values.
+        x = jnp.ones((2, 32)).at[0, 0].set(1000.0)
+        y = LN.layernorm(x, jnp.ones(32), jnp.zeros(32))
+        assert float(jnp.abs(y).max()) < 10.0
+
+
+@pytest.mark.parametrize("gamma,zeta", [(0.0, 1.0), (-0.03, 1.0), (-0.1, 1.05)])
+def test_clipped_softmax_bounds(gamma, zeta):
+    x = 10.0 * rand(0, (4, 16))
+    p = np.asarray(ref.clipped_softmax(x, gamma, zeta))
+    assert p.min() >= 0.0 and p.max() <= 1.0

@@ -1,0 +1,222 @@
+"""L2 model tests: parameter inventory, forward shapes, attention-variant
+equivalences, tap/quant-point machinery."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import REGISTRY
+from tests.conftest import micro_config, micro_opt, micro_vit
+
+VARIANTS = ("softmax", "gated_linear", "gated_mlp", "gated_allheads")
+
+
+def make_params(cfg, seed=0, b_init=0.0):
+    flat = M.init_params(cfg, seed, b_init)
+    return M.params_to_dict(cfg, flat), flat
+
+
+def example_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "vit":
+        return jnp.asarray(
+            rng.normal(size=(cfg.batch_size, cfg.seq_len - 1, cfg.patch_dim)),
+            jnp.float32,
+        )
+    return jnp.asarray(
+        rng.integers(6, cfg.vocab_size, (cfg.batch_size, cfg.seq_len)), jnp.int32
+    )
+
+
+class TestParams:
+    @pytest.mark.parametrize("att", VARIANTS)
+    def test_specs_match_init(self, att):
+        cfg = micro_config(attention=att, name=f"m_{att}")
+        specs = M.param_specs(cfg)
+        flat = M.init_params(cfg, 0, 0.5)
+        assert len(specs) == len(flat)
+        for s, a in zip(specs, flat):
+            assert tuple(a.shape) == s.shape, s.name
+
+    def test_gate_bias_init_value(self):
+        cfg = micro_config(attention="gated_linear", name="g")
+        p, _ = make_params(cfg, b_init=-1.5)
+        np.testing.assert_allclose(p["L0.gate.b"], -1.5)
+
+    def test_head_not_quantized_everything_2d_is(self):
+        cfg = micro_config()
+        for s in M.param_specs(cfg):
+            if s.name.startswith("head."):
+                assert not s.quantize, s.name
+            if s.name.endswith((".wq", ".wk", ".wv", ".wo", ".w1", ".w2")):
+                assert s.quantize, s.name
+
+    def test_ln_gamma_flags(self):
+        cfg = micro_opt()
+        flags = {s.name: s.ln_gamma for s in M.param_specs(cfg)}
+        assert flags["L0.ln1.g"] and flags["final_ln.g"]
+        assert not flags["L0.ln1.b"] and not flags["L0.wq"]
+
+    def test_seeds_change_init(self):
+        cfg = micro_config()
+        a = M.init_params(cfg, 0, 0.0)
+        b = M.init_params(cfg, 1, 0.0)
+        diffs = [
+            float(jnp.abs(x - y).max())
+            for x, y, s in zip(a, b, M.param_specs(cfg))
+            if s.init == "normal"
+        ]
+        assert all(d > 0 for d in diffs)
+
+
+class TestForward:
+    @pytest.mark.parametrize("att", VARIANTS)
+    def test_bert_logits_shape(self, att):
+        cfg = micro_config(attention=att, name=f"f_{att}")
+        p, _ = make_params(cfg)
+        logits = M.forward(cfg, p, example_batch(cfg), 0.0, 1.0, 1.0)
+        assert logits.shape == (cfg.batch_size, cfg.seq_len, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_opt_and_vit_shapes(self):
+        cfg = micro_opt()
+        p, _ = make_params(cfg)
+        logits = M.forward(cfg, p, example_batch(cfg), 0.0, 1.0, 1.0)
+        assert logits.shape == (cfg.batch_size, cfg.seq_len, cfg.vocab_size)
+
+        cfg = micro_vit()
+        p, _ = make_params(cfg)
+        logits = M.forward(cfg, p, example_batch(cfg), 0.0, 1.0, 1.0)
+        assert logits.shape == (cfg.batch_size, cfg.n_classes)
+
+    @pytest.mark.parametrize("att", VARIANTS)
+    def test_fused_equals_decomposed(self, att):
+        """eval/train use the fused Pallas attention; act_collect/eval_quant
+        use the decomposed path — they must agree exactly."""
+        cfg = micro_config(attention=att, name=f"d_{att}")
+        p, _ = make_params(cfg, b_init=0.3)
+        x = example_batch(cfg)
+        a = M.forward(cfg, p, x, -0.02, 1.0, 1.0)
+        b = M.forward(cfg, p, x, -0.02, 1.0, 1.0, decompose_attention=True)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_causal_no_leak(self):
+        """Changing future tokens must not change past logits (OPT)."""
+        cfg = micro_opt()
+        p, _ = make_params(cfg)
+        x = example_batch(cfg)
+        y1 = M.forward(cfg, p, x, 0.0, 1.0, 1.0)
+        x2 = x.at[:, -1].set((x[:, -1] + 1) % cfg.vocab_size)
+        y2 = M.forward(cfg, p, x2, 0.0, 1.0, 1.0)
+        np.testing.assert_allclose(y1[:, :-1], y2[:, :-1], rtol=1e-5, atol=1e-6)
+        assert float(jnp.abs(y1[:, -1] - y2[:, -1]).max()) > 1e-6
+
+    def test_gate_scale_scales_update(self):
+        """With gates, doubling gate_scale doubles the attention update
+        (before the residual) — §B.6's x2 trick."""
+        cfg = micro_config(attention="gated_linear", name="gs", n_layers=1)
+        p, _ = make_params(cfg)
+        x = example_batch(cfg)
+        rec1, rec2 = M.RecordTap(), M.RecordTap()
+        M.forward(cfg, p, x, 0.0, 1.0, 1.0, tap=rec1)
+        M.forward(cfg, p, x, 0.0, 1.0, 2.0, tap=rec2)
+        np.testing.assert_allclose(
+            2.0 * rec1.records["L0.ctx"], rec2.records["L0.ctx"], rtol=1e-5
+        )
+
+    def test_closed_gates_freeze_residual(self):
+        """b_init -> -inf approximates a hard no-op: the attention update
+        vanishes and block output ≈ FFN-only path."""
+        cfg = micro_config(attention="gated_linear", name="closed", n_layers=1)
+        p, _ = make_params(cfg, b_init=-30.0)
+        x = example_batch(cfg)
+        rec = M.RecordTap()
+        M.forward(cfg, p, x, 0.0, 1.0, 1.0, tap=rec)
+        assert float(jnp.abs(rec.records["L0.ctx"]).max()) < 1e-8
+        np.testing.assert_allclose(
+            rec.records["L0.res1"], rec.records["embed"], rtol=1e-6
+        )
+
+
+class TestQuantPoints:
+    def test_points_are_stable_and_complete(self):
+        cfg = micro_config()
+        pts = M.quant_point_names(cfg)
+        assert pts == M.quant_point_names(cfg)  # deterministic
+        assert "embed" in pts
+        for l in range(cfg.n_layers):
+            for suffix in ("q", "k", "v", "probs", "ctx", "attn_out", "res1",
+                           "ffn_h", "ffn_out", "res2"):
+                assert f"L{l}.{suffix}" in pts, f"L{l}.{suffix}"
+        # analysis-only taps excluded
+        assert not any(p.endswith((".values", ".gate_probs", ".block_out")) for p in pts)
+
+    def test_quant_tap_quantizes_only_known_points(self):
+        cfg = micro_config(name="qt", n_layers=1)
+        pts = M.quant_point_names(cfg)
+        idx = {n: i for i, n in enumerate(pts)}
+        scales = jnp.full((len(pts),), 0.05)
+        zps = jnp.full((len(pts),), 128.0)
+        tap = M.QuantTap(idx, scales, zps, jnp.float32(255.0))
+        x = jnp.linspace(-1, 1, 12).reshape(3, 4)
+        y = tap("embed", x)
+        assert float(jnp.abs(y - x).max()) > 0  # quantized
+        z = tap("not_a_point", x)
+        np.testing.assert_array_equal(z, x)  # passthrough
+
+    def test_quantized_forward_close_at_8bit(self):
+        cfg = micro_config(name="q8", n_layers=1)
+        p, _ = make_params(cfg)
+        x = example_batch(cfg)
+        rec = M.RecordTap()
+        clean = M.forward(cfg, p, x, 0.0, 1.0, 1.0, tap=rec, decompose_attention=True)
+        pts = M.quant_point_names(cfg)
+        idx = {n: i for i, n in enumerate(pts)}
+        # generous per-point ranges from the recorded activations
+        scales, zps = [], []
+        for n in pts:
+            t = rec.records[n]
+            lo = float(jnp.min(t).clip(max=0.0))
+            hi = float(jnp.max(t).clip(min=0.0))
+            s = max(hi - lo, 1e-6) / 255.0
+            scales.append(s)
+            zps.append(round(-lo / s))
+        tap = M.QuantTap(idx, jnp.asarray(scales), jnp.asarray(zps), jnp.float32(255.0))
+        qout = M.forward(cfg, p, x, 0.0, 1.0, 1.0, tap=tap, decompose_attention=True)
+        # logits shift but stay close at 8 bits on a tiny clean model
+        assert float(jnp.abs(qout - clean).max()) < 0.5
+
+
+class TestRegistry:
+    def test_registry_configs_validate(self):
+        for name, cfg in REGISTRY.items():
+            cfg.validate()
+            assert cfg.name == name
+
+    def test_registry_has_all_families_and_variants(self):
+        fams = {c.family for c in REGISTRY.values()}
+        assert fams == {"bert", "opt", "vit"}
+        atts = {c.attention for c in REGISTRY.values()}
+        assert atts == set(VARIANTS)
+
+    def test_param_specs_unique_names(self):
+        for cfg in list(REGISTRY.values())[:4]:
+            names = [s.name for s in M.param_specs(cfg)]
+            assert len(names) == len(set(names))
+
+    def test_fig6_seqlen_sweep_exists(self):
+        for t in (16, 32, 64):
+            cfg = REGISTRY[f"bert6l_t{t}_softmax"]
+            assert cfg.seq_len == t and cfg.n_layers == 6
+
+    def test_patchln_variants_differ(self):
+        a = REGISTRY["vit_tiny_softmax"]
+        b = REGISTRY["vit_tiny_softmax_patchln"]
+        assert not a.patch_ln and b.patch_ln
+        assert dataclasses.replace(a, name="x", patch_ln=True) == dataclasses.replace(
+            b, name="x"
+        )

@@ -1,0 +1,200 @@
+"""L2 training-program tests: the AdamW train_step, eval_step, act_collect
+and eval_quant builders behave as the manifest promises."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from tests.conftest import micro_config, micro_opt, micro_vit
+
+
+def build_state(cfg, seed=0, b_init=0.0):
+    init_fn, _, _ = T.build_init(cfg)
+    params = list(init_fn(jnp.int32(seed), jnp.float32(b_init)))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    return params, m, v
+
+
+def batch_for(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "vit":
+        x = jnp.asarray(
+            rng.normal(size=(cfg.batch_size, cfg.seq_len - 1, cfg.patch_dim)),
+            jnp.float32,
+        )
+        y = jnp.asarray(rng.integers(0, cfg.n_classes, (cfg.batch_size,)), jnp.int32)
+        return [x, y]
+    toks = jnp.asarray(
+        rng.integers(6, cfg.vocab_size, (cfg.batch_size, cfg.seq_len)), jnp.int32
+    )
+    mask = jnp.asarray(rng.random((cfg.batch_size, cfg.seq_len)) < 0.3, jnp.float32)
+    return [toks, toks, mask]
+
+
+def run_steps(cfg, n_steps, lr=3e-3, **hyper):
+    fn, inputs, outputs = T.build_train_step(cfg)
+    jfn = jax.jit(fn, keep_unused=True)
+    params, m, v = build_state(cfg)
+    np_ = len(params)
+    step = jnp.float32(0)
+    batch = batch_for(cfg)
+    h = dict(lr=lr, gamma=0.0, zeta=1.0, gate_scale=1.0, wd_ln=0.0, act_reg=0.0)
+    h.update(hyper)
+    losses = []
+    for i in range(n_steps):
+        args = (
+            params + m + v + [step] + batch
+            + [jnp.float32(h["lr"]), jnp.float32(h["gamma"]), jnp.float32(h["zeta"]),
+               jnp.float32(h["gate_scale"]), jnp.float32(h["wd_ln"]),
+               jnp.float32(h["act_reg"])]
+        )
+        out = jfn(*args)
+        params = list(out[:np_])
+        m = list(out[np_:2 * np_])
+        v = list(out[2 * np_:3 * np_])
+        step = out[3 * np_]
+        losses.append(float(out[-1]))
+    return losses, params, step
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("maker", [micro_config, micro_opt, micro_vit])
+    def test_loss_decreases(self, maker):
+        cfg = maker()
+        losses, _, step = run_steps(cfg, 12)
+        assert losses[-1] < losses[0], losses
+        assert float(step) == 12.0
+        assert all(np.isfinite(losses))
+
+    def test_io_descs_cover_args(self):
+        cfg = micro_config()
+        _, inputs, outputs = T.build_train_step(cfg)
+        n = len(M.param_specs(cfg))
+        in_names = [d.name for d in inputs]
+        assert in_names.count("lr") == 1
+        assert sum(x.startswith("param::") for x in in_names) == n
+        assert sum(x.startswith("m::") for x in in_names) == n
+        out_names = [d.name for d in outputs]
+        assert out_names[-1] == "loss" and out_names[-2] == "step"
+        # outputs mirror the state inputs exactly, in order
+        assert out_names[: 3 * n + 1] == in_names[: 3 * n + 1]
+
+    def test_wd_ln_toggle_shrinks_ln_gamma(self):
+        """Table 6 ablation: with wd_ln=1 LayerNorm γ decays, without it
+        stays near 1 under zero-gradient-ish conditions."""
+        cfg = micro_opt()
+        specs = M.param_specs(cfg)
+        gi = next(i for i, s in enumerate(specs) if s.ln_gamma)
+        _, p_off, _ = run_steps(cfg, 10, wd_ln=0.0, lr=5e-2)
+        _, p_on, _ = run_steps(cfg, 10, wd_ln=1.0, lr=5e-2)
+        assert float(jnp.mean(p_on[gi])) < float(jnp.mean(p_off[gi]))
+
+    def test_act_reg_shrinks_ffn_out(self):
+        cfg = micro_config(n_layers=1, name="ar")
+        _, p_off, _ = run_steps(cfg, 15, act_reg=0.0)
+        _, p_on, _ = run_steps(cfg, 15, act_reg=1.0)
+        rec_off, rec_on = M.RecordTap(), M.RecordTap()
+        x = batch_for(cfg)[0]
+        M.forward(cfg, M.params_to_dict(cfg, p_off), x, 0.0, 1.0, 1.0, tap=rec_off)
+        M.forward(cfg, M.params_to_dict(cfg, p_on), x, 0.0, 1.0, 1.0, tap=rec_on)
+        off = float(jnp.mean(jnp.square(rec_off.records["L0.ffn_out"])))
+        on = float(jnp.mean(jnp.square(rec_on.records["L0.ffn_out"])))
+        assert on < off
+
+    def test_grad_clip_keeps_update_bounded(self):
+        # Huge lr with clip must not produce NaNs within a few steps.
+        cfg = micro_config(name="clip")
+        losses, _, _ = run_steps(cfg, 5, lr=0.5)
+        assert all(np.isfinite(losses))
+
+
+class TestEvalStep:
+    def test_counts_match_mask(self):
+        cfg = micro_config()
+        fn, _, _ = T.build_eval_step(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        out = jax.jit(fn, keep_unused=True)(
+            *params, *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        sum_nll, count, correct = map(float, out)
+        assert count == float(jnp.sum(batch[2]))
+        assert 0 <= correct <= count
+        # untrained model ≈ uniform: nll/token ≈ ln(V)
+        assert abs(sum_nll / count - np.log(cfg.vocab_size)) < 1.0
+
+    def test_vit_counts_are_batch(self):
+        cfg = micro_vit()
+        fn, _, _ = T.build_eval_step(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        out = jax.jit(fn, keep_unused=True)(
+            *params, *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert float(out[1]) == cfg.batch_size
+
+
+class TestActCollect:
+    def test_outputs_match_descs(self):
+        cfg = micro_config(n_layers=1, name="ac")
+        fn, inputs, outputs = T.build_act_collect(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        outs = jax.jit(fn, keep_unused=True)(
+            *params, *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert len(outs) == len(outputs)
+        for o, d in zip(outs, outputs):
+            assert tuple(o.shape) == d.shape, d.name
+        names = [d.name for d in outputs]
+        assert "act::L0.probs" in names
+        assert "act::L0.block_out" in names
+
+    def test_quant_points_subset_of_collected(self):
+        cfg = micro_config(n_layers=2, name="ac2")
+        _, _, outputs = T.build_act_collect(cfg)
+        collected = {d.name.removeprefix("act::") for d in outputs if d.name.startswith("act::")}
+        for p in M.quant_point_names(cfg):
+            assert p in collected, p
+
+
+class TestEvalQuant:
+    def test_generous_ranges_preserve_loss(self):
+        cfg = micro_config(n_layers=1, name="eq")
+        fn, inputs, outputs, points = T.build_eval_quant(cfg)
+        efn, _, _ = T.build_eval_step(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        n = len(points)
+        scales = jnp.full((n,), 0.02)
+        zps = jnp.full((n,), 128.0)
+        q = jax.jit(fn, keep_unused=True)(
+            *params, scales, zps, jnp.float32(255.0), *batch,
+            jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        f = jax.jit(efn, keep_unused=True)(
+            *params, *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert abs(float(q[0]) / float(f[0]) - 1.0) < 0.2
+
+    def test_crushing_ranges_destroy_loss(self):
+        """A sanity direction check: absurd scales must hurt (mirrors what
+        outliers do to real min-max ranges)."""
+        cfg = micro_config(n_layers=1, name="eq2")
+        fn, _, _, points = T.build_eval_quant(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        n = len(points)
+        good = jax.jit(fn, keep_unused=True)(
+            *params, jnp.full((n,), 0.02), jnp.full((n,), 128.0), jnp.float32(255.0),
+            *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        bad = jax.jit(fn, keep_unused=True)(
+            *params, jnp.full((n,), 5.0), jnp.full((n,), 128.0), jnp.float32(255.0),
+            *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert float(bad[0]) > float(good[0])

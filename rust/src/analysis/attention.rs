@@ -1,0 +1,197 @@
+//! Attention-pattern analysis (paper §3 Figs 2-3, §5.5 Fig 8): where does
+//! each head put its probability mass, how large are the values there, and
+//! does the head implement a (soft) no-op?
+
+use crate::data::vocab;
+use crate::util::tensor::Tensor;
+
+/// Per-head summary over one batch of probabilities (B, H, T, T), values
+/// (B, H, T, Dh) and optional gates (B, H, T).
+#[derive(Debug, Clone)]
+pub struct HeadSummary {
+    pub head: usize,
+    /// Mean probability mass assigned to delimiter key positions.
+    pub delim_mass: f64,
+    /// Mean ‖v‖ over delimiter key positions vs all positions.
+    pub delim_value_norm: f64,
+    pub mean_value_norm: f64,
+    /// Mean ‖p·v‖ (the per-token update magnitude) — small ⇒ no-op.
+    pub update_norm: f64,
+    /// Fraction of probability entries that are exactly zero (clipped
+    /// softmax can produce exact zeros; vanilla cannot).
+    pub exact_zero_frac: f64,
+    /// Mean gate probability (gated attention only).
+    pub mean_gate: Option<f64>,
+}
+
+/// Summarize attention behaviour for every head of one layer.
+///
+/// `tokens` is the (B*T) token batch used to locate delimiter key
+/// positions; for ViT pass `None` and `bg_keys` marks background patches.
+pub fn summarize_heads(
+    probs: &Tensor,
+    values: &Tensor,
+    gates: Option<&Tensor>,
+    tokens: Option<&[i32]>,
+    bg_keys: Option<&[bool]>,
+) -> Vec<HeadSummary> {
+    let [b, h, t, t2]: [usize; 4] = probs.shape().try_into().expect("probs rank 4");
+    assert_eq!(t, t2);
+    let dh = values.shape()[3];
+    let mut out = Vec::with_capacity(h);
+    for head in 0..h {
+        let mut delim_mass = 0.0f64;
+        let mut rows = 0.0f64;
+        let mut zero = 0u64;
+        let mut entries = 0u64;
+        let mut delim_vnorm = 0.0f64;
+        let mut delim_n = 0.0f64;
+        let mut all_vnorm = 0.0f64;
+        let mut upd_norm = 0.0f64;
+        for bi in 0..b {
+            // per-key delimiter flags for this sequence
+            let is_delim = |ti: usize| -> bool {
+                if let Some(toks) = tokens {
+                    vocab::is_delimiter(toks[bi * t + ti])
+                } else if let Some(bg) = bg_keys {
+                    bg[bi * t + ti]
+                } else {
+                    false
+                }
+            };
+            // value norms
+            for ti in 0..t {
+                let mut n2 = 0.0f64;
+                for di in 0..dh {
+                    let v = values.at(&[bi, head, ti, di]) as f64;
+                    n2 += v * v;
+                }
+                let n = n2.sqrt();
+                all_vnorm += n;
+                if is_delim(ti) {
+                    delim_vnorm += n;
+                    delim_n += 1.0;
+                }
+            }
+            // probability mass + update norms
+            for qi in 0..t {
+                let mut mass = 0.0f64;
+                let mut upd = vec![0.0f64; dh];
+                for ki in 0..t {
+                    let p = probs.at(&[bi, head, qi, ki]) as f64;
+                    entries += 1;
+                    if p == 0.0 {
+                        zero += 1;
+                    }
+                    if is_delim(ki) {
+                        mass += p;
+                    }
+                    for di in 0..dh {
+                        upd[di] += p * values.at(&[bi, head, ki, di]) as f64;
+                    }
+                }
+                delim_mass += mass;
+                rows += 1.0;
+                upd_norm += upd.iter().map(|x| x * x).sum::<f64>().sqrt();
+            }
+        }
+        let mean_gate = gates.map(|g| {
+            let mut s = 0.0f64;
+            for bi in 0..b {
+                for ti in 0..t {
+                    s += g.at(&[bi, head, ti]) as f64;
+                }
+            }
+            s / (b * t) as f64
+        });
+        out.push(HeadSummary {
+            head,
+            delim_mass: delim_mass / rows,
+            delim_value_norm: if delim_n > 0.0 { delim_vnorm / delim_n } else { 0.0 },
+            mean_value_norm: all_vnorm / (b * t) as f64,
+            update_norm: upd_norm / rows,
+            exact_zero_frac: zero as f64 / entries as f64,
+            mean_gate,
+        });
+    }
+    out
+}
+
+/// ASCII heatmap of one head's (T, T) probability matrix (analysis dumps;
+/// the textual stand-in for the paper's figure panels).
+pub fn ascii_heatmap(probs: &Tensor, batch: usize, head: usize, max_rows: usize) -> String {
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let t = probs.shape()[2];
+    let rows = t.min(max_rows);
+    let mut out = String::new();
+    for qi in 0..rows {
+        for ki in 0..t.min(120) {
+            let p = probs.at(&[batch, head, qi, ki]);
+            let idx = ((p * (shades.len() - 1) as f32).round() as usize).min(shades.len() - 1);
+            out.push(shades[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a no-op head: all probability on key 0 (a delimiter), values
+    /// at key 0 near zero.
+    fn noop_setup() -> (Tensor, Tensor, Vec<i32>) {
+        let (b, h, t, dh) = (1, 2, 4, 3);
+        let mut probs = Tensor::zeros(&[b, h, t, t]);
+        let mut values = Tensor::from_fn(&[b, h, t, dh], |_| 1.0);
+        for qi in 0..t {
+            probs.set(&[0, 0, qi, 0], 1.0); // head 0: everything on key 0
+            for ki in 0..t {
+                probs.set(&[0, 1, qi, ki], 0.25); // head 1: uniform
+            }
+        }
+        for di in 0..dh {
+            values.set(&[0, 0, 0, di], 0.01); // tiny value at delimiter
+        }
+        let tokens = vec![vocab::SEP, 10, 11, 12];
+        (probs, values, tokens)
+    }
+
+    #[test]
+    fn noop_head_detected() {
+        let (probs, values, tokens) = noop_setup();
+        let s = summarize_heads(&probs, &values, None, Some(&tokens), None);
+        assert!(s[0].delim_mass > 0.99);
+        assert!(s[1].delim_mass < 0.3);
+        assert!(s[0].update_norm < 0.05, "head0 update {}", s[0].update_norm);
+        assert!(s[1].update_norm > 0.5, "head1 update {}", s[1].update_norm);
+        assert!(s[0].delim_value_norm < s[0].mean_value_norm);
+    }
+
+    #[test]
+    fn exact_zero_fraction() {
+        let (probs, values, tokens) = noop_setup();
+        let s = summarize_heads(&probs, &values, None, Some(&tokens), None);
+        // head 0 rows are one-hot: 3/4 of entries exactly zero
+        assert!((s[0].exact_zero_frac - 0.75).abs() < 1e-9);
+        assert_eq!(s[1].exact_zero_frac, 0.0);
+    }
+
+    #[test]
+    fn gates_mean() {
+        let (probs, values, tokens) = noop_setup();
+        let gates = Tensor::from_fn(&[1, 2, 4], |i| if i < 4 { 0.0 } else { 1.0 });
+        let s = summarize_heads(&probs, &values, Some(&gates), Some(&tokens), None);
+        assert_eq!(s[0].mean_gate, Some(0.0));
+        assert_eq!(s[1].mean_gate, Some(1.0));
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let (probs, ..) = noop_setup();
+        let hm = ascii_heatmap(&probs, 0, 0, 8);
+        assert_eq!(hm.lines().count(), 4);
+        assert!(hm.starts_with('@'), "{hm}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Outlier and attention-pattern analysis (paper §3 and Figs 1-3, 8-17).
+
+pub mod attention;
+pub mod outliers;
+pub mod params;

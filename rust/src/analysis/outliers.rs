@@ -1,0 +1,146 @@
+//! Outlier localization (paper §3, Fig 1): values exceeding 6 standard
+//! deviations from the tensor mean (footnote 1, following Bondarenko et
+//! al. 2021), counted per hidden dimension and per token position.
+
+use std::collections::BTreeMap;
+
+use crate::util::tensor::Tensor;
+
+pub const OUTLIER_SIGMA: f32 = 6.0;
+
+/// Outlier counts for a stream of (B, T, D) activation tensors.
+#[derive(Debug, Default, Clone)]
+pub struct OutlierCounts {
+    /// hidden dimension -> count
+    pub per_dim: BTreeMap<usize, u64>,
+    /// token position -> count
+    pub per_pos: BTreeMap<usize, u64>,
+    /// token id at the outlier position (if token batch supplied) -> count
+    pub per_token: BTreeMap<i32, u64>,
+    pub total: u64,
+    pub values_seen: u64,
+}
+
+impl OutlierCounts {
+    /// Scan one (B, T, D) tensor; `tokens` (B*T) optionally attributes
+    /// outliers to vocabulary items (Fig 1's "97% of outliers sit at
+    /// delimiter positions" observation).
+    pub fn observe(&mut self, act: &Tensor, tokens: Option<&[i32]>) {
+        let dims = act.shape();
+        assert_eq!(dims.len(), 3, "expected (B,T,D), got {dims:?}");
+        let (b, t, d) = (dims[0], dims[1], dims[2]);
+        let data = act.data();
+        let mean = crate::util::stats::mean(data) as f32;
+        let std = crate::util::stats::std_dev(data) as f32;
+        let thr = OUTLIER_SIGMA * std;
+        self.values_seen += data.len() as u64;
+        if std == 0.0 {
+            return;
+        }
+        for bi in 0..b {
+            for ti in 0..t {
+                let base = (bi * t + ti) * d;
+                for di in 0..d {
+                    if (data[base + di] - mean).abs() > thr {
+                        *self.per_dim.entry(di).or_default() += 1;
+                        *self.per_pos.entry(ti).or_default() += 1;
+                        if let Some(toks) = tokens {
+                            *self.per_token.entry(toks[bi * t + ti]).or_default() += 1;
+                        }
+                        self.total += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dimensions sorted by outlier count, descending.
+    pub fn top_dims(&self, k: usize) -> Vec<(usize, u64)> {
+        let mut v: Vec<_> = self.per_dim.iter().map(|(&d, &c)| (d, c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v.truncate(k);
+        v
+    }
+
+    /// Fraction of outliers occurring at positions holding a token in
+    /// `token_set` (e.g. the delimiter set).
+    pub fn token_fraction(&self, token_set: &[i32]) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let hits: u64 = self
+            .per_token
+            .iter()
+            .filter(|(t, _)| token_set.contains(t))
+            .map(|(_, c)| c)
+            .sum();
+        hits as f64 / self.total as f64
+    }
+
+    /// Map a hidden dimension to its attention head (paper §3: BERT head i
+    /// owns the consecutive d_head-feature slice).
+    pub fn dim_to_head(dim: usize, d_head: usize) -> usize {
+        dim / d_head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn act_with_outlier(b: usize, t: usize, d: usize, pos: usize, dim: usize) -> Tensor {
+        let mut a = Tensor::from_fn(&[b, t, d], |i| ((i * 37 % 17) as f32 - 8.0) * 0.01);
+        a.set(&[0, pos, dim], 500.0);
+        a
+    }
+
+    #[test]
+    fn finds_planted_outlier() {
+        let mut c = OutlierCounts::default();
+        let a = act_with_outlier(2, 8, 16, 3, 5);
+        c.observe(&a, None);
+        assert_eq!(c.total, 1);
+        assert_eq!(c.per_dim.get(&5), Some(&1));
+        assert_eq!(c.per_pos.get(&3), Some(&1));
+    }
+
+    #[test]
+    fn attributes_tokens() {
+        let mut c = OutlierCounts::default();
+        let a = act_with_outlier(1, 8, 16, 2, 0);
+        let tokens: Vec<i32> = (0..8).collect();
+        c.observe(&a, Some(&tokens));
+        assert_eq!(c.per_token.get(&2), Some(&1));
+        assert_eq!(c.token_fraction(&[2]), 1.0);
+        assert_eq!(c.token_fraction(&[7]), 0.0);
+    }
+
+    #[test]
+    fn no_outliers_in_uniform_noise() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Tensor::from_fn(&[4, 16, 32], |_| rng.f32() - 0.5);
+        let mut c = OutlierCounts::default();
+        c.observe(&a, None);
+        // uniform noise never exceeds ~1.8σ
+        assert_eq!(c.total, 0);
+    }
+
+    #[test]
+    fn head_attribution() {
+        assert_eq!(OutlierCounts::dim_to_head(0, 16), 0);
+        assert_eq!(OutlierCounts::dim_to_head(17, 16), 1);
+        assert_eq!(OutlierCounts::dim_to_head(63, 16), 3);
+    }
+
+    #[test]
+    fn top_dims_sorted() {
+        let mut c = OutlierCounts::default();
+        let mut a = act_with_outlier(1, 8, 16, 1, 3);
+        a.set(&[0, 2, 3], 500.0);
+        a.set(&[0, 4, 7], -500.0);
+        c.observe(&a, None);
+        let top = c.top_dims(2);
+        assert_eq!(top[0], (3, 2));
+        assert_eq!(top[1], (7, 1));
+    }
+}

@@ -1,0 +1,67 @@
+//! Parameter accounting (Table 4): gating-module memory overhead per
+//! attention layer, computed from the manifest's parameter inventory.
+
+use crate::runtime::artifact::Manifest;
+
+#[derive(Debug, Clone)]
+pub struct GateOverhead {
+    pub attention: String,
+    pub extra_params_per_layer: usize,
+    pub total_params: usize,
+    pub gate_params: usize,
+    /// Equivalent "extra tokens" (gate params / d_model), Table 4's unit.
+    pub extra_tokens: f64,
+    pub overhead_frac: f64,
+}
+
+pub fn gate_overhead(m: &Manifest) -> GateOverhead {
+    let total: usize = m.params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+    let gate: usize = m
+        .params
+        .iter()
+        .filter(|p| p.name.contains(".gate."))
+        .map(|p| p.shape.iter().product::<usize>())
+        .sum();
+    let per_layer = if m.config.n_layers > 0 { gate / m.config.n_layers } else { 0 };
+    GateOverhead {
+        attention: m.config.attention.clone(),
+        extra_params_per_layer: per_layer,
+        total_params: total,
+        gate_params: gate,
+        extra_tokens: per_layer as f64 / m.config.d_model as f64,
+        overhead_frac: gate as f64 / total as f64,
+    }
+}
+
+/// Closed-form expected gate parameter count per layer (Table 4's formulas)
+/// — cross-checked against the manifest in tests/benches.
+pub fn expected_gate_params(attention: &str, n_heads: usize, d_head: usize,
+                            d_model: usize, n_hid: usize) -> usize {
+    match attention {
+        "softmax" => 0,
+        "gated_linear" => n_heads * (d_head + 1),
+        "gated_mlp" => n_heads * (n_hid * (d_head + 2) + 1),
+        "gated_allheads" => n_heads * (d_model + 1),
+        other => panic!("unknown attention {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formulas_match_paper_table4() {
+        // BERT-base numbers: H=12, d_head=64, d_model=768.
+        assert_eq!(expected_gate_params("gated_linear", 12, 64, 768, 4), 12 * 65);
+        assert_eq!(
+            expected_gate_params("gated_mlp", 12, 64, 768, 4),
+            12 * (4 * 66 + 1)
+        );
+        assert_eq!(
+            expected_gate_params("gated_allheads", 12, 64, 768, 4),
+            12 * 769
+        );
+        assert_eq!(expected_gate_params("softmax", 12, 64, 768, 4), 0);
+    }
+}

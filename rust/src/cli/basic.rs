@@ -1,0 +1,138 @@
+//! Basic CLI commands: smoke, train, eval, list-configs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::experiment::{run_experiment, train_cached, ExperimentSpec};
+use crate::coordinator::quantize::QuantSpec;
+use crate::quant::estimators::EstimatorKind;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::util::cli::Args;
+
+/// Shared flag parsing into an ExperimentSpec.
+pub fn spec_from_args(args: &Args, config_default: &str, steps_default: usize) -> Result<ExperimentSpec> {
+    let config = args.str("config", config_default);
+    let steps = args.usize("steps", steps_default)?;
+    let mut spec = ExperimentSpec::new(&config, &config, steps);
+    spec.gamma = args.f64("gamma", spec.gamma as f64)? as f32;
+    spec.zeta = args.f64("zeta", spec.zeta as f64)? as f32;
+    spec.b_init = args.f64("binit", spec.b_init as f64)? as f32;
+    spec.gate_scale = args.f64("gate-scale", spec.gate_scale as f64)? as f32;
+    spec.wd_ln = args.f64("wd-ln", spec.wd_ln as f64)? as f32;
+    spec.act_reg = args.f64("act-reg", spec.act_reg as f64)? as f32;
+    spec.lr_max = args.f64("lr", spec.lr_max)?;
+    spec.steps = steps;
+    spec.warmup = args.usize("warmup", (steps / 10).max(1))?;
+    spec.eval_batches = args.usize("eval-batches", spec.eval_batches)?;
+    spec.metric_batches = args.usize("metric-batches", spec.metric_batches)?;
+    spec.ptq_reps = args.usize("ptq-reps", spec.ptq_reps)?;
+    spec.seeds = args
+        .list("seeds", &["0", "1"])
+        .iter()
+        .map(|s| s.parse::<u64>().context("bad --seeds"))
+        .collect::<Result<Vec<_>>>()?;
+    spec.quant = QuantSpec {
+        w_bits: args.usize("wbits", spec.quant.w_bits as usize)? as u32,
+        a_bits: args.usize("abits", spec.quant.a_bits as usize)? as u32,
+        w_est: EstimatorKind::parse(&args.str("west", &spec.quant.w_est.name()))?,
+        a_est: EstimatorKind::parse(&args.str("aest", &spec.quant.a_est.name()))?,
+        calib_batches: args.usize("calib-batches", spec.quant.calib_batches)?,
+    };
+    spec.label = args.str("label", &format!("{config} g={} z={}", spec.gamma, spec.zeta));
+    Ok(spec)
+}
+
+pub fn paths_from_args(args: &Args) -> (std::path::PathBuf, std::path::PathBuf) {
+    let (art, runs) = crate::coordinator::experiment::default_paths();
+    (
+        std::path::PathBuf::from(args.str("artifacts", art.to_str().unwrap())),
+        std::path::PathBuf::from(args.str("runs", runs.to_str().unwrap())),
+    )
+}
+
+fn print_row(family: &str, row: &crate::coordinator::experiment::RowResult) {
+    use crate::metrics::table::{cell, render};
+    let metric = if family == "vit" { "acc↑" } else { "ppl↓" };
+    let t = render(
+        &["Experiment", &format!("FP {metric}"), "Max inf norm", "Avg kurtosis", &format!("W8A8 {metric}")],
+        &[vec![
+            row.label.clone(),
+            cell(&row.fp_metric),
+            cell(&row.max_inf_norm),
+            cell(&row.avg_kurtosis),
+            cell(&row.quant_metric),
+        ]],
+    );
+    println!("{t}");
+}
+
+/// Fast end-to-end sanity check: tiny training run + full PTQ pipeline.
+pub fn smoke(args: &Args) -> Result<()> {
+    let (artifacts, runs) = paths_from_args(args);
+    let mut spec = spec_from_args(args, "bert_tiny_softmax", 30)?;
+    spec.seeds = vec![0];
+    spec.eval_batches = 2;
+    spec.metric_batches = 2;
+    spec.quant.calib_batches = 2;
+    spec.label = "smoke".into();
+    args.finish()?;
+    let rt = Runtime::cpu()?;
+    let row = run_experiment(&rt, &artifacts, &runs, &spec)?;
+    print_row("bert", &row);
+    println!("smoke OK");
+    Ok(())
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let (artifacts, runs) = paths_from_args(args);
+    let spec = spec_from_args(args, "bert_tiny_softmax", 1000)?;
+    args.finish()?;
+    let rt = Runtime::cpu()?;
+    let art = Artifact::load(&artifacts, &spec.config)?;
+    for &seed in &spec.seeds {
+        train_cached(&rt, &art, &spec, seed, &runs)?;
+    }
+    println!("trained {} seeds {:?}", spec.config, spec.seeds);
+    Ok(())
+}
+
+pub fn eval(args: &Args) -> Result<()> {
+    let (artifacts, runs) = paths_from_args(args);
+    let spec = spec_from_args(args, "bert_tiny_softmax", 1000)?;
+    args.finish()?;
+    let rt = Runtime::cpu()?;
+    let row = run_experiment(&rt, &artifacts, &runs, &spec)?;
+    let family = if spec.config.starts_with("vit") { "vit" } else { "lm" };
+    print_row(family, &row);
+    Ok(())
+}
+
+pub fn list_configs(args: &Args) -> Result<()> {
+    let (artifacts, _) = paths_from_args(args);
+    args.finish()?;
+    let mut names: Vec<_> = std::fs::read_dir(&artifacts)
+        .with_context(|| format!("{artifacts:?} — run `make artifacts`"))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().join("manifest.json").exists())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    if names.is_empty() {
+        bail!("no artifacts in {artifacts:?}");
+    }
+    names.sort();
+    for n in &names {
+        let art = Artifact::load(&artifacts, n)?;
+        let c = &art.manifest.config;
+        println!(
+            "{n:32} {:5} {:16} L={} d={} h={} T={} quant_points={}",
+            c.family,
+            c.attention,
+            c.n_layers,
+            c.d_model,
+            c.n_heads,
+            c.seq_len,
+            art.manifest.quant_points.len()
+        );
+    }
+    Ok(())
+}

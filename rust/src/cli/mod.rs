@@ -1,0 +1,6 @@
+//! CLI command implementations (shared between the `qtx` binary and the
+//! bench targets, which drive the same table/figure code paths).
+
+pub mod analyze;
+pub mod basic;
+pub mod tables;

@@ -1,0 +1,154 @@
+//! Runs the `act_collect` program to gather activations, serving three
+//! consumers:
+//!
+//! 1. the PTQ **calibrator** (activation ranges per quant point, §C.4 —
+//!    16 calibration batches by default);
+//! 2. the §5 **outlier metrics** (max inf-norm, avg kurtosis over block
+//!    outputs, computed on the eval stream);
+//! 3. the **analysis** dumps (attention probs / values / gates for the
+//!    Fig 1-3/8 reproductions).
+
+use anyhow::{Context, Result};
+
+use crate::data::batch::Provider;
+use crate::metrics::OutlierMetrics;
+use crate::quant::estimators::{Calibration, EstimatorKind};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::runtime::program::{literal_to_value, Value};
+use crate::util::tensor::Tensor;
+
+/// One collected batch of named activations (on demand for analysis).
+pub struct ActBatch {
+    /// (tap name, tensor), tap names without the `act::` prefix.
+    pub acts: Vec<(String, Tensor)>,
+    /// The token batch that produced them (token families).
+    pub tokens: Option<Vec<i32>>,
+}
+
+impl ActBatch {
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.acts.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+pub struct CollectOptions {
+    pub gamma: f32,
+    pub zeta: f32,
+    pub gate_scale: f32,
+}
+
+/// Stream act_collect over `n_batches`, invoking `sink` per batch.
+pub fn collect(
+    rt: &Runtime,
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    provider: &mut dyn Provider,
+    n_batches: usize,
+    opts: &CollectOptions,
+    mut sink: impl FnMut(&ActBatch) -> Result<()>,
+) -> Result<()> {
+    let prog = art.program(rt, "act_collect")?;
+    let param_lits = super::evaluator::param_literals(&prog, params)?;
+    let extra = [
+        ("gamma", Value::scalar(opts.gamma)),
+        ("zeta", Value::scalar(opts.zeta)),
+        ("gate_scale", Value::scalar(opts.gate_scale)),
+    ];
+    let extra_lits: Vec<(String, xla::Literal)> = extra
+        .iter()
+        .map(|(n, v)| Ok((n.to_string(), v.to_literal()?)))
+        .collect::<Result<_>>()?;
+    provider.reset();
+    for _ in 0..n_batches {
+        let batch = provider.next_batch();
+        let tokens = batch.values.iter().find(|(n, _)| *n == "batch::x").and_then(
+            |(_, v)| match v {
+                Value::I32(t) => Some(t.data().to_vec()),
+                _ => None,
+            },
+        );
+        let batch_lits: Vec<(String, xla::Literal)> = batch
+            .values
+            .iter()
+            .map(|(n, v)| Ok((n.to_string(), v.to_literal()?)))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(prog.inputs.len());
+        let mut pi = 0;
+        for d in &prog.inputs {
+            if d.name.starts_with("param::") {
+                args.push(&param_lits[pi]);
+                pi += 1;
+            } else if let Some((_, l)) = batch_lits.iter().find(|(n, _)| *n == d.name) {
+                args.push(l);
+            } else if let Some((_, l)) = extra_lits.iter().find(|(n, _)| *n == d.name) {
+                args.push(l);
+            } else {
+                anyhow::bail!("{}: no source for input {:?}", prog.name, d.name);
+            }
+        }
+        let out = prog.run_raw(&args)?;
+        let mut acts = Vec::new();
+        for (desc, lit) in prog.outputs.iter().zip(&out) {
+            if let Some(name) = desc.name.strip_prefix("act::") {
+                match literal_to_value(lit)? {
+                    Value::F32(t) => acts.push((name.to_string(), t)),
+                    _ => anyhow::bail!("activation {name} not f32"),
+                }
+            }
+        }
+        sink(&ActBatch { acts, tokens })?;
+    }
+    Ok(())
+}
+
+/// Calibrate activation ranges on the calibration stream (§C.4).
+pub fn calibrate(
+    rt: &Runtime,
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    provider: &mut dyn Provider,
+    n_batches: usize,
+    kind: EstimatorKind,
+    opts: &CollectOptions,
+    seed: u64,
+) -> Result<Calibration> {
+    let points = &art.manifest.quant_points;
+    let mut cal = Calibration::new(kind, points.len(), seed);
+    collect(rt, art, params, provider, n_batches, opts, |ab| {
+        for (i, pname) in points.iter().enumerate() {
+            let t = ab
+                .get(pname)
+                .with_context(|| format!("quant point {pname:?} missing from act_collect"))?;
+            cal.observe(i, t.data());
+        }
+        Ok(())
+    })?;
+    Ok(cal)
+}
+
+/// Outlier metrics (§5) over the eval stream: block outputs per layer.
+pub fn outlier_metrics(
+    rt: &Runtime,
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    provider: &mut dyn Provider,
+    n_batches: usize,
+    opts: &CollectOptions,
+) -> Result<OutlierMetrics> {
+    let n_layers = art.manifest.config.n_layers;
+    let mut m = OutlierMetrics::default();
+    collect(rt, art, params, provider, n_batches, opts, |ab| {
+        let mut layers: Vec<(String, &[f32])> = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let name = format!("L{l}.block_out");
+            let t = ab
+                .get(&name)
+                .with_context(|| format!("{name} missing from act_collect"))?;
+            layers.push((name, t.data()));
+        }
+        m.observe_batch(&layers);
+        Ok(())
+    })?;
+    Ok(m)
+}

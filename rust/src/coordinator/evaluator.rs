@@ -1,0 +1,139 @@
+//! Floating-point evaluation: run `eval_step` over a deterministic eval
+//! stream and aggregate NLL / accuracy.
+
+use anyhow::{bail, Result};
+
+use crate::data::batch::Provider;
+use crate::metrics::perplexity;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::runtime::program::{literal_scalar_f32, Program, Value};
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub ppl: f64,
+    pub accuracy: f64,
+    pub tokens: f64,
+}
+
+impl EvalResult {
+    /// The headline task metric: perplexity for LMs (↓), top-1 accuracy in
+    /// percent for ViT (↑) — matching what each paper table reports.
+    pub fn headline(&self, family: &str) -> f64 {
+        if family == "vit" {
+            self.accuracy * 100.0
+        } else {
+            self.ppl
+        }
+    }
+}
+
+/// Build the `param::*` literal list for an eval-style program from named
+/// host tensors (they must cover the program's param inputs exactly).
+pub fn param_literals(
+    prog: &Program,
+    params: &[(String, Tensor)],
+) -> Result<Vec<xla::Literal>> {
+    let mut lits = Vec::new();
+    for d in &prog.inputs {
+        if let Some(pname) = d.name.strip_prefix("param::") {
+            let (_, t) = params
+                .iter()
+                .find(|(n, _)| n == pname)
+                .ok_or_else(|| anyhow::anyhow!("missing param {pname:?}"))?;
+            if t.shape() != d.shape.as_slice() {
+                bail!("param {pname}: shape {:?} != manifest {:?}", t.shape(), d.shape);
+            }
+            lits.push(Value::F32(t.clone()).to_literal()?);
+        }
+    }
+    Ok(lits)
+}
+
+/// Run `prog` (eval_step-shaped: params, batch, hypers -> nll/count/correct)
+/// over `n_batches` from the (reset) provider. `extra` supplies non-param,
+/// non-batch inputs by name.
+pub fn run_eval_program(
+    prog: &Program,
+    param_lits: &[xla::Literal],
+    provider: &mut dyn Provider,
+    n_batches: usize,
+    extra: &[(&str, Value)],
+) -> Result<EvalResult> {
+    provider.reset();
+    let extra_lits: Vec<(String, xla::Literal)> = extra
+        .iter()
+        .map(|(n, v)| Ok((n.to_string(), v.to_literal()?)))
+        .collect::<Result<_>>()?;
+
+    let (i_nll, i_count, i_correct) = (
+        prog.output_index("sum_nll")?,
+        prog.output_index("count")?,
+        prog.output_index("correct")?,
+    );
+
+    let mut sum_nll = 0.0f64;
+    let mut count = 0.0f64;
+    let mut correct = 0.0f64;
+    for _ in 0..n_batches {
+        let batch = provider.next_batch();
+        let batch_lits: Vec<(String, xla::Literal)> = batch
+            .values
+            .iter()
+            .map(|(n, v)| Ok((n.to_string(), v.to_literal()?)))
+            .collect::<Result<_>>()?;
+        // Assemble in program input order.
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(prog.inputs.len());
+        let mut pi = 0;
+        for d in &prog.inputs {
+            if d.name.starts_with("param::") {
+                args.push(&param_lits[pi]);
+                pi += 1;
+            } else if let Some((_, l)) = batch_lits.iter().find(|(n, _)| *n == d.name) {
+                args.push(l);
+            } else if let Some((_, l)) = extra_lits.iter().find(|(n, _)| *n == d.name) {
+                args.push(l);
+            } else {
+                bail!("{}: no source for input {:?}", prog.name, d.name);
+            }
+        }
+        let out = prog.run_raw(&args)?;
+        sum_nll += literal_scalar_f32(&out[i_nll])? as f64;
+        count += literal_scalar_f32(&out[i_count])? as f64;
+        correct += literal_scalar_f32(&out[i_correct])? as f64;
+    }
+    Ok(EvalResult {
+        loss: sum_nll / count.max(1.0),
+        ppl: perplexity(sum_nll, count),
+        accuracy: correct / count.max(1.0),
+        tokens: count,
+    })
+}
+
+/// FP eval entry point.
+pub fn evaluate(
+    rt: &Runtime,
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    provider: &mut dyn Provider,
+    n_batches: usize,
+    gamma: f32,
+    zeta: f32,
+    gate_scale: f32,
+) -> Result<EvalResult> {
+    let prog = art.program(rt, "eval_step")?;
+    let lits = param_literals(&prog, params)?;
+    run_eval_program(
+        &prog,
+        &lits,
+        provider,
+        n_batches,
+        &[
+            ("gamma", Value::scalar(gamma)),
+            ("zeta", Value::scalar(zeta)),
+            ("gate_scale", Value::scalar(gate_scale)),
+        ],
+    )
+}

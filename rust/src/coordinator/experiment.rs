@@ -1,0 +1,341 @@
+//! Multi-seed experiment pipelines: train → FP eval → outlier metrics →
+//! PTQ → quantized eval, aggregated as mean±std — the unit behind every
+//! row of every reproduced table.
+//!
+//! Trained models are cached in `runs/` keyed by the full training recipe,
+//! so the many tables sharing a baseline (e.g. vanilla BERT appears in
+//! Tables 1, 2, 5, 10 and Figs 1, 2) train it once.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::calibrator::{outlier_metrics, CollectOptions};
+use crate::coordinator::evaluator::{evaluate, EvalResult};
+use crate::coordinator::quantize::{quantized_eval, QuantSpec};
+use crate::coordinator::schedule::Schedule;
+use crate::coordinator::trainer::{train_fresh, TrainOptions};
+use crate::data::batch::{make_provider, Stream, EVAL_SEED};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::util::log;
+use crate::util::stats::MeanStd;
+use crate::util::tensor::Tensor;
+use crate::util::tensorio;
+
+/// Everything defining one table row (minus the seed).
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub config: String,
+    pub label: String,
+    pub steps: usize,
+    pub lr_max: f64,
+    pub warmup: usize,
+    pub gamma: f32,
+    pub zeta: f32,
+    pub gate_scale: f32,
+    pub b_init: f32,
+    pub wd_ln: f32,
+    pub act_reg: f32,
+    pub seeds: Vec<u64>,
+    /// PTQ repetitions per trained model (paper: 3 random calib subsets).
+    pub ptq_reps: usize,
+    pub quant: QuantSpec,
+    pub eval_batches: usize,
+    pub metric_batches: usize,
+}
+
+impl ExperimentSpec {
+    /// Family-appropriate defaults at this testbed's scale.
+    pub fn new(config: &str, label: &str, steps: usize) -> ExperimentSpec {
+        let is_vit = config.starts_with("vit");
+        ExperimentSpec {
+            config: config.to_string(),
+            label: label.to_string(),
+            steps,
+            lr_max: 1e-3,
+            warmup: (steps / 10).max(1),
+            gamma: 0.0,
+            zeta: 1.0,
+            gate_scale: 1.0,
+            b_init: 0.0,
+            wd_ln: if config.starts_with("opt") { 1.0 } else { 0.0 },
+            act_reg: 0.0,
+            seeds: vec![0, 1],
+            ptq_reps: 1,
+            quant: if config.starts_with("opt") {
+                QuantSpec {
+                    w_est: crate::quant::estimators::EstimatorKind::Mse,
+                    ..QuantSpec::w8a8()
+                }
+            } else {
+                QuantSpec::w8a8()
+            },
+            eval_batches: 16,
+            metric_batches: if is_vit { 8 } else { 8 },
+        }
+    }
+
+    pub fn with_gamma(mut self, gamma: f32) -> Self {
+        self.gamma = gamma;
+        self
+    }
+
+    pub fn with_zeta(mut self, zeta: f32) -> Self {
+        self.zeta = zeta;
+        self
+    }
+
+    pub fn with_binit(mut self, b: f32) -> Self {
+        self.b_init = b;
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn with_quant(mut self, q: QuantSpec) -> Self {
+        self.quant = q;
+        self
+    }
+
+    pub fn with_wd_ln(mut self, w: f32) -> Self {
+        self.wd_ln = w;
+        self
+    }
+
+    fn train_options(&self, seed: u64) -> TrainOptions {
+        let schedule = if self.config.starts_with("vit") {
+            Schedule::WarmupCosine { min_frac: 0.01 }
+        } else {
+            Schedule::LinearWarmupDecay
+        };
+        TrainOptions {
+            seed,
+            steps: self.steps,
+            lr_max: self.lr_max,
+            warmup: self.warmup,
+            schedule,
+            gamma: self.gamma,
+            zeta: self.zeta,
+            gate_scale: self.gate_scale,
+            b_init: self.b_init,
+            wd_ln: self.wd_ln,
+            act_reg: self.act_reg,
+            log_every: 200,
+            init_from: Vec::new(),
+        }
+    }
+
+    /// Cache key for a trained model — everything that affects training.
+    pub fn run_key(&self, seed: u64) -> String {
+        format!(
+            "{}_s{}_st{}_lr{:.0e}_w{}_g{:+.5}_z{:.4}_gs{:.2}_b{:+.2}_wdln{:.0}_ar{:.0e}",
+            self.config,
+            seed,
+            self.steps,
+            self.lr_max,
+            self.warmup,
+            self.gamma,
+            self.zeta,
+            self.gate_scale,
+            self.b_init,
+            self.wd_ln,
+            self.act_reg
+        )
+    }
+}
+
+/// Per-seed measurements.
+#[derive(Debug, Clone)]
+pub struct SeedResult {
+    pub seed: u64,
+    pub fp: EvalResult,
+    pub max_inf_norm: f64,
+    pub avg_kurtosis: f64,
+    pub quant: Vec<EvalResult>,
+    pub final_train_loss: f64,
+}
+
+/// Aggregated row: the four columns every paper table reports.
+#[derive(Debug, Clone)]
+pub struct RowResult {
+    pub label: String,
+    pub fp_metric: MeanStd,
+    pub max_inf_norm: MeanStd,
+    pub avg_kurtosis: MeanStd,
+    pub quant_metric: MeanStd,
+    pub seeds: Vec<SeedResult>,
+}
+
+/// Load a cached trained model or train and cache it.
+pub fn train_cached(
+    rt: &Runtime,
+    art: &Artifact,
+    spec: &ExperimentSpec,
+    seed: u64,
+    runs_dir: &Path,
+) -> Result<Vec<(String, Tensor)>> {
+    let path = runs_dir.join(format!("{}.ckpt", spec.run_key(seed)));
+    if path.exists() {
+        log::info(&format!("reusing cached run {:?}", path.file_name().unwrap()));
+        return tensorio::load(&path);
+    }
+    let opts = spec.train_options(seed);
+    let t0 = std::time::Instant::now();
+    let result = train_fresh(rt, art, &opts)?;
+    log::info(&format!(
+        "trained {} seed {seed}: final loss {:.4}, {:.1} steps/s, {:.0}s",
+        spec.run_key(seed),
+        result.losses.last().copied().unwrap_or(f32::NAN),
+        result.steps_per_sec,
+        t0.elapsed().as_secs_f64()
+    ));
+    tensorio::save(&path, &result.params)?;
+    // Persist the loss curve alongside (end-to-end example + debugging).
+    let curve: String = result
+        .losses
+        .iter()
+        .enumerate()
+        .map(|(i, l)| format!("{i},{l}\n"))
+        .collect();
+    std::fs::write(path.with_extension("loss.csv"), curve)?;
+    Ok(result.params)
+}
+
+/// Run the full pipeline for one spec (loads the artifact fresh; prefer
+/// [`run_experiment_cached`] when running many rows over few configs).
+pub fn run_experiment(
+    rt: &Runtime,
+    artifacts_root: &Path,
+    runs_dir: &Path,
+    spec: &ExperimentSpec,
+) -> Result<RowResult> {
+    let art = Artifact::load(artifacts_root, &spec.config)
+        .with_context(|| format!("experiment {}", spec.label))?;
+    run_experiment_on(rt, &art, runs_dir, spec)
+}
+
+/// Artifact cache: compiled executables are reused across the many table
+/// rows that share a config (γ/ζ/π_init are runtime inputs).
+#[derive(Default)]
+pub struct ArtifactCache {
+    map: std::cell::RefCell<std::collections::HashMap<String, std::rc::Rc<Artifact>>>,
+}
+
+impl ArtifactCache {
+    pub fn get(&self, root: &Path, config: &str) -> Result<std::rc::Rc<Artifact>> {
+        if let Some(a) = self.map.borrow().get(config) {
+            return Ok(a.clone());
+        }
+        let a = std::rc::Rc::new(Artifact::load(root, config)?);
+        self.map.borrow_mut().insert(config.to_string(), a.clone());
+        Ok(a)
+    }
+}
+
+/// Run the full pipeline for one spec against a pre-loaded artifact.
+pub fn run_experiment_on(
+    rt: &Runtime,
+    art: &Artifact,
+    runs_dir: &Path,
+    spec: &ExperimentSpec,
+) -> Result<RowResult> {
+    let family = art.manifest.config.family.clone();
+    let copts = CollectOptions {
+        gamma: spec.gamma,
+        zeta: spec.zeta,
+        gate_scale: spec.gate_scale,
+    };
+
+    let mut seeds = Vec::new();
+    for &seed in &spec.seeds {
+        let params = train_cached(rt, art, spec, seed, runs_dir)?;
+
+        // FP eval on the shared validation stream.
+        let mut eval_provider = make_provider(&art.manifest.config, EVAL_SEED, Stream::Eval);
+        let fp = evaluate(
+            rt,
+            art,
+            &params,
+            eval_provider.as_mut(),
+            spec.eval_batches,
+            spec.gamma,
+            spec.zeta,
+            spec.gate_scale,
+        )?;
+
+        // Outlier metrics (§5) on the validation stream.
+        let om = outlier_metrics(
+            rt,
+            art,
+            &params,
+            eval_provider.as_mut(),
+            spec.metric_batches,
+            &copts,
+        )?;
+
+        // PTQ, repeated over calibration subsets.
+        let mut quant = Vec::new();
+        for rep in 0..spec.ptq_reps.max(1) {
+            let out = quantized_eval(
+                rt,
+                art,
+                &params,
+                &spec.quant,
+                spec.gamma,
+                spec.zeta,
+                spec.gate_scale,
+                spec.eval_batches,
+                seed.wrapping_mul(1000).wrapping_add(rep as u64 + 1),
+            )?;
+            quant.push(out.result);
+        }
+
+        log::info(&format!(
+            "{} seed {seed}: fp {:.4} | inf {:.1} kurt {:.1} | quant {:.4}",
+            spec.label,
+            fp.headline(&family),
+            om.max_inf_norm(),
+            om.avg_kurtosis(),
+            quant[0].headline(&family),
+        ));
+        seeds.push(SeedResult {
+            seed,
+            fp,
+            max_inf_norm: om.max_inf_norm(),
+            avg_kurtosis: om.avg_kurtosis(),
+            quant,
+            final_train_loss: 0.0,
+        });
+    }
+
+    let fp_metric = MeanStd::from(
+        &seeds.iter().map(|s| s.fp.headline(&family)).collect::<Vec<_>>(),
+    );
+    let max_inf_norm = MeanStd::from(&seeds.iter().map(|s| s.max_inf_norm).collect::<Vec<_>>());
+    let avg_kurtosis = MeanStd::from(&seeds.iter().map(|s| s.avg_kurtosis).collect::<Vec<_>>());
+    let quant_metric = MeanStd::from(
+        &seeds
+            .iter()
+            .flat_map(|s| s.quant.iter().map(|q| q.headline(&family)))
+            .collect::<Vec<_>>(),
+    );
+    Ok(RowResult {
+        label: spec.label.clone(),
+        fp_metric,
+        max_inf_norm,
+        avg_kurtosis,
+        quant_metric,
+        seeds,
+    })
+}
+
+/// Standard artifact/run locations (overridable via env).
+pub fn default_paths() -> (PathBuf, PathBuf) {
+    let root = std::env::var("QTX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let runs = std::env::var("QTX_RUNS").unwrap_or_else(|_| "runs".into());
+    (PathBuf::from(root), PathBuf::from(runs))
+}

@@ -1,0 +1,26 @@
+//! The L3 coordinator: everything between "artifacts exist" and "paper
+//! table row printed".
+//!
+//! * [`schedule`] — learning-rate schedules (§C: linear warmup+decay for
+//!   BERT/OPT, cosine for ViT).
+//! * [`trainer`] — the training loop over the AOT `train_step` program;
+//!   state lives as XLA literals threaded output→input between steps.
+//! * [`evaluator`] — floating-point evaluation (perplexity / accuracy).
+//! * [`calibrator`] — runs `act_collect` to (a) estimate activation
+//!   quantization ranges and (b) accumulate the §5 outlier metrics.
+//! * [`quantize`] — the full PTQ pipeline: weight fake-quant + activation
+//!   calibration + quantized evaluation via `eval_quant`.
+//! * [`experiment`] — multi-seed train→eval→PTQ pipelines with checkpoint
+//!   caching and mean±std aggregation; the unit every bench row is built
+//!   from.
+
+pub mod calibrator;
+pub mod evaluator;
+pub mod experiment;
+pub mod quantize;
+pub mod schedule;
+pub mod trainer;
+
+pub use experiment::{ExperimentSpec, RowResult};
+pub use quantize::QuantSpec;
+pub use trainer::TrainOptions;

@@ -1,0 +1,145 @@
+//! The full PTQ pipeline (§5 "Quantization setup"):
+//!
+//! 1. **weights** — symmetric per-tensor fake-quant on the host (min-max,
+//!    or MSE for OPT / low-bit per §C.4 + App. B.7), final head excluded;
+//! 2. **activations** — static asymmetric ranges from calibration batches
+//!    (estimator selectable), fed as scale/zero-point vectors into the
+//!    `eval_quant` program together with `qmax = 2^a_bits − 1`;
+//! 3. **quantized eval** — perplexity / accuracy on the eval stream.
+
+use anyhow::Result;
+
+use crate::coordinator::calibrator::{calibrate, CollectOptions};
+use crate::coordinator::evaluator::{param_literals, run_eval_program, EvalResult};
+use crate::data::batch::{make_provider, Stream};
+use crate::quant::estimators::EstimatorKind;
+use crate::quant::weights::fake_quant_weight;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::runtime::program::Value;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantSpec {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub w_est: EstimatorKind,
+    pub a_est: EstimatorKind,
+    pub calib_batches: usize,
+}
+
+impl QuantSpec {
+    /// The paper's default W8A8 setup: min-max weights, 99.999-percentile
+    /// activations (§C.4's best-performing configuration), 16 calibration
+    /// batches.
+    pub fn w8a8() -> QuantSpec {
+        QuantSpec {
+            w_bits: 8,
+            a_bits: 8,
+            w_est: EstimatorKind::MinMax,
+            a_est: EstimatorKind::Percentile { pct: 99.999 },
+            calib_batches: 16,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "W{}A{} (w:{}, a:{})",
+            self.w_bits,
+            self.a_bits,
+            self.w_est.name(),
+            self.a_est.name()
+        )
+    }
+}
+
+/// Fake-quantize the quantizable weights (manifest `quantize` flag).
+pub fn quantize_weights(
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    kind: EstimatorKind,
+    bits: u32,
+) -> Vec<(String, Tensor)> {
+    params
+        .iter()
+        .map(|(name, t)| {
+            let quantize = art
+                .manifest
+                .params
+                .iter()
+                .find(|p| &p.name == name)
+                .map(|p| p.quantize)
+                .unwrap_or(false);
+            let t2 = if quantize { fake_quant_weight(t, kind, bits) } else { t.clone() };
+            (name.clone(), t2)
+        })
+        .collect()
+}
+
+pub struct QuantOutcome {
+    pub result: EvalResult,
+    /// Per-point (scale, zero_point) actually used.
+    pub act_scales: Vec<f32>,
+    pub act_zps: Vec<f32>,
+}
+
+/// Run the full PTQ pipeline for one trained model.
+///
+/// `ptq_seed` varies the calibration stream (the paper repeats PTQ with 3
+/// random calibration subsets and reports mean±std).
+#[allow(clippy::too_many_arguments)]
+pub fn quantized_eval(
+    rt: &Runtime,
+    art: &Artifact,
+    params: &[(String, Tensor)],
+    spec: &QuantSpec,
+    gamma: f32,
+    zeta: f32,
+    gate_scale: f32,
+    eval_batches: usize,
+    ptq_seed: u64,
+) -> Result<QuantOutcome> {
+    let cfg = &art.manifest.config;
+    let copts = CollectOptions { gamma, zeta, gate_scale };
+
+    // 1. weights
+    let wq = quantize_weights(art, params, spec.w_est, spec.w_bits);
+
+    // 2. activation calibration — on the *weight-quantized* model, matching
+    // deployment (the quantized network is what runs at inference).
+    let mut calib_provider = make_provider(cfg, ptq_seed, Stream::Calibration);
+    let cal = calibrate(
+        rt,
+        art,
+        &wq,
+        calib_provider.as_mut(),
+        spec.calib_batches,
+        spec.a_est,
+        &copts,
+        ptq_seed,
+    )?;
+    let qp = cal.finalize(spec.a_bits);
+    let act_scales: Vec<f32> = qp.iter().map(|q| q.scale).collect();
+    let act_zps: Vec<f32> = qp.iter().map(|q| q.zero_point).collect();
+
+    // 3. quantized eval
+    let prog = art.program(rt, "eval_quant")?;
+    let param_lits = param_literals(&prog, &wq)?;
+    let n = act_scales.len();
+    let mut eval_provider = make_provider(cfg, crate::data::batch::EVAL_SEED, Stream::Eval);
+    let result = run_eval_program(
+        &prog,
+        &param_lits,
+        eval_provider.as_mut(),
+        eval_batches,
+        &[
+            ("act_scale", Value::F32(Tensor::new(vec![n], act_scales.clone())?)),
+            ("act_zp", Value::F32(Tensor::new(vec![n], act_zps.clone())?)),
+            ("qmax", Value::scalar(crate::quant::grid::qmax_for_bits(spec.a_bits))),
+            ("gamma", Value::scalar(gamma)),
+            ("zeta", Value::scalar(zeta)),
+            ("gate_scale", Value::scalar(gate_scale)),
+        ],
+    )?;
+    Ok(QuantOutcome { result, act_scales, act_zps })
+}

@@ -1,0 +1,112 @@
+//! Learning-rate schedules (§C.1-C.3). The schedule runs in rust and feeds
+//! the per-step `lr` scalar into the AOT train_step, so schedule ablations
+//! never require re-lowering.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Linear warmup to `lr_max`, then linear decay to zero at `total`
+    /// (BERT §C.1, OPT §C.2).
+    LinearWarmupDecay,
+    /// Linear warmup then cosine decay to `min_frac * lr_max` (ViT §C.3).
+    WarmupCosine { min_frac: f64 },
+    /// Constant after warmup (fine-tuning, §B.6).
+    WarmupConstant,
+}
+
+impl Schedule {
+    pub fn for_family(family: &str) -> Schedule {
+        match family {
+            "vit" => Schedule::WarmupCosine { min_frac: 0.01 },
+            _ => Schedule::LinearWarmupDecay,
+        }
+    }
+
+    /// LR for 0-based step index.
+    pub fn lr(&self, step: usize, total: usize, warmup: usize, lr_max: f64) -> f64 {
+        let s = step as f64;
+        let w = warmup.max(1) as f64;
+        if step < warmup {
+            return lr_max * (s + 1.0) / w;
+        }
+        let t = total.max(warmup + 1) as f64;
+        match self {
+            Schedule::LinearWarmupDecay => {
+                let frac = (t - s) / (t - w);
+                lr_max * frac.max(0.0)
+            }
+            Schedule::WarmupCosine { min_frac } => {
+                let prog = ((s - w) / (t - w)).clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * prog).cos());
+                lr_max * (min_frac + (1.0 - min_frac) * cos)
+            }
+            Schedule::WarmupConstant => lr_max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn warmup_ramps() {
+        let s = Schedule::LinearWarmupDecay;
+        let lr0 = s.lr(0, 100, 10, 1.0);
+        let lr9 = s.lr(9, 100, 10, 1.0);
+        assert!(lr0 < lr9);
+        assert!((lr9 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = Schedule::LinearWarmupDecay;
+        assert!((s.lr(100, 100, 10, 1.0)).abs() < 1e-9);
+        assert!((s.lr(55, 100, 10, 1.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_floors_at_min_frac() {
+        let s = Schedule::WarmupCosine { min_frac: 0.01 };
+        assert!((s.lr(1000, 1000, 10, 1.0) - 0.01).abs() < 1e-9);
+        assert!(s.lr(500, 1000, 10, 1.0) > 0.3);
+    }
+
+    #[test]
+    fn constant_after_warmup() {
+        let s = Schedule::WarmupConstant;
+        assert_eq!(s.lr(50, 100, 10, 2.0), 2.0);
+        assert!(s.lr(5, 100, 10, 2.0) < 2.0);
+    }
+
+    #[test]
+    fn prop_monotone_decay_after_warmup() {
+        check(
+            "lr_monotone_after_warmup",
+            |rng| {
+                let total = 50 + rng.below(500) as usize;
+                let warmup = rng.below(total as u32 / 2) as usize;
+                (total, warmup)
+            },
+            |&(total, warmup)| {
+                for sched in [
+                    Schedule::LinearWarmupDecay,
+                    Schedule::WarmupCosine { min_frac: 0.01 },
+                ] {
+                    let mut prev = f64::INFINITY;
+                    for step in warmup..total {
+                        let lr = sched.lr(step, total, warmup, 1e-3);
+                        if lr > prev + 1e-12 {
+                            return Err(format!("{sched:?} rose at step {step}"));
+                        }
+                        if lr < 0.0 {
+                            return Err(format!("{sched:?} negative at {step}"));
+                        }
+                        prev = lr;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! The training loop over the AOT `train_step` program.
+//!
+//! Optimizer state (params, Adam moments, step counter) is threaded as XLA
+//! literals from one step's output tuple into the next step's inputs; the
+//! only per-step host work is batch synthesis (rust-side anyway), the lr
+//! scalar, and reading back the loss.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::schedule::Schedule;
+use crate::data::batch::{self, Provider, Stream};
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::Runtime;
+use crate::runtime::program::{literal_scalar_f32, literal_to_value, Value};
+use crate::util::log;
+use crate::util::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub seed: u64,
+    pub steps: usize,
+    pub lr_max: f64,
+    pub warmup: usize,
+    pub schedule: Schedule,
+    /// Clipped-softmax stretch factors (γ=0, ζ=1 ⇒ vanilla softmax).
+    pub gamma: f32,
+    pub zeta: f32,
+    /// Gate-output multiplier (2.0 in the §B.6 fine-tuning recipe).
+    pub gate_scale: f32,
+    /// Gating bias init — controls π_init = sigmoid(b_init) (Fig 7).
+    pub b_init: f32,
+    /// Weight decay on LayerNorm γ (Table 6), 0.0 or 1.0.
+    pub wd_ln: f32,
+    /// FFN-output activation regularization coefficient (§B.6).
+    pub act_reg: f32,
+    pub log_every: usize,
+    /// Warm-start parameters by name (fine-tuning, §B.6): params present
+    /// here override the fresh init; everything else (e.g. newly added
+    /// gating modules) keeps its init.
+    pub init_from: Vec<(String, Tensor)>,
+}
+
+impl TrainOptions {
+    pub fn new(seed: u64, steps: usize) -> TrainOptions {
+        TrainOptions {
+            seed,
+            steps,
+            lr_max: 1e-3,
+            warmup: steps / 10,
+            schedule: Schedule::LinearWarmupDecay,
+            gamma: 0.0,
+            zeta: 1.0,
+            gate_scale: 1.0,
+            b_init: 0.0,
+            wd_ln: 0.0,
+            act_reg: 0.0,
+            log_every: 100,
+            init_from: Vec::new(),
+        }
+    }
+}
+
+pub struct TrainResult {
+    /// Trained parameters in manifest order: (name, tensor).
+    pub params: Vec<(String, Tensor)>,
+    /// Loss at every step.
+    pub losses: Vec<f32>,
+    pub steps_per_sec: f64,
+}
+
+/// Where each train_step input comes from.
+enum Src {
+    State(usize),
+    Batch(usize),
+    Lr,
+    Const(f32),
+}
+
+pub fn train(
+    rt: &Runtime,
+    art: &Artifact,
+    opts: &TrainOptions,
+    provider: &mut dyn Provider,
+) -> Result<TrainResult> {
+    let init = art.program(rt, "init")?;
+    let step_prog = art.program(rt, "train_step")?;
+    let cfg = &art.manifest.config;
+
+    // --- initialize state ------------------------------------------------
+    // init outputs param::* in manifest order; m/v start at zero; step at 0.
+    let init_out = init.run(&[
+        Value::scalar_i32(opts.seed as i32),
+        Value::scalar(opts.b_init),
+    ])?;
+    let n_params = art.manifest.params.len();
+    if init_out.len() != n_params {
+        bail!("init returned {} tensors, manifest has {n_params}", init_out.len());
+    }
+
+    // State literal vector ordered exactly like train_step's outputs
+    // (param::*, m::*, v::*, step). Loss is output-only.
+    let out_descs = &step_prog.outputs;
+    let loss_idx = step_prog.output_index("loss")?;
+    let n_state = out_descs.len() - 1;
+    let mut state: Vec<xla::Literal> = Vec::with_capacity(n_state);
+    for d in out_descs.iter().take(n_state) {
+        if let Some(pname) = d.name.strip_prefix("param::") {
+            let pi = art
+                .manifest
+                .params
+                .iter()
+                .position(|p| p.name == pname)
+                .with_context(|| format!("output {:?} not a manifest param", d.name))?;
+            // Warm-start override (fine-tuning), else fresh init. init
+            // outputs are in manifest param order.
+            if let Some((_, t)) = opts.init_from.iter().find(|(n, _)| n == pname) {
+                if t.shape() != d.shape.as_slice() {
+                    bail!("init_from {pname}: shape {:?} != {:?}", t.shape(), d.shape);
+                }
+                state.push(Value::F32(t.clone()).to_literal()?);
+            } else {
+                state.push(init_out[pi].clone());
+            }
+        } else if d.name.starts_with("m::") || d.name.starts_with("v::") {
+            state.push(Value::F32(Tensor::zeros(&d.shape)).to_literal()?);
+        } else if d.name == "step" {
+            state.push(Value::scalar(0.0).to_literal()?);
+        } else {
+            bail!("unexpected train_step output {:?}", d.name);
+        }
+    }
+
+    // --- input plan -------------------------------------------------------
+    // Map each train_step input to a source, once.
+    let mut plan: Vec<Src> = Vec::with_capacity(step_prog.inputs.len());
+    let state_index = |name: &str| -> Option<usize> {
+        out_descs.iter().take(n_state).position(|d| d.name == name)
+    };
+    let probe = provider.next_batch(); // names only
+    let batch_names: Vec<&'static str> = probe.values.iter().map(|(n, _)| *n).collect();
+    for d in &step_prog.inputs {
+        let src = if let Some(si) = state_index(&d.name) {
+            Src::State(si)
+        } else if let Some(bi) = batch_names.iter().position(|n| *n == d.name) {
+            Src::Batch(bi)
+        } else {
+            match d.name.as_str() {
+                "lr" => Src::Lr,
+                "gamma" => Src::Const(opts.gamma),
+                "zeta" => Src::Const(opts.zeta),
+                "gate_scale" => Src::Const(opts.gate_scale),
+                "wd_ln" => Src::Const(opts.wd_ln),
+                "act_reg" => Src::Const(opts.act_reg),
+                other => bail!("train_step input {other:?} has no source"),
+            }
+        };
+        plan.push(src);
+    }
+
+    // Constant literals prepared once.
+    let const_lits: Vec<Option<xla::Literal>> = plan
+        .iter()
+        .map(|s| match s {
+            Src::Const(v) => Some(Value::scalar(*v).to_literal().unwrap()),
+            _ => None,
+        })
+        .collect();
+
+    // --- loop --------------------------------------------------------------
+    let mut losses = Vec::with_capacity(opts.steps);
+    let t0 = std::time::Instant::now();
+    let mut batch = probe; // consume the probe batch as step 0 data
+    for step in 0..opts.steps {
+        let lr = opts.schedule.lr(step, opts.steps, opts.warmup, opts.lr_max);
+        let lr_lit = Value::scalar(lr as f32).to_literal()?;
+        let batch_lits: Vec<xla::Literal> = batch
+            .values
+            .iter()
+            .map(|(_, v)| v.to_literal())
+            .collect::<Result<_>>()?;
+
+        let args: Vec<&xla::Literal> = plan
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Src::State(si) => &state[*si],
+                Src::Batch(bi) => &batch_lits[*bi],
+                Src::Lr => &lr_lit,
+                Src::Const(_) => const_lits[i].as_ref().unwrap(),
+            })
+            .collect();
+
+        let mut out = step_prog.run_raw(&args)?;
+        let loss = literal_scalar_f32(&out[loss_idx])?;
+        if !loss.is_finite() {
+            bail!("non-finite loss {loss} at step {step} ({})", cfg.name);
+        }
+        losses.push(loss);
+        out.truncate(n_state);
+        state = out;
+
+        if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            let recent = &losses[losses.len().saturating_sub(opts.log_every)..];
+            log::info(&format!(
+                "{} step {}/{} loss {:.4} lr {:.2e}",
+                cfg.name,
+                step + 1,
+                opts.steps,
+                recent.iter().sum::<f32>() / recent.len() as f32,
+                lr
+            ));
+        }
+        batch = provider.next_batch();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // --- extract parameters -------------------------------------------------
+    let mut params = Vec::with_capacity(n_params);
+    for (d, lit) in out_descs.iter().take(n_state).zip(&state) {
+        if let Some(pname) = d.name.strip_prefix("param::") {
+            match literal_to_value(lit)? {
+                Value::F32(t) => params.push((pname.to_string(), t)),
+                _ => bail!("param {pname} not f32"),
+            }
+        }
+    }
+    if params.len() != n_params {
+        bail!("extracted {} params, expected {n_params}", params.len());
+    }
+
+    Ok(TrainResult {
+        params,
+        losses,
+        steps_per_sec: opts.steps as f64 / elapsed.max(1e-9),
+    })
+}
+
+/// Convenience: train on the standard Train stream for the config.
+pub fn train_fresh(
+    rt: &Runtime,
+    art: &Artifact,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let mut provider = batch::make_provider(&art.manifest.config, opts.seed, Stream::Train);
+    train(rt, art, opts, provider.as_mut())
+}

@@ -1,0 +1,231 @@
+//! Batch containers and the provider abstraction the coordinator consumes.
+//!
+//! A [`Provider`] is an infinite, seeded batch stream; train / eval /
+//! calibration streams are independent named forks of the experiment seed,
+//! so e.g. the §C.4 "16 random calibration batches" are reproducible and
+//! disjoint from the eval stream.
+
+use crate::data::clm;
+use crate::data::mlm;
+use crate::data::textgen::TextGen;
+use crate::data::vision;
+use crate::runtime::artifact::ConfigInfo;
+use crate::runtime::program::Value;
+use crate::util::rng::Rng;
+
+/// One model batch in program-input form.
+pub struct Batch {
+    /// Named values matching the program's `batch::*` inputs.
+    pub values: Vec<(&'static str, Value)>,
+}
+
+impl Batch {
+    pub fn named(&self) -> Vec<(&'static str, Value)> {
+        self.values.clone()
+    }
+}
+
+/// Infinite batch stream.
+pub trait Provider {
+    fn next_batch(&mut self) -> Batch;
+    /// Restart the stream from its initial state (eval determinism).
+    fn reset(&mut self);
+}
+
+/// Language-model stream (bert MLM / opt CLM).
+pub struct TextProvider {
+    cfg: ConfigInfo,
+    lang_seed: u64,
+    stream_seed: u64,
+    gen: TextGen,
+    mask_rng: Rng,
+}
+
+impl TextProvider {
+    pub fn new(cfg: &ConfigInfo, lang_seed: u64, stream_seed: u64) -> TextProvider {
+        TextProvider {
+            cfg: cfg.clone(),
+            lang_seed,
+            stream_seed,
+            gen: TextGen::new(cfg.vocab_size, lang_seed, stream_seed),
+            mask_rng: Rng::new(stream_seed).fork("mlm-mask"),
+        }
+    }
+}
+
+impl Provider for TextProvider {
+    fn next_batch(&mut self) -> Batch {
+        let (b, t) = (self.cfg.batch_size, self.cfg.seq_len);
+        let values = match self.cfg.objective.as_str() {
+            "mlm" => {
+                let m = mlm::make_batch(&mut self.gen, &mut self.mask_rng, b, t, self.cfg.vocab_size);
+                vec![
+                    ("batch::x", Value::I32(m.tokens)),
+                    ("batch::targets", Value::I32(m.targets)),
+                    ("batch::mask", Value::F32(m.mask)),
+                ]
+            }
+            "clm" => {
+                let m = clm::make_batch(&mut self.gen, b, t);
+                vec![
+                    ("batch::x", Value::I32(m.tokens)),
+                    ("batch::targets", Value::I32(m.targets)),
+                    ("batch::mask", Value::F32(m.mask)),
+                ]
+            }
+            other => panic!("TextProvider on objective {other}"),
+        };
+        Batch { values }
+    }
+
+    fn reset(&mut self) {
+        self.gen = TextGen::new(self.cfg.vocab_size, self.lang_seed, self.stream_seed);
+        self.mask_rng = Rng::new(self.stream_seed).fork("mlm-mask");
+    }
+}
+
+/// Vision stream (vit classification).
+pub struct VisionProvider {
+    cfg: ConfigInfo,
+    stream_seed: u64,
+    rng: Rng,
+}
+
+impl VisionProvider {
+    pub fn new(cfg: &ConfigInfo, stream_seed: u64) -> VisionProvider {
+        VisionProvider {
+            cfg: cfg.clone(),
+            stream_seed,
+            rng: Rng::new(stream_seed).fork("vision"),
+        }
+    }
+}
+
+impl Provider for VisionProvider {
+    fn next_batch(&mut self) -> Batch {
+        assert_eq!(self.cfg.patch_dim, vision::PATCH_DIM, "config patch_dim mismatch");
+        let v = vision::make_batch(&mut self.rng, self.cfg.batch_size);
+        Batch {
+            values: vec![
+                ("batch::x", Value::F32(v.patches)),
+                ("batch::targets", Value::I32(v.labels)),
+            ],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.stream_seed).fork("vision");
+    }
+}
+
+/// Purpose-labelled stream seeds derived from the experiment seed.
+#[derive(Clone, Copy)]
+pub enum Stream {
+    Train,
+    Eval,
+    Calibration,
+}
+
+impl Stream {
+    fn label(self) -> &'static str {
+        match self {
+            Stream::Train => "train",
+            Stream::Eval => "eval",
+            Stream::Calibration => "calib",
+        }
+    }
+
+    fn seed(self, experiment_seed: u64) -> u64 {
+        let mut h: u64 = experiment_seed ^ 0x51ab_c0de;
+        for b in self.label().bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// The language (bigram tables) is shared across ALL streams and seeds so
+/// that train and eval measure the same task; only the sampled text varies.
+pub const LANG_SEED: u64 = 0xBEEF;
+
+/// The validation set is one fixed stream shared by every experiment (the
+/// paper evaluates all methods on the same Wikipedia/ImageNet validation
+/// split) — always build Eval providers with this seed.
+pub const EVAL_SEED: u64 = 0;
+
+pub fn make_provider(cfg: &ConfigInfo, experiment_seed: u64, stream: Stream) -> Box<dyn Provider> {
+    let seed = stream.seed(experiment_seed);
+    if cfg.family == "vit" {
+        Box::new(VisionProvider::new(cfg, seed))
+    } else {
+        Box::new(TextProvider::new(cfg, LANG_SEED, seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(objective: &str, family: &str) -> ConfigInfo {
+        ConfigInfo {
+            name: "t".into(),
+            family: family.into(),
+            attention: "softmax".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            seq_len: 16,
+            vocab_size: 256,
+            n_classes: 8,
+            patch_dim: vision::PATCH_DIM,
+            batch_size: 4,
+            causal: objective == "clm",
+            use_gate: false,
+            objective: objective.into(),
+        }
+    }
+
+    #[test]
+    fn streams_are_distinct_and_deterministic() {
+        let c = cfg("mlm", "bert");
+        let mut train = make_provider(&c, 0, Stream::Train);
+        let mut eval = make_provider(&c, 0, Stream::Eval);
+        let mut train2 = make_provider(&c, 0, Stream::Train);
+        let a = train.next_batch();
+        let b = eval.next_batch();
+        let a2 = train2.next_batch();
+        let tok = |x: &Batch| match &x.values[0].1 {
+            Value::I32(t) => t.data().to_vec(),
+            _ => panic!(),
+        };
+        assert_eq!(tok(&a), tok(&a2));
+        assert_ne!(tok(&a), tok(&b));
+    }
+
+    #[test]
+    fn reset_restarts_stream() {
+        let c = cfg("clm", "opt");
+        let mut p = make_provider(&c, 1, Stream::Eval);
+        let a = p.next_batch();
+        p.next_batch();
+        p.reset();
+        let b = p.next_batch();
+        let tok = |x: &Batch| match &x.values[0].1 {
+            Value::I32(t) => t.data().to_vec(),
+            _ => panic!(),
+        };
+        assert_eq!(tok(&a), tok(&b));
+    }
+
+    #[test]
+    fn vision_provider_shapes() {
+        let c = cfg("cls", "vit");
+        let mut p = make_provider(&c, 2, Stream::Train);
+        let b = p.next_batch();
+        assert_eq!(b.values.len(), 2);
+        match &b.values[0].1 {
+            Value::F32(t) => assert_eq!(t.shape(), &[4, 16, vision::PATCH_DIM]),
+            _ => panic!(),
+        }
+    }
+}

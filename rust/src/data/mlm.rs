@@ -1,0 +1,115 @@
+//! BERT-style masked-language-model batch assembly (§C.1: p=0.15 masking,
+//! the standard 80/10/10 [MASK]/random/keep split).
+
+use crate::data::textgen::TextGen;
+use crate::data::vocab;
+use crate::util::rng::Rng;
+use crate::util::tensor::{IntTensor, Tensor};
+
+pub const MASK_PROB: f32 = 0.15;
+
+/// One MLM batch: `tokens` (corrupted), `targets` (originals), `mask`
+/// (1.0 at predicted positions).
+pub struct MlmBatch {
+    pub tokens: IntTensor,
+    pub targets: IntTensor,
+    pub mask: Tensor,
+}
+
+/// Assemble a (batch, seq) MLM batch from the generator. Only content
+/// tokens are maskable (specials/delimiters carry structural information).
+pub fn make_batch(
+    gen: &mut TextGen,
+    rng: &mut Rng,
+    batch: usize,
+    seq: usize,
+    vocab_size: usize,
+) -> MlmBatch {
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut targets = Vec::with_capacity(batch * seq);
+    let mut mask = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let orig = gen.sequence_with_cls(seq);
+        for &t in &orig {
+            targets.push(t);
+            if !vocab::is_special(t) && rng.bernoulli(MASK_PROB) {
+                mask.push(1.0);
+                let r = rng.f32();
+                if r < 0.8 {
+                    tokens.push(vocab::MASK);
+                } else if r < 0.9 {
+                    tokens.push(rng.range(
+                        vocab::FIRST_CONTENT as u32,
+                        vocab_size as u32,
+                    ) as i32);
+                } else {
+                    tokens.push(t);
+                }
+            } else {
+                mask.push(0.0);
+                tokens.push(t);
+            }
+        }
+    }
+    MlmBatch {
+        tokens: IntTensor::new(vec![batch, seq], tokens).unwrap(),
+        targets: IntTensor::new(vec![batch, seq], targets).unwrap(),
+        mask: Tensor::new(vec![batch, seq], mask).unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (TextGen, Rng) {
+        (TextGen::new(256, 1, 2), Rng::new(3).fork("mask"))
+    }
+
+    #[test]
+    fn shapes_and_mask_rate() {
+        let (mut g, mut r) = setup();
+        let b = make_batch(&mut g, &mut r, 16, 64, 256);
+        assert_eq!(b.tokens.shape(), &[16, 64]);
+        assert_eq!(b.targets.shape(), &[16, 64]);
+        assert_eq!(b.mask.shape(), &[16, 64]);
+        let rate = b.mask.data().iter().sum::<f32>() / (16.0 * 64.0);
+        // 15% of content positions; content is ~80% of tokens.
+        assert!((0.06..0.20).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn masked_positions_are_corrupted_or_kept() {
+        let (mut g, mut r) = setup();
+        let b = make_batch(&mut g, &mut r, 8, 64, 256);
+        let mut n_mask_tok = 0;
+        let mut n_masked = 0;
+        for i in 0..b.mask.data().len() {
+            let m = b.mask.data()[i];
+            let tok = b.tokens.data()[i];
+            let tgt = b.targets.data()[i];
+            if m == 1.0 {
+                n_masked += 1;
+                assert!(!vocab::is_special(tgt), "masked a special token");
+                if tok == vocab::MASK {
+                    n_mask_tok += 1;
+                }
+            } else {
+                assert_eq!(tok, tgt, "unmasked position corrupted");
+            }
+        }
+        // ~80% of masked positions replaced by [MASK]
+        let frac = n_mask_tok as f64 / n_masked as f64;
+        assert!((0.6..0.95).contains(&frac), "mask-token fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (mut g1, mut r1) = setup();
+        let (mut g2, mut r2) = setup();
+        let a = make_batch(&mut g1, &mut r1, 4, 32, 256);
+        let b = make_batch(&mut g2, &mut r2, 4, 32, 256);
+        assert_eq!(a.tokens.data(), b.tokens.data());
+        assert_eq!(a.mask.data(), b.mask.data());
+    }
+}

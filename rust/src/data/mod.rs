@@ -1,0 +1,26 @@
+//! Synthetic data substrates.
+//!
+//! The paper trains on BookCorpus+Wikipedia (BERT/OPT) and ImageNet (ViT);
+//! neither is available here, so this module implements the closest
+//! synthetic equivalents that preserve the *mechanism under study* (see
+//! DESIGN.md "Hardware adaptation"):
+//!
+//! * [`textgen`] — a Markov "delimiter language": topic-local bigram
+//!   phrases separated by low-information delimiter tokens (`[SEP]`, `.`,
+//!   `,`). Delimiters appear in every sequence and carry no predictive
+//!   signal, exactly the token class the paper shows attention heads dump
+//!   probability mass on when they want a no-op (Fig 2); bigram-local
+//!   dependencies mean deep-layer mixing is often unnecessary, creating the
+//!   no-update incentive.
+//! * [`vision`] — procedural shapes on noisy backgrounds: most patches are
+//!   uninformative background, the patch analogue of delimiters (Fig 3).
+//! * [`mlm`] / [`clm`] — BERT-style masking and causal shifting.
+//! * [`batch`] — batch containers + the [`batch::Provider`] abstraction the
+//!   trainer consumes, with seeded train/eval/calibration stream factories.
+
+pub mod batch;
+pub mod clm;
+pub mod mlm;
+pub mod textgen;
+pub mod vision;
+pub mod vocab;

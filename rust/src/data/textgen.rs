@@ -1,0 +1,206 @@
+//! The synthetic "delimiter language" corpus generator.
+//!
+//! Structure (designed to preserve the paper's no-op incentive — see
+//! `data::mod` docs):
+//!
+//! * A stream of *phrases*; each phrase picks a topic and walks a
+//!   topic-local bigram chain: with probability [`BIGRAM_P`] the successor
+//!   is a fixed per-token mapping (learnable signal), otherwise a uniform
+//!   draw from the topic (noise floor).
+//! * Phrases are separated by `,` (within a sentence) or `.` + `[SEP]`
+//!   (sentence end). Delimiters are frequent, appear in every sequence and
+//!   are *unpredictive of* and *unpredicted by* their neighbours beyond
+//!   their base rate — the model's best move around them is to do nothing,
+//!   which is precisely the behaviour that manufactures outliers in vanilla
+//!   softmax attention (paper §3).
+//!
+//! The successor mapping is derived from a seeded permutation per topic, so
+//! the language itself is a deterministic function of the corpus seed.
+
+use crate::data::vocab;
+use crate::util::rng::Rng;
+
+/// Probability the bigram chain follows the deterministic successor.
+pub const BIGRAM_P: f32 = 0.8;
+const PHRASE_MIN: u32 = 3;
+const PHRASE_MAX: u32 = 9; // exclusive
+const SENT_PHRASES_MIN: u32 = 1;
+const SENT_PHRASES_MAX: u32 = 4; // exclusive
+
+/// Infinite token stream over the delimiter language.
+pub struct TextGen {
+    vocab_size: usize,
+    successor: Vec<i32>, // content index -> successor token id
+    rng: Rng,
+    buf: Vec<i32>,  // pending tokens (reversed)
+    phrases_left_in_sentence: u32,
+}
+
+impl TextGen {
+    /// `lang_seed` fixes the language (successor tables); `stream_seed`
+    /// fixes the sampled text. Train/eval use the same language with
+    /// different streams.
+    pub fn new(vocab_size: usize, lang_seed: u64, stream_seed: u64) -> TextGen {
+        let n = vocab::n_content(vocab_size);
+        let mut lang_rng = Rng::new(lang_seed).fork("language");
+        // Per-topic random cyclic successor permutation keeps chains inside
+        // the topic and aperiodic enough to be interesting.
+        let mut successor = vec![0i32; n];
+        for topic in 0..vocab::N_TOPICS {
+            let (lo, hi) = vocab::topic_range(topic, vocab_size);
+            let mut ids: Vec<i32> = (lo..hi).collect();
+            lang_rng.shuffle(&mut ids);
+            for i in 0..ids.len() {
+                let from = (ids[i] - vocab::FIRST_CONTENT) as usize;
+                successor[from] = ids[(i + 1) % ids.len()];
+            }
+        }
+        let mut rng = Rng::new(stream_seed).fork("textgen");
+        let phrases = rng.range(SENT_PHRASES_MIN, SENT_PHRASES_MAX);
+        TextGen {
+            vocab_size,
+            successor,
+            rng,
+            buf: Vec::new(),
+            phrases_left_in_sentence: phrases,
+        }
+    }
+
+    fn emit_phrase(&mut self) {
+        let topic = self.rng.below(vocab::N_TOPICS as u32) as usize;
+        let (lo, hi) = vocab::topic_range(topic, self.vocab_size);
+        let len = self.rng.range(PHRASE_MIN, PHRASE_MAX);
+        let mut tok = self.rng.range(lo as u32, hi as u32) as i32;
+        let mut phrase = Vec::with_capacity(len as usize + 1);
+        for _ in 0..len {
+            phrase.push(tok);
+            tok = if self.rng.bernoulli(BIGRAM_P) {
+                self.successor[(tok - vocab::FIRST_CONTENT) as usize]
+            } else {
+                self.rng.range(lo as u32, hi as u32) as i32
+            };
+        }
+        // Delimiter: end of sentence -> ". [SEP]", else ",".
+        self.phrases_left_in_sentence -= 1;
+        if self.phrases_left_in_sentence == 0 {
+            phrase.push(vocab::PERIOD);
+            phrase.push(vocab::SEP);
+            self.phrases_left_in_sentence = self.rng.range(SENT_PHRASES_MIN, SENT_PHRASES_MAX);
+        } else {
+            phrase.push(vocab::COMMA);
+        }
+        // buf is a stack: push reversed.
+        for &t in phrase.iter().rev() {
+            self.buf.push(t);
+        }
+    }
+
+    pub fn next_token(&mut self) -> i32 {
+        loop {
+            if let Some(t) = self.buf.pop() {
+                return t;
+            }
+            self.emit_phrase();
+        }
+    }
+
+    /// Fill a sequence of length `t`, starting with [CLS] (encoder style).
+    pub fn sequence_with_cls(&mut self, t: usize) -> Vec<i32> {
+        let mut seq = Vec::with_capacity(t);
+        seq.push(vocab::CLS);
+        while seq.len() < t {
+            seq.push(self.next_token());
+        }
+        seq
+    }
+
+    /// Raw continuous tokens (decoder style).
+    pub fn tokens(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+
+    pub fn successor_of(&self, tok: i32) -> i32 {
+        self.successor[(tok - vocab::FIRST_CONTENT) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = TextGen::new(256, 1, 2);
+        let mut b = TextGen::new(256, 1, 2);
+        assert_eq!(a.tokens(500), b.tokens(500));
+    }
+
+    #[test]
+    fn different_streams_same_language() {
+        let mut a = TextGen::new(256, 1, 2);
+        let mut b = TextGen::new(256, 1, 3);
+        assert_ne!(a.tokens(200), b.tokens(200));
+        // same language: successor tables agree
+        assert_eq!(
+            a.successor_of(vocab::FIRST_CONTENT),
+            b.successor_of(vocab::FIRST_CONTENT)
+        );
+        let c = TextGen::new(256, 9, 3);
+        // different language seed: (very likely) different successors
+        let diff = (vocab::FIRST_CONTENT..40)
+            .any(|t| a.successor_of(t) != c.successor_of(t));
+        assert!(diff);
+    }
+
+    #[test]
+    fn contains_delimiters_and_valid_tokens() {
+        let mut g = TextGen::new(256, 1, 2);
+        let toks = g.tokens(2000);
+        assert!(toks.iter().any(|&t| t == vocab::SEP));
+        assert!(toks.iter().any(|&t| t == vocab::COMMA));
+        assert!(toks.iter().any(|&t| t == vocab::PERIOD));
+        for &t in &toks {
+            assert!((0..256).contains(&t));
+            assert_ne!(t, vocab::PAD);
+            assert_ne!(t, vocab::MASK);
+            assert_ne!(t, vocab::CLS);
+        }
+        // Delimiter rate: one per ~3-9 content tokens plus sentence ends.
+        let delim = toks.iter().filter(|&&t| vocab::is_delimiter(t)).count();
+        let rate = delim as f64 / toks.len() as f64;
+        assert!((0.08..0.40).contains(&rate), "delimiter rate {rate}");
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // Empirical successor-follow rate should be near BIGRAM_P.
+        let mut g = TextGen::new(256, 1, 2);
+        let toks = g.tokens(20000);
+        let (mut follows, mut content_pairs) = (0usize, 0usize);
+        for w in toks.windows(2) {
+            if !vocab::is_special(w[0])
+                && !vocab::is_special(w[1])
+                && vocab::topic_of(w[0], 256) == vocab::topic_of(w[1], 256)
+            {
+                content_pairs += 1;
+                if g.successor_of(w[0]) == w[1] {
+                    follows += 1;
+                }
+            }
+        }
+        let rate = follows as f64 / content_pairs as f64;
+        assert!(
+            (BIGRAM_P as f64 - 0.1..=BIGRAM_P as f64 + 0.1).contains(&rate),
+            "bigram follow rate {rate}"
+        );
+    }
+
+    #[test]
+    fn cls_sequences() {
+        let mut g = TextGen::new(256, 1, 2);
+        let s = g.sequence_with_cls(64);
+        assert_eq!(s.len(), 64);
+        assert_eq!(s[0], vocab::CLS);
+        assert!(s[1..].iter().all(|&t| t != vocab::CLS));
+    }
+}

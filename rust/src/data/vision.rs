@@ -1,0 +1,194 @@
+//! Procedural vision substrate for the ViT family (ImageNet stand-in).
+//!
+//! Grayscale 32x32 images: a bright foreground shape (one of 8 classes) on
+//! a low-amplitude noise background. Most patches are pure background —
+//! the patch analogue of delimiter tokens: the paper's ViT analysis (Fig 3,
+//! Appendix A.2) shows no-op attention heads dumping probability onto
+//! background patches, which is the behaviour this substrate preserves.
+//!
+//! Images are emitted pre-patchified to (n_patches, patch_dim) because the
+//! AOT model embeds patches with a linear layer.
+
+use crate::util::rng::Rng;
+use crate::util::tensor::{IntTensor, Tensor};
+
+pub const IMG: usize = 32;
+pub const PATCH: usize = 8;
+pub const N_PATCHES: usize = (IMG / PATCH) * (IMG / PATCH); // 16
+pub const PATCH_DIM: usize = PATCH * PATCH; // 64 (grayscale)
+pub const N_CLASSES: usize = 8;
+
+const BG_NOISE: f32 = 0.08;
+const FG_LEVEL: f32 = 0.85;
+
+/// Shape classes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Shape {
+    Square = 0,
+    Circle = 1,
+    Triangle = 2,
+    Cross = 3,
+    HStripe = 4,
+    VStripe = 5,
+    Diamond = 6,
+    Ring = 7,
+}
+
+impl Shape {
+    pub fn from_class(c: usize) -> Shape {
+        match c {
+            0 => Shape::Square,
+            1 => Shape::Circle,
+            2 => Shape::Triangle,
+            3 => Shape::Cross,
+            4 => Shape::HStripe,
+            5 => Shape::VStripe,
+            6 => Shape::Diamond,
+            _ => Shape::Ring,
+        }
+    }
+}
+
+/// Render one image; returns (pixels[IMG*IMG], class).
+pub fn render(rng: &mut Rng) -> (Vec<f32>, usize) {
+    let class = rng.below(N_CLASSES as u32) as usize;
+    let shape = Shape::from_class(class);
+    let mut img = vec![0.0f32; IMG * IMG];
+    for v in img.iter_mut() {
+        *v = rng.normal().abs() * BG_NOISE;
+    }
+    // Random center and size, kept inside the frame.
+    let r = rng.range(5, 9) as i32; // half-extent
+    let cx = rng.range(r as u32 + 1, (IMG as u32) - r as u32 - 1) as i32;
+    let cy = rng.range(r as u32 + 1, (IMG as u32) - r as u32 - 1) as i32;
+    let level = FG_LEVEL + rng.normal() * 0.05;
+    for y in 0..IMG as i32 {
+        for x in 0..IMG as i32 {
+            let (dx, dy) = (x - cx, y - cy);
+            let inside = match shape {
+                Shape::Square => dx.abs() <= r && dy.abs() <= r,
+                Shape::Circle => dx * dx + dy * dy <= r * r,
+                Shape::Triangle => dy >= -r && dy <= r && dx.abs() <= (dy + r) / 2,
+                Shape::Cross => {
+                    (dx.abs() <= r / 3 && dy.abs() <= r) || (dy.abs() <= r / 3 && dx.abs() <= r)
+                }
+                Shape::HStripe => dy.abs() <= r / 3,
+                Shape::VStripe => dx.abs() <= r / 3,
+                Shape::Diamond => dx.abs() + dy.abs() <= r,
+                Shape::Ring => {
+                    let d2 = dx * dx + dy * dy;
+                    d2 <= r * r && d2 >= (r - 3) * (r - 3)
+                }
+            };
+            // Stripes span the whole image, not just around the center.
+            let inside = match shape {
+                Shape::HStripe => (y - cy).abs() <= r / 3,
+                Shape::VStripe => (x - cx).abs() <= r / 3,
+                _ => inside,
+            };
+            if inside {
+                img[(y as usize) * IMG + x as usize] = level + rng.normal() * 0.03;
+            }
+        }
+    }
+    (img, class)
+}
+
+/// Row-major patchify: (IMG, IMG) -> (N_PATCHES, PATCH_DIM).
+pub fn patchify(img: &[f32]) -> Vec<f32> {
+    let per_side = IMG / PATCH;
+    let mut out = Vec::with_capacity(N_PATCHES * PATCH_DIM);
+    for py in 0..per_side {
+        for px in 0..per_side {
+            for y in 0..PATCH {
+                for x in 0..PATCH {
+                    out.push(img[(py * PATCH + y) * IMG + px * PATCH + x]);
+                }
+            }
+        }
+    }
+    out
+}
+
+pub struct VisionBatch {
+    /// (B, N_PATCHES, PATCH_DIM)
+    pub patches: Tensor,
+    /// (B,)
+    pub labels: IntTensor,
+}
+
+pub fn make_batch(rng: &mut Rng, batch: usize) -> VisionBatch {
+    let mut patches = Vec::with_capacity(batch * N_PATCHES * PATCH_DIM);
+    let mut labels = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let (img, class) = render(rng);
+        patches.extend(patchify(&img));
+        labels.push(class as i32);
+    }
+    VisionBatch {
+        patches: Tensor::new(vec![batch, N_PATCHES, PATCH_DIM], patches).unwrap(),
+        labels: IntTensor::new(vec![batch], labels).unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contrast() {
+        let mut rng = Rng::new(1).fork("vis");
+        for _ in 0..20 {
+            let (img, class) = render(&mut rng);
+            assert!(class < N_CLASSES);
+            let bright = img.iter().filter(|&&v| v > 0.5).count();
+            // Foreground exists but most pixels are background.
+            assert!(bright > 10, "shape too small: {bright}");
+            assert!(bright < IMG * IMG / 2, "shape too big: {bright}");
+        }
+    }
+
+    #[test]
+    fn patchify_roundtrip_values() {
+        // A gradient image: patch (0,0) holds the top-left 8x8 block.
+        let img: Vec<f32> = (0..IMG * IMG).map(|i| i as f32).collect();
+        let p = patchify(&img);
+        assert_eq!(p.len(), N_PATCHES * PATCH_DIM);
+        assert_eq!(p[0], 0.0);
+        assert_eq!(p[1], 1.0);
+        assert_eq!(p[PATCH], IMG as f32); // second row of first patch
+        // second patch starts at column 8 of row 0
+        assert_eq!(p[PATCH_DIM], 8.0);
+    }
+
+    #[test]
+    fn all_classes_appear() {
+        let mut rng = Rng::new(2).fork("vis");
+        let b = make_batch(&mut rng, 256);
+        assert_eq!(b.patches.shape(), &[256, N_PATCHES, PATCH_DIM]);
+        let mut seen = [false; N_CLASSES];
+        for &l in b.labels.data() {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "classes seen: {seen:?}");
+    }
+
+    #[test]
+    fn background_patches_dominate() {
+        let mut rng = Rng::new(3).fork("vis");
+        let b = make_batch(&mut rng, 32);
+        let mut bg = 0;
+        let total = 32 * N_PATCHES;
+        for i in 0..32 {
+            for p in 0..N_PATCHES {
+                let start = (i * N_PATCHES + p) * PATCH_DIM;
+                let slice = &b.patches.data()[start..start + PATCH_DIM];
+                if slice.iter().all(|&v| v < 0.5) {
+                    bg += 1;
+                }
+            }
+        }
+        let frac = bg as f64 / total as f64;
+        assert!(frac > 0.4, "background patch fraction {frac}");
+    }
+}

@@ -1,0 +1,105 @@
+//! Vocabulary layout for the synthetic delimiter language.
+//!
+//! Special tokens occupy the low ids; everything from [`FIRST_CONTENT`] up
+//! is a content token. Content ids are partitioned into [`N_TOPICS`] equal
+//! "topics" — phrases stay within a topic, giving the bigram model its
+//! local structure.
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const MASK: i32 = 3;
+pub const PERIOD: i32 = 4;
+pub const COMMA: i32 = 5;
+pub const FIRST_CONTENT: i32 = 6;
+
+/// Delimiters: the low-information tokens the paper's no-op heads attend to
+/// (Fig 2 shows [SEP], ".", "," absorbing almost all probability mass).
+pub const DELIMITERS: [i32; 3] = [SEP, PERIOD, COMMA];
+
+pub const N_TOPICS: usize = 8;
+
+pub fn is_special(tok: i32) -> bool {
+    tok < FIRST_CONTENT
+}
+
+pub fn is_delimiter(tok: i32) -> bool {
+    DELIMITERS.contains(&tok)
+}
+
+/// Number of content tokens for a vocab size.
+pub fn n_content(vocab_size: usize) -> usize {
+    vocab_size - FIRST_CONTENT as usize
+}
+
+/// Topic of a content token (consistent with [`topic_range`] even when the
+/// content count is not divisible by N_TOPICS).
+pub fn topic_of(tok: i32, vocab_size: usize) -> usize {
+    debug_assert!(!is_special(tok));
+    let n = n_content(vocab_size);
+    let c = (tok - FIRST_CONTENT) as usize;
+    // ranges are [t*n/N, (t+1)*n/N); invert by scanning boundaries.
+    let guess = c * N_TOPICS / n;
+    for t in guess.saturating_sub(1)..=(guess + 1).min(N_TOPICS - 1) {
+        if t * n / N_TOPICS <= c && c < (t + 1) * n / N_TOPICS {
+            return t;
+        }
+    }
+    guess.min(N_TOPICS - 1)
+}
+
+/// Content-token id range of a topic: [start, end).
+pub fn topic_range(topic: usize, vocab_size: usize) -> (i32, i32) {
+    let n = n_content(vocab_size);
+    let start = topic * n / N_TOPICS;
+    let end = (topic + 1) * n / N_TOPICS;
+    (FIRST_CONTENT + start as i32, FIRST_CONTENT + end as i32)
+}
+
+/// Human-readable token name (analysis dumps).
+pub fn token_name(tok: i32) -> String {
+    match tok {
+        PAD => "[PAD]".into(),
+        CLS => "[CLS]".into(),
+        SEP => "[SEP]".into(),
+        MASK => "[MASK]".into(),
+        PERIOD => ".".into(),
+        COMMA => ",".into(),
+        t => format!("w{t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_classification() {
+        assert!(is_special(CLS));
+        assert!(is_special(COMMA));
+        assert!(!is_special(FIRST_CONTENT));
+        assert!(is_delimiter(SEP));
+        assert!(!is_delimiter(CLS));
+        assert!(!is_delimiter(FIRST_CONTENT));
+    }
+
+    #[test]
+    fn topics_partition_content() {
+        let v = 256;
+        let mut count = 0;
+        for topic in 0..N_TOPICS {
+            let (lo, hi) = topic_range(topic, v);
+            for t in lo..hi {
+                assert_eq!(topic_of(t, v), topic, "token {t}");
+                count += 1;
+            }
+        }
+        assert_eq!(count, n_content(v));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(token_name(SEP), "[SEP]");
+        assert_eq!(token_name(42), "w42");
+    }
+}

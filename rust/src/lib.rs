@@ -1,0 +1,40 @@
+//! # qtx — Quantizable Transformers in Rust + JAX + Pallas
+//!
+//! Reproduction of *"Quantizable Transformers: Removing Outliers by Helping
+//! Attention Heads Do Nothing"* (Bondarenko, Nagel, Blankevoort — NeurIPS
+//! 2023) as a three-layer system:
+//!
+//! * **L1/L2** (build time, python): Pallas attention/LayerNorm/fake-quant
+//!   kernels inside a JAX transformer, AOT-lowered to HLO text per model
+//!   config (`make artifacts`).
+//! * **L3** (this crate): the coordinator — synthetic data substrates,
+//!   training orchestration, post-training quantization (calibration, range
+//!   estimation, weight fake-quant), outlier analysis, and the benchmark
+//!   harness that regenerates every table and figure of the paper.
+//!
+//! Python never runs on the request path: the `qtx` binary only loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate).
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — hand-rolled substrate (JSON, PRNG, tensors, stats, CLI,
+//!   property-testing, checkpoint IO); the offline vendor set has no serde/
+//!   rand/clap/criterion/proptest, so these are first-class modules here.
+//! * [`runtime`] — PJRT client, artifact manifests, named-IO programs.
+//! * [`data`] — synthetic corpus / vision substrates (MLM, CLM, patches).
+//! * [`quant`] — uniform affine quantization, range estimators, weight PTQ.
+//! * [`metrics`] — perplexity/accuracy/kurtosis/inf-norm + table formatting.
+//! * [`analysis`] — outlier localization and attention-pattern dumps.
+//! * [`coordinator`] — trainer, evaluator, calibrator, experiment runner.
+
+pub mod analysis;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,78 @@
+//! `qtx` — the coordinator CLI.
+//!
+//! Everyday commands:
+//!   qtx smoke                         end-to-end pipeline sanity on 1 config
+//!   qtx train --config X [...]       train one model
+//!   qtx eval  --config X [...]       FP + quantized eval of a cached run
+//!   qtx analyze --config X           outlier / attention analysis (Figs 1-3)
+//!   qtx table{1,2,3,4,5,6,7,8,10} / fig{6,7} / table9
+//!                                     regenerate a paper table/figure
+//!   qtx list-configs                  show available artifact configs
+//!
+//! Shared flags: --steps N --seeds 0,1 --gamma G --zeta Z --binit B
+//! --artifacts DIR --runs DIR --out EXPERIMENTS.md
+
+use anyhow::Result;
+
+use qtx::cli as cmd;
+use qtx::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "smoke" => cmd::basic::smoke(args),
+        "train" => cmd::basic::train(args),
+        "eval" => cmd::basic::eval(args),
+        "list-configs" => cmd::basic::list_configs(args),
+        "analyze" | "fig1" | "fig2" | "fig3" => cmd::analyze::run(cmd, args),
+        "table1" | "table2" | "table3" | "table4" | "table5" | "table6"
+        | "table7" | "table8" | "table9" | "table10" | "fig6" | "fig7" => {
+            cmd::tables::run(cmd, args)
+        }
+        "all" => cmd::tables::run_all(args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"qtx — Quantizable Transformers (NeurIPS 2023) reproduction
+
+usage: qtx <command> [--flags]
+
+commands:
+  smoke                 fast end-to-end pipeline check (train+PTQ, tiny)
+  train                 train one model       (--config, --steps, --seed, --gamma, ...)
+  eval                  FP + W8A8 eval of a cached/trained run
+  analyze|fig1|fig2|fig3  outlier & attention analysis dumps
+  table1..table10       regenerate the paper table  (see DESIGN.md index)
+  fig6 fig7             regenerate the paper figure sweeps
+  all                   every table and figure (long!)
+  list-configs          artifact configs present on disk
+
+common flags:
+  --artifacts DIR   artifact root (default: artifacts, or $QTX_ARTIFACTS)
+  --runs DIR        cached-run dir (default: runs, or $QTX_RUNS)
+  --config NAME     model config name
+  --steps N         training steps (default: command-specific)
+  --seeds 0,1       training seeds
+  --gamma G --zeta Z --binit B --gate-scale S --wd-ln {0|1}
+  --west/--aest E   weight/activation range estimator (minmax|running|p9999|p99999|mse)
+  --wbits/--abits N quantization bitwidths
+  --out FILE        append results to FILE (default EXPERIMENTS.md for tables)
+"#;

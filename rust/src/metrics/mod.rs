@@ -1,0 +1,143 @@
+//! Evaluation metrics (§5): perplexity / accuracy, and the two outlier
+//! metrics the paper reports in every table — average max infinity norm and
+//! average kurtosis of attention-layer outputs.
+
+pub mod table;
+
+use std::collections::BTreeMap;
+
+/// Perplexity from accumulated NLL sums.
+pub fn perplexity(sum_nll: f64, count: f64) -> f64 {
+    (sum_nll / count.max(1.0)).exp()
+}
+
+/// Streaming raw-moment accumulator for kurtosis over many batches without
+/// storing values (§5: "kurtosis of x averaged across all layers").
+#[derive(Debug, Clone, Default)]
+pub struct MomentAccum {
+    pub n: f64,
+    s1: f64,
+    s2: f64,
+    s3: f64,
+    s4: f64,
+}
+
+impl MomentAccum {
+    pub fn observe(&mut self, xs: &[f32]) {
+        for &x in xs {
+            let x = x as f64;
+            self.n += 1.0;
+            self.s1 += x;
+            self.s2 += x * x;
+            self.s3 += x * x * x;
+            self.s4 += x * x * x * x;
+        }
+    }
+
+    /// Pearson kurtosis m4/m2² from raw moments.
+    pub fn kurtosis(&self) -> f64 {
+        if self.n < 2.0 {
+            return 0.0;
+        }
+        let m = self.s1 / self.n;
+        let m2 = self.s2 / self.n - m * m;
+        let m3 = self.s3 / self.n - 3.0 * m * self.s2 / self.n + 2.0 * m * m * m;
+        let m4 = self.s4 / self.n - 4.0 * m * self.s3 / self.n
+            + 6.0 * m * m * self.s2 / self.n
+            - 3.0 * m * m * m * m;
+        let _ = m3;
+        if m2 <= 0.0 {
+            0.0
+        } else {
+            m4 / (m2 * m2)
+        }
+    }
+}
+
+/// The paper's per-model outlier metrics, accumulated over an eval stream:
+/// * `max_inf_norm` — ‖x‖∞ of attention-layer outputs, max over layers,
+///   averaged across eval batches;
+/// * `avg_kurtosis` — kurtosis per layer over the whole stream, averaged
+///   across layers.
+#[derive(Debug, Default)]
+pub struct OutlierMetrics {
+    per_layer: BTreeMap<String, MomentAccum>,
+    batch_inf_norms: Vec<f32>,
+}
+
+impl OutlierMetrics {
+    /// Feed one batch's block outputs: (layer name, data).
+    pub fn observe_batch(&mut self, layers: &[(String, &[f32])]) {
+        let mut batch_max = 0.0f32;
+        for (name, data) in layers {
+            self.per_layer.entry(name.clone()).or_default().observe(data);
+            batch_max = batch_max.max(crate::util::stats::inf_norm(data));
+        }
+        self.batch_inf_norms.push(batch_max);
+    }
+
+    pub fn max_inf_norm(&self) -> f64 {
+        if self.batch_inf_norms.is_empty() {
+            return 0.0;
+        }
+        self.batch_inf_norms.iter().map(|&x| x as f64).sum::<f64>()
+            / self.batch_inf_norms.len() as f64
+    }
+
+    pub fn avg_kurtosis(&self) -> f64 {
+        if self.per_layer.is_empty() {
+            return 0.0;
+        }
+        self.per_layer.values().map(MomentAccum::kurtosis).sum::<f64>()
+            / self.per_layer.len() as f64
+    }
+
+    pub fn layer_kurtosis(&self) -> Vec<(String, f64)> {
+        self.per_layer
+            .iter()
+            .map(|(k, v)| (k.clone(), v.kurtosis()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform() {
+        // NLL = ln(V) per token → ppl = V.
+        let v = 256.0f64;
+        let ppl = perplexity(v.ln() * 100.0, 100.0);
+        assert!((ppl - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn moment_kurtosis_matches_direct() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.normal() * 2.0 + 1.0).collect();
+        let mut acc = MomentAccum::default();
+        acc.observe(&xs);
+        let direct = crate::util::stats::kurtosis(&xs);
+        assert!(
+            (acc.kurtosis() - direct).abs() < 1e-6 * direct.abs().max(1.0),
+            "{} vs {direct}",
+            acc.kurtosis()
+        );
+    }
+
+    #[test]
+    fn outlier_metrics_aggregate() {
+        let mut m = OutlierMetrics::default();
+        let a = vec![1.0f32; 100];
+        let mut b = vec![0.1f32; 100];
+        b[0] = -50.0;
+        m.observe_batch(&[("L0".into(), a.as_slice()), ("L1".into(), b.as_slice())]);
+        m.observe_batch(&[("L0".into(), a.as_slice()), ("L1".into(), a.as_slice())]);
+        // batch 1 inf norm = 50, batch 2 = 1 → mean 25.5
+        assert!((m.max_inf_norm() - 25.5).abs() < 1e-9);
+        // L1 kurtosis is huge, L0 is 0 (constant)
+        assert!(m.avg_kurtosis() > 10.0);
+        assert_eq!(m.layer_kurtosis().len(), 2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Paper-style table rendering: fixed-width aligned columns with
+//! `mean±std` cells, printed to stdout and appended to EXPERIMENTS.md by
+//! the bench harness.
+
+/// Render an aligned text table.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.chars().count()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    let sep_row = |out: &mut String| {
+        for (i, w) in widths.iter().enumerate() {
+            out.push_str(if i == 0 { "|-" } else { "-|-" });
+            out.push_str(&"-".repeat(*w));
+        }
+        out.push_str("-|\n");
+    };
+    let fmt_row = |out: &mut String, cells: &[String]| {
+        for (i, (c, w)) in cells.iter().zip(&widths).enumerate() {
+            out.push_str(if i == 0 { "| " } else { " | " });
+            out.push_str(c);
+            out.push_str(&" ".repeat(w - c.chars().count()));
+        }
+        out.push_str(" |\n");
+    };
+    fmt_row(&mut out, &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    sep_row(&mut out);
+    for row in rows {
+        fmt_row(&mut out, row);
+    }
+    out
+}
+
+/// Format a float with magnitude-adaptive precision (ppl 4.52 vs kurtosis
+/// 3076 render sensibly in the same table).
+pub fn fnum(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let a = x.abs();
+    if a >= 1000.0 {
+        format!("{x:.0}")
+    } else if a >= 100.0 {
+        format!("{x:.1}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// `mean±std` cell.
+pub fn cell(ms: &crate::util::stats::MeanStd) -> String {
+    format!("{}±{}", fnum(ms.mean), fnum(ms.std))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::MeanStd;
+
+    #[test]
+    fn renders_aligned() {
+        let t = render(
+            &["Method", "ppl"],
+            &[
+                vec!["Vanilla".into(), "4.49".into()],
+                vec!["Clipped softmax".into(), "4.39".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "{t}");
+        assert!(lines[3].contains("Clipped softmax"));
+    }
+
+    #[test]
+    fn adaptive_precision() {
+        assert_eq!(fnum(4.516), "4.52");
+        assert_eq!(fnum(735.2), "735.2");
+        assert_eq!(fnum(3076.4), "3076");
+    }
+
+    #[test]
+    fn meanstd_cell() {
+        let c = cell(&MeanStd::from(&[4.0, 5.0]));
+        assert!(c.starts_with("4.50±"), "{c}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        render(&["a", "b"], &[vec!["x".into()]]);
+    }
+}

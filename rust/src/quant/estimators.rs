@@ -1,0 +1,319 @@
+//! Activation range estimation (§C.4 "Quantization settings").
+//!
+//! The paper's static-range activation PTQ estimates per-tensor quantization
+//! parameters from ~16 calibration batches. Four estimators are
+//! implemented:
+//!
+//! * `MinMax` — global min/max over all calibration data.
+//! * `RunningMinMax { momentum }` — exponential moving average of per-batch
+//!   min/max (momentum 0.9 over 16 batches in the paper).
+//! * `Percentile(p)` — p / (100−p) two-sided percentiles (99.99 / 99.999 in
+//!   §C.4; "in almost all cases 99.999 gives the lowest W8A8 perplexity").
+//! * `Mse` — grid search over symmetric shrinkings of the min-max range,
+//!   minimizing squared reconstruction error (recommended for low-bit,
+//!   Appendix B.7).
+//!
+//! Percentile/MSE need sample values, not just extrema: each point keeps a
+//! bounded reservoir sample (uniform over everything observed) plus exact
+//! extrema, so memory stays flat regardless of calibration size.
+
+use crate::quant::grid::QParams;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EstimatorKind {
+    MinMax,
+    RunningMinMax { momentum: f32 },
+    Percentile { pct: f64 },
+    Mse,
+}
+
+impl EstimatorKind {
+    pub fn parse(s: &str) -> anyhow::Result<EstimatorKind> {
+        Ok(match s {
+            "minmax" => EstimatorKind::MinMax,
+            "running" => EstimatorKind::RunningMinMax { momentum: 0.9 },
+            "p9999" => EstimatorKind::Percentile { pct: 99.99 },
+            "p99999" => EstimatorKind::Percentile { pct: 99.999 },
+            "mse" => EstimatorKind::Mse,
+            other => anyhow::bail!(
+                "unknown estimator {other:?} (minmax|running|p9999|p99999|mse)"
+            ),
+        })
+    }
+
+    /// Round-trippable name (`parse(name())` is identity for the standard
+    /// configurations).
+    pub fn name(&self) -> String {
+        match self {
+            EstimatorKind::MinMax => "minmax".into(),
+            EstimatorKind::RunningMinMax { .. } => "running".into(),
+            EstimatorKind::Percentile { pct } => format!("p{}", pct.to_string().replace('.', "")),
+            EstimatorKind::Mse => "mse".into(),
+        }
+    }
+}
+
+const RESERVOIR_CAP: usize = 1 << 15;
+
+/// Streaming per-point statistics.
+#[derive(Debug, Clone)]
+struct PointAccum {
+    global_min: f32,
+    global_max: f32,
+    run_min: f32,
+    run_max: f32,
+    batches: usize,
+    reservoir: Vec<f32>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl PointAccum {
+    fn new(seed: u64) -> PointAccum {
+        PointAccum {
+            global_min: f32::INFINITY,
+            global_max: f32::NEG_INFINITY,
+            run_min: 0.0,
+            run_max: 0.0,
+            batches: 0,
+            reservoir: Vec::new(),
+            seen: 0,
+            rng: Rng::new(seed).fork("reservoir"),
+        }
+    }
+
+    fn observe(&mut self, data: &[f32], momentum: f32) {
+        if data.is_empty() {
+            return;
+        }
+        let mut bmin = f32::INFINITY;
+        let mut bmax = f32::NEG_INFINITY;
+        for &x in data {
+            bmin = bmin.min(x);
+            bmax = bmax.max(x);
+        }
+        self.global_min = self.global_min.min(bmin);
+        self.global_max = self.global_max.max(bmax);
+        if self.batches == 0 {
+            self.run_min = bmin;
+            self.run_max = bmax;
+        } else {
+            self.run_min = momentum * self.run_min + (1.0 - momentum) * bmin;
+            self.run_max = momentum * self.run_max + (1.0 - momentum) * bmax;
+        }
+        self.batches += 1;
+        // Algorithm R reservoir sampling.
+        for &x in data {
+            self.seen += 1;
+            if self.reservoir.len() < RESERVOIR_CAP {
+                self.reservoir.push(x);
+            } else {
+                let j = (self.rng.next_u64() % self.seen) as usize;
+                if j < RESERVOIR_CAP {
+                    self.reservoir[j] = x;
+                }
+            }
+        }
+    }
+
+    fn finalize(&self, kind: EstimatorKind, bits: u32) -> QParams {
+        match kind {
+            EstimatorKind::MinMax => QParams::asymmetric(self.global_min, self.global_max, bits),
+            EstimatorKind::RunningMinMax { .. } => {
+                QParams::asymmetric(self.run_min, self.run_max, bits)
+            }
+            EstimatorKind::Percentile { pct } => {
+                let mut v = self.reservoir.clone();
+                if v.is_empty() {
+                    return QParams::asymmetric(0.0, 1.0, bits);
+                }
+                v.sort_by(|a, b| a.total_cmp(b));
+                let hi = stats::percentile_sorted(&v, pct);
+                let lo = stats::percentile_sorted(&v, 100.0 - pct);
+                QParams::asymmetric(lo, hi, bits)
+            }
+            EstimatorKind::Mse => mse_search(
+                &self.reservoir,
+                self.global_min,
+                self.global_max,
+                bits,
+            ),
+        }
+    }
+}
+
+/// Grid search over shrink factors of the min-max range (keeps the range
+/// anchored at zero-crossing like the asymmetric grid itself).
+pub fn mse_search(sample: &[f32], min: f32, max: f32, bits: u32) -> QParams {
+    if sample.is_empty() {
+        return QParams::asymmetric(min, max, bits);
+    }
+    let mut best = QParams::asymmetric(min, max, bits);
+    let mut best_err = best.sq_error(sample);
+    for i in 1..=40 {
+        let alpha = 1.0 - i as f32 * 0.975 / 40.0; // 1.0 down to 0.025
+        let q = QParams::asymmetric(min * alpha, max * alpha, bits);
+        let e = q.sq_error(sample);
+        if e < best_err {
+            best_err = e;
+            best = q;
+        }
+    }
+    best
+}
+
+/// Calibration over the manifest's ordered quant-point list.
+pub struct Calibration {
+    kind: EstimatorKind,
+    points: Vec<PointAccum>,
+}
+
+impl Calibration {
+    pub fn new(kind: EstimatorKind, n_points: usize, seed: u64) -> Calibration {
+        Calibration {
+            kind,
+            points: (0..n_points)
+                .map(|i| PointAccum::new(seed ^ ((i as u64) << 20)))
+                .collect(),
+        }
+    }
+
+    pub fn observe(&mut self, point: usize, data: &[f32]) {
+        let momentum = match self.kind {
+            EstimatorKind::RunningMinMax { momentum } => momentum,
+            _ => 0.9,
+        };
+        self.points[point].observe(data, momentum);
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Per-point quantizer parameters at the given activation bitwidth.
+    pub fn finalize(&self, bits: u32) -> Vec<QParams> {
+        self.points.iter().map(|p| p.finalize(self.kind, bits)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen};
+
+    fn observe_all(kind: EstimatorKind, batches: &[Vec<f32>]) -> PointAccum {
+        let mut c = Calibration::new(kind, 1, 7);
+        for b in batches {
+            c.observe(0, b);
+        }
+        c.points[0].clone()
+    }
+
+    #[test]
+    fn minmax_covers_everything() {
+        let acc = observe_all(
+            EstimatorKind::MinMax,
+            &[vec![-1.0, 2.0], vec![0.5, 10.0]],
+        );
+        let q = acc.finalize(EstimatorKind::MinMax, 8);
+        let (lo, hi) = q.range();
+        assert!(lo <= -0.99 && hi >= 9.9, "({lo},{hi})");
+    }
+
+    #[test]
+    fn running_minmax_smooths_spikes() {
+        // 15 calm batches then one spike: running range ≪ global range.
+        let mut batches: Vec<Vec<f32>> = (0..15).map(|_| vec![-1.0, 1.0]).collect();
+        batches.insert(7, vec![-1.0, 100.0]);
+        let acc = observe_all(EstimatorKind::RunningMinMax { momentum: 0.9 }, &batches);
+        assert!(acc.run_max < 20.0, "run_max={}", acc.run_max);
+        assert_eq!(acc.global_max, 100.0);
+    }
+
+    #[test]
+    fn percentile_ignores_rare_outliers() {
+        let mut data = vec![0.0f32; 100_000];
+        let mut rng = Rng::new(1);
+        for v in data.iter_mut() {
+            *v = rng.normal();
+        }
+        data[0] = 1000.0;
+        let c = {
+            let mut c = Calibration::new(EstimatorKind::Percentile { pct: 99.99 }, 1, 3);
+            c.observe(0, &data);
+            c
+        };
+        let q = &c.finalize(8)[0];
+        let (_, hi) = q.range();
+        assert!(hi < 50.0, "hi={hi}");
+    }
+
+    #[test]
+    fn mse_beats_minmax_on_outlier_data_at_low_bits() {
+        // At 4 bits an outlier wrecks the min-max grid's resolution for the
+        // bulk; clipping it is SSE-optimal (the Appendix B.7 low-bit story).
+        let mut data: Vec<f32> = Vec::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..100_000 {
+            data.push(rng.normal());
+        }
+        data.push(50.0);
+        let mn = data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let q_minmax = QParams::asymmetric(mn, mx, 4);
+        let q_mse = mse_search(&data, mn, mx, 4);
+        assert!(
+            q_mse.sq_error(&data) < q_minmax.sq_error(&data) * 0.5,
+            "mse {} vs minmax {}",
+            q_mse.sq_error(&data),
+            q_minmax.sq_error(&data)
+        );
+        // The MSE grid must actually clip the outlier's tail.
+        let (_, hi) = q_mse.range();
+        assert!(hi < 45.0, "hi={hi}");
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut c = Calibration::new(EstimatorKind::Mse, 1, 5);
+        let chunk: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        for _ in 0..10 {
+            c.observe(0, &chunk);
+        }
+        assert!(c.points[0].reservoir.len() <= RESERVOIR_CAP);
+        assert_eq!(c.points[0].seen, 100_000);
+        assert_eq!(c.points[0].global_max, 9999.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        for s in ["minmax", "running", "p9999", "p99999", "mse"] {
+            assert!(EstimatorKind::parse(s).is_ok(), "{s}");
+        }
+        assert!(EstimatorKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn prop_estimator_range_contains_bulk() {
+        check(
+            "range_contains_bulk",
+            |rng| gen::f32_vec(rng, 256, 2.0),
+            |v| {
+                let mut c = Calibration::new(EstimatorKind::MinMax, 1, 1);
+                c.observe(0, v);
+                let q = &c.finalize(8)[0];
+                let (lo, hi) = q.range();
+                // zero-point rounding may shift the window by up to one
+                // step; the grid still covers the data to within `scale`.
+                for &x in v {
+                    if x < lo - q.scale || x > hi + q.scale {
+                        return Err(format!("{x} outside [{lo},{hi}] (scale {})", q.scale));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

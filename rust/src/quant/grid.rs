@@ -1,0 +1,178 @@
+//! The uniform affine quantization grid — eq. (1) of the paper:
+//!
+//! ```text
+//! x̂ = q(x; s, z, b) = s · (clip(⌊x/s⌉ + z, 0, 2^b − 1) − z)
+//! ```
+//!
+//! The same (scale, zero_point, qmax) triple parameterizes both the host
+//! weight fake-quant here and the in-graph Pallas fake-quant kernel (the
+//! `eval_quant` program takes them as runtime inputs), so rust-estimated
+//! ranges transfer exactly.
+
+/// Per-tensor quantizer parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    /// 2^bits − 1.
+    pub qmax: f32,
+}
+
+pub fn qmax_for_bits(bits: u32) -> f32 {
+    ((1u64 << bits) - 1) as f32
+}
+
+impl QParams {
+    /// Asymmetric quantizer covering [min, max] (activations, §5). The
+    /// range is widened to include 0 so that zero quantizes exactly
+    /// (standard practice; padding/ReLU zeros stay exact).
+    pub fn asymmetric(min: f32, max: f32, bits: u32) -> QParams {
+        let qmax = qmax_for_bits(bits);
+        let lo = min.min(0.0);
+        let hi = max.max(0.0);
+        let range = (hi - lo).max(1e-12);
+        let scale = range / qmax;
+        let zero_point = (-lo / scale).round_ties_even().clamp(0.0, qmax);
+        QParams { scale, zero_point, qmax }
+    }
+
+    /// Symmetric quantizer covering [-absmax, absmax] (weights, §5): the
+    /// zero point sits mid-grid.
+    pub fn symmetric(absmax: f32, bits: u32) -> QParams {
+        let qmax = qmax_for_bits(bits);
+        let half = ((1u64 << (bits - 1)) - 1) as f32; // e.g. 127 for 8 bits
+        let scale = absmax.max(1e-12) / half;
+        QParams { scale, zero_point: half + 1.0, qmax }
+    }
+
+    /// Fake-quantize a single value (eq. 1, round-to-nearest-even like
+    /// jnp.round in the kernel).
+    pub fn fq(&self, x: f32) -> f32 {
+        let q = ((x / self.scale).round_ties_even() + self.zero_point).clamp(0.0, self.qmax);
+        self.scale * (q - self.zero_point)
+    }
+
+    /// Fake-quantize a slice in place.
+    pub fn fq_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.fq(*x);
+        }
+    }
+
+    /// Representable range [lo, hi] of the grid.
+    pub fn range(&self) -> (f32, f32) {
+        (
+            self.scale * (0.0 - self.zero_point),
+            self.scale * (self.qmax - self.zero_point),
+        )
+    }
+
+    /// Sum of squared quantization errors on a sample (the MSE-estimator
+    /// objective, §C.4 / Appendix B.7).
+    pub fn sq_error(&self, xs: &[f32]) -> f64 {
+        xs.iter()
+            .map(|&x| {
+                let e = (x - self.fq(x)) as f64;
+                e * e
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax_for_bits(8), 255.0);
+        assert_eq!(qmax_for_bits(6), 63.0);
+        assert_eq!(qmax_for_bits(4), 15.0);
+    }
+
+    #[test]
+    fn asymmetric_covers_range() {
+        let q = QParams::asymmetric(-1.0, 3.0, 8);
+        let (lo, hi) = q.range();
+        assert!(lo <= -0.99 && hi >= 2.99, "range ({lo},{hi})");
+        // in-range values round-trip within one step
+        for &x in &[-1.0f32, 0.0, 0.5, 2.9] {
+            assert!((q.fq(x) - x).abs() <= q.scale, "x={x}");
+        }
+        // out-of-range clips
+        assert!(q.fq(100.0) <= hi + 1e-6);
+        assert!(q.fq(-100.0) >= lo - 1e-6);
+    }
+
+    #[test]
+    fn zero_is_exact() {
+        for (mn, mx) in [(-1.0, 3.0), (0.1, 2.0), (-5.0, -0.2)] {
+            let q = QParams::asymmetric(mn, mx, 8);
+            assert_eq!(q.fq(0.0), 0.0, "({mn},{mx})");
+        }
+    }
+
+    #[test]
+    fn symmetric_is_symmetric() {
+        let q = QParams::symmetric(2.0, 8);
+        for &x in &[0.25f32, 0.8, 1.5, 1.99] {
+            assert!((q.fq(x) + q.fq(-x)).abs() < 1e-6, "x={x}");
+        }
+        assert_eq!(q.fq(0.0), 0.0);
+        assert!((q.fq(2.0) - 2.0).abs() <= q.scale);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 / 500.0 - 1.0) * 3.0).collect();
+        let e8 = QParams::asymmetric(-3.0, 3.0, 8).sq_error(&xs);
+        let e6 = QParams::asymmetric(-3.0, 3.0, 6).sq_error(&xs);
+        let e4 = QParams::asymmetric(-3.0, 3.0, 4).sq_error(&xs);
+        assert!(e8 < e6 && e6 < e4, "e8={e8} e6={e6} e4={e4}");
+    }
+
+    #[test]
+    fn prop_fq_idempotent() {
+        check(
+            "fq_idempotent",
+            |rng| {
+                let v = gen::outlier_vec(rng, 64);
+                let bits = *rng.choice(&[4u32, 6, 8]);
+                (v, bits)
+            },
+            |(v, bits)| {
+                let mn = v.iter().cloned().fold(f32::INFINITY, f32::min);
+                let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let q = QParams::asymmetric(mn, mx, *bits);
+                for &x in v {
+                    let once = q.fq(x);
+                    let twice = q.fq(once);
+                    if (once - twice).abs() > 1e-5 {
+                        return Err(format!("not idempotent at {x}: {once} vs {twice}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fq_bounded_by_grid() {
+        check(
+            "fq_bounded",
+            |rng| gen::outlier_vec(rng, 128),
+            |v| {
+                let q = QParams::symmetric(crate::util::stats::inf_norm(v), 8);
+                let (lo, hi) = q.range();
+                for &x in v {
+                    let y = q.fq(x);
+                    if y < lo - 1e-5 || y > hi + 1e-5 {
+                        return Err(format!("fq({x})={y} outside [{lo},{hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

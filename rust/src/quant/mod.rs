@@ -1,0 +1,18 @@
+//! Post-training quantization (paper §2 eq. 1 and §C.4).
+//!
+//! * [`grid`] — the uniform affine quantizer: scale / zero-point / qmax
+//!   parameterization shared with the in-graph Pallas fake-quant kernel.
+//! * [`estimators`] — activation/weight range estimation: min-max, running
+//!   min-max with momentum, percentile (99.99 / 99.999), and MSE grid
+//!   search; these are the §C.4 "range estimation" configurations the paper
+//!   selects between.
+//! * [`weights`] — host-side symmetric weight fake-quantization applied to
+//!   the parameter literals before `eval_quant` (the paper's symmetric
+//!   weight PTQ at any bitwidth — Table 10).
+
+pub mod estimators;
+pub mod grid;
+pub mod weights;
+
+pub use estimators::{Calibration, EstimatorKind};
+pub use grid::QParams;

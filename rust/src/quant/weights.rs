@@ -1,0 +1,90 @@
+//! Host-side weight PTQ: symmetric per-tensor fake-quantization of the
+//! model parameters (§5 "uniform affine quantization — symmetric weights"),
+//! with min-max or MSE range estimation (§C.4: min-max everywhere except
+//! OPT, where MSE performs better; MSE recommended for <8 bits, App. B.7).
+
+use crate::quant::estimators::EstimatorKind;
+use crate::quant::grid::QParams;
+use crate::util::stats;
+use crate::util::tensor::Tensor;
+
+/// Pick symmetric quantizer params for one weight tensor.
+pub fn weight_qparams(w: &[f32], kind: EstimatorKind, bits: u32) -> QParams {
+    match kind {
+        EstimatorKind::Mse => {
+            let absmax = stats::inf_norm(w);
+            let mut best = QParams::symmetric(absmax, bits);
+            let mut best_err = best.sq_error(w);
+            for i in 1..=40 {
+                let alpha = 1.0 - i as f32 * 0.975 / 40.0;
+                let q = QParams::symmetric(absmax * alpha, bits);
+                let e = q.sq_error(w);
+                if e < best_err {
+                    best_err = e;
+                    best = q;
+                }
+            }
+            best
+        }
+        // Range estimators other than MSE degenerate to min-max for
+        // weights (they are static tensors — no batch dimension to stream).
+        _ => QParams::symmetric(stats::inf_norm(w), bits),
+    }
+}
+
+/// Fake-quantize one weight tensor.
+pub fn fake_quant_weight(w: &Tensor, kind: EstimatorKind, bits: u32) -> Tensor {
+    let q = weight_qparams(w.data(), kind, bits);
+    let mut out = w.clone();
+    q.fq_slice(out.data_mut());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn minmax_weight_error_small_for_smooth_weights() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_fn(&[64, 64], |_| rng.normal() * 0.02);
+        let wq = fake_quant_weight(&w, EstimatorKind::MinMax, 8);
+        let max_err = w
+            .data()
+            .iter()
+            .zip(wq.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let scale = weight_qparams(w.data(), EstimatorKind::MinMax, 8).scale;
+        assert!(max_err <= scale * 0.5 + 1e-7, "err {max_err} scale {scale}");
+    }
+
+    #[test]
+    fn mse_no_worse_than_minmax() {
+        let mut rng = Rng::new(2);
+        let mut data: Vec<f32> = (0..4096).map(|_| rng.normal() * 0.02).collect();
+        data[0] = 1.5; // outlier weight
+        let q_mm = weight_qparams(&data, EstimatorKind::MinMax, 4);
+        let q_mse = weight_qparams(&data, EstimatorKind::Mse, 4);
+        assert!(q_mse.sq_error(&data) <= q_mm.sq_error(&data) + 1e-9);
+    }
+
+    #[test]
+    fn prop_symmetry_preserved() {
+        check(
+            "weight_fq_symmetric",
+            |rng| gen::outlier_vec(rng, 128),
+            |v| {
+                let q = weight_qparams(v, EstimatorKind::MinMax, 8);
+                for &x in v.iter().take(16) {
+                    if (q.fq(x) + q.fq(-x)).abs() > 1e-4 {
+                        return Err(format!("asymmetric at {x}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,273 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and the
+//! rust coordinator. A manifest fully describes one model config's five
+//! programs (flat input/output lists with names, shapes and dtypes), its
+//! parameter inventory (decay/quantize flags), and the ordered activation
+//! quant-point list shared with the calibrator.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::client::Runtime;
+use crate::runtime::program::Program;
+use crate::util::json::Json;
+
+/// One program input/output tensor: name, shape, dtype ("float32"/"int32").
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoDesc {
+    fn from_json(j: &Json) -> Result<IoDesc> {
+        Ok(IoDesc {
+            name: j.req("name")?.as_str().context("io name")?.to_string(),
+            shape: j.req("shape")?.as_usize_vec().context("io shape")?,
+            dtype: j.req("dtype")?.as_str().context("io dtype")?.to_string(),
+        })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramDesc {
+    pub file: String,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+/// Parameter metadata (subset of `python/compile/model.py::ParamSpec`).
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub decay: bool,
+    /// Weight-quantized by the PTQ pipeline (final head excluded, §5).
+    pub quantize: bool,
+    pub ln_gamma: bool,
+}
+
+/// Model-config fields the coordinator needs (mirrors configs.py).
+#[derive(Debug, Clone)]
+pub struct ConfigInfo {
+    pub name: String,
+    pub family: String,
+    pub attention: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+    pub n_classes: usize,
+    pub patch_dim: usize,
+    pub batch_size: usize,
+    pub causal: bool,
+    pub use_gate: bool,
+    pub objective: String,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub config: ConfigInfo,
+    pub params: Vec<ParamInfo>,
+    pub programs: HashMap<String, ProgramDesc>,
+    pub quant_points: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let c = j.req("config")?;
+        let geti = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize().with_context(|| format!("config.{k}"))
+        };
+        let gets = |k: &str| -> Result<String> {
+            Ok(c.req(k)?.as_str().with_context(|| format!("config.{k}"))?.to_string())
+        };
+        let config = ConfigInfo {
+            name: gets("name")?,
+            family: gets("family")?,
+            attention: gets("attention")?,
+            n_layers: geti("n_layers")?,
+            d_model: geti("d_model")?,
+            n_heads: geti("n_heads")?,
+            seq_len: geti("seq_len")?,
+            vocab_size: geti("vocab_size")?,
+            n_classes: geti("n_classes")?,
+            patch_dim: geti("patch_dim")?,
+            batch_size: geti("batch_size")?,
+            causal: c.req("causal")?.as_bool().context("config.causal")?,
+            use_gate: c.req("use_gate")?.as_bool().context("config.use_gate")?,
+            objective: gets("objective")?,
+        };
+
+        let mut params = Vec::new();
+        for p in j.req("params")?.as_arr().context("params")? {
+            params.push(ParamInfo {
+                name: p.req("name")?.as_str().context("param name")?.to_string(),
+                shape: p.req("shape")?.as_usize_vec().context("param shape")?,
+                decay: p.req("decay")?.as_bool().unwrap_or(false),
+                quantize: p.req("quantize")?.as_bool().unwrap_or(false),
+                ln_gamma: p.req("ln_gamma")?.as_bool().unwrap_or(false),
+            });
+        }
+
+        let mut programs = HashMap::new();
+        for (name, pj) in j.req("programs")?.as_obj().context("programs")? {
+            let inputs = pj
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(IoDesc::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = pj
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(IoDesc::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            programs.insert(
+                name.clone(),
+                ProgramDesc {
+                    file: pj.req("file")?.as_str().context("file")?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let quant_points = j
+            .req("quant_points")?
+            .as_arr()
+            .context("quant_points")?
+            .iter()
+            .map(|v| Ok(v.as_str().context("quant point")?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest { config, params, programs, quant_points })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+/// A loaded artifact directory: manifest + lazily compiled programs.
+///
+/// Compilation is cached per program name; a full experiment touches
+/// `init`, `train_step`, `eval_step`, `act_collect` and `eval_quant` once
+/// each, and the compiled executables are reused across seeds and
+/// hyperparameter sweep rows (gamma/zeta/lr/... are runtime inputs).
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Program>>>,
+}
+
+impl Artifact {
+    pub fn load(artifacts_root: &Path, config_name: &str) -> Result<Artifact> {
+        let dir = artifacts_root.join(config_name);
+        let manifest = Manifest::load(&dir)?;
+        if manifest.config.name != config_name {
+            bail!(
+                "manifest config name {:?} does not match directory {:?}",
+                manifest.config.name,
+                config_name
+            );
+        }
+        Ok(Artifact { dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch the cached) program by name.
+    pub fn program(&self, rt: &Runtime, name: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.cache.borrow().get(name) {
+            return Ok(p.clone());
+        }
+        let desc = self
+            .manifest
+            .programs
+            .get(name)
+            .with_context(|| format!("program {name:?} not in manifest for {}", self.manifest.config.name))?;
+        let t0 = std::time::Instant::now();
+        let exe = rt.compile_hlo_text(&self.dir.join(&desc.file))?;
+        let prog = Rc::new(Program::new(
+            format!("{}::{}", self.manifest.config.name, name),
+            exe,
+            desc.inputs.clone(),
+            desc.outputs.clone(),
+        ));
+        crate::util::log::debug(&format!(
+            "compiled {} in {:.2}s",
+            prog.name,
+            t0.elapsed().as_secs_f64()
+        ));
+        self.cache.borrow_mut().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Indices (into the flat param list) and infos of weight-quantizable
+    /// parameters.
+    pub fn quantizable_params(&self) -> Vec<(usize, &ParamInfo)> {
+        self.manifest
+            .params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.quantize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "fingerprint": "x",
+      "config": {"name":"c","family":"bert","attention":"softmax",
+        "n_layers":2,"d_model":8,"n_heads":2,"seq_len":4,"vocab_size":16,
+        "n_classes":0,"patch_dim":0,"batch_size":2,"causal":false,
+        "use_gate":false,"objective":"mlm","d_head":4,"ln_placement":"post",
+        "patch_ln":false,"gate_hidden":4,"init_std":0.02,"adam_b1":0.9,
+        "adam_b2":0.999,"weight_decay":0.01,"grad_clip":1.0,"d_ff":32},
+      "params": [
+        {"name":"tok_emb","shape":[16,8],"init":"normal","decay":true,"quantize":true,"ln_gamma":false},
+        {"name":"head.b","shape":[16],"init":"zeros","decay":false,"quantize":false,"ln_gamma":false}
+      ],
+      "programs": {
+        "init": {"file":"init.hlo.txt",
+          "inputs":[{"name":"seed","shape":[],"dtype":"int32"}],
+          "outputs":[{"name":"param::tok_emb","shape":[16,8],"dtype":"float32"}]}
+      },
+      "quant_points": ["embed","L0.q"]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.name, "c");
+        assert_eq!(m.config.d_model, 8);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.params[0].quantize);
+        assert!(!m.params[1].quantize);
+        assert_eq!(m.programs["init"].inputs[0].dtype, "int32");
+        assert_eq!(m.quant_points, ["embed", "L0.q"]);
+    }
+
+    #[test]
+    fn rejects_missing_keys() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

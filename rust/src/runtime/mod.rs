@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<config>/*.hlo.txt`)
+//! produced by `make artifacts` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5 protos
+//! with 64-bit instruction ids; the text parser reassigns ids). All program
+//! IO is addressed by *name* through the manifest — rust never guesses
+//! positions.
+
+pub mod artifact;
+pub mod client;
+pub mod program;
+
+pub use artifact::{Artifact, IoDesc, Manifest, ParamInfo, ProgramDesc};
+pub use client::Runtime;
+pub use program::{Program, Value};

@@ -1,0 +1,220 @@
+//! Named-IO program wrapper around a PJRT loaded executable.
+//!
+//! The AOT programs return one tuple (jax lowers with `return_tuple=True`);
+//! `run_raw` decomposes it back into per-output literals. The training loop
+//! keeps its state as `xla::Literal`s and threads them straight back into
+//! the next step, so the only per-step host conversions are the batch
+//! (rust-generated anyway) and the scalar loss.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::IoDesc;
+use crate::util::tensor::{IntTensor, Tensor};
+
+/// A host value crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn scalar(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(IntTensor::scalar(v))
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Value::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+/// Convert a (non-tuple) literal to a host value.
+pub fn literal_to_value(lit: &xla::Literal) -> Result<Value> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            Ok(Value::F32(Tensor::new(dims, lit.to_vec::<f32>()?)?))
+        }
+        xla::ElementType::S32 => {
+            Ok(Value::I32(IntTensor::new(dims, lit.to_vec::<i32>()?)?))
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+/// Fetch a scalar f32 out of a literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+pub struct Program {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+    input_idx: HashMap<String, usize>,
+    output_idx: HashMap<String, usize>,
+}
+
+impl Program {
+    pub fn new(
+        name: String,
+        exe: xla::PjRtLoadedExecutable,
+        inputs: Vec<IoDesc>,
+        outputs: Vec<IoDesc>,
+    ) -> Program {
+        let input_idx = inputs.iter().enumerate().map(|(i, d)| (d.name.clone(), i)).collect();
+        let output_idx = outputs.iter().enumerate().map(|(i, d)| (d.name.clone(), i)).collect();
+        Program { name, exe, inputs, outputs, input_idx, output_idx }
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.input_idx
+            .get(name)
+            .copied()
+            .with_context(|| format!("{}: no input named {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.output_idx
+            .get(name)
+            .copied()
+            .with_context(|| format!("{}: no output named {name:?}", self.name))
+    }
+
+    /// Indices of all outputs whose name starts with `prefix`, in manifest
+    /// order (e.g. every `param::*` of train_step).
+    pub fn output_indices_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.name.starts_with(prefix))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Execute with pre-built literals (the hot path). Accepts owned or
+    /// borrowed literals so the training loop can mix persistent state refs
+    /// with per-step batch literals. Returns the decomposed per-output
+    /// literal list.
+    pub fn run_raw<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        let results = self.exe.execute::<L>(args)?;
+        let mut tuple = results
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .with_context(|| format!("{}: no output buffer", self.name))?
+            .to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        if outs.len() != self.outputs.len() {
+            bail!(
+                "{}: manifest promises {} outputs, executable returned {}",
+                self.name,
+                self.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute with host values, validating shapes/dtypes against the
+    /// manifest (the convenient path for one-shot programs).
+    pub fn run(&self, args: &[Value]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                args.len()
+            );
+        }
+        for (v, d) in args.iter().zip(&self.inputs) {
+            if v.shape() != d.shape.as_slice() || v.dtype() != d.dtype {
+                bail!(
+                    "{}: input {:?} wants {:?}/{}, got {:?}/{}",
+                    self.name,
+                    d.name,
+                    d.shape,
+                    d.dtype,
+                    v.shape(),
+                    v.dtype()
+                );
+            }
+        }
+        let lits = args.iter().map(Value::to_literal).collect::<Result<Vec<_>>>()?;
+        self.run_raw(&lits)
+    }
+
+    /// Build an input literal list from named values; every input must be
+    /// provided exactly once.
+    pub fn build_inputs(&self, named: Vec<(&str, Value)>) -> Result<Vec<xla::Literal>> {
+        let mut slots: Vec<Option<xla::Literal>> = (0..self.inputs.len()).map(|_| None).collect();
+        for (name, v) in named {
+            let i = self.input_index(name)?;
+            let d = &self.inputs[i];
+            if v.shape() != d.shape.as_slice() || v.dtype() != d.dtype {
+                bail!(
+                    "{}: input {name:?} wants {:?}/{}, got {:?}/{}",
+                    self.name,
+                    d.shape,
+                    d.dtype,
+                    v.shape(),
+                    v.dtype()
+                );
+            }
+            if slots[i].is_some() {
+                bail!("{}: input {name:?} provided twice", self.name);
+            }
+            slots[i] = Some(v.to_literal()?);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.with_context(|| format!("{}: missing input {:?}", self.name, self.inputs[i].name)))
+            .collect()
+    }
+}

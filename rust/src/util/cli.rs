@@ -1,0 +1,185 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `qtx <subcommand> [positional...] [--key value | --flag]`.
+//! Typed accessors with defaults keep call sites terse; unknown-flag
+//! detection catches typos (`finish()` errors on unconsumed flags).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(s) => match s.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("--{key} expects a bool, got {other:?}"),
+            },
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(s) if s.is_empty() => vec![],
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.str_opt(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse().with_context(|| format!("--{key}: bad number {x:?}")))
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that was never read (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<_> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.iter().any(|c| c == *k))
+            .cloned()
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("train bert --steps 100 --verbose --lr=0.001");
+        assert_eq!(a.positional, ["train", "bert"]);
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert!(a.bool("verbose", false).unwrap());
+        assert!((a.f64("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.str("out", "d"), "d");
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert!(!a.bool("flag", false).unwrap());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --configs a,b,c --gammas 0,-0.03");
+        assert_eq!(a.list("configs", &[]), ["a", "b", "c"]);
+        assert_eq!(a.f64_list("gammas", &[]).unwrap(), [0.0, -0.03]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --steps nope");
+        assert!(a.usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("x --real 1 --typo 2");
+        let _ = a.usize("real", 0);
+        assert!(a.finish().is_err());
+        let a2 = parse("x --real 1");
+        let _ = a2.usize("real", 0);
+        assert!(a2.finish().is_ok());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --gamma=-0.03");
+        assert!((a.f64("gamma", 0.0).unwrap() + 0.03).abs() < 1e-12);
+    }
+}

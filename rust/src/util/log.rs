@@ -1,0 +1,49 @@
+//! Leveled stderr logging with wall-clock timestamps relative to process
+//! start. Level from `QTX_LOG` (debug | info | warn, default info).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(PartialEq, PartialOrd, Clone, Copy)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+fn config() -> (Level, Instant) {
+    static START: OnceLock<(Level, Instant)> = OnceLock::new();
+    *START.get_or_init(|| {
+        let lvl = match std::env::var("QTX_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("warn") => Level::Warn,
+            _ => Level::Info,
+        };
+        (lvl, Instant::now())
+    })
+}
+
+pub fn log(level: Level, msg: &str) {
+    let (min, start) = config();
+    if level >= min {
+        let t = start.elapsed().as_secs_f64();
+        let tag = match level {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+        };
+        eprintln!("[{t:8.2}s {tag}] {msg}");
+    }
+}
+
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
+}
+
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg);
+}

@@ -1,0 +1,14 @@
+//! Hand-rolled substrate modules.
+//!
+//! The offline crate vendor only ships the `xla` closure plus `anyhow` /
+//! `thiserror`, so everything a typical project would pull from serde /
+//! rand / clap / proptest is implemented (and unit-tested) here.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod tensorio;

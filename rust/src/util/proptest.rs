@@ -1,0 +1,96 @@
+//! Miniature property-testing harness (the `proptest` crate is not in the
+//! offline vendor set). Deterministic by default; set `QTX_PROPTEST_SEED`
+//! to explore other streams and `QTX_PROPTEST_CASES` to change the count.
+//!
+//! On failure it reports the case index and seed so the exact input can be
+//! regenerated — a lightweight stand-in for shrinking.
+
+use crate::util::rng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("QTX_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA11CE);
+        let cases = std::env::var("QTX_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics (test failure) with
+/// the reproducing seed on the first counterexample.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cfg = Config::default();
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case}/{} \
+                 (QTX_PROPTEST_SEED={}): {msg}\ninput: {input:#?}",
+                cfg.cases, cfg.seed,
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+        let n = 1 + rng.below(max_len.max(1) as u32) as usize;
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Mostly-normal values with occasional huge outliers — the activation
+    /// distribution shape this paper is about.
+    pub fn outlier_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+        let mut v = f32_vec(rng, max_len, 1.0);
+        let n_out = rng.below(3) as usize;
+        for _ in 0..n_out {
+            let i = rng.below(v.len() as u32) as usize;
+            v[i] = (50.0 + rng.f32() * 500.0) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "abs_nonneg",
+            |rng| rng.normal(),
+            |x| {
+                if x.abs() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always_fails")]
+    fn failing_property_panics_with_name() {
+        check("always_fails", |rng| rng.next_u32(), |_| Err("nope".into()));
+    }
+}

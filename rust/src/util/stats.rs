@@ -1,0 +1,204 @@
+//! Statistics used by the paper's outlier metrics (§5): kurtosis, infinity
+//! norm, percentiles (for the §C.4 range estimators), plus mean/std
+//! aggregation for the "mean ± std over seeds" table entries.
+
+/// Arithmetic mean (0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Pearson (non-excess) kurtosis: E[(x-μ)⁴]/σ⁴. Normal data → 3; the paper
+/// reports values in the thousands for outlier-ridden activations (Table 2).
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let n = xs.len() as f64;
+    let m2 = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    if m2 <= 0.0 {
+        0.0
+    } else {
+        m4 / (m2 * m2)
+    }
+}
+
+/// Infinity norm: max |x|.
+pub fn inf_norm(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// p-th percentile (p in [0,100]) with linear interpolation between order
+/// statistics — the §C.4 "99.99% / 99.999% percentile" activation range
+/// estimators use this.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&v, p)
+}
+
+/// Percentile on pre-sorted data (avoids re-sorting in two-sided use).
+pub fn percentile_sorted(sorted: &[f32], p: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = (rank - lo as f64) as f32;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// mean ± std over per-seed results; the paper's table-cell format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    /// Sample statistics (ddof=1 when n > 1), matching how the paper
+    /// reports the spread over 2-3 random seeds.
+    pub fn from(xs: &[f64]) -> MeanStd {
+        let n = xs.len();
+        if n == 0 {
+            return MeanStd { mean: f64::NAN, std: f64::NAN, n: 0 };
+        }
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let s = if n > 1 {
+            (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+        } else {
+            0.0
+        };
+        MeanStd { mean: m, std: s, n }
+    }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let digits = f.precision().unwrap_or(2);
+        write!(f, "{:.d$}±{:.d$}", self.mean, self.std, d = digits)
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi]; used by the Fig 1 outlier-position
+/// plots and analysis dumps.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        let bins = self.counts.len();
+        let t = ((x - self.lo) / (self.hi - self.lo) * bins as f32) as isize;
+        let i = t.clamp(0, bins as isize - 1) as usize;
+        self.counts[i] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kurtosis_normal_is_three() {
+        // deterministic pseudo-normal sample
+        let mut rng = crate::util::rng::Rng::new(1);
+        let xs: Vec<f32> = (0..200000).map(|_| rng.normal()).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.1, "kurtosis={k}");
+    }
+
+    #[test]
+    fn kurtosis_outliers_blow_up() {
+        let mut xs = vec![0.1f32; 1000];
+        xs[0] = 100.0; // one massive outlier
+        assert!(kurtosis(&xs) > 500.0);
+    }
+
+    #[test]
+    fn kurtosis_constant_is_zero() {
+        assert_eq!(kurtosis(&[2.0; 10]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!((percentile(&xs, 62.5) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_captures_tails() {
+        let mut xs: Vec<f32> = (0..10000).map(|i| i as f32 / 10000.0).collect();
+        xs.push(50.0);
+        assert!(percentile(&xs, 99.99) < 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+    }
+
+    #[test]
+    fn meanstd_format() {
+        let s = MeanStd::from(&[4.0, 5.0]);
+        assert!((s.mean - 4.5).abs() < 1e-12);
+        assert!((s.std - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-9);
+        assert_eq!(format!("{s:.2}"), "4.50±0.71");
+        assert_eq!(MeanStd::from(&[3.0]).std, 0.0);
+    }
+
+    #[test]
+    fn inf_norm_abs() {
+        assert_eq!(inf_norm(&[-5.0, 2.0]), 5.0);
+        assert_eq!(inf_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(-1.0); // clamps to first bin
+        h.add(42.0); // clamps to last bin
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+}

@@ -1,0 +1,122 @@
+//! Checkpoint IO: a simple self-describing binary container for named f32
+//! tensors (model parameters / optimizer state between the train and PTQ
+//! phases of an experiment).
+//!
+//! Layout (little endian):
+//!   magic  b"QTXCKPT1"
+//!   u32    tensor count
+//!   per tensor:
+//!     u32 name_len, name bytes (utf-8)
+//!     u32 rank, u64 dims[rank]
+//!     f32 data[prod(dims)]
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"QTXCKPT1";
+
+pub fn save(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a qtx checkpoint (bad magic)");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            bail!("corrupt checkpoint: name_len {name_len}");
+        }
+        let mut nb = vec![0u8; name_len];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf-8")?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 16 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        if n > 1 << 30 {
+            bail!("corrupt checkpoint: {n} elements");
+        }
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qtx_test_ckpt");
+        let path = dir.join("a.ckpt");
+        let tensors = vec![
+            ("w".to_string(), Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap()),
+            ("scalar".to_string(), Tensor::scalar(-1.5)),
+            ("empty_name_ok".to_string(), Tensor::zeros(&[0])),
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(tensors, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("qtx_test_ckpt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

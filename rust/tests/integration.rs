@@ -1,0 +1,163 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; they are skipped (with a loud
+//! message) when the artifact directory is missing so that plain
+//! `cargo test` stays usable in a fresh checkout.
+
+use std::path::PathBuf;
+
+use qtx::coordinator::calibrator::{calibrate, outlier_metrics, CollectOptions};
+use qtx::coordinator::evaluator::evaluate;
+use qtx::coordinator::quantize::{quantized_eval, QuantSpec};
+use qtx::coordinator::trainer::{train, TrainOptions};
+use qtx::data::batch::{make_provider, Stream, EVAL_SEED};
+use qtx::quant::estimators::EstimatorKind;
+use qtx::runtime::artifact::Artifact;
+use qtx::runtime::client::Runtime;
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = std::env::var("QTX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = PathBuf::from(root);
+    if p.join("bert_tiny_softmax/manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIPPED: no artifacts at {p:?} — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifests_parse_and_cover_programs() {
+    let Some(root) = artifacts_root() else { return };
+    for entry in std::fs::read_dir(&root).unwrap() {
+        let entry = entry.unwrap();
+        if !entry.path().join("manifest.json").exists() {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let art = Artifact::load(&root, &name).unwrap();
+        let m = &art.manifest;
+        for prog in ["init", "train_step", "eval_step", "act_collect", "eval_quant"] {
+            assert!(m.programs.contains_key(prog), "{name}: missing {prog}");
+            assert!(art.dir.join(&m.programs[prog].file).exists());
+        }
+        assert!(!m.quant_points.is_empty(), "{name}: no quant points");
+        // eval_quant's scale vector length must match the quant point list.
+        let eq = &m.programs["eval_quant"];
+        let scale = eq.inputs.iter().find(|d| d.name == "act_scale").unwrap();
+        assert_eq!(scale.shape, vec![m.quant_points.len()], "{name}");
+        // train_step state outputs mirror its state inputs, in order.
+        let ts = &m.programs["train_step"];
+        let n_state = ts.outputs.len() - 1;
+        for (i, o) in ts.outputs.iter().take(n_state).enumerate() {
+            assert_eq!(o.name, ts.inputs[i].name, "{name}: state order mismatch");
+        }
+    }
+}
+
+/// The end-to-end pipeline on the smallest artifact: init -> train a few
+/// steps (loss drops) -> eval -> outlier metrics -> calibrate -> W8A8 eval.
+#[test]
+fn full_pipeline_bert_tiny() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&root, "bert_tiny_softmax").unwrap();
+    let cfg = art.manifest.config.clone();
+
+    let opts = TrainOptions { log_every: 0, ..TrainOptions::new(7, 25) };
+    let mut provider = make_provider(&cfg, 7, Stream::Train);
+    let res = train(&rt, &art, &opts, provider.as_mut()).unwrap();
+    assert_eq!(res.losses.len(), 25);
+    let head = res.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail = res.losses[20..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss did not drop: {head} -> {tail}");
+    assert_eq!(res.params.len(), art.manifest.params.len());
+
+    let mut eval_p = make_provider(&cfg, EVAL_SEED, Stream::Eval);
+    let fp = evaluate(&rt, &art, &res.params, eval_p.as_mut(), 2, 0.0, 1.0, 1.0).unwrap();
+    assert!(fp.ppl.is_finite() && fp.ppl > 1.0);
+    assert!(fp.ppl < cfg.vocab_size as f64 * 2.0, "ppl {} absurd", fp.ppl);
+
+    let copts = CollectOptions { gamma: 0.0, zeta: 1.0, gate_scale: 1.0 };
+    let om = outlier_metrics(&rt, &art, &res.params, eval_p.as_mut(), 2, &copts).unwrap();
+    assert!(om.max_inf_norm() > 0.0 && om.avg_kurtosis() > 0.0);
+
+    let mut calib_p = make_provider(&cfg, 1, Stream::Calibration);
+    let cal = calibrate(
+        &rt, &art, &res.params, calib_p.as_mut(), 2,
+        EstimatorKind::Percentile { pct: 99.999 }, &copts, 1,
+    )
+    .unwrap();
+    assert_eq!(cal.n_points(), art.manifest.quant_points.len());
+    let qp = cal.finalize(8);
+    assert!(qp.iter().all(|q| q.scale > 0.0 && q.scale.is_finite()));
+
+    let q = quantized_eval(
+        &rt, &art, &res.params,
+        &QuantSpec { calib_batches: 2, ..QuantSpec::w8a8() },
+        0.0, 1.0, 1.0, 2, 1,
+    )
+    .unwrap();
+    // At 8 bits on a barely-trained clean model, quantized ppl tracks FP.
+    let ratio = q.result.ppl / fp.ppl;
+    assert!((0.8..1.3).contains(&ratio), "W8A8/FP ppl ratio {ratio}");
+}
+
+/// Determinism: same seed => bit-identical training trajectory.
+#[test]
+fn training_is_deterministic() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&root, "opt_tiny_softmax").unwrap();
+    let cfg = art.manifest.config.clone();
+    let run = |seed| {
+        let opts = TrainOptions { log_every: 0, ..TrainOptions::new(seed, 6) };
+        let mut p = make_provider(&cfg, seed, Stream::Train);
+        train(&rt, &art, &opts, p.as_mut()).unwrap().losses
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+}
+
+/// gamma/zeta are runtime inputs: the same artifact must behave differently
+/// under different stretch factors (Table 1's one-artifact sweep).
+#[test]
+fn gamma_is_runtime_input() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&root, "bert_tiny_softmax").unwrap();
+    let cfg = art.manifest.config.clone();
+    let opts = TrainOptions { log_every: 0, ..TrainOptions::new(1, 4) };
+    let mut p = make_provider(&cfg, 1, Stream::Train);
+    let res = train(&rt, &art, &opts, p.as_mut()).unwrap();
+    let mut eval_p = make_provider(&cfg, EVAL_SEED, Stream::Eval);
+    let a = evaluate(&rt, &art, &res.params, eval_p.as_mut(), 1, 0.0, 1.0, 1.0).unwrap();
+    let b = evaluate(&rt, &art, &res.params, eval_p.as_mut(), 1, -0.2, 1.0, 1.0).unwrap();
+    assert_ne!(a.ppl, b.ppl);
+}
+
+/// Gated-attention artifact: b_init drives the gate openness (Fig 7), and
+/// gate_scale=2 (the §B.6 fine-tune trick) changes the forward pass.
+#[test]
+fn gating_controls_work() {
+    let Some(root) = artifacts_root() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let art = Artifact::load(&root, "bert_tiny_gated_linear").unwrap();
+    let cfg = art.manifest.config.clone();
+    assert!(cfg.use_gate);
+    let run = |b_init: f32, gate_scale: f32| {
+        let opts = TrainOptions {
+            b_init,
+            gate_scale,
+            log_every: 0,
+            ..TrainOptions::new(1, 3)
+        };
+        let mut p = make_provider(&cfg, 1, Stream::Train);
+        train(&rt, &art, &opts, p.as_mut()).unwrap().losses[0]
+    };
+    let open = run(4.0, 1.0);
+    let closed = run(-4.0, 1.0);
+    let scaled = run(4.0, 2.0);
+    assert_ne!(open, closed);
+    assert_ne!(open, scaled);
+}
