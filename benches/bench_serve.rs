@@ -1,0 +1,168 @@
+//! Serving throughput/latency: loadgen vs. server at batch sizes {1, 8, max}.
+//!
+//! Demonstrates the point of the dynamic batcher: with a per-dispatch
+//! dominated engine (exactly the PJRT profile — compile once, pay per
+//! launch), batched throughput must beat batch-size-1 throughput. Uses the
+//! deterministic mock engine by default so the bench runs anywhere; set
+//! QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch cost
+//! (default 3000µs ≈ a tiny-config serve_score invocation).
+//!
+//! Run: cargo bench --bench bench_serve
+//! Env: QTX_BENCH_REQS     requests per client   (default 64)
+//!      QTX_BENCH_CLIENTS  concurrent clients    (default 8)
+//!      QTX_BENCH_SERVE_COST_US  mock per-dispatch cost (default 3000)
+//!
+//! Output: a markdown table (the repo's bench idiom) plus one
+//! `bench_serve JSON: {...}` line per row for machine consumption.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qtx::metrics::table::render;
+use qtx::serve::batcher::BatcherConfig;
+use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
+use qtx::serve::loadgen::{self, LoadgenConfig};
+use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::util::json::Json;
+
+const SEQ_LEN: usize = 64;
+const MODEL_BATCH: usize = 32; // "max" — the static batch of the mock model
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+struct Row {
+    max_batch: usize,
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    fill: f64,
+}
+
+fn bench_one(max_batch: usize, clients: usize, reqs: usize, cost_us: u64) -> anyhow::Result<Row> {
+    let factory: EngineFactory = Arc::new(move || {
+        let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+        e.batch_cost = Duration::from_micros(cost_us);
+        Ok(Box::new(e) as Box<dyn ScoreEngine>)
+    });
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let server = Server::start(
+        ServerConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            max_connections: clients + 8,
+            engines: 1,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 1024,
+            },
+            request_timeout: Duration::from_secs(60),
+        },
+        EngineInfo {
+            seq_len: SEQ_LEN,
+            max_batch,
+            vocab: 256,
+            causal: probe.causal,
+            describe: probe.describe(),
+        },
+        factory,
+    )?;
+    server.wait_ready(Duration::from_secs(10))?;
+    let addr = server.addr().to_string();
+
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+    })?;
+    anyhow::ensure!(report.errors == 0, "loadgen errors: {}", report.errors);
+
+    let mut c = Client::connect(&addr, Duration::from_secs(5))?;
+    let statz = c.get_json("/statz")?;
+    let fill = statz
+        .req("batches")?
+        .req("fill_ratio")?
+        .as_f64()
+        .unwrap_or(0.0);
+    drop(c);
+    server.stop();
+    Ok(Row {
+        max_batch,
+        rps: report.throughput_rps,
+        p50: report.p50_ms,
+        p95: report.p95_ms,
+        p99: report.p99_ms,
+        fill,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let reqs = env_usize("QTX_BENCH_REQS", 64);
+    let clients = env_usize("QTX_BENCH_CLIENTS", 8);
+    let cost_us = env_usize("QTX_BENCH_SERVE_COST_US", 3000) as u64;
+
+    let mut rows = Vec::new();
+    for max_batch in [1usize, 8, MODEL_BATCH] {
+        let r = bench_one(max_batch, clients, reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] max_batch={}: {:.1} req/s, p50 {:.2} ms, fill {:.2}",
+            r.max_batch, r.rps, r.p50, r.fill
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("max_batch", Json::Num(r.max_batch as f64)),
+                ("clients", Json::Num(clients as f64)),
+                ("requests", Json::Num((clients * reqs) as f64)),
+                ("throughput_rps", Json::Num(r.rps)),
+                ("p50_ms", Json::Num(r.p50)),
+                ("p95_ms", Json::Num(r.p95)),
+                ("p99_ms", Json::Num(r.p99)),
+                ("batch_fill_ratio", Json::Num(r.fill)),
+            ])
+        );
+        rows.push(r);
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.max_batch.to_string(),
+                format!("{:.1}", r.rps),
+                format!("{:.2}", r.p50),
+                format!("{:.2}", r.p95),
+                format!("{:.2}", r.p99),
+                format!("{:.2}", r.fill),
+                format!("{:+.1}%", 100.0 * (r.rps - rows[0].rps) / rows[0].rps),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## serving throughput — dynamic batching, {clients} closed-loop clients (mock engine, {cost_us}µs/dispatch)\n\n{}",
+        render(
+            &["max batch", "req/s", "p50 ms", "p95 ms", "p99 ms", "fill", "vs bs=1"],
+            &table
+        )
+    );
+
+    let bs1 = rows[0].rps;
+    let best = rows.last().unwrap().rps;
+    anyhow::ensure!(
+        best > bs1,
+        "batched throughput ({best:.1} req/s) did not beat batch-size-1 ({bs1:.1} req/s)"
+    );
+    println!(
+        "\nbatched vs bs=1 speedup: {:.1}x (fill ratio {:.2})",
+        best / bs1,
+        rows.last().unwrap().fill
+    );
+    Ok(())
+}

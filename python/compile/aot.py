@@ -30,7 +30,7 @@ from .configs import DEFAULT_BUILD, REGISTRY, ModelConfig
 from .model import param_specs
 from .train import PROGRAM_BUILDERS
 
-MANIFEST_VERSION = 4  # bump to invalidate stale artifact directories
+MANIFEST_VERSION = 5  # bump to invalidate stale artifact directories (v5: + serve_score)
 
 
 def to_hlo_text(lowered) -> str:

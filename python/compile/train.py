@@ -83,6 +83,20 @@ def _token_loss(logits: jax.Array, targets: jax.Array, mask: jax.Array):
     return sum_nll, count, correct
 
 
+def _token_loss_rows(logits: jax.Array, targets: jax.Array, mask: jax.Array):
+    """Per-example masked token cross entropy: (row_nll, row_count,
+    row_correct), each shaped (batch,). The serving path needs per-row
+    results so one batched program invocation can be split back into
+    independent client responses."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    row_nll = jnp.sum(nll * mask, axis=1)
+    row_count = jnp.sum(mask, axis=1)
+    pred = jnp.argmax(logits, axis=-1)
+    row_correct = jnp.sum((pred == targets).astype(jnp.float32) * mask, axis=1)
+    return row_nll, row_count, row_correct
+
+
 def _cls_loss(logits: jax.Array, targets: jax.Array):
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
@@ -277,10 +291,61 @@ def build_eval_quant(cfg: ModelConfig):
     return fn, inputs, outputs, points
 
 
+def build_serve_score(cfg: ModelConfig):
+    """Per-example quantized scoring for the serving path (`qtx serve`).
+
+    Same in-graph activation fake-quant as ``eval_quant`` (runtime
+    scale/zero-point vectors + runtime qmax over the shared quant-point
+    list), but the outputs are per-row (nll, count, correct) vectors so the
+    dynamic micro-batcher can pack several independent client requests into
+    one static-shape invocation and split the results back out. Padding rows
+    carry an all-zero mask and therefore score (0, 0, 0).
+    """
+    points = quant_point_names(cfg)
+    idx = {nm: i for i, nm in enumerate(points)}
+    npts = len(points)
+    b = cfg.batch_size
+    inputs = (
+        _param_descs(cfg, "param")
+        + [IODesc("act_scale", (npts,), "float32"),
+           IODesc("act_zp", (npts,), "float32"),
+           _scalar("qmax")]
+        + _batch_descs(cfg)
+        + [_scalar("gamma"), _scalar("zeta"), _scalar("gate_scale")]
+    )
+    outputs = [
+        IODesc("nll", (b,), "float32"),
+        IODesc("count", (b,), "float32"),
+        IODesc("correct", (b,), "float32"),
+    ]
+    n = len(param_specs(cfg))
+    nb = len(_batch_descs(cfg))
+
+    def fn(*args):
+        pdict = params_to_dict(cfg, list(args[0:n]))
+        scales, zps, qmax = args[n:n + 3]
+        batch = args[n + 3:n + 3 + nb]
+        gamma, zeta, gate_scale = args[n + 3 + nb:]
+        tap = QuantTap(idx, scales, zps, qmax)
+        logits = forward(cfg, pdict, batch[0], gamma, zeta, gate_scale,
+                         tap=tap, decompose_attention=True)
+        if cfg.family == "vit":
+            targets = batch[1]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            row_nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+            row_count = jnp.ones((b,), jnp.float32)
+            row_correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+            return row_nll, row_count, row_correct
+        return _token_loss_rows(logits, batch[1], batch[2])
+
+    return fn, inputs, outputs
+
+
 PROGRAM_BUILDERS: dict[str, Callable] = {
     "init": build_init,
     "train_step": build_train_step,
     "eval_step": build_eval_step,
     "act_collect": build_act_collect,
     "eval_quant": build_eval_quant,
+    "serve_score": build_serve_score,
 }

@@ -183,18 +183,77 @@ class TestEvalQuant:
 
     def test_crushing_ranges_destroy_loss(self):
         """A sanity direction check: absurd scales must hurt (mirrors what
-        outliers do to real min-max ranges)."""
+        outliers do to real min-max ranges). The model is briefly trained
+        first — on a random-init model both losses sit at max entropy and
+        the comparison is a coin flip (this was a flaky seed test)."""
         cfg = micro_config(n_layers=1, name="eq2")
         fn, _, _, points = T.build_eval_quant(cfg)
-        params, _, _ = build_state(cfg)
+        _, params, _ = run_steps(cfg, 20)
         batch = batch_for(cfg)
         n = len(points)
         good = jax.jit(fn, keep_unused=True)(
-            *params, jnp.full((n,), 0.02), jnp.full((n,), 128.0), jnp.float32(255.0),
+            *params, jnp.full((n,), 0.05), jnp.full((n,), 128.0), jnp.float32(255.0),
             *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
         )
+        # Grid step 5.0 collapses every unit-scale activation to zero: the
+        # trained signal is destroyed and the loss reverts toward uniform.
         bad = jax.jit(fn, keep_unused=True)(
             *params, jnp.full((n,), 5.0), jnp.full((n,), 128.0), jnp.float32(255.0),
             *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
         )
         assert float(bad[0]) > float(good[0])
+
+
+class TestServeScore:
+    def test_rows_sum_to_eval_quant_totals(self):
+        cfg = micro_config(n_layers=1, name="ss")
+        sfn, s_in, s_out = T.build_serve_score(cfg)
+        qfn, _, _, points = T.build_eval_quant(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        n = len(points)
+        args = (
+            list(params)
+            + [jnp.full((n,), 0.05), jnp.full((n,), 128.0), jnp.float32(255.0)]
+            + batch
+            + [jnp.float32(0), jnp.float32(1), jnp.float32(1)]
+        )
+        rows = jax.jit(sfn, keep_unused=True)(*args)
+        totals = jax.jit(qfn, keep_unused=True)(*args)
+        assert [d.name for d in s_out] == ["nll", "count", "correct"]
+        for r, d in zip(rows, s_out):
+            assert tuple(r.shape) == (cfg.batch_size,), d.name
+        for r, t in zip(rows, totals):
+            np.testing.assert_allclose(float(jnp.sum(r)), float(t), rtol=1e-4)
+
+    def test_padding_rows_score_zero(self):
+        """An all-zero mask row (how `qtx serve` pads partial batches) must
+        contribute nothing — its result is discarded, but NaN/Inf would still
+        poison monitoring."""
+        cfg = micro_config(n_layers=1, name="ssp")
+        sfn, _, _ = T.build_serve_score(cfg)
+        params, _, _ = build_state(cfg)
+        toks, targets, mask = batch_for(cfg)
+        mask = mask.at[-1].set(0.0)
+        n = len(M.quant_point_names(cfg))
+        rows = jax.jit(sfn, keep_unused=True)(
+            *params, jnp.full((n,), 0.05), jnp.full((n,), 128.0), jnp.float32(255.0),
+            toks, targets, mask, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert float(rows[0][-1]) == 0.0
+        assert float(rows[1][-1]) == 0.0
+        assert float(rows[2][-1]) == 0.0
+        assert all(np.isfinite(np.asarray(r)).all() for r in rows)
+
+    def test_vit_rows_are_per_image(self):
+        cfg = micro_vit()
+        sfn, _, s_out = T.build_serve_score(cfg)
+        params, _, _ = build_state(cfg)
+        batch = batch_for(cfg)
+        n = len(M.quant_point_names(cfg))
+        rows = jax.jit(sfn, keep_unused=True)(
+            *params, jnp.full((n,), 0.05), jnp.full((n,), 128.0), jnp.float32(255.0),
+            *batch, jnp.float32(0), jnp.float32(1), jnp.float32(1)
+        )
+        assert tuple(rows[0].shape) == (cfg.batch_size,)
+        np.testing.assert_allclose(np.asarray(rows[1]), np.ones(cfg.batch_size))

@@ -3,4 +3,5 @@
 
 pub mod analyze;
 pub mod basic;
+pub mod serve;
 pub mod tables;

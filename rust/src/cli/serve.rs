@@ -1,0 +1,156 @@
+//! `qtx serve` / `qtx loadgen` — the request-path subcommands.
+//!
+//! Serve a trained + PTQ-calibrated artifact:
+//!
+//! ```text
+//! qtx train --config bert_tiny_softmax --steps 1000 --seeds 0
+//! qtx serve --config bert_tiny_softmax --steps 1000 --seeds 0 --port 8787
+//! qtx loadgen --port 8787 --threads 4 --requests 64
+//! ```
+//!
+//! `serve` resolves the checkpoint with the same recipe flags as `train`
+//! (same run key), or takes an explicit `--ckpt`. `--mock` serves a
+//! deterministic artifact-free engine (demos, benches, smoke tests).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cli::basic::{paths_from_args, spec_from_args};
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::engine::{EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
+use crate::serve::loadgen::{run as loadgen_run, render_report, LoadgenConfig};
+use crate::serve::server::{EngineInfo, Server, ServerConfig};
+use crate::util::cli::Args;
+
+/// Batcher/server knobs shared by `serve` and `bench_serve`.
+pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
+    Ok(ServerConfig {
+        host: args.str("host", "127.0.0.1"),
+        port: args.port(8787)?,
+        // --threads caps concurrent connections (one handler thread each).
+        max_connections: args.threads(64)?,
+        engines: args.usize("engines", 1)?,
+        batcher: BatcherConfig {
+            // max_batch 0 = "use the model's static batch"; resolved below.
+            max_batch: args.usize("max-batch", 0)?,
+            max_wait: Duration::from_millis(args.u64("max-wait-ms", 5)?),
+            queue_cap: args.usize("queue-cap", 256)?,
+        },
+        request_timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
+    })
+}
+
+pub fn serve(args: &Args) -> Result<()> {
+    let mut cfg = server_config_from_args(args)?;
+    let mock = args.bool("mock", false)?;
+
+    let (info, factory): (EngineInfo, EngineFactory) = if mock {
+        let seq_len = args.usize("seq-len", 64)?;
+        let model_batch = args.usize("model-batch", 32)?;
+        let cost_us = args.u64("mock-cost-us", 3_000)?;
+        args.finish()?;
+        let max_batch = if cfg.batcher.max_batch == 0 {
+            model_batch
+        } else {
+            cfg.batcher.max_batch.min(model_batch)
+        };
+        cfg.batcher.max_batch = max_batch;
+        let probe = MockEngine::new(model_batch, seq_len);
+        let info = EngineInfo {
+            seq_len,
+            max_batch,
+            // The mock scores any non-negative id; only reject negatives.
+            vocab: i32::MAX as usize,
+            causal: probe.causal,
+            describe: probe.describe(),
+        };
+        let factory: EngineFactory = Arc::new(move || {
+            let mut e = MockEngine::new(model_batch, seq_len);
+            e.batch_cost = Duration::from_micros(cost_us);
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        });
+        (info, factory)
+    } else {
+        let (artifacts, runs) = paths_from_args(args);
+        let spec = spec_from_args(args, "bert_tiny_softmax", 1000)?;
+        let seed = spec.seeds.first().copied().unwrap_or(0);
+        let ckpt = match args.str_opt("ckpt") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => runs.join(format!("{}.ckpt", spec.run_key(seed))),
+        };
+        args.finish()?;
+        // Manifest facts without touching PJRT (pure JSON).
+        let manifest =
+            crate::runtime::Manifest::load(&artifacts.join(&spec.config))
+                .with_context(|| format!("loading manifest for {}", spec.config))?;
+        let mcfg = &manifest.config;
+        if !ckpt.exists() {
+            anyhow::bail!(
+                "no checkpoint at {ckpt:?} — run `qtx train` with the same flags, \
+                 or pass --ckpt"
+            );
+        }
+        let max_batch = if cfg.batcher.max_batch == 0 {
+            mcfg.batch_size
+        } else {
+            cfg.batcher.max_batch.min(mcfg.batch_size)
+        };
+        cfg.batcher.max_batch = max_batch;
+        let info = EngineInfo {
+            seq_len: mcfg.seq_len,
+            max_batch,
+            vocab: mcfg.vocab_size,
+            causal: mcfg.causal,
+            describe: format!(
+                "pjrt:{} W{}A{} ({})",
+                mcfg.name, spec.quant.w_bits, spec.quant.a_bits, spec.label
+            ),
+        };
+        let espec = PjrtEngineSpec {
+            artifacts_root: artifacts,
+            config: spec.config.clone(),
+            ckpt,
+            quant: spec.quant,
+            gamma: spec.gamma,
+            zeta: spec.zeta,
+            gate_scale: spec.gate_scale,
+            calib_seed: seed.wrapping_mul(1000).wrapping_add(1),
+        };
+        let factory: EngineFactory = Arc::new(move || {
+            Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
+        });
+        (info, factory)
+    };
+
+    let ready_timeout = if mock { Duration::from_secs(10) } else { Duration::from_secs(600) };
+    let server = Server::start(cfg, info, factory)?;
+    server.wait_ready(ready_timeout)?;
+    println!(
+        "serving on http://{} — POST /v1/score, GET /healthz, GET /statz",
+        server.addr()
+    );
+    server.run_forever();
+}
+
+pub fn loadgen(args: &Args) -> Result<()> {
+    let host = args.str("host", "127.0.0.1");
+    let cfg = LoadgenConfig {
+        addr: format!("{host}:{}", args.port(8787)?),
+        clients: args.threads(4)?,
+        requests_per_client: args.usize("requests", 64)?,
+        vocab: args.usize("vocab", 0)?,
+        seq_len: args.usize("seq-len", 0)?,
+        seed: args.u64("seed", 0)?,
+        timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
+    };
+    args.finish()?;
+    let report = loadgen_run(&cfg)?;
+    println!("\n## loadgen {} \n\n{}", cfg.addr, render_report(&report));
+    println!("loadgen JSON: {}", report.to_json());
+    if report.ok == 0 {
+        anyhow::bail!("no successful requests ({} errors)", report.errors);
+    }
+    Ok(())
+}

@@ -26,6 +26,8 @@
 //! * [`metrics`] — perplexity/accuracy/kurtosis/inf-norm + table formatting.
 //! * [`analysis`] — outlier localization and attention-pattern dumps.
 //! * [`coordinator`] — trainer, evaluator, calibrator, experiment runner.
+//! * [`serve`] — the request path: dynamic-batching INT8 inference server
+//!   (`qtx serve`) + closed-loop load generator (`qtx loadgen`).
 
 pub mod analysis;
 pub mod cli;
@@ -34,6 +36,7 @@ pub mod data;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

@@ -4,6 +4,8 @@
 //!   qtx smoke                         end-to-end pipeline sanity on 1 config
 //!   qtx train --config X [...]       train one model
 //!   qtx eval  --config X [...]       FP + quantized eval of a cached run
+//!   qtx serve --config X [...]       INT8 inference server on a trained run
+//!   qtx loadgen --port P [...]        closed-loop load generator
 //!   qtx analyze --config X           outlier / attention analysis (Figs 1-3)
 //!   qtx table{1,2,3,4,5,6,7,8,10} / fig{6,7} / table9
 //!                                     regenerate a paper table/figure
@@ -37,6 +39,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "smoke" => cmd::basic::smoke(args),
         "train" => cmd::basic::train(args),
         "eval" => cmd::basic::eval(args),
+        "serve" => cmd::serve::serve(args),
+        "loadgen" => cmd::serve::loadgen(args),
         "list-configs" => cmd::basic::list_configs(args),
         "analyze" | "fig1" | "fig2" | "fig3" => cmd::analyze::run(cmd, args),
         "table1" | "table2" | "table3" | "table4" | "table5" | "table6"
@@ -59,6 +63,11 @@ commands:
   smoke                 fast end-to-end pipeline check (train+PTQ, tiny)
   train                 train one model       (--config, --steps, --seed, --gamma, ...)
   eval                  FP + W8A8 eval of a cached/trained run
+  serve                 dynamic-batching INT8 inference server over a trained run
+                        (--port, --threads, --engines, --max-batch, --max-wait-ms,
+                         --ckpt PATH | same recipe flags as train; --mock for no-artifact)
+  loadgen               closed-loop HTTP load generator against a running server
+                        (--host, --port, --threads CLIENTS, --requests N)
   analyze|fig1|fig2|fig3  outlier & attention analysis dumps
   table1..table10       regenerate the paper table  (see DESIGN.md index)
   fig6 fig7             regenerate the paper figure sweeps

@@ -1,0 +1,354 @@
+//! Dynamic micro-batching: a bounded FIFO queue with a max-batch-size +
+//! max-wait-deadline flush policy.
+//!
+//! HTTP handler threads [`Batcher::submit`] single requests; engine worker
+//! threads [`Batcher::take_batch`] groups of up to `max_batch`. A batch
+//! launches as soon as it is full, or once its *oldest* member has waited
+//! `max_wait` — so a lone request is never starved waiting for company, and
+//! under load single requests amortize into full static-shape program
+//! invocations.
+//!
+//! The queue is generic over the item type (the server queues jobs carrying
+//! reply channels; tests queue integers) and deliberately knows nothing
+//! about engines or HTTP.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Flush/capacity policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Largest batch handed to a worker (the artifact's static batch rows).
+    pub max_batch: usize,
+    /// Deadline: a queued item is offered to a worker at most this long
+    /// after submission, full batch or not.
+    pub max_wait: Duration,
+    /// Bound on queued items; `submit` rejects beyond this (backpressure —
+    /// the server surfaces it as 503 rather than queueing unboundedly).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// A queued item plus its enqueue timestamp (for queue-wait accounting).
+#[derive(Debug)]
+pub struct Queued<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+impl<T> Queued<T> {
+    /// How long the item sat in the queue, as of `now`.
+    pub fn waited(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.enqueued)
+    }
+}
+
+/// Rejection reasons for [`Batcher::submit`]. The item is handed back so
+/// the caller can still respond to its client.
+#[derive(Debug)]
+pub enum Rejected<T> {
+    /// Queue at capacity (shed load).
+    Full(T),
+    /// Batcher closed (server shutting down).
+    Closed(T),
+}
+
+struct Inner<T> {
+    queue: VecDeque<Queued<T>>,
+    closed: bool,
+}
+
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    /// Signalled on submit and on close.
+    notify: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        assert!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        Batcher {
+            cfg,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            notify: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue one item; non-blocking. FIFO order is preserved through to
+    /// `take_batch` (batch rows come out in submission order).
+    pub fn submit(&self, item: T) -> Result<(), Rejected<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(Rejected::Closed(item));
+        }
+        if inner.queue.len() >= self.cfg.queue_cap {
+            return Err(Rejected::Full(item));
+        }
+        inner.queue.push_back(Queued { item, enqueued: Instant::now() });
+        drop(inner);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (for /statz).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Close the queue: pending and future `take_batch` calls drain what is
+    /// left and then return `None`; future `submit`s are rejected.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    /// Block until a batch is ready (per the flush policy) and pop it, or
+    /// return `None` once the batcher is closed and drained.
+    ///
+    /// Flush policy: wait for the first item; launch when `max_batch` items
+    /// are queued or when the first item's `max_wait` deadline passes,
+    /// whichever is sooner. Items are popped FIFO.
+    pub fn take_batch(&self) -> Option<Vec<Queued<T>>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // Phase 1: wait for at least one item (or close).
+            while inner.queue.is_empty() {
+                if inner.closed {
+                    return None;
+                }
+                inner = self.notify.wait(inner).unwrap();
+            }
+            // Phase 2: wait for fill, bounded by the oldest item's deadline.
+            let deadline = inner.queue.front().unwrap().enqueued + self.cfg.max_wait;
+            loop {
+                if inner.queue.len() >= self.cfg.max_batch || inner.closed {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.notify.wait_timeout(inner, deadline - now).unwrap();
+                inner = guard;
+                if inner.queue.is_empty() {
+                    // Another worker raced us to the items; start over.
+                    break;
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if inner.queue.is_empty() {
+                continue;
+            }
+            let n = inner.queue.len().min(self.cfg.max_batch);
+            let batch: Vec<Queued<T>> = inner.queue.drain(..n).collect();
+            // More work may remain for other idle workers.
+            if !inner.queue.is_empty() {
+                self.notify.notify_one();
+            }
+            return Some(batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn cfg(max_batch: usize, max_wait_ms: u64, cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn full_batch_launches_immediately() {
+        let b: Batcher<usize> = Batcher::new(cfg(4, 10_000, 64));
+        for i in 0..4 {
+            b.submit(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = b.take_batch().unwrap();
+        // A full batch must not wait for the deadline.
+        assert!(t0.elapsed() < Duration::from_millis(1_000));
+        assert_eq!(batch.iter().map(|q| q.item).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_deadline() {
+        let b: Batcher<usize> = Batcher::new(cfg(64, 20, 64));
+        b.submit(7).unwrap();
+        let t0 = Instant::now();
+        let batch = b.take_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].item, 7);
+        // Flushed by deadline, not by fill; generous upper bound for CI noise.
+        assert!(waited < Duration::from_millis(2_000), "waited {waited:?}");
+    }
+
+    #[test]
+    fn backpressure_and_close() {
+        let b: Batcher<usize> = Batcher::new(cfg(2, 5, 2));
+        b.submit(0).unwrap();
+        b.submit(1).unwrap();
+        match b.submit(2) {
+            Err(Rejected::Full(2)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        b.close();
+        match b.submit(3) {
+            Err(Rejected::Closed(3)) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Drain what was queued, then None.
+        assert_eq!(b.take_batch().unwrap().len(), 2);
+        assert!(b.take_batch().is_none());
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(cfg(4, 10_000, 4)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.take_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    /// Property: batches never exceed max_batch, preserve FIFO order, and
+    /// drain every submitted item exactly once.
+    #[test]
+    fn prop_fifo_bounded_complete() {
+        crate::util::proptest::check(
+            "batcher_fifo_bounded_complete",
+            |rng| {
+                let max_batch = 1 + rng.below(7) as usize;
+                let n_items = rng.below(40) as usize;
+                (max_batch, n_items)
+            },
+            |&(max_batch, n_items)| {
+                let b: Batcher<usize> =
+                    Batcher::new(cfg(max_batch, 0, n_items.max(1)));
+                for i in 0..n_items {
+                    b.submit(i).map_err(|_| "submit rejected".to_string())?;
+                }
+                b.close();
+                let mut seen = Vec::new();
+                while let Some(batch) = b.take_batch() {
+                    if batch.is_empty() {
+                        return Err("empty batch".into());
+                    }
+                    if batch.len() > max_batch {
+                        return Err(format!(
+                            "batch of {} exceeds max {max_batch}",
+                            batch.len()
+                        ));
+                    }
+                    seen.extend(batch.iter().map(|q| q.item));
+                }
+                if seen != (0..n_items).collect::<Vec<_>>() {
+                    return Err(format!("order/coverage broken: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: with a free worker, no request waits (much) past its
+    /// deadline — the starvation bound of the flush policy.
+    #[test]
+    fn prop_no_starvation_past_deadline() {
+        crate::util::proptest::check(
+            "batcher_deadline",
+            |rng| {
+                let max_batch = 2 + rng.below(6) as usize;
+                // 1..max_batch-1 items: never a full batch, must flush by time.
+                let n_items = 1 + rng.below(max_batch as u32 - 1) as usize;
+                let wait_ms = 1 + rng.below(15) as u64;
+                (max_batch, n_items, wait_ms)
+            },
+            |&(max_batch, n_items, wait_ms)| {
+                let b: Batcher<usize> = Batcher::new(cfg(max_batch, wait_ms, 64));
+                for i in 0..n_items {
+                    b.submit(i).map_err(|_| "submit rejected".to_string())?;
+                }
+                let batch = b.take_batch().ok_or("closed?")?;
+                let now = Instant::now();
+                // The batch arrived; every member must have waited at most
+                // max_wait plus scheduling slack.
+                let slack = Duration::from_millis(1_000);
+                for q in &batch {
+                    let waited = q.waited(now);
+                    if waited > Duration::from_millis(wait_ms) + slack {
+                        return Err(format!("item {} starved: {waited:?}", q.item));
+                    }
+                }
+                if batch.len() != n_items {
+                    return Err(format!("expected {n_items} items, got {}", batch.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Concurrent submitters + one worker: everything drains, nothing lost.
+    #[test]
+    fn concurrent_submit_drain() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(cfg(8, 2, 1024)));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    while b.submit(t * 1000 + i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let drainer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(batch) = b.take_batch() {
+                    assert!(batch.len() <= 8);
+                    got.extend(batch.into_iter().map(|q| q.item));
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut got = drainer.join().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<usize> =
+            (0..4).flat_map(|t| (0..50).map(move |i| t * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

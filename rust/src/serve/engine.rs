@@ -1,0 +1,652 @@
+//! Inference engines: turn a packed batch of [`ScoreRequest`]s into
+//! per-request [`ScoreRow`]s.
+//!
+//! Two implementations:
+//!
+//! * [`PjrtEngine`] — the real thing. Wraps the artifact's `serve_score`
+//!   program (per-row quantized scoring, manifest v5+) behind a reusable
+//!   session: weight literals are fake-quantized and uploaded once, the
+//!   activation `QParams` come from a startup PTQ calibration pass, and
+//!   only the three batch literals are rebuilt per invocation.
+//! * [`MockEngine`] — deterministic host-side scorer with a configurable
+//!   per-dispatch cost. Lets the server, batcher, loadgen and benches run
+//!   end-to-end (and in `cargo test`) without artifacts or a PJRT runtime.
+//!
+//! PJRT handles (`Program`, `Artifact`, `xla::Literal`) are not `Send`, so
+//! the engine pool never moves an engine between threads: each worker
+//! thread *constructs* its own engine via an [`EngineFactory`] and requests
+//! cross threads as plain host data.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::batcher::Batcher;
+use crate::serve::protocol::{ScoreRequest, ScoreRow};
+use crate::serve::stats::ServeStats;
+use crate::util::log;
+use crate::util::tensor::{IntTensor, Tensor};
+
+/// What a worker needs to score a packed batch.
+pub trait ScoreEngine {
+    /// Static batch rows of one program invocation.
+    fn max_batch(&self) -> usize;
+    /// Maximum request token length (the artifact's `seq_len`).
+    fn seq_len(&self) -> usize;
+    /// Whether targets are next-token (causal/CLM) or identity (MLM) when
+    /// the client does not supply them.
+    fn causal(&self) -> bool;
+    /// Human-readable engine description for /healthz and logs.
+    fn describe(&self) -> String;
+    /// Score up to `max_batch` requests; must return exactly one row per
+    /// request, in order. Requests are pre-validated by the server.
+    fn score(&mut self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreRow>>;
+}
+
+/// Thread-safe constructor for per-worker engines.
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn ScoreEngine>> + Send + Sync>;
+
+/// Validate a request against engine limits (done once, before queueing).
+/// `vocab` bounds token ids: out-of-range ids would silently gather a
+/// clamped embedding row in XLA and return garbage scores as 200s.
+pub fn validate_request(req: &ScoreRequest, seq_len: usize, vocab: usize) -> Result<()> {
+    if req.tokens.len() < 2 {
+        bail!("need at least 2 tokens, got {}", req.tokens.len());
+    }
+    if req.tokens.len() > seq_len {
+        bail!("sequence of {} exceeds model seq_len {}", req.tokens.len(), seq_len);
+    }
+    let in_vocab = |ids: &[i32], what: &str| -> Result<()> {
+        for &id in ids {
+            if id < 0 || (id as usize) >= vocab {
+                bail!("{what} id {id} outside vocab [0, {vocab})");
+            }
+        }
+        Ok(())
+    };
+    in_vocab(&req.tokens, "token")?;
+    if let Some(t) = &req.targets {
+        if t.len() != req.tokens.len() {
+            bail!("targets length {} != tokens length {}", t.len(), req.tokens.len());
+        }
+        in_vocab(t, "target")?;
+    }
+    Ok(())
+}
+
+/// Pack requests into the static `(batch, seq_len)` shapes, padding unused
+/// rows/positions with zeros and an all-zero mask (scores exactly 0 — see
+/// `test_padding_rows_score_zero` on the python side).
+///
+/// Target/mask derivation when the client omits `targets`:
+/// * causal: next-token targets, mask over positions `0..len-1`;
+/// * bidirectional: identity targets, mask over `0..len` (copy-likelihood).
+pub fn pack_batch(
+    reqs: &[ScoreRequest],
+    max_batch: usize,
+    seq_len: usize,
+    causal: bool,
+) -> Result<(IntTensor, IntTensor, Tensor)> {
+    if reqs.is_empty() || reqs.len() > max_batch {
+        bail!("batch of {} requests (engine max {max_batch})", reqs.len());
+    }
+    let (b, t) = (max_batch, seq_len);
+    let mut x = vec![0i32; b * t];
+    let mut targets = vec![0i32; b * t];
+    let mut mask = vec![0.0f32; b * t];
+    for (r, req) in reqs.iter().enumerate() {
+        let n = req.tokens.len();
+        x[r * t..r * t + n].copy_from_slice(&req.tokens);
+        match (&req.targets, causal) {
+            (Some(tg), _) => {
+                targets[r * t..r * t + n].copy_from_slice(tg);
+                for i in 0..n {
+                    mask[r * t + i] = 1.0;
+                }
+            }
+            (None, true) => {
+                for i in 0..n - 1 {
+                    targets[r * t + i] = req.tokens[i + 1];
+                    mask[r * t + i] = 1.0;
+                }
+            }
+            (None, false) => {
+                targets[r * t..r * t + n].copy_from_slice(&req.tokens);
+                for i in 0..n {
+                    mask[r * t + i] = 1.0;
+                }
+            }
+        }
+    }
+    Ok((
+        IntTensor::new(vec![b, t], x)?,
+        IntTensor::new(vec![b, t], targets)?,
+        Tensor::new(vec![b, t], mask)?,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Mock engine
+// ---------------------------------------------------------------------------
+
+/// Deterministic artifact-free engine for tests, benches and dry runs.
+///
+/// Scores are a pure function of (tokens, targets): each masked position
+/// contributes an NLL drawn from a hash of its (prev, target) pair, so
+/// repeated requests reproduce bit-identically. `batch_cost` models the
+/// per-dispatch latency of a real engine (compile once, pay per launch) —
+/// it is what makes dynamic batching measurable without PJRT.
+pub struct MockEngine {
+    pub max_batch: usize,
+    pub seq_len: usize,
+    pub causal: bool,
+    /// Fixed simulated cost per `score` call (per-dispatch, not per-row).
+    pub batch_cost: Duration,
+}
+
+impl MockEngine {
+    pub fn new(max_batch: usize, seq_len: usize) -> MockEngine {
+        MockEngine {
+            max_batch,
+            seq_len,
+            causal: true,
+            batch_cost: Duration::from_millis(3),
+        }
+    }
+
+    fn position_nll(prev: i32, target: i32, pos: usize) -> f32 {
+        // splitmix-style hash → uniform (0,1] → NLL in (0, ~4.6].
+        let mut h = (prev as u64) << 32 ^ (target as u64 & 0xffff_ffff) ^ ((pos as u64) << 17);
+        h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+        let u = ((h >> 11) as f64 / (1u64 << 53) as f64).max(1e-2);
+        -(u.ln()) as f32
+    }
+}
+
+impl ScoreEngine for MockEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn causal(&self) -> bool {
+        self.causal
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "mock (batch={}, seq_len={}, batch_cost={:?})",
+            self.max_batch, self.seq_len, self.batch_cost
+        )
+    }
+
+    fn score(&mut self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreRow>> {
+        let (_, targets, mask) = pack_batch(reqs, self.max_batch, self.seq_len, self.causal)?;
+        if !self.batch_cost.is_zero() {
+            std::thread::sleep(self.batch_cost);
+        }
+        let t = self.seq_len;
+        let mut rows = Vec::with_capacity(reqs.len());
+        for (r, req) in reqs.iter().enumerate() {
+            let mut row = ScoreRow { nll: 0.0, count: 0.0, correct: 0.0 };
+            for i in 0..req.tokens.len() {
+                if mask.data()[r * t + i] == 0.0 {
+                    continue;
+                }
+                let prev = req.tokens[i];
+                let tgt = targets.data()[r * t + i];
+                let nll = Self::position_nll(prev, tgt, i);
+                row.nll += nll;
+                row.count += 1.0;
+                if nll < 0.1 {
+                    row.correct += 1.0;
+                }
+            }
+            rows.push(row);
+        }
+        Ok(rows)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine
+// ---------------------------------------------------------------------------
+
+/// Everything needed to build a [`PjrtEngine`] (plain data, `Send`).
+#[derive(Debug, Clone)]
+pub struct PjrtEngineSpec {
+    pub artifacts_root: std::path::PathBuf,
+    pub config: String,
+    /// Trained checkpoint to serve.
+    pub ckpt: std::path::PathBuf,
+    pub quant: crate::coordinator::quantize::QuantSpec,
+    pub gamma: f32,
+    pub zeta: f32,
+    pub gate_scale: f32,
+    /// Calibration stream seed (PTQ subset).
+    pub calib_seed: u64,
+}
+
+/// A ready-to-serve PJRT session: compiled `serve_score` program plus the
+/// frozen input literals (quantized weights, activation QParams, hypers).
+pub struct PjrtEngine {
+    /// Kept alive for the program's sake (executables reference the client).
+    _runtime: crate::runtime::Runtime,
+    _artifact: crate::runtime::Artifact,
+    program: std::rc::Rc<crate::runtime::Program>,
+    /// Literals for every non-batch input, in program input order, with
+    /// placeholders (`None`) at the three `batch::*` slots.
+    fixed: Vec<Option<xla::Literal>>,
+    batch_slots: BatchSlots,
+    max_batch: usize,
+    seq_len: usize,
+    causal: bool,
+    config: String,
+    out_idx: (usize, usize, usize),
+}
+
+struct BatchSlots {
+    x: usize,
+    targets: usize,
+    mask: usize,
+}
+
+impl PjrtEngine {
+    /// Load artifact + checkpoint, run weight PTQ and activation
+    /// calibration, compile `serve_score`, and freeze the session inputs.
+    pub fn new(spec: &PjrtEngineSpec) -> Result<PjrtEngine> {
+        let rt = crate::runtime::Runtime::cpu()?;
+        let art = crate::runtime::Artifact::load(&spec.artifacts_root, &spec.config)?;
+        let cfg = art.manifest.config.clone();
+        if cfg.family == "vit" {
+            bail!(
+                "qtx serve is token-based; vision serving is a ROADMAP open item \
+                 (config {} is family vit)",
+                cfg.name
+            );
+        }
+
+        let params = crate::util::tensorio::load(&spec.ckpt)
+            .with_context(|| format!("loading checkpoint {:?} — train one with `qtx train`", spec.ckpt))?;
+
+        // Weight PTQ, then activation calibration on the quantized weights
+        // (matching the deployment path in coordinator::quantize).
+        let wq = crate::coordinator::quantize::quantize_weights(
+            &art,
+            &params,
+            spec.quant.w_est,
+            spec.quant.w_bits,
+        );
+        let copts = crate::coordinator::calibrator::CollectOptions {
+            gamma: spec.gamma,
+            zeta: spec.zeta,
+            gate_scale: spec.gate_scale,
+        };
+        let mut calib_provider = crate::data::batch::make_provider(
+            &cfg,
+            spec.calib_seed,
+            crate::data::batch::Stream::Calibration,
+        );
+        let t0 = Instant::now();
+        let cal = crate::coordinator::calibrator::calibrate(
+            &rt,
+            &art,
+            &wq,
+            calib_provider.as_mut(),
+            spec.quant.calib_batches,
+            spec.quant.a_est,
+            &copts,
+            spec.calib_seed,
+        )?;
+        let qp = cal.finalize(spec.quant.a_bits);
+        log::info(&format!(
+            "serve: calibrated {} points over {} batches in {:.1}s",
+            qp.len(),
+            spec.quant.calib_batches,
+            t0.elapsed().as_secs_f64()
+        ));
+
+        let program = art.program(&rt, "serve_score").with_context(|| {
+            "artifact has no `serve_score` program — re-run `make artifacts` \
+             (manifest v5 adds the per-row serving program)"
+        })?;
+
+        // Freeze every non-batch input literal in program order.
+        let n = art.manifest.quant_points.len();
+        let act_scale = Tensor::new(vec![n], qp.iter().map(|q| q.scale).collect())?;
+        let act_zp = Tensor::new(vec![n], qp.iter().map(|q| q.zero_point).collect())?;
+        let qmax = crate::quant::grid::qmax_for_bits(spec.quant.a_bits);
+        let mut fixed: Vec<Option<xla::Literal>> = Vec::with_capacity(program.inputs.len());
+        let mut slots = BatchSlots { x: usize::MAX, targets: usize::MAX, mask: usize::MAX };
+        use crate::runtime::Value;
+        for (i, d) in program.inputs.iter().enumerate() {
+            let lit = if let Some(pname) = d.name.strip_prefix("param::") {
+                let (_, t) = wq
+                    .iter()
+                    .find(|(nm, _)| nm == pname)
+                    .with_context(|| format!("checkpoint missing param {pname:?}"))?;
+                if t.shape() != d.shape.as_slice() {
+                    bail!(
+                        "param {pname}: checkpoint shape {:?} != manifest {:?} \
+                         (checkpoint from a different config?)",
+                        t.shape(),
+                        d.shape
+                    );
+                }
+                Some(Value::F32(t.clone()).to_literal()?)
+            } else {
+                match d.name.as_str() {
+                    "act_scale" => Some(Value::F32(act_scale.clone()).to_literal()?),
+                    "act_zp" => Some(Value::F32(act_zp.clone()).to_literal()?),
+                    "qmax" => Some(Value::scalar(qmax).to_literal()?),
+                    "gamma" => Some(Value::scalar(spec.gamma).to_literal()?),
+                    "zeta" => Some(Value::scalar(spec.zeta).to_literal()?),
+                    "gate_scale" => Some(Value::scalar(spec.gate_scale).to_literal()?),
+                    "batch::x" => {
+                        slots.x = i;
+                        None
+                    }
+                    "batch::targets" => {
+                        slots.targets = i;
+                        None
+                    }
+                    "batch::mask" => {
+                        slots.mask = i;
+                        None
+                    }
+                    other => bail!("serve_score: unexpected input {other:?}"),
+                }
+            };
+            fixed.push(lit);
+        }
+        if slots.x == usize::MAX || slots.targets == usize::MAX || slots.mask == usize::MAX {
+            bail!("serve_score: missing batch::x/targets/mask inputs (vit artifact?)");
+        }
+        let out_idx = (
+            program.output_index("nll")?,
+            program.output_index("count")?,
+            program.output_index("correct")?,
+        );
+        Ok(PjrtEngine {
+            _runtime: rt,
+            _artifact: art,
+            program,
+            fixed,
+            batch_slots: slots,
+            max_batch: cfg.batch_size,
+            seq_len: cfg.seq_len,
+            causal: cfg.causal,
+            config: cfg.name.clone(),
+            out_idx,
+        })
+    }
+}
+
+impl ScoreEngine for PjrtEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn causal(&self) -> bool {
+        self.causal
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pjrt:{} (batch={}, seq_len={}, causal={})",
+            self.config, self.max_batch, self.seq_len, self.causal
+        )
+    }
+
+    fn score(&mut self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreRow>> {
+        use crate::runtime::program::literal_to_value;
+        use crate::runtime::Value;
+        let (x, targets, mask) = pack_batch(reqs, self.max_batch, self.seq_len, self.causal)?;
+        let x_lit = Value::I32(x).to_literal()?;
+        let t_lit = Value::I32(targets).to_literal()?;
+        let m_lit = Value::F32(mask).to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.fixed.len());
+        for (i, slot) in self.fixed.iter().enumerate() {
+            match slot {
+                Some(l) => args.push(l),
+                None if i == self.batch_slots.x => args.push(&x_lit),
+                None if i == self.batch_slots.targets => args.push(&t_lit),
+                None if i == self.batch_slots.mask => args.push(&m_lit),
+                None => bail!("serve_score: unfilled input slot {i}"),
+            }
+        }
+        let out = self.program.run_raw(&args)?;
+        let (i_nll, i_count, i_correct) = self.out_idx;
+        let read = |i: usize| -> Result<Vec<f32>> {
+            match literal_to_value(&out[i])? {
+                Value::F32(t) => Ok(t.into_data()),
+                _ => bail!("serve_score output {i} not f32"),
+            }
+        };
+        let (nll, count, correct) = (read(i_nll)?, read(i_count)?, read(i_correct)?);
+        Ok((0..reqs.len())
+            .map(|r| ScoreRow { nll: nll[r], count: count[r], correct: correct[r] })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine pool
+// ---------------------------------------------------------------------------
+
+/// One queued scoring job: the request plus its reply channel.
+pub struct Job {
+    pub req: ScoreRequest,
+    pub resp: mpsc::Sender<Result<JobOutcome, String>>,
+}
+
+/// What the engine worker sends back per request.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub row: ScoreRow,
+    pub queue_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Spawn `n` engine worker threads. Each constructs its own engine inside
+/// the thread (PJRT handles are not `Send`), then drains the batcher until
+/// it closes. Construction failures are reported once and the worker exits;
+/// `ready` counts workers that reached the serving loop.
+pub fn spawn_engine_pool(
+    n: usize,
+    factory: EngineFactory,
+    batcher: Arc<Batcher<Job>>,
+    stats: Arc<ServeStats>,
+    ready: Arc<AtomicUsize>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|worker| {
+            let factory = factory.clone();
+            let batcher = batcher.clone();
+            let stats = stats.clone();
+            let ready = ready.clone();
+            std::thread::Builder::new()
+                .name(format!("qtx-engine-{worker}"))
+                .spawn(move || {
+                    let mut engine = match factory() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            log::warn(&format!("engine worker {worker}: startup failed: {e:#}"));
+                            return;
+                        }
+                    };
+                    log::info(&format!("engine worker {worker}: {}", engine.describe()));
+                    ready.fetch_add(1, Ordering::SeqCst);
+                    while let Some(batch) = batcher.take_batch() {
+                        let launched = Instant::now();
+                        let n = batch.len();
+                        // Move requests out of the jobs (no hot-path clone);
+                        // keep reply channels + queue waits alongside.
+                        let mut reqs: Vec<ScoreRequest> = Vec::with_capacity(n);
+                        let mut replies: Vec<(mpsc::Sender<Result<JobOutcome, String>>, Duration)> =
+                            Vec::with_capacity(n);
+                        for q in batch {
+                            let wait = q.waited(launched);
+                            stats.queue_wait.record(wait);
+                            reqs.push(q.item.req);
+                            replies.push((q.item.resp, wait));
+                        }
+                        let result = engine.score(&reqs);
+                        let exec = launched.elapsed();
+                        match result {
+                            Ok(rows) => {
+                                stats.record_batch(n, exec);
+                                for ((resp, wait), row) in replies.into_iter().zip(rows) {
+                                    let _ = resp.send(Ok(JobOutcome {
+                                        row,
+                                        queue_ms: wait.as_secs_f64() * 1000.0,
+                                        batch_size: n,
+                                    }));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("engine error: {e:#}");
+                                log::warn(&msg);
+                                for (resp, _) in replies {
+                                    let _ = resp.send(Err(msg.clone()));
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn engine worker")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::BatcherConfig;
+
+    fn req(tokens: &[i32]) -> ScoreRequest {
+        ScoreRequest { id: None, tokens: tokens.to_vec(), targets: None }
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let v = 256;
+        assert!(validate_request(&req(&[1]), 8, v).is_err());
+        assert!(validate_request(&req(&[1, 2]), 8, v).is_ok());
+        assert!(validate_request(&req(&[0; 9]), 8, v).is_err());
+        let mut r = req(&[1, 2, 3]);
+        r.targets = Some(vec![1, 2]);
+        assert!(validate_request(&r, 8, v).is_err());
+        // vocab bounds: negative and >= vocab rejected, for targets too
+        assert!(validate_request(&req(&[1, -1]), 8, v).is_err());
+        assert!(validate_request(&req(&[1, 256]), 8, v).is_err());
+        assert!(validate_request(&req(&[1, 255]), 8, v).is_ok());
+        let mut r = req(&[1, 2]);
+        r.targets = Some(vec![2, 999]);
+        assert!(validate_request(&r, 8, v).is_err());
+    }
+
+    #[test]
+    fn pack_causal_derives_next_token_targets() {
+        let (x, tg, m) = pack_batch(&[req(&[5, 6, 7])], 2, 4, true).unwrap();
+        assert_eq!(x.shape(), &[2, 4]);
+        assert_eq!(&x.data()[0..4], &[5, 6, 7, 0]);
+        assert_eq!(&tg.data()[0..4], &[6, 7, 0, 0]);
+        assert_eq!(&m.data()[0..4], &[1.0, 1.0, 0.0, 0.0]);
+        // padding row fully zero
+        assert!(x.data()[4..].iter().all(|&v| v == 0));
+        assert!(m.data()[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pack_mlm_identity_targets() {
+        let (_, tg, m) = pack_batch(&[req(&[5, 6])], 1, 4, false).unwrap();
+        assert_eq!(&tg.data()[0..2], &[5, 6]);
+        assert_eq!(&m.data()[0..4], &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_client_targets_win() {
+        let mut r = req(&[5, 6]);
+        r.targets = Some(vec![9, 9]);
+        let (_, tg, m) = pack_batch(&[r], 1, 4, true).unwrap();
+        assert_eq!(&tg.data()[0..2], &[9, 9]);
+        assert_eq!(&m.data()[0..2], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn pack_rejects_overflow() {
+        assert!(pack_batch(&[req(&[1, 2]), req(&[3, 4])], 1, 4, true).is_err());
+        assert!(pack_batch(&[], 1, 4, true).is_err());
+    }
+
+    #[test]
+    fn mock_is_deterministic_and_batch_invariant() {
+        let mut e = MockEngine::new(4, 8);
+        e.batch_cost = Duration::ZERO;
+        let a = e.score(&[req(&[1, 2, 3])]).unwrap();
+        let b = e
+            .score(&[req(&[9, 9, 9, 9]), req(&[1, 2, 3]), req(&[4, 4])])
+            .unwrap();
+        // Same request scores identically regardless of batch packing.
+        assert_eq!(a[0], b[1]);
+        assert_eq!(b.len(), 3);
+        assert!(a[0].nll > 0.0 && a[0].count == 2.0);
+    }
+
+    #[test]
+    fn pool_drains_jobs_with_mock_engine() {
+        let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 64,
+        }));
+        let stats = Arc::new(ServeStats::new());
+        let ready = Arc::new(AtomicUsize::new(0));
+        let factory: EngineFactory = Arc::new(|| {
+            let mut e = MockEngine::new(4, 8);
+            e.batch_cost = Duration::from_micros(200);
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        });
+        let handles =
+            spawn_engine_pool(2, factory, batcher.clone(), stats.clone(), ready.clone());
+
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            let (tx, rx) = mpsc::channel();
+            batcher
+                .submit(Job { req: req(&[i, i + 1, i + 2]), resp: tx })
+                .map_err(|_| ())
+                .unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let out = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            assert!(out.row.count > 0.0);
+            assert!(out.batch_size >= 1 && out.batch_size <= 4);
+        }
+        batcher.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            stats.batch_rows_total.load(Ordering::Relaxed),
+            20,
+            "all rows accounted"
+        );
+        assert!(stats.batches_total.load(Ordering::Relaxed) <= 20);
+    }
+}

@@ -1,0 +1,239 @@
+//! Closed-loop load generator for `qtx serve`: N client threads, each with
+//! one keep-alive connection, firing the next request as soon as the
+//! previous response lands. Reports throughput and latency percentiles —
+//! the measurement half of the serving acceptance loop (`qtx loadgen`,
+//! `bench_serve`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::serve::protocol::ScoreRequest;
+use crate::serve::server::Client;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Target `host:port`.
+    pub addr: String,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests per client.
+    pub requests_per_client: usize,
+    /// Token-id range for synthetic sequences; 0 = ask /healthz for the
+    /// model's vocab (out-of-vocab ids are rejected with 400).
+    pub vocab: usize,
+    /// Max sequence length to generate; 0 = ask /healthz for the model's
+    /// seq_len and use it.
+    pub seq_len: usize,
+    pub seed: u64,
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8787".into(),
+            clients: 4,
+            requests_per_client: 64,
+            vocab: 0,
+            seq_len: 0,
+            seed: 0,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Aggregated closed-loop results.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub elapsed_s: f64,
+    /// Successful requests per second, wall-clock.
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LoadgenReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clients", Json::Num(self.clients as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+        ])
+    }
+}
+
+/// Probed `/healthz` facts.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerLimits {
+    pub seq_len: usize,
+    pub max_batch: usize,
+    pub vocab: usize,
+}
+
+/// Probe `/healthz` for the model's limits.
+pub fn probe(addr: &str, timeout: Duration) -> Result<ServerLimits> {
+    let mut c = Client::connect(addr, timeout)?;
+    let h = c.get_json("/healthz")?;
+    let get = |k: &str| -> Result<usize> {
+        h.req(k)?.as_usize().with_context(|| format!("healthz {k} not an integer"))
+    };
+    Ok(ServerLimits { seq_len: get("seq_len")?, max_batch: get("max_batch")?, vocab: get("vocab")? })
+}
+
+/// Run the closed loop; blocks until every client finishes.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let (seq_len, vocab) = if cfg.seq_len > 0 && cfg.vocab > 0 {
+        (cfg.seq_len, cfg.vocab)
+    } else {
+        let limits = probe(&cfg.addr, cfg.timeout)
+            .context("probing server (pass --seq-len and --vocab to skip the probe)")?;
+        (
+            if cfg.seq_len > 0 { cfg.seq_len } else { limits.seq_len },
+            if cfg.vocab > 0 { cfg.vocab } else { limits.vocab },
+        )
+    };
+    let seq_len = seq_len.max(2);
+    let errors = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client_id in 0..cfg.clients.max(1) {
+        let addr = cfg.addr.clone();
+        let timeout = cfg.timeout;
+        let vocab = vocab.clamp(2, i32::MAX as usize) as u32;
+        let n = cfg.requests_per_client;
+        let errors = errors.clone();
+        let mut rng = Rng::new(cfg.seed).fork(&format!("loadgen-{client_id}"));
+        handles.push(std::thread::spawn(move || -> Vec<f32> {
+            let mut lat_ms: Vec<f32> = Vec::with_capacity(n);
+            let mut client = match Client::connect(&addr, timeout) {
+                Ok(c) => c,
+                Err(_) => {
+                    errors.fetch_add(n as u64, Ordering::Relaxed);
+                    return lat_ms;
+                }
+            };
+            for i in 0..n {
+                let len = 2 + rng.below(seq_len as u32 - 1) as usize;
+                let tokens: Vec<i32> =
+                    (0..len).map(|_| rng.below(vocab) as i32).collect();
+                let req = ScoreRequest {
+                    id: Some(format!("c{client_id}-{i}")),
+                    tokens,
+                    targets: None,
+                };
+                let sent = Instant::now();
+                match client.request("POST", "/v1/score", Some(&req.to_json())) {
+                    Ok((200, _body)) => {
+                        lat_ms.push(sent.elapsed().as_secs_f64() as f32 * 1000.0);
+                    }
+                    Ok((_status, _body)) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        // Reconnect and keep going (server may have dropped us).
+                        match Client::connect(&addr, timeout) {
+                            Ok(c) => client = c,
+                            Err(_) => {
+                                errors.fetch_add((n - i - 1) as u64, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            lat_ms
+        }));
+    }
+    let mut lat_ms: Vec<f32> = Vec::new();
+    for h in handles {
+        lat_ms.extend(h.join().expect("loadgen client panicked"));
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let ok = lat_ms.len() as u64;
+    let errors = errors.load(Ordering::Relaxed);
+    let (p50, p95, p99, mean) = if lat_ms.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        let mut sorted = lat_ms.clone();
+        sorted.sort_by(f32::total_cmp);
+        (
+            crate::util::stats::percentile_sorted(&sorted, 50.0) as f64,
+            crate::util::stats::percentile_sorted(&sorted, 95.0) as f64,
+            crate::util::stats::percentile_sorted(&sorted, 99.0) as f64,
+            crate::util::stats::mean(&lat_ms),
+        )
+    };
+    Ok(LoadgenReport {
+        clients: cfg.clients.max(1),
+        sent: ok + errors,
+        ok,
+        errors,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 { ok as f64 / elapsed_s } else { 0.0 },
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+        mean_ms: mean,
+    })
+}
+
+/// Render the human-readable report table.
+pub fn render_report(r: &LoadgenReport) -> String {
+    crate::metrics::table::render(
+        &["clients", "ok", "errors", "elapsed s", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+        &[vec![
+            r.clients.to_string(),
+            r.ok.to_string(),
+            r.errors.to_string(),
+            format!("{:.2}", r.elapsed_s),
+            format!("{:.1}", r.throughput_rps),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p95_ms),
+            format!("{:.2}", r.p99_ms),
+        ]],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let r = LoadgenReport {
+            clients: 2,
+            sent: 10,
+            ok: 9,
+            errors: 1,
+            elapsed_s: 1.5,
+            throughput_rps: 6.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            mean_ms: 1.2,
+        };
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.req("ok").unwrap().as_usize(), Some(9));
+        assert_eq!(j.req("clients").unwrap().as_usize(), Some(2));
+        assert!(render_report(&r).contains("req/s"));
+    }
+}

@@ -1,0 +1,39 @@
+//! `qtx serve` — the dynamic-batching INT8 inference server.
+//!
+//! The first subsystem on the *request path*: everything else in this crate
+//! trains and tabulates; this serves a trained + PTQ-calibrated artifact to
+//! live HTTP traffic. The paper's claim (clipped-softmax / gated-attention
+//! models quantize to full W8A8 "for free") becomes a deployment property
+//! here: the engine runs the `serve_score` program — the same in-graph
+//! activation fake-quant as `eval_quant`, but with per-row outputs — so
+//! quantized quality is what clients actually receive.
+//!
+//! Data flow:
+//!
+//! ```text
+//! clients ── HTTP ──> server ──> batcher ──> engine pool ──> PJRT
+//!                      │  ▲        (pack ≤ max_batch,         (serve_score,
+//!                      │  └─ reply  flush on fill or          frozen weight +
+//!                      ▼     chans  max-wait deadline)        QParams literals)
+//!                    stats  ◄──────────┴──────────────┘
+//! ```
+//!
+//! * [`protocol`] — request/response wire types over `util::json`.
+//! * [`batcher`]  — bounded FIFO + max-batch/max-wait flush policy.
+//! * [`engine`]   — `ScoreEngine` trait; PJRT session + mock; worker pool.
+//! * [`server`]   — hand-rolled HTTP/1.1 on `std::net` worker threads.
+//! * [`stats`]    — atomic counters + latency histograms (`/statz`).
+//! * [`loadgen`]  — closed-loop client driving the acceptance loop.
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
+pub use protocol::{ScoreRequest, ScoreResponse, ScoreRow};
+pub use server::{EngineInfo, Server, ServerConfig};
+pub use stats::ServeStats;

@@ -1,0 +1,244 @@
+//! Wire types for the `qtx serve` HTTP API, serialized through
+//! [`crate::util::json`] (the offline vendor set has no serde).
+//!
+//! `POST /v1/score` body:
+//!
+//! ```json
+//! {"id": "req-7", "tokens": [3, 14, 15], "targets": [9, 2, 6]}
+//! ```
+//!
+//! * `tokens` — the input sequence (≥ 2, ≤ the artifact's `seq_len`).
+//! * `targets` — optional; same length as `tokens`. When omitted the server
+//!   derives them: next-token targets for causal (CLM) configs, identity
+//!   targets for bidirectional (MLM) configs — the latter is a
+//!   copy-likelihood score, useful as an anomaly/fluency signal.
+//! * `id` — optional opaque client tag, echoed back.
+//!
+//! Response:
+//!
+//! ```json
+//! {"id":"req-7","nll":12.3,"count":15,"ppl":2.27,"correct":4,
+//!  "queue_ms":1.4,"batch_size":8}
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// One scoring request (the unit the dynamic batcher packs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreRequest {
+    pub id: Option<String>,
+    pub tokens: Vec<i32>,
+    pub targets: Option<Vec<i32>>,
+}
+
+impl ScoreRequest {
+    pub fn from_json(j: &Json) -> Result<ScoreRequest> {
+        let id = match j.get("id") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("\"id\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let tokens = i32_vec(j.req("tokens")?).map_err(|e| anyhow::anyhow!("\"tokens\": {e}"))?;
+        let targets = match j.get("targets") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(i32_vec(v).map_err(|e| anyhow::anyhow!("\"targets\": {e}"))?),
+        };
+        if let Some(t) = &targets {
+            if t.len() != tokens.len() {
+                bail!("\"targets\" length {} != \"tokens\" length {}", t.len(), tokens.len());
+            }
+        }
+        Ok(ScoreRequest { id, tokens, targets })
+    }
+
+    pub fn parse(text: &str) -> Result<ScoreRequest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        ScoreRequest::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push((
+            "tokens".into(),
+            Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+        if let Some(tg) = &self.targets {
+            kv.push((
+                "targets".into(),
+                Json::Arr(tg.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ));
+        }
+        Json::Obj(kv)
+    }
+}
+
+/// Per-request scoring result as produced by an engine (one batch row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreRow {
+    /// Summed negative log-likelihood over scored positions.
+    pub nll: f32,
+    /// Number of scored positions (mask sum).
+    pub count: f32,
+    /// Greedy-prediction matches among scored positions.
+    pub correct: f32,
+}
+
+/// Full response for one request, including serving metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreResponse {
+    pub id: Option<String>,
+    pub row: ScoreRow,
+    /// Time the request spent queued before its batch launched.
+    pub queue_ms: f64,
+    /// How many real requests shared the program invocation.
+    pub batch_size: usize,
+}
+
+impl ScoreResponse {
+    /// Perplexity over the scored positions.
+    pub fn ppl(&self) -> f64 {
+        crate::metrics::perplexity(self.row.nll as f64, self.row.count as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push(("nll".into(), Json::Num(self.row.nll as f64)));
+        kv.push(("count".into(), Json::Num(self.row.count as f64)));
+        kv.push(("ppl".into(), Json::Num(self.ppl())));
+        kv.push(("correct".into(), Json::Num(self.row.correct as f64)));
+        kv.push(("queue_ms".into(), Json::Num(self.queue_ms)));
+        kv.push(("batch_size".into(), Json::Num(self.batch_size as f64)));
+        Json::Obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScoreResponse> {
+        let num = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("{k:?} must be a number"))
+        };
+        Ok(ScoreResponse {
+            id: j.get("id").and_then(Json::as_str).map(str::to_string),
+            row: ScoreRow {
+                nll: num("nll")? as f32,
+                count: num("count")? as f32,
+                correct: num("correct")? as f32,
+            },
+            queue_ms: num("queue_ms")?,
+            batch_size: num("batch_size")? as usize,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<ScoreResponse> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        ScoreResponse::from_json(&j)
+    }
+}
+
+/// Error body: `{"error": "..."}` (all non-2xx responses use this shape).
+pub fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+fn i32_vec(j: &Json) -> Result<Vec<i32>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("expected an array"))?;
+    arr.iter()
+        .map(|v| {
+            let n = v
+                .as_i64()
+                .ok_or_else(|| anyhow::anyhow!("expected integer elements"))?;
+            i32::try_from(n).map_err(|_| anyhow::anyhow!("token {n} out of i32 range"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = ScoreRequest {
+            id: Some("a/1".into()),
+            tokens: vec![1, 2, 3, 4],
+            targets: Some(vec![2, 3, 4, 0]),
+        };
+        let back = ScoreRequest::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn request_minimal() {
+        let r = ScoreRequest::parse(r#"{"tokens":[5,6]}"#).unwrap();
+        assert_eq!(r.tokens, vec![5, 6]);
+        assert!(r.id.is_none() && r.targets.is_none());
+    }
+
+    #[test]
+    fn request_rejects_bad_shapes() {
+        assert!(ScoreRequest::parse(r#"{"tokens":"x"}"#).is_err());
+        assert!(ScoreRequest::parse(r#"{"tokens":[1.5]}"#).is_err());
+        assert!(ScoreRequest::parse(r#"{"tokens":[1,2],"targets":[1]}"#).is_err());
+        assert!(ScoreRequest::parse(r#"{}"#).is_err());
+        assert!(ScoreRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = ScoreResponse {
+            id: None,
+            row: ScoreRow { nll: 10.0, count: 4.0, correct: 1.0 },
+            queue_ms: 0.25,
+            batch_size: 8,
+        };
+        let back = ScoreResponse::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(r, back);
+        // ppl = exp(10/4)
+        assert!((back.ppl() - (2.5f64).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_request_roundtrip() {
+        crate::util::proptest::check(
+            "score_request_roundtrip",
+            |rng| {
+                let n = 2 + rng.below(30) as usize;
+                let tokens: Vec<i32> = (0..n).map(|_| rng.below(50_000) as i32).collect();
+                let targets = if rng.bernoulli(0.5) {
+                    Some((0..n).map(|_| rng.below(50_000) as i32).collect())
+                } else {
+                    None
+                };
+                let id = if rng.bernoulli(0.5) {
+                    Some(format!("id-{}\"\\é", rng.below(1000)))
+                } else {
+                    None
+                };
+                ScoreRequest { id, tokens, targets }
+            },
+            |r| {
+                let back = ScoreRequest::parse(&r.to_json().to_string())
+                    .map_err(|e| e.to_string())?;
+                if &back == r {
+                    Ok(())
+                } else {
+                    Err(format!("roundtrip mismatch: {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn error_shape() {
+        assert_eq!(error_json("boom").to_string(), r#"{"error":"boom"}"#);
+    }
+}

@@ -1,0 +1,579 @@
+//! Hand-rolled HTTP/1.1 server on `std::net::TcpListener` + worker threads
+//! (the offline vendor set has no tokio/hyper; this follows the repo's
+//! hand-rolled-substrate idiom — see `util/`).
+//!
+//! Endpoints:
+//! * `POST /v1/score` — score one token sequence (queued into the dynamic
+//!   batcher; see [`crate::serve::protocol`] for the wire shapes).
+//! * `GET /healthz`  — liveness + engine description and limits.
+//! * `GET /statz`    — counters, batch-fill ratio, latency percentiles.
+//!
+//! Threading model: the accept thread spawns one handler thread per
+//! connection (keep-alive connections would head-of-line block a fixed
+//! pool), bounded by `max_connections` — beyond the cap new connections
+//! get an immediate 503 instead of silently queueing. Handler threads
+//! block on the reply channel of each scoring job; a separate engine pool
+//! (one PJRT session per worker) drains the batcher.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::batcher::{Batcher, BatcherConfig, Rejected};
+use crate::serve::engine::{spawn_engine_pool, validate_request, EngineFactory, Job};
+use crate::serve::protocol::{error_json, ScoreRequest, ScoreResponse};
+use crate::serve::stats::ServeStats;
+use crate::util::json::Json;
+use crate::util::log;
+
+const MAX_HEAD_BYTES: usize = 32 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// Server-side knobs (the batcher policy rides along).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub host: String,
+    /// 0 picks an ephemeral port (tests/benches).
+    pub port: u16,
+    /// Concurrent-connection cap; excess connections get an immediate 503.
+    pub max_connections: usize,
+    pub engines: usize,
+    pub batcher: BatcherConfig,
+    /// How long a handler waits for its batch result before answering 504.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            host: "127.0.0.1".into(),
+            port: 8787,
+            max_connections: 64,
+            engines: 1,
+            batcher: BatcherConfig::default(),
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Static facts about the engine the HTTP layer needs for validation and
+/// /healthz, known without constructing an engine (the manifest has them).
+#[derive(Debug, Clone)]
+pub struct EngineInfo {
+    pub seq_len: usize,
+    pub max_batch: usize,
+    /// Vocabulary size; token ids outside [0, vocab) are rejected with 400.
+    pub vocab: usize,
+    pub causal: bool,
+    pub describe: String,
+}
+
+/// Decrements the live-connection counter when a handler thread exits.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running server: accept thread + per-connection handlers + engine pool.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    batcher: Arc<Batcher<Job>>,
+    pub stats: Arc<ServeStats>,
+    engines_ready: Arc<AtomicUsize>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    engine_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn everything, return immediately. Engines warm up in the
+    /// background; use [`Server::wait_ready`] before sending traffic.
+    pub fn start(cfg: ServerConfig, info: EngineInfo, factory: EngineFactory) -> Result<Server> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr()?;
+        let stats = Arc::new(ServeStats::new());
+        let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(cfg.batcher));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let engines_ready = Arc::new(AtomicUsize::new(0));
+
+        let engine_handles = spawn_engine_pool(
+            cfg.engines.max(1),
+            factory,
+            batcher.clone(),
+            stats.clone(),
+            engines_ready.clone(),
+        );
+
+        let ctx = Arc::new(HandlerCtx {
+            batcher: batcher.clone(),
+            stats: stats.clone(),
+            info: info.clone(),
+            request_timeout: cfg.request_timeout,
+            shutdown: shutdown.clone(),
+        });
+        let accept_handle = {
+            let shutdown = shutdown.clone();
+            let max_conns = cfg.max_connections.max(1);
+            let active = Arc::new(AtomicUsize::new(0));
+            std::thread::Builder::new()
+                .name("qtx-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if shutdown.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let mut s = match stream {
+                            Ok(s) => s,
+                            Err(e) => {
+                                log::debug(&format!("accept error: {e}"));
+                                continue;
+                            }
+                        };
+                        if active.load(Ordering::SeqCst) >= max_conns {
+                            // Shed load fast rather than queueing connections
+                            // a keep-alive handler will never reach.
+                            let _ = write_json_response(
+                                &mut s,
+                                503,
+                                "Service Unavailable",
+                                &error_json("connection limit reached"),
+                                false,
+                            );
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::SeqCst);
+                        let guard = ConnGuard(active.clone());
+                        let ctx = ctx.clone();
+                        // Detached: connection threads outlive stop() by at
+                        // most the socket read timeout.
+                        let _ = std::thread::Builder::new()
+                            .name("qtx-conn".into())
+                            .spawn(move || {
+                                let _guard = guard;
+                                if let Err(e) = handle_connection(s, &ctx) {
+                                    log::debug(&format!("connection error: {e:#}"));
+                                }
+                            });
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+
+        log::info(&format!("qtx serve listening on http://{addr} ({})", info.describe));
+        Ok(Server {
+            addr,
+            shutdown,
+            batcher,
+            stats,
+            engines_ready,
+            accept_handle: Some(accept_handle),
+            engine_handles,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until at least one engine worker reached its serving loop.
+    /// Errors if every engine worker died first (startup failure) or the
+    /// timeout passes (artifact compilation can take a while — be generous).
+    pub fn wait_ready(&self, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        loop {
+            if self.engines_ready.load(Ordering::SeqCst) > 0 {
+                return Ok(());
+            }
+            if self.engine_handles.iter().all(|h| h.is_finished()) {
+                bail!("all engine workers failed at startup (see log)");
+            }
+            if t0.elapsed() > timeout {
+                bail!("engines not ready after {timeout:?}");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Graceful stop: close the batcher, unblock accept, join the accept
+    /// thread and engine pool. Per-connection handler threads are detached;
+    /// open keep-alive connections see the shutdown flag after their
+    /// current request (or their socket read timeout) and close.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.batcher.close();
+        // Nudge the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.engine_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Block this thread for the server's lifetime (the CLI path).
+    pub fn run_forever(&self) -> ! {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+}
+
+struct HandlerCtx {
+    batcher: Arc<Batcher<Job>>,
+    stats: Arc<ServeStats>,
+    info: EngineInfo,
+    request_timeout: Duration,
+    shutdown: Arc<AtomicBool>,
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing (shared with the loadgen client)
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP message (request or response side).
+pub struct HttpMessage {
+    /// Request line or status line, without CRLF.
+    pub start_line: String,
+    /// Lower-cased header names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpMessage {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("body not utf-8")
+    }
+}
+
+/// Read one HTTP message (head + Content-Length body). `Ok(None)` on clean
+/// EOF before any byte (peer closed a keep-alive connection).
+pub fn read_message(r: &mut BufReader<TcpStream>) -> Result<Option<HttpMessage>> {
+    let mut start_line = String::new();
+    loop {
+        let mut line = Vec::new();
+        let n = r.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            return if start_line.is_empty() {
+                Ok(None)
+            } else {
+                bail!("eof mid-head")
+            };
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim_end_matches(['\r', '\n']);
+        if !text.is_empty() {
+            start_line = text.to_string();
+            break;
+        }
+        // tolerate leading blank lines between keep-alive messages
+    }
+    let mut headers = Vec::new();
+    let mut head_bytes = start_line.len();
+    loop {
+        let mut line = Vec::new();
+        let n = r.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            bail!("eof in headers");
+        }
+        head_bytes += n;
+        if head_bytes > MAX_HEAD_BYTES {
+            bail!("header section exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim_end_matches(['\r', '\n']);
+        if text.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = text.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().context("bad content-length"))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        bail!("body of {len} bytes exceeds {MAX_BODY_BYTES}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading body")?;
+    Ok(Some(HttpMessage { start_line, headers, body }))
+}
+
+/// Write an HTTP/1.1 JSON response.
+pub fn write_json_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let body = body.to_string();
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.flush()
+}
+
+/// Write an HTTP/1.1 request with a JSON body (the loadgen client side).
+pub fn write_json_request(
+    w: &mut impl Write,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> std::io::Result<()> {
+    let body = body.map(|b| b.to_string()).unwrap_or_default();
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: qtx\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        body.len(),
+    )?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Request handling
+// ---------------------------------------------------------------------------
+
+fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    // A read timeout bounds half-open connections; generous so a keep-alive
+    // client may idle briefly between requests.
+    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return Ok(()); // server stopping: drop the keep-alive connection
+        }
+        let msg = match read_message(&mut reader) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(()), // clean close
+            Err(e) => {
+                // An idle keep-alive connection hitting the socket read
+                // timeout is a normal close, not a protocol error — writing
+                // 400 here would desynchronize a client that sends its next
+                // request around the same moment.
+                let idle_timeout = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if !idle_timeout {
+                    let _ = write_json_response(
+                        &mut writer,
+                        400,
+                        "Bad Request",
+                        &error_json(&format!("{e:#}")),
+                        false,
+                    );
+                }
+                return Ok(());
+            }
+        };
+        let mut parts = msg.start_line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let path_full = parts.next().unwrap_or("");
+        let path = path_full.split('?').next().unwrap_or("");
+        let keep_alive = !msg
+            .header("connection")
+            .unwrap_or("keep-alive")
+            .eq_ignore_ascii_case("close");
+
+        match (method, path) {
+            ("POST", "/v1/score") => handle_score(&mut writer, &msg, ctx, keep_alive)?,
+            ("GET", "/healthz") => {
+                let doc = Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("engine", Json::Str(ctx.info.describe.clone())),
+                    ("seq_len", Json::Num(ctx.info.seq_len as f64)),
+                    ("max_batch", Json::Num(ctx.info.max_batch as f64)),
+                    ("vocab", Json::Num(ctx.info.vocab as f64)),
+                    ("causal", Json::Bool(ctx.info.causal)),
+                    ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
+                ]);
+                write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
+            }
+            ("GET", "/statz") => {
+                let doc = ctx.stats.snapshot(ctx.batcher.depth());
+                write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
+            }
+            (_, "/v1/score") | (_, "/healthz") | (_, "/statz") => {
+                write_json_response(
+                    &mut writer,
+                    405,
+                    "Method Not Allowed",
+                    &error_json("method not allowed"),
+                    keep_alive,
+                )?;
+            }
+            _ => {
+                write_json_response(
+                    &mut writer,
+                    404,
+                    "Not Found",
+                    &error_json(&format!("no route {path:?}")),
+                    keep_alive,
+                )?;
+            }
+        }
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn handle_score(
+    w: &mut TcpStream,
+    msg: &HttpMessage,
+    ctx: &HandlerCtx,
+    keep_alive: bool,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let req = match msg
+        .body_str()
+        .and_then(ScoreRequest::parse)
+        .and_then(|r| validate_request(&r, ctx.info.seq_len, ctx.info.vocab).map(|_| r))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
+            return Ok(());
+        }
+    };
+    let id = req.id.clone();
+    let (tx, rx) = mpsc::channel();
+    match ctx.batcher.submit(Job { req, resp: tx }) {
+        Ok(()) => {}
+        Err(Rejected::Full(_)) => {
+            ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
+            write_json_response(
+                w,
+                503,
+                "Service Unavailable",
+                &error_json("queue full, retry later"),
+                keep_alive,
+            )?;
+            return Ok(());
+        }
+        Err(Rejected::Closed(_)) => {
+            write_json_response(
+                w,
+                503,
+                "Service Unavailable",
+                &error_json("server shutting down"),
+                false,
+            )?;
+            return Ok(());
+        }
+    }
+    ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+    match rx.recv_timeout(ctx.request_timeout) {
+        Ok(Ok(out)) => {
+            let resp = ScoreResponse {
+                id,
+                row: out.row,
+                queue_ms: out.queue_ms,
+                batch_size: out.batch_size,
+            };
+            ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.latency.record(t0.elapsed());
+            write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
+        }
+        Ok(Err(engine_msg)) => {
+            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+            write_json_response(
+                w,
+                500,
+                "Internal Server Error",
+                &error_json(&engine_msg),
+                keep_alive,
+            )?;
+        }
+        Err(_) => {
+            ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            write_json_response(
+                w,
+                504,
+                "Gateway Timeout",
+                &error_json("scoring timed out"),
+                keep_alive,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Minimal blocking client (loadgen + tests)
+// ---------------------------------------------------------------------------
+
+/// A keep-alive HTTP client for one connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Client> {
+        let sockaddr: SocketAddr = addr
+            .parse()
+            .with_context(|| format!("bad address {addr:?} (want host:port)"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout)).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// Send a request, read one response: (status, body).
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, String)> {
+        write_json_request(&mut self.writer, method, path, body)?;
+        let msg = read_message(&mut self.reader)?.context("server closed connection")?;
+        let status: u16 = msg
+            .start_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line {:?}", msg.start_line))?;
+        Ok((status, msg.body_str()?.to_string()))
+    }
+
+    /// Convenience: GET returning parsed JSON (errors on non-200).
+    pub fn get_json(&mut self, path: &str) -> Result<Json> {
+        let (status, body) = self.request("GET", path, None)?;
+        if status != 200 {
+            bail!("GET {path}: status {status}: {body}");
+        }
+        Json::parse(&body).map_err(|e| anyhow::anyhow!("GET {path}: bad json: {e}"))
+    }
+}

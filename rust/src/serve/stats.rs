@@ -1,0 +1,286 @@
+//! Serving telemetry: lock-free counters and log-bucketed latency
+//! histograms, surfaced as JSON on `GET /statz`.
+//!
+//! Everything is `AtomicU64` so the hot path (HTTP handlers, engine
+//! workers) never takes a lock; `/statz` reads are racy-but-consistent
+//! snapshots, which is all monitoring needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets. Geometric bounds from `BASE_US` with ratio
+/// `RATIO` cover ~50µs .. ~80s, which brackets everything from a queue hit
+/// to a pathological stall.
+const BUCKETS: usize = 44;
+const BASE_US: f64 = 50.0;
+const RATIO: f64 = 1.4;
+
+/// Fixed-layout geometric latency histogram (microsecond samples).
+#[derive(Debug)]
+pub struct LatencyHisto {
+    counts: [AtomicU64; BUCKETS],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+// Manual impl: std's array Default stops at 32 elements.
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_for(us: u64) -> usize {
+    if (us as f64) < BASE_US {
+        return 0;
+    }
+    let i = ((us as f64) / BASE_US).ln() / RATIO.ln();
+    (i as usize + 1).min(BUCKETS - 1)
+}
+
+/// Upper bound (µs) of bucket `i` (the value reported for quantiles).
+fn bucket_bound_us(i: usize) -> f64 {
+    BASE_US * RATIO.powi(i as i32)
+}
+
+impl LatencyHisto {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.counts[bucket_for(us)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Mean in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    /// Approximate quantile (q in [0,1]) in milliseconds: the upper bound
+    /// of the bucket holding the q-th sample. Resolution is one RATIO step.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for i in 0..BUCKETS {
+            seen += self.counts[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_bound_us(i) / 1000.0;
+            }
+        }
+        self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ms", Json::Num(round3(self.mean_ms()))),
+            ("p50_ms", Json::Num(round3(self.quantile_ms(0.50)))),
+            ("p95_ms", Json::Num(round3(self.quantile_ms(0.95)))),
+            ("p99_ms", Json::Num(round3(self.quantile_ms(0.99)))),
+            (
+                "max_ms",
+                Json::Num(round3(self.max_us.load(Ordering::Relaxed) as f64 / 1000.0)),
+            ),
+        ])
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// All serving counters, shared by HTTP handlers and engine workers.
+#[derive(Debug)]
+pub struct ServeStats {
+    started: Instant,
+    /// Requests accepted into the queue.
+    pub requests_total: AtomicU64,
+    /// Requests answered 200.
+    pub responses_ok: AtomicU64,
+    /// Requests rejected before queueing (bad input → 400).
+    pub bad_requests: AtomicU64,
+    /// Requests shed because the queue was full (→ 503).
+    pub rejected_full: AtomicU64,
+    /// Requests that timed out waiting for their batch (→ 504).
+    pub timeouts: AtomicU64,
+    /// Engine-side failures (→ 500).
+    pub engine_errors: AtomicU64,
+    /// Program invocations.
+    pub batches_total: AtomicU64,
+    /// Real (non-padding) rows across all invocations.
+    pub batch_rows_total: AtomicU64,
+    /// End-to-end server-side latency (parse → response written).
+    pub latency: LatencyHisto,
+    /// Time requests spent queued before their batch launched.
+    pub queue_wait: LatencyHisto,
+    /// Engine execution time per batch.
+    pub exec: LatencyHisto,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            started: Instant::now(),
+            requests_total: AtomicU64::new(0),
+            responses_ok: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            engine_errors: AtomicU64::new(0),
+            batches_total: AtomicU64::new(0),
+            batch_rows_total: AtomicU64::new(0),
+            latency: LatencyHisto::default(),
+            queue_wait: LatencyHisto::default(),
+            exec: LatencyHisto::default(),
+        }
+    }
+
+    pub fn record_batch(&self, rows: usize, exec: Duration) {
+        self.batches_total.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows_total.fetch_add(rows as u64, Ordering::Relaxed);
+        self.exec.record(exec);
+    }
+
+    /// Mean real rows per program invocation — the dynamic-batching "is it
+    /// actually batching" number (1.0 = no amortization).
+    pub fn batch_fill_ratio(&self) -> f64 {
+        let b = self.batches_total.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_rows_total.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// The `/statz` document. `queue_depth` is sampled by the caller (the
+    /// batcher owns it).
+    pub fn snapshot(&self, queue_depth: usize) -> Json {
+        let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("uptime_s", Json::Num(round3(self.uptime().as_secs_f64()))),
+            (
+                "requests",
+                Json::obj(vec![
+                    ("total", g(&self.requests_total)),
+                    ("ok", g(&self.responses_ok)),
+                    ("bad", g(&self.bad_requests)),
+                    ("rejected_full", g(&self.rejected_full)),
+                    ("timeouts", g(&self.timeouts)),
+                    ("engine_errors", g(&self.engine_errors)),
+                ]),
+            ),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("depth", Json::Num(queue_depth as f64)),
+                    ("wait", self.queue_wait.to_json()),
+                ]),
+            ),
+            (
+                "batches",
+                Json::obj(vec![
+                    ("total", g(&self.batches_total)),
+                    ("rows", g(&self.batch_rows_total)),
+                    ("fill_ratio", Json::Num(round3(self.batch_fill_ratio()))),
+                    ("exec", self.exec.to_json()),
+                ]),
+            ),
+            ("latency", self.latency.to_json()),
+        ])
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_cover() {
+        let mut prev = 0;
+        for us in [0u64, 10, 49, 50, 51, 100, 1_000, 10_000, 1_000_000, u64::MAX] {
+            let b = bucket_for(us);
+            assert!(b >= prev || us < 50, "bucket_for({us}) = {b} < {prev}");
+            assert!(b < BUCKETS);
+            prev = b;
+        }
+        assert_eq!(bucket_for(0), 0);
+        assert_eq!(bucket_for(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_bracket_samples() {
+        let h = LatencyHisto::default();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile_ms(0.50);
+        let p99 = h.quantile_ms(0.99);
+        // Bucket resolution is one RATIO (1.4×) step: generous brackets.
+        assert!((30.0..85.0).contains(&p50), "p50={p50}");
+        assert!(p99 >= 90.0, "p99={p99}");
+        assert!(p99 <= 200.0, "p99={p99}");
+        assert!(h.quantile_ms(1.0) >= p99);
+        assert!((h.mean_ms() - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histo_is_zero() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let s = ServeStats::new();
+        assert_eq!(s.batch_fill_ratio(), 0.0);
+        s.record_batch(4, Duration::from_millis(1));
+        s.record_batch(2, Duration::from_millis(1));
+        assert!((s.batch_fill_ratio() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let s = ServeStats::new();
+        s.requests_total.fetch_add(3, Ordering::Relaxed);
+        s.latency.record(Duration::from_micros(800));
+        let doc = s.snapshot(2).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.req("queue").unwrap().req("depth").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            parsed.req("requests").unwrap().req("total").unwrap().as_usize(),
+            Some(3)
+        );
+    }
+}

@@ -112,6 +112,29 @@ impl Args {
         }
     }
 
+    /// Shared `--port` parser (serve / loadgen / benches): validates the
+    /// 1..=65535 range, 0 allowed (ephemeral port, tests).
+    pub fn port(&self, default: u16) -> Result<u16> {
+        match self.str_opt("port") {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<u16>()
+                .with_context(|| format!("--port expects 0..=65535, got {s:?}")),
+        }
+    }
+
+    /// Shared `--threads` parser: a concurrency degree, must be >= 1.
+    /// Used by `serve` (HTTP handler threads), `loadgen` (concurrent
+    /// clients) and any future parallel subcommand — one spelling, one
+    /// validation, instead of per-command ad-hoc parsing.
+    pub fn threads(&self, default: usize) -> Result<usize> {
+        let n = self.usize("threads", default)?;
+        if n == 0 {
+            bail!("--threads must be >= 1");
+        }
+        Ok(n)
+    }
+
     /// Error on any flag that was never read (typo protection).
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
@@ -181,5 +204,21 @@ mod tests {
     fn negative_number_as_value() {
         let a = parse("x --gamma=-0.03");
         assert!((a.f64("gamma", 0.0).unwrap() + 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn port_and_threads_helpers() {
+        let a = parse("serve --port 9000 --threads 8");
+        assert_eq!(a.port(8787).unwrap(), 9000);
+        assert_eq!(a.threads(4).unwrap(), 8);
+        assert!(a.finish().is_ok());
+
+        let d = parse("serve");
+        assert_eq!(d.port(8787).unwrap(), 8787);
+        assert_eq!(d.threads(4).unwrap(), 4);
+
+        assert!(parse("x --port 70000").port(0).is_err());
+        assert!(parse("x --port -1").port(0).is_err());
+        assert!(parse("x --threads 0").threads(4).is_err());
     }
 }

@@ -1,0 +1,210 @@
+//! End-to-end tests of the serving subsystem over real TCP: server + HTTP
+//! pool + dynamic batcher + engine pool + loadgen client, using the
+//! deterministic mock engine so they run in plain `cargo test` with no
+//! artifacts or PJRT runtime. The PJRT engine swaps in behind the same
+//! `ScoreEngine` trait (`qtx serve` without `--mock`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qtx::serve::batcher::BatcherConfig;
+use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
+use qtx::serve::loadgen::{self, LoadgenConfig};
+use qtx::serve::protocol::{ScoreRequest, ScoreResponse};
+use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::util::json::Json;
+
+const SEQ_LEN: usize = 32;
+const MODEL_BATCH: usize = 8;
+
+fn mock_factory(cost: Duration) -> EngineFactory {
+    Arc::new(move || {
+        let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+        e.batch_cost = cost;
+        Ok(Box::new(e) as Box<dyn ScoreEngine>)
+    })
+}
+
+fn start_server(max_wait_ms: u64, cost: Duration) -> Server {
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0, // ephemeral
+        max_connections: 16,
+        engines: 1,
+        batcher: BatcherConfig {
+            max_batch: MODEL_BATCH,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: 128,
+        },
+        request_timeout: Duration::from_secs(10),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        describe: probe.describe(),
+    };
+    let s = Server::start(cfg, info, mock_factory(cost)).unwrap();
+    s.wait_ready(Duration::from_secs(10)).unwrap();
+    s
+}
+
+#[test]
+fn score_roundtrip_and_health() {
+    let server = start_server(2, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let health = c.get_json("/healthz").unwrap();
+    assert_eq!(health.req("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.req("seq_len").unwrap().as_usize(), Some(SEQ_LEN));
+    assert_eq!(health.req("max_batch").unwrap().as_usize(), Some(MODEL_BATCH));
+
+    let req = ScoreRequest { id: Some("t1".into()), tokens: vec![1, 2, 3, 4, 5], targets: None };
+    let (status, body) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = ScoreResponse::parse(&body).unwrap();
+    assert_eq!(resp.id.as_deref(), Some("t1"));
+    // causal mock: 4 next-token positions scored
+    assert_eq!(resp.row.count, 4.0);
+    assert!(resp.row.nll > 0.0 && resp.ppl() > 1.0);
+    assert!(resp.batch_size >= 1);
+
+    // Determinism: same tokens, same score (keep-alive, same connection).
+    let (_, body2) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    let resp2 = ScoreResponse::parse(&body2).unwrap();
+    assert_eq!(resp.row, resp2.row);
+
+    drop(c); // free the keep-alive handler before joining the server
+    server.stop();
+}
+
+#[test]
+fn bad_requests_get_400_not_500() {
+    let server = start_server(2, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let too_long = format!(r#"{{"tokens":[{}]}}"#, vec!["7"; SEQ_LEN + 1].join(","));
+    let cases: [(&str, &str); 4] = [
+        ("{}", "missing tokens"),
+        (r#"{"tokens":[1]}"#, "too short"),
+        (r#"{"tokens":"zap"}"#, "wrong type"),
+        (too_long.as_str(), "too long"),
+    ];
+    for (body, why) in cases {
+        let j = Json::parse(body).unwrap();
+        let (status, _) = c.request("POST", "/v1/score", Some(&j)).unwrap();
+        assert_eq!(status, 400, "{why}");
+    }
+    // Unknown route and wrong method.
+    let (status, _) = c.request("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = c.request("GET", "/v1/score", None).unwrap();
+    assert_eq!(status, 405);
+
+    drop(c);
+    server.stop();
+}
+
+/// The acceptance loop: concurrent closed-loop clients through the HTTP
+/// API; dynamic batching must demonstrably engage (fill ratio > 1).
+#[test]
+fn loadgen_roundtrip_batches_requests() {
+    // A visible per-dispatch cost so requests pile up while a batch runs.
+    let server = start_server(20, Duration::from_millis(4));
+    let addr = server.addr().to_string();
+
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: 4,
+        requests_per_client: 40,
+        vocab: 128,
+        seq_len: 0, // probe /healthz
+        seed: 7,
+        timeout: Duration::from_secs(10),
+    })
+    .unwrap();
+    assert_eq!(report.ok, 160, "errors: {}", report.errors);
+    assert_eq!(report.errors, 0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p99_ms >= report.p50_ms);
+
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let statz = c.get_json("/statz").unwrap();
+    let batches = statz.req("batches").unwrap();
+    let rows = batches.req("rows").unwrap().as_usize().unwrap();
+    let total = batches.req("total").unwrap().as_usize().unwrap();
+    let fill = batches.req("fill_ratio").unwrap().as_f64().unwrap();
+    assert_eq!(rows, 160, "every request scored exactly once");
+    assert!(total < rows, "some invocation carried >1 request (total={total})");
+    assert!(fill > 1.0, "dynamic batching engaged (fill_ratio={fill})");
+    assert_eq!(
+        statz.req("requests").unwrap().req("ok").unwrap().as_usize(),
+        Some(160)
+    );
+
+    drop(c);
+    server.stop();
+}
+
+/// Backpressure: a tiny queue + slow engine sheds load with 503 instead of
+/// queueing unboundedly.
+#[test]
+fn queue_full_returns_503() {
+    let probe = MockEngine::new(1, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        batcher: BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 1,
+        },
+        request_timeout: Duration::from_secs(10),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: 1,
+        vocab: 1024,
+        causal: probe.causal,
+        describe: probe.describe(),
+    };
+    let server = Server::start(
+        cfg,
+        info,
+        Arc::new(|| {
+            let mut e = MockEngine::new(1, SEQ_LEN);
+            e.batch_cost = Duration::from_millis(50);
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        }),
+    )
+    .unwrap();
+    server.wait_ready(Duration::from_secs(10)).unwrap();
+    let addr = server.addr().to_string();
+
+    // Flood with more concurrent requests than queue+engine can hold.
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+            let req = ScoreRequest { id: None, tokens: vec![i, i + 1, i + 2], targets: None };
+            let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+            status
+        }));
+    }
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(statuses.iter().any(|&s| s == 200), "{statuses:?}");
+    assert!(
+        statuses.iter().any(|&s| s == 503),
+        "expected some load shedding, got {statuses:?}"
+    );
+    assert!(statuses.iter().all(|&s| s == 200 || s == 503), "{statuses:?}");
+
+    server.stop();
+}

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (referenced from ROADMAP.md).
+#
+#   scripts/verify.sh            build + test + fmt + clippy
+#   scripts/verify.sh --fast     build + test only
+#
+# Requires the vendored rust toolchain; artifact-dependent integration
+# tests self-skip when `make artifacts` has not been run.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify.sh: cargo not found on PATH — this container lacks the rust" >&2
+    echo "toolchain; run on an image with the vendored rust_pallas toolchain." >&2
+    exit 1
+fi
+
+echo "== cargo build --release"
+cargo build --release
+
+echo "== cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" == "--fast" ]]; then
+    echo "verify.sh: OK (fast)"
+    exit 0
+fi
+
+echo "== cargo fmt --check"
+cargo fmt -- --check
+
+echo "== cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "verify.sh: OK"
