@@ -1,0 +1,51 @@
+# qtx — build/verify entry points (referenced from ROADMAP.md and CI).
+#
+#   make artifacts   compile AOT artifacts + train the tiny configs the
+#                    artifact-gated integration tests need (they self-skip
+#                    until this has run)
+#   make verify      tier-1 gate: build + test + fmt + clippy
+#   make fast        tier-1 gate without the lint passes
+#   make pytest      python compiler/kernel test suite
+#   make bench       serving bench; collects JSON lines into BENCH_serve.json
+#   make ci          local mirror of .github/workflows/ci.yml
+#   make clean       drop generated artifacts/runs (not target/)
+
+# bash + pipefail so `cargo bench | tee` failures fail the target.
+SHELL := /bin/bash
+.SHELLFLAGS := -o pipefail -ec
+
+ARTIFACTS ?= artifacts
+RUNS ?= runs
+STEPS ?= 200
+# The three configs the integration tests load (see rust/tests/integration.rs).
+CONFIGS ?= bert_tiny_softmax,opt_tiny_softmax,bert_tiny_gated_linear
+
+.PHONY: artifacts verify fast pytest bench ci clean
+
+artifacts:
+	cd python && python -m compile.aot --out-dir $(abspath $(ARTIFACTS)) --configs $(CONFIGS)
+	cargo build --release
+	./target/release/qtx train --config bert_tiny_softmax --steps $(STEPS) --seeds 0 \
+		--artifacts $(abspath $(ARTIFACTS)) --runs $(abspath $(RUNS))
+
+verify:
+	scripts/verify.sh
+
+fast:
+	scripts/verify.sh --fast
+
+pytest:
+	cd python && python -m pytest tests -q
+
+bench:
+	mkdir -p target
+	cargo bench --bench bench_serve | tee target/bench_serve.out
+	grep 'bench_serve JSON: ' target/bench_serve.out \
+		| sed 's/^bench_serve JSON: //' > BENCH_serve.json
+	@echo "wrote BENCH_serve.json ($$(wc -l < BENCH_serve.json) rows)"
+
+# Same jobs the workflow runs, in one command.
+ci: verify pytest bench
+
+clean:
+	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json

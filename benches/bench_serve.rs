@@ -1,64 +1,81 @@
-//! Serving throughput/latency: loadgen vs. server at batch sizes {1, 8, max}.
+//! Serving throughput/latency benches.
 //!
-//! Demonstrates the point of the dynamic batcher: with a per-dispatch
-//! dominated engine (exactly the PJRT profile — compile once, pay per
-//! launch), batched throughput must beat batch-size-1 throughput. Uses the
-//! deterministic mock engine by default so the bench runs anywhere; set
-//! QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch cost
-//! (default 3000µs ≈ a tiny-config serve_score invocation).
+//! Two sections, both on the deterministic mock engine (set
+//! QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch cost;
+//! default 3000µs ≈ a tiny-config serve_score invocation):
+//!
+//! 1. **Closed loop, batch-size sweep** (the PR-1 trajectory): loadgen vs.
+//!    server at max_batch {1, 8, 32}; batched throughput must beat
+//!    batch-size-1 (the point of batching at all).
+//! 2. **Open loop, policy × rate matrix** (the continuous-batching
+//!    trajectory): fixed vs. continuous at Poisson arrival rates
+//!    {0.5×, 1×, 2×} of engine capacity (max_batch / dispatch cost), plus
+//!    a row at 1.5× of the *fixed batcher's batch-formation capacity*
+//!    (max_batch / max_wait) — the convoy regime continuous batching
+//!    removes. Expect continuous to win queue-wait p95 below engine
+//!    saturation and to tie once both policies are backlog-bound past it.
 //!
 //! Run: cargo bench --bench bench_serve
-//! Env: QTX_BENCH_REQS     requests per client   (default 64)
-//!      QTX_BENCH_CLIENTS  concurrent clients    (default 8)
+//! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
+//!      QTX_BENCH_CLIENTS  closed-loop clients (default 8)
+//!      QTX_BENCH_SENDERS  open-loop sender pool (default 96)
 //!      QTX_BENCH_SERVE_COST_US  mock per-dispatch cost (default 3000)
 //!
-//! Output: a markdown table (the repo's bench idiom) plus one
-//! `bench_serve JSON: {...}` line per row for machine consumption.
+//! Output: markdown tables (the repo's bench idiom) plus one
+//! `bench_serve JSON: {...}` line per row — CI collects these lines into
+//! `BENCH_serve.json` as the perf trajectory (see Makefile `bench`).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use qtx::metrics::table::render;
-use qtx::serve::batcher::BatcherConfig;
+use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
-use qtx::serve::loadgen::{self, LoadgenConfig};
+use qtx::serve::loadgen::{self, LoadgenConfig, LoadgenReport};
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::util::json::Json;
 
 const SEQ_LEN: usize = 64;
-const MODEL_BATCH: usize = 32; // "max" — the static batch of the mock model
+const MODEL_BATCH: usize = 32; // closed-loop "max" — the mock model's static batch
+const MATRIX_BATCH: usize = 8; // open-loop matrix batch (keeps cell runtimes short)
+// Fill-seeking flush deadline for the matrix, deliberately >> dispatch cost
+// so the formation-capacity regime (8/20ms = 400 rps) sits well below
+// engine capacity (8/3ms ≈ 2667 rps at the default cost) instead of
+// overlapping it — the two regimes stay distinguishable for any sane
+// QTX_BENCH_SERVE_COST_US.
+const MATRIX_MAX_WAIT_MS: u64 = 20;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
-struct Row {
+fn start_server(
+    policy: BatchPolicy,
     max_batch: usize,
-    rps: f64,
-    p50: f64,
-    p95: f64,
-    p99: f64,
-    fill: f64,
-}
-
-fn bench_one(max_batch: usize, clients: usize, reqs: usize, cost_us: u64) -> anyhow::Result<Row> {
+    max_wait_ms: u64,
+    queue_cap: usize,
+    max_connections: usize,
+    cost_us: u64,
+) -> anyhow::Result<Server> {
     let factory: EngineFactory = Arc::new(move || {
-        let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+        let mut e = MockEngine::new(max_batch.max(MODEL_BATCH), SEQ_LEN);
         e.batch_cost = Duration::from_micros(cost_us);
         Ok(Box::new(e) as Box<dyn ScoreEngine>)
     });
-    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let probe = MockEngine::new(max_batch.max(MODEL_BATCH), SEQ_LEN);
     let server = Server::start(
         ServerConfig {
             host: "127.0.0.1".into(),
             port: 0,
-            max_connections: clients + 8,
+            max_connections,
             engines: 1,
+            policy,
             batcher: BatcherConfig {
                 max_batch,
-                max_wait: Duration::from_millis(2),
-                queue_cap: 1024,
+                max_wait: Duration::from_millis(max_wait_ms),
+                queue_cap,
             },
+            admit_window: Duration::ZERO,
             request_timeout: Duration::from_secs(60),
         },
         EngineInfo {
@@ -71,8 +88,36 @@ fn bench_one(max_batch: usize, clients: usize, reqs: usize, cost_us: u64) -> any
         factory,
     )?;
     server.wait_ready(Duration::from_secs(10))?;
-    let addr = server.addr().to_string();
+    Ok(server)
+}
 
+fn fill_ratio(addr: &str) -> anyhow::Result<f64> {
+    let mut c = Client::connect(addr, Duration::from_secs(5))?;
+    let statz = c.get_json("/statz")?;
+    Ok(statz.req("batches")?.req("fill_ratio")?.as_f64().unwrap_or(0.0))
+}
+
+// ---------------------------------------------------------------------------
+// Section 1: closed loop, batch-size sweep (fixed policy, PR-1 trajectory)
+// ---------------------------------------------------------------------------
+
+struct ClosedRow {
+    max_batch: usize,
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    fill: f64,
+}
+
+fn bench_closed(
+    max_batch: usize,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<ClosedRow> {
+    let server = start_server(BatchPolicy::Fixed, max_batch, 2, 1024, clients + 8, cost_us)?;
+    let addr = server.addr().to_string();
     let report = loadgen::run(&LoadgenConfig {
         addr: addr.clone(),
         clients,
@@ -81,19 +126,12 @@ fn bench_one(max_batch: usize, clients: usize, reqs: usize, cost_us: u64) -> any
         seq_len: SEQ_LEN,
         seed: 42,
         timeout: Duration::from_secs(60),
+        open_rate_rps: None,
     })?;
     anyhow::ensure!(report.errors == 0, "loadgen errors: {}", report.errors);
-
-    let mut c = Client::connect(&addr, Duration::from_secs(5))?;
-    let statz = c.get_json("/statz")?;
-    let fill = statz
-        .req("batches")?
-        .req("fill_ratio")?
-        .as_f64()
-        .unwrap_or(0.0);
-    drop(c);
+    let fill = fill_ratio(&addr)?;
     server.stop();
-    Ok(Row {
+    Ok(ClosedRow {
         max_batch,
         rps: report.throughput_rps,
         p50: report.p50_ms,
@@ -103,21 +141,74 @@ fn bench_one(max_batch: usize, clients: usize, reqs: usize, cost_us: u64) -> any
     })
 }
 
+// ---------------------------------------------------------------------------
+// Section 2: open loop, policy × arrival-rate matrix
+// ---------------------------------------------------------------------------
+
+struct MatrixRow {
+    policy: BatchPolicy,
+    label: String,
+    rate: f64,
+    report: LoadgenReport,
+    fill: f64,
+}
+
+fn bench_open(
+    policy: BatchPolicy,
+    label: &str,
+    rate: f64,
+    senders: usize,
+    cost_us: u64,
+) -> anyhow::Result<MatrixRow> {
+    let server = start_server(
+        policy,
+        MATRIX_BATCH,
+        MATRIX_MAX_WAIT_MS,
+        4096,
+        senders + 8,
+        cost_us,
+    )?;
+    let addr = server.addr().to_string();
+    // ~1 s of offered load per cell, bounded so overload cells stay short.
+    let total = (rate as usize).clamp(256, 4096);
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: senders,
+        // Round the per-sender share up; the schedule length is what counts.
+        requests_per_client: total / senders + 1,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: Some(rate),
+    })?;
+    anyhow::ensure!(report.ok > 0, "no successful requests ({} errors)", report.errors);
+    let fill = fill_ratio(&addr)?;
+    server.stop();
+    Ok(MatrixRow { policy, label: label.to_string(), rate, report, fill })
+}
+
 fn main() -> anyhow::Result<()> {
     let reqs = env_usize("QTX_BENCH_REQS", 64);
     let clients = env_usize("QTX_BENCH_CLIENTS", 8);
+    // Open-loop senders: must cover offered rate × latency or lag_p95_ms
+    // shows the pool saturating (expected in the 2x overload cell).
+    let senders = env_usize("QTX_BENCH_SENDERS", 96).max(1);
     let cost_us = env_usize("QTX_BENCH_SERVE_COST_US", 3000) as u64;
 
+    // -- closed loop ---------------------------------------------------------
     let mut rows = Vec::new();
     for max_batch in [1usize, 8, MODEL_BATCH] {
-        let r = bench_one(max_batch, clients, reqs, cost_us)?;
+        let r = bench_closed(max_batch, clients, reqs, cost_us)?;
         eprintln!(
-            "[bench_serve] max_batch={}: {:.1} req/s, p50 {:.2} ms, fill {:.2}",
+            "[bench_serve] closed max_batch={}: {:.1} req/s, p50 {:.2} ms, fill {:.2}",
             r.max_batch, r.rps, r.p50, r.fill
         );
         println!(
             "bench_serve JSON: {}",
             Json::obj(vec![
+                ("section", Json::Str("closed_batch_sweep".into())),
+                ("policy", Json::Str("fixed".into())),
                 ("max_batch", Json::Num(r.max_batch as f64)),
                 ("clients", Json::Num(clients as f64)),
                 ("requests", Json::Num((clients * reqs) as f64)),
@@ -163,6 +254,84 @@ fn main() -> anyhow::Result<()> {
         "\nbatched vs bs=1 speedup: {:.1}x (fill ratio {:.2})",
         best / bs1,
         rows.last().unwrap().fill
+    );
+
+    // -- open-loop policy × rate matrix --------------------------------------
+    let engine_cap = MATRIX_BATCH as f64 / (cost_us as f64 / 1e6);
+    let formation_cap = MATRIX_BATCH as f64 / (MATRIX_MAX_WAIT_MS as f64 / 1e3);
+    let cells: Vec<(String, f64)> = vec![
+        ("1.5x formation".into(), 1.5 * formation_cap),
+        ("0.5x engine".into(), 0.5 * engine_cap),
+        ("1.0x engine".into(), 1.0 * engine_cap),
+        ("2.0x engine".into(), 2.0 * engine_cap),
+    ];
+    let mut matrix = Vec::new();
+    for (label, rate) in &cells {
+        for policy in [BatchPolicy::Fixed, BatchPolicy::Continuous] {
+            let row = bench_open(policy, label, *rate, senders, cost_us)?;
+            eprintln!(
+                "[bench_serve] open {} {}: q p95 {:.2} ms, {:.1} req/s ({} shed)",
+                row.policy.name(),
+                row.label,
+                row.report.queue_p95_ms,
+                row.report.throughput_rps,
+                row.report.errors
+            );
+            println!(
+                "bench_serve JSON: {}",
+                Json::obj(vec![
+                    ("section", Json::Str("open_policy_matrix".into())),
+                    ("policy", Json::Str(row.policy.name().into())),
+                    ("rate_label", Json::Str(row.label.clone())),
+                    ("offered_rps", Json::Num(row.rate)),
+                    ("engine_capacity_rps", Json::Num(engine_cap)),
+                    ("formation_capacity_rps", Json::Num(formation_cap)),
+                    ("ok", Json::Num(row.report.ok as f64)),
+                    ("errors", Json::Num(row.report.errors as f64)),
+                    ("throughput_rps", Json::Num(row.report.throughput_rps)),
+                    ("p50_ms", Json::Num(row.report.p50_ms)),
+                    ("p95_ms", Json::Num(row.report.p95_ms)),
+                    ("p99_ms", Json::Num(row.report.p99_ms)),
+                    ("queue_p50_ms", Json::Num(row.report.queue_p50_ms)),
+                    ("queue_p95_ms", Json::Num(row.report.queue_p95_ms)),
+                    ("lag_p95_ms", Json::Num(row.report.lag_p95_ms)),
+                    ("batch_fill_ratio", Json::Num(row.fill)),
+                ])
+            );
+            matrix.push(row);
+        }
+    }
+
+    let mtable: Vec<Vec<String>> = matrix
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                r.policy.name().to_string(),
+                format!("{:.0}", r.rate),
+                format!("{:.1}", r.report.throughput_rps),
+                format!("{:.2}", r.report.queue_p50_ms),
+                format!("{:.2}", r.report.queue_p95_ms),
+                format!("{:.2}", r.report.p95_ms),
+                format!("{:.2}", r.fill),
+                r.report.errors.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## fixed vs continuous — open-loop Poisson arrivals (batch {MATRIX_BATCH}, \
+         max_wait {MATRIX_MAX_WAIT_MS} ms, {cost_us}µs/dispatch, engine cap {engine_cap:.0} req/s)\n\n{}",
+        render(
+            &[
+                "arrival rate", "policy", "req/s off.", "req/s", "q p50 ms", "q p95 ms",
+                "p95 ms", "fill", "shed"
+            ],
+            &mtable
+        )
+    );
+    println!(
+        "\ncontinuous wins queue-wait below engine saturation; past it both policies are \
+         backlog-bound (see ROADMAP Serving)."
     );
     Ok(())
 }

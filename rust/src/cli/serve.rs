@@ -6,11 +6,16 @@
 //! qtx train --config bert_tiny_softmax --steps 1000 --seeds 0
 //! qtx serve --config bert_tiny_softmax --steps 1000 --seeds 0 --port 8787
 //! qtx loadgen --port 8787 --threads 4 --requests 64
+//! qtx loadgen --port 8787 --open-loop --rate 500 --threads 32
 //! ```
 //!
 //! `serve` resolves the checkpoint with the same recipe flags as `train`
 //! (same run key), or takes an explicit `--ckpt`. `--mock` serves a
 //! deterministic artifact-free engine (demos, benches, smoke tests).
+//! `--batch-policy {continuous|fixed}` picks the batching discipline
+//! (slot-based continuous admission vs. the PR-1 flush-on-fill/deadline
+//! baseline); `--open-loop --rate R` switches loadgen to Poisson arrivals
+//! at `R` req/s — the client shape that exposes batching convoys.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -18,7 +23,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::cli::basic::{paths_from_args, spec_from_args};
-use crate::serve::batcher::BatcherConfig;
+use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
 use crate::serve::loadgen::{run as loadgen_run, render_report, LoadgenConfig};
 use crate::serve::server::{EngineInfo, Server, ServerConfig};
@@ -32,12 +37,16 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         // --threads caps concurrent connections (one handler thread each).
         max_connections: args.threads(64)?,
         engines: args.usize("engines", 1)?,
+        // Continuous (slot-based) batching is the default; `fixed` keeps the
+        // flush-on-fill/deadline micro-batcher as a comparison baseline.
+        policy: BatchPolicy::parse(&args.str("batch-policy", "continuous"))?,
         batcher: BatcherConfig {
             // max_batch 0 = "use the model's static batch"; resolved below.
             max_batch: args.usize("max-batch", 0)?,
             max_wait: Duration::from_millis(args.u64("max-wait-ms", 5)?),
             queue_cap: args.usize("queue-cap", 256)?,
         },
+        admit_window: Duration::from_micros(args.u64("admit-window-us", 0)?),
         request_timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
     })
 }
@@ -136,6 +145,14 @@ pub fn serve(args: &Args) -> Result<()> {
 
 pub fn loadgen(args: &Args) -> Result<()> {
     let host = args.str("host", "127.0.0.1");
+    let open_loop = args.bool("open-loop", false)?;
+    let rate = args.f64("rate", 0.0)?;
+    if open_loop && rate <= 0.0 {
+        anyhow::bail!("--open-loop needs --rate REQS_PER_SEC > 0");
+    }
+    if !open_loop && rate > 0.0 {
+        anyhow::bail!("--rate only applies with --open-loop (closed loop is self-pacing)");
+    }
     let cfg = LoadgenConfig {
         addr: format!("{host}:{}", args.port(8787)?),
         clients: args.threads(4)?,
@@ -144,6 +161,7 @@ pub fn loadgen(args: &Args) -> Result<()> {
         seq_len: args.usize("seq-len", 0)?,
         seed: args.u64("seed", 0)?,
         timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
+        open_rate_rps: open_loop.then_some(rate),
     };
     args.finish()?;
     let report = loadgen_run(&cfg)?;

@@ -64,10 +64,12 @@ commands:
   train                 train one model       (--config, --steps, --seed, --gamma, ...)
   eval                  FP + W8A8 eval of a cached/trained run
   serve                 dynamic-batching INT8 inference server over a trained run
-                        (--port, --threads, --engines, --max-batch, --max-wait-ms,
+                        (--port, --threads, --engines, --batch-policy {continuous|fixed},
+                         --max-batch, --max-wait-ms FIXED_FLUSH, --admit-window-us,
                          --ckpt PATH | same recipe flags as train; --mock for no-artifact)
-  loadgen               closed-loop HTTP load generator against a running server
-                        (--host, --port, --threads CLIENTS, --requests N)
+  loadgen               HTTP load generator against a running server
+                        (--host, --port, --threads CLIENTS, --requests N;
+                         --open-loop --rate REQ_PER_S for Poisson arrivals)
   analyze|fig1|fig2|fig3  outlier & attention analysis dumps
   table1..table10       regenerate the paper table  (see DESIGN.md index)
   fig6 fig7             regenerate the paper figure sweeps

@@ -1,20 +1,69 @@
-//! Dynamic micro-batching: a bounded FIFO queue with a max-batch-size +
-//! max-wait-deadline flush policy.
+//! Request batching policies: the fixed micro-batcher and the slot-based
+//! continuous batcher.
 //!
-//! HTTP handler threads [`Batcher::submit`] single requests; engine worker
-//! threads [`Batcher::take_batch`] groups of up to `max_batch`. A batch
-//! launches as soon as it is full, or once its *oldest* member has waited
-//! `max_wait` — so a lone request is never starved waiting for company, and
-//! under load single requests amortize into full static-shape program
-//! invocations.
+//! **Fixed** ([`Batcher`]): a bounded FIFO with a max-batch-size +
+//! max-wait-deadline flush policy. HTTP handler threads [`Batcher::submit`]
+//! single requests; engine worker threads [`Batcher::take_batch`] groups of
+//! up to `max_batch`. A batch launches as soon as it is full, or once its
+//! *oldest* member has waited `max_wait`. The failure mode is the flush
+//! clock: at arrival rates past `max_batch / max_wait` (the batcher's
+//! *batch-formation capacity*) requests queue behind deadline flushes even
+//! while the engine sits idle with empty slots.
 //!
-//! The queue is generic over the item type (the server queues jobs carrying
-//! reply channels; tests queue integers) and deliberately knows nothing
-//! about engines or HTTP.
+//! **Continuous** ([`SlotPool`]): the engine pool owns persistent batch
+//! *slots* — one per row of the `serve_score` program's fixed batch
+//! dimension, `slots_per_worker` per engine worker. A request is admitted
+//! into the *next* dispatch of some engine the moment a slot frees, and a
+//! worker relaunches as soon as it is free and has at least one claimed
+//! slot (work-conserving; no deadline clock). Per-slot lifecycle:
+//!
+//! ```text
+//! free ──claim (submit / queue drain)──> claimed ──next_batch──> in_flight
+//!   ▲                                                                │
+//!   └──────────── release ◄── completing ◄──────── complete ◄────────┘
+//! ```
+//!
+//! An optional `admit_window` tops up partially-filled launches: a worker
+//! that frees with `0 < claimed < slots_per_worker` waits up to the window
+//! for more claims before dispatching. At sustained over-saturation this
+//! recovers the fill ratio of wait-for-full flushing; the default of zero
+//! keeps the pool strictly work-conserving (lowest latency below
+//! saturation, which is where continuous batching wins — past engine
+//! saturation every work-conserving policy is backlog-bound and equal).
+//!
+//! Both queues are generic over the item type (the server queues jobs
+//! carrying reply channels; tests queue integers) and deliberately know
+//! nothing about engines or HTTP.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Which batching policy a server runs (`qtx serve --batch-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Flush-on-fill / flush-on-deadline micro-batches ([`Batcher`]).
+    Fixed,
+    /// Slot-based continuous admission ([`SlotPool`]).
+    Continuous,
+}
+
+impl BatchPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<BatchPolicy> {
+        match s {
+            "fixed" => Ok(BatchPolicy::Fixed),
+            "continuous" => Ok(BatchPolicy::Continuous),
+            other => anyhow::bail!("unknown batch policy {other:?} (want fixed|continuous)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchPolicy::Fixed => "fixed",
+            BatchPolicy::Continuous => "continuous",
+        }
+    }
+}
 
 /// Flush/capacity policy.
 #[derive(Debug, Clone, Copy)]
@@ -166,6 +215,353 @@ impl<T> Batcher<T> {
             }
             return Some(batch);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slot-based continuous batcher
+// ---------------------------------------------------------------------------
+
+/// Lifecycle of one engine batch row (see the module docs diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Unowned; the next admission may claim it.
+    Free,
+    /// Owned by a request awaiting its worker's next dispatch.
+    Claimed,
+    /// Riding a program invocation right now.
+    InFlight,
+    /// Invocation done; row result still being read out / replied.
+    Completing,
+    /// Owning worker died at startup ([`SlotPool::retire`]); never claimed.
+    Retired,
+}
+
+/// Point-in-time slot census for `/statz` (and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotOccupancy {
+    pub total: usize,
+    pub free: usize,
+    pub claimed: usize,
+    pub in_flight: usize,
+    pub completing: usize,
+    /// Slots of retired (startup-failed) workers — permanently out of play.
+    pub retired: usize,
+}
+
+/// Sizing/limits for a [`SlotPool`].
+#[derive(Debug, Clone, Copy)]
+pub struct SlotConfig {
+    /// Engine workers; each owns a contiguous range of slots.
+    pub workers: usize,
+    /// Slots per worker — the `serve_score` program's static batch rows.
+    pub slots_per_worker: usize,
+    /// Bound on requests waiting for a slot; `submit` rejects beyond this.
+    pub queue_cap: usize,
+    /// Top-up window for partially-filled launches (0 = work-conserving).
+    pub admit_window: Duration,
+}
+
+/// One admitted request: which slot it holds and when it claimed it.
+#[derive(Debug)]
+pub struct SlotAssignment<T> {
+    /// Global slot id (`worker * slots_per_worker + row`).
+    pub slot: usize,
+    /// Row offset inside the owning worker's batch.
+    pub row: usize,
+    pub queued: Queued<T>,
+    /// When the request claimed the slot (admission instant).
+    pub claimed_at: Instant,
+}
+
+impl<T> SlotAssignment<T> {
+    /// Time spent waiting for a slot (submit → claim). Zero when a free
+    /// slot existed at submission.
+    pub fn admission_wait(&self) -> Duration {
+        self.claimed_at.saturating_duration_since(self.queued.enqueued)
+    }
+}
+
+/// What an engine worker dispatches: its claimed slots, in claim (FIFO)
+/// order. Never empty, never longer than `slots_per_worker`.
+#[derive(Debug)]
+pub struct BatchView<T> {
+    pub worker: usize,
+    pub assignments: Vec<SlotAssignment<T>>,
+}
+
+struct SlotInner<T> {
+    /// Requests that found no free slot (FIFO; drains into freed slots).
+    queue: VecDeque<Queued<T>>,
+    /// Per-worker claimed requests in claim order.
+    claimed: Vec<VecDeque<SlotAssignment<T>>>,
+    /// State of every slot; index = worker * slots_per_worker + row.
+    slots: Vec<SlotState>,
+    /// Per-worker slot ids currently in flight / completing.
+    in_flight: Vec<Vec<usize>>,
+    completing: Vec<Vec<usize>>,
+    closed: bool,
+}
+
+/// The continuous batcher: a slot allocator + bounded admission queue.
+///
+/// Admission order is strictly FIFO: a request is claimed directly only
+/// when no earlier request is still queued, and the queue drains from the
+/// front. Claims prefer idle workers (they launch immediately), then the
+/// lowest-index busy worker with a free slot (its forming batch fills
+/// first, maximizing amortization).
+pub struct SlotPool<T> {
+    cfg: SlotConfig,
+    inner: Mutex<SlotInner<T>>,
+    /// Signalled on claim, release and close.
+    notify: Condvar,
+}
+
+impl<T> SlotPool<T> {
+    pub fn new(cfg: SlotConfig) -> SlotPool<T> {
+        assert!(cfg.workers >= 1, "workers must be >= 1");
+        assert!(cfg.slots_per_worker >= 1, "slots_per_worker must be >= 1");
+        assert!(cfg.queue_cap >= 1, "queue_cap must be >= 1");
+        SlotPool {
+            cfg,
+            inner: Mutex::new(SlotInner {
+                queue: VecDeque::new(),
+                claimed: (0..cfg.workers).map(|_| VecDeque::new()).collect(),
+                slots: vec![SlotState::Free; cfg.workers * cfg.slots_per_worker],
+                in_flight: vec![Vec::new(); cfg.workers],
+                completing: vec![Vec::new(); cfg.workers],
+                closed: false,
+            }),
+            notify: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SlotConfig {
+        &self.cfg
+    }
+
+    /// Pick the worker whose next dispatch the request should join: an idle
+    /// worker launches it immediately; otherwise the lowest busy worker
+    /// with room. Returns the (worker, slot) to claim.
+    fn pick_slot(&self, inner: &SlotInner<T>) -> Option<(usize, usize)> {
+        let spw = self.cfg.slots_per_worker;
+        let mut best: Option<(bool, usize)> = None; // (busy, worker)
+        for w in 0..self.cfg.workers {
+            let base = w * spw;
+            if !inner.slots[base..base + spw].contains(&SlotState::Free) {
+                continue;
+            }
+            let busy = !inner.in_flight[w].is_empty() || !inner.completing[w].is_empty();
+            let better = match best {
+                None => true,
+                Some(b) => (busy, w) < b,
+            };
+            if better {
+                best = Some((busy, w));
+            }
+        }
+        let (_, w) = best?;
+        let base = w * spw;
+        let row = (0..spw).find(|&r| inner.slots[base + r] == SlotState::Free)?;
+        Some((w, base + row))
+    }
+
+    /// Move one request into a slot. Caller picked the slot.
+    fn claim(&self, inner: &mut SlotInner<T>, worker: usize, slot: usize, queued: Queued<T>) {
+        debug_assert_eq!(inner.slots[slot], SlotState::Free);
+        inner.slots[slot] = SlotState::Claimed;
+        inner.claimed[worker].push_back(SlotAssignment {
+            slot,
+            row: slot - worker * self.cfg.slots_per_worker,
+            queued,
+            claimed_at: Instant::now(),
+        });
+    }
+
+    /// Drain the admission queue into free slots, FIFO. Returns whether any
+    /// claim happened (callers then wake waiting workers).
+    fn drain_queue(&self, inner: &mut SlotInner<T>) -> bool {
+        let mut any = false;
+        while !inner.queue.is_empty() {
+            let Some((w, slot)) = self.pick_slot(inner) else { break };
+            let queued = inner.queue.pop_front().unwrap();
+            self.claim(inner, w, slot, queued);
+            any = true;
+        }
+        any
+    }
+
+    /// Enqueue one item; non-blocking. Claims a slot immediately when one
+    /// is free and no earlier request is waiting (FIFO admission).
+    pub fn submit(&self, item: T) -> Result<(), Rejected<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(Rejected::Closed(item));
+        }
+        let queued = Queued { item, enqueued: Instant::now() };
+        if inner.queue.is_empty() {
+            if let Some((w, slot)) = self.pick_slot(&inner) {
+                self.claim(&mut inner, w, slot, queued);
+                drop(inner);
+                self.notify.notify_all();
+                return Ok(());
+            }
+        }
+        if inner.queue.len() >= self.cfg.queue_cap {
+            let Queued { item, .. } = queued;
+            return Err(Rejected::Full(item));
+        }
+        inner.queue.push_back(queued);
+        drop(inner);
+        // No worker can be waiting here (a waiting worker has free slots,
+        // which the claim path would have used), but notify is cheap and
+        // keeps this correct under future policy changes.
+        self.notify.notify_all();
+        Ok(())
+    }
+
+    /// Requests waiting for a slot (for `/statz`).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Slot census (for `/statz` and tests).
+    pub fn occupancy(&self) -> SlotOccupancy {
+        let inner = self.inner.lock().unwrap();
+        let mut occ = SlotOccupancy {
+            total: inner.slots.len(),
+            free: 0,
+            claimed: 0,
+            in_flight: 0,
+            completing: 0,
+            retired: 0,
+        };
+        for s in &inner.slots {
+            match s {
+                SlotState::Free => occ.free += 1,
+                SlotState::Claimed => occ.claimed += 1,
+                SlotState::InFlight => occ.in_flight += 1,
+                SlotState::Completing => occ.completing += 1,
+                SlotState::Retired => occ.retired += 1,
+            }
+        }
+        occ
+    }
+
+    /// Close the pool: queued and claimed work still drains; new `submit`s
+    /// are rejected; workers get `None` once nothing is left for them.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    /// Remove a worker that will never serve (its engine failed to
+    /// construct): its slots leave the allocation pool and any requests it
+    /// had already claimed re-enter the *front* of the admission queue, in
+    /// claim order, for the surviving workers. Without this, the dead
+    /// worker's slots would silently absorb admissions that nothing ever
+    /// dispatches.
+    pub fn retire(&self, worker: usize) {
+        let spw = self.cfg.slots_per_worker;
+        let mut inner = self.inner.lock().unwrap();
+        // Only meaningful before the worker ever dispatched.
+        debug_assert!(inner.in_flight[worker].is_empty());
+        debug_assert!(inner.completing[worker].is_empty());
+        for slot in worker * spw..(worker + 1) * spw {
+            inner.slots[slot] = SlotState::Retired;
+        }
+        let reclaimed: Vec<SlotAssignment<T>> = inner.claimed[worker].drain(..).collect();
+        for a in reclaimed.into_iter().rev() {
+            inner.queue.push_front(a.queued);
+        }
+        self.drain_queue(&mut inner);
+        drop(inner);
+        self.notify.notify_all();
+    }
+
+    /// Block until this worker has at least one claimed slot, mark those
+    /// slots in-flight and hand them over; `None` once the pool is closed
+    /// and nothing can ever reach this worker again.
+    ///
+    /// Work-conserving by default: an idle worker launches on the first
+    /// claim. With a nonzero `admit_window`, a partially-filled launch
+    /// waits up to the window (from readiness, not request age) for
+    /// top-up claims.
+    pub fn next_batch(&self, worker: usize) -> Option<BatchView<T>> {
+        let spw = self.cfg.slots_per_worker;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if self.drain_queue(&mut inner) {
+                self.notify.notify_all();
+            }
+            if !inner.claimed[worker].is_empty() {
+                if !self.cfg.admit_window.is_zero() && inner.claimed[worker].len() < spw {
+                    inner = self.top_up(inner, worker);
+                }
+                let assignments: Vec<SlotAssignment<T>> =
+                    inner.claimed[worker].drain(..).collect();
+                for a in &assignments {
+                    debug_assert_eq!(inner.slots[a.slot], SlotState::Claimed);
+                    inner.slots[a.slot] = SlotState::InFlight;
+                    inner.in_flight[worker].push(a.slot);
+                }
+                return Some(BatchView { worker, assignments });
+            }
+            if inner.closed && inner.queue.is_empty() {
+                return None;
+            }
+            inner = self.notify.wait(inner).unwrap();
+        }
+    }
+
+    /// Hold a partially-filled launch open for up to `admit_window`.
+    fn top_up<'a>(
+        &'a self,
+        mut inner: std::sync::MutexGuard<'a, SlotInner<T>>,
+        worker: usize,
+    ) -> std::sync::MutexGuard<'a, SlotInner<T>> {
+        let spw = self.cfg.slots_per_worker;
+        let deadline = Instant::now() + self.cfg.admit_window;
+        loop {
+            if inner.claimed[worker].len() >= spw || inner.closed {
+                return inner;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return inner;
+            }
+            let (guard, _) = self.notify.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if self.drain_queue(&mut inner) {
+                self.notify.notify_all();
+            }
+        }
+    }
+
+    /// The worker's dispatch returned: its in-flight slots are now
+    /// completing (results being read out / replied, not yet reusable).
+    pub fn complete(&self, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let moved: Vec<usize> = inner.in_flight[worker].drain(..).collect();
+        for slot in moved {
+            debug_assert_eq!(inner.slots[slot], SlotState::InFlight);
+            inner.slots[slot] = SlotState::Completing;
+            inner.completing[worker].push(slot);
+        }
+    }
+
+    /// Replies sent: free the worker's completing slots and admit waiting
+    /// requests into them immediately.
+    pub fn release(&self, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let moved: Vec<usize> = inner.completing[worker].drain(..).collect();
+        for slot in moved {
+            debug_assert_eq!(inner.slots[slot], SlotState::Completing);
+            inner.slots[slot] = SlotState::Free;
+        }
+        self.drain_queue(&mut inner);
+        drop(inner);
+        self.notify.notify_all();
     }
 }
 
@@ -350,5 +746,287 @@ mod tests {
             (0..4).flat_map(|t| (0..50).map(move |i| t * 1000 + i)).collect();
         want.sort_unstable();
         assert_eq!(got, want);
+    }
+
+    // -- slot pool ----------------------------------------------------------
+
+    fn slot_cfg(workers: usize, spw: usize, cap: usize) -> SlotConfig {
+        SlotConfig {
+            workers,
+            slots_per_worker: spw,
+            queue_cap: cap,
+            admit_window: Duration::ZERO,
+        }
+    }
+
+    /// One recorded dispatch: (worker, item ids in view order, row ids).
+    type ViewLog = Vec<(usize, Vec<usize>, Vec<usize>)>;
+
+    /// Drain the pool from worker threads until close; log every view.
+    fn run_slot_workers(pool: &Arc<SlotPool<usize>>, workers: usize) -> Arc<Mutex<ViewLog>> {
+        let log: Arc<Mutex<ViewLog>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let pool = pool.clone();
+            let log = log.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(view) = pool.next_batch(w) {
+                    assert_eq!(view.worker, w);
+                    let items: Vec<usize> =
+                        view.assignments.iter().map(|a| a.queued.item).collect();
+                    let rows: Vec<usize> = view.assignments.iter().map(|a| a.row).collect();
+                    pool.complete(w);
+                    log.lock().unwrap().push((w, items, rows));
+                    pool.release(w);
+                }
+            }));
+        }
+        // Workers exit once the pool is closed and drained; joining here
+        // guarantees every view is logged before the caller reads the log.
+        for h in handles {
+            h.join().unwrap();
+        }
+        log
+    }
+
+    #[test]
+    fn slot_lifecycle_and_occupancy() {
+        let pool: SlotPool<usize> = SlotPool::new(slot_cfg(1, 4, 8));
+        for i in 0..3 {
+            pool.submit(i).unwrap();
+        }
+        let occ = pool.occupancy();
+        assert_eq!((occ.total, occ.claimed, occ.free), (4, 3, 1));
+
+        let view = pool.next_batch(0).unwrap();
+        assert_eq!(view.assignments.len(), 3);
+        assert_eq!(pool.occupancy().in_flight, 3);
+        // Rows are distinct and inside the worker's batch.
+        let mut rows: Vec<usize> = view.assignments.iter().map(|a| a.row).collect();
+        rows.sort_unstable();
+        rows.dedup();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|&r| r < 4));
+
+        // While in flight, new submissions claim the remaining free slot and
+        // then spill to the admission queue.
+        pool.submit(10).unwrap();
+        pool.submit(11).unwrap();
+        assert_eq!(pool.occupancy().claimed, 1);
+        assert_eq!(pool.depth(), 1);
+
+        pool.complete(0);
+        assert_eq!(pool.occupancy().completing, 3);
+        // Completing slots are not reusable yet: the queue must not drain.
+        assert_eq!(pool.depth(), 1);
+        pool.release(0);
+        // Release freed 3 slots and admitted the queued request.
+        assert_eq!(pool.depth(), 0);
+        assert_eq!(pool.occupancy().claimed, 2);
+
+        let view = pool.next_batch(0).unwrap();
+        assert_eq!(
+            view.assignments.iter().map(|a| a.queued.item).collect::<Vec<_>>(),
+            vec![10, 11],
+            "claim order is FIFO"
+        );
+        // 10 claimed a free slot at submit; 11 waited in the admission queue
+        // until release — its admission wait spans the complete/release turn.
+        assert!(
+            view.assignments[1].admission_wait() >= view.assignments[0].admission_wait(),
+            "queued request should show the longer admission wait"
+        );
+    }
+
+    #[test]
+    fn slot_rejects_full_and_closed() {
+        let pool: SlotPool<usize> = SlotPool::new(slot_cfg(1, 1, 1));
+        pool.submit(0).unwrap(); // claims the only slot
+        pool.submit(1).unwrap(); // queues
+        match pool.submit(2) {
+            Err(Rejected::Full(2)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        pool.close();
+        match pool.submit(3) {
+            Err(Rejected::Closed(3)) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Close still drains: slot 0 then the queued item.
+        assert_eq!(pool.next_batch(0).unwrap().assignments[0].queued.item, 0);
+        pool.complete(0);
+        pool.release(0);
+        assert_eq!(pool.next_batch(0).unwrap().assignments[0].queued.item, 1);
+        pool.complete(0);
+        pool.release(0);
+        assert!(pool.next_batch(0).is_none());
+    }
+
+    #[test]
+    fn slot_close_wakes_blocked_worker() {
+        let pool: Arc<SlotPool<usize>> = Arc::new(SlotPool::new(slot_cfg(2, 2, 4)));
+        let p2 = pool.clone();
+        let h = std::thread::spawn(move || p2.next_batch(1));
+        std::thread::sleep(Duration::from_millis(20));
+        pool.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    /// Property: dispatch order equals submission order on a single worker
+    /// (FIFO admission fairness), views are bounded and rows in-range.
+    #[test]
+    fn prop_slot_fifo_single_worker() {
+        crate::util::proptest::check(
+            "slot_fifo_single_worker",
+            |rng| {
+                let spw = 1 + rng.below(6) as usize;
+                let n_items = rng.below(40) as usize;
+                (spw, n_items)
+            },
+            |&(spw, n_items)| {
+                let pool: Arc<SlotPool<usize>> =
+                    Arc::new(SlotPool::new(slot_cfg(1, spw, n_items.max(1))));
+                let submitter = {
+                    let pool = pool.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..n_items {
+                            while matches!(pool.submit(i), Err(Rejected::Full(_))) {
+                                std::thread::yield_now();
+                            }
+                        }
+                        pool.close();
+                    })
+                };
+                let log = run_slot_workers(&pool, 1);
+                submitter.join().map_err(|_| "submitter panicked".to_string())?;
+                let log = log.lock().unwrap();
+                let mut seen = Vec::new();
+                for (_, items, rows) in log.iter() {
+                    if items.is_empty() || items.len() > spw {
+                        return Err(format!("view of {} items (spw {spw})", items.len()));
+                    }
+                    if rows.iter().any(|&r| r >= spw) {
+                        return Err(format!("row out of range: {rows:?}"));
+                    }
+                    seen.extend(items.iter().copied());
+                }
+                if seen != (0..n_items).collect::<Vec<_>>() {
+                    return Err(format!("dispatch order broke FIFO: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: with several workers, every item is dispatched exactly once
+    /// (no slot double-assignment, no loss) and no view exceeds its worker's
+    /// slot range — under continuous concurrent arrivals (no starvation:
+    /// the close/join handshake only terminates when everything drained).
+    #[test]
+    fn prop_slot_no_double_assignment_multi_worker() {
+        crate::util::proptest::check(
+            "slot_multi_worker_exactly_once",
+            |rng| {
+                let workers = 1 + rng.below(3) as usize;
+                let spw = 1 + rng.below(4) as usize;
+                let n_items = rng.below(60) as usize;
+                (workers, spw, n_items)
+            },
+            |&(workers, spw, n_items)| {
+                let pool: Arc<SlotPool<usize>> =
+                    Arc::new(SlotPool::new(slot_cfg(workers, spw, 16)));
+                let submitter = {
+                    let pool = pool.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..n_items {
+                            while matches!(pool.submit(i), Err(Rejected::Full(_))) {
+                                std::thread::yield_now();
+                            }
+                        }
+                        pool.close();
+                    })
+                };
+                let log = run_slot_workers(&pool, workers);
+                submitter.join().map_err(|_| "submitter panicked".to_string())?;
+                let log = log.lock().unwrap();
+                let mut seen = Vec::new();
+                for (w, items, rows) in log.iter() {
+                    if items.len() > spw {
+                        return Err(format!("worker {w}: view of {} > spw {spw}", items.len()));
+                    }
+                    let mut uniq = rows.clone();
+                    uniq.sort_unstable();
+                    uniq.dedup();
+                    if uniq.len() != rows.len() {
+                        return Err(format!("worker {w}: duplicate rows {rows:?}"));
+                    }
+                    seen.extend(items.iter().copied());
+                }
+                seen.sort_unstable();
+                if seen != (0..n_items).collect::<Vec<_>>() {
+                    return Err(format!("items lost or duplicated: {seen:?}"));
+                }
+                let occ = pool.occupancy();
+                if occ.free != occ.total {
+                    return Err(format!("slots leaked: {occ:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// A retired worker's slots leave allocation and its claimed requests
+    /// re-queue (front, in order) for the survivors — startup failures must
+    /// not black-hole admissions.
+    #[test]
+    fn slot_retire_requeues_claims_for_survivors() {
+        let pool: SlotPool<usize> = SlotPool::new(slot_cfg(2, 2, 8));
+        // Both workers idle: claims prefer the lowest index, worker 0.
+        pool.submit(0).unwrap();
+        pool.submit(1).unwrap();
+        assert_eq!(pool.occupancy().claimed, 2);
+
+        pool.retire(0); // worker 0's engine "failed to construct"
+        let occ = pool.occupancy();
+        assert_eq!(occ.retired, 2);
+        // Its two claims moved straight into worker 1's slots, FIFO.
+        assert_eq!(occ.claimed, 2);
+        let view = pool.next_batch(1).unwrap();
+        assert_eq!(
+            view.assignments.iter().map(|a| a.queued.item).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        pool.complete(1);
+        pool.release(1);
+
+        // New submissions never land on the retired worker.
+        pool.submit(7).unwrap();
+        pool.submit(8).unwrap();
+        pool.submit(9).unwrap(); // 2 live slots claimed -> third queues
+        assert_eq!(pool.depth(), 1);
+        assert_eq!(pool.next_batch(1).unwrap().assignments.len(), 2);
+    }
+
+    #[test]
+    fn slot_admit_window_tops_up_partial_launch() {
+        let pool: Arc<SlotPool<usize>> = Arc::new(SlotPool::new(SlotConfig {
+            workers: 1,
+            slots_per_worker: 4,
+            queue_cap: 8,
+            admit_window: Duration::from_millis(500),
+        }));
+        pool.submit(0).unwrap();
+        let p2 = pool.clone();
+        let h = std::thread::spawn(move || p2.next_batch(0));
+        // The worker is now inside its admit window; late arrivals join.
+        std::thread::sleep(Duration::from_millis(50));
+        pool.submit(1).unwrap();
+        pool.submit(2).unwrap();
+        pool.submit(3).unwrap(); // fills the batch -> launches before the window ends
+        let view = h.join().unwrap().unwrap();
+        assert_eq!(
+            view.assignments.iter().map(|a| a.queued.item).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
     }
 }

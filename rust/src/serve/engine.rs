@@ -24,7 +24,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::serve::batcher::Batcher;
+use crate::serve::batcher::{
+    BatchPolicy, BatchView, Batcher, Rejected, SlotAssignment, SlotOccupancy, SlotPool,
+};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::serve::stats::ServeStats;
 use crate::util::log;
@@ -461,21 +463,115 @@ pub struct JobOutcome {
     pub batch_size: usize,
 }
 
+/// The policy-selected batching frontend between HTTP handlers and the
+/// engine pool. Workers pull [`BatchView`]s from either policy through one
+/// interface; only the admission/launch discipline differs (see
+/// [`crate::serve::batcher`]).
+pub enum Dispatch {
+    Fixed(Batcher<Job>),
+    Continuous(SlotPool<Job>),
+}
+
+impl Dispatch {
+    pub fn policy(&self) -> BatchPolicy {
+        match self {
+            Dispatch::Fixed(_) => BatchPolicy::Fixed,
+            Dispatch::Continuous(_) => BatchPolicy::Continuous,
+        }
+    }
+
+    /// Enqueue one job; non-blocking (see [`Batcher::submit`]).
+    pub fn submit(&self, job: Job) -> std::result::Result<(), Rejected<Job>> {
+        match self {
+            Dispatch::Fixed(b) => b.submit(job),
+            Dispatch::Continuous(p) => p.submit(job),
+        }
+    }
+
+    /// Requests waiting for a batch/slot (for `/statz`).
+    pub fn depth(&self) -> usize {
+        match self {
+            Dispatch::Fixed(b) => b.depth(),
+            Dispatch::Continuous(p) => p.depth(),
+        }
+    }
+
+    /// Slot census — continuous mode only.
+    pub fn occupancy(&self) -> Option<SlotOccupancy> {
+        match self {
+            Dispatch::Fixed(_) => None,
+            Dispatch::Continuous(p) => Some(p.occupancy()),
+        }
+    }
+
+    pub fn close(&self) {
+        match self {
+            Dispatch::Fixed(b) => b.close(),
+            Dispatch::Continuous(p) => p.close(),
+        }
+    }
+
+    /// Block for this worker's next batch. In fixed mode the dequeue *is*
+    /// the admission, so each row's slot claim is stamped here.
+    fn next_batch(&self, worker: usize) -> Option<BatchView<Job>> {
+        match self {
+            Dispatch::Fixed(b) => {
+                let batch = b.take_batch()?;
+                let claimed_at = Instant::now();
+                Some(BatchView {
+                    worker,
+                    assignments: batch
+                        .into_iter()
+                        .enumerate()
+                        .map(|(row, queued)| SlotAssignment { slot: row, row, queued, claimed_at })
+                        .collect(),
+                })
+            }
+            Dispatch::Continuous(p) => p.next_batch(worker),
+        }
+    }
+
+    /// Dispatch returned: slots move to `completing` (continuous only).
+    fn complete(&self, worker: usize) {
+        if let Dispatch::Continuous(p) = self {
+            p.complete(worker);
+        }
+    }
+
+    /// Replies sent: slots free and the admission queue drains into them
+    /// (continuous only).
+    fn release(&self, worker: usize) {
+        if let Dispatch::Continuous(p) = self {
+            p.release(worker);
+        }
+    }
+
+    /// Worker died at startup: pull its slots from allocation so they stop
+    /// absorbing admissions nothing will dispatch (continuous only — the
+    /// fixed batcher's shared queue needs no retirement, any surviving
+    /// worker drains it).
+    fn retire(&self, worker: usize) {
+        if let Dispatch::Continuous(p) = self {
+            p.retire(worker);
+        }
+    }
+}
+
 /// Spawn `n` engine worker threads. Each constructs its own engine inside
-/// the thread (PJRT handles are not `Send`), then drains the batcher until
+/// the thread (PJRT handles are not `Send`), then drains the dispatch until
 /// it closes. Construction failures are reported once and the worker exits;
 /// `ready` counts workers that reached the serving loop.
 pub fn spawn_engine_pool(
     n: usize,
     factory: EngineFactory,
-    batcher: Arc<Batcher<Job>>,
+    dispatch: Arc<Dispatch>,
     stats: Arc<ServeStats>,
     ready: Arc<AtomicUsize>,
 ) -> Vec<std::thread::JoinHandle<()>> {
     (0..n)
         .map(|worker| {
             let factory = factory.clone();
-            let batcher = batcher.clone();
+            let dispatch = dispatch.clone();
             let stats = stats.clone();
             let ready = ready.clone();
             std::thread::Builder::new()
@@ -485,27 +581,30 @@ pub fn spawn_engine_pool(
                         Ok(e) => e,
                         Err(e) => {
                             log::warn(&format!("engine worker {worker}: startup failed: {e:#}"));
+                            dispatch.retire(worker);
                             return;
                         }
                     };
                     log::info(&format!("engine worker {worker}: {}", engine.describe()));
                     ready.fetch_add(1, Ordering::SeqCst);
-                    while let Some(batch) = batcher.take_batch() {
+                    while let Some(view) = dispatch.next_batch(worker) {
                         let launched = Instant::now();
-                        let n = batch.len();
+                        let n = view.assignments.len();
                         // Move requests out of the jobs (no hot-path clone);
                         // keep reply channels + queue waits alongside.
                         let mut reqs: Vec<ScoreRequest> = Vec::with_capacity(n);
                         let mut replies: Vec<(mpsc::Sender<Result<JobOutcome, String>>, Duration)> =
                             Vec::with_capacity(n);
-                        for q in batch {
-                            let wait = q.waited(launched);
+                        for a in view.assignments {
+                            let wait = a.queued.waited(launched);
                             stats.queue_wait.record(wait);
-                            reqs.push(q.item.req);
-                            replies.push((q.item.resp, wait));
+                            stats.admission_wait.record(a.admission_wait());
+                            reqs.push(a.queued.item.req);
+                            replies.push((a.queued.item.resp, wait));
                         }
                         let result = engine.score(&reqs);
                         let exec = launched.elapsed();
+                        dispatch.complete(worker);
                         match result {
                             Ok(rows) => {
                                 stats.record_batch(n, exec);
@@ -525,6 +624,7 @@ pub fn spawn_engine_pool(
                                 }
                             }
                         }
+                        dispatch.release(worker);
                     }
                 })
                 .expect("spawn engine worker")
@@ -607,13 +707,9 @@ mod tests {
         assert!(a[0].nll > 0.0 && a[0].count == 2.0);
     }
 
-    #[test]
-    fn pool_drains_jobs_with_mock_engine() {
-        let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(BatcherConfig {
-            max_batch: 4,
-            max_wait: Duration::from_millis(2),
-            queue_cap: 64,
-        }));
+    /// Drive the worker pool end-to-end under either policy.
+    fn drain_pool_with(dispatch: Dispatch, engines: usize) -> Arc<ServeStats> {
+        let dispatch = Arc::new(dispatch);
         let stats = Arc::new(ServeStats::new());
         let ready = Arc::new(AtomicUsize::new(0));
         let factory: EngineFactory = Arc::new(|| {
@@ -622,12 +718,12 @@ mod tests {
             Ok(Box::new(e) as Box<dyn ScoreEngine>)
         });
         let handles =
-            spawn_engine_pool(2, factory, batcher.clone(), stats.clone(), ready.clone());
+            spawn_engine_pool(engines, factory, dispatch.clone(), stats.clone(), ready.clone());
 
         let mut rxs = Vec::new();
         for i in 0..20 {
             let (tx, rx) = mpsc::channel();
-            batcher
+            dispatch
                 .submit(Job { req: req(&[i, i + 1, i + 2]), resp: tx })
                 .map_err(|_| ())
                 .unwrap();
@@ -638,7 +734,7 @@ mod tests {
             assert!(out.row.count > 0.0);
             assert!(out.batch_size >= 1 && out.batch_size <= 4);
         }
-        batcher.close();
+        dispatch.close();
         for h in handles {
             h.join().unwrap();
         }
@@ -648,5 +744,116 @@ mod tests {
             "all rows accounted"
         );
         assert!(stats.batches_total.load(Ordering::Relaxed) <= 20);
+        stats
+    }
+
+    #[test]
+    fn pool_drains_jobs_fixed_policy() {
+        let stats = drain_pool_with(
+            Dispatch::Fixed(Batcher::new(BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 64,
+            })),
+            2,
+        );
+        // Fixed mode: admission == dequeue, so both histograms fill together.
+        assert_eq!(stats.admission_wait.count(), 20);
+        assert_eq!(stats.queue_wait.count(), 20);
+    }
+
+    #[test]
+    fn pool_drains_jobs_continuous_policy() {
+        use crate::serve::batcher::SlotConfig;
+        let stats = drain_pool_with(
+            Dispatch::Continuous(SlotPool::new(SlotConfig {
+                workers: 2,
+                slots_per_worker: 4,
+                queue_cap: 64,
+                admit_window: Duration::ZERO,
+            })),
+            2,
+        );
+        assert_eq!(stats.admission_wait.count(), 20);
+        // A claim can never happen after the launch it rides.
+        assert!(stats.admission_wait.mean_ms() <= stats.queue_wait.mean_ms() + 1e-9);
+    }
+
+    /// A worker whose engine fails to construct retires its slots: the
+    /// surviving worker serves everything (no black-holed requests).
+    #[test]
+    fn pool_survives_engine_startup_failure_continuous() {
+        use crate::serve::batcher::SlotConfig;
+        let dispatch = Arc::new(Dispatch::Continuous(SlotPool::new(SlotConfig {
+            workers: 2,
+            slots_per_worker: 4,
+            queue_cap: 64,
+            admit_window: Duration::ZERO,
+        })));
+        let stats = Arc::new(ServeStats::new());
+        let ready = Arc::new(AtomicUsize::new(0));
+        let built = Arc::new(AtomicUsize::new(0));
+        let factory: EngineFactory = {
+            let built = built.clone();
+            Arc::new(move || {
+                // First construction attempt fails; the second succeeds.
+                if built.fetch_add(1, Ordering::SeqCst) == 0 {
+                    anyhow::bail!("simulated PJRT init failure");
+                }
+                let mut e = MockEngine::new(4, 8);
+                e.batch_cost = Duration::from_micros(200);
+                Ok(Box::new(e) as Box<dyn ScoreEngine>)
+            })
+        };
+        let handles =
+            spawn_engine_pool(2, factory, dispatch.clone(), stats.clone(), ready.clone());
+
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let (tx, rx) = mpsc::channel();
+            while dispatch.submit(Job { req: req(&[i, i + 1]), resp: tx.clone() }).is_err() {
+                std::thread::yield_now();
+            }
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10))
+                .expect("request black-holed by dead worker")
+                .unwrap();
+        }
+        dispatch.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let occ = dispatch.occupancy().unwrap();
+        assert_eq!(occ.retired, 4, "dead worker's slots retired");
+        assert_eq!(occ.free, 4, "live worker's slots back to free");
+    }
+
+    /// Slot views hand workers at most `slots_per_worker` requests, and the
+    /// padding rows of the packed batch stay all-zero — the invariant that
+    /// makes partially-filled continuous launches score exactly like full
+    /// fixed flushes.
+    #[test]
+    fn slot_view_pack_preserves_padding_invariant() {
+        use crate::serve::batcher::{SlotConfig, SlotPool};
+        let pool: SlotPool<ScoreRequest> = SlotPool::new(SlotConfig {
+            workers: 1,
+            slots_per_worker: 4,
+            queue_cap: 8,
+            admit_window: Duration::ZERO,
+        });
+        pool.submit(req(&[5, 6, 7])).unwrap();
+        pool.submit(req(&[9, 9])).unwrap();
+        let view = pool.next_batch(0).unwrap();
+        assert!(view.assignments.len() <= 4);
+        let reqs: Vec<ScoreRequest> =
+            view.assignments.into_iter().map(|a| a.queued.item).collect();
+        let (x, _, m) = pack_batch(&reqs, 4, 8, true).unwrap();
+        // Rows 2..4 are padding: all-zero tokens and mask => they score 0.
+        assert!(x.data()[2 * 8..].iter().all(|&v| v == 0));
+        assert!(m.data()[2 * 8..].iter().all(|&v| v == 0.0));
+        pool.complete(0);
+        pool.release(0);
     }
 }

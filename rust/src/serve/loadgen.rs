@@ -1,16 +1,32 @@
-//! Closed-loop load generator for `qtx serve`: N client threads, each with
-//! one keep-alive connection, firing the next request as soon as the
-//! previous response lands. Reports throughput and latency percentiles —
-//! the measurement half of the serving acceptance loop (`qtx loadgen`,
-//! `bench_serve`).
+//! Load generators for `qtx serve` — the measurement half of the serving
+//! acceptance loop (`qtx loadgen`, `bench_serve`).
+//!
+//! Two client shapes:
+//!
+//! * **Closed loop** (default): N client threads, each with one keep-alive
+//!   connection, firing the next request as soon as the previous response
+//!   lands. Simple and self-pacing, but it can never offer more load than
+//!   the server returns — queueing pathologies (convoys behind the fixed
+//!   batcher's flush clock) are invisible to it.
+//! * **Open loop** (`open_rate_rps`): request *arrival times* are drawn
+//!   from a Poisson process at the offered rate, independent of server
+//!   progress, and a pool of sender threads fires each request at its
+//!   scheduled instant. Latency is measured from the scheduled arrival —
+//!   not the actual send — so client-side lag counts against the result
+//!   (no coordinated omission). This is the client that exposes convoy
+//!   effects and makes batching policies comparable.
+//!
+//! Both shapes parse each `200` body and aggregate the server-reported
+//! `queue_ms` (time queued before the batch launched) alongside wall-clock
+//! latency percentiles.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::serve::protocol::ScoreRequest;
+use crate::serve::protocol::{ScoreRequest, ScoreResponse};
 use crate::serve::server::Client;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -19,9 +35,10 @@ use crate::util::rng::Rng;
 pub struct LoadgenConfig {
     /// Target `host:port`.
     pub addr: String,
-    /// Concurrent closed-loop clients.
+    /// Closed loop: concurrent clients. Open loop: sender-pool size (must
+    /// cover the offered rate × typical latency, or lag is reported).
     pub clients: usize,
-    /// Requests per client.
+    /// Requests per client/sender; total = `clients × requests_per_client`.
     pub requests_per_client: usize,
     /// Token-id range for synthetic sequences; 0 = ask /healthz for the
     /// model's vocab (out-of-vocab ids are rejected with 400).
@@ -31,6 +48,9 @@ pub struct LoadgenConfig {
     pub seq_len: usize,
     pub seed: u64,
     pub timeout: Duration,
+    /// `Some(rate)`: open-loop mode, Poisson arrivals at `rate` req/s
+    /// across the whole pool. `None`: closed loop.
+    pub open_rate_rps: Option<f64>,
 }
 
 impl Default for LoadgenConfig {
@@ -43,13 +63,18 @@ impl Default for LoadgenConfig {
             seq_len: 0,
             seed: 0,
             timeout: Duration::from_secs(30),
+            open_rate_rps: None,
         }
     }
 }
 
-/// Aggregated closed-loop results.
+/// Aggregated results from one loadgen run.
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
+    /// "closed" or "open".
+    pub mode: &'static str,
+    /// Open loop: the configured arrival rate. Closed loop: 0.
+    pub offered_rps: f64,
     pub clients: usize,
     pub sent: u64,
     pub ok: u64,
@@ -61,11 +86,22 @@ pub struct LoadgenReport {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
+    /// Server-reported time queued before batch launch (from `queue_ms` in
+    /// each 200 response) — the number batching policies compete on.
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    pub queue_p99_ms: f64,
+    /// Open loop: p95 of how late senders fired after the scheduled arrival
+    /// (pool saturation indicator; latency already includes this). 0 when
+    /// closed loop.
+    pub lag_p95_ms: f64,
 }
 
 impl LoadgenReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("mode", Json::Str(self.mode.into())),
+            ("offered_rps", Json::Num(self.offered_rps)),
             ("clients", Json::Num(self.clients as f64)),
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
@@ -76,6 +112,10 @@ impl LoadgenReport {
             ("p95_ms", Json::Num(self.p95_ms)),
             ("p99_ms", Json::Num(self.p99_ms)),
             ("mean_ms", Json::Num(self.mean_ms)),
+            ("queue_p50_ms", Json::Num(self.queue_p50_ms)),
+            ("queue_p95_ms", Json::Num(self.queue_p95_ms)),
+            ("queue_p99_ms", Json::Num(self.queue_p99_ms)),
+            ("lag_p95_ms", Json::Num(self.lag_p95_ms)),
         ])
     }
 }
@@ -95,11 +135,65 @@ pub fn probe(addr: &str, timeout: Duration) -> Result<ServerLimits> {
     let get = |k: &str| -> Result<usize> {
         h.req(k)?.as_usize().with_context(|| format!("healthz {k} not an integer"))
     };
-    Ok(ServerLimits { seq_len: get("seq_len")?, max_batch: get("max_batch")?, vocab: get("vocab")? })
+    Ok(ServerLimits {
+        seq_len: get("seq_len")?,
+        max_batch: get("max_batch")?,
+        vocab: get("vocab")?,
+    })
 }
 
-/// Run the closed loop; blocks until every client finishes.
-pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+/// One successful request's measurements.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    lat_ms: f32,
+    queue_ms: f32,
+}
+
+/// Deterministic synthetic request for schedule position `i`.
+fn synth_request(seed: u64, label: &str, i: usize, seq_len: usize, vocab: u32) -> ScoreRequest {
+    let mut rng = Rng::new(seed).fork(&format!("{label}-{i}"));
+    let len = 2 + rng.below(seq_len as u32 - 1) as usize;
+    ScoreRequest {
+        id: Some(format!("{label}-{i}")),
+        tokens: (0..len).map(|_| rng.below(vocab) as i32).collect(),
+        targets: None,
+    }
+}
+
+/// Send one request on `client`, reconnecting once on transport errors.
+/// Returns the sample on 200, `None` on any error (counted by the caller).
+fn send_scored(
+    client: &mut Option<Client>,
+    addr: &str,
+    timeout: Duration,
+    req: &ScoreRequest,
+    sent: Instant,
+) -> Option<Sample> {
+    if client.is_none() {
+        *client = Client::connect(addr, timeout).ok();
+    }
+    let c = client.as_mut()?;
+    match c.request("POST", "/v1/score", Some(&req.to_json())) {
+        Ok((200, body)) => {
+            // An unparseable 200 body is an error, not a 0 ms queue wait —
+            // silent zeros would skew the very percentiles the batching
+            // policies are compared on.
+            let resp = ScoreResponse::parse(&body).ok()?;
+            Some(Sample {
+                lat_ms: sent.elapsed().as_secs_f64() as f32 * 1000.0,
+                queue_ms: resp.queue_ms as f32,
+            })
+        }
+        Ok((_status, _body)) => None,
+        Err(_) => {
+            // Transport error: drop the connection so the next call redials.
+            *client = None;
+            None
+        }
+    }
+}
+
+fn resolve_limits(cfg: &LoadgenConfig) -> Result<(usize, u32)> {
     let (seq_len, vocab) = if cfg.seq_len > 0 && cfg.vocab > 0 {
         (cfg.seq_len, cfg.vocab)
     } else {
@@ -110,80 +204,186 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             if cfg.vocab > 0 { cfg.vocab } else { limits.vocab },
         )
     };
-    let seq_len = seq_len.max(2);
+    Ok((seq_len.max(2), vocab.clamp(2, i32::MAX as usize) as u32))
+}
+
+/// Run the configured loop; blocks until every request resolved.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    match cfg.open_rate_rps {
+        Some(rate) => run_open(cfg, rate),
+        None => run_closed(cfg),
+    }
+}
+
+fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let (seq_len, vocab) = resolve_limits(cfg)?;
     let errors = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for client_id in 0..cfg.clients.max(1) {
         let addr = cfg.addr.clone();
         let timeout = cfg.timeout;
-        let vocab = vocab.clamp(2, i32::MAX as usize) as u32;
         let n = cfg.requests_per_client;
+        let seed = cfg.seed;
         let errors = errors.clone();
-        let mut rng = Rng::new(cfg.seed).fork(&format!("loadgen-{client_id}"));
-        handles.push(std::thread::spawn(move || -> Vec<f32> {
-            let mut lat_ms: Vec<f32> = Vec::with_capacity(n);
-            let mut client = match Client::connect(&addr, timeout) {
-                Ok(c) => c,
-                Err(_) => {
-                    errors.fetch_add(n as u64, Ordering::Relaxed);
-                    return lat_ms;
-                }
-            };
+        handles.push(std::thread::spawn(move || -> Vec<Sample> {
+            let mut samples = Vec::with_capacity(n);
+            let mut client = Client::connect(&addr, timeout).ok();
+            if client.is_none() {
+                errors.fetch_add(n as u64, Ordering::Relaxed);
+                return samples;
+            }
+            let label = format!("c{client_id}");
             for i in 0..n {
-                let len = 2 + rng.below(seq_len as u32 - 1) as usize;
-                let tokens: Vec<i32> =
-                    (0..len).map(|_| rng.below(vocab) as i32).collect();
-                let req = ScoreRequest {
-                    id: Some(format!("c{client_id}-{i}")),
-                    tokens,
-                    targets: None,
-                };
-                let sent = Instant::now();
-                match client.request("POST", "/v1/score", Some(&req.to_json())) {
-                    Ok((200, _body)) => {
-                        lat_ms.push(sent.elapsed().as_secs_f64() as f32 * 1000.0);
-                    }
-                    Ok((_status, _body)) => {
+                let req = synth_request(seed, &label, i, seq_len, vocab);
+                match send_scored(&mut client, &addr, timeout, &req, Instant::now()) {
+                    Some(s) => samples.push(s),
+                    None => {
                         errors.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Err(_) => {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                        // Reconnect and keep going (server may have dropped us).
-                        match Client::connect(&addr, timeout) {
-                            Ok(c) => client = c,
-                            Err(_) => {
-                                errors.fetch_add((n - i - 1) as u64, Ordering::Relaxed);
-                                break;
+                        if client.is_none() {
+                            // Redial once; keep the connection if it works,
+                            // give up on this client if the server is gone.
+                            match Client::connect(&addr, timeout) {
+                                Ok(c) => client = Some(c),
+                                Err(_) => {
+                                    errors.fetch_add((n - i - 1) as u64, Ordering::Relaxed);
+                                    break;
+                                }
                             }
                         }
                     }
                 }
             }
-            lat_ms
+            samples
         }));
     }
-    let mut lat_ms: Vec<f32> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
     for h in handles {
-        lat_ms.extend(h.join().expect("loadgen client panicked"));
+        samples.extend(h.join().expect("loadgen client panicked"));
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
-    let ok = lat_ms.len() as u64;
-    let errors = errors.load(Ordering::Relaxed);
-    let (p50, p95, p99, mean) = if lat_ms.is_empty() {
-        (0.0, 0.0, 0.0, 0.0)
-    } else {
-        let mut sorted = lat_ms.clone();
-        sorted.sort_by(f32::total_cmp);
-        (
-            crate::util::stats::percentile_sorted(&sorted, 50.0) as f64,
-            crate::util::stats::percentile_sorted(&sorted, 95.0) as f64,
-            crate::util::stats::percentile_sorted(&sorted, 99.0) as f64,
-            crate::util::stats::mean(&lat_ms),
-        )
-    };
-    Ok(LoadgenReport {
-        clients: cfg.clients.max(1),
+    Ok(build_report(
+        "closed",
+        0.0,
+        cfg.clients.max(1),
+        samples,
+        Vec::new(),
+        errors.load(Ordering::Relaxed),
+        elapsed_s,
+    ))
+}
+
+/// Cumulative Poisson arrival offsets: `n` exponential inter-arrivals at
+/// `rate` req/s, deterministic per seed. (`1.0 - f64()` keeps the ln
+/// argument in (0, 1] — `Rng::f64` is [0, 1).)
+fn poisson_schedule(seed: u64, rate: f64, n: usize) -> Vec<Duration> {
+    let mut sched = Vec::with_capacity(n);
+    let mut rng = Rng::new(seed).fork("arrivals");
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        t += -(1.0 - rng.f64()).ln() / rate;
+        sched.push(Duration::from_secs_f64(t));
+    }
+    sched
+}
+
+fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
+    anyhow::ensure!(rate > 0.0, "open-loop rate must be > 0 req/s");
+    let (seq_len, vocab) = resolve_limits(cfg)?;
+    let clients = cfg.clients.max(1);
+    let total = clients * cfg.requests_per_client;
+    let sched = Arc::new(poisson_schedule(cfg.seed, rate, total));
+
+    let errors = Arc::new(AtomicU64::new(0));
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let addr = cfg.addr.clone();
+        let timeout = cfg.timeout;
+        let seed = cfg.seed;
+        let errors = errors.clone();
+        let next = next.clone();
+        let sched = sched.clone();
+        handles.push(std::thread::spawn(move || -> (Vec<Sample>, Vec<f32>) {
+            let mut samples = Vec::new();
+            let mut lags = Vec::new();
+            let mut client: Option<Client> = Client::connect(&addr, timeout).ok();
+            loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= sched.len() {
+                    break;
+                }
+                let due = t0 + sched[i];
+                let now = Instant::now();
+                if now < due {
+                    std::thread::sleep(due - now);
+                }
+                lags.push(due.elapsed().as_secs_f64() as f32 * 1000.0);
+                let req = synth_request(seed, "o", i, seq_len, vocab);
+                // Latency clock starts at the *scheduled* arrival: sender
+                // lag and server time both count (open-loop semantics).
+                match send_scored(&mut client, &addr, timeout, &req, due) {
+                    Some(s) => samples.push(s),
+                    None => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            (samples, lags)
+        }));
+    }
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut lags: Vec<f32> = Vec::new();
+    for h in handles {
+        let (s, l) = h.join().expect("loadgen sender panicked");
+        samples.extend(s);
+        lags.extend(l);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(build_report(
+        "open",
+        rate,
+        clients,
+        samples,
+        lags,
+        errors.load(Ordering::Relaxed),
+        elapsed_s,
+    ))
+}
+
+fn pcts(values: &mut [f32]) -> (f64, f64, f64) {
+    if values.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    values.sort_by(f32::total_cmp);
+    (
+        crate::util::stats::percentile_sorted(values, 50.0) as f64,
+        crate::util::stats::percentile_sorted(values, 95.0) as f64,
+        crate::util::stats::percentile_sorted(values, 99.0) as f64,
+    )
+}
+
+fn build_report(
+    mode: &'static str,
+    offered_rps: f64,
+    clients: usize,
+    samples: Vec<Sample>,
+    mut lags: Vec<f32>,
+    errors: u64,
+    elapsed_s: f64,
+) -> LoadgenReport {
+    let ok = samples.len() as u64;
+    let mut lat: Vec<f32> = samples.iter().map(|s| s.lat_ms).collect();
+    let mut queue: Vec<f32> = samples.iter().map(|s| s.queue_ms).collect();
+    let mean_ms = if lat.is_empty() { 0.0 } else { crate::util::stats::mean(&lat) };
+    let (p50, p95, p99) = pcts(&mut lat);
+    let (q50, q95, q99) = pcts(&mut queue);
+    let (_, lag95, _) = pcts(&mut lags);
+    LoadgenReport {
+        mode,
+        offered_rps,
+        clients,
         sent: ok + errors,
         ok,
         errors,
@@ -192,23 +392,34 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         p50_ms: p50,
         p95_ms: p95,
         p99_ms: p99,
-        mean_ms: mean,
-    })
+        mean_ms,
+        queue_p50_ms: q50,
+        queue_p95_ms: q95,
+        queue_p99_ms: q99,
+        lag_p95_ms: lag95,
+    }
 }
 
 /// Render the human-readable report table.
 pub fn render_report(r: &LoadgenReport) -> String {
     crate::metrics::table::render(
-        &["clients", "ok", "errors", "elapsed s", "req/s", "p50 ms", "p95 ms", "p99 ms"],
+        &[
+            "mode", "clients", "ok", "errors", "req/s", "p50 ms", "p95 ms", "p99 ms", "q p95 ms",
+        ],
         &[vec![
+            if r.mode == "open" {
+                format!("open@{:.0}rps", r.offered_rps)
+            } else {
+                r.mode.to_string()
+            },
             r.clients.to_string(),
             r.ok.to_string(),
             r.errors.to_string(),
-            format!("{:.2}", r.elapsed_s),
             format!("{:.1}", r.throughput_rps),
             format!("{:.2}", r.p50_ms),
             format!("{:.2}", r.p95_ms),
             format!("{:.2}", r.p99_ms),
+            format!("{:.2}", r.queue_p95_ms),
         ]],
     )
 }
@@ -220,6 +431,8 @@ mod tests {
     #[test]
     fn report_json_shape() {
         let r = LoadgenReport {
+            mode: "open",
+            offered_rps: 500.0,
             clients: 2,
             sent: 10,
             ok: 9,
@@ -230,10 +443,41 @@ mod tests {
             p95_ms: 2.0,
             p99_ms: 3.0,
             mean_ms: 1.2,
+            queue_p50_ms: 0.4,
+            queue_p95_ms: 0.9,
+            queue_p99_ms: 1.1,
+            lag_p95_ms: 0.1,
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.req("ok").unwrap().as_usize(), Some(9));
-        assert_eq!(j.req("clients").unwrap().as_usize(), Some(2));
+        assert_eq!(j.req("mode").unwrap().as_str(), Some("open"));
+        assert_eq!(j.req("offered_rps").unwrap().as_usize(), Some(500));
+        assert!(j.req("queue_p95_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(render_report(&r).contains("req/s"));
+        assert!(render_report(&r).contains("open@500rps"));
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_and_rate_accurate() {
+        let a = poisson_schedule(7, 1000.0, 4000);
+        let b = poisson_schedule(7, 1000.0, 4000);
+        assert_eq!(a, b, "same seed, same schedule");
+        // 4000 arrivals at 1000 req/s take ~4s (CLT: well within 10%).
+        let span = a.last().unwrap().as_secs_f64();
+        assert!((3.6..4.4).contains(&span), "span {span}");
+        // Cumulative times never go backwards (ties possible only at the
+        // nanosecond rounding of Duration, so don't require strictness).
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn synth_requests_are_deterministic_per_index() {
+        let a = synth_request(7, "o", 3, 32, 100);
+        let b = synth_request(7, "o", 3, 32, 100);
+        let c = synth_request(7, "o", 4, 32, 100);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.tokens.len() >= 2 && a.tokens.len() <= 32);
+        assert!(a.tokens.iter().all(|&t| t >= 0 && t < 100));
     }
 }

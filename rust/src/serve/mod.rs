@@ -1,4 +1,5 @@
-//! `qtx serve` — the dynamic-batching INT8 inference server.
+//! `qtx serve` — the INT8 inference server, with fixed or continuous
+//! batching.
 //!
 //! The first subsystem on the *request path*: everything else in this crate
 //! trains and tabulates; this serves a trained + PTQ-calibrated artifact to
@@ -8,22 +9,51 @@
 //! activation fake-quant as `eval_quant`, but with per-row outputs — so
 //! quantized quality is what clients actually receive.
 //!
-//! Data flow:
+//! Data flow (`--batch-policy continuous`, the default):
 //!
 //! ```text
-//! clients ── HTTP ──> server ──> batcher ──> engine pool ──> PJRT
-//!                      │  ▲        (pack ≤ max_batch,         (serve_score,
-//!                      │  └─ reply  flush on fill or          frozen weight +
-//!                      ▼     chans  max-wait deadline)        QParams literals)
-//!                    stats  ◄──────────┴──────────────┘
+//! clients ── HTTP ──> server ──> slot pool ───> engine pool ──> PJRT
+//!                      │  ▲      (admission      (serve_score;
+//!                      │  └─ reply  queue +       each worker owns
+//!                      ▼     chans  slot claims)  max_batch slots)
+//!                    stats ◄───────────┴────────────────┘
 //! ```
 //!
+//! * **Fixed** (`--batch-policy fixed`, the PR-1 baseline): bounded FIFO
+//!   flushed on fill or on a `max_wait` deadline. Its batch-formation
+//!   capacity is `max_batch / max_wait`; past that rate requests convoy
+//!   behind the flush clock even while engine slots sit idle.
+//! * **Continuous**: each engine worker owns `max_batch` persistent slots
+//!   (rows of the `serve_score` program's static batch dimension) with a
+//!   free → claimed → in-flight → completing lifecycle. A request is
+//!   admitted the moment a slot frees and rides the owning worker's next
+//!   dispatch — no flush deadline, work-conserving by default; a nonzero
+//!   `--admit-window-us` tops up partially-filled launches at sustained
+//!   over-saturation. Slots are also the unit later work shards on:
+//!   KV-cache decode pins a session to a slot, multi-engine sharding
+//!   routes slot ranges.
+//!
+//! Observability (`GET /statz`): `batch_policy`, `queue.depth`,
+//! `queue.wait` (submit → batch launch) and `queue.admission` (submit →
+//! slot claim) histograms, per-state `slots` census (continuous mode),
+//! batch fill ratio, exec/latency histograms. `GET /healthz` reports the
+//! engine limits plus `batch_policy`.
+//!
+//! Measurement: `qtx loadgen` is closed-loop by default (each client fires
+//! on response). `qtx loadgen --open-loop --rate R` samples Poisson
+//! arrivals at `R` req/s across the `--threads` sender pool and measures
+//! latency from the *scheduled* arrival instant (no coordinated omission),
+//! plus server-reported `queue_ms` percentiles — the only client shape
+//! that exposes convoy effects; `bench_serve` sweeps it over a
+//! fixed-vs-continuous × arrival-rate matrix.
+//!
 //! * [`protocol`] — request/response wire types over `util::json`.
-//! * [`batcher`]  — bounded FIFO + max-batch/max-wait flush policy.
-//! * [`engine`]   — `ScoreEngine` trait; PJRT session + mock; worker pool.
+//! * [`batcher`]  — fixed FIFO batcher + slot allocator/admission queue.
+//! * [`engine`]   — `ScoreEngine` trait; PJRT session + mock; policy
+//!   dispatch; worker pool.
 //! * [`server`]   — hand-rolled HTTP/1.1 on `std::net` worker threads.
 //! * [`stats`]    — atomic counters + latency histograms (`/statz`).
-//! * [`loadgen`]  — closed-loop client driving the acceptance loop.
+//! * [`loadgen`]  — closed-loop and open-loop (Poisson) load generators.
 
 pub mod batcher;
 pub mod engine;
@@ -32,8 +62,10 @@ pub mod protocol;
 pub mod server;
 pub mod stats;
 
-pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
+pub use batcher::{
+    BatchPolicy, BatchView, Batcher, BatcherConfig, SlotConfig, SlotOccupancy, SlotPool,
+};
+pub use engine::{Dispatch, EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
 pub use protocol::{ScoreRequest, ScoreResponse, ScoreRow};
 pub use server::{EngineInfo, Server, ServerConfig};
 pub use stats::ServeStats;

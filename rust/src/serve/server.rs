@@ -23,8 +23,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::serve::batcher::{Batcher, BatcherConfig, Rejected};
-use crate::serve::engine::{spawn_engine_pool, validate_request, EngineFactory, Job};
+use crate::serve::batcher::{BatchPolicy, Batcher, BatcherConfig, Rejected, SlotConfig, SlotPool};
+use crate::serve::engine::{spawn_engine_pool, validate_request, Dispatch, EngineFactory, Job};
 use crate::serve::protocol::{error_json, ScoreRequest, ScoreResponse};
 use crate::serve::stats::ServeStats;
 use crate::util::json::Json;
@@ -42,7 +42,14 @@ pub struct ServerConfig {
     /// Concurrent-connection cap; excess connections get an immediate 503.
     pub max_connections: usize,
     pub engines: usize,
+    /// Fixed micro-batches vs slot-based continuous admission.
+    pub policy: BatchPolicy,
+    /// `max_batch`/`queue_cap` apply to both policies; `max_wait` only to
+    /// [`BatchPolicy::Fixed`] (continuous mode has no flush deadline).
     pub batcher: BatcherConfig,
+    /// Continuous mode: top-up window for partially-filled launches
+    /// (0 = strictly work-conserving). Ignored in fixed mode.
+    pub admit_window: Duration,
     /// How long a handler waits for its batch result before answering 504.
     pub request_timeout: Duration,
 }
@@ -54,7 +61,9 @@ impl Default for ServerConfig {
             port: 8787,
             max_connections: 64,
             engines: 1,
+            policy: BatchPolicy::Continuous,
             batcher: BatcherConfig::default(),
+            admit_window: Duration::ZERO,
             request_timeout: Duration::from_secs(30),
         }
     }
@@ -85,7 +94,7 @@ impl Drop for ConnGuard {
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    batcher: Arc<Batcher<Job>>,
+    dispatch: Arc<Dispatch>,
     pub stats: Arc<ServeStats>,
     engines_ready: Arc<AtomicUsize>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
@@ -100,20 +109,29 @@ impl Server {
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
         let addr = listener.local_addr()?;
         let stats = Arc::new(ServeStats::new());
-        let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(cfg.batcher));
+        let engines = cfg.engines.max(1);
+        let dispatch = Arc::new(match cfg.policy {
+            BatchPolicy::Fixed => Dispatch::Fixed(Batcher::new(cfg.batcher)),
+            BatchPolicy::Continuous => Dispatch::Continuous(SlotPool::new(SlotConfig {
+                workers: engines,
+                slots_per_worker: cfg.batcher.max_batch,
+                queue_cap: cfg.batcher.queue_cap,
+                admit_window: cfg.admit_window,
+            })),
+        });
         let shutdown = Arc::new(AtomicBool::new(false));
         let engines_ready = Arc::new(AtomicUsize::new(0));
 
         let engine_handles = spawn_engine_pool(
-            cfg.engines.max(1),
+            engines,
             factory,
-            batcher.clone(),
+            dispatch.clone(),
             stats.clone(),
             engines_ready.clone(),
         );
 
         let ctx = Arc::new(HandlerCtx {
-            batcher: batcher.clone(),
+            dispatch: dispatch.clone(),
             stats: stats.clone(),
             info: info.clone(),
             request_timeout: cfg.request_timeout,
@@ -167,11 +185,15 @@ impl Server {
                 .expect("spawn accept thread")
         };
 
-        log::info(&format!("qtx serve listening on http://{addr} ({})", info.describe));
+        log::info(&format!(
+            "qtx serve listening on http://{addr} ({}, {} batching)",
+            info.describe,
+            dispatch.policy().name()
+        ));
         Ok(Server {
             addr,
             shutdown,
-            batcher,
+            dispatch,
             stats,
             engines_ready,
             accept_handle: Some(accept_handle),
@@ -208,7 +230,7 @@ impl Server {
     /// current request (or their socket read timeout) and close.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        self.batcher.close();
+        self.dispatch.close();
         // Nudge the blocking accept() with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept_handle.take() {
@@ -228,7 +250,7 @@ impl Server {
 }
 
 struct HandlerCtx {
-    batcher: Arc<Batcher<Job>>,
+    dispatch: Arc<Dispatch>,
     stats: Arc<ServeStats>,
     info: EngineInfo,
     request_timeout: Duration,
@@ -414,6 +436,7 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                 let doc = Json::obj(vec![
                     ("status", Json::Str("ok".into())),
                     ("engine", Json::Str(ctx.info.describe.clone())),
+                    ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
                     ("seq_len", Json::Num(ctx.info.seq_len as f64)),
                     ("max_batch", Json::Num(ctx.info.max_batch as f64)),
                     ("vocab", Json::Num(ctx.info.vocab as f64)),
@@ -423,7 +446,11 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                 write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
             }
             ("GET", "/statz") => {
-                let doc = ctx.stats.snapshot(ctx.batcher.depth());
+                let doc = ctx.stats.snapshot(
+                    ctx.dispatch.policy().name(),
+                    ctx.dispatch.depth(),
+                    ctx.dispatch.occupancy(),
+                );
                 write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
             }
             (_, "/v1/score") | (_, "/healthz") | (_, "/statz") => {
@@ -472,7 +499,7 @@ fn handle_score(
     };
     let id = req.id.clone();
     let (tx, rx) = mpsc::channel();
-    match ctx.batcher.submit(Job { req, resp: tx }) {
+    match ctx.dispatch.submit(Job { req, resp: tx }) {
         Ok(()) => {}
         Err(Rejected::Full(_)) => {
             ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);

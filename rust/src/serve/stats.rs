@@ -8,6 +8,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::serve::batcher::SlotOccupancy;
 use crate::util::json::Json;
 
 /// Number of histogram buckets. Geometric bounds from `BASE_US` with ratio
@@ -134,6 +135,10 @@ pub struct ServeStats {
     pub latency: LatencyHisto,
     /// Time requests spent queued before their batch launched.
     pub queue_wait: LatencyHisto,
+    /// Time requests spent waiting for a batch slot (continuous mode: submit
+    /// → slot claim; fixed mode: identical to `queue_wait`, since admission
+    /// and launch coincide at dequeue).
+    pub admission_wait: LatencyHisto,
     /// Engine execution time per batch.
     pub exec: LatencyHisto,
 }
@@ -152,6 +157,7 @@ impl ServeStats {
             batch_rows_total: AtomicU64::new(0),
             latency: LatencyHisto::default(),
             queue_wait: LatencyHisto::default(),
+            admission_wait: LatencyHisto::default(),
             exec: LatencyHisto::default(),
         }
     }
@@ -176,12 +182,18 @@ impl ServeStats {
         self.started.elapsed()
     }
 
-    /// The `/statz` document. `queue_depth` is sampled by the caller (the
-    /// batcher owns it).
-    pub fn snapshot(&self, queue_depth: usize) -> Json {
+    /// The `/statz` document. `queue_depth` and `slots` are sampled by the
+    /// caller (the dispatch owns them); `slots` is `None` in fixed mode.
+    pub fn snapshot(
+        &self,
+        batch_policy: &str,
+        queue_depth: usize,
+        slots: Option<SlotOccupancy>,
+    ) -> Json {
         let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
-        Json::obj(vec![
+        let mut doc = vec![
             ("uptime_s", Json::Num(round3(self.uptime().as_secs_f64()))),
+            ("batch_policy", Json::Str(batch_policy.to_string())),
             (
                 "requests",
                 Json::obj(vec![
@@ -198,6 +210,7 @@ impl ServeStats {
                 Json::obj(vec![
                     ("depth", Json::Num(queue_depth as f64)),
                     ("wait", self.queue_wait.to_json()),
+                    ("admission", self.admission_wait.to_json()),
                 ]),
             ),
             (
@@ -210,7 +223,21 @@ impl ServeStats {
                 ]),
             ),
             ("latency", self.latency.to_json()),
-        ])
+        ];
+        if let Some(occ) = slots {
+            doc.push((
+                "slots",
+                Json::obj(vec![
+                    ("total", Json::Num(occ.total as f64)),
+                    ("free", Json::Num(occ.free as f64)),
+                    ("claimed", Json::Num(occ.claimed as f64)),
+                    ("in_flight", Json::Num(occ.in_flight as f64)),
+                    ("completing", Json::Num(occ.completing as f64)),
+                    ("retired", Json::Num(occ.retired as f64)),
+                ]),
+            ));
+        }
+        Json::obj(doc)
     }
 }
 
@@ -275,12 +302,39 @@ mod tests {
         let s = ServeStats::new();
         s.requests_total.fetch_add(3, Ordering::Relaxed);
         s.latency.record(Duration::from_micros(800));
-        let doc = s.snapshot(2).to_string();
+        s.admission_wait.record(Duration::from_micros(90));
+        let doc = s.snapshot("fixed", 2, None).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("queue").unwrap().req("depth").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("fixed"));
+        assert_eq!(
+            parsed.req("queue").unwrap().req("admission").unwrap().req("count").unwrap().as_usize(),
+            Some(1)
+        );
         assert_eq!(
             parsed.req("requests").unwrap().req("total").unwrap().as_usize(),
             Some(3)
         );
+        assert!(parsed.get("slots").is_none(), "fixed mode has no slot census");
+    }
+
+    #[test]
+    fn snapshot_reports_slot_census_in_continuous_mode() {
+        let s = ServeStats::new();
+        let occ = SlotOccupancy {
+            total: 16,
+            free: 9,
+            claimed: 3,
+            in_flight: 4,
+            completing: 0,
+            retired: 0,
+        };
+        let doc = s.snapshot("continuous", 0, Some(occ)).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("continuous"));
+        let slots = parsed.req("slots").unwrap();
+        assert_eq!(slots.req("total").unwrap().as_usize(), Some(16));
+        assert_eq!(slots.req("free").unwrap().as_usize(), Some(9));
+        assert_eq!(slots.req("in_flight").unwrap().as_usize(), Some(4));
     }
 }

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use qtx::serve::batcher::BatcherConfig;
+use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, LoadgenConfig};
 use qtx::serve::protocol::{ScoreRequest, ScoreResponse};
@@ -25,18 +25,26 @@ fn mock_factory(cost: Duration) -> EngineFactory {
     })
 }
 
-fn start_server(max_wait_ms: u64, cost: Duration) -> Server {
+fn start_server_with(
+    policy: BatchPolicy,
+    max_wait_ms: u64,
+    queue_cap: usize,
+    max_connections: usize,
+    cost: Duration,
+) -> Server {
     let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
     let cfg = ServerConfig {
         host: "127.0.0.1".into(),
         port: 0, // ephemeral
-        max_connections: 16,
+        max_connections,
         engines: 1,
+        policy,
         batcher: BatcherConfig {
             max_batch: MODEL_BATCH,
             max_wait: Duration::from_millis(max_wait_ms),
-            queue_cap: 128,
+            queue_cap,
         },
+        admit_window: Duration::ZERO,
         request_timeout: Duration::from_secs(10),
     };
     let info = EngineInfo {
@@ -49,6 +57,11 @@ fn start_server(max_wait_ms: u64, cost: Duration) -> Server {
     let s = Server::start(cfg, info, mock_factory(cost)).unwrap();
     s.wait_ready(Duration::from_secs(10)).unwrap();
     s
+}
+
+fn start_server(max_wait_ms: u64, cost: Duration) -> Server {
+    // The pre-existing tests exercise the PR-1 baseline path.
+    start_server_with(BatchPolicy::Fixed, max_wait_ms, 128, 16, cost)
 }
 
 #[test]
@@ -125,6 +138,7 @@ fn loadgen_roundtrip_batches_requests() {
         seq_len: 0, // probe /healthz
         seed: 7,
         timeout: Duration::from_secs(10),
+        open_rate_rps: None,
     })
     .unwrap();
     assert_eq!(report.ok, 160, "errors: {}", report.errors);
@@ -160,11 +174,13 @@ fn queue_full_returns_503() {
         port: 0,
         max_connections: 16,
         engines: 1,
+        policy: BatchPolicy::Fixed,
         batcher: BatcherConfig {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
             queue_cap: 1,
         },
+        admit_window: Duration::ZERO,
         request_timeout: Duration::from_secs(10),
     };
     let info = EngineInfo {
@@ -207,4 +223,132 @@ fn queue_full_returns_503() {
     assert!(statuses.iter().all(|&s| s == 200 || s == 503), "{statuses:?}");
 
     server.stop();
+}
+
+/// Continuous mode serves the same API and exposes the slot census.
+#[test]
+fn continuous_mode_roundtrip_and_slot_census() {
+    let server = start_server_with(
+        BatchPolicy::Continuous,
+        5, // max_wait is inert in continuous mode
+        128,
+        16,
+        Duration::from_millis(2),
+    );
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let health = c.get_json("/healthz").unwrap();
+    assert_eq!(health.req("batch_policy").unwrap().as_str(), Some("continuous"));
+
+    let req = ScoreRequest { id: Some("s1".into()), tokens: vec![4, 5, 6], targets: None };
+    let (status, body) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = ScoreResponse::parse(&body).unwrap();
+    assert_eq!(resp.row.count, 2.0);
+    // Scores are policy-invariant: the fixed-mode server gives the same row.
+    let fixed = start_server(5, Duration::ZERO);
+    let mut cf = Client::connect(&fixed.addr().to_string(), Duration::from_secs(5)).unwrap();
+    let (_, fbody) = cf.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(ScoreResponse::parse(&fbody).unwrap().row, resp.row);
+    drop(cf);
+    fixed.stop();
+
+    let statz = c.get_json("/statz").unwrap();
+    assert_eq!(statz.req("batch_policy").unwrap().as_str(), Some("continuous"));
+    let slots = statz.req("slots").unwrap();
+    assert_eq!(slots.req("total").unwrap().as_usize(), Some(MODEL_BATCH));
+    let admission = statz.req("queue").unwrap().req("admission").unwrap();
+    assert_eq!(admission.req("count").unwrap().as_usize(), Some(1));
+    // Quiescent after the reply: every slot returns to free. The worker
+    // releases its slots just *after* sending the reply, so poll briefly
+    // rather than racing that hand-off.
+    let mut free = 0;
+    for _ in 0..50 {
+        let statz = c.get_json("/statz").unwrap();
+        free = statz.req("slots").unwrap().req("free").unwrap().as_usize().unwrap();
+        if free == MODEL_BATCH {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(free, MODEL_BATCH, "slots did not return to free");
+
+    drop(c);
+    server.stop();
+}
+
+/// The tentpole acceptance: under open-loop (Poisson) load at 1.5× the
+/// fixed batcher's batch-formation capacity, continuous batching shows a
+/// lower p95 queue wait.
+///
+/// Capacity accounting (MockEngine, deterministic): dispatch cost 5 ms and
+/// max_batch 8 give an engine capacity of 1600 req/s; the fixed batcher's
+/// flush clock (max_wait 20 ms) can only form batches at max_batch/max_wait
+/// = 400 req/s without deadline convoys. We offer 600 req/s — 1.5× the
+/// formation capacity, yet only ~0.4× the engine — so the engine always has
+/// idle slots, exactly the regime where fixed mode makes requests wait for
+/// the flush clock (discrete-event sim: fixed p95 ≈ 15 ms vs continuous
+/// ≈ 5 ms, stable across seeds). Past *engine* saturation every
+/// work-conserving policy is backlog-bound and the gap closes — that end of
+/// the curve is bench_serve's matrix, not an assertion.
+#[test]
+fn continuous_beats_fixed_p95_queue_wait_under_open_loop() {
+    let cost = Duration::from_millis(5);
+    let rate = 600.0; // 1.5x formation capacity (8 / 20ms), 0.375x engine
+    let run = |policy: BatchPolicy| {
+        let server = start_server_with(policy, 20, 1024, 64, cost);
+        let report = loadgen::run(&LoadgenConfig {
+            addr: server.addr().to_string(),
+            clients: 30,
+            requests_per_client: 30, // 900 requests ≈ 1.5 s offered load
+            vocab: 1024,
+            seq_len: SEQ_LEN,
+            seed: 11,
+            timeout: Duration::from_secs(10),
+            open_rate_rps: Some(rate),
+        })
+        .unwrap();
+        server.stop();
+        report
+    };
+
+    let attempt = || (run(BatchPolicy::Fixed), run(BatchPolicy::Continuous));
+    // Success: no shed/transport errors on either side, the flush-clock
+    // convoy actually engaged for fixed, continuous clearly beats it on
+    // queue-wait p95, and end-to-end p95 agrees.
+    let holds = |f: &loadgen::LoadgenReport, c: &loadgen::LoadgenReport| {
+        f.errors == 0
+            && c.errors == 0
+            && f.ok == 900
+            && c.ok == 900
+            && f.queue_p95_ms > 6.0
+            && c.queue_p95_ms < 0.9 * f.queue_p95_ms
+            && c.p95_ms < f.p95_ms
+    };
+    // The expected margin is ~3x (15 ms vs 5 ms), but queue waits are
+    // wall-clock and an oversubscribed CI runner can smear a run (or drop a
+    // connection); a single retry absorbs that outlier — a double miss is a
+    // real regression.
+    let (fixed, cont) = {
+        let (f, c) = attempt();
+        if holds(&f, &c) {
+            (f, c)
+        } else {
+            attempt()
+        }
+    };
+    assert!(
+        holds(&fixed, &cont),
+        "continuous did not beat fixed under open-loop load:\n  fixed: ok {} errors {} queue_p95 \
+         {:.2} ms p95 {:.2} ms\n  continuous: ok {} errors {} queue_p95 {:.2} ms p95 {:.2} ms",
+        fixed.ok,
+        fixed.errors,
+        fixed.queue_p95_ms,
+        fixed.p95_ms,
+        cont.ok,
+        cont.errors,
+        cont.queue_p95_ms,
+        cont.p95_ms
+    );
 }

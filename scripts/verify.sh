@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate (referenced from ROADMAP.md).
+# Tier-1 verification gate (referenced from ROADMAP.md; `make verify`).
 #
 #   scripts/verify.sh            build + test + fmt + clippy
 #   scripts/verify.sh --fast     build + test only
+#   scripts/verify.sh --ci       full gate + GitHub step summary
+#                                (markdown appended to $GITHUB_STEP_SUMMARY)
 #
 # Requires the vendored rust toolchain; artifact-dependent integration
 # tests self-skip when `make artifacts` has not been run.
@@ -10,20 +12,55 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+FAST=0
+CI=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        --ci) CI=1 ;;
+        *) echo "verify.sh: unknown flag $arg (want --fast or --ci)" >&2; exit 2 ;;
+    esac
+done
+
+SUMMARY="${GITHUB_STEP_SUMMARY:-/dev/null}"
+summarize() { if [[ "$CI" == 1 ]]; then echo "$*" >>"$SUMMARY"; fi; }
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "verify.sh: cargo not found on PATH — this container lacks the rust" >&2
     echo "toolchain; run on an image with the vendored rust_pallas toolchain." >&2
     exit 1
 fi
 
+summarize "## tier-1 verify"
+summarize ""
+
 echo "== cargo build --release"
 cargo build --release
 
 echo "== cargo test -q"
-cargo test -q
+TEST_LOG="$(mktemp)"
+if cargo test -q 2>&1 | tee "$TEST_LOG"; then
+    summarize '```'
+    # The per-target result lines are the signal CI readers want.
+    if [[ "$CI" == 1 ]]; then
+        grep -E '^test result:' "$TEST_LOG" >>"$SUMMARY" || true
+    fi
+    summarize '```'
+else
+    summarize "**cargo test FAILED**"
+    summarize '```'
+    if [[ "$CI" == 1 ]]; then
+        tail -n 40 "$TEST_LOG" >>"$SUMMARY" || true
+    fi
+    summarize '```'
+    rm -f "$TEST_LOG"
+    exit 1
+fi
+rm -f "$TEST_LOG"
 
-if [[ "${1:-}" == "--fast" ]]; then
+if [[ "$FAST" == 1 ]]; then
     echo "verify.sh: OK (fast)"
+    summarize "fast mode: lint passes skipped"
     exit 0
 fi
 
@@ -32,5 +69,9 @@ cargo fmt -- --check
 
 echo "== cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
+
+summarize "build, tests, fmt and clippy all green."
+# (the bench trajectory summary is ci.yml's own step — `make bench` runs
+# after verify, so the file does not exist yet here)
 
 echo "verify.sh: OK"
