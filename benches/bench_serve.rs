@@ -1,8 +1,8 @@
 //! Serving throughput/latency benches.
 //!
-//! Two sections, both on the deterministic mock engine (set
-//! QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch cost;
-//! default 3000µs ≈ a tiny-config serve_score invocation):
+//! Three sections. The first two run on the deterministic mock engine
+//! (set QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch
+//! cost; default 3000µs ≈ a tiny-config serve_score invocation):
 //!
 //! 1. **Closed loop, batch-size sweep** (the PR-1 trajectory): loadgen vs.
 //!    server at max_batch {1, 8, 32}; batched throughput must beat
@@ -14,24 +14,33 @@
 //!    (max_batch / max_wait) — the convoy regime continuous batching
 //!    removes. Expect continuous to win queue-wait p95 below engine
 //!    saturation and to tie once both policies are backlog-bound past it.
+//! 3. **Engine dimension: pjrt vs native-int8** (the PR-3 trajectory) —
+//!    full-batch `score()` dispatch latency and rows/s for the f32
+//!    fake-quant PJRT session against the native integer backend, on the
+//!    same calibrated `bert_tiny_softmax` checkpoint. Needs
+//!    `make artifacts`; skipped (with a note) otherwise, so CI's
+//!    artifact-less `make bench` still completes.
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
 //!      QTX_BENCH_CLIENTS  closed-loop clients (default 8)
 //!      QTX_BENCH_SENDERS  open-loop sender pool (default 96)
 //!      QTX_BENCH_SERVE_COST_US  mock per-dispatch cost (default 3000)
+//!      QTX_BENCH_ENGINE_ITERS   engine-compare dispatches (default 10)
 //!
 //! Output: markdown tables (the repo's bench idiom) plus one
 //! `bench_serve JSON: {...}` line per row — CI collects these lines into
 //! `BENCH_serve.json` as the perf trajectory (see Makefile `bench`).
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use qtx::infer::NativeInt8Engine;
 use qtx::metrics::table::render;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
-use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
+use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, LoadgenConfig, LoadgenReport};
+use qtx::serve::protocol::ScoreRequest;
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::util::json::Json;
 
@@ -188,6 +197,76 @@ fn bench_open(
     Ok(MatrixRow { policy, label: label.to_string(), rate, report, fill })
 }
 
+// ---------------------------------------------------------------------------
+// Section 3: engine dimension — pjrt (fake-quant f32) vs native-int8
+// ---------------------------------------------------------------------------
+
+struct EngineRow {
+    engine: &'static str,
+    config: String,
+    max_batch: usize,
+    seq_len: usize,
+    dispatch_ms: f64,
+    rows_per_s: f64,
+}
+
+/// Time full-batch `score()` dispatches on an already-built engine.
+fn bench_engine(
+    engine: &mut dyn ScoreEngine,
+    name: &'static str,
+    config: &str,
+    iters: usize,
+) -> anyhow::Result<EngineRow> {
+    let (bsz, t) = (engine.max_batch(), engine.seq_len());
+    let reqs: Vec<ScoreRequest> = (0..bsz)
+        .map(|i| ScoreRequest {
+            id: None,
+            tokens: (0..t).map(|j| ((i * 31 + j * 13) % 256) as i32).collect(),
+            targets: None,
+        })
+        .collect();
+    engine.score(&reqs)?; // warm-up (upload/lazy init out of the timing)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.score(&reqs)?;
+    }
+    let el = t0.elapsed().as_secs_f64();
+    Ok(EngineRow {
+        engine: name,
+        config: config.to_string(),
+        max_batch: bsz,
+        seq_len: t,
+        dispatch_ms: el / iters as f64 * 1e3,
+        rows_per_s: (iters * bsz) as f64 / el,
+    })
+}
+
+/// `Ok(None)` when artifacts/checkpoint are absent (CI runs bench without
+/// `make artifacts`); errors are real once the inputs exist. The recipe is
+/// [`EngineSpec::tiny_test_recipe`] — the exact configuration the
+/// `serve_native` parity tests certify.
+fn engine_compare(iters: usize) -> anyhow::Result<Option<Vec<EngineRow>>> {
+    let spec = match EngineSpec::tiny_test_recipe() {
+        Ok(spec) => spec,
+        Err(why) => {
+            eprintln!("[bench_serve] engine_compare skipped: {why}");
+            return Ok(None);
+        }
+    };
+    // Engines are built (and dropped) sequentially: PJRT handles are not
+    // Send and each construction runs its own calibration pass.
+    let mut rows = Vec::new();
+    {
+        let mut pjrt = PjrtEngine::new(&spec)?;
+        rows.push(bench_engine(&mut pjrt, "pjrt", &spec.config, iters)?);
+    }
+    {
+        let mut native = NativeInt8Engine::new(&spec)?;
+        rows.push(bench_engine(&mut native, "native-int8", &spec.config, iters)?);
+    }
+    Ok(Some(rows))
+}
+
 fn main() -> anyhow::Result<()> {
     let reqs = env_usize("QTX_BENCH_REQS", 64);
     let clients = env_usize("QTX_BENCH_CLIENTS", 8);
@@ -333,5 +412,50 @@ fn main() -> anyhow::Result<()> {
         "\ncontinuous wins queue-wait below engine saturation; past it both policies are \
          backlog-bound (see ROADMAP Serving)."
     );
+
+    // -- engine dimension: pjrt vs native-int8 -------------------------------
+    let iters = env_usize("QTX_BENCH_ENGINE_ITERS", 10);
+    if let Some(engine_rows) = engine_compare(iters)? {
+        let pjrt_rps = engine_rows[0].rows_per_s;
+        for r in &engine_rows {
+            let speedup = r.rows_per_s / pjrt_rps;
+            eprintln!(
+                "[bench_serve] engine {}: {:.2} ms/dispatch, {:.1} rows/s ({:.2}x vs pjrt)",
+                r.engine, r.dispatch_ms, r.rows_per_s, speedup
+            );
+            println!(
+                "bench_serve JSON: {}",
+                Json::obj(vec![
+                    ("section", Json::Str("engine_compare".into())),
+                    ("engine", Json::Str(r.engine.into())),
+                    ("config", Json::Str(r.config.clone())),
+                    ("max_batch", Json::Num(r.max_batch as f64)),
+                    ("seq_len", Json::Num(r.seq_len as f64)),
+                    ("iters", Json::Num(iters as f64)),
+                    ("dispatch_ms", Json::Num(r.dispatch_ms)),
+                    ("rows_per_s", Json::Num(r.rows_per_s)),
+                    ("speedup_vs_pjrt", Json::Num(speedup)),
+                ])
+            );
+        }
+        let etable: Vec<Vec<String>> = engine_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.engine.to_string(),
+                    r.max_batch.to_string(),
+                    format!("{:.2}", r.dispatch_ms),
+                    format!("{:.1}", r.rows_per_s),
+                    format!("{:.2}x", r.rows_per_s / pjrt_rps),
+                ]
+            })
+            .collect();
+        println!(
+            "\n## engine dimension — fake-quant pjrt vs native-int8 ({}, \
+             full-batch dispatches)\n\n{}",
+            engine_rows[0].config,
+            render(&["engine", "batch", "ms/dispatch", "rows/s", "vs pjrt"], &etable)
+        );
+    }
     Ok(())
 }

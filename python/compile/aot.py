@@ -42,8 +42,15 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
+# Bump when the manifest *document* changes shape without a program/config
+# change (fingerprint-matched artifact dirs skip rebuild, so a new manifest
+# key needs this to reach existing artifacts). schema 2: + "version" key.
+MANIFEST_SCHEMA = 2
+
+
 def config_fingerprint(cfg: ModelConfig) -> str:
-    blob = json.dumps(cfg.to_dict(), sort_keys=True) + f"|v{MANIFEST_VERSION}"
+    blob = (json.dumps(cfg.to_dict(), sort_keys=True)
+            + f"|v{MANIFEST_VERSION}|schema{MANIFEST_SCHEMA}")
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
@@ -64,6 +71,10 @@ def lower_config(cfg: ModelConfig, out_dir: Path, force: bool = False) -> bool:
     cdir.mkdir(parents=True, exist_ok=True)
 
     manifest: dict = {
+        # Explicit format version: the rust side compares it against
+        # feature gates (e.g. serve needs v5's serve_score) and reports
+        # found-vs-required in its "re-run `make artifacts`" errors.
+        "version": MANIFEST_VERSION,
         "fingerprint": fp,
         "config": cfg.to_dict(),
         "params": [s.to_dict() for s in param_specs(cfg)],

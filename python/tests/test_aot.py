@@ -19,6 +19,15 @@ def built(tmp_path_factory):
     return cfg, out / "micro_aot"
 
 
+def test_manifest_carries_format_version(built):
+    """The rust side reports found-vs-required versions in its serve-path
+    errors; the manifest must therefore carry an explicit version."""
+    _, cdir = built
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert manifest["version"] >= 5  # v5 introduced serve_score
+
+
 def test_all_programs_emitted(built):
     _, cdir = built
     manifest = json.loads((cdir / "manifest.json").read_text())

@@ -10,8 +10,10 @@
 //! ```
 //!
 //! `serve` resolves the checkpoint with the same recipe flags as `train`
-//! (same run key), or takes an explicit `--ckpt`. `--mock` serves a
-//! deterministic artifact-free engine (demos, benches, smoke tests).
+//! (same run key), or takes an explicit `--ckpt`. `--engine` picks the
+//! backend: `pjrt` (the f32 fake-quant `serve_score` session),
+//! `native-int8` (real integer GEMMs, [`crate::infer`]) or `mock` (the
+//! deterministic artifact-free engine; `--mock` is shorthand).
 //! `--batch-policy {continuous|fixed}` picks the batching discipline
 //! (slot-based continuous admission vs. the PR-1 flush-on-fill/deadline
 //! baseline); `--open-loop --rate R` switches loadgen to Poisson arrivals
@@ -20,11 +22,14 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::cli::basic::{paths_from_args, spec_from_args};
+use crate::infer::NativeInt8Engine;
 use crate::serve::batcher::{BatchPolicy, BatcherConfig};
-use crate::serve::engine::{EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
+use crate::serve::engine::{
+    EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
+};
 use crate::serve::loadgen::{run as loadgen_run, render_report, LoadgenConfig};
 use crate::serve::server::{EngineInfo, Server, ServerConfig};
 use crate::util::cli::Args;
@@ -53,7 +58,17 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
 
 pub fn serve(args: &Args) -> Result<()> {
     let mut cfg = server_config_from_args(args)?;
-    let mock = args.bool("mock", false)?;
+    // `--mock` is shorthand for `--engine mock` (kept from PR 1).
+    let engine_flag = EngineKind::parse(&args.str("engine", "pjrt"))?;
+    let engine = if args.bool("mock", false)? {
+        if engine_flag == EngineKind::NativeInt8 {
+            bail!("--mock conflicts with --engine native-int8");
+        }
+        EngineKind::Mock
+    } else {
+        engine_flag
+    };
+    let mock = engine == EngineKind::Mock;
 
     let (info, factory): (EngineInfo, EngineFactory) = if mock {
         let seq_len = args.usize("seq-len", 64)?;
@@ -94,9 +109,14 @@ pub fn serve(args: &Args) -> Result<()> {
         let manifest =
             crate::runtime::Manifest::load(&artifacts.join(&spec.config))
                 .with_context(|| format!("loading manifest for {}", spec.config))?;
+        if engine == EngineKind::Pjrt {
+            // Fail before binding the port: the error names the found vs.
+            // required manifest version.
+            manifest.require_serve_score()?;
+        }
         let mcfg = &manifest.config;
         if !ckpt.exists() {
-            anyhow::bail!(
+            bail!(
                 "no checkpoint at {ckpt:?} — run `qtx train` with the same flags, \
                  or pass --ckpt"
             );
@@ -113,11 +133,15 @@ pub fn serve(args: &Args) -> Result<()> {
             vocab: mcfg.vocab_size,
             causal: mcfg.causal,
             describe: format!(
-                "pjrt:{} W{}A{} ({})",
-                mcfg.name, spec.quant.w_bits, spec.quant.a_bits, spec.label
+                "{}:{} W{}A{} ({})",
+                engine.name(),
+                mcfg.name,
+                spec.quant.w_bits,
+                spec.quant.a_bits,
+                spec.label
             ),
         };
-        let espec = PjrtEngineSpec {
+        let espec = EngineSpec {
             artifacts_root: artifacts,
             config: spec.config.clone(),
             ckpt,
@@ -127,9 +151,14 @@ pub fn serve(args: &Args) -> Result<()> {
             gate_scale: spec.gate_scale,
             calib_seed: seed.wrapping_mul(1000).wrapping_add(1),
         };
-        let factory: EngineFactory = Arc::new(move || {
-            Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
-        });
+        let factory: EngineFactory = match engine {
+            EngineKind::NativeInt8 => Arc::new(move || {
+                Ok(Box::new(NativeInt8Engine::new(&espec)?) as Box<dyn ScoreEngine>)
+            }),
+            _ => Arc::new(move || {
+                Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
+            }),
+        };
         (info, factory)
     };
 

@@ -206,7 +206,8 @@ pub fn train_cached(
 }
 
 /// Run the full pipeline for one spec (loads the artifact fresh; prefer
-/// [`run_experiment_cached`] when running many rows over few configs).
+/// [`run_experiment_on`] with an [`ArtifactCache`] when running many rows
+/// over few configs).
 pub fn run_experiment(
     rt: &Runtime,
     artifacts_root: &Path,
@@ -338,4 +339,26 @@ pub fn default_paths() -> (PathBuf, PathBuf) {
     let root = std::env::var("QTX_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let runs = std::env::var("QTX_RUNS").unwrap_or_else(|_| "runs".into());
     (PathBuf::from(root), PathBuf::from(runs))
+}
+
+/// Find any cached checkpoint for `config`/`seed` in `runs_dir`,
+/// independent of the full training recipe (run keys embed every
+/// hyperparameter — `{config}_s{seed}_st{steps}_...` — but the
+/// artifact-gated serve tests and benches only need *a* trained model for
+/// the config). Lexically first match, for determinism.
+pub fn find_checkpoint(runs_dir: &Path, config: &str, seed: u64) -> Option<PathBuf> {
+    let prefix = format!("{config}_s{seed}_");
+    let mut hits: Vec<PathBuf> = std::fs::read_dir(runs_dir)
+        .ok()?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.extension().is_some_and(|x| x == "ckpt")
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(&prefix))
+        })
+        .collect();
+    hits.sort();
+    hits.into_iter().next()
 }

@@ -1,0 +1,149 @@
+//! [`NativeInt8Engine`] — the [`ScoreEngine`] implementation backed by the
+//! integer [`Int8Model`] instead of a PJRT `serve_score` session.
+//!
+//! Construction mirrors [`crate::serve::engine::PjrtEngine::new`] step for
+//! step — load artifact + checkpoint, host weight PTQ, activation
+//! calibration over the AOT `act_collect` program — so **both engines
+//! consume byte-identical quant grids**: same weight scales (same
+//! estimator on the same data), same activation scale/zero-point vectors
+//! (same calibration stream seed through the same program). The PJRT
+//! runtime is only used during calibration and is dropped before serving;
+//! the request path is pure host rust.
+//!
+//! The engine accepts any artifact that carries `act_collect` (manifest
+//! v1+) — unlike the PJRT engine it does not need the `serve_score`
+//! program, since the per-row scoring epilogue is native too.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::calibrator::{calibrate, CollectOptions};
+use crate::coordinator::quantize::quantize_weights;
+use crate::infer::model::{Int8Model, ModelOptions};
+use crate::serve::engine::{pack_batch, EngineSpec, ScoreEngine};
+use crate::serve::protocol::{ScoreRequest, ScoreRow};
+use crate::util::log;
+
+/// A ready-to-serve native INT8 session: extracted `i8` weights plus the
+/// calibrated activation grids, executing entirely on the host.
+pub struct NativeInt8Engine {
+    model: Int8Model,
+    max_batch: usize,
+    seq_len: usize,
+    causal: bool,
+    config: String,
+}
+
+impl NativeInt8Engine {
+    /// Load artifact + checkpoint, run the shared PTQ pipeline (weights,
+    /// then activation calibration on the weight-quantized model), and
+    /// materialize the integer model.
+    pub fn new(spec: &EngineSpec) -> Result<NativeInt8Engine> {
+        if spec.quant.w_bits != 8 || spec.quant.a_bits != 8 {
+            bail!(
+                "native-int8 engine serves W8A8 only (requested W{}A{}); \
+                 use --engine pjrt for other bitwidths",
+                spec.quant.w_bits,
+                spec.quant.a_bits
+            );
+        }
+        let rt = crate::runtime::Runtime::cpu()?;
+        let art = crate::runtime::Artifact::load(&spec.artifacts_root, &spec.config)?;
+        let cfg = art.manifest.config.clone();
+        if cfg.family == "vit" {
+            bail!(
+                "qtx serve is token-based; vision serving is a ROADMAP open item \
+                 (config {} is family vit)",
+                cfg.name
+            );
+        }
+        let params = crate::util::tensorio::load(&spec.ckpt).with_context(|| {
+            format!("loading checkpoint {:?} — train one with `qtx train`", spec.ckpt)
+        })?;
+
+        // Calibrate on the weight-fake-quantized model (the deployment
+        // path), exactly like the PJRT engine — the resulting grids are
+        // what the integer forward requantizes onto.
+        let wq = quantize_weights(&art, &params, spec.quant.w_est, spec.quant.w_bits);
+        let copts = CollectOptions {
+            gamma: spec.gamma,
+            zeta: spec.zeta,
+            gate_scale: spec.gate_scale,
+        };
+        let mut calib_provider = crate::data::batch::make_provider(
+            &cfg,
+            spec.calib_seed,
+            crate::data::batch::Stream::Calibration,
+        );
+        let t0 = Instant::now();
+        let cal = calibrate(
+            &rt,
+            &art,
+            &wq,
+            calib_provider.as_mut(),
+            spec.quant.calib_batches,
+            spec.quant.a_est,
+            &copts,
+            spec.calib_seed,
+        )?;
+        let qps = cal.finalize(spec.quant.a_bits);
+
+        let opts = ModelOptions {
+            gamma: spec.gamma,
+            zeta: spec.zeta,
+            gate_scale: spec.gate_scale,
+            w_est: spec.quant.w_est,
+        };
+        let model = Int8Model::build(&cfg, &params, &art.manifest.quant_points, &qps, opts)?;
+        log::info(&format!(
+            "native-int8: calibrated {} points and extracted i8 weights for {} in {:.1}s",
+            qps.len(),
+            cfg.name,
+            t0.elapsed().as_secs_f64()
+        ));
+        Ok(NativeInt8Engine {
+            model,
+            max_batch: cfg.batch_size,
+            seq_len: cfg.seq_len,
+            causal: cfg.causal,
+            config: cfg.name.clone(),
+        })
+    }
+
+    /// Wrap an already-built model (tests; no PJRT involved).
+    pub fn from_model(model: Int8Model) -> NativeInt8Engine {
+        let cfg = &model.cfg;
+        let (max_batch, seq_len, causal) = (cfg.batch_size, cfg.seq_len, cfg.causal);
+        let config = cfg.name.clone();
+        NativeInt8Engine { model, max_batch, seq_len, causal, config }
+    }
+}
+
+impl ScoreEngine for NativeInt8Engine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn causal(&self) -> bool {
+        self.causal
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "native-int8:{} (batch={}, seq_len={}, causal={})",
+            self.config, self.max_batch, self.seq_len, self.causal
+        )
+    }
+
+    fn score(&mut self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreRow>> {
+        let (x, targets, mask) = pack_batch(reqs, self.max_batch, self.seq_len, self.causal)?;
+        let mut rows = self.model.forward(&x, &targets, &mask)?;
+        rows.truncate(reqs.len());
+        Ok(rows)
+    }
+}

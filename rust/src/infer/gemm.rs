@@ -1,0 +1,404 @@
+//! Cache-blocked integer GEMM kernels for the native INT8 backend.
+//!
+//! Data types follow the standard asymmetric-activation / symmetric-weight
+//! INT8 scheme (the paper's §5 setup, eq. 1):
+//!
+//! * **activations** — [`QAct`]: `u8` codes on the calibrated asymmetric
+//!   grid, real value `s_a · (q − z_a)` with an integral zero point
+//!   `z_a ∈ [0, 255]`;
+//! * **weights** — [`Int8Weight`]: `i8` integers on the symmetric grid of
+//!   [`crate::quant::weights::Int8Tensor`], real value `s_w · w`.
+//!
+//! Every product accumulates in `i32` and the zero-point cross terms are
+//! hoisted out of the inner loop:
+//!
+//! ```text
+//! Σ_k (q_a[k] − z_a) · w[k]            = Σ q_a·w − z_a · Σ w
+//! Σ_k (q_a[k] − z_a) · (q_b[k] − z_b)  = Σ q_a·q_b − z_a Σ q_b − z_b Σ q_a + K·z_a·z_b
+//! ```
+//!
+//! so the hot loop is a pure `u8×i8 → i32` (or `u8×u8 → i32`) dot product
+//! over contiguous memory: weights are stored **transposed** (`[N][K]`),
+//! which makes both operands of every dot unit-stride and lets the
+//! compiler auto-vectorize. Blocking keeps a tile of `NC = 64` weight
+//! columns resident in L1/L2 while the activation rows stream through
+//! (`NC · K` ≤ 32 KiB at the repo's model sizes).
+//!
+//! The `i32` accumulator is exact: with K ≤ 512, |acc| ≤ 512·255·255 ≈
+//! 3.3·10⁷, far inside `i32`. This is what makes the integer path *more*
+//! precise than the f32 fake-quant simulation it mirrors — the only
+//! rounding left is the final rescale to f32.
+//!
+//! Requantization between layers stays in f32 (`scale` multiply +
+//! round-to-nearest-even, [`QAct::quantize`]) rather than a fixed-point
+//! multiplier/shift: the serving contract is bit-level agreement with the
+//! fake-quant `serve_score` grid, and eq. 1 defines that grid in terms of
+//! an f32 scale. A fixed-point requant (gemmlowp-style i32 multiplier +
+//! right shift) would trade that agreement for integer-only epilogues.
+
+use anyhow::{bail, Result};
+
+use crate::quant::grid::QParams;
+use crate::quant::weights::Int8Tensor;
+
+/// Weight-column tile width (see module docs).
+const NC: usize = 64;
+
+/// A quantized activation tensor: `u8` codes + the grid they live on.
+///
+/// Real value of element `i`: `scale · (data[i] − zero_point)`.
+#[derive(Debug, Clone)]
+pub struct QAct {
+    pub data: Vec<u8>,
+    pub scale: f32,
+    /// Integral zero point in `[0, 255]`.
+    pub zero_point: i32,
+}
+
+impl QAct {
+    /// Quantize `x` onto the calibrated 8-bit grid `qp` — exactly eq. 1's
+    /// `clip(⌊x/s⌉ + z, 0, 255)` with round-to-nearest-even, matching the
+    /// in-graph fake-quant kernel code-for-code.
+    pub fn quantize(x: &[f32], qp: &QParams) -> Result<QAct> {
+        if qp.qmax != 255.0 {
+            bail!("native INT8 backend needs 8-bit activation grids (qmax 255, got {})", qp.qmax);
+        }
+        if qp.zero_point.fract() != 0.0 {
+            bail!("activation zero point {} is not integral", qp.zero_point);
+        }
+        let data = x.iter().map(|&v| qp.code(v) as u8).collect();
+        Ok(QAct { data, scale: qp.scale, zero_point: qp.zero_point as i32 })
+    }
+
+    /// Dequantize one element.
+    pub fn dequant(&self, i: usize) -> f32 {
+        self.scale * (self.data[i] as i32 - self.zero_point) as f32
+    }
+
+    /// Dequantize the whole buffer.
+    pub fn dequant_all(&self) -> Vec<f32> {
+        self.data
+            .iter()
+            .map(|&q| self.scale * (q as i32 - self.zero_point) as f32)
+            .collect()
+    }
+
+    /// Borrow the whole buffer as a [`QView`].
+    pub fn view(&self) -> QView<'_> {
+        QView { data: &self.data, scale: self.scale, zero_point: self.zero_point }
+    }
+}
+
+/// A borrowed window into quantized activation data (same grid as the
+/// owning [`QAct`]) — how per-head attention sub-tensors are passed to the
+/// GEMM kernels without copying.
+#[derive(Debug, Clone, Copy)]
+pub struct QView<'a> {
+    pub data: &'a [u8],
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+/// An INT8 weight matrix prepared for the GEMM kernels: transposed to
+/// `[n][k]` contiguous columns, with per-column integer sums for the
+/// activation-zero-point correction.
+#[derive(Debug, Clone)]
+pub struct Int8Weight {
+    /// Reduction (input) dimension.
+    pub k: usize,
+    /// Output dimension.
+    pub n: usize,
+    /// Transposed weights: `wt[j*k + i] = w[i][j]`.
+    pub wt: Vec<i8>,
+    pub scale: f32,
+    /// `col_sum[j] = Σ_i w[i][j]` (for the `z_a · Σ w` correction).
+    pub col_sum: Vec<i32>,
+}
+
+impl Int8Weight {
+    /// Build from a `(k, n)` row-major [`Int8Tensor`].
+    pub fn from_int8(t: &Int8Tensor) -> Result<Int8Weight> {
+        let &[k, n] = t.shape.as_slice() else {
+            bail!("Int8Weight wants a rank-2 tensor, got shape {:?}", t.shape);
+        };
+        let mut wt = vec![0i8; k * n];
+        for (i, row) in t.data.chunks_exact(n).enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                wt[j * k + i] = v;
+            }
+        }
+        let col_sum = wt
+            .chunks_exact(k)
+            .map(|col| col.iter().map(|&v| v as i32).sum())
+            .collect();
+        Ok(Int8Weight { k, n, wt, scale: t.scale, col_sum })
+    }
+}
+
+fn dot_u8_i8(a: &[u8], w: &[i8]) -> i32 {
+    a.iter().zip(w).map(|(&x, &v)| x as i32 * v as i32).sum()
+}
+
+fn dot_u8_u8(a: &[u8], b: &[u8]) -> i32 {
+    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
+/// Activation (`u8`, `m×k`) × weight (`i8`, `k×n`) → f32 `m×n`:
+/// `out[i][j] = s_a·s_w·(Σ q_a·w − z_a·Σw) + bias[j]`.
+pub fn gemm_q8(a: QView<'_>, m: usize, w: &Int8Weight, bias: Option<&[f32]>, out: &mut [f32]) {
+    let k = w.k;
+    debug_assert_eq!(a.data.len(), m * k);
+    debug_assert_eq!(out.len(), m * w.n);
+    let alpha = a.scale * w.scale;
+    for j0 in (0..w.n).step_by(NC) {
+        let j1 = (j0 + NC).min(w.n);
+        for (i, a_row) in a.data.chunks_exact(k).enumerate() {
+            let out_row = &mut out[i * w.n..(i + 1) * w.n];
+            for j in j0..j1 {
+                let acc = dot_u8_i8(a_row, &w.wt[j * k..(j + 1) * k]);
+                let v = alpha * (acc - a.zero_point * w.col_sum[j]) as f32;
+                out_row[j] = v + bias.map_or(0.0, |b| b[j]);
+            }
+        }
+    }
+}
+
+/// Activation × activation GEMM (`u8×u8 → i32`), both on asymmetric grids:
+/// used for attention scores (`Q·Kᵀ`) and context (`P·V`). `a` is `m×k`
+/// row-major, `bt` is the second operand already transposed to `n×k`
+/// row-major; `out[i][j] = s_a·s_b·Σ (q_a−z_a)(q_b−z_b)`.
+pub fn gemm_q8q8(a: QView<'_>, bt: QView<'_>, m: usize, n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.data.len(), m * k);
+    debug_assert_eq!(bt.data.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    let row_sum: Vec<i32> =
+        a.data.chunks_exact(k).map(|r| r.iter().map(|&v| v as i32).sum()).collect();
+    let col_sum: Vec<i32> =
+        bt.data.chunks_exact(k).map(|c| c.iter().map(|&v| v as i32).sum()).collect();
+    let alpha = a.scale * bt.scale;
+    let kzz = k as i32 * a.zero_point * bt.zero_point;
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for (i, a_row) in a.data.chunks_exact(k).enumerate() {
+            let out_row = &mut out[i * n..(i + 1) * n];
+            for j in j0..j1 {
+                let acc = dot_u8_u8(a_row, &bt.data[j * k..(j + 1) * k]);
+                let centered = acc - a.zero_point * col_sum[j] - bt.zero_point * row_sum[i] + kzz;
+                out_row[j] = alpha * centered as f32;
+            }
+        }
+    }
+}
+
+/// f32 activation × `i8` weight: the fallback for matmuls whose input is
+/// *not* a quantized tap (pre-LN q/k/v projections read the un-tapped
+/// LayerNorm output — see [`crate::infer::model`]). Matches the reference
+/// semantics (f32 input × fake-quantized weight) with the scale hoisted:
+/// `out = s_w · Σ x·w + bias`.
+pub fn gemm_f32q8(a: &[f32], m: usize, w: &Int8Weight, bias: Option<&[f32]>, out: &mut [f32]) {
+    let k = w.k;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * w.n);
+    for j0 in (0..w.n).step_by(NC) {
+        let j1 = (j0 + NC).min(w.n);
+        for (i, a_row) in a.chunks_exact(k).enumerate() {
+            let out_row = &mut out[i * w.n..(i + 1) * w.n];
+            for j in j0..j1 {
+                let acc: f32 = a_row
+                    .iter()
+                    .zip(&w.wt[j * k..(j + 1) * k])
+                    .map(|(&x, &v)| x * v as f32)
+                    .sum();
+                out_row[j] = w.scale * acc + bias.map_or(0.0, |b| b[j]);
+            }
+        }
+    }
+}
+
+/// Plain f32 GEMM with a transposed right operand (`bt` is `n×k`): the
+/// output head, which §5 leaves unquantized.
+pub fn gemm_f32(
+    a: &[f32],
+    bt: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for (i, a_row) in a.chunks_exact(k).enumerate() {
+            let out_row = &mut out[i * n..(i + 1) * n];
+            for j in j0..j1 {
+                let acc: f32 =
+                    a_row.iter().zip(&bt[j * k..(j + 1) * k]).map(|(&x, &y)| x * y).sum();
+                out_row[j] = acc + bias.map_or(0.0, |b| b[j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::estimators::EstimatorKind;
+    use crate::quant::weights::{fake_quant_weight, quantize_weight_int8};
+    use crate::util::rng::Rng;
+    use crate::util::tensor::Tensor;
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// f32 reference: fake-quantized activations × fake-quantized weights.
+    fn ref_matmul(a_fq: &[f32], w_fq: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f64; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let av = a_fq[i * k + l] as f64;
+                for j in 0..n {
+                    out[i * n + j] += av * w_fq[l * n + j] as f64;
+                }
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+
+    #[test]
+    fn quantize_matches_fake_quant_grid() {
+        let mut rng = Rng::new(5);
+        let x = rand_vec(&mut rng, 512, 1.3);
+        let mn = x.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let qp = QParams::asymmetric(mn, mx, 8);
+        let qa = QAct::quantize(&x, &qp).unwrap();
+        for (i, &v) in x.iter().enumerate() {
+            assert_eq!(qa.dequant(i), qp.fq(v), "element {i}");
+        }
+        assert_eq!(qa.dequant_all()[7], qa.dequant(7));
+    }
+
+    #[test]
+    fn quantize_rejects_non_8bit_grid() {
+        let qp = QParams::asymmetric(-1.0, 1.0, 4);
+        assert!(QAct::quantize(&[0.0], &qp).is_err());
+    }
+
+    /// The integer GEMM equals the fake-quant f32 matmul to f32 rounding:
+    /// the i32 accumulation is exact, so the only difference is the f64
+    /// accumulation order of the reference.
+    #[test]
+    fn gemm_q8_matches_fake_quant_reference() {
+        let (m, k, n) = (7, 48, 33);
+        let mut rng = Rng::new(11);
+        let x = rand_vec(&mut rng, m * k, 0.8);
+        let wv = rand_vec(&mut rng, k * n, 0.05);
+        let w = Tensor::new(vec![k, n], wv).unwrap();
+
+        let mn = x.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let qp = QParams::asymmetric(mn, mx, 8);
+        let qa = QAct::quantize(&x, &qp).unwrap();
+        let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax)).unwrap();
+
+        let bias: Vec<f32> = rand_vec(&mut rng, n, 0.1);
+        let mut out = vec![0.0f32; m * n];
+        gemm_q8(qa.view(), m, &wq, Some(&bias), &mut out);
+
+        let a_fq = qa.dequant_all();
+        let w_fq = fake_quant_weight(&w, EstimatorKind::MinMax, 8);
+        let expect = ref_matmul(&a_fq, w_fq.data(), m, k, n);
+        for i in 0..m * n {
+            let e = expect[i] + bias[i % n];
+            assert!(
+                (out[i] - e).abs() <= 1e-4 * (1.0 + e.abs()),
+                "({i}): got {} want {e}",
+                out[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_q8q8_matches_fake_quant_reference() {
+        let (m, k, n) = (9, 16, 21);
+        let mut rng = Rng::new(13);
+        let xa = rand_vec(&mut rng, m * k, 0.7);
+        let xb = rand_vec(&mut rng, n * k, 0.4);
+        let qp_of = |v: &[f32]| {
+            let mn = v.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            QParams::asymmetric(mn, mx, 8)
+        };
+        let qa = QAct::quantize(&xa, &qp_of(&xa)).unwrap();
+        let qb = QAct::quantize(&xb, &qp_of(&xb)).unwrap();
+
+        let mut out = vec![0.0f32; m * n];
+        gemm_q8q8(qa.view(), qb.view(), m, n, k, &mut out);
+
+        // Reference: dequantized a (m×k) times dequantized bt (n×k) transposed.
+        let af = qa.dequant_all();
+        let bf = qb.dequant_all();
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += af[i * k + l] as f64 * bf[j * k + l] as f64;
+                }
+                let e = acc as f32;
+                let got = out[i * n + j];
+                assert!((got - e).abs() <= 1e-4 * (1.0 + e.abs()), "({i},{j}): {got} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_f32q8_hoists_weight_scale() {
+        let (m, k, n) = (3, 24, 10);
+        let mut rng = Rng::new(17);
+        let x = rand_vec(&mut rng, m * k, 1.0);
+        let wv = rand_vec(&mut rng, k * n, 0.05);
+        let w = Tensor::new(vec![k, n], wv).unwrap();
+        let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax)).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        gemm_f32q8(&x, m, &wq, None, &mut out);
+        let w_fq = fake_quant_weight(&w, EstimatorKind::MinMax, 8);
+        let expect = ref_matmul(&x, w_fq.data(), m, k, n);
+        for i in 0..m * n {
+            assert!((out[i] - expect[i]).abs() <= 1e-4 * (1.0 + expect[i].abs()), "{i}");
+        }
+    }
+
+    #[test]
+    fn gemm_f32_transposed_rhs() {
+        // 2×2 sanity: a = [[1,2],[3,4]], b = [[1,0],[0,1]] (bt == b here).
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let bt = [1.0, 0.0, 0.0, 1.0];
+        let mut out = [0.0f32; 4];
+        gemm_f32(&a, &bt, Some(&[10.0, 20.0]), 2, 2, 2, &mut out);
+        assert_eq!(out, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    /// Tiling must not change results: exercise n far beyond one tile.
+    #[test]
+    fn tiling_is_transparent() {
+        let (m, k, n) = (2, 8, NC * 2 + 5);
+        let mut rng = Rng::new(23);
+        let x = rand_vec(&mut rng, m * k, 0.5);
+        let wv = rand_vec(&mut rng, k * n, 0.1);
+        let w = Tensor::new(vec![k, n], wv).unwrap();
+        let qp = QParams::asymmetric(-2.0, 2.0, 8);
+        let qa = QAct::quantize(&x, &qp).unwrap();
+        let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax)).unwrap();
+        let mut out = vec![0.0f32; m * n];
+        gemm_q8(qa.view(), m, &wq, None, &mut out);
+        // Column NC (first of second tile) equals a directly computed dot.
+        let j = NC;
+        let acc: i32 = (0..k).map(|l| qa.data[l] as i32 * wq.wt[j * k + l] as i32).sum();
+        let want = qa.scale * wq.scale * (acc - qa.zero_point * wq.col_sum[j]) as f32;
+        assert_eq!(out[j], want);
+    }
+}

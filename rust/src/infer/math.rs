@@ -1,0 +1,169 @@
+//! Scalar/row math shared by the integer forward pass and the f32
+//! fake-quant reference: LayerNorm, tanh-GELU, the clipped softmax of
+//! eq. 4, and the per-row scoring epilogue.
+//!
+//! These mirror the python kernels (`python/compile/kernels/`) operation
+//! for operation — same ε, same GELU approximation (`jax.nn.gelu`'s
+//! default tanh form), same `−1e30` causal mask, same stable-softmax
+//! shift — so the only sources of divergence from the AOT graph are f32
+//! rounding and accumulation order.
+
+use crate::serve::protocol::ScoreRow;
+
+/// LayerNorm ε (matches `kernels/layernorm.py::_EPS`).
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+/// Additive causal-mask value (matches `kernels/attention.py::_NEG_INF`).
+pub(crate) const NEG_INF: f32 = -1e30;
+
+/// LayerNorm over the trailing dimension: `out = (x − µ)/√(σ²+ε)·γ + β`,
+/// row by row (`gamma.len()` is the feature width).
+pub(crate) fn layernorm_rows(x: &[f32], gamma: &[f32], beta: &[f32], out: &mut [f32]) {
+    let d = gamma.len();
+    debug_assert_eq!(x.len(), out.len());
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mu = xr.iter().sum::<f32>() / d as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for ((o, &v), (&g, &b)) in or.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+            *o = (v - mu) * rstd * g + b;
+        }
+    }
+}
+
+/// Tanh-approximated GELU (`jax.nn.gelu`'s default `approximate=True`):
+/// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub(crate) fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub(crate) fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// In-place stretched-and-clipped softmax over one score row (eq. 4):
+/// stable softmax, then `clip((ζ−γ)·p + γ, 0, 1)`. γ=0, ζ=1 is exactly
+/// vanilla softmax.
+pub(crate) fn softmax_stretch_clip(row: &mut [f32], gamma: f32, zeta: f32) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        let p = *v / sum;
+        *v = ((zeta - gamma) * p + gamma).clamp(0.0, 1.0);
+    }
+}
+
+/// Per-row masked token scoring: summed NLL (via a stable log-softmax),
+/// scored-position count, and greedy-argmax matches — the `serve_score`
+/// output contract. `logits` is `(b·t, v)` row-major; padding positions
+/// carry `mask == 0` and contribute nothing, so all-padding rows score
+/// exactly `(0, 0, 0)`.
+pub(crate) fn score_rows(
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+    v: usize,
+) -> Vec<ScoreRow> {
+    let mut rows = Vec::with_capacity(b);
+    for bi in 0..b {
+        let mut row = ScoreRow { nll: 0.0, count: 0.0, correct: 0.0 };
+        for ti in 0..t {
+            let p = bi * t + ti;
+            if mask[p] == 0.0 {
+                continue;
+            }
+            let lg = &logits[p * v..(p + 1) * v];
+            let tgt = targets[p] as usize;
+            let m = lg.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + lg.iter().map(|&x| (x - m).exp()).sum::<f32>().ln();
+            row.nll += lse - lg[tgt];
+            row.count += 1.0;
+            // First-max argmax, matching jnp.argmax tie-breaking.
+            let mut best = 0;
+            for (j, &x) in lg.iter().enumerate() {
+                if x > lg[best] {
+                    best = j;
+                }
+            }
+            if best == tgt {
+                row.correct += 1.0;
+            }
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layernorm_rows(&x, &g, &b, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|&v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_vanilla_sums_to_one() {
+        let mut row = [0.1f32, 0.7, -0.3, 2.0];
+        softmax_stretch_clip(&mut row, 0.0, 1.0);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6, "sum {s}");
+        assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn clipped_softmax_can_reach_exact_zero() {
+        // gamma < 0 stretches probabilities below zero; the clip pins them
+        // to exactly 0 — the paper's "no attention" mechanism (§4.1).
+        let mut row = [10.0f32, 0.0, 0.0, 0.0];
+        softmax_stretch_clip(&mut row, -0.1, 1.0);
+        assert!(row[1] == 0.0 && row[2] == 0.0 && row[3] == 0.0, "{row:?}");
+        assert!(row[0] > 0.99);
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu_tanh(0.0), 0.0);
+        assert!((gelu_tanh(1.0) - 0.841_192).abs() < 1e-4);
+        assert!(gelu_tanh(-10.0).abs() < 1e-4);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn score_rows_masks_and_counts() {
+        // 1 row, 2 positions, vocab 3; second position masked out.
+        let logits = [0.0f32, 2.0, 0.0, 5.0, 0.0, 0.0];
+        let targets = [1, 0];
+        let mask = [1.0, 0.0];
+        let rows = score_rows(&logits, &targets, &mask, 1, 2, 3);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].count, 1.0);
+        assert_eq!(rows[0].correct, 1.0);
+        // nll = lse - logit[1] over [0,2,0]
+        let lse = (1.0f32 + 2.0f32.exp() + 1.0).ln();
+        assert!((rows[0].nll - (lse - 2.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_padding_row_scores_zero() {
+        let logits = [0.3f32, 0.1, 0.2, 0.9];
+        let rows = score_rows(&logits, &[0, 0], &[0.0, 0.0], 1, 2, 2);
+        assert_eq!(rows[0], ScoreRow { nll: 0.0, count: 0.0, correct: 0.0 });
+    }
+}

@@ -1,0 +1,49 @@
+//! Native INT8 CPU inference — the backend that turns the paper's
+//! *accuracy* result into a *throughput* result.
+//!
+//! The PJRT serving path (`qtx serve --engine pjrt`) runs `serve_score`,
+//! which only **simulates** W8A8 quantization: every tensor is f32 and
+//! each quant point applies eq. 1's fake-quant
+//! (`x̂ = s·(clip(⌊x/s⌉ + z, 0, 2ᵇ−1) − z)`, paper §2) before the next f32
+//! matmul. That proves the accuracy claim but pays f32 FLOPs *plus* the
+//! quantization arithmetic. This module executes the same calibrated model
+//! with real integer kernels:
+//!
+//! * weights live as `i8` on the symmetric weight-PTQ grid
+//!   ([`crate::quant::weights::Int8Tensor`], §5 "symmetric weights");
+//! * activations are requantized to `u8` codes at every calibrated tap
+//!   point (asymmetric static ranges, §5/§C.4) — the "requant" between
+//!   layers is scale-multiply + round-to-nearest-even onto the next grid;
+//! * matmuls accumulate `u8×i8 → i32` (or `u8×u8` for the two
+//!   activation-activation products in attention) with the zero-point
+//!   corrections hoisted — see [`gemm`] for the kernel layout and why a
+//!   fixed-point requant shift is deliberately *not* used.
+//!
+//! Outlier-free pretraining (clipped softmax / gated attention) is what
+//! makes this viable with plain **per-tensor** grids: no per-channel
+//! scales, no mixed precision, no outlier splitting (cf. *Outlier
+//! Suppression*, Wei et al. 2022). The backend plugs in behind the same
+//! [`crate::serve::engine::ScoreEngine`] trait as the PJRT session
+//! (`qtx serve --engine native-int8`), so the continuous batcher, load
+//! generator, `/statz`, and `bench_serve` run unchanged on top of it.
+//!
+//! Module map:
+//!
+//! * [`gemm`]      — cache-blocked integer GEMM kernels + quantized
+//!   activation buffers.
+//! * [`model`]     — [`model::Int8Model`]: weight extraction and the full
+//!   scoring forward (embed → clipped-softmax/gated attention → FFN →
+//!   unquantized head → per-row NLL).
+//! * [`engine`]    — [`engine::NativeInt8Engine`]: artifact + checkpoint
+//!   loading, PJRT-shared calibration, `ScoreEngine` impl.
+//! * [`reference`] — f32 fake-quant oracle used by the artifact-free
+//!   parity tests.
+
+pub mod engine;
+pub mod gemm;
+mod math;
+pub mod model;
+pub mod reference;
+
+pub use engine::NativeInt8Engine;
+pub use model::{Int8Model, ModelOptions};

@@ -1,0 +1,851 @@
+//! The native INT8 scoring model: calibrated weights as `i8`, activations
+//! requantized to `u8` at every calibrated tap point, all heavy matmuls as
+//! integer GEMMs.
+//!
+//! # How it mirrors the fake-quant graph
+//!
+//! The `serve_score` AOT program *simulates* quantization: every tap point
+//! applies eq. 1 in f32 and the matmuls run on the dequantized values.
+//! This model executes the same arithmetic natively: a tapped activation is
+//! held as its `u8` code (the value eq. 1 would round it to — same grid,
+//! same round-to-nearest-even), and any matmul whose input is a tapped
+//! activation runs as an integer GEMM over the codes
+//! ([`crate::infer::gemm`]). Because the `i32` accumulation is exact, the
+//! integer path agrees with the fake-quant simulation up to f32 rounding of
+//! the non-GEMM glue (LayerNorm, softmax, GELU, gates) — the parity tests
+//! below and the artifact-gated `serve_native` integration test pin this
+//! down.
+//!
+//! # Which matmuls are integer
+//!
+//! Everything whose left operand is a tap output: q/k/v projections on the
+//! post-LN (BERT) path, attention scores `Q·Kᵀ` and context `P·V` (both
+//! operands are tapped activations), the output projection, and both FFN
+//! matmuls. Two exceptions stay f32 by *construction of the graph*, not as
+//! shortcuts:
+//!
+//! * pre-LN (OPT) q/k/v projections — their input is the un-tapped `ln1`
+//!   output, which the fake-quant graph also feeds in f32 ([`gemm_f32q8`]
+//!   keeps the weight integer);
+//! * the output head — §5 excludes it from quantization entirely.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::infer::gemm::{gemm_f32, gemm_f32q8, gemm_q8, gemm_q8q8, Int8Weight, QAct, QView};
+use crate::infer::math::{
+    gelu_tanh, layernorm_rows, score_rows, sigmoid, softmax_stretch_clip, NEG_INF,
+};
+use crate::infer::reference::{gate_logits, is_post_ln};
+use crate::quant::estimators::EstimatorKind;
+use crate::quant::grid::QParams;
+use crate::quant::weights::{quantize_weight_int8, Int8Tensor};
+use crate::runtime::artifact::ConfigInfo;
+use crate::serve::protocol::ScoreRow;
+use crate::util::tensor::{IntTensor, Tensor};
+
+/// Forward-pass hyperparameters frozen into the model at build time (they
+/// are runtime inputs of the AOT graph; the native model bakes them in).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelOptions {
+    /// Clipped-softmax stretch (eq. 4); 0 is vanilla.
+    pub gamma: f32,
+    /// Clipped-softmax stretch upper factor; 1 is vanilla.
+    pub zeta: f32,
+    /// Gate output multiplier (§B.6; 1 unless fine-tuning-style serving).
+    pub gate_scale: f32,
+    /// Weight range estimator (min-max per §C.4 default).
+    pub w_est: EstimatorKind,
+}
+
+impl Default for ModelOptions {
+    fn default() -> Self {
+        ModelOptions { gamma: 0.0, zeta: 1.0, gate_scale: 1.0, w_est: EstimatorKind::MinMax }
+    }
+}
+
+struct Layer {
+    wq: Int8Weight,
+    wk: Int8Weight,
+    wv: Int8Weight,
+    wo: Int8Weight,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    bo: Vec<f32>,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Int8Weight,
+    b1: Vec<f32>,
+    w2: Int8Weight,
+    b2: Vec<f32>,
+}
+
+/// A fully materialized INT8 scoring model for one token-family config.
+pub struct Int8Model {
+    pub cfg: ConfigInfo,
+    opts: ModelOptions,
+    /// Calibrated activation grids by quant-point name.
+    qp: HashMap<String, QParams>,
+    tok_emb: Int8Tensor,
+    pos_emb: Int8Tensor,
+    emb_ln: Option<(Vec<f32>, Vec<f32>)>,
+    layers: Vec<Layer>,
+    final_ln: Option<(Vec<f32>, Vec<f32>)>,
+    /// Head weights transposed to `(v, d)` for the f32 GEMM; unquantized.
+    head_wt: Vec<f32>,
+    head_b: Vec<f32>,
+    /// Gating-module parameters, name-addressed for the shared
+    /// [`gate_logits`] code. Gates stay f32: they are outside the
+    /// weight-PTQ set (`quantize=false` in the manifest).
+    gate_params: Vec<(String, Tensor)>,
+}
+
+impl Int8Model {
+    /// Build from raw (unquantized) checkpoint parameters plus the
+    /// calibrated activation grids. Weight quantization happens here with
+    /// `opts.w_est`, landing on exactly the grid
+    /// [`crate::coordinator::quantize::quantize_weights`] fake-quantizes
+    /// onto (see `quant::weights::int8_matches_fake_quant`).
+    pub fn build(
+        cfg: &ConfigInfo,
+        params: &[(String, Tensor)],
+        quant_points: &[String],
+        act_qp: &[QParams],
+        opts: ModelOptions,
+    ) -> Result<Int8Model> {
+        if cfg.family == "vit" {
+            bail!("native INT8 backend is token-based (vision serving is a ROADMAP item)");
+        }
+        if quant_points.len() != act_qp.len() {
+            bail!(
+                "quant point list ({}) and calibration ({}) disagree",
+                quant_points.len(),
+                act_qp.len()
+            );
+        }
+        let qp: HashMap<String, QParams> =
+            quant_points.iter().cloned().zip(act_qp.iter().copied()).collect();
+        for (name, q) in &qp {
+            if q.qmax != 255.0 || q.zero_point.fract() != 0.0 {
+                bail!(
+                    "quant point {name:?}: grid (qmax {}, zp {}) is not an 8-bit \
+                     integer grid — the native backend serves W8A8 only",
+                    q.qmax,
+                    q.zero_point
+                );
+            }
+        }
+
+        let find = |name: &str| -> Result<&Tensor> {
+            params
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, t)| t)
+                .with_context(|| format!("checkpoint missing param {name:?}"))
+        };
+        let vecf = |name: &str| -> Result<Vec<f32>> { Ok(find(name)?.data().to_vec()) };
+        let int8w = |name: &str, want_k: usize| -> Result<Int8Weight> {
+            let t = find(name)?;
+            let w = Int8Weight::from_int8(&quantize_weight_int8(t, opts.w_est))
+                .with_context(|| format!("param {name:?}"))?;
+            if w.k != want_k {
+                bail!("param {name:?}: input dim {} != expected {want_k}", w.k);
+            }
+            Ok(w)
+        };
+
+        let d = cfg.d_model;
+        let tok_emb = quantize_weight_int8(find("tok_emb")?, opts.w_est);
+        let pos_emb = quantize_weight_int8(find("pos_emb")?, opts.w_est);
+        if tok_emb.shape != vec![cfg.vocab_size, d] || pos_emb.shape != vec![cfg.seq_len, d] {
+            bail!(
+                "embedding shapes {:?}/{:?} do not match config (vocab {}, T {}, d {})",
+                tok_emb.shape,
+                pos_emb.shape,
+                cfg.vocab_size,
+                cfg.seq_len,
+                d
+            );
+        }
+        let emb_ln = if cfg.family == "bert" {
+            Some((vecf("emb_ln.g")?, vecf("emb_ln.b")?))
+        } else {
+            None
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        let mut gate_params: Vec<(String, Tensor)> = Vec::new();
+        for li in 0..cfg.n_layers {
+            let lp = |s: &str| format!("L{li}.{s}");
+            let w1 = int8w(&lp("w1"), d)?;
+            if cfg.use_gate {
+                let gate_names: &[&str] = match cfg.attention.as_str() {
+                    "gated_linear" | "gated_allheads" => &["gate.w", "gate.b"],
+                    "gated_mlp" => &["gate.w1", "gate.b1", "gate.w2", "gate.b2"],
+                    other => bail!("unknown gated attention variant {other:?}"),
+                };
+                for n in gate_names {
+                    let full = lp(n);
+                    gate_params.push((full.clone(), find(&full)?.clone()));
+                }
+            }
+            layers.push(Layer {
+                wq: int8w(&lp("wq"), d)?,
+                wk: int8w(&lp("wk"), d)?,
+                wv: int8w(&lp("wv"), d)?,
+                wo: int8w(&lp("wo"), d)?,
+                bq: vecf(&lp("bq"))?,
+                bk: vecf(&lp("bk"))?,
+                bv: vecf(&lp("bv"))?,
+                bo: vecf(&lp("bo"))?,
+                ln1_g: vecf(&lp("ln1.g"))?,
+                ln1_b: vecf(&lp("ln1.b"))?,
+                ln2_g: vecf(&lp("ln2.g"))?,
+                ln2_b: vecf(&lp("ln2.b"))?,
+                w2: int8w(&lp("w2"), w1.n)?,
+                w1,
+                b1: vecf(&lp("b1"))?,
+                b2: vecf(&lp("b2"))?,
+            });
+        }
+
+        let final_ln = if is_post_ln(cfg) {
+            None
+        } else {
+            Some((vecf("final_ln.g")?, vecf("final_ln.b")?))
+        };
+
+        // Head stays f32 (§5) — transpose (d, v) → (v, d) for the GEMM.
+        let head_w = find("head.w")?;
+        let &[hd, v] = head_w.shape() else { bail!("head.w must be rank 2") };
+        if hd != d || v != cfg.vocab_size {
+            bail!(
+                "head.w shape ({hd}, {v}) != (d_model {d}, vocab {})",
+                cfg.vocab_size
+            );
+        }
+        let mut head_wt = vec![0.0f32; v * d];
+        for (i, row) in head_w.data().chunks_exact(v).enumerate() {
+            for (j, &x) in row.iter().enumerate() {
+                head_wt[j * d + i] = x;
+            }
+        }
+        let head_b = vecf("head.b")?;
+
+        Ok(Int8Model {
+            cfg: cfg.clone(),
+            opts,
+            qp,
+            tok_emb,
+            pos_emb,
+            emb_ln,
+            layers,
+            final_ln,
+            head_wt,
+            head_b,
+            gate_params,
+        })
+    }
+
+    fn qp(&self, name: &str) -> Result<&QParams> {
+        self.qp
+            .get(name)
+            .with_context(|| format!("no calibrated grid for quant point {name:?}"))
+    }
+
+    /// Requantize a tap-point tensor onto its calibrated grid.
+    fn tap(&self, name: &str, x: &[f32]) -> Result<QAct> {
+        QAct::quantize(x, self.qp(name)?).with_context(|| format!("quant point {name:?}"))
+    }
+
+    /// Score a packed batch: `x`/`targets` are `(b, t)` token ids, `mask`
+    /// is the scored-position mask (all-zero rows are padding and score
+    /// `(0, 0, 0)`). Returns one [`ScoreRow`] per batch row.
+    pub fn forward(
+        &self,
+        x: &IntTensor,
+        targets: &IntTensor,
+        mask: &Tensor,
+    ) -> Result<Vec<ScoreRow>> {
+        let &[b, t] = x.shape() else { bail!("x must be (batch, seq)") };
+        let cfg = &self.cfg;
+        let (d, h) = (cfg.d_model, cfg.n_heads);
+        let dh = d / h;
+        let m = b * t;
+        let pre_ln = !is_post_ln(cfg);
+        let opts = &self.opts;
+        for &tg in targets.data() {
+            if tg < 0 || tg as usize >= cfg.vocab_size {
+                bail!("target id {tg} outside vocab {}", cfg.vocab_size);
+            }
+        }
+
+        // ---- embeddings: i8 gather + dequant add (not a GEMM) ----
+        let mut embed_f = vec![0.0f32; m * d];
+        for (p, &tok) in x.data().iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= cfg.vocab_size {
+                bail!("token id {tok} outside vocab {}", cfg.vocab_size);
+            }
+            let ti = p % t;
+            let dst = &mut embed_f[p * d..(p + 1) * d];
+            for ((o, &tw), &pw) in dst
+                .iter_mut()
+                .zip(&self.tok_emb.data[tok * d..(tok + 1) * d])
+                .zip(&self.pos_emb.data[ti * d..(ti + 1) * d])
+            {
+                *o = self.tok_emb.scale * tw as f32 + self.pos_emb.scale * pw as f32;
+            }
+        }
+        if let Some((g, bb)) = &self.emb_ln {
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&embed_f, g, bb, &mut out);
+            embed_f = out;
+        }
+        let mut h_q = self.tap("embed", &embed_f)?;
+        let mut h_f = h_q.dequant_all();
+
+        let mut scores = vec![0.0f32; t * t]; // per-(b,h) scratch
+        let mut ctx_f = vec![0.0f32; t * dh];
+        let mut vt = vec![0u8; dh * t];
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            let lp = |s: &str| format!("L{li}.{s}");
+
+            // Attention input: post-LN reads the tapped block input
+            // directly (integer GEMM, f32 view borrowed from `h_f`);
+            // pre-LN normalizes first (f32 input, integer weights —
+            // mirroring the graph, see module docs).
+            let xin_ln: Option<Vec<f32>> = if pre_ln {
+                let mut out = vec![0.0f32; m * d];
+                layernorm_rows(&h_f, &lw.ln1_g, &lw.ln1_b, &mut out);
+                Some(out)
+            } else {
+                None
+            };
+            let xin_f: &[f32] = xin_ln.as_deref().unwrap_or(&h_f);
+            let xin_q: Option<&QAct> = if pre_ln { None } else { Some(&h_q) };
+            let proj = |w: &Int8Weight, bias: &[f32], out: &mut [f32]| match xin_q {
+                Some(q) => gemm_q8(q.view(), m, w, Some(bias), out),
+                None => gemm_f32q8(xin_f, m, w, Some(bias), out),
+            };
+            let mut buf = vec![0.0f32; m * d];
+            proj(&lw.wq, &lw.bq, &mut buf);
+            let q_q = self.tap(&lp("q"), &buf)?;
+            proj(&lw.wk, &lw.bk, &mut buf);
+            let k_q = self.tap(&lp("k"), &buf)?;
+            proj(&lw.wv, &lw.bv, &mut buf);
+            let v_q = self.tap(&lp("v"), &buf)?;
+
+            // Head split is a pure permutation of the u8 codes.
+            let q_h = split_heads(&q_q.data, b, t, h, dh);
+            let k_h = split_heads(&k_q.data, b, t, h, dh);
+            let v_h = split_heads(&v_q.data, b, t, h, dh);
+
+            let glog = if cfg.use_gate {
+                Some(gate_logits(cfg, &self.gate_params, li, xin_f, b, t, h, dh)?)
+            } else {
+                None
+            };
+
+            // Scores Q·Kᵀ (u8×u8 integer GEMM per head) → clipped softmax
+            // → requantize the probability matrix on its calibrated grid.
+            let probs_qp = *self.qp(&lp("probs"))?;
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            let mut probs_q = vec![0u8; b * h * t * t];
+            let ctx_qp = *self.qp(&lp("ctx"))?;
+            let mut ctx_q = vec![0u8; b * h * t * dh];
+            for bi in 0..b {
+                for hi in 0..h {
+                    let off = ((bi * h + hi) * t) * dh;
+                    let qv = QView {
+                        data: &q_h[off..off + t * dh],
+                        scale: q_q.scale,
+                        zero_point: q_q.zero_point,
+                    };
+                    let kv = QView {
+                        data: &k_h[off..off + t * dh],
+                        scale: k_q.scale,
+                        zero_point: k_q.zero_point,
+                    };
+                    gemm_q8q8(qv, kv, t, t, dh, &mut scores);
+                    for (ti, row) in scores.chunks_exact_mut(t).enumerate() {
+                        for (si, sv) in row.iter_mut().enumerate() {
+                            *sv = if cfg.causal && si > ti { NEG_INF } else { *sv * inv_sqrt };
+                        }
+                        softmax_stretch_clip(row, opts.gamma, opts.zeta);
+                    }
+                    let p_off = ((bi * h + hi) * t) * t;
+                    quantize_codes(&scores, &probs_qp, &mut probs_q[p_off..p_off + t * t]);
+
+                    // Context P·V (u8×u8): V transposed to (dh, t) so both
+                    // dot operands are unit-stride.
+                    let v_slice = &v_h[off..off + t * dh];
+                    for si in 0..t {
+                        for di in 0..dh {
+                            vt[di * t + si] = v_slice[si * dh + di];
+                        }
+                    }
+                    let pv = QView {
+                        data: &probs_q[p_off..p_off + t * t],
+                        scale: probs_qp.scale,
+                        zero_point: probs_qp.zero_point as i32,
+                    };
+                    let vv = QView {
+                        data: &vt,
+                        scale: v_q.scale,
+                        zero_point: v_q.zero_point,
+                    };
+                    gemm_q8q8(pv, vv, t, dh, t, &mut ctx_f);
+                    if let Some(glog) = &glog {
+                        for (ti, c_row) in ctx_f.chunks_exact_mut(dh).enumerate() {
+                            let gp = sigmoid(glog[(bi * h + hi) * t + ti]);
+                            for o in c_row.iter_mut() {
+                                *o = opts.gate_scale * (gp * *o);
+                            }
+                        }
+                    }
+                    quantize_codes(&ctx_f, &ctx_qp, &mut ctx_q[off..off + t * dh]);
+                }
+            }
+
+            // Merge heads (u8 permutation), then the output projection as
+            // an integer GEMM.
+            let merged = merge_heads(&ctx_q, b, t, h, dh);
+            let ctx_act = QAct {
+                data: merged,
+                scale: ctx_qp.scale,
+                zero_point: ctx_qp.zero_point as i32,
+            };
+            let mut attn_f = vec![0.0f32; m * d];
+            gemm_q8(ctx_act.view(), m, &lw.wo, Some(&lw.bo), &mut attn_f);
+            let attn_q = self.tap(&lp("attn_out"), &attn_f)?;
+
+            let attn_deq = attn_q.dequant_all();
+            let res1_raw: Vec<f32> = h_f.iter().zip(&attn_deq).map(|(a, o)| a + o).collect();
+            let res1_q = self.tap(&lp("res1"), &res1_raw)?;
+            let res1_f = res1_q.dequant_all();
+
+            // fin: the FFN input; base: the residual the FFN adds onto.
+            let (fin_q, base_f) = if pre_ln {
+                let mut out = vec![0.0f32; m * d];
+                layernorm_rows(&res1_f, &lw.ln2_g, &lw.ln2_b, &mut out);
+                (self.tap(&lp("ln2_out"), &out)?, res1_f)
+            } else {
+                let mut out = vec![0.0f32; m * d];
+                layernorm_rows(&res1_f, &lw.ln1_g, &lw.ln1_b, &mut out);
+                let q = self.tap(&lp("ln1_out"), &out)?;
+                let base = q.dequant_all();
+                (q, base)
+            };
+
+            let ff = lw.w1.n;
+            let mut ffn_buf = vec![0.0f32; m * ff];
+            gemm_q8(fin_q.view(), m, &lw.w1, Some(&lw.b1), &mut ffn_buf);
+            for vv2 in ffn_buf.iter_mut() {
+                *vv2 = gelu_tanh(*vv2);
+            }
+            let ffn_h_q = self.tap(&lp("ffn_h"), &ffn_buf)?;
+            let mut ffn_out = vec![0.0f32; m * d];
+            gemm_q8(ffn_h_q.view(), m, &lw.w2, Some(&lw.b2), &mut ffn_out);
+            let ffn_out_q = self.tap(&lp("ffn_out"), &ffn_out)?;
+
+            let ffn_deq = ffn_out_q.dequant_all();
+            let res2_raw: Vec<f32> = base_f.iter().zip(&ffn_deq).map(|(a, o)| a + o).collect();
+            let res2_q = self.tap(&lp("res2"), &res2_raw)?;
+            if pre_ln {
+                h_f = res2_q.dequant_all();
+                h_q = res2_q;
+            } else {
+                let res2_f = res2_q.dequant_all();
+                let mut out = vec![0.0f32; m * d];
+                layernorm_rows(&res2_f, &lw.ln2_g, &lw.ln2_b, &mut out);
+                h_q = self.tap(&lp("ln2_out"), &out)?;
+                h_f = h_q.dequant_all();
+            }
+        }
+
+        if let Some((g, bb)) = &self.final_ln {
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&h_f, g, bb, &mut out);
+            h_f = self.tap("final_out", &out)?.dequant_all();
+        }
+
+        // ---- head (unquantized f32 GEMM) + per-row scoring ----
+        let v = cfg.vocab_size;
+        let mut logits = vec![0.0f32; m * v];
+        gemm_f32(&h_f, &self.head_wt, Some(&self.head_b), m, v, d, &mut logits);
+        Ok(score_rows(&logits, targets.data(), mask.data(), b, t, v))
+    }
+}
+
+/// `(b·t, h·dh)` u8 codes → `(b, h, t, dh)` head-major layout.
+fn split_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
+    let d = h * dh;
+    let mut out = vec![0u8; src.len()];
+    for bi in 0..b {
+        for ti in 0..t {
+            for hi in 0..h {
+                let s = &src[(bi * t + ti) * d + hi * dh..][..dh];
+                out[((bi * h + hi) * t + ti) * dh..][..dh].copy_from_slice(s);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`split_heads`].
+fn merge_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
+    let d = h * dh;
+    let mut out = vec![0u8; src.len()];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let s = &src[((bi * h + hi) * t + ti) * dh..][..dh];
+                out[(bi * t + ti) * d + hi * dh..][..dh].copy_from_slice(s);
+            }
+        }
+    }
+    out
+}
+
+/// Quantize a scratch f32 buffer into pre-allocated `u8` codes
+/// ([`QParams::code`], the shared eq.-1 rounding rule).
+fn quantize_codes(x: &[f32], qp: &QParams, out: &mut [u8]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = qp.code(v) as u8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::reference::forward_f32;
+    use crate::serve::engine::pack_batch;
+    use crate::serve::protocol::ScoreRequest;
+    use crate::util::rng::Rng;
+
+    fn test_cfg(family: &str, attention: &str) -> ConfigInfo {
+        let causal = family == "opt";
+        ConfigInfo {
+            name: format!("{family}_test_{attention}"),
+            family: family.into(),
+            attention: attention.into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            seq_len: 8,
+            vocab_size: 24,
+            n_classes: 0,
+            patch_dim: 0,
+            batch_size: 3,
+            causal,
+            use_gate: attention.starts_with("gated"),
+            objective: if causal { "clm" } else { "mlm" }.into(),
+        }
+    }
+
+    fn push(out: &mut Vec<(String, Tensor)>, rng: &mut Rng, name: &str, shape: &[usize], s: f32) {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * s).collect();
+        out.push((name.to_string(), Tensor::new(shape.to_vec(), data).unwrap()));
+    }
+
+    fn push_const(out: &mut Vec<(String, Tensor)>, name: &str, shape: &[usize], v: f32) {
+        out.push((name.to_string(), Tensor::full(shape, v)));
+    }
+
+    /// Mirror `python/compile/model.py::param_specs` for token families.
+    fn test_params(cfg: &ConfigInfo, seed: u64) -> Vec<(String, Tensor)> {
+        let mut rng = Rng::new(seed);
+        let (d, t, v) = (cfg.d_model, cfg.seq_len, cfg.vocab_size);
+        let (h, ff, gh) = (cfg.n_heads, 4 * cfg.d_model, 3usize);
+        let dh = d / h;
+        let mut p = Vec::new();
+        push(&mut p, &mut rng, "tok_emb", &[v, d], 0.1);
+        push(&mut p, &mut rng, "pos_emb", &[t, d], 0.1);
+        if cfg.family == "bert" {
+            push_const(&mut p, "emb_ln.g", &[d], 1.0);
+            push(&mut p, &mut rng, "emb_ln.b", &[d], 0.02);
+        }
+        for i in 0..cfg.n_layers {
+            let lp = |s: &str| format!("L{i}.{s}");
+            for w in ["wq", "wk", "wv", "wo"] {
+                push(&mut p, &mut rng, &lp(w), &[d, d], 0.15);
+            }
+            for b in ["bq", "bk", "bv", "bo"] {
+                push(&mut p, &mut rng, &lp(b), &[d], 0.02);
+            }
+            match cfg.attention.as_str() {
+                "gated_linear" => {
+                    push(&mut p, &mut rng, &lp("gate.w"), &[h, dh], 0.3);
+                    push_const(&mut p, &lp("gate.b"), &[h], 1.0);
+                }
+                "gated_mlp" => {
+                    push(&mut p, &mut rng, &lp("gate.w1"), &[h, dh, gh], 0.4);
+                    push(&mut p, &mut rng, &lp("gate.b1"), &[h, gh], 0.05);
+                    push(&mut p, &mut rng, &lp("gate.w2"), &[h, gh], 0.4);
+                    push_const(&mut p, &lp("gate.b2"), &[h], 1.0);
+                }
+                "gated_allheads" => {
+                    push(&mut p, &mut rng, &lp("gate.w"), &[d, h], 0.2);
+                    push_const(&mut p, &lp("gate.b"), &[h], 1.0);
+                }
+                _ => {}
+            }
+            push_const(&mut p, &lp("ln1.g"), &[d], 1.0);
+            push(&mut p, &mut rng, &lp("ln1.b"), &[d], 0.02);
+            push(&mut p, &mut rng, &lp("w1"), &[d, ff], 0.12);
+            push(&mut p, &mut rng, &lp("b1"), &[ff], 0.02);
+            push(&mut p, &mut rng, &lp("w2"), &[ff, d], 0.12);
+            push(&mut p, &mut rng, &lp("b2"), &[d], 0.02);
+            push_const(&mut p, &lp("ln2.g"), &[d], 1.0);
+            push(&mut p, &mut rng, &lp("ln2.b"), &[d], 0.02);
+        }
+        if !is_post_ln(cfg) {
+            push_const(&mut p, "final_ln.g", &[d], 1.0);
+            push(&mut p, &mut rng, "final_ln.b", &[d], 0.02);
+        }
+        push(&mut p, &mut rng, "head.w", &[d, v], 0.15);
+        push_const(&mut p, "head.b", &[v], 0.0);
+        p
+    }
+
+    /// The activation tap points the quantized forward hits, mirroring
+    /// `model.py::quant_point_names` for token families.
+    fn test_quant_points(cfg: &ConfigInfo) -> Vec<String> {
+        let post = is_post_ln(cfg);
+        let mut pts = vec!["embed".to_string()];
+        for i in 0..cfg.n_layers {
+            for s in ["q", "k", "v", "probs", "ctx", "attn_out", "res1"] {
+                pts.push(format!("L{i}.{s}"));
+            }
+            if post {
+                pts.push(format!("L{i}.ln1_out"));
+            } else {
+                pts.push(format!("L{i}.ln2_out"));
+            }
+            for s in ["ffn_h", "ffn_out", "res2"] {
+                pts.push(format!("L{i}.{s}"));
+            }
+            if post {
+                pts.push(format!("L{i}.ln2_out"));
+            }
+        }
+        if !post {
+            pts.push("final_out".to_string());
+        }
+        pts
+    }
+
+    /// Which params the host weight-PTQ fake-quantizes (2D matmul weights
+    /// + embeddings; gates and head excluded — manifest `quantize` flags).
+    fn is_quantized_param(name: &str) -> bool {
+        if name.contains("gate") {
+            return false;
+        }
+        name == "tok_emb"
+            || name == "pos_emb"
+            || [".wq", ".wk", ".wv", ".wo", ".w1", ".w2"].iter().any(|s| name.ends_with(s))
+    }
+
+    fn fq_params(params: &[(String, Tensor)], est: EstimatorKind) -> Vec<(String, Tensor)> {
+        params
+            .iter()
+            .map(|(n, t)| {
+                let t2 = if is_quantized_param(n) {
+                    crate::quant::weights::fake_quant_weight(t, est, 8)
+                } else {
+                    t.clone()
+                };
+                (n.clone(), t2)
+            })
+            .collect()
+    }
+
+    /// Run the f32 fake-quant reference and the native INT8 model on the
+    /// same calibrated grids; return (reference rows, native rows).
+    fn run_parity(
+        cfg: &ConfigInfo,
+        gamma: f32,
+        zeta: f32,
+        gate_scale: f32,
+    ) -> (Vec<ScoreRow>, Vec<ScoreRow>) {
+        let params = test_params(cfg, 42);
+        let wq = fq_params(&params, EstimatorKind::MinMax);
+        let points = test_quant_points(cfg);
+
+        // Packed batches via the real serving pack (exercises padding).
+        let mut rng = Rng::new(7);
+        let mut batch = |n_req: usize| {
+            let reqs: Vec<ScoreRequest> = (0..n_req)
+                .map(|_| {
+                    let len = 2 + rng.below(cfg.seq_len as u32 - 1) as usize;
+                    ScoreRequest {
+                        id: None,
+                        tokens: (0..len).map(|_| rng.below(cfg.vocab_size as u32) as i32).collect(),
+                        targets: None,
+                    }
+                })
+                .collect();
+            pack_batch(&reqs, cfg.batch_size, cfg.seq_len, cfg.causal).unwrap()
+        };
+
+        // "Calibrate": record per-point ranges on the weight-quantized
+        // model over two batches (standing in for the PTQ calibrator).
+        let mut ranges: HashMap<String, (f32, f32)> = HashMap::new();
+        for _ in 0..2 {
+            let (x, _, _) = batch(cfg.batch_size);
+            let mut rec = |name: &str, vals: &mut [f32]| {
+                let e = ranges
+                    .entry(name.to_string())
+                    .or_insert((f32::INFINITY, f32::NEG_INFINITY));
+                for &v in vals.iter() {
+                    e.0 = e.0.min(v);
+                    e.1 = e.1.max(v);
+                }
+            };
+            forward_f32(cfg, &wq, &x, gamma, zeta, gate_scale, &mut rec).unwrap();
+        }
+        let qps: Vec<QParams> = points
+            .iter()
+            .map(|pt| {
+                let (mn, mx) = ranges[pt];
+                QParams::asymmetric(mn, mx, 8)
+            })
+            .collect();
+        let qp_map: HashMap<String, QParams> =
+            points.iter().cloned().zip(qps.iter().copied()).collect();
+
+        // Scoring batch (fresh tokens).
+        let (x, targets, mask) = batch(cfg.batch_size - 1); // leave a padding row
+
+        // Reference: f32 forward with in-graph fake-quant taps.
+        let mut fq_tap = |name: &str, vals: &mut [f32]| {
+            if let Some(q) = qp_map.get(name) {
+                for v in vals.iter_mut() {
+                    *v = q.fq(*v);
+                }
+            }
+        };
+        let logits = forward_f32(cfg, &wq, &x, gamma, zeta, gate_scale, &mut fq_tap).unwrap();
+        let ref_rows = score_rows(
+            &logits,
+            targets.data(),
+            mask.data(),
+            cfg.batch_size,
+            cfg.seq_len,
+            cfg.vocab_size,
+        );
+
+        // Native: integer GEMMs from the raw checkpoint + same grids.
+        let opts = ModelOptions { gamma, zeta, gate_scale, w_est: EstimatorKind::MinMax };
+        let model = Int8Model::build(cfg, &params, &points, &qps, opts).unwrap();
+        let rows = model.forward(&x, &targets, &mask).unwrap();
+        (ref_rows, rows)
+    }
+
+    /// Agreement bound between the integer path and the f32 fake-quant
+    /// oracle. Deliberately *tighter* than the pjrt-vs-native bound
+    /// documented in `docs/ARCHITECTURE.md` (0.02·|nll|, Δcorrect ≤ 2):
+    /// here both paths run in-process on identical grids with no XLA in
+    /// between, so only f32 glue rounding and rare one-step requant flips
+    /// remain.
+    fn assert_rows_agree(ref_rows: &[ScoreRow], rows: &[ScoreRow]) {
+        assert_eq!(ref_rows.len(), rows.len());
+        for (i, (r, n)) in ref_rows.iter().zip(rows).enumerate() {
+            assert_eq!(r.count, n.count, "row {i} count");
+            let tol = 0.05 + 0.01 * r.nll.abs();
+            assert!(
+                (r.nll - n.nll).abs() <= tol,
+                "row {i}: reference nll {} vs native {} (tol {tol})",
+                r.nll,
+                n.nll
+            );
+            assert!(
+                (r.correct - n.correct).abs() <= 1.0,
+                "row {i} correct {} vs {}",
+                r.correct,
+                n.correct
+            );
+        }
+    }
+
+    #[test]
+    fn parity_bert_clipped_softmax() {
+        let cfg = test_cfg("bert", "softmax");
+        let (r, n) = run_parity(&cfg, -0.08, 1.05, 1.0);
+        assert_rows_agree(&r, &n);
+        // The padding row (all-zero mask) scores exactly zero natively.
+        let last = n.last().unwrap();
+        assert_eq!(*last, ScoreRow { nll: 0.0, count: 0.0, correct: 0.0 });
+    }
+
+    #[test]
+    fn parity_opt_causal_vanilla() {
+        let cfg = test_cfg("opt", "softmax");
+        let (r, n) = run_parity(&cfg, 0.0, 1.0, 1.0);
+        assert_rows_agree(&r, &n);
+    }
+
+    #[test]
+    fn parity_opt_gated_linear_with_gate_scale() {
+        let cfg = test_cfg("opt", "gated_linear");
+        let (r, n) = run_parity(&cfg, 0.0, 1.0, 2.0);
+        assert_rows_agree(&r, &n);
+    }
+
+    #[test]
+    fn parity_bert_gated_mlp() {
+        let cfg = test_cfg("bert", "gated_mlp");
+        let (r, n) = run_parity(&cfg, -0.05, 1.0, 1.0);
+        assert_rows_agree(&r, &n);
+    }
+
+    #[test]
+    fn parity_opt_gated_allheads() {
+        let cfg = test_cfg("opt", "gated_allheads");
+        let (r, n) = run_parity(&cfg, 0.0, 1.0, 1.0);
+        assert_rows_agree(&r, &n);
+    }
+
+    #[test]
+    fn build_rejects_mismatched_calibration() {
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 1);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-1.0, 1.0, 8); points.len() - 1];
+        assert!(Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).is_err());
+    }
+
+    #[test]
+    fn build_rejects_non_8bit_grids() {
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 1);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-1.0, 1.0, 4); points.len()];
+        assert!(Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).is_err());
+    }
+
+    #[test]
+    fn forward_rejects_out_of_vocab_tokens() {
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 1);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        let model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let (b, t) = (cfg.batch_size, cfg.seq_len);
+        let mut toks = vec![0i32; b * t];
+        toks[3] = cfg.vocab_size as i32; // out of range
+        let x = IntTensor::new(vec![b, t], toks).unwrap();
+        let targets = IntTensor::zeros(&[b, t]);
+        let mask = Tensor::zeros(&[b, t]);
+        assert!(model.forward(&x, &targets, &mask).is_err());
+    }
+}

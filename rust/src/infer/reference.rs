@@ -1,0 +1,361 @@
+//! Host-side f32 reference of the `serve_score` forward pass — the test
+//! oracle the integer backend is validated against without artifacts.
+//!
+//! This mirrors `python/compile/model.py::forward` with
+//! `decompose_attention=True`: embeddings → per-head clipped-softmax /
+//! gated attention (eq. 4/5) → FFN → unquantized head, with a caller-
+//! supplied **tap** applied at every activation tap point. Two tap shapes
+//! matter:
+//!
+//! * a recorder (identity) — enumerates activation ranges, standing in for
+//!   the PTQ calibrator in artifact-free tests;
+//! * a fake-quantizer over a `name → QParams` map — reproducing the
+//!   `eval_quant`/`serve_score` quantization simulation (eq. 1) that the
+//!   integer path of [`crate::infer::model`] must agree with.
+//!
+//! Weights are consumed as given: pass them through
+//! [`crate::coordinator::quantize::quantize_weights`] first to reproduce
+//! the deployment path (host symmetric weight PTQ).
+
+use anyhow::{bail, Context, Result};
+
+use crate::infer::math::{
+    gelu_tanh, layernorm_rows, sigmoid, softmax_stretch_clip, NEG_INF,
+};
+use crate::runtime::artifact::ConfigInfo;
+use crate::util::tensor::{IntTensor, Tensor};
+
+/// Look up a named parameter.
+fn param<'a>(params: &'a [(String, Tensor)], name: &str) -> Result<&'a Tensor> {
+    params
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, t)| t)
+        .with_context(|| format!("reference forward: missing param {name:?}"))
+}
+
+/// Plain f32 matmul: `a (m×k)` row-major × `b (k×n)` row-major, plus bias.
+fn matmul(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for (i, a_row) in a.chunks_exact(k).enumerate() {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        if let Some(bias) = bias {
+            out_row.copy_from_slice(bias);
+        }
+        for (&av, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Run the reference forward for a token-family config. `x` is `(b, t)`
+/// token ids; returns logits `(b·t, v)` row-major. `tap` is invoked at
+/// every quantizable tap point, in graph order, and may mutate the tensor
+/// in place (fake-quant) or just record it.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_f32(
+    cfg: &ConfigInfo,
+    params: &[(String, Tensor)],
+    x: &IntTensor,
+    gamma: f32,
+    zeta: f32,
+    gate_scale: f32,
+    tap: &mut dyn FnMut(&str, &mut [f32]),
+) -> Result<Vec<f32>> {
+    if cfg.family == "vit" {
+        bail!("reference forward is token-based (vision serving is a ROADMAP item)");
+    }
+    let &[b, t] = x.shape() else { bail!("x must be (batch, seq)") };
+    let (d, h) = (cfg.d_model, cfg.n_heads);
+    let dh = d / h;
+    let m = b * t;
+    let pre_ln = !is_post_ln(cfg);
+
+    // ---- embeddings ----
+    let tok_emb = param(params, "tok_emb")?;
+    let pos_emb = param(params, "pos_emb")?;
+    let vocab = tok_emb.shape()[0];
+    let mut hbuf = vec![0.0f32; m * d];
+    for (p, &tok) in x.data().iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= vocab {
+            bail!("token id {tok} outside vocab {vocab}");
+        }
+        let ti = p % t;
+        let dst = &mut hbuf[p * d..(p + 1) * d];
+        for ((o, &tw), &pw) in dst
+            .iter_mut()
+            .zip(&tok_emb.data()[tok * d..(tok + 1) * d])
+            .zip(&pos_emb.data()[ti * d..(ti + 1) * d])
+        {
+            *o = tw + pw;
+        }
+    }
+    if cfg.family == "bert" {
+        let g = param(params, "emb_ln.g")?.data();
+        let bb = param(params, "emb_ln.b")?.data();
+        let mut out = vec![0.0f32; m * d];
+        layernorm_rows(&hbuf, g, bb, &mut out);
+        hbuf = out;
+    }
+    tap("embed", &mut hbuf);
+
+    // ---- blocks ----
+    for li in 0..cfg.n_layers {
+        let lp = |suffix: &str| format!("L{li}.{suffix}");
+        let resid = hbuf.clone();
+        let xin = if pre_ln {
+            let g = param(params, &lp("ln1.g"))?.data();
+            let bb = param(params, &lp("ln1.b"))?.data();
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&hbuf, g, bb, &mut out);
+            out
+        } else {
+            hbuf.clone()
+        };
+
+        let proj = |w: &str, bias: &str| -> Result<Vec<f32>> {
+            Ok(matmul(
+                &xin,
+                param(params, w)?.data(),
+                Some(param(params, bias)?.data()),
+                m,
+                d,
+                d,
+            ))
+        };
+        let mut q = proj(&lp("wq"), &lp("bq"))?;
+        tap(&lp("q"), &mut q);
+        let mut k = proj(&lp("wk"), &lp("bk"))?;
+        tap(&lp("k"), &mut k);
+        let mut v = proj(&lp("wv"), &lp("bv"))?;
+        tap(&lp("v"), &mut v);
+
+        let glog = if cfg.use_gate {
+            Some(gate_logits(cfg, params, li, &xin, b, t, h, dh)?)
+        } else {
+            None
+        };
+
+        // Decomposed attention: probs explicitly, then P·V, like the
+        // act_collect/eval_quant graphs.
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut probs = vec![0.0f32; b * h * t * t];
+        for bi in 0..b {
+            for hi in 0..h {
+                for ti in 0..t {
+                    let q_off = (bi * t + ti) * d + hi * dh;
+                    let row = &mut probs[((bi * h + hi) * t + ti) * t..][..t];
+                    for (si, pv) in row.iter_mut().enumerate() {
+                        let k_off = (bi * t + si) * d + hi * dh;
+                        let mut acc = 0.0f32;
+                        for dd in 0..dh {
+                            acc += q[q_off + dd] * k[k_off + dd];
+                        }
+                        *pv = if cfg.causal && si > ti { NEG_INF } else { acc * scale };
+                    }
+                    softmax_stretch_clip(row, gamma, zeta);
+                }
+            }
+        }
+        tap(&lp("probs"), &mut probs);
+
+        let mut ctx = vec![0.0f32; b * h * t * dh];
+        for bi in 0..b {
+            for hi in 0..h {
+                for ti in 0..t {
+                    let p_row = &probs[((bi * h + hi) * t + ti) * t..][..t];
+                    let c_row = &mut ctx[((bi * h + hi) * t + ti) * dh..][..dh];
+                    for (si, &p) in p_row.iter().enumerate() {
+                        let v_off = (bi * t + si) * d + hi * dh;
+                        for (o, &vv) in c_row.iter_mut().zip(&v[v_off..v_off + dh]) {
+                            *o += p * vv;
+                        }
+                    }
+                    if let Some(glog) = &glog {
+                        // Same association as the graph: sigmoid(g)·ctx
+                        // first, then the §B.6 gate_scale multiplier.
+                        let gp = sigmoid(glog[(bi * h + hi) * t + ti]);
+                        for o in c_row.iter_mut() {
+                            *o = gate_scale * (gp * *o);
+                        }
+                    }
+                }
+            }
+        }
+        tap(&lp("ctx"), &mut ctx);
+
+        // Merge heads back to (b·t, d).
+        let mut merged = vec![0.0f32; m * d];
+        for bi in 0..b {
+            for hi in 0..h {
+                for ti in 0..t {
+                    let src = &ctx[((bi * h + hi) * t + ti) * dh..][..dh];
+                    merged[(bi * t + ti) * d + hi * dh..][..dh].copy_from_slice(src);
+                }
+            }
+        }
+
+        let mut attn_out = matmul(
+            &merged,
+            param(params, &lp("wo"))?.data(),
+            Some(param(params, &lp("bo"))?.data()),
+            m,
+            d,
+            d,
+        );
+        tap(&lp("attn_out"), &mut attn_out);
+        let mut res1: Vec<f32> = resid.iter().zip(&attn_out).map(|(a, o)| a + o).collect();
+        tap(&lp("res1"), &mut res1);
+
+        // fin: post-LN re-normalizes res1 (and res1 itself becomes the
+        // residual base); pre-LN taps ln2(res1) and keeps res1 as base.
+        let fin = if pre_ln {
+            let g = param(params, &lp("ln2.g"))?.data();
+            let bb = param(params, &lp("ln2.b"))?.data();
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&res1, g, bb, &mut out);
+            tap(&lp("ln2_out"), &mut out);
+            out
+        } else {
+            let g = param(params, &lp("ln1.g"))?.data();
+            let bb = param(params, &lp("ln1.b"))?.data();
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&res1, g, bb, &mut out);
+            tap(&lp("ln1_out"), &mut out);
+            res1 = out.clone();
+            out
+        };
+
+        let w1 = param(params, &lp("w1"))?;
+        let ff = w1.shape()[1];
+        let mut ffn_h = matmul(&fin, w1.data(), Some(param(params, &lp("b1"))?.data()), m, d, ff);
+        for vv in ffn_h.iter_mut() {
+            *vv = gelu_tanh(*vv);
+        }
+        tap(&lp("ffn_h"), &mut ffn_h);
+        let mut ffn_out = matmul(
+            &ffn_h,
+            param(params, &lp("w2"))?.data(),
+            Some(param(params, &lp("b2"))?.data()),
+            m,
+            ff,
+            d,
+        );
+        tap(&lp("ffn_out"), &mut ffn_out);
+        let mut res2: Vec<f32> = res1.iter().zip(&ffn_out).map(|(a, o)| a + o).collect();
+        tap(&lp("res2"), &mut res2);
+        if !pre_ln {
+            let g = param(params, &lp("ln2.g"))?.data();
+            let bb = param(params, &lp("ln2.b"))?.data();
+            let mut out = vec![0.0f32; m * d];
+            layernorm_rows(&res2, g, bb, &mut out);
+            tap(&lp("ln2_out"), &mut out);
+            res2 = out;
+        }
+        hbuf = res2;
+    }
+
+    if pre_ln {
+        let g = param(params, "final_ln.g")?.data();
+        let bb = param(params, "final_ln.b")?.data();
+        let mut out = vec![0.0f32; m * d];
+        layernorm_rows(&hbuf, g, bb, &mut out);
+        tap("final_out", &mut out);
+        hbuf = out;
+    }
+
+    // ---- head (unquantized, §5) ----
+    let head_w = param(params, "head.w")?;
+    let vsz = head_w.shape()[1];
+    Ok(matmul(&hbuf, head_w.data(), Some(param(params, "head.b")?.data()), m, d, vsz))
+}
+
+/// `true` for the post-LN (BERT) block layout; pre-LN otherwise (OPT/ViT).
+pub fn is_post_ln(cfg: &ConfigInfo) -> bool {
+    cfg.family == "bert"
+}
+
+/// Gating module logits `G(x)` per Table 4, shaped `(b·h·t)` — shared
+/// across positions, per-head (§4.2). `xin` is the attention input
+/// `(b·t, d)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gate_logits(
+    cfg: &ConfigInfo,
+    params: &[(String, Tensor)],
+    li: usize,
+    xin: &[f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    dh: usize,
+) -> Result<Vec<f32>> {
+    let d = h * dh;
+    let lp = |s: &str| format!("L{li}.{s}");
+    let mut out = vec![0.0f32; b * h * t];
+    match cfg.attention.as_str() {
+        "gated_linear" => {
+            let w = param(params, &lp("gate.w"))?.data(); // (h, dh)
+            let bias = param(params, &lp("gate.b"))?.data(); // (h,)
+            for bi in 0..b {
+                for hi in 0..h {
+                    for ti in 0..t {
+                        let x_off = (bi * t + ti) * d + hi * dh;
+                        let mut acc = bias[hi];
+                        for dd in 0..dh {
+                            acc += xin[x_off + dd] * w[hi * dh + dd];
+                        }
+                        out[(bi * h + hi) * t + ti] = acc;
+                    }
+                }
+            }
+        }
+        "gated_mlp" => {
+            let w1 = param(params, &lp("gate.w1"))?; // (h, dh, gh)
+            let gh = w1.shape()[2];
+            let w1 = w1.data();
+            let b1 = param(params, &lp("gate.b1"))?.data(); // (h, gh)
+            let w2 = param(params, &lp("gate.w2"))?.data(); // (h, gh)
+            let b2 = param(params, &lp("gate.b2"))?.data(); // (h,)
+            for bi in 0..b {
+                for hi in 0..h {
+                    for ti in 0..t {
+                        let x_off = (bi * t + ti) * d + hi * dh;
+                        let mut acc = b2[hi];
+                        for kk in 0..gh {
+                            let mut hid = b1[hi * gh + kk];
+                            for dd in 0..dh {
+                                hid += xin[x_off + dd] * w1[(hi * dh + dd) * gh + kk];
+                            }
+                            acc += hid.max(0.0) * w2[hi * gh + kk];
+                        }
+                        out[(bi * h + hi) * t + ti] = acc;
+                    }
+                }
+            }
+        }
+        "gated_allheads" => {
+            // merge_heads(split_heads(xin)) == xin: the gate reads the full
+            // d-dim input per position.
+            let w = param(params, &lp("gate.w"))?.data(); // (d, h)
+            let bias = param(params, &lp("gate.b"))?.data(); // (h,)
+            for bi in 0..b {
+                for ti in 0..t {
+                    let x_row = &xin[(bi * t + ti) * d..][..d];
+                    for hi in 0..h {
+                        let mut acc = bias[hi];
+                        for (dd, &xv) in x_row.iter().enumerate() {
+                            acc += xv * w[dd * h + hi];
+                        }
+                        out[(bi * h + hi) * t + ti] = acc;
+                    }
+                }
+            }
+        }
+        other => bail!("unknown gated attention variant {other:?}"),
+    }
+    Ok(out)
+}

@@ -28,11 +28,19 @@
 //! * [`coordinator`] — trainer, evaluator, calibrator, experiment runner.
 //! * [`serve`] — the request path: dynamic-batching INT8 inference server
 //!   (`qtx serve`) + closed-loop load generator (`qtx loadgen`).
+//! * [`infer`] — native INT8 CPU backend: real `i8` weights and integer
+//!   GEMMs behind the same `ScoreEngine` trait
+//!   (`qtx serve --engine native-int8`).
+//!
+//! New here? Start with the repo-root `README.md`, then
+//! `docs/ARCHITECTURE.md` for the subsystem map and `docs/API.md` for the
+//! HTTP contract.
 
 pub mod analysis;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;

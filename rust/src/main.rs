@@ -64,9 +64,11 @@ commands:
   train                 train one model       (--config, --steps, --seed, --gamma, ...)
   eval                  FP + W8A8 eval of a cached/trained run
   serve                 dynamic-batching INT8 inference server over a trained run
-                        (--port, --threads, --engines, --batch-policy {continuous|fixed},
+                        (--engine {pjrt|native-int8|mock}: fake-quant PJRT session vs
+                         native integer-GEMM backend vs artifact-free mock (--mock);
+                         --port, --threads, --engines, --batch-policy {continuous|fixed},
                          --max-batch, --max-wait-ms FIXED_FLUSH, --admit-window-us,
-                         --ckpt PATH | same recipe flags as train; --mock for no-artifact)
+                         --ckpt PATH | same recipe flags as train)
   loadgen               HTTP load generator against a running server
                         (--host, --port, --threads CLIENTS, --requests N;
                          --open-loop --rate REQ_PER_S for Poisson arrivals)

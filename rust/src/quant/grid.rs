@@ -45,11 +45,20 @@ impl QParams {
         QParams { scale, zero_point: half + 1.0, qmax }
     }
 
-    /// Fake-quantize a single value (eq. 1, round-to-nearest-even like
-    /// jnp.round in the kernel).
+    /// Grid code of `x` — eq. 1's `clip(⌊x/s⌉ + z, 0, 2^b − 1)` with
+    /// round-to-nearest-even (like jnp.round in the kernel), returned as
+    /// an integral f32. **The single implementation of the rounding
+    /// rule**: the fake-quant simulation ([`QParams::fq`]) and the native
+    /// integer backend's u8/i8 extraction ([`crate::infer`],
+    /// [`crate::quant::weights`]) all go through here, so they cannot
+    /// drift apart.
+    pub fn code(&self, x: f32) -> f32 {
+        ((x / self.scale).round_ties_even() + self.zero_point).clamp(0.0, self.qmax)
+    }
+
+    /// Fake-quantize a single value (eq. 1).
     pub fn fq(&self, x: f32) -> f32 {
-        let q = ((x / self.scale).round_ties_even() + self.zero_point).clamp(0.0, self.qmax);
-        self.scale * (q - self.zero_point)
+        self.scale * (self.code(x) - self.zero_point)
     }
 
     /// Fake-quantize a slice in place.

@@ -6,9 +6,11 @@
 //!   min-max with momentum, percentile (99.99 / 99.999), and MSE grid
 //!   search; these are the §C.4 "range estimation" configurations the paper
 //!   selects between.
-//! * [`weights`] — host-side symmetric weight fake-quantization applied to
-//!   the parameter literals before `eval_quant` (the paper's symmetric
-//!   weight PTQ at any bitwidth — Table 10).
+//! * [`weights`] — host-side symmetric weight PTQ in two output formats:
+//!   fake-quantized f32 (fed to the `eval_quant`/`serve_score` simulation
+//!   — the paper's symmetric weight PTQ at any bitwidth, Table 10) and
+//!   real [`weights::Int8Tensor`] storage on the *same* grid, consumed by
+//!   the native integer backend ([`crate::infer`]).
 
 pub mod estimators;
 pub mod grid;
@@ -16,3 +18,4 @@ pub mod weights;
 
 pub use estimators::{Calibration, EstimatorKind};
 pub use grid::QParams;
+pub use weights::Int8Tensor;

@@ -40,6 +40,47 @@ pub fn fake_quant_weight(w: &Tensor, kind: EstimatorKind, bits: u32) -> Tensor {
     out
 }
 
+/// A weight tensor held as real `i8` integers plus its per-tensor scale —
+/// the storage format of the native INT8 inference backend
+/// ([`crate::infer`]).
+///
+/// The symmetric grid of [`QParams::symmetric`] places the zero point at
+/// mid-grid (128 for 8 bits), so the stored integer is `q − 128 ∈
+/// [−128, 127]` and dequantization is just `scale · int`. By construction
+/// `scale * data[i]` equals [`fake_quant_weight`] element-for-element (the
+/// invariant `int8_matches_fake_quant` asserts): the integer backend and the
+/// in-graph fake-quant path consume the *same* weight grid.
+#[derive(Debug, Clone)]
+pub struct Int8Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl Int8Tensor {
+    /// Dequantize one element (`scale · int`).
+    pub fn dequant(&self, i: usize) -> f32 {
+        self.scale * self.data[i] as f32
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Quantize one weight tensor to real INT8 storage (symmetric per-tensor,
+/// §5 "uniform affine quantization — symmetric weights", 8 bits).
+pub fn quantize_weight_int8(w: &Tensor, kind: EstimatorKind) -> Int8Tensor {
+    let q = weight_qparams(w.data(), kind, 8);
+    // q.zero_point is mid-grid (128): code ∈ [0, 255] → int ∈ [−128, 127].
+    let data = w.data().iter().map(|&x| (q.code(x) - q.zero_point) as i8).collect();
+    Int8Tensor { shape: w.shape().to_vec(), data, scale: q.scale }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +110,31 @@ mod tests {
         let q_mm = weight_qparams(&data, EstimatorKind::MinMax, 4);
         let q_mse = weight_qparams(&data, EstimatorKind::Mse, 4);
         assert!(q_mse.sq_error(&data) <= q_mm.sq_error(&data) + 1e-9);
+    }
+
+    /// The integer storage and the fake-quant simulation sit on the same
+    /// grid: `scale * i8` must reproduce `fake_quant_weight` exactly.
+    #[test]
+    fn int8_matches_fake_quant() {
+        let mut rng = Rng::new(3);
+        let mut data: Vec<f32> = (0..2048).map(|_| rng.normal() * 0.05).collect();
+        data[17] = 0.9; // outlier exercises the clip at the grid edge
+        data[18] = -1.2;
+        for kind in [EstimatorKind::MinMax, EstimatorKind::Mse] {
+            let w = Tensor::new(vec![2048], data.clone()).unwrap();
+            let fq = fake_quant_weight(&w, kind, 8);
+            let i8t = quantize_weight_int8(&w, kind);
+            assert_eq!(i8t.shape, vec![2048]);
+            for i in 0..data.len() {
+                assert_eq!(
+                    i8t.dequant(i),
+                    fq.data()[i],
+                    "grid mismatch at {i}: int {} scale {}",
+                    i8t.data[i],
+                    i8t.scale
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Artifact manifests: the contract between `python/compile/aot.py` and the
-//! rust coordinator. A manifest fully describes one model config's five
+//! rust coordinator. A manifest fully describes one model config's
 //! programs (flat input/output lists with names, shapes and dtypes), its
 //! parameter inventory (decay/quantize flags), and the ordered activation
 //! quant-point list shared with the calibrator.
+//!
+//! The manifest carries a format `version` (`aot.py::MANIFEST_VERSION`);
+//! feature gates compare against it so "re-run `make artifacts`" errors
+//! can say *which* version introduced the missing piece (v5 added the
+//! per-row `serve_score` program the PJRT serving engine needs).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -74,8 +79,15 @@ pub struct ConfigInfo {
     pub objective: String,
 }
 
+/// Manifest version that introduced the `serve_score` program (the
+/// per-row scoring entry point `qtx serve --engine pjrt` executes).
+pub const SERVE_MANIFEST_VERSION: u32 = 5;
+
 #[derive(Debug)]
 pub struct Manifest {
+    /// Format version written by `aot.py` (0 for pre-versioned manifests,
+    /// which predate the field itself).
+    pub version: u32,
     pub config: ConfigInfo,
     pub params: Vec<ParamInfo>,
     pub programs: HashMap<String, ProgramDesc>,
@@ -154,7 +166,35 @@ impl Manifest {
             .map(|v| Ok(v.as_str().context("quant point")?.to_string()))
             .collect::<Result<Vec<_>>>()?;
 
-        Ok(Manifest { config, params, programs, quant_points })
+        // Older manifests predate the version field: report them as v0
+        // rather than failing the parse.
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0) as u32;
+
+        Ok(Manifest { version, config, params, programs, quant_points })
+    }
+
+    /// Human-readable version for error messages and `/healthz` payloads.
+    pub fn version_label(&self) -> String {
+        if self.version == 0 {
+            "unversioned (pre-v5)".to_string()
+        } else {
+            format!("v{}", self.version)
+        }
+    }
+
+    /// Gate for the PJRT serving path: errors when the artifact lacks the
+    /// `serve_score` program, naming the found vs. required manifest
+    /// version so "re-run `make artifacts`" is actionable.
+    pub fn require_serve_score(&self) -> Result<()> {
+        if self.programs.contains_key("serve_score") {
+            return Ok(());
+        }
+        bail!(
+            "artifact for {} has no `serve_score` program (manifest {}, `qtx serve --engine \
+             pjrt` needs v{SERVE_MANIFEST_VERSION}+) — re-run `make artifacts` to rebuild it",
+            self.config.name,
+            self.version_label()
+        )
     }
 
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -200,7 +240,9 @@ impl Artifact {
             .manifest
             .programs
             .get(name)
-            .with_context(|| format!("program {name:?} not in manifest for {}", self.manifest.config.name))?;
+            .with_context(|| {
+                format!("program {name:?} not in manifest for {}", self.manifest.config.name)
+            })?;
         let t0 = std::time::Instant::now();
         let exe = rt.compile_hlo_text(&self.dir.join(&desc.file))?;
         let prog = Rc::new(Program::new(
@@ -269,5 +311,27 @@ mod tests {
     #[test]
     fn rejects_missing_keys() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    /// Pre-versioned manifests parse as v0 and the serve gate names both
+    /// the found and the required version.
+    #[test]
+    fn version_gate_names_found_and_required() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.version, 0);
+        assert_eq!(m.version_label(), "unversioned (pre-v5)");
+        let err = m.require_serve_score().unwrap_err().to_string();
+        assert!(err.contains("unversioned (pre-v5)"), "{err}");
+        assert!(err.contains(&format!("v{SERVE_MANIFEST_VERSION}+")), "{err}");
+        assert!(err.contains("make artifacts"), "{err}");
+
+        let versioned = MINI.replacen("{", "{\n  \"version\": 5,", 1);
+        let m5 = Manifest::parse(&versioned).unwrap();
+        assert_eq!(m5.version, 5);
+        assert_eq!(m5.version_label(), "v5");
+        // Still errors (this manifest has no serve_score program), but now
+        // reports the parsed version.
+        let err5 = m5.require_serve_score().unwrap_err().to_string();
+        assert!(err5.contains("manifest v5"), "{err5}");
     }
 }

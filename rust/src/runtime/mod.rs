@@ -10,6 +10,6 @@ pub mod artifact;
 pub mod client;
 pub mod program;
 
-pub use artifact::{Artifact, IoDesc, Manifest, ParamInfo, ProgramDesc};
+pub use artifact::{Artifact, IoDesc, Manifest, ParamInfo, ProgramDesc, SERVE_MANIFEST_VERSION};
 pub use client::Runtime;
 pub use program::{Program, Value};

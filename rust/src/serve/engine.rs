@@ -1,13 +1,18 @@
 //! Inference engines: turn a packed batch of [`ScoreRequest`]s into
 //! per-request [`ScoreRow`]s.
 //!
-//! Two implementations:
+//! Three implementations behind one [`ScoreEngine`] trait (selected with
+//! `qtx serve --engine {pjrt,native-int8,mock}`):
 //!
-//! * [`PjrtEngine`] — the real thing. Wraps the artifact's `serve_score`
-//!   program (per-row quantized scoring, manifest v5+) behind a reusable
-//!   session: weight literals are fake-quantized and uploaded once, the
-//!   activation `QParams` come from a startup PTQ calibration pass, and
-//!   only the three batch literals are rebuilt per invocation.
+//! * [`PjrtEngine`] — wraps the artifact's `serve_score` program (per-row
+//!   quantized scoring, manifest v5+) behind a reusable session: weight
+//!   literals are fake-quantized and uploaded once, the activation
+//!   `QParams` come from a startup PTQ calibration pass, and only the
+//!   three batch literals are rebuilt per invocation. Quantization is
+//!   *simulated* in f32.
+//! * [`crate::infer::NativeInt8Engine`] — the native integer backend:
+//!   same calibration, same grids, but the forward runs on real `i8`
+//!   weights with integer GEMMs ([`crate::infer`]).
 //! * [`MockEngine`] — deterministic host-side scorer with a configurable
 //!   per-dispatch cost. Lets the server, batcher, loadgen and benches run
 //!   end-to-end (and in `cargo test`) without artifacts or a PJRT runtime.
@@ -50,6 +55,38 @@ pub trait ScoreEngine {
 
 /// Thread-safe constructor for per-worker engines.
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn ScoreEngine>> + Send + Sync>;
+
+/// Which [`ScoreEngine`] implementation `qtx serve` builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// PJRT `serve_score` session — f32 execution with in-graph
+    /// fake-quant (the accuracy-reference path).
+    Pjrt,
+    /// Native integer backend ([`crate::infer`]) — same grids, real
+    /// `i8`/`u8` arithmetic.
+    NativeInt8,
+    /// Deterministic artifact-free mock (tests/benches/demos).
+    Mock,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "pjrt" => EngineKind::Pjrt,
+            "native-int8" => EngineKind::NativeInt8,
+            "mock" => EngineKind::Mock,
+            other => bail!("unknown engine {other:?} (pjrt|native-int8|mock)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::NativeInt8 => "native-int8",
+            EngineKind::Mock => "mock",
+        }
+    }
+}
 
 /// Validate a request against engine limits (done once, before queueing).
 /// `vocab` bounds token ids: out-of-range ids would silently gather a
@@ -223,9 +260,11 @@ impl ScoreEngine for MockEngine {
 // PJRT engine
 // ---------------------------------------------------------------------------
 
-/// Everything needed to build a [`PjrtEngine`] (plain data, `Send`).
+/// Everything needed to build a session-backed engine — [`PjrtEngine`] or
+/// [`crate::infer::NativeInt8Engine`] consume the same recipe (plain data,
+/// `Send`).
 #[derive(Debug, Clone)]
-pub struct PjrtEngineSpec {
+pub struct EngineSpec {
     pub artifacts_root: std::path::PathBuf,
     pub config: String,
     /// Trained checkpoint to serve.
@@ -236,6 +275,40 @@ pub struct PjrtEngineSpec {
     pub gate_scale: f32,
     /// Calibration stream seed (PTQ subset).
     pub calib_seed: u64,
+}
+
+impl EngineSpec {
+    /// The canonical artifact-gated recipe over the Makefile's default
+    /// `bert_tiny_softmax` training run — shared by the `serve_native`
+    /// parity tests and `bench_serve`'s `engine_compare` so the bench
+    /// always measures exactly the configuration the tests certify.
+    /// `Err` carries the human-readable skip reason when artifacts or the
+    /// seed-0 checkpoint are missing.
+    pub fn tiny_test_recipe() -> std::result::Result<EngineSpec, String> {
+        use crate::coordinator::experiment::{default_paths, find_checkpoint};
+        const CONFIG: &str = "bert_tiny_softmax";
+        let (artifacts, runs) = default_paths();
+        if !artifacts.join(CONFIG).join("manifest.json").exists() {
+            return Err(format!("no artifacts at {artifacts:?} — run `make artifacts`"));
+        }
+        let Some(ckpt) = find_checkpoint(&runs, CONFIG, 0) else {
+            return Err(format!("no {CONFIG} checkpoint in {runs:?} — run `make artifacts`"));
+        };
+        let quant = crate::coordinator::quantize::QuantSpec {
+            calib_batches: 4,
+            ..crate::coordinator::quantize::QuantSpec::w8a8()
+        };
+        Ok(EngineSpec {
+            artifacts_root: artifacts,
+            config: CONFIG.to_string(),
+            ckpt,
+            quant,
+            gamma: 0.0,
+            zeta: 1.0,
+            gate_scale: 1.0,
+            calib_seed: 1,
+        })
+    }
 }
 
 /// A ready-to-serve PJRT session: compiled `serve_score` program plus the
@@ -265,9 +338,14 @@ struct BatchSlots {
 impl PjrtEngine {
     /// Load artifact + checkpoint, run weight PTQ and activation
     /// calibration, compile `serve_score`, and freeze the session inputs.
-    pub fn new(spec: &PjrtEngineSpec) -> Result<PjrtEngine> {
+    pub fn new(spec: &EngineSpec) -> Result<PjrtEngine> {
         let rt = crate::runtime::Runtime::cpu()?;
         let art = crate::runtime::Artifact::load(&spec.artifacts_root, &spec.config)?;
+        // Gate on the serve_score program *before* the expensive weight
+        // PTQ + calibration below: the found-vs-required manifest version
+        // error should be instant for every caller, not just the CLI's
+        // pre-bind check.
+        art.manifest.require_serve_score()?;
         let cfg = art.manifest.config.clone();
         if cfg.family == "vit" {
             bail!(
@@ -277,8 +355,9 @@ impl PjrtEngine {
             );
         }
 
-        let params = crate::util::tensorio::load(&spec.ckpt)
-            .with_context(|| format!("loading checkpoint {:?} — train one with `qtx train`", spec.ckpt))?;
+        let params = crate::util::tensorio::load(&spec.ckpt).with_context(|| {
+            format!("loading checkpoint {:?} — train one with `qtx train`", spec.ckpt)
+        })?;
 
         // Weight PTQ, then activation calibration on the quantized weights
         // (matching the deployment path in coordinator::quantize).
@@ -317,10 +396,7 @@ impl PjrtEngine {
             t0.elapsed().as_secs_f64()
         ));
 
-        let program = art.program(&rt, "serve_score").with_context(|| {
-            "artifact has no `serve_score` program — re-run `make artifacts` \
-             (manifest v5 adds the per-row serving program)"
-        })?;
+        let program = art.program(&rt, "serve_score")?;
 
         // Freeze every non-batch input literal in program order.
         let n = art.manifest.quant_points.len();
@@ -580,7 +656,11 @@ pub fn spawn_engine_pool(
                     let mut engine = match factory() {
                         Ok(e) => e,
                         Err(e) => {
-                            log::warn(&format!("engine worker {worker}: startup failed: {e:#}"));
+                            let msg = format!("engine worker {worker}: startup failed: {e:#}");
+                            log::warn(&msg);
+                            // Surface the failure on /healthz (503 payload)
+                            // and in Server::wait_ready's error.
+                            stats.record_startup_failure(&msg);
                             dispatch.retire(worker);
                             return;
                         }

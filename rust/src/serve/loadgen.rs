@@ -128,10 +128,18 @@ pub struct ServerLimits {
     pub vocab: usize,
 }
 
-/// Probe `/healthz` for the model's limits.
+/// Probe `/healthz` for the model's limits. A warming-up server answers
+/// 503 (`status: "unavailable"`) but the document already carries the
+/// limits, so the probe accepts it — requests sent before the engines are
+/// ready simply queue, exactly the pre-healthz-503 behavior.
 pub fn probe(addr: &str, timeout: Duration) -> Result<ServerLimits> {
     let mut c = Client::connect(addr, timeout)?;
-    let h = c.get_json("/healthz")?;
+    let (status, body) = c.request("GET", "/healthz", None)?;
+    if status != 200 && status != 503 {
+        anyhow::bail!("GET /healthz: status {status}: {body}");
+    }
+    let h = crate::util::json::Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("GET /healthz: bad json: {e}"))?;
     let get = |k: &str| -> Result<usize> {
         h.req(k)?.as_usize().with_context(|| format!("healthz {k} not an integer"))
     };

@@ -5,9 +5,13 @@
 //! trains and tabulates; this serves a trained + PTQ-calibrated artifact to
 //! live HTTP traffic. The paper's claim (clipped-softmax / gated-attention
 //! models quantize to full W8A8 "for free") becomes a deployment property
-//! here: the engine runs the `serve_score` program — the same in-graph
-//! activation fake-quant as `eval_quant`, but with per-row outputs — so
-//! quantized quality is what clients actually receive.
+//! here, through either of two engines behind one trait
+//! (`--engine {pjrt,native-int8}`): the PJRT session runs the
+//! `serve_score` program — the same in-graph activation fake-quant as
+//! `eval_quant`, but with per-row outputs — while the native backend
+//! ([`crate::infer`]) executes the identical calibrated model with real
+//! integer GEMMs, converting the quantization win into wall-clock
+//! throughput. Quantized quality is what clients receive either way.
 //!
 //! Data flow (`--batch-policy continuous`, the default):
 //!
@@ -65,7 +69,9 @@ pub mod stats;
 pub use batcher::{
     BatchPolicy, BatchView, Batcher, BatcherConfig, SlotConfig, SlotOccupancy, SlotPool,
 };
-pub use engine::{Dispatch, EngineFactory, MockEngine, PjrtEngine, PjrtEngineSpec, ScoreEngine};
+pub use engine::{
+    Dispatch, EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
+};
 pub use protocol::{ScoreRequest, ScoreResponse, ScoreRow};
 pub use server::{EngineInfo, Server, ServerConfig};
 pub use stats::ServeStats;

@@ -2,10 +2,12 @@
 //! (the offline vendor set has no tokio/hyper; this follows the repo's
 //! hand-rolled-substrate idiom — see `util/`).
 //!
-//! Endpoints:
+//! Endpoints (written contract: `docs/API.md`):
 //! * `POST /v1/score` — score one token sequence (queued into the dynamic
 //!   batcher; see [`crate::serve::protocol`] for the wire shapes).
-//! * `GET /healthz`  — liveness + engine description and limits.
+//! * `GET /healthz`  — liveness + engine description and limits; answers
+//!   503 with the last engine startup error (e.g. the manifest-version
+//!   mismatch message) while no engine worker is serving.
 //! * `GET /statz`    — counters, batch-fill ratio, latency percentiles.
 //!
 //! Threading model: the accept thread spawns one handler thread per
@@ -136,6 +138,7 @@ impl Server {
             info: info.clone(),
             request_timeout: cfg.request_timeout,
             shutdown: shutdown.clone(),
+            engines_ready: engines_ready.clone(),
         });
         let accept_handle = {
             let shutdown = shutdown.clone();
@@ -215,7 +218,10 @@ impl Server {
                 return Ok(());
             }
             if self.engine_handles.iter().all(|h| h.is_finished()) {
-                bail!("all engine workers failed at startup (see log)");
+                match self.stats.startup_error() {
+                    Some(err) => bail!("all engine workers failed at startup: {err}"),
+                    None => bail!("all engine workers failed at startup (see log)"),
+                }
             }
             if t0.elapsed() > timeout {
                 bail!("engines not ready after {timeout:?}");
@@ -255,6 +261,9 @@ struct HandlerCtx {
     info: EngineInfo,
     request_timeout: Duration,
     shutdown: Arc<AtomicBool>,
+    /// Engine workers that reached their serving loop (`/healthz` turns
+    /// 503 while this is zero).
+    engines_ready: Arc<AtomicUsize>,
 }
 
 // ---------------------------------------------------------------------------
@@ -433,17 +442,44 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
         match (method, path) {
             ("POST", "/v1/score") => handle_score(&mut writer, &msg, ctx, keep_alive)?,
             ("GET", "/healthz") => {
-                let doc = Json::obj(vec![
-                    ("status", Json::Str("ok".into())),
+                let ready = ctx.engines_ready.load(Ordering::SeqCst);
+                let mut doc = vec![
+                    (
+                        "status",
+                        Json::Str(if ready > 0 { "ok" } else { "unavailable" }.into()),
+                    ),
                     ("engine", Json::Str(ctx.info.describe.clone())),
+                    ("engines_ready", Json::Num(ready as f64)),
                     ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
                     ("seq_len", Json::Num(ctx.info.seq_len as f64)),
                     ("max_batch", Json::Num(ctx.info.max_batch as f64)),
                     ("vocab", Json::Num(ctx.info.vocab as f64)),
                     ("causal", Json::Bool(ctx.info.causal)),
                     ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
-                ]);
-                write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
+                ];
+                if ready > 0 {
+                    write_json_response(&mut writer, 200, "OK", &Json::obj(doc), keep_alive)?;
+                } else {
+                    // Failure payload: name the reason (e.g. the manifest
+                    // found-vs-required version message) so a probe reads
+                    // the fix without grepping server logs.
+                    let err = ctx
+                        .stats
+                        .startup_error()
+                        .unwrap_or_else(|| "engines still warming up".into());
+                    doc.push(("error", Json::Str(err)));
+                    doc.push((
+                        "startup_failures",
+                        Json::Num(ctx.stats.startup_failures.load(Ordering::Relaxed) as f64),
+                    ));
+                    write_json_response(
+                        &mut writer,
+                        503,
+                        "Service Unavailable",
+                        &Json::obj(doc),
+                        keep_alive,
+                    )?;
+                }
             }
             ("GET", "/statz") => {
                 let doc = ctx.stats.snapshot(
@@ -583,7 +619,12 @@ impl Client {
     }
 
     /// Send a request, read one response: (status, body).
-    pub fn request(&mut self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, String)> {
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, String)> {
         write_json_request(&mut self.writer, method, path, body)?;
         let msg = read_message(&mut self.reader)?.context("server closed connection")?;
         let status: u16 = msg

@@ -6,6 +6,7 @@
 //! snapshots, which is all monitoring needs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::serve::batcher::SlotOccupancy;
@@ -131,6 +132,11 @@ pub struct ServeStats {
     pub batches_total: AtomicU64,
     /// Real (non-padding) rows across all invocations.
     pub batch_rows_total: AtomicU64,
+    /// Engine workers that failed to construct (startup, not request
+    /// path). The most recent failure message feeds the `/healthz` 503
+    /// payload — off the hot path, so a mutex is fine here.
+    pub startup_failures: AtomicU64,
+    last_startup_error: Mutex<Option<String>>,
     /// End-to-end server-side latency (parse → response written).
     pub latency: LatencyHisto,
     /// Time requests spent queued before their batch launched.
@@ -155,11 +161,26 @@ impl ServeStats {
             engine_errors: AtomicU64::new(0),
             batches_total: AtomicU64::new(0),
             batch_rows_total: AtomicU64::new(0),
+            startup_failures: AtomicU64::new(0),
+            last_startup_error: Mutex::new(None),
             latency: LatencyHisto::default(),
             queue_wait: LatencyHisto::default(),
             admission_wait: LatencyHisto::default(),
             exec: LatencyHisto::default(),
         }
+    }
+
+    /// Record an engine-construction failure (called by the worker pool).
+    pub fn record_startup_failure(&self, msg: &str) {
+        self.startup_failures.fetch_add(1, Ordering::Relaxed);
+        if let Ok(mut slot) = self.last_startup_error.lock() {
+            *slot = Some(msg.to_string());
+        }
+    }
+
+    /// Most recent engine startup failure, if any.
+    pub fn startup_error(&self) -> Option<String> {
+        self.last_startup_error.lock().ok().and_then(|s| s.clone())
     }
 
     pub fn record_batch(&self, rows: usize, exec: Duration) {

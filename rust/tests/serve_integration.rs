@@ -278,6 +278,63 @@ fn continuous_mode_roundtrip_and_slot_census() {
     server.stop();
 }
 
+/// Doc conformance: `docs/API.md` lists every `/statz` key between the
+/// `statz-keys` markers; a live snapshot must expose exactly that set —
+/// a key the server drops fails the doc, a key the doc forgot fails the
+/// server change that added it.
+#[test]
+fn statz_matches_documented_contract() {
+    fn leaf_paths(j: &Json, prefix: &str, out: &mut Vec<String>) {
+        match j {
+            Json::Obj(kv) => {
+                for (k, v) in kv {
+                    let p = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    leaf_paths(v, &p, out);
+                }
+            }
+            _ => out.push(prefix.to_string()),
+        }
+    }
+
+    let api = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/API.md"))
+        .expect("docs/API.md exists");
+    let begin = api
+        .find("<!-- statz-keys:begin -->")
+        .expect("docs/API.md has a <!-- statz-keys:begin --> marker");
+    let end = api.find("<!-- statz-keys:end -->").expect("statz-keys end marker");
+    let mut documented: Vec<String> = api[begin..end]
+        .lines()
+        .filter_map(|l| l.trim().strip_prefix("- `")?.strip_suffix('`').map(str::to_string))
+        .collect();
+    documented.sort();
+    assert!(!documented.is_empty(), "no keys documented between the markers");
+
+    // Continuous mode exposes the full document (slot census included);
+    // one scored request fills the histograms.
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let statz = c.get_json("/statz").unwrap();
+    let mut live = Vec::new();
+    leaf_paths(&statz, "", &mut live);
+    live.sort();
+
+    assert_eq!(
+        live, documented,
+        "live /statz keys (left) diverge from docs/API.md statz-keys list (right)"
+    );
+
+    drop(c);
+    server.stop();
+}
+
 /// The tentpole acceptance: under open-loop (Poisson) load at 1.5× the
 /// fixed batcher's batch-formation capacity, continuous batching shows a
 /// lower p95 queue wait.

@@ -1,0 +1,175 @@
+//! Artifact-gated integration tests for the native INT8 backend: the
+//! pjrt-vs-native numerical parity acceptance and an end-to-end HTTP serve
+//! over the continuous batcher with `--engine native-int8` semantics.
+//!
+//! Like `rust/tests/integration.rs`, these need `make artifacts` (which
+//! also trains the `bert_tiny_softmax` checkpoint) and self-skip loudly
+//! otherwise, so plain `cargo test` stays green in a fresh checkout.
+//!
+//! **Documented tolerance** (see `docs/ARCHITECTURE.md` "Numerical
+//! contract"): both engines consume identical quant grids, and the
+//! integer GEMMs accumulate exactly in i32, so per-row sums agree up to
+//! f32 glue rounding plus at most a few one-step requant flips:
+//! `|Δnll| ≤ 0.05 + 0.02·|nll|`, `count` exact, `|Δcorrect| ≤ 2`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use qtx::infer::NativeInt8Engine;
+use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
+use qtx::serve::engine::{EngineFactory, EngineSpec, PjrtEngine, ScoreEngine};
+use qtx::serve::protocol::{ScoreRequest, ScoreResponse, ScoreRow};
+use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+
+fn engine_spec() -> Option<EngineSpec> {
+    match EngineSpec::tiny_test_recipe() {
+        Ok(spec) => Some(spec),
+        Err(why) => {
+            eprintln!("SKIPPED: {why}");
+            None
+        }
+    }
+}
+
+fn requests(n: usize, seq_len: usize, vocab: usize) -> Vec<ScoreRequest> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i * 7) % (seq_len - 1);
+            ScoreRequest {
+                id: Some(format!("r{i}")),
+                tokens: (0..len).map(|j| ((i * 31 + j * 13) % vocab) as i32).collect(),
+                targets: None,
+            }
+        })
+        .collect()
+}
+
+fn assert_rows_agree(pjrt: &[ScoreRow], native: &[ScoreRow]) {
+    assert_eq!(pjrt.len(), native.len());
+    for (i, (p, n)) in pjrt.iter().zip(native).enumerate() {
+        assert_eq!(p.count, n.count, "row {i}: count");
+        let tol = 0.05 + 0.02 * p.nll.abs();
+        assert!(
+            (p.nll - n.nll).abs() <= tol,
+            "row {i}: pjrt nll {} vs native {} exceeds tolerance {tol}",
+            p.nll,
+            n.nll
+        );
+        assert!(
+            (p.correct - n.correct).abs() <= 2.0,
+            "row {i}: pjrt correct {} vs native {}",
+            p.correct,
+            n.correct
+        );
+    }
+}
+
+/// The tentpole acceptance: the native integer engine reproduces the
+/// fake-quant PJRT scores within the documented tolerance — both paths
+/// consume the same weight grid and the same calibrated activation grids.
+#[test]
+fn native_int8_matches_pjrt_scores() {
+    let Some(spec) = engine_spec() else { return };
+    let mut pjrt = PjrtEngine::new(&spec).unwrap();
+    let mut native = NativeInt8Engine::new(&spec).unwrap();
+    assert_eq!(pjrt.max_batch(), native.max_batch());
+    assert_eq!(pjrt.seq_len(), native.seq_len());
+    assert_eq!(pjrt.causal(), native.causal());
+    assert!(native.describe().contains("native-int8"));
+
+    // A full batch of varied lengths (padding rows in play), then a
+    // partial batch — both dispatch shapes the batcher produces.
+    let full = requests(pjrt.max_batch(), pjrt.seq_len(), 256);
+    assert_rows_agree(&pjrt.score(&full).unwrap(), &native.score(&full).unwrap());
+    let partial = requests(3, pjrt.seq_len(), 256);
+    let p = pjrt.score(&partial).unwrap();
+    let n = native.score(&partial).unwrap();
+    assert_eq!(n.len(), 3, "exactly one row per request");
+    assert_rows_agree(&p, &n);
+
+    // Client-supplied targets go through the same packed path.
+    let mut with_targets = requests(2, pjrt.seq_len(), 256);
+    for r in &mut with_targets {
+        let t: Vec<i32> = r.tokens.iter().map(|&t| (t + 1) % 256).collect();
+        r.targets = Some(t);
+    }
+    assert_rows_agree(
+        &pjrt.score(&with_targets).unwrap(),
+        &native.score(&with_targets).unwrap(),
+    );
+}
+
+/// `qtx serve --engine native-int8` end-to-end: the native engine behind
+/// the slot-based continuous batcher over real TCP, answering `/v1/score`
+/// with rows that match the PJRT engine's within tolerance.
+#[test]
+fn native_int8_serves_http_through_continuous_batcher() {
+    let Some(spec) = engine_spec() else { return };
+
+    // Reference rows straight from a PJRT session (no HTTP).
+    let mut pjrt = PjrtEngine::new(&spec).unwrap();
+    let (max_batch, seq_len, causal) = (pjrt.max_batch(), pjrt.seq_len(), pjrt.causal());
+    let reqs = requests(6, seq_len, 256);
+    let want = pjrt.score(&reqs).unwrap();
+    drop(pjrt);
+
+    let factory: EngineFactory = {
+        let spec = spec.clone();
+        Arc::new(move || Ok(Box::new(NativeInt8Engine::new(&spec)?) as Box<dyn ScoreEngine>))
+    };
+    let server = Server::start(
+        ServerConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            max_connections: 16,
+            engines: 1,
+            policy: BatchPolicy::Continuous,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(5),
+                queue_cap: 64,
+            },
+            admit_window: Duration::ZERO,
+            request_timeout: Duration::from_secs(120),
+        },
+        EngineInfo {
+            seq_len,
+            max_batch,
+            vocab: 256,
+            causal,
+            describe: format!("native-int8:{} W8A8 (test)", spec.config),
+        },
+        factory,
+    )
+    .unwrap();
+    // Native startup calibrates through PJRT once — be generous.
+    server.wait_ready(Duration::from_secs(600)).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut c = Client::connect(&addr, Duration::from_secs(120)).unwrap();
+    let health = c.get_json("/healthz").unwrap();
+    assert_eq!(health.req("status").unwrap().as_str(), Some("ok"));
+    assert!(
+        health.req("engine").unwrap().as_str().unwrap().contains("native-int8"),
+        "{health}"
+    );
+
+    for (req, want_row) in reqs.iter().zip(&want) {
+        let (status, body) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let resp = ScoreResponse::parse(&body).unwrap();
+        assert_eq!(resp.id, req.id);
+        assert_rows_agree(std::slice::from_ref(want_row), &[resp.row]);
+    }
+
+    let statz = c.get_json("/statz").unwrap();
+    assert_eq!(statz.req("batch_policy").unwrap().as_str(), Some("continuous"));
+    assert_eq!(
+        statz.req("batches").unwrap().req("rows").unwrap().as_usize(),
+        Some(reqs.len()),
+        "every request scored exactly once"
+    );
+
+    drop(c);
+    server.stop();
+}

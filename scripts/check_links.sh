@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Markdown link check (offline): every relative link/image target in the
+# checked files must exist on disk. http(s)/mailto links and pure anchors
+# are skipped — CI has no network and anchor slugs are renderer-specific.
+#
+#   scripts/check_links.sh [FILE.md ...]   (default: README, docs/, ROADMAP)
+#
+# Pure bash + grep so it runs in both CI jobs (rust image and python job).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+files=("$@")
+if [[ ${#files[@]} -eq 0 ]]; then
+    files=(README.md ROADMAP.md docs/*.md)
+fi
+
+fail=0
+for f in "${files[@]}"; do
+    if [[ ! -f "$f" ]]; then
+        echo "check_links: missing file $f" >&2
+        fail=1
+        continue
+    fi
+    dir=$(dirname "$f")
+    # Extract (target) of every [text](target) / ![alt](target).
+    while IFS= read -r target; do
+        case "$target" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        path="${target%%#*}"            # drop fragment
+        [[ -z "$path" ]] && continue
+        if [[ ! -e "$dir/$path" ]]; then
+            echo "check_links: $f -> broken link ($target)" >&2
+            fail=1
+        fi
+    done < <(grep -oE '\]\([^)[:space:]]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [[ "$fail" != 0 ]]; then
+    echo "check_links: FAILED" >&2
+    exit 1
+fi
+echo "check_links: OK (${#files[@]} files)"

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate (referenced from ROADMAP.md; `make verify`).
 #
-#   scripts/verify.sh            build + test + fmt + clippy
+#   scripts/verify.sh            build + test + fmt + clippy + rustdoc + links
 #   scripts/verify.sh --fast     build + test only
 #   scripts/verify.sh --ci       full gate + GitHub step summary
 #                                (markdown appended to $GITHUB_STEP_SUMMARY)
@@ -70,7 +70,15 @@ cargo fmt -- --check
 echo "== cargo clippy -D warnings"
 cargo clippy --all-targets -- -D warnings
 
-summarize "build, tests, fmt and clippy all green."
+# Broken intra-doc links and malformed rustdoc fail the gate: the docs
+# surface (crate-level //! docs, docs/*.md) is part of tier 1.
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== markdown link check"
+scripts/check_links.sh
+
+summarize "build, tests, fmt, clippy, rustdoc and doc links all green."
 # (the bench trajectory summary is ci.yml's own step — `make bench` runs
 # after verify, so the file does not exist yet here)
 
