@@ -6,7 +6,8 @@
 #   make verify      tier-1 gate: build + test + fmt + clippy
 #   make fast        tier-1 gate without the lint passes
 #   make pytest      python compiler/kernel test suite
-#   make bench       serving bench; collects JSON lines into BENCH_serve.json
+#   make bench       GEMM kernel + serving benches; collects JSON lines
+#                    into BENCH_gemm.json + BENCH_serve.json
 #   make ci          local mirror of .github/workflows/ci.yml
 #   make clean       drop generated artifacts/runs (not target/)
 
@@ -39,6 +40,10 @@ pytest:
 
 bench:
 	mkdir -p target
+	cargo bench --bench bench_gemm | tee target/bench_gemm.out
+	grep 'bench_gemm JSON: ' target/bench_gemm.out \
+		| sed 's/^bench_gemm JSON: //' > BENCH_gemm.json
+	@echo "wrote BENCH_gemm.json ($$(wc -l < BENCH_gemm.json) rows)"
 	cargo bench --bench bench_serve | tee target/bench_serve.out
 	grep 'bench_serve JSON: ' target/bench_serve.out \
 		| sed 's/^bench_serve JSON: //' > BENCH_serve.json
@@ -48,4 +53,4 @@ bench:
 ci: verify pytest bench
 
 clean:
-	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json
+	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json BENCH_gemm.json

@@ -1,0 +1,209 @@
+//! Integer GEMM kernel micro-bench: scalar reference vs the detected SIMD
+//! tier, per kernel (`u8×i8`, `u8×u8`) and per model GEMM shape.
+//!
+//! Shapes are the repo's actual serving GEMMs: q/k/v + output projections
+//! and both FFN matmuls at the tiny (`d=64`, batch 32×64) and mid
+//! (`d=128`, batch 16×64) configs, plus the per-head attention products
+//! (`t×t×dh` scores, `t×dh×t` context). Each (kernel, shape) cell runs on
+//! `Tier::Scalar` and on the detected tier; before timing, both outputs
+//! are compared `==` as a belt-and-braces check on the property-tested
+//! bit-exactness contract.
+//!
+//! Output: a markdown table (the repo's bench idiom) plus one
+//! `bench_gemm JSON: {...}` line per (kernel, shape, tier) — `make bench`
+//! collects these into `BENCH_gemm.json`, which CI archives next to
+//! `BENCH_serve.json`. The headline number is `speedup_vs_scalar` of the
+//! SIMD rows: the acceptance target is ≥ 2× for `u8×i8` at the model
+//! shapes on an AVX2 host.
+//!
+//! Run: cargo bench --bench bench_gemm
+//! Env: QTX_BENCH_GEMM_TARGET_OPS  int8 ops per timed cell (default 3e8)
+//!      QTX_SIMD=scalar            force both rows scalar (sanity)
+
+use std::time::Instant;
+
+use qtx::infer::gemm::{gemm_q8_tier, gemm_q8q8_tier, Int8Weight, QView};
+use qtx::infer::simd::Tier;
+use qtx::metrics::table::render;
+use qtx::util::json::Json;
+use qtx::util::rng::Rng;
+
+#[derive(Clone, Copy)]
+enum Kernel {
+    U8I8,
+    U8U8,
+}
+
+impl Kernel {
+    fn name(self) -> &'static str {
+        match self {
+            Kernel::U8I8 => "u8i8",
+            Kernel::U8U8 => "u8u8",
+        }
+    }
+}
+
+struct Shape {
+    label: &'static str,
+    kernel: Kernel,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// The GEMM shapes the native engine actually dispatches (see
+/// `rust/src/infer/model.rs`): m = batch·seq rows for projections/FFN,
+/// per-head t×t / t×dh for attention.
+fn shapes() -> Vec<Shape> {
+    let s = |label, kernel, m, k, n| Shape { label, kernel, m, k, n };
+    vec![
+        // bert_tiny / opt_tiny: d=64, ff=256, batch 32×64.
+        s("proj_tiny d64", Kernel::U8I8, 2048, 64, 64),
+        s("ffn1_tiny d64->256", Kernel::U8I8, 2048, 64, 256),
+        s("ffn2_tiny 256->d64", Kernel::U8I8, 2048, 256, 64),
+        // opt_mid/opt_big-ish: d=128, ff=512, batch 16×64.
+        s("proj_mid d128", Kernel::U8I8, 1024, 128, 128),
+        s("ffn1_mid d128->512", Kernel::U8I8, 1024, 128, 512),
+        // attention per head: scores t×t over dh, context t×dh over t.
+        s("scores_head t64 dh16", Kernel::U8U8, 64, 16, 64),
+        s("ctx_head t64 dh16", Kernel::U8U8, 64, 64, 16),
+        s("scores_head t64 dh32", Kernel::U8U8, 64, 32, 64),
+    ]
+}
+
+fn rand_u8(rng: &mut Rng, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+struct Cell {
+    tier: Tier,
+    ms_per_call: f64,
+    gintops: f64,
+    gib_per_s: f64,
+}
+
+/// Time one (kernel, shape) on `tier`; `out` is the preallocated result.
+fn run_cell(sh: &Shape, tier: Tier, target_ops: f64, rng: &mut Rng) -> (Cell, Vec<f32>) {
+    let (m, k, n) = (sh.m, sh.k, sh.n);
+    let a_data = rand_u8(rng, m * k);
+    let a = QView { data: &a_data, scale: 0.017, zero_point: 101 };
+    let mut out = vec![0.0f32; m * n];
+    let ops_per_call = 2.0 * m as f64 * n as f64 * k as f64;
+    let iters = ((target_ops / ops_per_call) as usize).clamp(3, 100_000);
+    let el = match sh.kernel {
+        Kernel::U8I8 => {
+            let wt: Vec<i8> = (0..n * k).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let col_sum = wt.chunks_exact(k).map(|c| c.iter().map(|&v| v as i32).sum()).collect();
+            let w = Int8Weight { k, n, wt, scale: 0.004, col_sum };
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            gemm_q8_tier(tier, a, m, &w, Some(&bias), &mut out); // warm-up
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                gemm_q8_tier(tier, a, m, &w, Some(&bias), &mut out);
+            }
+            t0.elapsed().as_secs_f64()
+        }
+        Kernel::U8U8 => {
+            let b_data = rand_u8(rng, n * k);
+            let bt = QView { data: &b_data, scale: 0.008, zero_point: 77 };
+            let mut sums = vec![0i32; m + n];
+            gemm_q8q8_tier(tier, a, bt, m, n, k, &mut sums, &mut out); // warm-up
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                gemm_q8q8_tier(tier, a, bt, m, n, k, &mut sums, &mut out);
+            }
+            t0.elapsed().as_secs_f64()
+        }
+    };
+    let bytes_per_call = (m * k + n * k + 4 * m * n) as f64;
+    (
+        Cell {
+            tier,
+            ms_per_call: el / iters as f64 * 1e3,
+            gintops: ops_per_call * iters as f64 / el / 1e9,
+            gib_per_s: bytes_per_call * iters as f64 / el / (1u64 << 30) as f64,
+        },
+        out,
+    )
+}
+
+fn main() {
+    let target_ops: f64 = std::env::var("QTX_BENCH_GEMM_TARGET_OPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3e8);
+    let simd = qtx::infer::simd::active_tier();
+    eprintln!("[bench_gemm] detected tier: {}", simd.name());
+
+    let mut table: Vec<Vec<String>> = Vec::new();
+    for sh in shapes() {
+        // Fresh deterministic data per shape; identical for both tiers.
+        let (scalar, scalar_out) = run_cell(&sh, Tier::Scalar, target_ops, &mut Rng::new(99));
+        let (fast, fast_out) = run_cell(&sh, simd, target_ops, &mut Rng::new(99));
+        assert_eq!(
+            scalar_out, fast_out,
+            "{} {}: SIMD output diverged from the scalar reference",
+            sh.kernel.name(),
+            sh.label
+        );
+        let speedup = scalar.ms_per_call / fast.ms_per_call;
+        for cell in [&scalar, &fast] {
+            println!(
+                "bench_gemm JSON: {}",
+                Json::obj(vec![
+                    ("kernel", Json::Str(sh.kernel.name().into())),
+                    ("shape", Json::Str(sh.label.into())),
+                    ("m", Json::Num(sh.m as f64)),
+                    ("k", Json::Num(sh.k as f64)),
+                    ("n", Json::Num(sh.n as f64)),
+                    ("tier", Json::Str(cell.tier.name().into())),
+                    ("ms_per_call", Json::Num(cell.ms_per_call)),
+                    ("gintops", Json::Num(cell.gintops)),
+                    ("gib_per_s", Json::Num(cell.gib_per_s)),
+                    (
+                        "speedup_vs_scalar",
+                        Json::Num(if std::ptr::eq(cell, &fast) { speedup } else { 1.0 }),
+                    ),
+                ])
+            );
+        }
+        eprintln!(
+            "[bench_gemm] {} {:<22} scalar {:>8.3} ms  {} {:>8.3} ms  ({:.2}x)",
+            sh.kernel.name(),
+            sh.label,
+            scalar.ms_per_call,
+            fast.tier.name(),
+            fast.ms_per_call,
+            speedup
+        );
+        table.push(vec![
+            sh.kernel.name().to_string(),
+            sh.label.to_string(),
+            format!("{}x{}x{}", sh.m, sh.k, sh.n),
+            format!("{:.3}", scalar.ms_per_call),
+            format!("{:.1}", scalar.gintops),
+            format!("{:.3}", fast.ms_per_call),
+            format!("{:.1}", fast.gintops),
+            format!("{:.1}", fast.gib_per_s),
+            format!("{:.2}x", speedup),
+        ]);
+    }
+
+    println!(
+        "\n## integer GEMM kernels — scalar vs {} (bit-exact outputs asserted)\n\n{}",
+        simd.name(),
+        render(
+            &[
+                "kernel", "shape", "m x k x n", "scalar ms", "scalar Gop/s", "simd ms",
+                "simd Gop/s", "simd GiB/s", "speedup"
+            ],
+            &table
+        )
+    );
+    if simd == Tier::Scalar {
+        println!(
+            "\nnote: no SIMD tier detected on this host (or QTX_SIMD=scalar) — both rows \
+             ran the scalar reference."
+        );
+    }
+}

@@ -42,6 +42,7 @@ use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, Scor
 use qtx::serve::loadgen::{self, LoadgenConfig, LoadgenReport};
 use qtx::serve::protocol::ScoreRequest;
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::serve::stats::EngineMem;
 use qtx::util::json::Json;
 
 const SEQ_LEN: usize = 64;
@@ -93,6 +94,7 @@ fn start_server(
             vocab: 256,
             causal: probe.causal,
             describe: probe.describe(),
+            mem: EngineMem::default(),
         },
         factory,
     )?;

@@ -18,6 +18,11 @@
 //! (slot-based continuous admission vs. the PR-1 flush-on-fill/deadline
 //! baseline); `--open-loop --rate R` switches loadgen to Poisson arrivals
 //! at `R` req/s — the client shape that exposes batching convoys.
+//!
+//! Native engine extras: weights are calibrated and extracted **once** and
+//! shared by all `--engines N` workers (`Arc<Int8Weights>`), and
+//! `--gemm-threads K` sizes each worker's row-parallel GEMM thread set
+//! (1 disables; default a few cores).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -25,13 +30,14 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cli::basic::{paths_from_args, spec_from_args};
-use crate::infer::NativeInt8Engine;
+use crate::infer::{NativeInt8Engine, Scratch};
 use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{
     EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
 use crate::serve::loadgen::{run as loadgen_run, render_report, LoadgenConfig};
 use crate::serve::server::{EngineInfo, Server, ServerConfig};
+use crate::serve::stats::EngineMem;
 use crate::util::cli::Args;
 
 /// Batcher/server knobs shared by `serve` and `bench_serve`.
@@ -89,6 +95,7 @@ pub fn serve(args: &Args) -> Result<()> {
             vocab: i32::MAX as usize,
             causal: probe.causal,
             describe: probe.describe(),
+            mem: EngineMem { workers: cfg.engines, ..EngineMem::default() },
         };
         let factory: EngineFactory = Arc::new(move || {
             let mut e = MockEngine::new(model_batch, seq_len);
@@ -104,6 +111,9 @@ pub fn serve(args: &Args) -> Result<()> {
             Some(p) => std::path::PathBuf::from(p),
             None => runs.join(format!("{}.ckpt", spec.run_key(seed))),
         };
+        // Native only: size of the per-engine row-parallel thread set
+        // (1 disables; default a few cores).
+        let gemm_threads = args.usize("gemm-threads", NativeInt8Engine::default_gemm_threads())?;
         args.finish()?;
         // Manifest facts without touching PJRT (pure JSON).
         let manifest =
@@ -127,6 +137,53 @@ pub fn serve(args: &Args) -> Result<()> {
             cfg.batcher.max_batch.min(mcfg.batch_size)
         };
         cfg.batcher.max_batch = max_batch;
+        let espec = EngineSpec {
+            artifacts_root: artifacts,
+            config: spec.config.clone(),
+            ckpt,
+            quant: spec.quant,
+            gamma: spec.gamma,
+            zeta: spec.zeta,
+            gate_scale: spec.gate_scale,
+            calib_seed: seed.wrapping_mul(1000).wrapping_add(1),
+        };
+        let (factory, mem): (EngineFactory, EngineMem) = match engine {
+            EngineKind::NativeInt8 => {
+                // Calibrate + extract i8 weights ONCE, up front; every
+                // engine worker shares the same `Arc<Int8Weights>` copy
+                // (one weight image and one calibration pass for N
+                // workers, instead of N of each).
+                let weights = NativeInt8Engine::load_weights(&espec)?;
+                let mem = EngineMem {
+                    weight_bytes: weights.bytes(),
+                    scratch_bytes_per_worker: Scratch::bytes_for(&weights),
+                    workers: cfg.engines,
+                };
+                let factory: EngineFactory = Arc::new(move || {
+                    let e = NativeInt8Engine::from_weights(weights.clone(), gemm_threads);
+                    Ok(Box::new(e) as Box<dyn ScoreEngine>)
+                });
+                (factory, mem)
+            }
+            _ => {
+                // PJRT holds every parameter as an f32 literal per worker:
+                // estimate from the manifest inventory.
+                let f32_bytes: usize = manifest
+                    .params
+                    .iter()
+                    .map(|p| p.shape.iter().product::<usize>() * 4)
+                    .sum();
+                let mem = EngineMem {
+                    weight_bytes: f32_bytes * cfg.engines.max(1),
+                    scratch_bytes_per_worker: 0,
+                    workers: cfg.engines,
+                };
+                let factory: EngineFactory = Arc::new(move || {
+                    Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
+                });
+                (factory, mem)
+            }
+        };
         let info = EngineInfo {
             seq_len: mcfg.seq_len,
             max_batch,
@@ -140,24 +197,7 @@ pub fn serve(args: &Args) -> Result<()> {
                 spec.quant.a_bits,
                 spec.label
             ),
-        };
-        let espec = EngineSpec {
-            artifacts_root: artifacts,
-            config: spec.config.clone(),
-            ckpt,
-            quant: spec.quant,
-            gamma: spec.gamma,
-            zeta: spec.zeta,
-            gate_scale: spec.gate_scale,
-            calib_seed: seed.wrapping_mul(1000).wrapping_add(1),
-        };
-        let factory: EngineFactory = match engine {
-            EngineKind::NativeInt8 => Arc::new(move || {
-                Ok(Box::new(NativeInt8Engine::new(&espec)?) as Box<dyn ScoreEngine>)
-            }),
-            _ => Arc::new(move || {
-                Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
-            }),
+            mem,
         };
         (info, factory)
     };

@@ -10,25 +10,44 @@
 //! runtime is only used during calibration and is dropped before serving;
 //! the request path is pure host rust.
 //!
+//! The expensive half of construction — calibration + i8 extraction — is
+//! split out as [`NativeInt8Engine::load_weights`], which returns an
+//! `Arc<Int8Weights>`: `qtx serve` runs it **once** and every engine
+//! worker wraps the same shared copy via
+//! [`NativeInt8Engine::from_weights`] (N workers, one weight copy, one
+//! calibration pass instead of N). Each engine keeps its own scratch
+//! arena, packed-batch buffers and reply row vector, so a steady-state
+//! dispatch allocates only the `Vec<ScoreRow>` the [`ScoreEngine`] trait
+//! returns.
+//!
 //! The engine accepts any artifact that carries `act_collect` (manifest
 //! v1+) — unlike the PJRT engine it does not need the `serve_score`
 //! program, since the per-row scoring epilogue is native too.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::calibrator::{calibrate, CollectOptions};
 use crate::coordinator::quantize::quantize_weights;
-use crate::infer::model::{Int8Model, ModelOptions};
-use crate::serve::engine::{pack_batch, EngineSpec, ScoreEngine};
+use crate::infer::model::{Int8Model, Int8Weights, ModelOptions};
+use crate::serve::engine::{pack_batch_into, EngineSpec, ScoreEngine};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::util::log;
+use crate::util::tensor::{IntTensor, Tensor};
 
-/// A ready-to-serve native INT8 session: extracted `i8` weights plus the
-/// calibrated activation grids, executing entirely on the host.
+/// A ready-to-serve native INT8 session: a shared immutable weight copy
+/// plus this worker's scratch and packed-batch buffers, executing entirely
+/// on the host.
 pub struct NativeInt8Engine {
     model: Int8Model,
+    /// Reused packed-batch tensors (zeroed + refilled per dispatch).
+    x: IntTensor,
+    targets: IntTensor,
+    mask: Tensor,
+    /// Reused reply rows (capacity warm after the first dispatch).
+    rows: Vec<ScoreRow>,
     max_batch: usize,
     seq_len: usize,
     causal: bool,
@@ -38,8 +57,9 @@ pub struct NativeInt8Engine {
 impl NativeInt8Engine {
     /// Load artifact + checkpoint, run the shared PTQ pipeline (weights,
     /// then activation calibration on the weight-quantized model), and
-    /// materialize the integer model.
-    pub fn new(spec: &EngineSpec) -> Result<NativeInt8Engine> {
+    /// extract the shareable immutable model half. Run once; clone the
+    /// `Arc` into every worker's [`NativeInt8Engine::from_weights`].
+    pub fn load_weights(spec: &EngineSpec) -> Result<Arc<Int8Weights>> {
         if spec.quant.w_bits != 8 || spec.quant.a_bits != 8 {
             bail!(
                 "native-int8 engine serves W8A8 only (requested W{}A{}); \
@@ -95,28 +115,69 @@ impl NativeInt8Engine {
             gate_scale: spec.gate_scale,
             w_est: spec.quant.w_est,
         };
-        let model = Int8Model::build(&cfg, &params, &art.manifest.quant_points, &qps, opts)?;
+        let weights = Int8Weights::build(&cfg, &params, &art.manifest.quant_points, &qps, opts)?;
         log::info(&format!(
-            "native-int8: calibrated {} points and extracted i8 weights for {} in {:.1}s",
+            "native-int8: calibrated {} points and extracted i8 weights for {} \
+             ({} KiB, shared) in {:.1}s",
             qps.len(),
             cfg.name,
+            weights.bytes() / 1024,
             t0.elapsed().as_secs_f64()
         ));
-        Ok(NativeInt8Engine {
-            model,
-            max_batch: cfg.batch_size,
-            seq_len: cfg.seq_len,
-            causal: cfg.causal,
-            config: cfg.name.clone(),
-        })
+        Ok(Arc::new(weights))
+    }
+
+    /// Default size of the worker-local row-parallel thread set: a few
+    /// cores, never more than the machine has.
+    pub fn default_gemm_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+    }
+
+    /// Wrap a shared weight copy with fresh per-worker state. This is the
+    /// cheap per-worker half — no PJRT, no calibration, no weight copy.
+    /// `gemm_threads ≥ 2` attaches a worker-local row-parallel pool.
+    pub fn from_weights(weights: Arc<Int8Weights>, gemm_threads: usize) -> NativeInt8Engine {
+        let mut model = Int8Model::from_weights(weights);
+        model.set_gemm_threads(gemm_threads);
+        NativeInt8Engine::from_model(model)
     }
 
     /// Wrap an already-built model (tests; no PJRT involved).
     pub fn from_model(model: Int8Model) -> NativeInt8Engine {
-        let cfg = &model.cfg;
+        let cfg = model.cfg();
         let (max_batch, seq_len, causal) = (cfg.batch_size, cfg.seq_len, cfg.causal);
         let config = cfg.name.clone();
-        NativeInt8Engine { model, max_batch, seq_len, causal, config }
+        NativeInt8Engine {
+            x: IntTensor::zeros(&[max_batch, seq_len]),
+            targets: IntTensor::zeros(&[max_batch, seq_len]),
+            mask: Tensor::zeros(&[max_batch, seq_len]),
+            rows: Vec::with_capacity(max_batch),
+            max_batch,
+            seq_len,
+            causal,
+            config,
+            model,
+        }
+    }
+
+    /// Calibrate + extract + wrap, single-worker convenience (tests,
+    /// benches, one-off serving).
+    pub fn new(spec: &EngineSpec) -> Result<NativeInt8Engine> {
+        Ok(NativeInt8Engine::from_weights(
+            NativeInt8Engine::load_weights(spec)?,
+            NativeInt8Engine::default_gemm_threads(),
+        ))
+    }
+
+    /// Bytes of the shared weight copy (counted once, however many
+    /// workers hold the `Arc`).
+    pub fn weight_bytes(&self) -> usize {
+        self.model.weights().bytes()
+    }
+
+    /// Bytes of this worker's private scratch arena.
+    pub fn scratch_bytes(&self) -> usize {
+        self.model.scratch_bytes()
     }
 }
 
@@ -135,15 +196,57 @@ impl ScoreEngine for NativeInt8Engine {
 
     fn describe(&self) -> String {
         format!(
-            "native-int8:{} (batch={}, seq_len={}, causal={})",
-            self.config, self.max_batch, self.seq_len, self.causal
+            "native-int8:{} (batch={}, seq_len={}, causal={}, simd={})",
+            self.config,
+            self.max_batch,
+            self.seq_len,
+            self.causal,
+            crate::infer::simd::active_tier().name()
         )
     }
 
     fn score(&mut self, reqs: &[ScoreRequest]) -> Result<Vec<ScoreRow>> {
-        let (x, targets, mask) = pack_batch(reqs, self.max_batch, self.seq_len, self.causal)?;
-        let mut rows = self.model.forward(&x, &targets, &mask)?;
-        rows.truncate(reqs.len());
-        Ok(rows)
+        pack_batch_into(
+            reqs,
+            self.max_batch,
+            self.seq_len,
+            self.causal,
+            self.x.data_mut(),
+            self.targets.data_mut(),
+            self.mask.data_mut(),
+        )?;
+        self.model.score(&self.x, &self.targets, &self.mask, &mut self.rows)?;
+        Ok(self.rows[..reqs.len()].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::EngineFactory;
+
+    /// The serve-pool sharing shape: one `Arc<Int8Weights>` captured by
+    /// the factory, every constructed engine pointing at the same copy.
+    /// (Weight building itself is covered by `model::tests`; here we pin
+    /// the factory wiring — `Arc::strong_count` grows per worker, no
+    /// duplicate extraction.)
+    #[test]
+    fn factory_shares_one_weight_copy_across_workers() {
+        use crate::infer::model::tests_support::tiny_weights;
+        let weights = tiny_weights();
+        assert_eq!(Arc::strong_count(&weights), 1);
+        let factory: EngineFactory = {
+            let weights = weights.clone();
+            Arc::new(move || {
+                let e = NativeInt8Engine::from_weights(weights.clone(), 1);
+                Ok(Box::new(e) as Box<dyn ScoreEngine>)
+            })
+        };
+        let engines: Vec<Box<dyn ScoreEngine>> = (0..3).map(|_| factory().unwrap()).collect();
+        // 1 original + 1 in the factory closure + 3 workers.
+        assert_eq!(Arc::strong_count(&weights), 5);
+        drop(engines);
+        drop(factory);
+        assert_eq!(Arc::strong_count(&weights), 1);
     }
 }

@@ -19,10 +19,26 @@
 //!
 //! so the hot loop is a pure `u8×i8 → i32` (or `u8×u8 → i32`) dot product
 //! over contiguous memory: weights are stored **transposed** (`[N][K]`),
-//! which makes both operands of every dot unit-stride and lets the
-//! compiler auto-vectorize. Blocking keeps a tile of `NC = 64` weight
-//! columns resident in L1/L2 while the activation rows stream through
-//! (`NC · K` ≤ 32 KiB at the repo's model sizes).
+//! which makes both operands of every dot unit-stride.
+//!
+//! # Blocking and dispatch
+//!
+//! Two levels of blocking:
+//!
+//! * **cache tile** — `NC = 64` weight columns stay resident in L1/L2
+//!   while the activation rows stream through (`NC · K` ≤ 32 KiB at the
+//!   repo's model sizes);
+//! * **register tile** — inside a cache tile, output is produced in
+//!   `MR×NR` blocks whose `i32` accumulators live in registers across the
+//!   whole K loop ([`crate::infer::simd`]). Edge rows/columns fall back to
+//!   single dots.
+//!
+//! The inner dots are *explicit* SIMD with runtime dispatch: an AVX2
+//! widening-multiply/accumulate path when the CPU has it, and a scalar
+//! path that doubles as the bit-exact reference ([`simd::Tier`];
+//! `QTX_SIMD=scalar` forces the reference). Because `i32` accumulation is
+//! exact and order-independent, every tier returns **bit-identical**
+//! output — the property tests below assert `==`, not a tolerance.
 //!
 //! The `i32` accumulator is exact: with K ≤ 512, |acc| ≤ 512·255·255 ≈
 //! 3.3·10⁷, far inside `i32`. This is what makes the integer path *more*
@@ -38,6 +54,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::infer::simd::{self, Tier, MR, NR};
 use crate::quant::grid::QParams;
 use crate::quant::weights::Int8Tensor;
 
@@ -133,31 +150,69 @@ impl Int8Weight {
             .collect();
         Ok(Int8Weight { k, n, wt, scale: t.scale, col_sum })
     }
-}
 
-fn dot_u8_i8(a: &[u8], w: &[i8]) -> i32 {
-    a.iter().zip(w).map(|(&x, &v)| x as i32 * v as i32).sum()
-}
-
-fn dot_u8_u8(a: &[u8], b: &[u8]) -> i32 {
-    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+    /// Resident bytes of this prepared weight (i8 matrix + column sums).
+    pub fn bytes(&self) -> usize {
+        self.wt.len() + self.col_sum.len() * std::mem::size_of::<i32>()
+    }
 }
 
 /// Activation (`u8`, `m×k`) × weight (`i8`, `k×n`) → f32 `m×n`:
-/// `out[i][j] = s_a·s_w·(Σ q_a·w − z_a·Σw) + bias[j]`.
+/// `out[i][j] = s_a·s_w·(Σ q_a·w − z_a·Σw) + bias[j]`, on the
+/// process-wide [`simd::active_tier`].
 pub fn gemm_q8(a: QView<'_>, m: usize, w: &Int8Weight, bias: Option<&[f32]>, out: &mut [f32]) {
-    let k = w.k;
+    gemm_q8_tier(simd::active_tier(), a, m, w, bias, out)
+}
+
+/// [`gemm_q8`] with an explicit instruction tier (benches, A/B tests).
+pub fn gemm_q8_tier(
+    tier: Tier,
+    a: QView<'_>,
+    m: usize,
+    w: &Int8Weight,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let (k, n) = (w.k, w.n);
     debug_assert_eq!(a.data.len(), m * k);
-    debug_assert_eq!(out.len(), m * w.n);
+    debug_assert_eq!(out.len(), m * n);
     let alpha = a.scale * w.scale;
-    for j0 in (0..w.n).step_by(NC) {
-        let j1 = (j0 + NC).min(w.n);
-        for (i, a_row) in a.data.chunks_exact(k).enumerate() {
-            let out_row = &mut out[i * w.n..(i + 1) * w.n];
-            for j in j0..j1 {
-                let acc = dot_u8_i8(a_row, &w.wt[j * k..(j + 1) * k]);
-                let v = alpha * (acc - a.zero_point * w.col_sum[j]) as f32;
-                out_row[j] = v + bias.map_or(0.0, |b| b[j]);
+    let epilogue = |acc: i32, j: usize| -> f32 {
+        alpha * (acc - a.zero_point * w.col_sum[j]) as f32 + bias.map_or(0.0, |b| b[j])
+    };
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        // Full MR-row blocks through the register-tiled micro-kernel.
+        let mut i0 = 0;
+        while i0 + MR <= m {
+            let a_blk = &a.data[i0 * k..(i0 + MR) * k];
+            let mut j = j0;
+            while j + NR <= j1 {
+                let w_blk = &w.wt[j * k..(j + NR) * k];
+                let mut acc = [0i32; MR * NR];
+                simd::mk_u8_i8(tier, a_blk, w_blk, k, &mut acc);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        out[(i0 + r) * n + j + c] = epilogue(acc[r * NR + c], j + c);
+                    }
+                }
+                j += NR;
+            }
+            for jj in j..j1 {
+                let col = &w.wt[jj * k..(jj + 1) * k];
+                for r in 0..MR {
+                    let acc = simd::dot_u8_i8(tier, &a_blk[r * k..(r + 1) * k], col);
+                    out[(i0 + r) * n + jj] = epilogue(acc, jj);
+                }
+            }
+            i0 += MR;
+        }
+        // Edge rows (m % MR): plain dots.
+        for i in i0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            for jj in j0..j1 {
+                let acc = simd::dot_u8_i8(tier, a_row, &w.wt[jj * k..(jj + 1) * k]);
+                out[i * n + jj] = epilogue(acc, jj);
             }
         }
     }
@@ -167,24 +222,83 @@ pub fn gemm_q8(a: QView<'_>, m: usize, w: &Int8Weight, bias: Option<&[f32]>, out
 /// used for attention scores (`Q·Kᵀ`) and context (`P·V`). `a` is `m×k`
 /// row-major, `bt` is the second operand already transposed to `n×k`
 /// row-major; `out[i][j] = s_a·s_b·Σ (q_a−z_a)(q_b−z_b)`.
-pub fn gemm_q8q8(a: QView<'_>, bt: QView<'_>, m: usize, n: usize, k: usize, out: &mut [f32]) {
+///
+/// `sums` is caller-provided scratch of at least `m + n` ints (row sums of
+/// `a`, then column sums of `bt`) — keeping the steady-state dispatch
+/// allocation-free.
+pub fn gemm_q8q8(
+    a: QView<'_>,
+    bt: QView<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    sums: &mut [i32],
+    out: &mut [f32],
+) {
+    gemm_q8q8_tier(simd::active_tier(), a, bt, m, n, k, sums, out)
+}
+
+/// [`gemm_q8q8`] with an explicit instruction tier (benches, A/B tests).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_q8q8_tier(
+    tier: Tier,
+    a: QView<'_>,
+    bt: QView<'_>,
+    m: usize,
+    n: usize,
+    k: usize,
+    sums: &mut [i32],
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.data.len(), m * k);
     debug_assert_eq!(bt.data.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    let row_sum: Vec<i32> =
-        a.data.chunks_exact(k).map(|r| r.iter().map(|&v| v as i32).sum()).collect();
-    let col_sum: Vec<i32> =
-        bt.data.chunks_exact(k).map(|c| c.iter().map(|&v| v as i32).sum()).collect();
+    assert!(sums.len() >= m + n, "gemm_q8q8: sums scratch {} < m+n {}", sums.len(), m + n);
+    let (row_sum, rest) = sums.split_at_mut(m);
+    let col_sum = &mut rest[..n];
+    for (s, r) in row_sum.iter_mut().zip(a.data.chunks_exact(k)) {
+        *s = r.iter().map(|&v| v as i32).sum();
+    }
+    for (s, c) in col_sum.iter_mut().zip(bt.data.chunks_exact(k)) {
+        *s = c.iter().map(|&v| v as i32).sum();
+    }
+    let (row_sum, col_sum) = (&row_sum[..m], &col_sum[..n]);
     let alpha = a.scale * bt.scale;
     let kzz = k as i32 * a.zero_point * bt.zero_point;
+    let epilogue = |acc: i32, i: usize, j: usize| -> f32 {
+        alpha * (acc - a.zero_point * col_sum[j] - bt.zero_point * row_sum[i] + kzz) as f32
+    };
     for j0 in (0..n).step_by(NC) {
         let j1 = (j0 + NC).min(n);
-        for (i, a_row) in a.data.chunks_exact(k).enumerate() {
-            let out_row = &mut out[i * n..(i + 1) * n];
-            for j in j0..j1 {
-                let acc = dot_u8_u8(a_row, &bt.data[j * k..(j + 1) * k]);
-                let centered = acc - a.zero_point * col_sum[j] - bt.zero_point * row_sum[i] + kzz;
-                out_row[j] = alpha * centered as f32;
+        let mut i0 = 0;
+        while i0 + MR <= m {
+            let a_blk = &a.data[i0 * k..(i0 + MR) * k];
+            let mut j = j0;
+            while j + NR <= j1 {
+                let b_blk = &bt.data[j * k..(j + NR) * k];
+                let mut acc = [0i32; MR * NR];
+                simd::mk_u8_u8(tier, a_blk, b_blk, k, &mut acc);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        out[(i0 + r) * n + j + c] = epilogue(acc[r * NR + c], i0 + r, j + c);
+                    }
+                }
+                j += NR;
+            }
+            for jj in j..j1 {
+                let col = &bt.data[jj * k..(jj + 1) * k];
+                for r in 0..MR {
+                    let acc = simd::dot_u8_u8(tier, &a_blk[r * k..(r + 1) * k], col);
+                    out[(i0 + r) * n + jj] = epilogue(acc, i0 + r, jj);
+                }
+            }
+            i0 += MR;
+        }
+        for i in i0..m {
+            let a_row = &a.data[i * k..(i + 1) * k];
+            for jj in j0..j1 {
+                let acc = simd::dot_u8_u8(tier, a_row, &bt.data[jj * k..(jj + 1) * k]);
+                out[i * n + jj] = epilogue(acc, i, jj);
             }
         }
     }
@@ -247,6 +361,7 @@ mod tests {
     use super::*;
     use crate::quant::estimators::EstimatorKind;
     use crate::quant::weights::{fake_quant_weight, quantize_weight_int8};
+    use crate::util::proptest::check;
     use crate::util::rng::Rng;
     use crate::util::tensor::Tensor;
 
@@ -336,8 +451,9 @@ mod tests {
         let qa = QAct::quantize(&xa, &qp_of(&xa)).unwrap();
         let qb = QAct::quantize(&xb, &qp_of(&xb)).unwrap();
 
+        let mut sums = vec![0i32; m + n];
         let mut out = vec![0.0f32; m * n];
-        gemm_q8q8(qa.view(), qb.view(), m, n, k, &mut out);
+        gemm_q8q8(qa.view(), qb.view(), m, n, k, &mut sums, &mut out);
 
         // Reference: dequantized a (m×k) times dequantized bt (n×k) transposed.
         let af = qa.dequant_all();
@@ -400,5 +516,80 @@ mod tests {
         let acc: i32 = (0..k).map(|l| qa.data[l] as i32 * wq.wt[j * k + l] as i32).sum();
         let want = qa.scale * wq.scale * (acc - qa.zero_point * wq.col_sum[j]) as f32;
         assert_eq!(out[j], want);
+    }
+
+    /// Random shapes/grids: the detected-tier GEMM is **bit-identical** to
+    /// the scalar-tier GEMM (`==` on every f32 — same exact i32s feed the
+    /// same f32 epilogue). Shapes deliberately straddle the MR/NR/NC
+    /// register- and cache-tile edges.
+    #[test]
+    fn gemm_q8_simd_equals_scalar_bit_exactly() {
+        let tier = Tier::detect();
+        check(
+            "gemm_q8_simd_eq_scalar",
+            |rng| {
+                let m = 1 + rng.below(13) as usize;
+                let k = 1 + rng.below(70) as usize;
+                let n = 1 + rng.below((NC + 9) as u32) as usize;
+                let codes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let wv = rand_vec(rng, k * n, 0.05);
+                let zp = rng.below(256) as i32;
+                (m, k, n, codes, wv, zp)
+            },
+            |&(m, k, n, ref codes, ref wv, zp)| {
+                let w = Tensor::new(vec![k, n], wv.clone()).unwrap();
+                let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax))
+                    .unwrap();
+                let a = QView { data: codes, scale: 0.013, zero_point: zp };
+                let mut simd_out = vec![0.0f32; m * n];
+                let mut scalar_out = vec![0.0f32; m * n];
+                gemm_q8_tier(tier, a, m, &wq, None, &mut simd_out);
+                gemm_q8_tier(Tier::Scalar, a, m, &wq, None, &mut scalar_out);
+                for i in 0..m * n {
+                    if simd_out[i] != scalar_out[i] {
+                        return Err(format!(
+                            "({i}): {} ({tier:?}) != {} (scalar)",
+                            simd_out[i], scalar_out[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Same bit-exactness property for the u8×u8 kernel.
+    #[test]
+    fn gemm_q8q8_simd_equals_scalar_bit_exactly() {
+        let tier = Tier::detect();
+        check(
+            "gemm_q8q8_simd_eq_scalar",
+            |rng| {
+                let m = 1 + rng.below(11) as usize;
+                let n = 1 + rng.below(11) as usize;
+                let k = 1 + rng.below(40) as usize;
+                let a: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..n * k).map(|_| rng.below(256) as u8).collect();
+                (m, n, k, a, b, rng.below(256) as i32, rng.below(256) as i32)
+            },
+            |&(m, n, k, ref ad, ref bd, za, zb)| {
+                let a = QView { data: ad, scale: 0.021, zero_point: za };
+                let b = QView { data: bd, scale: 0.007, zero_point: zb };
+                let mut sums = vec![0i32; m + n];
+                let mut simd_out = vec![0.0f32; m * n];
+                let mut scalar_out = vec![0.0f32; m * n];
+                gemm_q8q8_tier(tier, a, b, m, n, k, &mut sums, &mut simd_out);
+                gemm_q8q8_tier(Tier::Scalar, a, b, m, n, k, &mut sums, &mut scalar_out);
+                for i in 0..m * n {
+                    if simd_out[i] != scalar_out[i] {
+                        return Err(format!(
+                            "({i}): {} ({tier:?}) != {} (scalar)",
+                            simd_out[i], scalar_out[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

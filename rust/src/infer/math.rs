@@ -72,6 +72,24 @@ pub(crate) fn score_rows(
     v: usize,
 ) -> Vec<ScoreRow> {
     let mut rows = Vec::with_capacity(b);
+    score_rows_into(logits, targets, mask, b, t, v, &mut rows);
+    rows
+}
+
+/// [`score_rows`] into a caller-owned vector (cleared first): after the
+/// first call the capacity is warm and scoring allocates nothing — the
+/// shape the zero-allocation dispatch path needs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_rows_into(
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    b: usize,
+    t: usize,
+    v: usize,
+    rows: &mut Vec<ScoreRow>,
+) {
+    rows.clear();
     for bi in 0..b {
         let mut row = ScoreRow { nll: 0.0, count: 0.0, correct: 0.0 };
         for ti in 0..t {
@@ -98,7 +116,6 @@ pub(crate) fn score_rows(
         }
         rows.push(row);
     }
-    rows
 }
 
 #[cfg(test)]

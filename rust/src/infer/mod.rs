@@ -29,11 +29,16 @@
 //!
 //! Module map:
 //!
+//! * [`simd`]      — explicit-SIMD integer dots + `MR×NR` register-tiled
+//!   micro-kernels with runtime tier dispatch (scalar reference ↔ AVX2);
+//!   scalar and SIMD tiers are bit-identical by property test.
 //! * [`gemm`]      — cache-blocked integer GEMM kernels + quantized
-//!   activation buffers.
-//! * [`model`]     — [`model::Int8Model`]: weight extraction and the full
-//!   scoring forward (embed → clipped-softmax/gated attention → FFN →
-//!   unquantized head → per-row NLL).
+//!   activation buffers, built on [`simd`].
+//! * [`pool`]      — [`pool::RowPool`]: the worker-local fork-join thread
+//!   set that splits a dispatch's GEMM rows across cores.
+//! * [`model`]     — [`model::Int8Weights`] (immutable, `Arc`-shared
+//!   across serve workers) + [`model::Int8Model`] (per-worker scratch
+//!   arena; zero-allocation steady-state `score`).
 //! * [`engine`]    — [`engine::NativeInt8Engine`]: artifact + checkpoint
 //!   loading, PJRT-shared calibration, `ScoreEngine` impl.
 //! * [`reference`] — f32 fake-quant oracle used by the artifact-free
@@ -43,7 +48,9 @@ pub mod engine;
 pub mod gemm;
 mod math;
 pub mod model;
+pub mod pool;
 pub mod reference;
+pub mod simd;
 
 pub use engine::NativeInt8Engine;
-pub use model::{Int8Model, ModelOptions};
+pub use model::{Int8Model, Int8Weights, ModelOptions, Scratch};

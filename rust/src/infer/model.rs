@@ -28,22 +28,46 @@
 //!   output, which the fake-quant graph also feeds in f32 ([`gemm_f32q8`]
 //!   keeps the weight integer);
 //! * the output head — §5 excludes it from quantization entirely.
+//!
+//! # Memory & threading model
+//!
+//! The model is split into two halves:
+//!
+//! * [`Int8Weights`] — the immutable calibrated model: extracted `i8`
+//!   weights, f32 glue parameters, and every activation grid resolved
+//!   **at build time** (no name lookups or string formatting on the hot
+//!   path). Shared across serve workers behind one `Arc` — N workers hold
+//!   one copy.
+//! * [`Int8Model`] — one worker's mutable execution state: a [`Scratch`]
+//!   arena sized once from the config, plus an optional row-parallel
+//!   [`RowPool`]. After the first call, [`Int8Model::score`] performs
+//!   **zero heap allocations** (asserted under the `alloc-counter`
+//!   feature); with a pool, the m-row GEMMs (projections, FFN, head) are
+//!   split across a small worker-local thread set when the batch is large
+//!   enough to amortize the fork-join.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::infer::gemm::{gemm_f32, gemm_f32q8, gemm_q8, gemm_q8q8, Int8Weight, QAct, QView};
+use crate::infer::gemm::{gemm_f32, gemm_f32q8, gemm_q8, gemm_q8q8, Int8Weight, QView};
 use crate::infer::math::{
-    gelu_tanh, layernorm_rows, score_rows, sigmoid, softmax_stretch_clip, NEG_INF,
+    gelu_tanh, layernorm_rows, score_rows_into, sigmoid, softmax_stretch_clip, NEG_INF,
 };
-use crate::infer::reference::{gate_logits, is_post_ln};
+use crate::infer::pool::{par_rows, RowPool};
+use crate::infer::reference::{is_post_ln, GateSpec};
 use crate::quant::estimators::EstimatorKind;
 use crate::quant::grid::QParams;
 use crate::quant::weights::{quantize_weight_int8, Int8Tensor};
 use crate::runtime::artifact::ConfigInfo;
 use crate::serve::protocol::ScoreRow;
 use crate::util::tensor::{IntTensor, Tensor};
+
+/// Below this many batch rows a dispatch stays on the calling thread even
+/// when a [`RowPool`] is attached (the fork-join round-trip would not
+/// amortize).
+const MIN_PAR_ROWS: usize = 16;
 
 /// Forward-pass hyperparameters frozen into the model at build time (they
 /// are runtime inputs of the AOT graph; the native model bakes them in).
@@ -65,6 +89,26 @@ impl Default for ModelOptions {
     }
 }
 
+/// One layer's activation grids, resolved from the quant-point map at
+/// build time so the dispatch path never formats names or hashes strings.
+#[derive(Debug, Clone, Copy)]
+struct LayerGrids {
+    q: QParams,
+    k: QParams,
+    v: QParams,
+    probs: QParams,
+    ctx: QParams,
+    attn_out: QParams,
+    res1: QParams,
+    /// FFN-input grid: `ln1_out` on the post-LN path, `ln2_out` on pre-LN.
+    fin: QParams,
+    ffn_h: QParams,
+    ffn_out: QParams,
+    res2: QParams,
+    /// Post-LN only: the block-output re-normalization grid (`ln2_out`).
+    post_ln2: Option<QParams>,
+}
+
 struct Layer {
     wq: Int8Weight,
     wk: Int8Weight,
@@ -82,14 +126,18 @@ struct Layer {
     b1: Vec<f32>,
     w2: Int8Weight,
     b2: Vec<f32>,
+    /// Resolved gating-module parameters ([`GateSpec`]) — f32, outside the
+    /// weight-PTQ set (`quantize=false` in the manifest).
+    gate: Option<GateSpec>,
+    grids: LayerGrids,
 }
 
-/// A fully materialized INT8 scoring model for one token-family config.
-pub struct Int8Model {
+/// The immutable half of a materialized INT8 model: extracted weights plus
+/// every calibrated grid, shareable across serve workers via `Arc` (plain
+/// data, `Send + Sync`).
+pub struct Int8Weights {
     pub cfg: ConfigInfo,
     opts: ModelOptions,
-    /// Calibrated activation grids by quant-point name.
-    qp: HashMap<String, QParams>,
     tok_emb: Int8Tensor,
     pos_emb: Int8Tensor,
     emb_ln: Option<(Vec<f32>, Vec<f32>)>,
@@ -98,13 +146,12 @@ pub struct Int8Model {
     /// Head weights transposed to `(v, d)` for the f32 GEMM; unquantized.
     head_wt: Vec<f32>,
     head_b: Vec<f32>,
-    /// Gating-module parameters, name-addressed for the shared
-    /// [`gate_logits`] code. Gates stay f32: they are outside the
-    /// weight-PTQ set (`quantize=false` in the manifest).
-    gate_params: Vec<(String, Tensor)>,
+    embed_qp: QParams,
+    /// Pre-LN only: the `final_out` grid after the final LayerNorm.
+    final_qp: Option<QParams>,
 }
 
-impl Int8Model {
+impl Int8Weights {
     /// Build from raw (unquantized) checkpoint parameters plus the
     /// calibrated activation grids. Weight quantization happens here with
     /// `opts.w_est`, landing on exactly the grid
@@ -116,7 +163,7 @@ impl Int8Model {
         quant_points: &[String],
         act_qp: &[QParams],
         opts: ModelOptions,
-    ) -> Result<Int8Model> {
+    ) -> Result<Int8Weights> {
         if cfg.family == "vit" {
             bail!("native INT8 backend is token-based (vision serving is a ROADMAP item)");
         }
@@ -139,6 +186,11 @@ impl Int8Model {
                 );
             }
         }
+        let grid = |name: &str| -> Result<QParams> {
+            qp.get(name)
+                .copied()
+                .with_context(|| format!("no calibrated grid for quant point {name:?}"))
+        };
 
         let find = |name: &str| -> Result<&Tensor> {
             params
@@ -177,22 +229,30 @@ impl Int8Model {
             None
         };
 
+        let post = is_post_ln(cfg);
         let mut layers = Vec::with_capacity(cfg.n_layers);
-        let mut gate_params: Vec<(String, Tensor)> = Vec::new();
         for li in 0..cfg.n_layers {
             let lp = |s: &str| format!("L{li}.{s}");
             let w1 = int8w(&lp("w1"), d)?;
-            if cfg.use_gate {
-                let gate_names: &[&str] = match cfg.attention.as_str() {
-                    "gated_linear" | "gated_allheads" => &["gate.w", "gate.b"],
-                    "gated_mlp" => &["gate.w1", "gate.b1", "gate.w2", "gate.b2"],
-                    other => bail!("unknown gated attention variant {other:?}"),
-                };
-                for n in gate_names {
-                    let full = lp(n);
-                    gate_params.push((full.clone(), find(&full)?.clone()));
-                }
-            }
+            let gate = if cfg.use_gate {
+                Some(GateSpec::resolve(cfg, params, li)?)
+            } else {
+                None
+            };
+            let grids = LayerGrids {
+                q: grid(&lp("q"))?,
+                k: grid(&lp("k"))?,
+                v: grid(&lp("v"))?,
+                probs: grid(&lp("probs"))?,
+                ctx: grid(&lp("ctx"))?,
+                attn_out: grid(&lp("attn_out"))?,
+                res1: grid(&lp("res1"))?,
+                fin: if post { grid(&lp("ln1_out"))? } else { grid(&lp("ln2_out"))? },
+                ffn_h: grid(&lp("ffn_h"))?,
+                ffn_out: grid(&lp("ffn_out"))?,
+                res2: grid(&lp("res2"))?,
+                post_ln2: if post { Some(grid(&lp("ln2_out"))?) } else { None },
+            };
             layers.push(Layer {
                 wq: int8w(&lp("wq"), d)?,
                 wk: int8w(&lp("wk"), d)?,
@@ -210,14 +270,17 @@ impl Int8Model {
                 w1,
                 b1: vecf(&lp("b1"))?,
                 b2: vecf(&lp("b2"))?,
+                gate,
+                grids,
             });
         }
 
-        let final_ln = if is_post_ln(cfg) {
+        let final_ln = if post {
             None
         } else {
             Some((vecf("final_ln.g")?, vecf("final_ln.b")?))
         };
+        let final_qp = if post { None } else { Some(grid("final_out")?) };
 
         // Head stays f32 (§5) — transpose (d, v) → (v, d) for the GEMM.
         let head_w = find("head.w")?;
@@ -236,10 +299,9 @@ impl Int8Model {
         }
         let head_b = vecf("head.b")?;
 
-        Ok(Int8Model {
+        Ok(Int8Weights {
             cfg: cfg.clone(),
             opts,
-            qp,
             tok_emb,
             pos_emb,
             emb_ln,
@@ -247,246 +309,585 @@ impl Int8Model {
             final_ln,
             head_wt,
             head_b,
-            gate_params,
+            embed_qp: grid("embed")?,
+            final_qp,
         })
     }
 
-    fn qp(&self, name: &str) -> Result<&QParams> {
-        self.qp
-            .get(name)
-            .with_context(|| format!("no calibrated grid for quant point {name:?}"))
+    /// FFN hidden width (from the extracted weights; the manifest config
+    /// does not carry `d_ff`).
+    fn ff_dim(&self) -> usize {
+        self.layers.first().map_or(4 * self.cfg.d_model, |l| l.w1.n)
     }
 
-    /// Requantize a tap-point tensor onto its calibrated grid.
-    fn tap(&self, name: &str, x: &[f32]) -> Result<QAct> {
-        QAct::quantize(x, self.qp(name)?).with_context(|| format!("quant point {name:?}"))
+    /// Resident bytes of the shared weight copy (i8 matrices + column
+    /// sums + f32 glue parameters). This is the number `/statz` reports
+    /// as `engine.mem.weight_bytes`.
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let vf = |v: &Vec<f32>| v.len() * f;
+        let mut b = self.tok_emb.data.len() + self.pos_emb.data.len();
+        if let Some((g, bb)) = &self.emb_ln {
+            b += vf(g) + vf(bb);
+        }
+        for l in &self.layers {
+            b += l.wq.bytes() + l.wk.bytes() + l.wv.bytes() + l.wo.bytes();
+            b += l.w1.bytes() + l.w2.bytes();
+            b += vf(&l.bq) + vf(&l.bk) + vf(&l.bv) + vf(&l.bo) + vf(&l.b1) + vf(&l.b2);
+            b += vf(&l.ln1_g) + vf(&l.ln1_b) + vf(&l.ln2_g) + vf(&l.ln2_b);
+            if let Some(g) = &l.gate {
+                b += g.bytes();
+            }
+        }
+        if let Some((g, bb)) = &self.final_ln {
+            b += vf(g) + vf(bb);
+        }
+        b += vf(&self.head_wt) + vf(&self.head_b);
+        b
+    }
+}
+
+/// Per-worker scratch arena: every buffer the forward pass touches, sized
+/// once from the config so the steady-state dispatch never allocates.
+pub struct Scratch {
+    b: usize,
+    t: usize,
+    // f32 buffers (m·d unless noted; m = b·t).
+    h_f: Vec<f32>,
+    ln_f: Vec<f32>,
+    proj_f: Vec<f32>,
+    attn_f: Vec<f32>,
+    res_f: Vec<f32>,
+    base_f: Vec<f32>,
+    ffn_f: Vec<f32>,    // m·ff
+    logits: Vec<f32>,   // m·vocab
+    glog: Vec<f32>,     // b·h·t
+    scores: Vec<f32>,   // t·t
+    ctx_f: Vec<f32>,    // t·dh
+    // u8 code buffers (m·d unless noted).
+    h_q: Vec<u8>,
+    q_u8: Vec<u8>,
+    k_u8: Vec<u8>,
+    v_u8: Vec<u8>,
+    qh: Vec<u8>,
+    kh: Vec<u8>,
+    vh: Vec<u8>,
+    merged: Vec<u8>,
+    attn_u8: Vec<u8>,
+    res1_u8: Vec<u8>,
+    fin_u8: Vec<u8>,
+    res2_u8: Vec<u8>,
+    ffn_u8: Vec<u8>,      // m·ff
+    probs_u8: Vec<u8>,    // b·h·t·t
+    ctx_u8: Vec<u8>,      // b·h·t·dh
+    vt: Vec<u8>,          // dh·t
+    /// Row/column-sum scratch for [`gemm_q8q8`] (`t + max(t, dh)`).
+    sums: Vec<i32>,
+    /// First dispatch done — from here on `score` must not allocate.
+    warm: bool,
+}
+
+impl Scratch {
+    /// Size every buffer for `weights`' config (static batch × seq_len).
+    pub fn for_weights(w: &Int8Weights) -> Scratch {
+        let cfg = &w.cfg;
+        let (b, t, d) = (cfg.batch_size, cfg.seq_len, cfg.d_model);
+        let (v, h) = (cfg.vocab_size, cfg.n_heads);
+        let dh = d / h;
+        let (m, ff) = (b * t, w.ff_dim());
+        Scratch {
+            b,
+            t,
+            h_f: vec![0.0; m * d],
+            ln_f: vec![0.0; m * d],
+            proj_f: vec![0.0; m * d],
+            attn_f: vec![0.0; m * d],
+            res_f: vec![0.0; m * d],
+            base_f: vec![0.0; m * d],
+            ffn_f: vec![0.0; m * ff],
+            logits: vec![0.0; m * v],
+            glog: vec![0.0; b * h * t],
+            scores: vec![0.0; t * t],
+            ctx_f: vec![0.0; t * dh],
+            h_q: vec![0; m * d],
+            q_u8: vec![0; m * d],
+            k_u8: vec![0; m * d],
+            v_u8: vec![0; m * d],
+            qh: vec![0; m * d],
+            kh: vec![0; m * d],
+            vh: vec![0; m * d],
+            merged: vec![0; m * d],
+            attn_u8: vec![0; m * d],
+            res1_u8: vec![0; m * d],
+            fin_u8: vec![0; m * d],
+            res2_u8: vec![0; m * d],
+            ffn_u8: vec![0; m * ff],
+            probs_u8: vec![0; b * h * t * t],
+            ctx_u8: vec![0; b * h * t * dh],
+            vt: vec![0; dh * t],
+            sums: vec![0; t + t.max(dh)],
+            warm: false,
+        }
+    }
+
+    /// What [`Scratch::for_weights`] would occupy, computed arithmetically
+    /// — lets `qtx serve` report `engine.mem.scratch_bytes_per_worker`
+    /// without building (and zeroing) a throwaway arena. Kept in lock-step
+    /// with [`Scratch::bytes`] by test.
+    pub fn bytes_for(w: &Int8Weights) -> usize {
+        let cfg = &w.cfg;
+        let (b, t, d) = (cfg.batch_size, cfg.seq_len, cfg.d_model);
+        let (v, h) = (cfg.vocab_size, cfg.n_heads);
+        let dh = d / h;
+        let (m, ff) = (b * t, w.ff_dim());
+        // 6 m·d f32 (h/ln/proj/attn/res/base) + ffn + logits + glog +
+        // scores + ctx; 12 m·d u8 code buffers + ffn + probs + ctx + vt.
+        let f32_elems = 6 * m * d + m * ff + m * v + b * h * t + t * t + t * dh;
+        let u8_elems = 12 * m * d + m * ff + b * h * t * t + b * h * t * dh + dh * t;
+        f32_elems * std::mem::size_of::<f32>()
+            + u8_elems
+            + (t + t.max(dh)) * std::mem::size_of::<i32>()
+    }
+
+    /// Resident bytes of this arena — `/statz`'s
+    /// `engine.mem.scratch_bytes_per_worker`.
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        (self.h_f.len()
+            + self.ln_f.len()
+            + self.proj_f.len()
+            + self.attn_f.len()
+            + self.res_f.len()
+            + self.base_f.len()
+            + self.ffn_f.len()
+            + self.logits.len()
+            + self.glog.len()
+            + self.scores.len()
+            + self.ctx_f.len())
+            * f
+            + self.h_q.len()
+            + self.q_u8.len()
+            + self.k_u8.len()
+            + self.v_u8.len()
+            + self.qh.len()
+            + self.kh.len()
+            + self.vh.len()
+            + self.merged.len()
+            + self.attn_u8.len()
+            + self.res1_u8.len()
+            + self.fin_u8.len()
+            + self.res2_u8.len()
+            + self.ffn_u8.len()
+            + self.probs_u8.len()
+            + self.ctx_u8.len()
+            + self.vt.len()
+            + self.sums.len() * std::mem::size_of::<i32>()
+    }
+}
+
+/// One worker's executable model: a shared [`Int8Weights`] handle plus
+/// private [`Scratch`] and an optional row-parallel pool.
+pub struct Int8Model {
+    weights: Arc<Int8Weights>,
+    scratch: Scratch,
+    pool: Option<RowPool>,
+}
+
+impl Int8Model {
+    /// Build weights and wrap them in a single-worker model (tests and
+    /// one-shot use; serving shares one [`Int8Weights`] across workers via
+    /// [`Int8Model::from_weights`]).
+    pub fn build(
+        cfg: &ConfigInfo,
+        params: &[(String, Tensor)],
+        quant_points: &[String],
+        act_qp: &[QParams],
+        opts: ModelOptions,
+    ) -> Result<Int8Model> {
+        Ok(Int8Model::from_weights(Arc::new(Int8Weights::build(
+            cfg,
+            params,
+            quant_points,
+            act_qp,
+            opts,
+        )?)))
+    }
+
+    /// Wrap a shared weight handle with fresh per-worker scratch.
+    pub fn from_weights(weights: Arc<Int8Weights>) -> Int8Model {
+        let scratch = Scratch::for_weights(&weights);
+        Int8Model { weights, scratch, pool: None }
+    }
+
+    /// The shared immutable half (for `Arc::strong_count` accounting and
+    /// `/statz` memory reporting).
+    pub fn weights(&self) -> &Arc<Int8Weights> {
+        &self.weights
+    }
+
+    pub fn cfg(&self) -> &ConfigInfo {
+        &self.weights.cfg
+    }
+
+    /// Attach (`n ≥ 2`) or detach (`n ≤ 1`) a worker-local row-parallel
+    /// thread set: dispatches with enough batch rows split their m-row
+    /// GEMMs across `n` parts (including the calling thread).
+    pub fn set_gemm_threads(&mut self, n: usize) {
+        self.pool = if n >= 2 { Some(RowPool::new(n)) } else { None };
+    }
+
+    pub fn scratch_bytes(&self) -> usize {
+        self.scratch.bytes()
     }
 
     /// Score a packed batch: `x`/`targets` are `(b, t)` token ids, `mask`
     /// is the scored-position mask (all-zero rows are padding and score
-    /// `(0, 0, 0)`). Returns one [`ScoreRow`] per batch row.
+    /// `(0, 0, 0)`). Appends one [`ScoreRow`] per batch row into `out`
+    /// (cleared first).
+    ///
+    /// Steady-state contract: after the first call with a given `out`
+    /// vector, this performs **zero heap allocations** (buffers come from
+    /// [`Scratch`]; `out`'s capacity is reused). The `alloc-counter`
+    /// feature turns that claim into a `debug_assert`.
+    pub fn score(
+        &mut self,
+        x: &IntTensor,
+        targets: &IntTensor,
+        mask: &Tensor,
+        out: &mut Vec<ScoreRow>,
+    ) -> Result<()> {
+        #[cfg(feature = "alloc-counter")]
+        let (allocs0, out_cap0) = (crate::util::alloc::allocations(), out.capacity());
+        self.score_inner(x, targets, mask, out)?;
+        // Steady state = the arena is warm AND the caller's `out` vector
+        // already had the capacity (a cold `out` legitimately grows once).
+        #[cfg(feature = "alloc-counter")]
+        if self.scratch.warm && out_cap0 >= out.len() {
+            debug_assert_eq!(
+                crate::util::alloc::allocations(),
+                allocs0,
+                "steady-state Int8Model::score allocated on the dispatch thread"
+            );
+        }
+        self.scratch.warm = true;
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`Int8Model::score`].
     pub fn forward(
-        &self,
+        &mut self,
         x: &IntTensor,
         targets: &IntTensor,
         mask: &Tensor,
     ) -> Result<Vec<ScoreRow>> {
+        let mut rows = Vec::new();
+        self.score(x, targets, mask, &mut rows)?;
+        Ok(rows)
+    }
+
+    fn score_inner(
+        &mut self,
+        x: &IntTensor,
+        targets: &IntTensor,
+        mask: &Tensor,
+        out: &mut Vec<ScoreRow>,
+    ) -> Result<()> {
+        let Int8Model { weights, scratch, pool } = self;
+        let w: &Int8Weights = weights;
+        let pool = pool.as_ref();
+        let cfg = &w.cfg;
         let &[b, t] = x.shape() else { bail!("x must be (batch, seq)") };
-        let cfg = &self.cfg;
-        let (d, h) = (cfg.d_model, cfg.n_heads);
-        let dh = d / h;
+        if b > scratch.b || t != scratch.t {
+            bail!(
+                "batch ({b}, {t}) exceeds the scratch shape ({}, {}) sized from config {}",
+                scratch.b,
+                scratch.t,
+                cfg.name
+            );
+        }
+        let (d, nh, v) = (cfg.d_model, cfg.n_heads, cfg.vocab_size);
+        let dh = d / nh;
         let m = b * t;
+        let ff = w.ff_dim();
         let pre_ln = !is_post_ln(cfg);
-        let opts = &self.opts;
+        let opts = &w.opts;
         for &tg in targets.data() {
-            if tg < 0 || tg as usize >= cfg.vocab_size {
-                bail!("target id {tg} outside vocab {}", cfg.vocab_size);
+            if tg < 0 || tg as usize >= v {
+                bail!("target id {tg} outside vocab {v}");
             }
         }
+
+        // Slice the arena down to this batch's extent.
+        let h_f = &mut scratch.h_f[..m * d];
+        let ln_f = &mut scratch.ln_f[..m * d];
+        let proj_f = &mut scratch.proj_f[..m * d];
+        let attn_f = &mut scratch.attn_f[..m * d];
+        let res_f = &mut scratch.res_f[..m * d];
+        let base_f = &mut scratch.base_f[..m * d];
+        let ffn_f = &mut scratch.ffn_f[..m * ff];
+        let logits = &mut scratch.logits[..m * v];
+        let glog = &mut scratch.glog[..b * nh * t];
+        let scores = &mut scratch.scores[..t * t];
+        let ctx_f = &mut scratch.ctx_f[..t * dh];
+        let h_q = &mut scratch.h_q[..m * d];
+        let q_u8 = &mut scratch.q_u8[..m * d];
+        let k_u8 = &mut scratch.k_u8[..m * d];
+        let v_u8 = &mut scratch.v_u8[..m * d];
+        let qh = &mut scratch.qh[..m * d];
+        let kh = &mut scratch.kh[..m * d];
+        let vh = &mut scratch.vh[..m * d];
+        let merged = &mut scratch.merged[..m * d];
+        let attn_u8 = &mut scratch.attn_u8[..m * d];
+        let res1_u8 = &mut scratch.res1_u8[..m * d];
+        let fin_u8 = &mut scratch.fin_u8[..m * d];
+        let res2_u8 = &mut scratch.res2_u8[..m * d];
+        let ffn_u8 = &mut scratch.ffn_u8[..m * ff];
+        let probs_u8 = &mut scratch.probs_u8[..b * nh * t * t];
+        let ctx_u8 = &mut scratch.ctx_u8[..b * nh * t * dh];
+        let vt = &mut scratch.vt[..dh * t];
+        let sums = &mut scratch.sums[..];
 
         // ---- embeddings: i8 gather + dequant add (not a GEMM) ----
-        let mut embed_f = vec![0.0f32; m * d];
         for (p, &tok) in x.data().iter().enumerate() {
             let tok = tok as usize;
-            if tok >= cfg.vocab_size {
-                bail!("token id {tok} outside vocab {}", cfg.vocab_size);
+            if tok >= v {
+                bail!("token id {tok} outside vocab {v}");
             }
             let ti = p % t;
-            let dst = &mut embed_f[p * d..(p + 1) * d];
+            let dst = &mut proj_f[p * d..(p + 1) * d];
             for ((o, &tw), &pw) in dst
                 .iter_mut()
-                .zip(&self.tok_emb.data[tok * d..(tok + 1) * d])
-                .zip(&self.pos_emb.data[ti * d..(ti + 1) * d])
+                .zip(&w.tok_emb.data[tok * d..(tok + 1) * d])
+                .zip(&w.pos_emb.data[ti * d..(ti + 1) * d])
             {
-                *o = self.tok_emb.scale * tw as f32 + self.pos_emb.scale * pw as f32;
+                *o = w.tok_emb.scale * tw as f32 + w.pos_emb.scale * pw as f32;
             }
         }
-        if let Some((g, bb)) = &self.emb_ln {
-            let mut out = vec![0.0f32; m * d];
-            layernorm_rows(&embed_f, g, bb, &mut out);
-            embed_f = out;
+        if let Some((g, bb)) = &w.emb_ln {
+            layernorm_rows(proj_f, g, bb, ln_f);
+            quantize_codes(ln_f, &w.embed_qp, h_q);
+        } else {
+            quantize_codes(proj_f, &w.embed_qp, h_q);
         }
-        let mut h_q = self.tap("embed", &embed_f)?;
-        let mut h_f = h_q.dequant_all();
+        dequant_codes(h_q, &w.embed_qp, h_f);
+        let mut h_grid = w.embed_qp;
 
-        let mut scores = vec![0.0f32; t * t]; // per-(b,h) scratch
-        let mut ctx_f = vec![0.0f32; t * dh];
-        let mut vt = vec![0u8; dh * t];
-
-        for (li, lw) in self.layers.iter().enumerate() {
-            let lp = |s: &str| format!("L{li}.{s}");
+        for lw in w.layers.iter() {
+            let g = &lw.grids;
 
             // Attention input: post-LN reads the tapped block input
-            // directly (integer GEMM, f32 view borrowed from `h_f`);
-            // pre-LN normalizes first (f32 input, integer weights —
-            // mirroring the graph, see module docs).
-            let xin_ln: Option<Vec<f32>> = if pre_ln {
-                let mut out = vec![0.0f32; m * d];
-                layernorm_rows(&h_f, &lw.ln1_g, &lw.ln1_b, &mut out);
-                Some(out)
+            // directly (integer GEMM over `h_q`); pre-LN normalizes first
+            // (f32 input, integer weights — mirroring the graph, see the
+            // module docs).
+            let xin_f: &[f32] = if pre_ln {
+                layernorm_rows(h_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                ln_f
             } else {
+                h_f
+            };
+            let xin_q: Option<QView<'_>> = if pre_ln {
                 None
+            } else {
+                Some(QView {
+                    data: h_q,
+                    scale: h_grid.scale,
+                    zero_point: h_grid.zero_point as i32,
+                })
             };
-            let xin_f: &[f32] = xin_ln.as_deref().unwrap_or(&h_f);
-            let xin_q: Option<&QAct> = if pre_ln { None } else { Some(&h_q) };
-            let proj = |w: &Int8Weight, bias: &[f32], out: &mut [f32]| match xin_q {
-                Some(q) => gemm_q8(q.view(), m, w, Some(bias), out),
-                None => gemm_f32q8(xin_f, m, w, Some(bias), out),
-            };
-            let mut buf = vec![0.0f32; m * d];
-            proj(&lw.wq, &lw.bq, &mut buf);
-            let q_q = self.tap(&lp("q"), &buf)?;
-            proj(&lw.wk, &lw.bk, &mut buf);
-            let k_q = self.tap(&lp("k"), &buf)?;
-            proj(&lw.wv, &lw.bv, &mut buf);
-            let v_q = self.tap(&lp("v"), &buf)?;
+            {
+                let mut proj = |wm: &Int8Weight, bias: &[f32], codes: &mut [u8], qp: &QParams| {
+                    match xin_q {
+                        Some(q) => par_gemm_q8(pool, q, m, wm, Some(bias), proj_f),
+                        None => par_gemm_f32q8(pool, xin_f, m, wm, Some(bias), proj_f),
+                    }
+                    quantize_codes(proj_f, qp, codes);
+                };
+                proj(&lw.wq, &lw.bq, q_u8, &g.q);
+                proj(&lw.wk, &lw.bk, k_u8, &g.k);
+                proj(&lw.wv, &lw.bv, v_u8, &g.v);
+            }
 
             // Head split is a pure permutation of the u8 codes.
-            let q_h = split_heads(&q_q.data, b, t, h, dh);
-            let k_h = split_heads(&k_q.data, b, t, h, dh);
-            let v_h = split_heads(&v_q.data, b, t, h, dh);
+            split_heads_into(q_u8, qh, b, t, nh, dh);
+            split_heads_into(k_u8, kh, b, t, nh, dh);
+            split_heads_into(v_u8, vh, b, t, nh, dh);
 
-            let glog = if cfg.use_gate {
-                Some(gate_logits(cfg, &self.gate_params, li, xin_f, b, t, h, dh)?)
-            } else {
-                None
-            };
+            if let Some(gs) = &lw.gate {
+                gs.logits_into(xin_f, b, t, nh, dh, glog);
+            }
 
             // Scores Q·Kᵀ (u8×u8 integer GEMM per head) → clipped softmax
-            // → requantize the probability matrix on its calibrated grid.
-            let probs_qp = *self.qp(&lp("probs"))?;
+            // → requantize the probability matrix on its calibrated grid →
+            // context P·V (u8×u8, V transposed so both dots are
+            // unit-stride).
             let inv_sqrt = 1.0 / (dh as f32).sqrt();
-            let mut probs_q = vec![0u8; b * h * t * t];
-            let ctx_qp = *self.qp(&lp("ctx"))?;
-            let mut ctx_q = vec![0u8; b * h * t * dh];
             for bi in 0..b {
-                for hi in 0..h {
-                    let off = ((bi * h + hi) * t) * dh;
+                for hi in 0..nh {
+                    let off = ((bi * nh + hi) * t) * dh;
                     let qv = QView {
-                        data: &q_h[off..off + t * dh],
-                        scale: q_q.scale,
-                        zero_point: q_q.zero_point,
+                        data: &qh[off..off + t * dh],
+                        scale: g.q.scale,
+                        zero_point: g.q.zero_point as i32,
                     };
                     let kv = QView {
-                        data: &k_h[off..off + t * dh],
-                        scale: k_q.scale,
-                        zero_point: k_q.zero_point,
+                        data: &kh[off..off + t * dh],
+                        scale: g.k.scale,
+                        zero_point: g.k.zero_point as i32,
                     };
-                    gemm_q8q8(qv, kv, t, t, dh, &mut scores);
+                    gemm_q8q8(qv, kv, t, t, dh, sums, scores);
                     for (ti, row) in scores.chunks_exact_mut(t).enumerate() {
                         for (si, sv) in row.iter_mut().enumerate() {
                             *sv = if cfg.causal && si > ti { NEG_INF } else { *sv * inv_sqrt };
                         }
                         softmax_stretch_clip(row, opts.gamma, opts.zeta);
                     }
-                    let p_off = ((bi * h + hi) * t) * t;
-                    quantize_codes(&scores, &probs_qp, &mut probs_q[p_off..p_off + t * t]);
+                    let p_off = ((bi * nh + hi) * t) * t;
+                    quantize_codes(scores, &g.probs, &mut probs_u8[p_off..p_off + t * t]);
 
-                    // Context P·V (u8×u8): V transposed to (dh, t) so both
-                    // dot operands are unit-stride.
-                    let v_slice = &v_h[off..off + t * dh];
+                    let v_slice = &vh[off..off + t * dh];
                     for si in 0..t {
                         for di in 0..dh {
                             vt[di * t + si] = v_slice[si * dh + di];
                         }
                     }
                     let pv = QView {
-                        data: &probs_q[p_off..p_off + t * t],
-                        scale: probs_qp.scale,
-                        zero_point: probs_qp.zero_point as i32,
+                        data: &probs_u8[p_off..p_off + t * t],
+                        scale: g.probs.scale,
+                        zero_point: g.probs.zero_point as i32,
                     };
                     let vv = QView {
-                        data: &vt,
-                        scale: v_q.scale,
-                        zero_point: v_q.zero_point,
+                        data: vt,
+                        scale: g.v.scale,
+                        zero_point: g.v.zero_point as i32,
                     };
-                    gemm_q8q8(pv, vv, t, dh, t, &mut ctx_f);
-                    if let Some(glog) = &glog {
+                    gemm_q8q8(pv, vv, t, dh, t, sums, ctx_f);
+                    if cfg.use_gate {
                         for (ti, c_row) in ctx_f.chunks_exact_mut(dh).enumerate() {
-                            let gp = sigmoid(glog[(bi * h + hi) * t + ti]);
+                            let gp = sigmoid(glog[(bi * nh + hi) * t + ti]);
                             for o in c_row.iter_mut() {
                                 *o = opts.gate_scale * (gp * *o);
                             }
                         }
                     }
-                    quantize_codes(&ctx_f, &ctx_qp, &mut ctx_q[off..off + t * dh]);
+                    quantize_codes(ctx_f, &g.ctx, &mut ctx_u8[off..off + t * dh]);
                 }
             }
 
             // Merge heads (u8 permutation), then the output projection as
             // an integer GEMM.
-            let merged = merge_heads(&ctx_q, b, t, h, dh);
-            let ctx_act = QAct {
+            merge_heads_into(ctx_u8, merged, b, t, nh, dh);
+            let ctx_view = QView {
                 data: merged,
-                scale: ctx_qp.scale,
-                zero_point: ctx_qp.zero_point as i32,
+                scale: g.ctx.scale,
+                zero_point: g.ctx.zero_point as i32,
             };
-            let mut attn_f = vec![0.0f32; m * d];
-            gemm_q8(ctx_act.view(), m, &lw.wo, Some(&lw.bo), &mut attn_f);
-            let attn_q = self.tap(&lp("attn_out"), &attn_f)?;
+            par_gemm_q8(pool, ctx_view, m, &lw.wo, Some(&lw.bo), attn_f);
+            quantize_codes(attn_f, &g.attn_out, attn_u8);
 
-            let attn_deq = attn_q.dequant_all();
-            let res1_raw: Vec<f32> = h_f.iter().zip(&attn_deq).map(|(a, o)| a + o).collect();
-            let res1_q = self.tap(&lp("res1"), &res1_raw)?;
-            let res1_f = res1_q.dequant_all();
+            // res1 = block input + requantized attention output, itself
+            // requantized on its own grid.
+            add_dequant(h_f, attn_u8, &g.attn_out, res_f);
+            quantize_codes(res_f, &g.res1, res1_u8);
+            dequant_codes(res1_u8, &g.res1, res_f);
 
-            // fin: the FFN input; base: the residual the FFN adds onto.
-            let (fin_q, base_f) = if pre_ln {
-                let mut out = vec![0.0f32; m * d];
-                layernorm_rows(&res1_f, &lw.ln2_g, &lw.ln2_b, &mut out);
-                (self.tap(&lp("ln2_out"), &out)?, res1_f)
+            // FFN input (`fin`) and the residual base the FFN adds onto.
+            if pre_ln {
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                quantize_codes(ln_f, &g.fin, fin_u8);
+                base_f.copy_from_slice(res_f);
             } else {
-                let mut out = vec![0.0f32; m * d];
-                layernorm_rows(&res1_f, &lw.ln1_g, &lw.ln1_b, &mut out);
-                let q = self.tap(&lp("ln1_out"), &out)?;
-                let base = q.dequant_all();
-                (q, base)
-            };
+                layernorm_rows(res_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                quantize_codes(ln_f, &g.fin, fin_u8);
+                dequant_codes(fin_u8, &g.fin, base_f);
+            }
 
-            let ff = lw.w1.n;
-            let mut ffn_buf = vec![0.0f32; m * ff];
-            gemm_q8(fin_q.view(), m, &lw.w1, Some(&lw.b1), &mut ffn_buf);
-            for vv2 in ffn_buf.iter_mut() {
+            let fin_view = QView {
+                data: fin_u8,
+                scale: g.fin.scale,
+                zero_point: g.fin.zero_point as i32,
+            };
+            par_gemm_q8(pool, fin_view, m, &lw.w1, Some(&lw.b1), ffn_f);
+            for vv2 in ffn_f.iter_mut() {
                 *vv2 = gelu_tanh(*vv2);
             }
-            let ffn_h_q = self.tap(&lp("ffn_h"), &ffn_buf)?;
-            let mut ffn_out = vec![0.0f32; m * d];
-            gemm_q8(ffn_h_q.view(), m, &lw.w2, Some(&lw.b2), &mut ffn_out);
-            let ffn_out_q = self.tap(&lp("ffn_out"), &ffn_out)?;
+            quantize_codes(ffn_f, &g.ffn_h, ffn_u8);
+            let ffn_view = QView {
+                data: ffn_u8,
+                scale: g.ffn_h.scale,
+                zero_point: g.ffn_h.zero_point as i32,
+            };
+            par_gemm_q8(pool, ffn_view, m, &lw.w2, Some(&lw.b2), proj_f);
+            quantize_codes(proj_f, &g.ffn_out, attn_u8); // attn_u8 is free here
 
-            let ffn_deq = ffn_out_q.dequant_all();
-            let res2_raw: Vec<f32> = base_f.iter().zip(&ffn_deq).map(|(a, o)| a + o).collect();
-            let res2_q = self.tap(&lp("res2"), &res2_raw)?;
+            add_dequant(base_f, attn_u8, &g.ffn_out, res_f);
+            quantize_codes(res_f, &g.res2, res2_u8);
             if pre_ln {
-                h_f = res2_q.dequant_all();
-                h_q = res2_q;
+                h_q.copy_from_slice(res2_u8);
+                h_grid = g.res2;
+                dequant_codes(h_q, &h_grid, h_f);
             } else {
-                let res2_f = res2_q.dequant_all();
-                let mut out = vec![0.0f32; m * d];
-                layernorm_rows(&res2_f, &lw.ln2_g, &lw.ln2_b, &mut out);
-                h_q = self.tap(&lp("ln2_out"), &out)?;
-                h_f = h_q.dequant_all();
+                dequant_codes(res2_u8, &g.res2, res_f);
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                let pg = g.post_ln2.expect("post-LN layer has an ln2_out grid");
+                quantize_codes(ln_f, &pg, h_q);
+                h_grid = pg;
+                dequant_codes(h_q, &h_grid, h_f);
             }
         }
 
-        if let Some((g, bb)) = &self.final_ln {
-            let mut out = vec![0.0f32; m * d];
-            layernorm_rows(&h_f, g, bb, &mut out);
-            h_f = self.tap("final_out", &out)?.dequant_all();
+        if let Some((g, bb)) = &w.final_ln {
+            layernorm_rows(h_f, g, bb, ln_f);
+            let fq = w.final_qp.expect("pre-LN model has a final_out grid");
+            quantize_codes(ln_f, &fq, h_q);
+            dequant_codes(h_q, &fq, h_f);
         }
 
         // ---- head (unquantized f32 GEMM) + per-row scoring ----
-        let v = cfg.vocab_size;
-        let mut logits = vec![0.0f32; m * v];
-        gemm_f32(&h_f, &self.head_wt, Some(&self.head_b), m, v, d, &mut logits);
-        Ok(score_rows(&logits, targets.data(), mask.data(), b, t, v))
+        let h_ro: &[f32] = h_f;
+        par_rows(pool, m, v, MIN_PAR_ROWS, logits, |r0, r1, rows| {
+            gemm_f32(&h_ro[r0 * d..r1 * d], &w.head_wt, Some(&w.head_b), r1 - r0, v, d, rows);
+        });
+        score_rows_into(logits, targets.data(), mask.data(), b, t, v, out);
+        Ok(())
     }
 }
 
+/// Row-parallel [`gemm_q8`]: split `m` across the pool (row results are
+/// independent, so the output is bit-identical to the serial call).
+fn par_gemm_q8(
+    pool: Option<&RowPool>,
+    a: QView<'_>,
+    m: usize,
+    w: &Int8Weight,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let k = w.k;
+    par_rows(pool, m, w.n, MIN_PAR_ROWS, out, |r0, r1, rows| {
+        let sub = QView { data: &a.data[r0 * k..r1 * k], scale: a.scale, zero_point: a.zero_point };
+        gemm_q8(sub, r1 - r0, w, bias, rows);
+    });
+}
+
+/// Row-parallel [`gemm_f32q8`] (pre-LN projections).
+fn par_gemm_f32q8(
+    pool: Option<&RowPool>,
+    a: &[f32],
+    m: usize,
+    w: &Int8Weight,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let k = w.k;
+    par_rows(pool, m, w.n, MIN_PAR_ROWS, out, |r0, r1, rows| {
+        gemm_f32q8(&a[r0 * k..r1 * k], r1 - r0, w, bias, rows);
+    });
+}
+
 /// `(b·t, h·dh)` u8 codes → `(b, h, t, dh)` head-major layout.
-fn split_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
+fn split_heads_into(src: &[u8], out: &mut [u8], b: usize, t: usize, h: usize, dh: usize) {
     let d = h * dh;
-    let mut out = vec![0u8; src.len()];
+    debug_assert_eq!(src.len(), out.len());
     for bi in 0..b {
         for ti in 0..t {
             for hi in 0..h {
@@ -495,13 +896,12 @@ fn split_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
-/// Inverse of [`split_heads`].
-fn merge_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
+/// Inverse of [`split_heads_into`].
+fn merge_heads_into(src: &[u8], out: &mut [u8], b: usize, t: usize, h: usize, dh: usize) {
     let d = h * dh;
-    let mut out = vec![0u8; src.len()];
+    debug_assert_eq!(src.len(), out.len());
     for bi in 0..b {
         for hi in 0..h {
             for ti in 0..t {
@@ -510,7 +910,6 @@ fn merge_heads(src: &[u8], b: usize, t: usize, h: usize, dh: usize) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Quantize a scratch f32 buffer into pre-allocated `u8` codes
@@ -522,15 +921,34 @@ fn quantize_codes(x: &[f32], qp: &QParams, out: &mut [u8]) {
     }
 }
 
+/// Dequantize `u8` codes into a pre-allocated f32 buffer (the exact
+/// arithmetic of `QAct::dequant`).
+fn dequant_codes(codes: &[u8], qp: &QParams, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let zp = qp.zero_point as i32;
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = qp.scale * (c as i32 - zp) as f32;
+    }
+}
+
+/// `out[i] = base[i] + dequant(codes[i])` — the residual adds.
+fn add_dequant(base: &[f32], codes: &[u8], qp: &QParams, out: &mut [f32]) {
+    debug_assert_eq!(base.len(), codes.len());
+    debug_assert_eq!(base.len(), out.len());
+    let zp = qp.zero_point as i32;
+    for ((o, &a), &c) in out.iter_mut().zip(base).zip(codes) {
+        *o = a + qp.scale * (c as i32 - zp) as f32;
+    }
+}
+
+/// Test-only model builders, shared with sibling modules' tests (the
+/// engine's `Arc`-sharing test builds the same tiny weights).
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests_support {
     use super::*;
-    use crate::infer::reference::forward_f32;
-    use crate::serve::engine::pack_batch;
-    use crate::serve::protocol::ScoreRequest;
     use crate::util::rng::Rng;
 
-    fn test_cfg(family: &str, attention: &str) -> ConfigInfo {
+    pub(crate) fn test_cfg(family: &str, attention: &str) -> ConfigInfo {
         let causal = family == "opt";
         ConfigInfo {
             name: format!("{family}_test_{attention}"),
@@ -561,7 +979,7 @@ mod tests {
     }
 
     /// Mirror `python/compile/model.py::param_specs` for token families.
-    fn test_params(cfg: &ConfigInfo, seed: u64) -> Vec<(String, Tensor)> {
+    pub(crate) fn test_params(cfg: &ConfigInfo, seed: u64) -> Vec<(String, Tensor)> {
         let mut rng = Rng::new(seed);
         let (d, t, v) = (cfg.d_model, cfg.seq_len, cfg.vocab_size);
         let (h, ff, gh) = (cfg.n_heads, 4 * cfg.d_model, 3usize);
@@ -618,7 +1036,7 @@ mod tests {
 
     /// The activation tap points the quantized forward hits, mirroring
     /// `model.py::quant_point_names` for token families.
-    fn test_quant_points(cfg: &ConfigInfo) -> Vec<String> {
+    pub(crate) fn test_quant_points(cfg: &ConfigInfo) -> Vec<String> {
         let post = is_post_ln(cfg);
         let mut pts = vec!["embed".to_string()];
         for i in 0..cfg.n_layers {
@@ -642,6 +1060,29 @@ mod tests {
         }
         pts
     }
+
+    /// A built `Arc<Int8Weights>` over fixed tiny params and flat grids —
+    /// enough for sharing/accounting tests that never dispatch.
+    pub(crate) fn tiny_weights() -> Arc<Int8Weights> {
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 3);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        Arc::new(
+            Int8Weights::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::*;
+    use super::*;
+    use crate::infer::math::score_rows;
+    use crate::infer::reference::forward_f32;
+    use crate::serve::engine::pack_batch;
+    use crate::serve::protocol::ScoreRequest;
+    use crate::util::rng::Rng;
 
     /// Which params the host weight-PTQ fake-quantizes (2D matmul weights
     /// + embeddings; gates and head excluded — manifest `quantize` flags).
@@ -668,14 +1109,14 @@ mod tests {
             .collect()
     }
 
-    /// Run the f32 fake-quant reference and the native INT8 model on the
-    /// same calibrated grids; return (reference rows, native rows).
-    fn run_parity(
+    /// Calibrated grids + a scoring batch for `cfg`, reusable across the
+    /// parity and infrastructure tests.
+    fn calibrated_setup(
         cfg: &ConfigInfo,
         gamma: f32,
         zeta: f32,
         gate_scale: f32,
-    ) -> (Vec<ScoreRow>, Vec<ScoreRow>) {
+    ) -> (Vec<(String, Tensor)>, Vec<String>, Vec<QParams>, (IntTensor, IntTensor, Tensor)) {
         let params = test_params(cfg, 42);
         let wq = fq_params(&params, EstimatorKind::MinMax);
         let points = test_quant_points(cfg);
@@ -719,11 +1160,23 @@ mod tests {
                 QParams::asymmetric(mn, mx, 8)
             })
             .collect();
+        let scoring = batch(cfg.batch_size - 1); // leave a padding row
+        (params, points, qps, scoring)
+    }
+
+    /// Run the f32 fake-quant reference and the native INT8 model on the
+    /// same calibrated grids; return (reference rows, native rows).
+    fn run_parity(
+        cfg: &ConfigInfo,
+        gamma: f32,
+        zeta: f32,
+        gate_scale: f32,
+    ) -> (Vec<ScoreRow>, Vec<ScoreRow>) {
+        let (params, points, qps, (x, targets, mask)) =
+            calibrated_setup(cfg, gamma, zeta, gate_scale);
+        let wq = fq_params(&params, EstimatorKind::MinMax);
         let qp_map: HashMap<String, QParams> =
             points.iter().cloned().zip(qps.iter().copied()).collect();
-
-        // Scoring batch (fresh tokens).
-        let (x, targets, mask) = batch(cfg.batch_size - 1); // leave a padding row
 
         // Reference: f32 forward with in-graph fake-quant taps.
         let mut fq_tap = |name: &str, vals: &mut [f32]| {
@@ -745,7 +1198,7 @@ mod tests {
 
         // Native: integer GEMMs from the raw checkpoint + same grids.
         let opts = ModelOptions { gamma, zeta, gate_scale, w_est: EstimatorKind::MinMax };
-        let model = Int8Model::build(cfg, &params, &points, &qps, opts).unwrap();
+        let mut model = Int8Model::build(cfg, &params, &points, &qps, opts).unwrap();
         let rows = model.forward(&x, &targets, &mask).unwrap();
         (ref_rows, rows)
     }
@@ -838,7 +1291,7 @@ mod tests {
         let params = test_params(&cfg, 1);
         let points = test_quant_points(&cfg);
         let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
-        let model =
+        let mut model =
             Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
         let (b, t) = (cfg.batch_size, cfg.seq_len);
         let mut toks = vec![0i32; b * t];
@@ -847,5 +1300,94 @@ mod tests {
         let targets = IntTensor::zeros(&[b, t]);
         let mask = Tensor::zeros(&[b, t]);
         assert!(model.forward(&x, &targets, &mask).is_err());
+    }
+
+    /// Weight sharing: models built from one `Arc<Int8Weights>` hold the
+    /// same physical copy — pointer-identical, one allocation, with
+    /// `Arc::strong_count` tracking the handles. This is the single-copy
+    /// invariant the serve engine pool relies on.
+    #[test]
+    fn models_share_one_weight_copy() {
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 3);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        let weights = Arc::new(
+            Int8Weights::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap(),
+        );
+        assert_eq!(Arc::strong_count(&weights), 1);
+        let workers: Vec<Int8Model> =
+            (0..3).map(|_| Int8Model::from_weights(weights.clone())).collect();
+        assert_eq!(Arc::strong_count(&weights), 4, "3 workers + the builder handle");
+        for m in &workers {
+            assert!(
+                std::ptr::eq(Arc::as_ptr(m.weights()), Arc::as_ptr(&weights)),
+                "worker points at the same weight copy"
+            );
+        }
+        assert!(weights.bytes() > 0);
+        drop(workers);
+        assert_eq!(Arc::strong_count(&weights), 1);
+    }
+
+    /// Row-parallel dispatch is bit-identical to single-threaded dispatch:
+    /// row GEMM results are independent, so splitting rows across the pool
+    /// cannot change a single bit.
+    #[test]
+    fn row_parallel_matches_single_thread_bit_exactly() {
+        let cfg = test_cfg("bert", "softmax");
+        let (params, points, qps, (x, targets, mask)) = calibrated_setup(&cfg, -0.08, 1.05, 1.0);
+        let opts = ModelOptions { gamma: -0.08, zeta: 1.05, ..ModelOptions::default() };
+        let weights = Arc::new(Int8Weights::build(&cfg, &params, &points, &qps, opts).unwrap());
+        let mut serial = Int8Model::from_weights(weights.clone());
+        let mut parallel = Int8Model::from_weights(weights);
+        parallel.set_gemm_threads(3);
+        let a = serial.forward(&x, &targets, &mask).unwrap();
+        let b = parallel.forward(&x, &targets, &mask).unwrap();
+        assert_eq!(a, b, "parallel rows must not change any bit");
+        // Repeat dispatches stay deterministic through the scratch arena.
+        let c = parallel.forward(&x, &targets, &mask).unwrap();
+        assert_eq!(a, c);
+    }
+
+    /// Scratch sizing matches what the arena actually holds.
+    #[test]
+    fn scratch_bytes_accounts_for_every_buffer() {
+        let cfg = test_cfg("opt", "softmax");
+        let params = test_params(&cfg, 5);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        let model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let (b, t, d) = (cfg.batch_size, cfg.seq_len, cfg.d_model);
+        // Lower bound: the six m·d f32 buffers alone.
+        assert!(model.scratch_bytes() > 6 * b * t * d * 4);
+        // The arithmetic size (what `qtx serve` reports without building
+        // an arena) stays in lock-step with the real arena.
+        assert_eq!(Scratch::bytes_for(model.weights()), model.scratch_bytes());
+    }
+
+    /// The zero-allocation steady-state claim, measured: after the warm-up
+    /// dispatch, `score` performs no heap allocation on the dispatch
+    /// thread (single-threaded model; the row pool allocates nothing
+    /// either, but its threads are outside this thread-local counter).
+    #[cfg(feature = "alloc-counter")]
+    #[test]
+    fn steady_state_score_is_allocation_free() {
+        let cfg = test_cfg("bert", "softmax");
+        let (params, points, qps, (x, targets, mask)) = calibrated_setup(&cfg, 0.0, 1.0, 1.0);
+        let mut model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let mut rows = Vec::new();
+        model.score(&x, &targets, &mask, &mut rows).unwrap(); // warm-up
+        let before = crate::util::alloc::allocations();
+        model.score(&x, &targets, &mask, &mut rows).unwrap();
+        model.score(&x, &targets, &mask, &mut rows).unwrap();
+        assert_eq!(
+            crate::util::alloc::allocations(),
+            before,
+            "steady-state score allocated on the dispatch thread"
+        );
+        assert_eq!(rows.len(), cfg.batch_size);
     }
 }

@@ -1,0 +1,286 @@
+//! [`RowPool`] — a tiny persistent fork-join thread set for splitting the
+//! rows of one GEMM dispatch across cores.
+//!
+//! The offline vendor set has no rayon, and spawning threads per dispatch
+//! would put allocation and thread-creation latency back on the hot path
+//! the zero-allocation forward just cleared. So each
+//! [`crate::infer::Int8Model`] that opts into row parallelism owns a
+//! *worker-local* pool: `parts − 1` threads parked on a condvar, woken per
+//! [`RowPool::run`], with the caller executing part 0 on its own core.
+//! `run` publishes the job as a borrowed closure and blocks until every
+//! part finished, so the borrow never escapes; the steady state allocates
+//! nothing and the only per-run cost is one mutex round-trip per thread.
+//!
+//! This is deliberately *not* a general task pool: one job at a time, every
+//! part runs exactly once, and the caller is always a participant. That is
+//! the whole contract a row-split GEMM needs.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct State {
+    /// Current job; `Some` only while a `run` is in flight.
+    job: Option<Job>,
+    /// Bumped per `run` so parked workers can tell a fresh job from the
+    /// one they already executed.
+    epoch: u64,
+    /// Workers that have not yet finished the current job.
+    pending: usize,
+    /// A worker part panicked (re-raised on the caller).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signalled on new job and on shutdown.
+    start: Condvar,
+    /// Signalled when the last pending worker finishes.
+    done: Condvar,
+}
+
+/// A persistent fork-join set of `parts` workers (`parts − 1` threads plus
+/// the calling thread). See the module docs.
+pub struct RowPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    parts: usize,
+}
+
+impl RowPool {
+    /// Build a pool executing jobs in `parts` parallel parts. `parts` must
+    /// be ≥ 2 (a 1-part pool is just the caller — use `None` instead).
+    pub fn new(parts: usize) -> RowPool {
+        assert!(parts >= 2, "RowPool needs >= 2 parts, got {parts}");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..parts)
+            .map(|part| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("qtx-gemm-{part}"))
+                    .spawn(move || worker(&shared, part))
+                    .expect("spawn RowPool worker")
+            })
+            .collect();
+        RowPool { shared, handles, parts }
+    }
+
+    /// Number of parallel parts a job is split into (threads + caller).
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Execute `f(part)` for every `part ∈ 0..parts()`, in parallel; part 0
+    /// runs on the calling thread. Blocks until all parts finished, so `f`
+    /// may borrow from the caller's stack. Allocation-free in steady state.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the 'static lifetime is a lie confined to this call — we
+        // do not return until every worker has finished with `f` (the
+        // `pending == 0` wait below), and `State::job` is cleared before
+        // that wait completes the function.
+        let job: Job = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.job.is_none() && st.pending == 0, "RowPool::run re-entered");
+            st.job = Some(job);
+            st.epoch += 1;
+            st.pending = self.handles.len();
+            self.shared.start.notify_all();
+        }
+        let caller_panicked = catch_unwind(AssertUnwindSafe(|| f(0))).is_err();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let worker_panicked = std::mem::take(&mut st.panicked);
+        drop(st);
+        if caller_panicked || worker_panicked {
+            panic!("RowPool job panicked");
+        }
+    }
+}
+
+impl Drop for RowPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(shared: &Shared, part: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.start.wait(st).unwrap();
+            }
+        };
+        let panicked = catch_unwind(AssertUnwindSafe(|| job(part))).is_err();
+        let mut st = shared.state.lock().unwrap();
+        if panicked {
+            st.panicked = true;
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Split the `m` rows of a row-major `m × width` output across the pool
+/// and run `f(row0, row1, rows)` per contiguous range. With no pool, or
+/// when `m` is too small to amortize the fork-join round-trip
+/// (`< max(min_rows, 2·parts)`), the whole range runs on the caller —
+/// same code path, zero overhead.
+pub fn par_rows<T: Send>(
+    pool: Option<&RowPool>,
+    m: usize,
+    width: usize,
+    min_rows: usize,
+    out: &mut [T],
+    f: impl Fn(usize, usize, &mut [T]) + Sync,
+) {
+    debug_assert!(out.len() >= m * width);
+    let parts = pool.map_or(1, |p| p.parts());
+    if parts <= 1 || m < min_rows.max(2 * parts) {
+        f(0, m, &mut out[..m * width]);
+        return;
+    }
+    let pool = pool.expect("parts > 1 implies a pool");
+    let chunk = m.div_ceil(parts);
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+    let ptr = SendPtr(out.as_mut_ptr());
+    pool.run(&|part| {
+        let r0 = part * chunk;
+        if r0 >= m {
+            return;
+        }
+        let r1 = (r0 + chunk).min(m);
+        // SAFETY: parts cover disjoint row ranges of `out`, and
+        // `RowPool::run` blocks until every part finished, so no access
+        // outlives the caller's `&mut out` borrow.
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * width), (r1 - r0) * width)
+        };
+        f(r0, r1, rows);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        let pool = RowPool::new(3);
+        let (m, width) = (37usize, 4usize);
+        let mut out = vec![0u32; m * width];
+        par_rows(Some(&pool), m, width, 4, &mut out, |r0, r1, rows| {
+            assert_eq!(rows.len(), (r1 - r0) * width);
+            for (i, v) in rows.iter_mut().enumerate() {
+                *v += (r0 * width + i) as u32 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1, "row element {i} written exactly once");
+        }
+        // Small m stays on the caller (still covers everything).
+        let mut small = vec![0u32; 3 * width];
+        par_rows(Some(&pool), 3, width, 16, &mut small, |_, _, rows| {
+            for v in rows.iter_mut() {
+                *v = 9;
+            }
+        });
+        assert!(small.iter().all(|&v| v == 9));
+    }
+
+    #[test]
+    fn every_part_runs_exactly_once_per_job() {
+        let pool = RowPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(&|p| {
+                hits[p].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (p, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 50, "part {p}");
+        }
+    }
+
+    #[test]
+    fn parts_write_disjoint_row_ranges() {
+        let pool = RowPool::new(3);
+        let m = 100usize;
+        let mut out = vec![0u32; m];
+        let chunk = m.div_ceil(pool.parts());
+        struct SendPtr(*mut u32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let ptr = SendPtr(out.as_mut_ptr());
+        pool.run(&|p| {
+            let r0 = p * chunk;
+            let r1 = (r0 + chunk).min(m);
+            for r in r0..r1 {
+                // SAFETY: parts cover disjoint ranges of `out`.
+                unsafe { *ptr.0.add(r) = (p + 1) as u32 };
+            }
+        });
+        assert!(out.iter().all(|&v| (1..=3).contains(&v)), "{out:?}");
+        assert_eq!(out[0], 1);
+        assert_eq!(out[m - 1], 3);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = RowPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|p| {
+                if p == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool stays usable after a panicked job.
+        pool.run(&|_| {});
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = RowPool::new(3);
+        pool.run(&|_| {});
+        drop(pool); // must not hang
+    }
+}

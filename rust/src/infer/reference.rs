@@ -279,9 +279,126 @@ pub fn is_post_ln(cfg: &ConfigInfo) -> bool {
     cfg.family == "bert"
 }
 
-/// Gating module logits `G(x)` per Table 4, shaped `(b·h·t)` — shared
-/// across positions, per-head (§4.2). `xin` is the attention input
-/// `(b·t, d)`.
+/// Resolved gating-module parameters for one layer (Table 4 variants),
+/// owned so the native model can evaluate gates with no name lookups — and
+/// no allocation — on the dispatch path. Gates stay f32: they are outside
+/// the weight-PTQ set (`quantize=false` in the manifest).
+#[derive(Debug, Clone)]
+pub(crate) enum GateSpec {
+    /// `gated_linear`: `w (h, dh)`, `b (h,)`.
+    Linear { w: Tensor, b: Tensor },
+    /// `gated_mlp`: `w1 (h, dh, gh)`, `b1 (h, gh)`, `w2 (h, gh)`, `b2 (h,)`.
+    Mlp { w1: Tensor, b1: Tensor, w2: Tensor, b2: Tensor },
+    /// `gated_allheads`: `w (d, h)`, `b (h,)`.
+    AllHeads { w: Tensor, b: Tensor },
+}
+
+impl GateSpec {
+    /// Look the layer's gate parameters up by name (build time only).
+    pub(crate) fn resolve(
+        cfg: &ConfigInfo,
+        params: &[(String, Tensor)],
+        li: usize,
+    ) -> Result<GateSpec> {
+        let lp = |s: &str| format!("L{li}.{s}");
+        let p = |s: &str| -> Result<Tensor> { Ok(param(params, &lp(s))?.clone()) };
+        Ok(match cfg.attention.as_str() {
+            "gated_linear" => GateSpec::Linear { w: p("gate.w")?, b: p("gate.b")? },
+            "gated_mlp" => GateSpec::Mlp {
+                w1: p("gate.w1")?,
+                b1: p("gate.b1")?,
+                w2: p("gate.w2")?,
+                b2: p("gate.b2")?,
+            },
+            "gated_allheads" => GateSpec::AllHeads { w: p("gate.w")?, b: p("gate.b")? },
+            other => bail!("unknown gated attention variant {other:?}"),
+        })
+    }
+
+    /// Resident f32 bytes of the gate parameters.
+    pub(crate) fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        match self {
+            GateSpec::Linear { w, b } | GateSpec::AllHeads { w, b } => (w.len() + b.len()) * f,
+            GateSpec::Mlp { w1, b1, w2, b2 } => {
+                (w1.len() + b1.len() + w2.len() + b2.len()) * f
+            }
+        }
+    }
+
+    /// Evaluate logits `G(x)` per Table 4 into `out` (`b·h·t`, every
+    /// element written; shared across positions, per-head — §4.2). `xin`
+    /// is the attention input `(b·t, d)`. Allocation-free.
+    pub(crate) fn logits_into(
+        &self,
+        xin: &[f32],
+        b: usize,
+        t: usize,
+        h: usize,
+        dh: usize,
+        out: &mut [f32],
+    ) {
+        let d = h * dh;
+        debug_assert_eq!(out.len(), b * h * t);
+        match self {
+            GateSpec::Linear { w, b: bias } => {
+                let (w, bias) = (w.data(), bias.data()); // (h, dh) / (h,)
+                for bi in 0..b {
+                    for hi in 0..h {
+                        for ti in 0..t {
+                            let x_off = (bi * t + ti) * d + hi * dh;
+                            let mut acc = bias[hi];
+                            for dd in 0..dh {
+                                acc += xin[x_off + dd] * w[hi * dh + dd];
+                            }
+                            out[(bi * h + hi) * t + ti] = acc;
+                        }
+                    }
+                }
+            }
+            GateSpec::Mlp { w1, b1, w2, b2 } => {
+                let gh = w1.shape()[2]; // (h, dh, gh)
+                let (w1, b1, w2, b2) = (w1.data(), b1.data(), w2.data(), b2.data());
+                for bi in 0..b {
+                    for hi in 0..h {
+                        for ti in 0..t {
+                            let x_off = (bi * t + ti) * d + hi * dh;
+                            let mut acc = b2[hi];
+                            for kk in 0..gh {
+                                let mut hid = b1[hi * gh + kk];
+                                for dd in 0..dh {
+                                    hid += xin[x_off + dd] * w1[(hi * dh + dd) * gh + kk];
+                                }
+                                acc += hid.max(0.0) * w2[hi * gh + kk];
+                            }
+                            out[(bi * h + hi) * t + ti] = acc;
+                        }
+                    }
+                }
+            }
+            GateSpec::AllHeads { w, b: bias } => {
+                // merge_heads(split_heads(xin)) == xin: the gate reads the
+                // full d-dim input per position.
+                let (w, bias) = (w.data(), bias.data()); // (d, h) / (h,)
+                for bi in 0..b {
+                    for ti in 0..t {
+                        let x_row = &xin[(bi * t + ti) * d..][..d];
+                        for hi in 0..h {
+                            let mut acc = bias[hi];
+                            for (dd, &xv) in x_row.iter().enumerate() {
+                                acc += xv * w[dd * h + hi];
+                            }
+                            out[(bi * h + hi) * t + ti] = acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gating module logits `G(x)` per Table 4, shaped `(b·h·t)` — the
+/// allocating convenience used by the f32 oracle ([`forward_f32`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gate_logits(
     cfg: &ConfigInfo,
@@ -293,69 +410,8 @@ pub(crate) fn gate_logits(
     h: usize,
     dh: usize,
 ) -> Result<Vec<f32>> {
-    let d = h * dh;
-    let lp = |s: &str| format!("L{li}.{s}");
+    let spec = GateSpec::resolve(cfg, params, li)?;
     let mut out = vec![0.0f32; b * h * t];
-    match cfg.attention.as_str() {
-        "gated_linear" => {
-            let w = param(params, &lp("gate.w"))?.data(); // (h, dh)
-            let bias = param(params, &lp("gate.b"))?.data(); // (h,)
-            for bi in 0..b {
-                for hi in 0..h {
-                    for ti in 0..t {
-                        let x_off = (bi * t + ti) * d + hi * dh;
-                        let mut acc = bias[hi];
-                        for dd in 0..dh {
-                            acc += xin[x_off + dd] * w[hi * dh + dd];
-                        }
-                        out[(bi * h + hi) * t + ti] = acc;
-                    }
-                }
-            }
-        }
-        "gated_mlp" => {
-            let w1 = param(params, &lp("gate.w1"))?; // (h, dh, gh)
-            let gh = w1.shape()[2];
-            let w1 = w1.data();
-            let b1 = param(params, &lp("gate.b1"))?.data(); // (h, gh)
-            let w2 = param(params, &lp("gate.w2"))?.data(); // (h, gh)
-            let b2 = param(params, &lp("gate.b2"))?.data(); // (h,)
-            for bi in 0..b {
-                for hi in 0..h {
-                    for ti in 0..t {
-                        let x_off = (bi * t + ti) * d + hi * dh;
-                        let mut acc = b2[hi];
-                        for kk in 0..gh {
-                            let mut hid = b1[hi * gh + kk];
-                            for dd in 0..dh {
-                                hid += xin[x_off + dd] * w1[(hi * dh + dd) * gh + kk];
-                            }
-                            acc += hid.max(0.0) * w2[hi * gh + kk];
-                        }
-                        out[(bi * h + hi) * t + ti] = acc;
-                    }
-                }
-            }
-        }
-        "gated_allheads" => {
-            // merge_heads(split_heads(xin)) == xin: the gate reads the full
-            // d-dim input per position.
-            let w = param(params, &lp("gate.w"))?.data(); // (d, h)
-            let bias = param(params, &lp("gate.b"))?.data(); // (h,)
-            for bi in 0..b {
-                for ti in 0..t {
-                    let x_row = &xin[(bi * t + ti) * d..][..d];
-                    for hi in 0..h {
-                        let mut acc = bias[hi];
-                        for (dd, &xv) in x_row.iter().enumerate() {
-                            acc += xv * w[dd * h + hi];
-                        }
-                        out[(bi * h + hi) * t + ti] = acc;
-                    }
-                }
-            }
-        }
-        other => bail!("unknown gated attention variant {other:?}"),
-    }
+    spec.logits_into(xin, b, t, h, dh, &mut out);
     Ok(out)
 }

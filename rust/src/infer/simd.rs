@@ -1,0 +1,433 @@
+//! Explicit-SIMD integer dot products and register-tiled micro-kernels —
+//! the instruction-level layer under [`crate::infer::gemm`].
+//!
+//! # Dispatch tiers
+//!
+//! Two implementations sit behind one [`Tier`] switch:
+//!
+//! * **`Tier::Scalar`** — plain widening multiply/accumulate loops. This is
+//!   the *bit-exact reference*: every other tier must return exactly the
+//!   same `i32`s (integer accumulation is associative and commutative, so
+//!   lane order cannot change the result — equality is `==`, not a
+//!   tolerance; see the property tests at the bottom).
+//! * **`Tier::Avx2`** — x86-64 AVX2: 16 elements of the reduction
+//!   dimension per step, widened to `i16` lanes
+//!   (`_mm256_cvtepu8_epi16` / `_mm256_cvtepi8_epi16`) and combined with
+//!   `_mm256_madd_epi16`, which sums adjacent `i16×i16` products into
+//!   `i32` lanes **without saturation** (products are bounded by
+//!   `255·128 = 32640 < 2¹⁵·2¹⁶`, so the pairwise `i32` sums are exact).
+//!   The popular `_mm256_maddubs_epi16` one-instruction variant is
+//!   deliberately *not* used: it saturates the `i16` intermediate
+//!   (`255·127·2 > i16::MAX`) and would break the bit-exactness contract.
+//!
+//! The active tier is picked once per process by [`active_tier`] via
+//! `is_x86_feature_detected!` and can be forced down with `QTX_SIMD=scalar`
+//! (benchmarks and A/B debugging). `Tier::Avx2` values must only originate
+//! from [`Tier::detect`] — constructing one by hand on a non-AVX2 machine
+//! and feeding it to these functions would execute illegal instructions.
+//!
+//! # Micro-kernels
+//!
+//! [`mk_u8_i8`]/[`mk_u8_u8`] compute an `MR×NR` output block with all
+//! `MR·NR` accumulators live across the whole K loop — in SIMD registers on
+//! the AVX2 tier, in locals the autovectorizer can keep enregistered on the
+//! scalar tier. Each loaded activation row is reused `NR` times and each
+//! weight column `MR` times, which is where the throughput over a
+//! dot-at-a-time loop comes from (the K-streams are already unit-stride by
+//! the transposed-weight layout of [`crate::infer::gemm::Int8Weight`]).
+
+use std::sync::OnceLock;
+
+/// Rows per micro-kernel block (activation rows sharing weight loads).
+pub const MR: usize = 4;
+/// Columns per micro-kernel block (weight columns sharing activation loads).
+pub const NR: usize = 2;
+
+/// Instruction tier for the integer kernels. See the module docs; `Avx2`
+/// must come from [`Tier::detect`] / [`active_tier`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable widening-MAC loops — the bit-exact reference.
+    Scalar,
+    /// x86-64 AVX2 (`cvtep*8_epi16` + `madd_epi16`), runtime-detected.
+    Avx2,
+}
+
+impl Tier {
+    /// Best tier the running CPU supports.
+    pub fn detect() -> Tier {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Tier::Avx2;
+            }
+        }
+        Tier::Scalar
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// The process-wide tier: detected once, overridable with `QTX_SIMD=scalar`
+/// (any other value falls through to detection).
+pub fn active_tier() -> Tier {
+    static TIER: OnceLock<Tier> = OnceLock::new();
+    *TIER.get_or_init(|| match std::env::var("QTX_SIMD").as_deref() {
+        Ok("scalar") => Tier::Scalar,
+        _ => Tier::detect(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier (the bit-exact reference)
+// ---------------------------------------------------------------------------
+
+fn dot_u8_i8_scalar(a: &[u8], w: &[i8]) -> i32 {
+    a.iter().zip(w).map(|(&x, &v)| x as i32 * v as i32).sum()
+}
+
+fn dot_u8_u8_scalar(a: &[u8], b: &[u8]) -> i32 {
+    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
+fn mk_u8_i8_scalar(a: &[u8], w: &[i8], k: usize, acc: &mut [i32; MR * NR]) {
+    for (r, a_row) in a.chunks_exact(k).enumerate() {
+        for (c, w_col) in w.chunks_exact(k).enumerate() {
+            acc[r * NR + c] = dot_u8_i8_scalar(a_row, w_col);
+        }
+    }
+}
+
+fn mk_u8_u8_scalar(a: &[u8], b: &[u8], k: usize, acc: &mut [i32; MR * NR]) {
+    for (r, a_row) in a.chunks_exact(k).enumerate() {
+        for (c, b_col) in b.chunks_exact(k).enumerate() {
+            acc[r * NR + c] = dot_u8_u8_scalar(a_row, b_col);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    // The micro-kernels below unroll the NR=2 column pair by hand.
+    const _: () = assert!(NR == 2, "avx2 micro-kernels assume NR == 2");
+
+    /// Sum the eight `i32` lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_i32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 1));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// 16 `u8` at `p` zero-extended to 16 `i16` lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_u8(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// 16 `i8` at `p` sign-extended to 16 `i16` lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_i8(p: *const i8) -> __m256i {
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2 is available and `a.len() == w.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_u8_i8(a: &[u8], w: &[i8]) -> i32 {
+        let k = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= k {
+            let av = widen_u8(a.as_ptr().add(i));
+            let wv = widen_i8(w.as_ptr().add(i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, wv));
+            i += 16;
+        }
+        let mut sum = hsum_i32(acc);
+        while i < k {
+            sum += a[i] as i32 * w[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2 is available and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_u8_u8(a: &[u8], b: &[u8]) -> i32 {
+        let k = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 16 <= k {
+            let av = widen_u8(a.as_ptr().add(i));
+            let bv = widen_u8(b.as_ptr().add(i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            i += 16;
+        }
+        let mut sum = hsum_i32(acc);
+        while i < k {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// `MR×NR` block, accumulators in ymm registers across the K loop:
+    /// `MR·NR` accumulators + `NR` weight vectors + 1 activation vector =
+    /// 11 of the 16 ymm registers.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2, `a.len() == MR·k`, `w.len() == NR·k`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_u8_i8(a: &[u8], w: &[i8], k: usize, out: &mut [i32; MR * NR]) {
+        let mut acc = [_mm256_setzero_si256(); MR * NR];
+        let mut i = 0;
+        while i + 16 <= k {
+            let w0 = widen_i8(w.as_ptr().add(i));
+            let w1 = widen_i8(w.as_ptr().add(k + i));
+            for r in 0..MR {
+                let av = widen_u8(a.as_ptr().add(r * k + i));
+                acc[r * NR] = _mm256_add_epi32(acc[r * NR], _mm256_madd_epi16(av, w0));
+                acc[r * NR + 1] = _mm256_add_epi32(acc[r * NR + 1], _mm256_madd_epi16(av, w1));
+            }
+            i += 16;
+        }
+        for r in 0..MR {
+            for c in 0..NR {
+                let mut s = hsum_i32(acc[r * NR + c]);
+                for j in i..k {
+                    s += a[r * k + j] as i32 * w[c * k + j] as i32;
+                }
+                out[r * NR + c] = s;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Caller guarantees AVX2, `a.len() == MR·k`, `b.len() == NR·k`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_u8_u8(a: &[u8], b: &[u8], k: usize, out: &mut [i32; MR * NR]) {
+        let mut acc = [_mm256_setzero_si256(); MR * NR];
+        let mut i = 0;
+        while i + 16 <= k {
+            let b0 = widen_u8(b.as_ptr().add(i));
+            let b1 = widen_u8(b.as_ptr().add(k + i));
+            for r in 0..MR {
+                let av = widen_u8(a.as_ptr().add(r * k + i));
+                acc[r * NR] = _mm256_add_epi32(acc[r * NR], _mm256_madd_epi16(av, b0));
+                acc[r * NR + 1] = _mm256_add_epi32(acc[r * NR + 1], _mm256_madd_epi16(av, b1));
+            }
+            i += 16;
+        }
+        for r in 0..MR {
+            for c in 0..NR {
+                let mut s = hsum_i32(acc[r * NR + c]);
+                for j in i..k {
+                    s += a[r * k + j] as i32 * b[c * k + j] as i32;
+                }
+                out[r * NR + c] = s;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier-dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// `Σ a[i]·w[i]` in exact `i32` (u8 activations × i8 weights).
+#[inline]
+pub fn dot_u8_i8(tier: Tier, a: &[u8], w: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), w.len());
+    match tier {
+        Tier::Scalar => dot_u8_i8_scalar(a, w),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Tier::Avx2 only originates from Tier::detect().
+                return unsafe { avx2::dot_u8_i8(a, w) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            dot_u8_i8_scalar(a, w)
+        }
+    }
+}
+
+/// `Σ a[i]·b[i]` in exact `i32` (u8 × u8, both activation codes).
+#[inline]
+pub fn dot_u8_u8(tier: Tier, a: &[u8], b: &[u8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match tier {
+        Tier::Scalar => dot_u8_u8_scalar(a, b),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Tier::Avx2 only originates from Tier::detect().
+                return unsafe { avx2::dot_u8_u8(a, b) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            dot_u8_u8_scalar(a, b)
+        }
+    }
+}
+
+/// `MR×NR` register-tiled block: `a` is `MR` rows × `k`, `w` is `NR`
+/// transposed columns × `k`, both contiguous; `acc[r·NR + c]` receives the
+/// exact dot of row `r` with column `c`.
+#[inline]
+pub fn mk_u8_i8(tier: Tier, a: &[u8], w: &[i8], k: usize, acc: &mut [i32; MR * NR]) {
+    debug_assert_eq!(a.len(), MR * k);
+    debug_assert_eq!(w.len(), NR * k);
+    match tier {
+        Tier::Scalar => mk_u8_i8_scalar(a, w, k, acc),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Tier::Avx2 only originates from Tier::detect().
+                return unsafe { avx2::mk_u8_i8(a, w, k, acc) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            mk_u8_i8_scalar(a, w, k, acc)
+        }
+    }
+}
+
+/// `MR×NR` register-tiled block for the u8×u8 kernel (see [`mk_u8_i8`]).
+#[inline]
+pub fn mk_u8_u8(tier: Tier, a: &[u8], b: &[u8], k: usize, acc: &mut [i32; MR * NR]) {
+    debug_assert_eq!(a.len(), MR * k);
+    debug_assert_eq!(b.len(), NR * k);
+    match tier {
+        Tier::Scalar => mk_u8_u8_scalar(a, b, k, acc),
+        Tier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: Tier::Avx2 only originates from Tier::detect().
+                return unsafe { avx2::mk_u8_u8(a, b, k, acc) };
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            mk_u8_u8_scalar(a, b, k, acc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn rand_u8(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(256) as i32 - 128) as i8).collect()
+    }
+
+    #[test]
+    fn detect_returns_a_usable_tier() {
+        let t = Tier::detect();
+        assert!(matches!(t, Tier::Scalar | Tier::Avx2));
+        assert!(!t.name().is_empty());
+        // active_tier is stable across calls.
+        assert_eq!(active_tier(), active_tier());
+    }
+
+    /// SIMD dots are bit-identical to the scalar reference on random
+    /// lengths including the <16 tail and non-multiple-of-16 cases.
+    /// Trivially scalar-vs-scalar on hosts without AVX2 — the CI matrix
+    /// leg with `-C target-feature=+avx2` pins the real comparison.
+    #[test]
+    fn dots_match_scalar_bit_exactly() {
+        let tier = Tier::detect();
+        check(
+            "dot_simd_eq_scalar",
+            |rng| {
+                let k = 1 + rng.below(300) as usize;
+                (rand_u8(rng, k), rand_i8(rng, k), rand_u8(rng, k))
+            },
+            |(a, w, b)| {
+                let got = dot_u8_i8(tier, a, w);
+                let want = dot_u8_i8_scalar(a, w);
+                if got != want {
+                    return Err(format!("u8i8: {got} != {want}"));
+                }
+                let got = dot_u8_u8(tier, a, b);
+                let want = dot_u8_u8_scalar(a, b);
+                if got != want {
+                    return Err(format!("u8u8: {got} != {want}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Micro-kernel blocks equal MR·NR independent scalar dots, exactly.
+    #[test]
+    fn micro_kernels_match_scalar_bit_exactly() {
+        let tier = Tier::detect();
+        check(
+            "mk_simd_eq_scalar",
+            |rng| {
+                let k = 1 + rng.below(200) as usize;
+                (k, rand_u8(rng, MR * k), rand_i8(rng, NR * k), rand_u8(rng, NR * k))
+            },
+            |&(k, ref a, ref w, ref b)| {
+                let mut got = [0i32; MR * NR];
+                mk_u8_i8(tier, a, w, k, &mut got);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        let want = dot_u8_i8_scalar(&a[r * k..(r + 1) * k], &w[c * k..(c + 1) * k]);
+                        if got[r * NR + c] != want {
+                            return Err(format!("u8i8 ({r},{c}): {} != {want}", got[r * NR + c]));
+                        }
+                    }
+                }
+                let mut got = [0i32; MR * NR];
+                mk_u8_u8(tier, a, b, k, &mut got);
+                for r in 0..MR {
+                    for c in 0..NR {
+                        let want = dot_u8_u8_scalar(&a[r * k..(r + 1) * k], &b[c * k..(c + 1) * k]);
+                        if got[r * NR + c] != want {
+                            return Err(format!("u8u8 ({r},{c}): {} != {want}", got[r * NR + c]));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Extremes that would expose `i16` saturation if `maddubs` were used.
+    #[test]
+    fn saturation_prone_extremes_are_exact() {
+        let tier = Tier::detect();
+        for k in [16usize, 32, 48] {
+            let a = vec![255u8; k];
+            let w = vec![127i8; k];
+            assert_eq!(dot_u8_i8(tier, &a, &w), k as i32 * 255 * 127);
+            let wneg = vec![-128i8; k];
+            assert_eq!(dot_u8_i8(tier, &a, &wneg), k as i32 * 255 * -128);
+            let b = vec![255u8; k];
+            assert_eq!(dot_u8_u8(tier, &a, &b), k as i32 * 255 * 255);
+        }
+    }
+}

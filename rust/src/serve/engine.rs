@@ -129,13 +129,41 @@ pub fn pack_batch(
     seq_len: usize,
     causal: bool,
 ) -> Result<(IntTensor, IntTensor, Tensor)> {
-    if reqs.is_empty() || reqs.len() > max_batch {
-        bail!("batch of {} requests (engine max {max_batch})", reqs.len());
-    }
     let (b, t) = (max_batch, seq_len);
     let mut x = vec![0i32; b * t];
     let mut targets = vec![0i32; b * t];
     let mut mask = vec![0.0f32; b * t];
+    pack_batch_into(reqs, max_batch, seq_len, causal, &mut x, &mut targets, &mut mask)?;
+    Ok((
+        IntTensor::new(vec![b, t], x)?,
+        IntTensor::new(vec![b, t], targets)?,
+        Tensor::new(vec![b, t], mask)?,
+    ))
+}
+
+/// [`pack_batch`] into caller-owned `(max_batch · seq_len)` buffers —
+/// zeroed and refilled, so an engine that keeps its packed tensors around
+/// (the native backend) adds no per-dispatch allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_batch_into(
+    reqs: &[ScoreRequest],
+    max_batch: usize,
+    seq_len: usize,
+    causal: bool,
+    x: &mut [i32],
+    targets: &mut [i32],
+    mask: &mut [f32],
+) -> Result<()> {
+    if reqs.is_empty() || reqs.len() > max_batch {
+        bail!("batch of {} requests (engine max {max_batch})", reqs.len());
+    }
+    let t = seq_len;
+    debug_assert_eq!(x.len(), max_batch * t);
+    debug_assert_eq!(targets.len(), max_batch * t);
+    debug_assert_eq!(mask.len(), max_batch * t);
+    x.fill(0);
+    targets.fill(0);
+    mask.fill(0.0);
     for (r, req) in reqs.iter().enumerate() {
         let n = req.tokens.len();
         x[r * t..r * t + n].copy_from_slice(&req.tokens);
@@ -160,11 +188,7 @@ pub fn pack_batch(
             }
         }
     }
-    Ok((
-        IntTensor::new(vec![b, t], x)?,
-        IntTensor::new(vec![b, t], targets)?,
-        Tensor::new(vec![b, t], mask)?,
-    ))
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -667,14 +691,19 @@ pub fn spawn_engine_pool(
                     };
                     log::info(&format!("engine worker {worker}: {}", engine.describe()));
                     ready.fetch_add(1, Ordering::SeqCst);
+                    // Batch-view assembly buffers persist across dispatches
+                    // (cleared, not reallocated — capacities warm after the
+                    // first full batch).
+                    let mut reqs: Vec<ScoreRequest> = Vec::new();
+                    let mut replies: Vec<(mpsc::Sender<Result<JobOutcome, String>>, Duration)> =
+                        Vec::new();
                     while let Some(view) = dispatch.next_batch(worker) {
                         let launched = Instant::now();
                         let n = view.assignments.len();
                         // Move requests out of the jobs (no hot-path clone);
                         // keep reply channels + queue waits alongside.
-                        let mut reqs: Vec<ScoreRequest> = Vec::with_capacity(n);
-                        let mut replies: Vec<(mpsc::Sender<Result<JobOutcome, String>>, Duration)> =
-                            Vec::with_capacity(n);
+                        reqs.clear();
+                        replies.clear();
                         for a in view.assignments {
                             let wait = a.queued.waited(launched);
                             stats.queue_wait.record(wait);
@@ -688,7 +717,7 @@ pub fn spawn_engine_pool(
                         match result {
                             Ok(rows) => {
                                 stats.record_batch(n, exec);
-                                for ((resp, wait), row) in replies.into_iter().zip(rows) {
+                                for ((resp, wait), row) in replies.drain(..).zip(rows) {
                                     let _ = resp.send(Ok(JobOutcome {
                                         row,
                                         queue_ms: wait.as_secs_f64() * 1000.0,
@@ -699,7 +728,7 @@ pub fn spawn_engine_pool(
                             Err(e) => {
                                 let msg = format!("engine error: {e:#}");
                                 log::warn(&msg);
-                                for (resp, _) in replies {
+                                for (resp, _) in replies.drain(..) {
                                     let _ = resp.send(Err(msg.clone()));
                                 }
                             }

@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 use crate::serve::batcher::{BatchPolicy, Batcher, BatcherConfig, Rejected, SlotConfig, SlotPool};
 use crate::serve::engine::{spawn_engine_pool, validate_request, Dispatch, EngineFactory, Job};
 use crate::serve::protocol::{error_json, ScoreRequest, ScoreResponse};
-use crate::serve::stats::ServeStats;
+use crate::serve::stats::{EngineMem, ServeStats};
 use crate::util::json::Json;
 use crate::util::log;
 
@@ -81,6 +81,9 @@ pub struct EngineInfo {
     pub vocab: usize,
     pub causal: bool,
     pub describe: String,
+    /// Engine memory accounting for `/statz`'s `engine.mem` section
+    /// (`EngineMem::default()` when unknown — mock/test servers).
+    pub mem: EngineMem,
 }
 
 /// Decrements the live-connection counter when a handler thread exits.
@@ -486,6 +489,7 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                     ctx.dispatch.policy().name(),
                     ctx.dispatch.depth(),
                     ctx.dispatch.occupancy(),
+                    ctx.info.mem,
                 );
                 write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
             }

@@ -112,6 +112,38 @@ fn round3(x: f64) -> f64 {
     (x * 1000.0).round() / 1000.0
 }
 
+/// Engine memory accounting surfaced as `/statz`'s `engine.mem` section.
+/// Best-effort per engine kind: the native backend reports exact numbers
+/// (one shared weight copy + per-worker scratch arenas), the PJRT engine
+/// an f32-parameter estimate, the mock engine zeros.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineMem {
+    /// Bytes of the weight copy — counted **once**: native workers share a
+    /// single `Arc<Int8Weights>`.
+    pub weight_bytes: usize,
+    /// Bytes of one worker's private scratch arena.
+    pub scratch_bytes_per_worker: usize,
+    /// Engine workers configured.
+    pub workers: usize,
+}
+
+impl EngineMem {
+    /// Estimated resident total: one weight copy + every worker's scratch.
+    pub fn resident_bytes(&self) -> usize {
+        self.weight_bytes + self.workers * self.scratch_bytes_per_worker
+    }
+
+    fn to_json(self) -> Json {
+        let mem = Json::obj(vec![
+            ("weight_bytes", Json::Num(self.weight_bytes as f64)),
+            ("scratch_bytes_per_worker", Json::Num(self.scratch_bytes_per_worker as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("resident_bytes", Json::Num(self.resident_bytes() as f64)),
+        ]);
+        Json::obj(vec![("mem", mem)])
+    }
+}
+
 /// All serving counters, shared by HTTP handlers and engine workers.
 #[derive(Debug)]
 pub struct ServeStats {
@@ -204,12 +236,14 @@ impl ServeStats {
     }
 
     /// The `/statz` document. `queue_depth` and `slots` are sampled by the
-    /// caller (the dispatch owns them); `slots` is `None` in fixed mode.
+    /// caller (the dispatch owns them); `slots` is `None` in fixed mode;
+    /// `mem` is the engine memory accounting (zeros when unknown).
     pub fn snapshot(
         &self,
         batch_policy: &str,
         queue_depth: usize,
         slots: Option<SlotOccupancy>,
+        mem: EngineMem,
     ) -> Json {
         let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
         let mut doc = vec![
@@ -244,6 +278,7 @@ impl ServeStats {
                 ]),
             ),
             ("latency", self.latency.to_json()),
+            ("engine", mem.to_json()),
         ];
         if let Some(occ) = slots {
             doc.push((
@@ -324,10 +359,18 @@ mod tests {
         s.requests_total.fetch_add(3, Ordering::Relaxed);
         s.latency.record(Duration::from_micros(800));
         s.admission_wait.record(Duration::from_micros(90));
-        let doc = s.snapshot("fixed", 2, None).to_string();
+        let mem = EngineMem { weight_bytes: 1000, scratch_bytes_per_worker: 50, workers: 3 };
+        let doc = s.snapshot("fixed", 2, None, mem).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("queue").unwrap().req("depth").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("fixed"));
+        let m = parsed.req("engine").unwrap().req("mem").unwrap();
+        assert_eq!(m.req("weight_bytes").unwrap().as_usize(), Some(1000));
+        assert_eq!(
+            m.req("resident_bytes").unwrap().as_usize(),
+            Some(1150),
+            "resident = weights (shared, once) + workers x scratch"
+        );
         assert_eq!(
             parsed.req("queue").unwrap().req("admission").unwrap().req("count").unwrap().as_usize(),
             Some(1)
@@ -350,7 +393,7 @@ mod tests {
             completing: 0,
             retired: 0,
         };
-        let doc = s.snapshot("continuous", 0, Some(occ)).to_string();
+        let doc = s.snapshot("continuous", 0, Some(occ), EngineMem::default()).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("continuous"));
         let slots = parsed.req("slots").unwrap();

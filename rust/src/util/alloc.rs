@@ -1,0 +1,92 @@
+//! Thread-local heap-allocation counter behind the **`alloc-counter`**
+//! feature — the measurement tool for the zero-allocation dispatch claim.
+//!
+//! When the feature is on, a counting [`GlobalAlloc`] wrapper around the
+//! system allocator increments a thread-local counter on every `alloc` /
+//! `alloc_zeroed` / `realloc` (frees are not counted: the claim under test
+//! is "no allocation", and every allocation is paired with at most one
+//! free). The counter is thread-local on purpose: `cargo test` runs tests
+//! concurrently, and a process-global counter would make the
+//! zero-allocation assertions flaky against unrelated test threads.
+//!
+//! Consumers: `Int8Model::score` carries a `debug_assert` that its
+//! steady-state dispatch performed zero allocations on the dispatch
+//! thread, and `infer::model::tests::steady_state_score_is_allocation_free`
+//! measures the same end to end. CI runs
+//! `cargo test --features alloc-counter` as a dedicated step; the feature
+//! stays off in release builds (the wrapper costs one thread-local
+//! increment per allocation — tiny, but not zero).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCATIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations performed by the *current thread* since it
+/// started. Diff across a region to count its allocations.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.with(|c| c.get())
+}
+
+/// The counting allocator installed as `#[global_allocator]` while the
+/// `alloc-counter` feature is active.
+pub struct CountingAllocator;
+
+#[inline]
+fn bump() {
+    ALLOCATIONS.with(|c| c.set(c.get() + 1));
+}
+
+// SAFETY: defers every operation to `System`; the counter bump has no
+// effect on allocator behavior (const-initialized thread-local Cell —
+// no lazy init, no drop registration, safe to touch inside `alloc`).
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOCATOR: CountingAllocator = CountingAllocator;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sees_allocations_and_ignores_frees() {
+        let before = allocations();
+        let v = vec![1u8; 4096];
+        let after_alloc = allocations();
+        assert!(after_alloc > before, "Vec allocation counted");
+        drop(v);
+        assert_eq!(allocations(), after_alloc, "dealloc not counted");
+    }
+
+    #[test]
+    fn pure_arithmetic_does_not_count() {
+        let mut acc = 0u64;
+        let before = allocations();
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        assert_eq!(allocations(), before, "no allocation in the loop (acc={acc})");
+    }
+}

@@ -4,6 +4,8 @@
 //! `thiserror`, so everything a typical project would pull from serde /
 //! rand / clap / proptest is implemented (and unit-tested) here.
 
+#[cfg(feature = "alloc-counter")]
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod log;

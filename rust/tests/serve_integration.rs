@@ -12,6 +12,7 @@ use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, LoadgenConfig};
 use qtx::serve::protocol::{ScoreRequest, ScoreResponse};
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::serve::stats::EngineMem;
 use qtx::util::json::Json;
 
 const SEQ_LEN: usize = 32;
@@ -53,6 +54,7 @@ fn start_server_with(
         vocab: 1024,
         causal: probe.causal,
         describe: probe.describe(),
+        mem: EngineMem::default(),
     };
     let s = Server::start(cfg, info, mock_factory(cost)).unwrap();
     s.wait_ready(Duration::from_secs(10)).unwrap();
@@ -189,6 +191,7 @@ fn queue_full_returns_503() {
         vocab: 1024,
         causal: probe.causal,
         describe: probe.describe(),
+        mem: EngineMem::default(),
     };
     let server = Server::start(
         cfg,

@@ -20,6 +20,7 @@ use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, EngineSpec, PjrtEngine, ScoreEngine};
 use qtx::serve::protocol::{ScoreRequest, ScoreResponse, ScoreRow};
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::serve::stats::EngineMem;
 
 fn engine_spec() -> Option<EngineSpec> {
     match EngineSpec::tiny_test_recipe() {
@@ -138,6 +139,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
             vocab: 256,
             causal,
             describe: format!("native-int8:{} W8A8 (test)", spec.config),
+            mem: EngineMem::default(),
         },
         factory,
     )
