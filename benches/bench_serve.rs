@@ -1,8 +1,9 @@
 //! Serving throughput/latency benches.
 //!
-//! Three sections. The first two run on the deterministic mock engine
-//! (set QTX_BENCH_SERVE_COST_US to change the simulated per-dispatch
-//! cost; default 3000µs ≈ a tiny-config serve_score invocation):
+//! Four sections. All but the engine comparison run on the deterministic
+//! mock engine (set QTX_BENCH_SERVE_COST_US to change the simulated
+//! per-dispatch cost; default 3000µs ≈ a tiny-config serve_score
+//! invocation):
 //!
 //! 1. **Closed loop, batch-size sweep** (the PR-1 trajectory): loadgen vs.
 //!    server at max_batch {1, 8, 32}; batched throughput must beat
@@ -20,6 +21,10 @@
 //!    same calibrated `bert_tiny_softmax` checkpoint. Needs
 //!    `make artifacts`; skipped (with a note) otherwise, so CI's
 //!    artifact-less `make bench` still completes.
+//! 4. **Decode matrix** (the KV-cache decode trajectory): prefill len ×
+//!    new tokens → generated tokens/s plus per-token and prefill p95
+//!    from `/statz`'s decode histograms, over slot-pinned sessions on the
+//!    continuous batcher.
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -27,6 +32,8 @@
 //!      QTX_BENCH_SENDERS  open-loop sender pool (default 96)
 //!      QTX_BENCH_SERVE_COST_US  mock per-dispatch cost (default 3000)
 //!      QTX_BENCH_ENGINE_ITERS   engine-compare dispatches (default 10)
+//!      QTX_BENCH_GEN_REQS       decode sessions per client (default 8)
+//!      QTX_BENCH_GEN_CLIENTS    decode closed-loop clients (default 8)
 //!
 //! Output: markdown tables (the repo's bench idiom) plus one
 //! `bench_serve JSON: {...}` line per row — CI collects these lines into
@@ -86,6 +93,7 @@ fn start_server(
                 queue_cap,
             },
             admit_window: Duration::ZERO,
+            read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(60),
         },
         EngineInfo {
@@ -93,6 +101,7 @@ fn start_server(
             max_batch,
             vocab: 256,
             causal: probe.causal,
+            decode: true,
             describe: probe.describe(),
             mem: EngineMem::default(),
         },
@@ -138,6 +147,7 @@ fn bench_closed(
         seed: 42,
         timeout: Duration::from_secs(60),
         open_rate_rps: None,
+        gen: None,
     })?;
     anyhow::ensure!(report.errors == 0, "loadgen errors: {}", report.errors);
     let fill = fill_ratio(&addr)?;
@@ -192,11 +202,80 @@ fn bench_open(
         seed: 42,
         timeout: Duration::from_secs(60),
         open_rate_rps: Some(rate),
+        gen: None,
     })?;
     anyhow::ensure!(report.ok > 0, "no successful requests ({} errors)", report.errors);
     let fill = fill_ratio(&addr)?;
     server.stop();
     Ok(MatrixRow { policy, label: label.to_string(), rate, report, fill })
+}
+
+// ---------------------------------------------------------------------------
+// Section 4: decode matrix — prefill len × new tokens (mock engine)
+// ---------------------------------------------------------------------------
+
+struct DecodeRow {
+    prefill_len: usize,
+    new_tokens: usize,
+    ok: u64,
+    errors: u64,
+    tokens_per_s: f64,
+    step_p95_ms: f64,
+    prefill_p95_ms: f64,
+}
+
+/// Closed-loop generate sessions through the continuous batcher: tokens/s
+/// from the loadgen report, per-token and prefill p95 from `/statz`'s
+/// decode histograms.
+fn bench_decode(
+    prefill_len: usize,
+    new_tokens: usize,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<DecodeRow> {
+    let server = start_server(
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        MATRIX_MAX_WAIT_MS,
+        1024,
+        clients + 8,
+        cost_us,
+    )?;
+    let addr = server.addr().to_string();
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: Some(qtx::serve::loadgen::GenLoad {
+            max_new_tokens: new_tokens,
+            prompt_len: prefill_len,
+        }),
+    })?;
+    anyhow::ensure!(report.errors == 0, "decode loadgen errors: {}", report.errors);
+    let mut c = Client::connect(&addr, Duration::from_secs(5))?;
+    let statz = c.get_json("/statz")?;
+    let decode = statz.req("decode")?;
+    let p95 = |k: &str| -> anyhow::Result<f64> {
+        Ok(decode.req(k)?.req("p95_ms")?.as_f64().unwrap_or(0.0))
+    };
+    let row = DecodeRow {
+        prefill_len,
+        new_tokens,
+        ok: report.ok,
+        errors: report.errors,
+        tokens_per_s: report.gen_tokens_per_s,
+        step_p95_ms: p95("step")?,
+        prefill_p95_ms: p95("prefill")?,
+    };
+    drop(c);
+    server.stop();
+    Ok(row)
 }
 
 // ---------------------------------------------------------------------------
@@ -413,6 +492,60 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\ncontinuous wins queue-wait below engine saturation; past it both policies are \
          backlog-bound (see ROADMAP Serving)."
+    );
+
+    // -- decode matrix: prefill len × new tokens -----------------------------
+    let gen_reqs = env_usize("QTX_BENCH_GEN_REQS", 8);
+    let gen_clients = env_usize("QTX_BENCH_GEN_CLIENTS", 8);
+    let decode_cells: [(usize, usize); 3] = [(8, 8), (8, 32), (24, 8)];
+    let mut decode_rows = Vec::new();
+    for (plen, ntok) in decode_cells {
+        let r = bench_decode(plen, ntok, gen_clients, gen_reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] decode prefill={} new={}: {:.1} tok/s, step p95 {:.2} ms",
+            r.prefill_len, r.new_tokens, r.tokens_per_s, r.step_p95_ms
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("section", Json::Str("decode".into())),
+                ("policy", Json::Str("continuous".into())),
+                ("prefill_len", Json::Num(r.prefill_len as f64)),
+                ("new_tokens", Json::Num(r.new_tokens as f64)),
+                ("clients", Json::Num(gen_clients as f64)),
+                ("sessions", Json::Num(r.ok as f64)),
+                ("errors", Json::Num(r.errors as f64)),
+                ("tokens_per_s", Json::Num(r.tokens_per_s)),
+                ("step_p95_ms", Json::Num(r.step_p95_ms)),
+                ("prefill_p95_ms", Json::Num(r.prefill_p95_ms)),
+            ])
+        );
+        decode_rows.push(r);
+    }
+    let dtable: Vec<Vec<String>> = decode_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.prefill_len.to_string(),
+                r.new_tokens.to_string(),
+                r.ok.to_string(),
+                format!("{:.1}", r.tokens_per_s),
+                format!("{:.2}", r.step_p95_ms),
+                format!("{:.2}", r.prefill_p95_ms),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## decode — slot-pinned generation sessions ({gen_clients} closed-loop clients, \
+         mock engine)\n\n{}",
+        render(
+            &["prefill", "new toks", "sessions", "tok/s", "step p95 ms", "prefill p95 ms"],
+            &dtable
+        )
+    );
+    anyhow::ensure!(
+        decode_rows.iter().all(|r| r.tokens_per_s > 0.0),
+        "decode matrix produced no tokens"
     );
 
     // -- engine dimension: pjrt vs native-int8 -------------------------------

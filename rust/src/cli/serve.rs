@@ -7,6 +7,7 @@
 //! qtx serve --config bert_tiny_softmax --steps 1000 --seeds 0 --port 8787
 //! qtx loadgen --port 8787 --threads 4 --requests 64
 //! qtx loadgen --port 8787 --open-loop --rate 500 --threads 32
+//! qtx loadgen --port 8787 --generate --max-new-tokens 16 --requests 8
 //! ```
 //!
 //! `serve` resolves the checkpoint with the same recipe flags as `train`
@@ -30,12 +31,12 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::cli::basic::{paths_from_args, spec_from_args};
-use crate::infer::{NativeInt8Engine, Scratch};
+use crate::infer::{KvCache, NativeInt8Engine, Scratch};
 use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{
     EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
-use crate::serve::loadgen::{run as loadgen_run, render_report, LoadgenConfig};
+use crate::serve::loadgen::{run as loadgen_run, render_report, GenLoad, LoadgenConfig};
 use crate::serve::server::{EngineInfo, Server, ServerConfig};
 use crate::serve::stats::EngineMem;
 use crate::util::cli::Args;
@@ -58,6 +59,7 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
             queue_cap: args.usize("queue-cap", 256)?,
         },
         admit_window: Duration::from_micros(args.u64("admit-window-us", 0)?),
+        read_timeout: Duration::from_millis(args.u64("read-timeout-ms", 60_000)?),
         request_timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
     })
 }
@@ -94,6 +96,7 @@ pub fn serve(args: &Args) -> Result<()> {
             // The mock scores any non-negative id; only reject negatives.
             vocab: i32::MAX as usize,
             causal: probe.causal,
+            decode: true,
             describe: probe.describe(),
             mem: EngineMem { workers: cfg.engines, ..EngineMem::default() },
         };
@@ -157,6 +160,9 @@ pub fn serve(args: &Args) -> Result<()> {
                 let mem = EngineMem {
                     weight_bytes: weights.bytes(),
                     scratch_bytes_per_worker: Scratch::bytes_for(&weights),
+                    // Worst case: every slot hosting a session (caches are
+                    // lazily allocated per slot, then reused).
+                    kv_bytes_per_worker: max_batch * KvCache::bytes_for(&weights),
                     workers: cfg.engines,
                 };
                 let factory: EngineFactory = Arc::new(move || {
@@ -176,6 +182,7 @@ pub fn serve(args: &Args) -> Result<()> {
                 let mem = EngineMem {
                     weight_bytes: f32_bytes * cfg.engines.max(1),
                     scratch_bytes_per_worker: 0,
+                    kv_bytes_per_worker: 0, // pjrt has no decode path
                     workers: cfg.engines,
                 };
                 let factory: EngineFactory = Arc::new(move || {
@@ -189,6 +196,9 @@ pub fn serve(args: &Args) -> Result<()> {
             max_batch,
             vocab: mcfg.vocab_size,
             causal: mcfg.causal,
+            // The PJRT engine is a fixed-shape scorer; only the native
+            // integer backend carries the KV-cache decode path.
+            decode: engine == EngineKind::NativeInt8,
             describe: format!(
                 "{}:{} W{}A{} ({})",
                 engine.name(),
@@ -206,7 +216,7 @@ pub fn serve(args: &Args) -> Result<()> {
     let server = Server::start(cfg, info, factory)?;
     server.wait_ready(ready_timeout)?;
     println!(
-        "serving on http://{} — POST /v1/score, GET /healthz, GET /statz",
+        "serving on http://{} — POST /v1/score, POST /v1/generate, GET /healthz, GET /statz",
         server.addr()
     );
     server.run_forever();
@@ -222,6 +232,18 @@ pub fn loadgen(args: &Args) -> Result<()> {
     if !open_loop && rate > 0.0 {
         anyhow::bail!("--rate only applies with --open-loop (closed loop is self-pacing)");
     }
+    // `--generate` drives POST /v1/generate (KV-cache decode sessions);
+    // `--max-new-tokens`/`--prompt-len` shape each session. The default
+    // matches the wire protocol's, so CLI and raw-curl sessions compare.
+    let generate = args.bool("generate", false)?;
+    let max_new_tokens = args.usize(
+        "max-new-tokens",
+        crate::serve::protocol::GenerateRequest::DEFAULT_MAX_NEW_TOKENS,
+    )?;
+    let prompt_len = args.usize("prompt-len", 0)?;
+    if !generate && (args.str_opt("max-new-tokens").is_some() || prompt_len > 0) {
+        anyhow::bail!("--max-new-tokens/--prompt-len only apply with --generate");
+    }
     let cfg = LoadgenConfig {
         addr: format!("{host}:{}", args.port(8787)?),
         clients: args.threads(4)?,
@@ -231,6 +253,7 @@ pub fn loadgen(args: &Args) -> Result<()> {
         seed: args.u64("seed", 0)?,
         timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
         open_rate_rps: open_loop.then_some(rate),
+        gen: generate.then_some(GenLoad { max_new_tokens, prompt_len }),
     };
     args.finish()?;
     let report = loadgen_run(&cfg)?;

@@ -31,8 +31,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::calibrator::{calibrate, CollectOptions};
 use crate::coordinator::quantize::quantize_weights;
-use crate::infer::model::{Int8Model, Int8Weights, ModelOptions};
-use crate::serve::engine::{pack_batch_into, EngineSpec, ScoreEngine};
+use crate::infer::model::{Int8Model, Int8Weights, KvCache, ModelOptions};
+use crate::serve::engine::{greedy_token, pack_batch_into, EngineSpec, ScoreEngine};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::util::log;
 use crate::util::tensor::{IntTensor, Tensor};
@@ -48,6 +48,12 @@ pub struct NativeInt8Engine {
     mask: Tensor,
     /// Reused reply rows (capacity warm after the first dispatch).
     rows: Vec<ScoreRow>,
+    /// Per-slot KV caches for generation sessions (slot = batcher slot =
+    /// session), allocated lazily on a slot's first prefill and then
+    /// reused — a steady-state decode step touches no allocator.
+    caches: Vec<Option<KvCache>>,
+    /// Reused next-token logits buffer (`vocab_size`).
+    gen_logits: Vec<f32>,
     max_batch: usize,
     seq_len: usize,
     causal: bool,
@@ -146,12 +152,15 @@ impl NativeInt8Engine {
     pub fn from_model(model: Int8Model) -> NativeInt8Engine {
         let cfg = model.cfg();
         let (max_batch, seq_len, causal) = (cfg.batch_size, cfg.seq_len, cfg.causal);
+        let vocab = cfg.vocab_size;
         let config = cfg.name.clone();
         NativeInt8Engine {
             x: IntTensor::zeros(&[max_batch, seq_len]),
             targets: IntTensor::zeros(&[max_batch, seq_len]),
             mask: Tensor::zeros(&[max_batch, seq_len]),
             rows: Vec::with_capacity(max_batch),
+            caches: (0..max_batch).map(|_| None).collect(),
+            gen_logits: vec![0.0; vocab],
             max_batch,
             seq_len,
             causal,
@@ -217,6 +226,41 @@ impl ScoreEngine for NativeInt8Engine {
         )?;
         self.model.score(&self.x, &self.targets, &self.mask, &mut self.rows)?;
         Ok(self.rows[..reqs.len()].to_vec())
+    }
+
+    fn supports_decode(&self) -> bool {
+        // `prefill` itself still rejects non-causal configs with a
+        // descriptive error; this gate lets the server answer 501 up
+        // front for engine kinds that never decode.
+        true
+    }
+
+    /// Prefill slot `slot`'s KV cache from `prompt` (one batched forward)
+    /// and return the first greedy token. The cache itself is allocated on
+    /// the slot's first session and reused afterwards; prefill still
+    /// allocates transient prompt-padding buffers (once per session) — the
+    /// zero-allocation contract covers the per-token `gen_step` path.
+    fn gen_prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
+        if slot >= self.max_batch {
+            bail!("slot {slot} outside batch {}", self.max_batch);
+        }
+        let NativeInt8Engine { model, caches, gen_logits, .. } = self;
+        let cache = caches[slot].get_or_insert_with(|| KvCache::for_weights(model.weights()));
+        model.prefill(cache, prompt, gen_logits)?;
+        Ok(greedy_token(gen_logits))
+    }
+
+    /// One incremental decode step on slot `slot`'s session: zero-copy
+    /// over the cached codes, zero-allocation, bit-exact against a full
+    /// re-score of the prefix ([`Int8Model::decode_step`]).
+    fn gen_step(&mut self, slot: usize, last: i32) -> Result<i32> {
+        let NativeInt8Engine { model, caches, gen_logits, .. } = self;
+        let cache = caches
+            .get_mut(slot)
+            .and_then(Option::as_mut)
+            .with_context(|| format!("no generation session on slot {slot}"))?;
+        model.decode_step(cache, last, gen_logits)?;
+        Ok(greedy_token(gen_logits))
     }
 }
 

@@ -218,6 +218,15 @@ pub fn gemm_q8_tier(
     }
 }
 
+/// Single-row [`gemm_q8`] — the decode-path GEMV (`m = 1`). Delegates to
+/// the GEMM, which for one row resolves to plain tier-dispatched
+/// [`simd::dot_u8_i8`] dots per output column, so a decode-step projection
+/// is **bit-identical** to the same row inside a full-batch dispatch (the
+/// `i32` accumulation is exact either way and the f32 epilogue is shared).
+pub fn gemv_q8(a: QView<'_>, w: &Int8Weight, bias: Option<&[f32]>, out: &mut [f32]) {
+    gemm_q8(a, 1, w, bias, out)
+}
+
 /// Activation × activation GEMM (`u8×u8 → i32`), both on asymmetric grids:
 /// used for attention scores (`Q·Kᵀ`) and context (`P·V`). `a` is `m×k`
 /// row-major, `bt` is the second operand already transposed to `n×k`
@@ -301,6 +310,43 @@ pub fn gemm_q8q8_tier(
                 out[i * n + jj] = epilogue(acc, i, jj);
             }
         }
+    }
+}
+
+/// Single-row [`gemm_q8q8`] against a transposed operand stored with a
+/// **row stride** and with **caller-supplied column sums**: `bt` holds `n`
+/// rows of at least `k` codes each, row `j` starting at `j · stride`
+/// (`stride ≥ k`; the tail of each row is ignored), and `col_sums[j]`
+/// must equal the sum of row `j`'s first `k` codes. This is the decode
+/// path's shape for both attention products over the KV cache: the cached
+/// codes are immutable, so the cache maintains their zero-point-correction
+/// sums incrementally and a token step never re-sums the frozen prefix
+/// (only the fresh single-row operand, O(k)).
+///
+/// Bit-identical to [`gemm_q8q8`] with `m = 1` on the densely packed
+/// equivalent: the same exact `i32` dot and zero-point algebra feed the
+/// same f32 epilogue (asserted by test below).
+pub fn gemv_q8q8_presummed(
+    a: QView<'_>,
+    bt: QView<'_>,
+    stride: usize,
+    col_sums: &[i32],
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.data.len(), k);
+    debug_assert!(stride >= k);
+    debug_assert!(n == 0 || bt.data.len() >= (n - 1) * stride + k);
+    debug_assert_eq!(col_sums.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let tier = simd::active_tier();
+    let row_sum: i32 = a.data.iter().map(|&v| v as i32).sum();
+    let alpha = a.scale * bt.scale;
+    let kzz = k as i32 * a.zero_point * bt.zero_point;
+    for (j, o) in out.iter_mut().enumerate() {
+        let acc = simd::dot_u8_u8(tier, a.data, &bt.data[j * stride..j * stride + k]);
+        *o = alpha * (acc - a.zero_point * col_sums[j] - bt.zero_point * row_sum + kzz) as f32;
     }
 }
 
@@ -552,6 +598,67 @@ mod tests {
                             simd_out[i], scalar_out[i]
                         ));
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The decode-path GEMV equals row `i` of the batched GEMM bit-exactly
+    /// for every row — the kernel-level half of the decode-vs-rescore
+    /// parity contract (`infer::model` pins the model-level half).
+    #[test]
+    fn gemv_q8_equals_gemm_rows_bit_exactly() {
+        let (m, k, n) = (5, 48, NC + 3);
+        let mut rng = Rng::new(29);
+        let codes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let wv = rand_vec(&mut rng, k * n, 0.05);
+        let w = Tensor::new(vec![k, n], wv).unwrap();
+        let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax)).unwrap();
+        let bias: Vec<f32> = rand_vec(&mut rng, n, 0.1);
+        let a = QView { data: &codes, scale: 0.017, zero_point: 113 };
+        let mut batched = vec![0.0f32; m * n];
+        gemm_q8(a, m, &wq, Some(&bias), &mut batched);
+        let mut row_out = vec![0.0f32; n];
+        for i in 0..m {
+            let row = QView { data: &codes[i * k..(i + 1) * k], ..a };
+            gemv_q8(row, &wq, Some(&bias), &mut row_out);
+            assert_eq!(&batched[i * n..(i + 1) * n], &row_out[..], "row {i}");
+        }
+    }
+
+    /// The pre-summed strided u8×u8 GEMV (decode's attention products
+    /// over the KV cache) is bit-identical to the dense [`gemm_q8q8`] on
+    /// the packed equivalent, across stride > k and boundary shapes.
+    #[test]
+    fn gemv_q8q8_presummed_equals_dense_bit_exactly() {
+        check(
+            "gemv_q8q8_presummed_eq_dense",
+            |rng| {
+                let n = 1 + rng.below(9) as usize;
+                let k = 1 + rng.below(24) as usize;
+                let stride = k + rng.below(8) as usize;
+                let a: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+                let b: Vec<u8> = (0..n * stride).map(|_| rng.below(256) as u8).collect();
+                (n, k, stride, a, b, rng.below(256) as i32, rng.below(256) as i32)
+            },
+            |&(n, k, stride, ref ad, ref bd, za, zb)| {
+                let a = QView { data: ad, scale: 0.019, zero_point: za };
+                let bt = QView { data: bd, scale: 0.011, zero_point: zb };
+                let col_sums: Vec<i32> = (0..n)
+                    .map(|j| bd[j * stride..j * stride + k].iter().map(|&v| v as i32).sum())
+                    .collect();
+                let mut strided = vec![0.0f32; n];
+                gemv_q8q8_presummed(a, bt, stride, &col_sums, n, k, &mut strided);
+                // Densely pack the same rows and run the reference GEMM.
+                let packed: Vec<u8> =
+                    (0..n).flat_map(|j| bd[j * stride..j * stride + k].to_vec()).collect();
+                let bp = QView { data: &packed, scale: 0.011, zero_point: zb };
+                let mut sums = vec![0i32; 1 + n];
+                let mut dense = vec![0.0f32; n];
+                gemm_q8q8(a, bp, 1, n, k, &mut sums, &mut dense);
+                if strided != dense {
+                    return Err(format!("presummed {strided:?} != dense {dense:?}"));
                 }
                 Ok(())
             },

@@ -38,7 +38,10 @@
 //!   set that splits a dispatch's GEMM rows across cores.
 //! * [`model`]     — [`model::Int8Weights`] (immutable, `Arc`-shared
 //!   across serve workers) + [`model::Int8Model`] (per-worker scratch
-//!   arena; zero-allocation steady-state `score`).
+//!   arena; zero-allocation steady-state `score`), plus the incremental
+//!   decode path: [`model::KvCache`] (per-session K/V codes on the
+//!   calibrated grids), `prefill` and `decode_step` — bit-exact against
+//!   the full-sequence forward, zero-allocation per token.
 //! * [`engine`]    — [`engine::NativeInt8Engine`]: artifact + checkpoint
 //!   loading, PJRT-shared calibration, `ScoreEngine` impl.
 //! * [`reference`] — f32 fake-quant oracle used by the artifact-free
@@ -53,4 +56,4 @@ pub mod reference;
 pub mod simd;
 
 pub use engine::NativeInt8Engine;
-pub use model::{Int8Model, Int8Weights, ModelOptions, Scratch};
+pub use model::{Int8Model, Int8Weights, KvCache, ModelOptions, Scratch};

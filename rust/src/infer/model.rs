@@ -51,7 +51,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::infer::gemm::{gemm_f32, gemm_f32q8, gemm_q8, gemm_q8q8, Int8Weight, QView};
+use crate::infer::gemm::{
+    gemm_f32, gemm_f32q8, gemm_q8, gemm_q8q8, gemv_q8, gemv_q8q8_presummed, Int8Weight, QView,
+};
 use crate::infer::math::{
     gelu_tanh, layernorm_rows, score_rows_into, sigmoid, softmax_stretch_clip, NEG_INF,
 };
@@ -485,6 +487,182 @@ impl Scratch {
     }
 }
 
+/// Per-session KV cache for incremental decode: every layer's K and V
+/// activations stored as the `u8` codes the forward would have produced on
+/// the layer's calibrated `k`/`v` grids. K lives in the head-major
+/// `(h, cap, dh)` layout of the forward's split-heads scratch (the shape
+/// `q·Kᵀ` wants); V is kept **pre-transposed** per head, `(h, dh, cap)`,
+/// so the decode step's `p·V` reads its strided GEMV operand straight from
+/// the cache — one transpose per session at prefill/store instead of
+/// re-transposing the whole prefix every token. Capacity is the model's
+/// `seq_len` (the position-embedding table bounds it anyway), so one cache
+/// serves one generation session — `qtx serve` pins one to each batcher
+/// slot (slot = session).
+///
+/// Storing *codes* rather than f32 is what keeps decode on the integer
+/// path: attention over the cache runs the same `u8×u8 → i32` kernels as
+/// the full forward, so a decode step is bit-exact against re-scoring the
+/// whole prefix (see [`Int8Model::decode_step`]).
+pub struct KvCache {
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    cap: usize,
+    /// Positions filled so far; the next token lands at index `len`.
+    len: usize,
+    /// Per layer, `(h, cap, dh)` K codes on the layer's `k` grid.
+    k: Vec<Vec<u8>>,
+    /// Per layer, `(h, dh, cap)` pre-transposed V codes on the `v` grid.
+    v: Vec<Vec<u8>>,
+    /// Per layer, `(h, cap)` per-position key-code sums (Σ over `dh`) —
+    /// the zero-point-correction operand of `q·Kᵀ`, maintained as codes
+    /// are stored so a decode step never re-sums the frozen prefix.
+    k_sums: Vec<Vec<i32>>,
+    /// Per layer, `(h, dh)` running V-code sums over the live prefix
+    /// (positions `0..len`) — the correction operand of `p·V`.
+    v_sums: Vec<Vec<i32>>,
+}
+
+impl KvCache {
+    /// Allocate an empty cache sized for `w`'s config (capacity `seq_len`).
+    pub fn for_weights(w: &Int8Weights) -> KvCache {
+        let cfg = &w.cfg;
+        let (h, cap) = (cfg.n_heads, cfg.seq_len);
+        let dh = cfg.d_model / h;
+        KvCache {
+            n_layers: cfg.n_layers,
+            n_heads: h,
+            head_dim: dh,
+            cap,
+            len: 0,
+            k: (0..cfg.n_layers).map(|_| vec![0u8; h * cap * dh]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0u8; h * cap * dh]).collect(),
+            k_sums: (0..cfg.n_layers).map(|_| vec![0i32; h * cap]).collect(),
+            v_sums: (0..cfg.n_layers).map(|_| vec![0i32; h * dh]).collect(),
+        }
+    }
+
+    /// Forget the session (buffers stay allocated — a freed serve slot
+    /// reuses the cache for its next session without reallocating). The
+    /// running V sums restart at zero with the empty prefix.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        for vs in &mut self.v_sums {
+            vs.fill(0);
+        }
+    }
+
+    /// Positions filled so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions (the model's `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Resident bytes of the cached codes plus their maintained sums.
+    pub fn bytes(&self) -> usize {
+        let i = std::mem::size_of::<i32>();
+        self.k.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>()
+            + self.k_sums.iter().map(Vec::len).sum::<usize>() * i
+            + self.v_sums.iter().map(Vec::len).sum::<usize>() * i
+    }
+
+    /// What one session cache for `w`'s config occupies, computed
+    /// arithmetically — lets `qtx serve` report `engine.mem`'s worst-case
+    /// KV footprint without allocating a throwaway cache. Kept in
+    /// lock-step with [`KvCache::bytes`] by test.
+    pub fn bytes_for(w: &Int8Weights) -> usize {
+        let cfg = &w.cfg;
+        let (t, d, h) = (cfg.seq_len, cfg.d_model, cfg.n_heads);
+        // 2 (K+V) code planes + the i32 correction sums (per-position K
+        // sums and per-channel running V sums).
+        cfg.n_layers * (2 * t * d + (h * t + d) * std::mem::size_of::<i32>())
+    }
+
+    /// Prefill: copy a whole layer's split-heads K/V code buffers
+    /// (`(h, t, dh)` with `t == cap`) in one shot — V is transposed and
+    /// the per-position K sums computed here, once per session.
+    fn store_layer(&mut self, li: usize, kh: &[u8], vh: &[u8]) {
+        self.k[li].copy_from_slice(kh);
+        let (h, dh, cap) = (self.n_heads, self.head_dim, self.cap);
+        debug_assert_eq!(vh.len(), h * cap * dh);
+        for (ks, row) in self.k_sums[li].iter_mut().zip(kh.chunks_exact(dh)) {
+            *ks = row.iter().map(|&c| c as i32).sum();
+        }
+        let vt = &mut self.v[li];
+        for hi in 0..h {
+            for si in 0..cap {
+                for di in 0..dh {
+                    vt[(hi * dh + di) * cap + si] = vh[(hi * cap + si) * dh + di];
+                }
+            }
+        }
+    }
+
+    /// Set the live prefix length after a prefill capture and compute the
+    /// running V sums over it (the K sums were stored per position).
+    fn set_prefix(&mut self, l: usize) {
+        self.len = l;
+        let (h, dh, cap) = (self.n_heads, self.head_dim, self.cap);
+        for li in 0..self.n_layers {
+            for (c, vs) in self.v[li].chunks_exact(cap).zip(self.v_sums[li].iter_mut()) {
+                *vs = c[..l].iter().map(|&v| v as i32).sum();
+            }
+            debug_assert_eq!(self.v_sums[li].len(), h * dh);
+        }
+    }
+
+    /// Decode: scatter one token's `(h·dh)` K/V code rows to position
+    /// `pos`, extending the correction sums incrementally.
+    fn store_token(&mut self, li: usize, pos: usize, k_row: &[u8], v_row: &[u8]) {
+        let (dh, cap) = (self.head_dim, self.cap);
+        for hi in 0..self.n_heads {
+            let head = &k_row[hi * dh..(hi + 1) * dh];
+            let dst = hi * cap * dh + pos * dh;
+            self.k[li][dst..dst + dh].copy_from_slice(head);
+            self.k_sums[li][hi * cap + pos] = head.iter().map(|&c| c as i32).sum();
+            for di in 0..dh {
+                let code = v_row[hi * dh + di];
+                self.v[li][(hi * dh + di) * cap + pos] = code;
+                self.v_sums[li][hi * dh + di] += code as i32;
+            }
+        }
+    }
+
+    /// The first `n` cached key rows of head `hi` in layer `li`
+    /// (`n · dh` contiguous codes — the GEMM's transposed-operand shape).
+    fn head_k(&self, li: usize, hi: usize, n: usize) -> &[u8] {
+        let base = hi * self.cap * self.head_dim;
+        &self.k[li][base..base + n * self.head_dim]
+    }
+
+    /// Head `hi`'s pre-transposed V block in layer `li`: `(dh, cap)` with
+    /// row stride `cap`, of which the first `len` columns are live — the
+    /// strided-GEMV operand ([`crate::infer::gemm::gemv_q8q8_presummed`]).
+    fn head_v_t(&self, li: usize, hi: usize) -> &[u8] {
+        let base = hi * self.head_dim * self.cap;
+        &self.v[li][base..base + self.head_dim * self.cap]
+    }
+
+    /// The first `n` cached key-code sums of head `hi` in layer `li`.
+    fn head_k_sums(&self, li: usize, hi: usize, n: usize) -> &[i32] {
+        &self.k_sums[li][hi * self.cap..hi * self.cap + n]
+    }
+
+    /// Head `hi`'s running V-code sums over the live prefix (`dh` values).
+    fn head_v_sums(&self, li: usize, hi: usize) -> &[i32] {
+        &self.v_sums[li][hi * self.head_dim..(hi + 1) * self.head_dim]
+    }
+}
+
 /// One worker's executable model: a shared [`Int8Weights`] handle plus
 /// private [`Scratch`] and an optional row-parallel pool.
 pub struct Int8Model {
@@ -592,6 +770,46 @@ impl Int8Model {
         mask: &Tensor,
         out: &mut Vec<ScoreRow>,
     ) -> Result<()> {
+        let v = self.weights.cfg.vocab_size;
+        for &tg in targets.data() {
+            if tg < 0 || tg as usize >= v {
+                bail!("target id {tg} outside vocab {v}");
+            }
+        }
+        let (b, t) = self.forward_inner(x, None)?;
+        score_rows_into(
+            &self.scratch.logits[..b * t * v],
+            targets.data(),
+            mask.data(),
+            b,
+            t,
+            v,
+            out,
+        );
+        Ok(())
+    }
+
+    /// Copy the full `(b·t, vocab)` logit matrix of a forward pass into
+    /// `out` — the re-score oracle of the decode parity contract
+    /// ([`Int8Model::decode_step`] must match this bit-for-bit at every
+    /// position of a causal model).
+    pub fn forward_logits(&mut self, x: &IntTensor, out: &mut Vec<f32>) -> Result<()> {
+        let (b, t) = self.forward_inner(x, None)?;
+        let v = self.weights.cfg.vocab_size;
+        out.clear();
+        out.extend_from_slice(&self.scratch.logits[..b * t * v]);
+        Ok(())
+    }
+
+    /// The shared forward pass (embeddings → blocks → head), leaving the
+    /// `(b·t, vocab)` logits in scratch. With `capture` set (single-row
+    /// batch), every layer's split-heads K/V code buffers are copied into
+    /// the cache — the batch half of [`Int8Model::prefill`].
+    fn forward_inner(
+        &mut self,
+        x: &IntTensor,
+        mut capture: Option<&mut KvCache>,
+    ) -> Result<(usize, usize)> {
         let Int8Model { weights, scratch, pool } = self;
         let w: &Int8Weights = weights;
         let pool = pool.as_ref();
@@ -605,17 +823,15 @@ impl Int8Model {
                 cfg.name
             );
         }
+        if capture.is_some() && b != 1 {
+            bail!("KV capture needs a single-row batch, got {b}");
+        }
         let (d, nh, v) = (cfg.d_model, cfg.n_heads, cfg.vocab_size);
         let dh = d / nh;
         let m = b * t;
         let ff = w.ff_dim();
         let pre_ln = !is_post_ln(cfg);
         let opts = &w.opts;
-        for &tg in targets.data() {
-            if tg < 0 || tg as usize >= v {
-                bail!("target id {tg} outside vocab {v}");
-            }
-        }
 
         // Slice the arena down to this batch's extent.
         let h_f = &mut scratch.h_f[..m * d];
@@ -672,7 +888,7 @@ impl Int8Model {
         dequant_codes(h_q, &w.embed_qp, h_f);
         let mut h_grid = w.embed_qp;
 
-        for lw in w.layers.iter() {
+        for (li, lw) in w.layers.iter().enumerate() {
             let g = &lw.grids;
 
             // Attention input: post-LN reads the tapped block input
@@ -711,6 +927,10 @@ impl Int8Model {
             split_heads_into(q_u8, qh, b, t, nh, dh);
             split_heads_into(k_u8, kh, b, t, nh, dh);
             split_heads_into(v_u8, vh, b, t, nh, dh);
+            if let Some(cache) = capture.as_deref_mut() {
+                // b == 1: kh/vh are exactly the cache's (h, cap, dh) layout.
+                cache.store_layer(li, kh, vh);
+            }
 
             if let Some(gs) = &lw.gate {
                 gs.logits_into(xin_f, b, t, nh, dh, glog);
@@ -842,12 +1062,357 @@ impl Int8Model {
             dequant_codes(h_q, &fq, h_f);
         }
 
-        // ---- head (unquantized f32 GEMM) + per-row scoring ----
+        // ---- head (unquantized f32 GEMM) ----
         let h_ro: &[f32] = h_f;
         par_rows(pool, m, v, MIN_PAR_ROWS, logits, |r0, r1, rows| {
             gemm_f32(&h_ro[r0 * d..r1 * d], &w.head_wt, Some(&w.head_b), r1 - r0, v, d, rows);
         });
-        score_rows_into(logits, targets.data(), mask.data(), b, t, v, out);
+        Ok((b, t))
+    }
+
+    /// Decode is defined only where attention over a growing prefix equals
+    /// attention over the padded full sequence: causal masking, and a
+    /// clipped-softmax stretch with `γ ≤ 0` (with `γ > 0` eq. 4 leaves
+    /// masked positions probability `γ`, so even the full forward attends
+    /// forward and no KV cache can reproduce it).
+    fn check_decode_supported(&self) -> Result<()> {
+        let w = &self.weights;
+        if !w.cfg.causal {
+            bail!(
+                "KV-cache decode needs a causal model (config {} is bidirectional)",
+                w.cfg.name
+            );
+        }
+        if w.opts.gamma > 0.0 {
+            bail!(
+                "KV-cache decode needs clipped-softmax γ ≤ 0 (got {}): a positive stretch \
+                 floor leaks probability onto masked positions",
+                w.opts.gamma
+            );
+        }
+        Ok(())
+    }
+
+    /// Fill `cache` from `prompt` with one batched forward pass and write
+    /// the logits of the prompt's last position (the next-token
+    /// distribution) into `logits` (length `vocab_size`).
+    ///
+    /// The cache ends holding `prompt.len()` positions; continue with
+    /// [`Int8Model::decode_step`]. Bit-exactness: the cached codes and the
+    /// returned logits are identical to what a full re-score of the prompt
+    /// produces, because they *are* one (padding positions beyond the
+    /// prompt cannot reach earlier rows under the causal mask).
+    pub fn prefill(
+        &mut self,
+        cache: &mut KvCache,
+        prompt: &[i32],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.check_decode_supported()?;
+        self.check_cache(cache)?;
+        let cfg = &self.weights.cfg;
+        let (t, v) = (cfg.seq_len, cfg.vocab_size);
+        if prompt.is_empty() || prompt.len() > t {
+            bail!("prompt of {} tokens (want 1..={t})", prompt.len());
+        }
+        if logits.len() != v {
+            bail!("logits buffer of {} (want vocab {v})", logits.len());
+        }
+        cache.reset();
+        let l = prompt.len();
+        let mut padded = vec![0i32; t];
+        padded[..l].copy_from_slice(prompt);
+        let x = IntTensor::new(vec![1, t], padded)?;
+        self.forward_inner(&x, Some(cache))?;
+        cache.set_prefix(l);
+        logits.copy_from_slice(&self.scratch.logits[(l - 1) * v..l * v]);
+        Ok(())
+    }
+
+    /// Run one token through the model with attention over `cache`
+    /// (appending the token's K/V at position `cache.len()`), writing the
+    /// next-token logits into `logits`. Everything is `m = 1`: projections
+    /// and FFN matmuls are [`gemv_q8`] dots, attention is a 1×len `u8×u8`
+    /// GEMM over the cached codes — per-token cost O(len) instead of the
+    /// O(len²) full re-score.
+    ///
+    /// **Bit-exactness contract** (pinned by the parity tests below): the
+    /// logits equal the full-sequence [`Int8Model::forward_logits`] row at
+    /// this position exactly (`==`, not a tolerance). Integer kernels are
+    /// exact, the f32 glue runs the same per-row operations in the same
+    /// order, and masked attention columns contribute exactly zero to both
+    /// the i32 accumulators and the f32 softmax sums.
+    ///
+    /// Steady-state contract: performs **zero heap allocations** — all
+    /// buffers come from [`Scratch`] and the caller's cache/logits
+    /// (asserted under the `alloc-counter` feature).
+    pub fn decode_step(
+        &mut self,
+        cache: &mut KvCache,
+        token: i32,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        #[cfg(feature = "alloc-counter")]
+        let allocs0 = crate::util::alloc::allocations();
+        self.decode_step_inner(cache, token, logits)?;
+        #[cfg(feature = "alloc-counter")]
+        debug_assert_eq!(
+            crate::util::alloc::allocations(),
+            allocs0,
+            "decode_step allocated on the dispatch thread"
+        );
+        Ok(())
+    }
+
+    /// `cache` must have been sized for this model's config.
+    fn check_cache(&self, cache: &KvCache) -> Result<()> {
+        let cfg = &self.weights.cfg;
+        if cache.n_layers != cfg.n_layers
+            || cache.n_heads != cfg.n_heads
+            || cache.head_dim != cfg.d_model / cfg.n_heads
+            || cache.cap != cfg.seq_len
+        {
+            bail!("KV cache shape does not match config {}", cfg.name);
+        }
+        Ok(())
+    }
+
+    fn decode_step_inner(
+        &mut self,
+        cache: &mut KvCache,
+        token: i32,
+        logits_out: &mut [f32],
+    ) -> Result<()> {
+        self.check_decode_supported()?;
+        self.check_cache(cache)?;
+        let Int8Model { weights, scratch, .. } = self;
+        let w: &Int8Weights = weights;
+        let cfg = &w.cfg;
+        let (d, nh, v) = (cfg.d_model, cfg.n_heads, cfg.vocab_size);
+        let dh = d / nh;
+        let ff = w.ff_dim();
+        let pre_ln = !is_post_ln(cfg);
+        let opts = &w.opts;
+        let pos = cache.len;
+        if pos >= cache.cap {
+            bail!("KV cache full ({pos}/{} positions)", cache.cap);
+        }
+        if token < 0 || token as usize >= v {
+            bail!("token id {token} outside vocab {v}");
+        }
+        if logits_out.len() != v {
+            bail!("logits buffer of {} (want vocab {v})", logits_out.len());
+        }
+        let tok = token as usize;
+        let n_keys = pos + 1;
+
+        // Single-row slices of the shared scratch arena (m = 1).
+        let h_f = &mut scratch.h_f[..d];
+        let ln_f = &mut scratch.ln_f[..d];
+        let proj_f = &mut scratch.proj_f[..d];
+        let attn_f = &mut scratch.attn_f[..d];
+        let res_f = &mut scratch.res_f[..d];
+        let base_f = &mut scratch.base_f[..d];
+        let ffn_f = &mut scratch.ffn_f[..ff];
+        let glog = &mut scratch.glog[..nh];
+        let scores = &mut scratch.scores[..n_keys];
+        let ctx_f = &mut scratch.ctx_f[..dh];
+        let h_q = &mut scratch.h_q[..d];
+        let q_u8 = &mut scratch.q_u8[..d];
+        let k_u8 = &mut scratch.k_u8[..d];
+        let v_u8 = &mut scratch.v_u8[..d];
+        let merged = &mut scratch.merged[..d];
+        let attn_u8 = &mut scratch.attn_u8[..d];
+        let res1_u8 = &mut scratch.res1_u8[..d];
+        let fin_u8 = &mut scratch.fin_u8[..d];
+        let res2_u8 = &mut scratch.res2_u8[..d];
+        let ffn_u8 = &mut scratch.ffn_u8[..ff];
+        let probs_u8 = &mut scratch.probs_u8[..n_keys];
+
+        // ---- embed the one token at its position ----
+        {
+            let te = &w.tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &w.pos_emb.data[pos * d..(pos + 1) * d];
+            for ((o, &tw), &pw) in proj_f.iter_mut().zip(te).zip(pe) {
+                *o = w.tok_emb.scale * tw as f32 + w.pos_emb.scale * pw as f32;
+            }
+        }
+        if let Some((g, bb)) = &w.emb_ln {
+            layernorm_rows(proj_f, g, bb, ln_f);
+            quantize_codes(ln_f, &w.embed_qp, h_q);
+        } else {
+            quantize_codes(proj_f, &w.embed_qp, h_q);
+        }
+        dequant_codes(h_q, &w.embed_qp, h_f);
+        let mut h_grid = w.embed_qp;
+
+        let inv_sqrt = 1.0 / (dh as f32).sqrt();
+        for (li, lw) in w.layers.iter().enumerate() {
+            let g = &lw.grids;
+            let xin_f: &[f32] = if pre_ln {
+                layernorm_rows(h_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                ln_f
+            } else {
+                h_f
+            };
+            let xin_q: Option<QView<'_>> = if pre_ln {
+                None
+            } else {
+                Some(QView {
+                    data: h_q,
+                    scale: h_grid.scale,
+                    zero_point: h_grid.zero_point as i32,
+                })
+            };
+            {
+                let mut proj = |wm: &Int8Weight, bias: &[f32], codes: &mut [u8], qp: &QParams| {
+                    match xin_q {
+                        Some(q) => gemv_q8(q, wm, Some(bias), proj_f),
+                        None => gemm_f32q8(xin_f, 1, wm, Some(bias), proj_f),
+                    }
+                    quantize_codes(proj_f, qp, codes);
+                };
+                proj(&lw.wq, &lw.bq, q_u8, &g.q);
+                proj(&lw.wk, &lw.bk, k_u8, &g.k);
+                proj(&lw.wv, &lw.bv, v_u8, &g.v);
+            }
+            cache.store_token(li, pos, k_u8, v_u8);
+
+            if let Some(gs) = &lw.gate {
+                gs.logits_into(xin_f, 1, 1, nh, dh, glog);
+            }
+
+            // Attention over the cache: q·Kᵀ (1×n_keys u8×u8 GEMM), clipped
+            // softmax over the prefix (no mask needed — every cached key is
+            // a past position), requantized probs, then p·V as a strided
+            // GEMV over the cache's pre-transposed V.
+            for hi in 0..nh {
+                let qv = QView {
+                    data: &q_u8[hi * dh..(hi + 1) * dh],
+                    scale: g.q.scale,
+                    zero_point: g.q.zero_point as i32,
+                };
+                let kv = QView {
+                    data: cache.head_k(li, hi, n_keys),
+                    scale: g.k.scale,
+                    zero_point: g.k.zero_point as i32,
+                };
+                // Both attention products use the cache's maintained code
+                // sums for their zero-point corrections: a token step sums
+                // only its own fresh row (q, then probs), never the
+                // frozen prefix.
+                gemv_q8q8_presummed(
+                    qv,
+                    kv,
+                    dh,
+                    cache.head_k_sums(li, hi, n_keys),
+                    n_keys,
+                    dh,
+                    scores,
+                );
+                for sv in scores.iter_mut() {
+                    *sv *= inv_sqrt;
+                }
+                softmax_stretch_clip(scores, opts.gamma, opts.zeta);
+                quantize_codes(scores, &g.probs, probs_u8);
+
+                // p·V straight off the cache's pre-transposed V block —
+                // no per-token transpose of the prefix.
+                let pv = QView {
+                    data: probs_u8,
+                    scale: g.probs.scale,
+                    zero_point: g.probs.zero_point as i32,
+                };
+                let vv = QView {
+                    data: cache.head_v_t(li, hi),
+                    scale: g.v.scale,
+                    zero_point: g.v.zero_point as i32,
+                };
+                gemv_q8q8_presummed(
+                    pv,
+                    vv,
+                    cache.cap,
+                    cache.head_v_sums(li, hi),
+                    dh,
+                    n_keys,
+                    ctx_f,
+                );
+                if cfg.use_gate {
+                    let gp = sigmoid(glog[hi]);
+                    for o in ctx_f.iter_mut() {
+                        *o = opts.gate_scale * (gp * *o);
+                    }
+                }
+                // Merging one position's heads is just writing each head's
+                // codes at its `hi·dh` offset.
+                quantize_codes(ctx_f, &g.ctx, &mut merged[hi * dh..(hi + 1) * dh]);
+            }
+
+            let ctx_view = QView {
+                data: merged,
+                scale: g.ctx.scale,
+                zero_point: g.ctx.zero_point as i32,
+            };
+            gemv_q8(ctx_view, &lw.wo, Some(&lw.bo), attn_f);
+            quantize_codes(attn_f, &g.attn_out, attn_u8);
+
+            add_dequant(h_f, attn_u8, &g.attn_out, res_f);
+            quantize_codes(res_f, &g.res1, res1_u8);
+            dequant_codes(res1_u8, &g.res1, res_f);
+
+            if pre_ln {
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                quantize_codes(ln_f, &g.fin, fin_u8);
+                base_f.copy_from_slice(res_f);
+            } else {
+                layernorm_rows(res_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                quantize_codes(ln_f, &g.fin, fin_u8);
+                dequant_codes(fin_u8, &g.fin, base_f);
+            }
+
+            let fin_view = QView {
+                data: fin_u8,
+                scale: g.fin.scale,
+                zero_point: g.fin.zero_point as i32,
+            };
+            gemv_q8(fin_view, &lw.w1, Some(&lw.b1), ffn_f);
+            for vv2 in ffn_f.iter_mut() {
+                *vv2 = gelu_tanh(*vv2);
+            }
+            quantize_codes(ffn_f, &g.ffn_h, ffn_u8);
+            let ffn_view = QView {
+                data: ffn_u8,
+                scale: g.ffn_h.scale,
+                zero_point: g.ffn_h.zero_point as i32,
+            };
+            gemv_q8(ffn_view, &lw.w2, Some(&lw.b2), proj_f);
+            quantize_codes(proj_f, &g.ffn_out, attn_u8); // attn_u8 is free here
+
+            add_dequant(base_f, attn_u8, &g.ffn_out, res_f);
+            quantize_codes(res_f, &g.res2, res2_u8);
+            if pre_ln {
+                h_q.copy_from_slice(res2_u8);
+                h_grid = g.res2;
+                dequant_codes(h_q, &h_grid, h_f);
+            } else {
+                dequant_codes(res2_u8, &g.res2, res_f);
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                let pg = g.post_ln2.expect("post-LN layer has an ln2_out grid");
+                quantize_codes(ln_f, &pg, h_q);
+                h_grid = pg;
+                dequant_codes(h_q, &h_grid, h_f);
+            }
+        }
+
+        if let Some((g, bb)) = &w.final_ln {
+            layernorm_rows(h_f, g, bb, ln_f);
+            let fq = w.final_qp.expect("pre-LN model has a final_out grid");
+            quantize_codes(ln_f, &fq, h_q);
+            dequant_codes(h_q, &fq, h_f);
+        }
+
+        gemm_f32(h_f, &w.head_wt, Some(&w.head_b), 1, v, d, logits_out);
+        cache.len = pos + 1;
         Ok(())
     }
 }
@@ -1066,6 +1631,18 @@ pub(crate) mod tests_support {
     pub(crate) fn tiny_weights() -> Arc<Int8Weights> {
         let cfg = test_cfg("bert", "softmax");
         let params = test_params(&cfg, 3);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        Arc::new(
+            Int8Weights::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap(),
+        )
+    }
+
+    /// A causal (OPT-style) sibling of [`tiny_weights`] for decode tests
+    /// across modules (the serve engine's generate-path tests use it).
+    pub(crate) fn tiny_causal_weights() -> Arc<Int8Weights> {
+        let cfg = test_cfg("opt", "softmax");
+        let params = test_params(&cfg, 5);
         let points = test_quant_points(&cfg);
         let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
         Arc::new(
@@ -1348,6 +1925,160 @@ mod tests {
         // Repeat dispatches stay deterministic through the scratch arena.
         let c = parallel.forward(&x, &targets, &mask).unwrap();
         assert_eq!(a, c);
+    }
+
+    // -- KV-cache decode ----------------------------------------------------
+
+    /// Decode-vs-rescore parity: starting from a length-1 prefill, every
+    /// `decode_step` must reproduce the full-sequence forward's logit row
+    /// at its position **bit-exactly** (`==` on every f32 — the integer
+    /// kernels are exact and the f32 glue runs identically); and a longer
+    /// prefill must land on the same trajectory.
+    fn run_decode_parity(cfg: &ConfigInfo, gamma: f32, zeta: f32, gate_scale: f32) {
+        let (params, points, qps, _) = calibrated_setup(cfg, gamma, zeta, gate_scale);
+        let opts = ModelOptions { gamma, zeta, gate_scale, w_est: EstimatorKind::MinMax };
+        let mut model = Int8Model::build(cfg, &params, &points, &qps, opts).unwrap();
+        let (t, v) = (cfg.seq_len, cfg.vocab_size);
+        let mut rng = Rng::new(99);
+        let tokens: Vec<i32> = (0..t).map(|_| rng.below(v as u32) as i32).collect();
+        let x = IntTensor::new(vec![1, t], tokens.clone()).unwrap();
+        let mut full = Vec::new();
+        model.forward_logits(&x, &mut full).unwrap();
+
+        let mut cache = KvCache::for_weights(model.weights());
+        let mut step = vec![0.0f32; v];
+        model.prefill(&mut cache, &tokens[..1], &mut step).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(step[..], full[..v], "position 0 (prefill len 1)");
+        for p in 1..t {
+            model.decode_step(&mut cache, tokens[p], &mut step).unwrap();
+            assert_eq!(step[..], full[p * v..(p + 1) * v], "position {p}");
+        }
+        assert_eq!(cache.len(), t);
+        // Cache full: one more step must fail, not corrupt.
+        assert!(model.decode_step(&mut cache, 0, &mut step).is_err());
+
+        // A batched prefill over half the sequence joins the same
+        // trajectory (prefill IS the full forward, so codes agree).
+        let l = t / 2;
+        model.prefill(&mut cache, &tokens[..l], &mut step).unwrap();
+        assert_eq!(step[..], full[(l - 1) * v..l * v], "prefill len {l}");
+        for p in l..t {
+            model.decode_step(&mut cache, tokens[p], &mut step).unwrap();
+            assert_eq!(step[..], full[p * v..(p + 1) * v], "position {p} after prefill {l}");
+        }
+    }
+
+    /// BERT-style block layout (post-LN, embedding LayerNorm) driven
+    /// causally — the decode axis is the LN layout, not the family name.
+    fn causal_bert_cfg(attention: &str) -> ConfigInfo {
+        let mut cfg = test_cfg("bert", attention);
+        cfg.causal = true;
+        cfg.objective = "clm".into();
+        cfg
+    }
+
+    #[test]
+    fn decode_parity_opt_vanilla_softmax() {
+        run_decode_parity(&test_cfg("opt", "softmax"), 0.0, 1.0, 1.0);
+    }
+
+    #[test]
+    fn decode_parity_opt_clipped_softmax() {
+        run_decode_parity(&test_cfg("opt", "softmax"), -0.08, 1.05, 1.0);
+    }
+
+    #[test]
+    fn decode_parity_opt_gated_linear_with_gate_scale() {
+        run_decode_parity(&test_cfg("opt", "gated_linear"), 0.0, 1.0, 2.0);
+    }
+
+    #[test]
+    fn decode_parity_opt_gated_allheads() {
+        run_decode_parity(&test_cfg("opt", "gated_allheads"), 0.0, 1.0, 1.0);
+    }
+
+    #[test]
+    fn decode_parity_postln_bert_clipped_softmax() {
+        run_decode_parity(&causal_bert_cfg("softmax"), -0.05, 1.02, 1.0);
+    }
+
+    #[test]
+    fn decode_parity_postln_bert_gated_mlp() {
+        run_decode_parity(&causal_bert_cfg("gated_mlp"), -0.03, 1.0, 1.0);
+    }
+
+    #[test]
+    fn decode_rejects_non_causal_and_positive_gamma() {
+        // Bidirectional model: no decode.
+        let cfg = test_cfg("bert", "softmax");
+        let params = test_params(&cfg, 1);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        let mut model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let mut cache = KvCache::for_weights(model.weights());
+        let mut logits = vec![0.0f32; cfg.vocab_size];
+        assert!(model.prefill(&mut cache, &[1, 2], &mut logits).is_err());
+
+        // Causal but γ > 0: the full forward leaks probability onto masked
+        // positions, so decode refuses rather than silently diverging.
+        let cfg = test_cfg("opt", "softmax");
+        let params = test_params(&cfg, 1);
+        let points = test_quant_points(&cfg);
+        let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
+        let opts = ModelOptions { gamma: 0.1, ..ModelOptions::default() };
+        let mut model = Int8Model::build(&cfg, &params, &points, &qps, opts).unwrap();
+        let mut cache = KvCache::for_weights(model.weights());
+        assert!(model.prefill(&mut cache, &[1, 2], &mut logits).is_err());
+        assert!(model.decode_step(&mut cache, 1, &mut logits).is_err());
+    }
+
+    #[test]
+    fn kv_cache_reset_reuses_buffers() {
+        let weights = tiny_causal_weights();
+        let mut cache = KvCache::for_weights(&weights);
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), weights.cfg.seq_len);
+        // 2 layers × (2 (K+V) code planes + i32 correction sums); the
+        // arithmetic size (what `qtx serve` reports) matches the real
+        // cache.
+        let (t, d, h) = (weights.cfg.seq_len, weights.cfg.d_model, weights.cfg.n_heads);
+        assert_eq!(cache.bytes(), 2 * (2 * t * d + 4 * (h * t + d)));
+        assert_eq!(KvCache::bytes_for(&weights), cache.bytes());
+        let mut model = Int8Model::from_weights(weights);
+        let mut logits = vec![0.0f32; model.cfg().vocab_size];
+        model.prefill(&mut cache, &[1, 2, 3], &mut logits).unwrap();
+        assert_eq!(cache.len(), 3);
+        let bytes = cache.bytes();
+        cache.reset();
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), bytes, "reset keeps the allocation");
+    }
+
+    /// The decode zero-allocation claim, measured: every steady-state
+    /// `decode_step` (the per-token serving hot path) performs no heap
+    /// allocation on the dispatch thread.
+    #[cfg(feature = "alloc-counter")]
+    #[test]
+    fn steady_state_decode_step_is_allocation_free() {
+        let cfg = test_cfg("opt", "softmax");
+        let (params, points, qps, _) = calibrated_setup(&cfg, 0.0, 1.0, 1.0);
+        let mut model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let mut cache = KvCache::for_weights(model.weights());
+        let mut logits = vec![0.0f32; cfg.vocab_size];
+        model.prefill(&mut cache, &[1, 2], &mut logits).unwrap();
+        model.decode_step(&mut cache, 3, &mut logits).unwrap(); // warm-up
+        let before = crate::util::alloc::allocations();
+        for tok in [4, 5, 6] {
+            model.decode_step(&mut cache, tok, &mut logits).unwrap();
+        }
+        assert_eq!(
+            crate::util::alloc::allocations(),
+            before,
+            "steady-state decode_step allocated on the dispatch thread"
+        );
     }
 
     /// Scratch sizing matches what the arena actually holds.

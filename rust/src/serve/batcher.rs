@@ -20,8 +20,16 @@
 //! ```text
 //! free ──claim (submit / queue drain)──> claimed ──next_batch──> in_flight
 //!   ▲                                                                │
-//!   └──────────── release ◄── completing ◄──────── complete ◄────────┘
+//!   ├──────────── release ◄── completing ◄──────── complete ◄────────┤
+//!   └── finish_generating ◄── generating ◄──── mark_generating ◄─────┘
 //! ```
+//!
+//! The `generating` branch is the KV-cache decode lifecycle (slot =
+//! session): a generation request's slot is pinned via `mark_generating`
+//! when its session prefills, survives every subsequent dispatch (each one
+//! advances the session a token), and only `finish_generating` returns it
+//! to admission. Workers with live sessions poll `try_next_batch` between
+//! token steps instead of blocking in `next_batch`.
 //!
 //! An optional `admit_window` tops up partially-filled launches: a worker
 //! that frees with `0 < claimed < slots_per_worker` waits up to the window
@@ -233,6 +241,10 @@ pub enum SlotState {
     InFlight,
     /// Invocation done; row result still being read out / replied.
     Completing,
+    /// Pinned to a live generation session (slot = session): the slot
+    /// stays owned across dispatches until [`SlotPool::finish_generating`]
+    /// releases it — the KV-cache decode lifecycle.
+    Generating,
     /// Owning worker died at startup ([`SlotPool::retire`]); never claimed.
     Retired,
 }
@@ -245,6 +257,8 @@ pub struct SlotOccupancy {
     pub claimed: usize,
     pub in_flight: usize,
     pub completing: usize,
+    /// Slots pinned to live generation sessions (slot = session).
+    pub generating: usize,
     /// Slots of retired (startup-failed) workers — permanently out of play.
     pub retired: usize,
 }
@@ -348,10 +362,16 @@ impl<T> SlotPool<T> {
         let mut best: Option<(bool, usize)> = None; // (busy, worker)
         for w in 0..self.cfg.workers {
             let base = w * spw;
-            if !inner.slots[base..base + spw].contains(&SlotState::Free) {
+            let slots = &inner.slots[base..base + spw];
+            if !slots.contains(&SlotState::Free) {
                 continue;
             }
-            let busy = !inner.in_flight[w].is_empty() || !inner.completing[w].is_empty();
+            // A worker decoding sessions dispatches a new claim only on its
+            // next token-step poll — count it busy so claims prefer truly
+            // idle workers (which launch immediately).
+            let busy = !inner.in_flight[w].is_empty()
+                || !inner.completing[w].is_empty()
+                || slots.contains(&SlotState::Generating);
             let better = match best {
                 None => true,
                 Some(b) => (busy, w) < b,
@@ -434,6 +454,7 @@ impl<T> SlotPool<T> {
             claimed: 0,
             in_flight: 0,
             completing: 0,
+            generating: 0,
             retired: 0,
         };
         for s in &inner.slots {
@@ -442,6 +463,7 @@ impl<T> SlotPool<T> {
                 SlotState::Claimed => occ.claimed += 1,
                 SlotState::InFlight => occ.in_flight += 1,
                 SlotState::Completing => occ.completing += 1,
+                SlotState::Generating => occ.generating += 1,
                 SlotState::Retired => occ.retired += 1,
             }
         }
@@ -498,20 +520,67 @@ impl<T> SlotPool<T> {
                 if !self.cfg.admit_window.is_zero() && inner.claimed[worker].len() < spw {
                     inner = self.top_up(inner, worker);
                 }
-                let assignments: Vec<SlotAssignment<T>> =
-                    inner.claimed[worker].drain(..).collect();
-                for a in &assignments {
-                    debug_assert_eq!(inner.slots[a.slot], SlotState::Claimed);
-                    inner.slots[a.slot] = SlotState::InFlight;
-                    inner.in_flight[worker].push(a.slot);
-                }
-                return Some(BatchView { worker, assignments });
+                return Some(self.take_claimed(&mut inner, worker));
             }
             if inner.closed && inner.queue.is_empty() {
                 return None;
             }
             inner = self.notify.wait(inner).unwrap();
         }
+    }
+
+    /// Non-blocking [`SlotPool::next_batch`]: hand over whatever this
+    /// worker has claimed right now, or `None`. This is how a worker with
+    /// live generation sessions polls for new admissions between token
+    /// steps without stalling its sessions (no admit-window top-up here —
+    /// holding a launch open would add latency to every active session).
+    pub fn try_next_batch(&self, worker: usize) -> Option<BatchView<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if self.drain_queue(&mut inner) {
+            self.notify.notify_all();
+        }
+        if inner.claimed[worker].is_empty() {
+            return None;
+        }
+        Some(self.take_claimed(&mut inner, worker))
+    }
+
+    /// Move the worker's claimed queue into a dispatch view, marking the
+    /// slots in-flight.
+    fn take_claimed(&self, inner: &mut SlotInner<T>, worker: usize) -> BatchView<T> {
+        let assignments: Vec<SlotAssignment<T>> = inner.claimed[worker].drain(..).collect();
+        for a in &assignments {
+            debug_assert_eq!(inner.slots[a.slot], SlotState::Claimed);
+            inner.slots[a.slot] = SlotState::InFlight;
+            inner.in_flight[worker].push(a.slot);
+        }
+        BatchView { worker, assignments }
+    }
+
+    /// Pin a just-dispatched slot to a generation session: in-flight →
+    /// generating. The slot leaves the worker's in-flight set, so the
+    /// surrounding dispatch's [`SlotPool::complete`]/[`SlotPool::release`]
+    /// no longer touch it — it stays owned until
+    /// [`SlotPool::finish_generating`].
+    pub fn mark_generating(&self, worker: usize, slot: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert_eq!(inner.slots[slot], SlotState::InFlight);
+        debug_assert_eq!(slot / self.cfg.slots_per_worker, worker);
+        inner.slots[slot] = SlotState::Generating;
+        inner.in_flight[worker].retain(|&s| s != slot);
+    }
+
+    /// A generation session ended (finished or errored): free its slot and
+    /// admit waiting requests immediately — the freed slot re-enters the
+    /// FIFO admission flow exactly like a released scoring slot.
+    pub fn finish_generating(&self, worker: usize, slot: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert_eq!(inner.slots[slot], SlotState::Generating);
+        debug_assert_eq!(slot / self.cfg.slots_per_worker, worker);
+        inner.slots[slot] = SlotState::Free;
+        self.drain_queue(&mut inner);
+        drop(inner);
+        self.notify.notify_all();
     }
 
     /// Hold a partially-filled launch open for up to `admit_window`.
@@ -1005,6 +1074,146 @@ mod tests {
         pool.submit(9).unwrap(); // 2 live slots claimed -> third queues
         assert_eq!(pool.depth(), 1);
         assert_eq!(pool.next_batch(1).unwrap().assignments.len(), 2);
+    }
+
+    /// The slot = session lifecycle: a generating slot survives its
+    /// dispatch's complete/release, is invisible to new admissions, and
+    /// re-enters the FIFO admission flow on finish.
+    #[test]
+    fn slot_generating_survives_dispatch_and_releases_to_fifo() {
+        let pool: SlotPool<usize> = SlotPool::new(slot_cfg(1, 2, 8));
+        pool.submit(0).unwrap(); // the generation request
+        pool.submit(1).unwrap(); // a scoring request in the same dispatch
+        let view = pool.next_batch(0).unwrap();
+        assert_eq!(view.assignments.len(), 2);
+        let gen_slot = view.assignments[0].slot;
+
+        // Prefill done: pin the first slot to its session.
+        pool.mark_generating(0, gen_slot);
+        assert_eq!(pool.occupancy().generating, 1);
+
+        // The dispatch completes and releases — only the scoring slot
+        // frees; the session keeps its slot.
+        pool.complete(0);
+        pool.release(0);
+        let occ = pool.occupancy();
+        assert_eq!((occ.generating, occ.free), (1, 1), "{occ:?}");
+
+        // Admissions fill the free slot, then queue — never the session's.
+        pool.submit(2).unwrap();
+        pool.submit(3).unwrap();
+        pool.submit(4).unwrap();
+        assert_eq!(pool.occupancy().claimed, 1);
+        assert_eq!(pool.depth(), 2);
+        let view = pool.try_next_batch(0).unwrap();
+        assert_eq!(view.assignments.len(), 1);
+        assert_ne!(view.assignments[0].slot, gen_slot, "session never loses its slot");
+        pool.complete(0);
+        pool.release(0); // frees the scoring slot; admits 3, leaves 4 queued
+        assert_eq!(pool.depth(), 1);
+
+        // Session ends: the slot frees and the queue's front request is
+        // admitted into it immediately — FIFO, same as any released slot.
+        pool.finish_generating(0, gen_slot);
+        let occ = pool.occupancy();
+        assert_eq!(occ.generating, 0);
+        assert_eq!(occ.claimed, 2);
+        assert_eq!(pool.depth(), 0);
+        let view = pool.try_next_batch(0).unwrap();
+        assert_eq!(
+            view.assignments.iter().map(|a| a.queued.item).collect::<Vec<_>>(),
+            vec![3, 4],
+            "admission order stays FIFO across the session's release"
+        );
+        pool.complete(0);
+        pool.release(0);
+        assert_eq!(pool.occupancy().free, 2);
+    }
+
+    /// try_next_batch never blocks and never hands out an empty view.
+    #[test]
+    fn slot_try_next_batch_is_nonblocking() {
+        let pool: SlotPool<usize> = SlotPool::new(slot_cfg(2, 2, 4));
+        assert!(pool.try_next_batch(0).is_none());
+        pool.submit(5).unwrap(); // claims on idle worker 0
+        assert!(pool.try_next_batch(1).is_none(), "claim went to worker 0");
+        let view = pool.try_next_batch(0).unwrap();
+        assert_eq!(view.assignments[0].queued.item, 5);
+        pool.complete(0);
+        pool.release(0);
+    }
+
+    /// Property: under random interleavings of sessions starting/finishing
+    /// and scoring traffic, a generating slot is never handed out to
+    /// another request mid-session, nothing is lost, and every slot ends
+    /// free.
+    #[test]
+    fn prop_generating_slot_never_reallocated() {
+        crate::util::proptest::check(
+            "slot_generating_never_reallocated",
+            |rng| {
+                let spw = 2 + rng.below(4) as usize;
+                let n_gen = 1 + rng.below(spw as u32 - 1) as usize;
+                let n_score = rng.below(30) as usize;
+                (spw, n_gen, n_score)
+            },
+            |&(spw, n_gen, n_score)| {
+                let pool: SlotPool<usize> = SlotPool::new(slot_cfg(1, spw, 64));
+                // Start n_gen sessions (ids 1000+i).
+                let mut gen_slots = Vec::new();
+                for i in 0..n_gen {
+                    pool.submit(1000 + i).map_err(|_| "gen submit rejected".to_string())?;
+                }
+                let view = pool.next_batch(0).ok_or("no view")?;
+                for a in view.assignments {
+                    gen_slots.push(a.slot);
+                    pool.mark_generating(0, a.slot);
+                }
+                pool.complete(0);
+                pool.release(0);
+
+                // Scoring traffic drains through the remaining slots; no
+                // view may ever contain a session's slot.
+                let mut seen = Vec::new();
+                for i in 0..n_score {
+                    pool.submit(i).map_err(|_| "score submit rejected".to_string())?;
+                    if let Some(view) = pool.try_next_batch(0) {
+                        for a in &view.assignments {
+                            if gen_slots.contains(&a.slot) {
+                                return Err(format!(
+                                    "slot {} handed out mid-session",
+                                    a.slot
+                                ));
+                            }
+                            seen.push(a.queued.item);
+                        }
+                        pool.complete(0);
+                        pool.release(0);
+                    }
+                }
+                // Finish the sessions; drain the remainder.
+                for &s in &gen_slots {
+                    pool.finish_generating(0, s);
+                }
+                pool.close();
+                while let Some(view) = pool.next_batch(0) {
+                    seen.extend(view.assignments.iter().map(|a| a.queued.item));
+                    pool.complete(0);
+                    pool.release(0);
+                }
+                seen.sort_unstable();
+                let mut want: Vec<usize> = (0..n_score).collect();
+                want.sort_unstable();
+                if seen != want {
+                    return Err(format!("scoring items lost or duplicated: {seen:?}"));
+                }
+                let occ = pool.occupancy();
+                if occ.free != occ.total {
+                    return Err(format!("slots leaked: {occ:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

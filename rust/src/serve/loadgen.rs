@@ -26,10 +26,20 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::serve::protocol::{ScoreRequest, ScoreResponse};
+use crate::serve::protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse};
 use crate::serve::server::Client;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Generation-mode parameters (`qtx loadgen --generate`): drive
+/// `POST /v1/generate` instead of `/v1/score`, in either loop shape.
+#[derive(Debug, Clone, Copy)]
+pub struct GenLoad {
+    /// New tokens per session (each request pins a slot this long).
+    pub max_new_tokens: usize,
+    /// Exact prompt length; 0 = random in `[1, seq_len - max_new_tokens]`.
+    pub prompt_len: usize,
+}
 
 #[derive(Debug, Clone)]
 pub struct LoadgenConfig {
@@ -51,6 +61,9 @@ pub struct LoadgenConfig {
     /// `Some(rate)`: open-loop mode, Poisson arrivals at `rate` req/s
     /// across the whole pool. `None`: closed loop.
     pub open_rate_rps: Option<f64>,
+    /// `Some`: drive `/v1/generate` (decode sessions) instead of
+    /// `/v1/score`, in either loop shape.
+    pub gen: Option<GenLoad>,
 }
 
 impl Default for LoadgenConfig {
@@ -64,6 +77,7 @@ impl Default for LoadgenConfig {
             seed: 0,
             timeout: Duration::from_secs(30),
             open_rate_rps: None,
+            gen: None,
         }
     }
 }
@@ -95,6 +109,11 @@ pub struct LoadgenReport {
     /// (pool saturation indicator; latency already includes this). 0 when
     /// closed loop.
     pub lag_p95_ms: f64,
+    /// Generate mode: total tokens received across all 200 responses
+    /// (0 in score mode).
+    pub gen_tokens_total: u64,
+    /// Generate mode: tokens per second, wall-clock (0 in score mode).
+    pub gen_tokens_per_s: f64,
 }
 
 impl LoadgenReport {
@@ -116,6 +135,8 @@ impl LoadgenReport {
             ("queue_p95_ms", Json::Num(self.queue_p95_ms)),
             ("queue_p99_ms", Json::Num(self.queue_p99_ms)),
             ("lag_p95_ms", Json::Num(self.lag_p95_ms)),
+            ("gen_tokens_total", Json::Num(self.gen_tokens_total as f64)),
+            ("gen_tokens_per_s", Json::Num(self.gen_tokens_per_s)),
         ])
     }
 }
@@ -155,9 +176,11 @@ pub fn probe(addr: &str, timeout: Duration) -> Result<ServerLimits> {
 struct Sample {
     lat_ms: f32,
     queue_ms: f32,
+    /// Generate mode: tokens received (0 in score mode).
+    tokens: u32,
 }
 
-/// Deterministic synthetic request for schedule position `i`.
+/// Deterministic synthetic scoring request for schedule position `i`.
 fn synth_request(seed: u64, label: &str, i: usize, seq_len: usize, vocab: u32) -> ScoreRequest {
     let mut rng = Rng::new(seed).fork(&format!("{label}-{i}"));
     let len = 2 + rng.below(seq_len as u32 - 1) as usize;
@@ -168,29 +191,78 @@ fn synth_request(seed: u64, label: &str, i: usize, seq_len: usize, vocab: u32) -
     }
 }
 
+/// Deterministic synthetic generation request for schedule position `i`:
+/// prompt + continuation always fit the model's KV-cache capacity.
+fn synth_generate(
+    seed: u64,
+    label: &str,
+    i: usize,
+    seq_len: usize,
+    vocab: u32,
+    gen: GenLoad,
+) -> GenerateRequest {
+    let mut rng = Rng::new(seed).fork(&format!("{label}-{i}"));
+    let max_prompt = seq_len.saturating_sub(gen.max_new_tokens).max(1);
+    let len = if gen.prompt_len > 0 {
+        gen.prompt_len.min(max_prompt)
+    } else {
+        1 + rng.below(max_prompt as u32) as usize
+    };
+    GenerateRequest {
+        id: Some(format!("{label}-{i}")),
+        tokens: (0..len).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: gen.max_new_tokens,
+    }
+}
+
+/// Path + request body for schedule position `i` under the configured
+/// mode.
+fn synth_body(
+    seed: u64,
+    label: &str,
+    i: usize,
+    seq_len: usize,
+    vocab: u32,
+    gen: Option<GenLoad>,
+) -> (&'static str, Json) {
+    match gen {
+        Some(g) => ("/v1/generate", synth_generate(seed, label, i, seq_len, vocab, g).to_json()),
+        None => ("/v1/score", synth_request(seed, label, i, seq_len, vocab).to_json()),
+    }
+}
+
 /// Send one request on `client`, reconnecting once on transport errors.
 /// Returns the sample on 200, `None` on any error (counted by the caller).
-fn send_scored(
+/// The response type follows from the path, so the two cannot disagree.
+fn send_one(
     client: &mut Option<Client>,
     addr: &str,
     timeout: Duration,
-    req: &ScoreRequest,
+    path: &str,
+    body: &Json,
     sent: Instant,
 ) -> Option<Sample> {
     if client.is_none() {
         *client = Client::connect(addr, timeout).ok();
     }
     let c = client.as_mut()?;
-    match c.request("POST", "/v1/score", Some(&req.to_json())) {
+    match c.request("POST", path, Some(body)) {
         Ok((200, body)) => {
             // An unparseable 200 body is an error, not a 0 ms queue wait —
             // silent zeros would skew the very percentiles the batching
             // policies are compared on.
-            let resp = ScoreResponse::parse(&body).ok()?;
-            Some(Sample {
-                lat_ms: sent.elapsed().as_secs_f64() as f32 * 1000.0,
-                queue_ms: resp.queue_ms as f32,
-            })
+            let lat_ms = sent.elapsed().as_secs_f64() as f32 * 1000.0;
+            if path == "/v1/generate" {
+                let resp = GenerateResponse::parse(&body).ok()?;
+                Some(Sample {
+                    lat_ms,
+                    queue_ms: resp.queue_ms as f32,
+                    tokens: resp.tokens.len() as u32,
+                })
+            } else {
+                let resp = ScoreResponse::parse(&body).ok()?;
+                Some(Sample { lat_ms, queue_ms: resp.queue_ms as f32, tokens: 0 })
+            }
         }
         Ok((_status, _body)) => None,
         Err(_) => {
@@ -212,7 +284,17 @@ fn resolve_limits(cfg: &LoadgenConfig) -> Result<(usize, u32)> {
             if cfg.vocab > 0 { cfg.vocab } else { limits.vocab },
         )
     };
-    Ok((seq_len.max(2), vocab.clamp(2, i32::MAX as usize) as u32))
+    let seq_len = seq_len.max(2);
+    if let Some(g) = cfg.gen {
+        anyhow::ensure!(
+            g.max_new_tokens >= 1 && g.max_new_tokens < seq_len,
+            "--max-new-tokens {} must be in [1, seq_len {} - 1] (prompt + continuation \
+             share the KV cache)",
+            g.max_new_tokens,
+            seq_len
+        );
+    }
+    Ok((seq_len, vocab.clamp(2, i32::MAX as usize) as u32))
 }
 
 /// Run the configured loop; blocks until every request resolved.
@@ -233,6 +315,7 @@ fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let timeout = cfg.timeout;
         let n = cfg.requests_per_client;
         let seed = cfg.seed;
+        let gen = cfg.gen;
         let errors = errors.clone();
         handles.push(std::thread::spawn(move || -> Vec<Sample> {
             let mut samples = Vec::with_capacity(n);
@@ -243,8 +326,8 @@ fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             }
             let label = format!("c{client_id}");
             for i in 0..n {
-                let req = synth_request(seed, &label, i, seq_len, vocab);
-                match send_scored(&mut client, &addr, timeout, &req, Instant::now()) {
+                let (path, body) = synth_body(seed, &label, i, seq_len, vocab, gen);
+                match send_one(&mut client, &addr, timeout, path, &body, Instant::now()) {
                     Some(s) => samples.push(s),
                     None => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -310,6 +393,7 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
         let addr = cfg.addr.clone();
         let timeout = cfg.timeout;
         let seed = cfg.seed;
+        let gen = cfg.gen;
         let errors = errors.clone();
         let next = next.clone();
         let sched = sched.clone();
@@ -328,10 +412,10 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
                     std::thread::sleep(due - now);
                 }
                 lags.push(due.elapsed().as_secs_f64() as f32 * 1000.0);
-                let req = synth_request(seed, "o", i, seq_len, vocab);
+                let (path, body) = synth_body(seed, "o", i, seq_len, vocab, gen);
                 // Latency clock starts at the *scheduled* arrival: sender
                 // lag and server time both count (open-loop semantics).
-                match send_scored(&mut client, &addr, timeout, &req, due) {
+                match send_one(&mut client, &addr, timeout, path, &body, due) {
                     Some(s) => samples.push(s),
                     None => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -388,6 +472,7 @@ fn build_report(
     let (p50, p95, p99) = pcts(&mut lat);
     let (q50, q95, q99) = pcts(&mut queue);
     let (_, lag95, _) = pcts(&mut lags);
+    let gen_tokens_total: u64 = samples.iter().map(|s| u64::from(s.tokens)).sum();
     LoadgenReport {
         mode,
         offered_rps,
@@ -405,12 +490,14 @@ fn build_report(
         queue_p95_ms: q95,
         queue_p99_ms: q99,
         lag_p95_ms: lag95,
+        gen_tokens_total,
+        gen_tokens_per_s: if elapsed_s > 0.0 { gen_tokens_total as f64 / elapsed_s } else { 0.0 },
     }
 }
 
 /// Render the human-readable report table.
 pub fn render_report(r: &LoadgenReport) -> String {
-    crate::metrics::table::render(
+    let mut out = crate::metrics::table::render(
         &[
             "mode", "clients", "ok", "errors", "req/s", "p50 ms", "p95 ms", "p99 ms", "q p95 ms",
         ],
@@ -429,7 +516,14 @@ pub fn render_report(r: &LoadgenReport) -> String {
             format!("{:.2}", r.p99_ms),
             format!("{:.2}", r.queue_p95_ms),
         ]],
-    )
+    );
+    if r.gen_tokens_total > 0 {
+        out.push_str(&format!(
+            "\ndecode: {} tokens generated, {:.1} tok/s",
+            r.gen_tokens_total, r.gen_tokens_per_s
+        ));
+    }
+    out
 }
 
 #[cfg(test)]
@@ -455,14 +549,36 @@ mod tests {
             queue_p95_ms: 0.9,
             queue_p99_ms: 1.1,
             lag_p95_ms: 0.1,
+            gen_tokens_total: 72,
+            gen_tokens_per_s: 48.0,
         };
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.req("ok").unwrap().as_usize(), Some(9));
         assert_eq!(j.req("mode").unwrap().as_str(), Some("open"));
         assert_eq!(j.req("offered_rps").unwrap().as_usize(), Some(500));
+        assert_eq!(j.req("gen_tokens_total").unwrap().as_usize(), Some(72));
         assert!(j.req("queue_p95_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(render_report(&r).contains("req/s"));
         assert!(render_report(&r).contains("open@500rps"));
+        assert!(render_report(&r).contains("48.0 tok/s"));
+    }
+
+    #[test]
+    fn synth_generate_fits_cache_and_is_deterministic() {
+        let g = GenLoad { max_new_tokens: 8, prompt_len: 0 };
+        for i in 0..20 {
+            let r = synth_generate(7, "o", i, 32, 100, g);
+            assert!(!r.tokens.is_empty());
+            assert!(r.tokens.len() + r.max_new_tokens <= 32, "{}", r.tokens.len());
+            assert_eq!(r, synth_generate(7, "o", i, 32, 100, g));
+        }
+        // Exact prompt length is honored (and clamped to fit the cache).
+        let fixed =
+            synth_generate(7, "o", 0, 32, 100, GenLoad { max_new_tokens: 8, prompt_len: 12 });
+        assert_eq!(fixed.tokens.len(), 12);
+        let clamped =
+            synth_generate(7, "o", 0, 32, 100, GenLoad { max_new_tokens: 30, prompt_len: 12 });
+        assert_eq!(clamped.tokens.len(), 2);
     }
 
     #[test]

@@ -33,9 +33,12 @@
 //!   admitted the moment a slot frees and rides the owning worker's next
 //!   dispatch — no flush deadline, work-conserving by default; a nonzero
 //!   `--admit-window-us` tops up partially-filled launches at sustained
-//!   over-saturation. Slots are also the unit later work shards on:
-//!   KV-cache decode pins a session to a slot, multi-engine sharding
-//!   routes slot ranges.
+//!   over-saturation. Slots are also the unit generation shards on:
+//!   `POST /v1/generate` pins a session to a slot (slot = session) whose
+//!   KV cache lives on the native engine; every worker loop pass advances
+//!   each live session one greedily-decoded token, interleaved with
+//!   scoring dispatches (see [`batcher`]'s `Generating` lifecycle).
+//!   Multi-engine sharding (slot ranges) remains open.
 //!
 //! Observability (`GET /statz`): `batch_policy`, `queue.depth`,
 //! `queue.wait` (submit → batch launch) and `queue.admission` (submit →
@@ -72,6 +75,6 @@ pub use batcher::{
 pub use engine::{
     Dispatch, EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
-pub use protocol::{ScoreRequest, ScoreResponse, ScoreRow};
+pub use protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse, ScoreRow};
 pub use server::{EngineInfo, Server, ServerConfig};
 pub use stats::ServeStats;

@@ -20,6 +20,11 @@
 //! {"id":"req-7","nll":12.3,"count":15,"ppl":2.27,"correct":4,
 //!  "queue_ms":1.4,"batch_size":8}
 //! ```
+//!
+//! `POST /v1/generate` ([`GenerateRequest`]/[`GenerateResponse`]) carries
+//! the KV-cache decode sessions: a prompt plus `max_new_tokens`, answered
+//! with the greedy continuation and per-phase (queue/prefill/decode)
+//! timings. See `docs/API.md` for the full contract.
 
 use anyhow::{bail, Result};
 
@@ -144,6 +149,118 @@ impl ScoreResponse {
     }
 }
 
+/// One generation request (`POST /v1/generate`): greedy-decode
+/// `max_new_tokens` continuations of `tokens`, pinned to one batcher slot
+/// for the session's lifetime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateRequest {
+    pub id: Option<String>,
+    /// Prompt token ids (≥ 1; `len + max_new_tokens` ≤ the model's
+    /// `seq_len`, the KV-cache capacity).
+    pub tokens: Vec<i32>,
+    /// New tokens to generate (greedy argmax; default 16).
+    pub max_new_tokens: usize,
+}
+
+impl GenerateRequest {
+    pub const DEFAULT_MAX_NEW_TOKENS: usize = 16;
+
+    pub fn from_json(j: &Json) -> Result<GenerateRequest> {
+        let id = match j.get("id") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("\"id\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let tokens = i32_vec(j.req("tokens")?).map_err(|e| anyhow::anyhow!("\"tokens\": {e}"))?;
+        let max_new_tokens = match j.get("max_new_tokens") {
+            None | Some(Json::Null) => Self::DEFAULT_MAX_NEW_TOKENS,
+            Some(v) => {
+                let n = v
+                    .as_i64()
+                    .filter(|&n| n >= 0)
+                    .ok_or_else(|| anyhow::anyhow!("\"max_new_tokens\" must be >= 0"))?;
+                n as usize
+            }
+        };
+        Ok(GenerateRequest { id, tokens, max_new_tokens })
+    }
+
+    pub fn parse(text: &str) -> Result<GenerateRequest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        GenerateRequest::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push((
+            "tokens".into(),
+            Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+        kv.push(("max_new_tokens".into(), Json::Num(self.max_new_tokens as f64)));
+        Json::Obj(kv)
+    }
+}
+
+/// Full response for one generation session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateResponse {
+    pub id: Option<String>,
+    /// The generated continuation (`max_new_tokens` ids; the prompt is not
+    /// echoed back).
+    pub tokens: Vec<i32>,
+    /// Prompt length the session was prefilled from.
+    pub prompt_len: usize,
+    /// Time the request waited for a slot before its session started.
+    pub queue_ms: f64,
+    /// Prompt prefill time (one batched forward).
+    pub prefill_ms: f64,
+    /// Total incremental-decode time across the generated tokens.
+    pub decode_ms: f64,
+}
+
+impl GenerateResponse {
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push((
+            "tokens".into(),
+            Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+        kv.push(("prompt_len".into(), Json::Num(self.prompt_len as f64)));
+        kv.push(("queue_ms".into(), Json::Num(self.queue_ms)));
+        kv.push(("prefill_ms".into(), Json::Num(self.prefill_ms)));
+        kv.push(("decode_ms".into(), Json::Num(self.decode_ms)));
+        Json::Obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Result<GenerateResponse> {
+        let num = |k: &str| -> Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("{k:?} must be a number"))
+        };
+        Ok(GenerateResponse {
+            id: j.get("id").and_then(Json::as_str).map(str::to_string),
+            tokens: i32_vec(j.req("tokens")?)?,
+            prompt_len: num("prompt_len")? as usize,
+            queue_ms: num("queue_ms")?,
+            prefill_ms: num("prefill_ms")?,
+            decode_ms: num("decode_ms")?,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<GenerateResponse> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        GenerateResponse::from_json(&j)
+    }
+}
+
 /// Error body: `{"error": "..."}` (all non-2xx responses use this shape).
 pub fn error_json(msg: &str) -> Json {
     Json::obj(vec![("error", Json::Str(msg.to_string()))])
@@ -240,5 +357,34 @@ mod tests {
     #[test]
     fn error_shape() {
         assert_eq!(error_json("boom").to_string(), r#"{"error":"boom"}"#);
+    }
+
+    #[test]
+    fn generate_request_roundtrip_and_default() {
+        let r = GenerateRequest { id: Some("g1".into()), tokens: vec![3, 1, 4], max_new_tokens: 7 };
+        let back = GenerateRequest::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(r, back);
+        // max_new_tokens defaults when omitted.
+        let d = GenerateRequest::parse(r#"{"tokens":[5,6]}"#).unwrap();
+        assert_eq!(d.max_new_tokens, GenerateRequest::DEFAULT_MAX_NEW_TOKENS);
+        assert!(d.id.is_none());
+        // Bad shapes are rejected.
+        assert!(GenerateRequest::parse(r#"{"tokens":[1],"max_new_tokens":-2}"#).is_err());
+        assert!(GenerateRequest::parse(r#"{"tokens":"x"}"#).is_err());
+        assert!(GenerateRequest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn generate_response_roundtrip() {
+        let r = GenerateResponse {
+            id: None,
+            tokens: vec![9, 8, 7],
+            prompt_len: 4,
+            queue_ms: 0.5,
+            prefill_ms: 1.25,
+            decode_ms: 3.75,
+        };
+        let back = GenerateResponse::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(r, back);
     }
 }

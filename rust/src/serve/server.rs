@@ -5,10 +5,14 @@
 //! Endpoints (written contract: `docs/API.md`):
 //! * `POST /v1/score` — score one token sequence (queued into the dynamic
 //!   batcher; see [`crate::serve::protocol`] for the wire shapes).
+//! * `POST /v1/generate` — greedy generation over the slot-pinned KV-cache
+//!   decode path (continuous policy + a decode-capable engine; 501
+//!   otherwise).
 //! * `GET /healthz`  — liveness + engine description and limits; answers
 //!   503 with the last engine startup error (e.g. the manifest-version
 //!   mismatch message) while no engine worker is serving.
-//! * `GET /statz`    — counters, batch-fill ratio, latency percentiles.
+//! * `GET /statz`    — counters, batch-fill ratio, latency percentiles,
+//!   decode telemetry.
 //!
 //! Threading model: the accept thread spawns one handler thread per
 //! connection (keep-alive connections would head-of-line block a fixed
@@ -26,8 +30,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::serve::batcher::{BatchPolicy, Batcher, BatcherConfig, Rejected, SlotConfig, SlotPool};
-use crate::serve::engine::{spawn_engine_pool, validate_request, Dispatch, EngineFactory, Job};
-use crate::serve::protocol::{error_json, ScoreRequest, ScoreResponse};
+use crate::serve::engine::{
+    spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, Job, JobKind,
+    JobOutcome,
+};
+use crate::serve::protocol::{
+    error_json, GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse,
+};
 use crate::serve::stats::{EngineMem, ServeStats};
 use crate::util::json::Json;
 use crate::util::log;
@@ -52,6 +61,10 @@ pub struct ServerConfig {
     /// Continuous mode: top-up window for partially-filled launches
     /// (0 = strictly work-conserving). Ignored in fixed mode.
     pub admit_window: Duration,
+    /// Socket read timeout per connection: an idle keep-alive connection
+    /// is closed silently after this long; a connection that stalls
+    /// *mid-request* gets a 408 instead (see `handle_connection`).
+    pub read_timeout: Duration,
     /// How long a handler waits for its batch result before answering 504.
     pub request_timeout: Duration,
 }
@@ -66,6 +79,7 @@ impl Default for ServerConfig {
             policy: BatchPolicy::Continuous,
             batcher: BatcherConfig::default(),
             admit_window: Duration::ZERO,
+            read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(30),
         }
     }
@@ -80,6 +94,9 @@ pub struct EngineInfo {
     /// Vocabulary size; token ids outside [0, vocab) are rejected with 400.
     pub vocab: usize,
     pub causal: bool,
+    /// Whether the engine supports slot-pinned incremental decode —
+    /// `/v1/generate` answers 501 when false (the PJRT engine).
+    pub decode: bool,
     pub describe: String,
     /// Engine memory accounting for `/statz`'s `engine.mem` section
     /// (`EngineMem::default()` when unknown — mock/test servers).
@@ -139,6 +156,7 @@ impl Server {
             dispatch: dispatch.clone(),
             stats: stats.clone(),
             info: info.clone(),
+            read_timeout: cfg.read_timeout,
             request_timeout: cfg.request_timeout,
             shutdown: shutdown.clone(),
             engines_ready: engines_ready.clone(),
@@ -262,6 +280,7 @@ struct HandlerCtx {
     dispatch: Arc<Dispatch>,
     stats: Arc<ServeStats>,
     info: EngineInfo,
+    read_timeout: Duration,
     request_timeout: Duration,
     shutdown: Arc<AtomicBool>,
     /// Engine workers that reached their serving loop (`/healthz` turns
@@ -296,19 +315,80 @@ impl HttpMessage {
     }
 }
 
+/// Why [`read_message`] failed — the distinction the connection handler
+/// needs: a timeout on a connection that sent *nothing* of its next
+/// message is a routine keep-alive close, while the same timeout after
+/// part of a message was consumed is a stalled client that deserves a
+/// `408 Request Timeout` (silently dropping it would leave the client
+/// waiting out its own timeout with no diagnosis).
+#[derive(Debug)]
+pub enum ReadError {
+    /// Socket read timeout before any byte of a message arrived.
+    IdleTimeout,
+    /// Socket read timeout after part of a message was consumed.
+    Stalled(std::io::Error),
+    /// Everything else: protocol violations, mid-message EOF, transport
+    /// errors.
+    Bad(anyhow::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::IdleTimeout => write!(f, "idle keep-alive timeout"),
+            ReadError::Stalled(e) => write!(f, "timed out mid-message: {e}"),
+            ReadError::Bad(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+// `Error + Send + Sync` is what lets `?` lift a `ReadError` into the
+// `anyhow::Result` signatures of `Client` (via anyhow's blanket `From`).
+impl std::error::Error for ReadError {}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Classify an io error mid-message: timeouts become [`ReadError::Stalled`]
+/// when any byte of the message was already consumed.
+fn read_err(e: std::io::Error, consumed: bool, what: &str) -> ReadError {
+    if is_timeout(&e) {
+        if consumed {
+            ReadError::Stalled(e)
+        } else {
+            ReadError::IdleTimeout
+        }
+    } else {
+        ReadError::Bad(anyhow::Error::new(e).context(what.to_string()))
+    }
+}
+
 /// Read one HTTP message (head + Content-Length body). `Ok(None)` on clean
-/// EOF before any byte (peer closed a keep-alive connection).
-pub fn read_message(r: &mut BufReader<TcpStream>) -> Result<Option<HttpMessage>> {
+/// EOF before any byte (peer closed a keep-alive connection); errors are
+/// classified by [`ReadError`].
+pub fn read_message(
+    r: &mut BufReader<TcpStream>,
+) -> std::result::Result<Option<HttpMessage>, ReadError> {
+    let bad = |msg: String| ReadError::Bad(anyhow::anyhow!(msg));
     let mut start_line = String::new();
     loop {
         let mut line = Vec::new();
-        let n = r.read_until(b'\n', &mut line)?;
-        if n == 0 {
-            return if start_line.is_empty() {
-                Ok(None)
-            } else {
-                bail!("eof mid-head")
-            };
+        match r.read_until(b'\n', &mut line) {
+            Ok(0) => {
+                return if start_line.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(bad("eof mid-head".into()))
+                };
+            }
+            Ok(_) => {}
+            // Blank-line padding between keep-alive messages does not
+            // count as message progress; a partial start line does.
+            Err(e) => return Err(read_err(e, !line.is_empty(), "reading start line")),
         }
         let text = String::from_utf8_lossy(&line);
         let text = text.trim_end_matches(['\r', '\n']);
@@ -322,13 +402,14 @@ pub fn read_message(r: &mut BufReader<TcpStream>) -> Result<Option<HttpMessage>>
     let mut head_bytes = start_line.len();
     loop {
         let mut line = Vec::new();
-        let n = r.read_until(b'\n', &mut line)?;
-        if n == 0 {
-            bail!("eof in headers");
-        }
+        let n = match r.read_until(b'\n', &mut line) {
+            Ok(0) => return Err(bad("eof in headers".into())),
+            Ok(n) => n,
+            Err(e) => return Err(read_err(e, true, "reading headers")),
+        };
         head_bytes += n;
         if head_bytes > MAX_HEAD_BYTES {
-            bail!("header section exceeds {MAX_HEAD_BYTES} bytes");
+            return Err(bad(format!("header section exceeds {MAX_HEAD_BYTES} bytes")));
         }
         let text = String::from_utf8_lossy(&line);
         let text = text.trim_end_matches(['\r', '\n']);
@@ -342,14 +423,15 @@ pub fn read_message(r: &mut BufReader<TcpStream>) -> Result<Option<HttpMessage>>
     let len: usize = headers
         .iter()
         .find(|(k, _)| k == "content-length")
-        .map(|(_, v)| v.parse().context("bad content-length"))
+        .map(|(_, v)| v.parse::<usize>().map_err(|e| bad(format!("bad content-length: {e}"))))
         .transpose()?
         .unwrap_or(0);
     if len > MAX_BODY_BYTES {
-        bail!("body of {len} bytes exceeds {MAX_BODY_BYTES}");
+        return Err(bad(format!("body of {len} bytes exceeds {MAX_BODY_BYTES}")));
     }
     let mut body = vec![0u8; len];
-    r.read_exact(&mut body).context("reading body")?;
+    r.read_exact(&mut body)
+        .map_err(|e| read_err(e, true, "reading body"))?;
     Ok(Some(HttpMessage { start_line, headers, body }))
 }
 
@@ -395,9 +477,9 @@ pub fn write_json_request(
 
 fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
     stream.set_nodelay(true).ok();
-    // A read timeout bounds half-open connections; generous so a keep-alive
-    // client may idle briefly between requests.
-    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    // A read timeout bounds half-open connections; generous (configurable)
+    // so a keep-alive client may idle briefly between requests.
+    stream.set_read_timeout(Some(ctx.read_timeout)).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     loop {
@@ -407,29 +489,32 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
         let msg = match read_message(&mut reader) {
             Ok(Some(m)) => m,
             Ok(None) => return Ok(()), // clean close
-            Err(e) => {
-                // An idle keep-alive connection hitting the socket read
-                // timeout is a normal close, not a protocol error — writing
-                // 400 here would desynchronize a client that sends its next
-                // request around the same moment.
-                let idle_timeout = e
-                    .downcast_ref::<std::io::Error>()
-                    .map(|io| {
-                        matches!(
-                            io.kind(),
-                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                        )
-                    })
-                    .unwrap_or(false);
-                if !idle_timeout {
-                    let _ = write_json_response(
-                        &mut writer,
-                        400,
-                        "Bad Request",
-                        &error_json(&format!("{e:#}")),
-                        false,
-                    );
-                }
+            // An idle keep-alive connection hitting the socket read timeout
+            // (zero bytes of a next message) is a normal close, not a
+            // protocol error — writing anything would desynchronize a
+            // client that sends its next request around the same moment.
+            Err(ReadError::IdleTimeout) => return Ok(()),
+            // A timeout *mid-message* is a stalled client: tell it what
+            // happened (408) and close, rather than silently dropping a
+            // half-read request.
+            Err(ReadError::Stalled(e)) => {
+                let _ = write_json_response(
+                    &mut writer,
+                    408,
+                    "Request Timeout",
+                    &error_json(&format!("timed out reading request: {e}")),
+                    false,
+                );
+                return Ok(());
+            }
+            Err(ReadError::Bad(e)) => {
+                let _ = write_json_response(
+                    &mut writer,
+                    400,
+                    "Bad Request",
+                    &error_json(&format!("{e:#}")),
+                    false,
+                );
                 return Ok(());
             }
         };
@@ -437,13 +522,19 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
         let method = parts.next().unwrap_or("");
         let path_full = parts.next().unwrap_or("");
         let path = path_full.split('?').next().unwrap_or("");
-        let keep_alive = !msg
-            .header("connection")
-            .unwrap_or("keep-alive")
-            .eq_ignore_ascii_case("close");
+        // Keep-alive default is version-dependent (RFC 9112 §9.3): 1.1
+        // persists unless `Connection: close`; 1.0 closes unless the
+        // client explicitly asked `Connection: keep-alive`.
+        let http10 = parts.next().unwrap_or("HTTP/1.1").eq_ignore_ascii_case("HTTP/1.0");
+        let keep_alive = match msg.header("connection") {
+            Some(v) if http10 => v.eq_ignore_ascii_case("keep-alive"),
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => !http10,
+        };
 
         match (method, path) {
             ("POST", "/v1/score") => handle_score(&mut writer, &msg, ctx, keep_alive)?,
+            ("POST", "/v1/generate") => handle_generate(&mut writer, &msg, ctx, keep_alive)?,
             ("GET", "/healthz") => {
                 let ready = ctx.engines_ready.load(Ordering::SeqCst);
                 let mut doc = vec![
@@ -458,6 +549,7 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                     ("max_batch", Json::Num(ctx.info.max_batch as f64)),
                     ("vocab", Json::Num(ctx.info.vocab as f64)),
                     ("causal", Json::Bool(ctx.info.causal)),
+                    ("decode", Json::Bool(ctx.info.decode)),
                     ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
                 ];
                 if ready > 0 {
@@ -493,7 +585,7 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                 );
                 write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
             }
-            (_, "/v1/score") | (_, "/healthz") | (_, "/statz") => {
+            (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz") => {
                 write_json_response(
                     &mut writer,
                     405,
@@ -539,33 +631,11 @@ fn handle_score(
     };
     let id = req.id.clone();
     let (tx, rx) = mpsc::channel();
-    match ctx.dispatch.submit(Job { req, resp: tx }) {
-        Ok(()) => {}
-        Err(Rejected::Full(_)) => {
-            ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
-            write_json_response(
-                w,
-                503,
-                "Service Unavailable",
-                &error_json("queue full, retry later"),
-                keep_alive,
-            )?;
-            return Ok(());
-        }
-        Err(Rejected::Closed(_)) => {
-            write_json_response(
-                w,
-                503,
-                "Service Unavailable",
-                &error_json("server shutting down"),
-                false,
-            )?;
-            return Ok(());
-        }
+    if !submit_job(w, ctx, Job::score(req, tx), keep_alive)? {
+        return Ok(());
     }
-    ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
     match rx.recv_timeout(ctx.request_timeout) {
-        Ok(Ok(out)) => {
+        Ok(Ok(JobOutcome::Score(out))) => {
             let resp = ScoreResponse {
                 id,
                 row: out.row,
@@ -575,6 +645,63 @@ fn handle_score(
             ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
             ctx.stats.latency.record(t0.elapsed());
             write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
+        }
+        other => reply_non_score(w, ctx, other, keep_alive, "scoring")?,
+    }
+    Ok(())
+}
+
+/// Submit a job, answering 503 on rejection. Returns whether it queued.
+fn submit_job(w: &mut TcpStream, ctx: &HandlerCtx, job: Job, keep_alive: bool) -> Result<bool> {
+    match ctx.dispatch.submit(job) {
+        Ok(()) => {
+            ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+            Ok(true)
+        }
+        Err(Rejected::Full(_)) => {
+            ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
+            write_json_response(
+                w,
+                503,
+                "Service Unavailable",
+                &error_json("queue full, retry later"),
+                keep_alive,
+            )?;
+            Ok(false)
+        }
+        Err(Rejected::Closed(_)) => {
+            write_json_response(
+                w,
+                503,
+                "Service Unavailable",
+                &error_json("server shutting down"),
+                false,
+            )?;
+            Ok(false)
+        }
+    }
+}
+
+/// Shared non-200 tail of the reply wait: engine errors → 500, reply
+/// timeout → 504, and a kind-mismatched outcome → 500 (a bug, not a
+/// client problem).
+fn reply_non_score(
+    w: &mut TcpStream,
+    ctx: &HandlerCtx,
+    outcome: std::result::Result<std::result::Result<JobOutcome, String>, mpsc::RecvTimeoutError>,
+    keep_alive: bool,
+    what: &str,
+) -> Result<()> {
+    match outcome {
+        Ok(Ok(_)) => {
+            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+            write_json_response(
+                w,
+                500,
+                "Internal Server Error",
+                &error_json("engine returned a mismatched outcome kind"),
+                keep_alive,
+            )?;
         }
         Ok(Err(engine_msg)) => {
             ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
@@ -592,10 +719,71 @@ fn handle_score(
                 w,
                 504,
                 "Gateway Timeout",
-                &error_json("scoring timed out"),
+                &error_json(&format!("{what} timed out")),
                 keep_alive,
             )?;
         }
+    }
+    Ok(())
+}
+
+/// `POST /v1/generate`: queue a generation session into the continuous
+/// batcher (slot = session) and answer with the greedy continuation.
+fn handle_generate(
+    w: &mut TcpStream,
+    msg: &HttpMessage,
+    ctx: &HandlerCtx,
+    keep_alive: bool,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let req = match msg
+        .body_str()
+        .and_then(GenerateRequest::parse)
+        .and_then(|r| validate_generate(&r, ctx.info.seq_len, ctx.info.vocab).map(|_| r))
+    {
+        Ok(r) => r,
+        Err(e) => {
+            ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
+            return Ok(());
+        }
+    };
+    if !ctx.info.decode {
+        let why = "this engine does not support generation (use --engine native-int8 or mock)";
+        write_json_response(w, 501, "Not Implemented", &error_json(why), keep_alive)?;
+        return Ok(());
+    }
+    if ctx.dispatch.policy() != BatchPolicy::Continuous {
+        write_json_response(
+            w,
+            501,
+            "Not Implemented",
+            &error_json("generation requires --batch-policy continuous (slot = session)"),
+            keep_alive,
+        )?;
+        return Ok(());
+    }
+    let id = req.id.clone();
+    let prompt_len = req.tokens.len();
+    let (tx, rx) = mpsc::channel();
+    if !submit_job(w, ctx, Job { kind: JobKind::Generate(req), resp: tx }, keep_alive)? {
+        return Ok(());
+    }
+    match rx.recv_timeout(ctx.request_timeout) {
+        Ok(Ok(JobOutcome::Generate(out))) => {
+            let resp = GenerateResponse {
+                id,
+                tokens: out.tokens,
+                prompt_len,
+                queue_ms: out.queue_ms,
+                prefill_ms: out.prefill_ms,
+                decode_ms: out.decode_ms,
+            };
+            ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.latency.record(t0.elapsed());
+            write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
+        }
+        other => reply_non_score(w, ctx, other, keep_alive, "generation")?,
     }
     Ok(())
 }

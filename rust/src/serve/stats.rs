@@ -6,7 +6,7 @@
 //! snapshots, which is all monitoring needs.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::serve::batcher::SlotOccupancy;
@@ -40,17 +40,36 @@ impl Default for LatencyHisto {
     }
 }
 
+/// Integer upper bounds (µs, inclusive) of the geometric buckets: bucket
+/// `i` holds samples in `(bound[i-1], bound[i]]`, the last bucket is
+/// unbounded. Computed once; **attribution is a pure integer comparison**
+/// against this table. The previous implementation recomputed the bucket
+/// index per sample via `ln()` ratios, and samples landing exactly on a
+/// geometric boundary could round into the neighbouring bucket depending
+/// on the platform's libm — a monotonic threshold lookup cannot.
+fn bucket_bounds() -> &'static [u64; BUCKETS] {
+    static BOUNDS: OnceLock<[u64; BUCKETS]> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut t = [0u64; BUCKETS];
+        let mut bound = BASE_US;
+        for b in t.iter_mut().take(BUCKETS - 1) {
+            *b = bound.round() as u64;
+            bound *= RATIO;
+        }
+        t[BUCKETS - 1] = u64::MAX;
+        t
+    })
+}
+
+/// Bucket index for a `us` sample: the first bucket whose (inclusive)
+/// upper bound contains it. Monotone in `us` by construction.
 fn bucket_for(us: u64) -> usize {
-    if (us as f64) < BASE_US {
-        return 0;
-    }
-    let i = ((us as f64) / BASE_US).ln() / RATIO.ln();
-    (i as usize + 1).min(BUCKETS - 1)
+    bucket_bounds().partition_point(|&b| b < us)
 }
 
 /// Upper bound (µs) of bucket `i` (the value reported for quantiles).
 fn bucket_bound_us(i: usize) -> f64 {
-    BASE_US * RATIO.powi(i as i32)
+    bucket_bounds()[i] as f64
 }
 
 impl LatencyHisto {
@@ -76,21 +95,24 @@ impl LatencyHisto {
     }
 
     /// Approximate quantile (q in [0,1]) in milliseconds: the upper bound
-    /// of the bucket holding the q-th sample. Resolution is one RATIO step.
+    /// of the bucket holding the q-th sample, clamped to the observed
+    /// maximum (so `quantile_ms(q) ≤ max_ms` always, and quantiles are
+    /// monotone in `q`). Resolution is one RATIO step.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
+        let max_us = self.max_us.load(Ordering::Relaxed) as f64;
         let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for i in 0..BUCKETS {
             seen += self.counts[i].load(Ordering::Relaxed);
             if seen >= rank {
-                return bucket_bound_us(i) / 1000.0;
+                return bucket_bound_us(i).min(max_us) / 1000.0;
             }
         }
-        self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+        max_us / 1000.0
     }
 
     fn to_json(&self) -> Json {
@@ -123,20 +145,28 @@ pub struct EngineMem {
     pub weight_bytes: usize,
     /// Bytes of one worker's private scratch arena.
     pub scratch_bytes_per_worker: usize,
+    /// Worst-case bytes of one worker's per-slot KV caches (slots × one
+    /// session cache; each slot allocates its cache lazily on its first
+    /// generation session and reuses it). 0 for engines without a decode
+    /// path.
+    pub kv_bytes_per_worker: usize,
     /// Engine workers configured.
     pub workers: usize,
 }
 
 impl EngineMem {
-    /// Estimated resident total: one weight copy + every worker's scratch.
+    /// Estimated resident total: one weight copy + every worker's scratch
+    /// and (fully-warmed) KV caches.
     pub fn resident_bytes(&self) -> usize {
-        self.weight_bytes + self.workers * self.scratch_bytes_per_worker
+        self.weight_bytes
+            + self.workers * (self.scratch_bytes_per_worker + self.kv_bytes_per_worker)
     }
 
     fn to_json(self) -> Json {
         let mem = Json::obj(vec![
             ("weight_bytes", Json::Num(self.weight_bytes as f64)),
             ("scratch_bytes_per_worker", Json::Num(self.scratch_bytes_per_worker as f64)),
+            ("kv_bytes_per_worker", Json::Num(self.kv_bytes_per_worker as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("resident_bytes", Json::Num(self.resident_bytes() as f64)),
         ]);
@@ -179,6 +209,17 @@ pub struct ServeStats {
     pub admission_wait: LatencyHisto,
     /// Engine execution time per batch.
     pub exec: LatencyHisto,
+    /// Generation sessions currently pinned to slots (gauge).
+    pub decode_sessions_active: AtomicU64,
+    /// Generation sessions ever started.
+    pub decode_sessions_total: AtomicU64,
+    /// Tokens generated across all sessions (incl. each session's
+    /// prefill-produced first token).
+    pub decode_tokens_total: AtomicU64,
+    /// Prompt prefill time per session (one batched forward).
+    pub decode_prefill: LatencyHisto,
+    /// Per-token incremental decode-step latency.
+    pub decode_step: LatencyHisto,
 }
 
 impl ServeStats {
@@ -199,7 +240,41 @@ impl ServeStats {
             queue_wait: LatencyHisto::default(),
             admission_wait: LatencyHisto::default(),
             exec: LatencyHisto::default(),
+            decode_sessions_active: AtomicU64::new(0),
+            decode_sessions_total: AtomicU64::new(0),
+            decode_tokens_total: AtomicU64::new(0),
+            decode_prefill: LatencyHisto::default(),
+            decode_step: LatencyHisto::default(),
         }
+    }
+
+    /// A generation session prefed and pinned its slot.
+    pub fn decode_session_started(&self, prefill: Duration) {
+        self.decode_sessions_total.fetch_add(1, Ordering::Relaxed);
+        self.decode_sessions_active.fetch_add(1, Ordering::Relaxed);
+        self.decode_tokens_total.fetch_add(1, Ordering::Relaxed); // prefill's token
+        self.decode_prefill.record(prefill);
+    }
+
+    /// A session finished or errored; its slot went back to admission.
+    pub fn decode_session_finished(&self) {
+        self.decode_sessions_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// One incremental decode step produced one token.
+    pub fn decode_token(&self, step: Duration) {
+        self.decode_tokens_total.fetch_add(1, Ordering::Relaxed);
+        self.decode_step.record(step);
+    }
+
+    /// Lifetime-average generated tokens per second (prefill + decode
+    /// tokens over server uptime; 0 until the first session).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        let up = self.uptime().as_secs_f64();
+        if up <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens_total.load(Ordering::Relaxed) as f64 / up
     }
 
     /// Record an engine-construction failure (called by the worker pool).
@@ -279,6 +354,17 @@ impl ServeStats {
             ),
             ("latency", self.latency.to_json()),
             ("engine", mem.to_json()),
+            (
+                "decode",
+                Json::obj(vec![
+                    ("sessions_active", g(&self.decode_sessions_active)),
+                    ("sessions_total", g(&self.decode_sessions_total)),
+                    ("tokens_total", g(&self.decode_tokens_total)),
+                    ("tokens_per_s", Json::Num(round3(self.decode_tokens_per_s()))),
+                    ("prefill", self.decode_prefill.to_json()),
+                    ("step", self.decode_step.to_json()),
+                ]),
+            ),
         ];
         if let Some(occ) = slots {
             doc.push((
@@ -289,6 +375,7 @@ impl ServeStats {
                     ("claimed", Json::Num(occ.claimed as f64)),
                     ("in_flight", Json::Num(occ.in_flight as f64)),
                     ("completing", Json::Num(occ.completing as f64)),
+                    ("generating", Json::Num(occ.generating as f64)),
                     ("retired", Json::Num(occ.retired as f64)),
                 ]),
             ));
@@ -318,6 +405,83 @@ mod tests {
         }
         assert_eq!(bucket_for(0), 0);
         assert_eq!(bucket_for(u64::MAX), BUCKETS - 1);
+        // The threshold table itself is strictly increasing — the property
+        // that makes partition_point a correct (and monotone) lookup.
+        let bounds = bucket_bounds();
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "{bounds:?}");
+        assert_eq!(bounds[0], BASE_US as u64);
+    }
+
+    /// Boundary attribution: every sample lands in exactly the bucket
+    /// whose (exclusive-low, inclusive-high] bound range contains it —
+    /// including samples exactly on a geometric boundary, which the old
+    /// `ln()`-ratio computation could shift one bucket either way.
+    #[test]
+    fn prop_record_attributes_to_containing_bucket() {
+        crate::util::proptest::check(
+            "histo_bucket_attribution",
+            |rng| {
+                // Mix uniform magnitudes with exact boundary values.
+                let bounds = bucket_bounds();
+                if rng.bernoulli(0.4) {
+                    bounds[rng.below(BUCKETS as u32 - 1) as usize]
+                } else {
+                    let exp = rng.below(30);
+                    u64::from(rng.next_u32()) << exp >> 16
+                }
+            },
+            |&us| {
+                let b = bucket_for(us);
+                let bounds = bucket_bounds();
+                if us > bounds[b] {
+                    return Err(format!("us {us} above bucket {b} bound {}", bounds[b]));
+                }
+                if b > 0 && us <= bounds[b - 1] {
+                    return Err(format!(
+                        "us {us} also fits bucket {} (bound {})",
+                        b - 1,
+                        bounds[b - 1]
+                    ));
+                }
+                // record() must count it in exactly that bucket.
+                let h = LatencyHisto::default();
+                h.record(Duration::from_micros(us));
+                if h.counts[b].load(Ordering::Relaxed) != 1 {
+                    return Err(format!("sample {us} not counted in bucket {b}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Quantiles are monotone and bounded by the observed max:
+    /// `p50 ≤ p95 ≤ max_ms`, for arbitrary sample sets.
+    #[test]
+    fn prop_quantiles_monotone_and_bounded_by_max() {
+        crate::util::proptest::check(
+            "histo_quantile_order",
+            |rng| {
+                let n = 1 + rng.below(200) as usize;
+                (0..n)
+                    .map(|_| u64::from(rng.next_u32()) >> rng.below(20))
+                    .collect::<Vec<u64>>()
+            },
+            |samples| {
+                let h = LatencyHisto::default();
+                for &us in samples {
+                    h.record(Duration::from_micros(us));
+                }
+                let (p50, p95) = (h.quantile_ms(0.50), h.quantile_ms(0.95));
+                let max_ms = *samples.iter().max().unwrap() as f64 / 1000.0;
+                if p50 > p95 {
+                    return Err(format!("p50 {p50} > p95 {p95}"));
+                }
+                if p95 > max_ms {
+                    return Err(format!("p95 {p95} > max {max_ms}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -359,7 +523,12 @@ mod tests {
         s.requests_total.fetch_add(3, Ordering::Relaxed);
         s.latency.record(Duration::from_micros(800));
         s.admission_wait.record(Duration::from_micros(90));
-        let mem = EngineMem { weight_bytes: 1000, scratch_bytes_per_worker: 50, workers: 3 };
+        let mem = EngineMem {
+            weight_bytes: 1000,
+            scratch_bytes_per_worker: 50,
+            kv_bytes_per_worker: 20,
+            workers: 3,
+        };
         let doc = s.snapshot("fixed", 2, None, mem).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("queue").unwrap().req("depth").unwrap().as_usize(), Some(2));
@@ -368,8 +537,8 @@ mod tests {
         assert_eq!(m.req("weight_bytes").unwrap().as_usize(), Some(1000));
         assert_eq!(
             m.req("resident_bytes").unwrap().as_usize(),
-            Some(1150),
-            "resident = weights (shared, once) + workers x scratch"
+            Some(1210),
+            "resident = weights (shared, once) + workers x (scratch + kv caches)"
         );
         assert_eq!(
             parsed.req("queue").unwrap().req("admission").unwrap().req("count").unwrap().as_usize(),
@@ -387,10 +556,11 @@ mod tests {
         let s = ServeStats::new();
         let occ = SlotOccupancy {
             total: 16,
-            free: 9,
+            free: 7,
             claimed: 3,
             in_flight: 4,
             completing: 0,
+            generating: 2,
             retired: 0,
         };
         let doc = s.snapshot("continuous", 0, Some(occ), EngineMem::default()).to_string();
@@ -398,7 +568,27 @@ mod tests {
         assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("continuous"));
         let slots = parsed.req("slots").unwrap();
         assert_eq!(slots.req("total").unwrap().as_usize(), Some(16));
-        assert_eq!(slots.req("free").unwrap().as_usize(), Some(9));
+        assert_eq!(slots.req("free").unwrap().as_usize(), Some(7));
         assert_eq!(slots.req("in_flight").unwrap().as_usize(), Some(4));
+        assert_eq!(slots.req("generating").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn decode_section_tracks_sessions_and_tokens() {
+        let s = ServeStats::new();
+        s.decode_session_started(Duration::from_millis(2));
+        s.decode_token(Duration::from_micros(400));
+        s.decode_token(Duration::from_micros(500));
+        s.decode_session_finished();
+        let doc = s.snapshot("continuous", 0, None, EngineMem::default()).to_string();
+        let d = Json::parse(&doc).unwrap();
+        let d = d.req("decode").unwrap();
+        assert_eq!(d.req("sessions_active").unwrap().as_usize(), Some(0));
+        assert_eq!(d.req("sessions_total").unwrap().as_usize(), Some(1));
+        // 1 prefill token + 2 decode-step tokens.
+        assert_eq!(d.req("tokens_total").unwrap().as_usize(), Some(3));
+        assert!(d.req("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(d.req("step").unwrap().req("count").unwrap().as_usize(), Some(2));
+        assert_eq!(d.req("prefill").unwrap().req("count").unwrap().as_usize(), Some(1));
     }
 }

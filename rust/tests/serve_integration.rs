@@ -4,13 +4,15 @@
 //! artifacts or PJRT runtime. The PJRT engine swaps in behind the same
 //! `ScoreEngine` trait (`qtx serve` without `--mock`).
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::Duration;
 
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
-use qtx::serve::loadgen::{self, LoadgenConfig};
-use qtx::serve::protocol::{ScoreRequest, ScoreResponse};
+use qtx::serve::loadgen::{self, GenLoad, LoadgenConfig};
+use qtx::serve::protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse};
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::serve::stats::EngineMem;
 use qtx::util::json::Json;
@@ -26,12 +28,13 @@ fn mock_factory(cost: Duration) -> EngineFactory {
     })
 }
 
-fn start_server_with(
+fn start_server_timeouts(
     policy: BatchPolicy,
     max_wait_ms: u64,
     queue_cap: usize,
     max_connections: usize,
     cost: Duration,
+    read_timeout: Duration,
 ) -> Server {
     let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
     let cfg = ServerConfig {
@@ -46,6 +49,7 @@ fn start_server_with(
             queue_cap,
         },
         admit_window: Duration::ZERO,
+        read_timeout,
         request_timeout: Duration::from_secs(10),
     };
     let info = EngineInfo {
@@ -53,12 +57,30 @@ fn start_server_with(
         max_batch: MODEL_BATCH,
         vocab: 1024,
         causal: probe.causal,
+        decode: true,
         describe: probe.describe(),
         mem: EngineMem::default(),
     };
     let s = Server::start(cfg, info, mock_factory(cost)).unwrap();
     s.wait_ready(Duration::from_secs(10)).unwrap();
     s
+}
+
+fn start_server_with(
+    policy: BatchPolicy,
+    max_wait_ms: u64,
+    queue_cap: usize,
+    max_connections: usize,
+    cost: Duration,
+) -> Server {
+    start_server_timeouts(
+        policy,
+        max_wait_ms,
+        queue_cap,
+        max_connections,
+        cost,
+        Duration::from_secs(60),
+    )
 }
 
 fn start_server(max_wait_ms: u64, cost: Duration) -> Server {
@@ -141,6 +163,7 @@ fn loadgen_roundtrip_batches_requests() {
         seed: 7,
         timeout: Duration::from_secs(10),
         open_rate_rps: None,
+        gen: None,
     })
     .unwrap();
     assert_eq!(report.ok, 160, "errors: {}", report.errors);
@@ -183,6 +206,7 @@ fn queue_full_returns_503() {
             queue_cap: 1,
         },
         admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
         request_timeout: Duration::from_secs(10),
     };
     let info = EngineInfo {
@@ -190,6 +214,7 @@ fn queue_full_returns_503() {
         max_batch: 1,
         vocab: 1024,
         causal: probe.causal,
+        decode: true,
         describe: probe.describe(),
         mem: EngineMem::default(),
     };
@@ -281,6 +306,202 @@ fn continuous_mode_roundtrip_and_slot_census() {
     server.stop();
 }
 
+/// `POST /v1/generate` end-to-end over the continuous batcher: the served
+/// continuation equals an offline greedy replay on the same (mock)
+/// engine, repeats deterministically, and `/statz` grows a decode section.
+#[test]
+fn generate_roundtrip_matches_offline_decode() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::from_millis(1));
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let req = GenerateRequest { id: Some("g1".into()), tokens: vec![3, 1, 4], max_new_tokens: 5 };
+    let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = GenerateResponse::parse(&body).unwrap();
+    assert_eq!(resp.id.as_deref(), Some("g1"));
+    assert_eq!(resp.tokens.len(), 5);
+    assert_eq!(resp.prompt_len, 3);
+    assert!(resp.prefill_ms >= 0.0 && resp.decode_ms >= 0.0);
+
+    // Offline greedy replay on a fresh engine must agree exactly —
+    // generation is a pure function of the prompt, not of slot/batching.
+    let mut offline = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    offline.step_cost = Duration::ZERO;
+    let mut want = vec![offline.gen_prefill(0, &req.tokens).unwrap()];
+    for _ in 1..5 {
+        let last = *want.last().unwrap();
+        want.push(offline.gen_step(0, last).unwrap());
+    }
+    assert_eq!(resp.tokens, want, "served generation != offline greedy decode");
+
+    // Determinism through the server too.
+    let (_, body2) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(GenerateResponse::parse(&body2).unwrap().tokens, want);
+
+    // Oversized sessions are rejected up front with 400.
+    let too_big = GenerateRequest { id: None, tokens: vec![1; SEQ_LEN - 2], max_new_tokens: 8 };
+    let (status, _) = c.request("POST", "/v1/generate", Some(&too_big.to_json())).unwrap();
+    assert_eq!(status, 400);
+
+    let statz = c.get_json("/statz").unwrap();
+    let decode = statz.req("decode").unwrap();
+    assert_eq!(decode.req("sessions_total").unwrap().as_usize(), Some(2));
+    assert_eq!(decode.req("sessions_active").unwrap().as_usize(), Some(0));
+    assert_eq!(decode.req("tokens_total").unwrap().as_usize(), Some(10));
+    assert!(decode.req("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(decode.req("step").unwrap().req("count").unwrap().as_usize(), Some(8));
+
+    drop(c);
+    server.stop();
+}
+
+/// The fixed micro-batcher has no persistent slots, so generation is
+/// refused loudly (501), not silently mis-served.
+#[test]
+fn generate_rejected_on_fixed_policy() {
+    let server = start_server(2, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let req = GenerateRequest { id: None, tokens: vec![1, 2], max_new_tokens: 4 };
+    let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 501, "{body}");
+    assert!(body.contains("continuous"), "{body}");
+    drop(c);
+    server.stop();
+}
+
+/// The decode loadgen smoke CI runs in tier 1: `qtx loadgen --generate`
+/// semantics against a MockEngine server — sessions interleave on slots,
+/// every request resolves, token accounting matches.
+#[test]
+fn loadgen_generate_smoke() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::from_millis(1));
+    let addr = server.addr().to_string();
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: 4,
+        requests_per_client: 8,
+        vocab: 128,
+        seq_len: 0, // probe /healthz
+        seed: 9,
+        timeout: Duration::from_secs(10),
+        open_rate_rps: None,
+        gen: Some(GenLoad { max_new_tokens: 6, prompt_len: 0 }),
+    })
+    .unwrap();
+    assert_eq!(report.ok, 32, "errors: {}", report.errors);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.gen_tokens_total, 32 * 6, "every session decoded to max_new_tokens");
+    assert!(report.gen_tokens_per_s > 0.0);
+
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let statz = c.get_json("/statz").unwrap();
+    let decode = statz.req("decode").unwrap();
+    assert_eq!(decode.req("sessions_total").unwrap().as_usize(), Some(32));
+    assert_eq!(decode.req("tokens_total").unwrap().as_usize(), Some(32 * 6));
+    // All slots back to free once the sessions drained.
+    let slots = statz.req("slots").unwrap();
+    assert_eq!(slots.req("generating").unwrap().as_usize(), Some(0));
+    drop(c);
+    server.stop();
+}
+
+/// HTTP/1.0 without `Connection: keep-alive` must default to close (RFC
+/// 9112 §9.3) — the hand-rolled client is 1.1, so drive a raw socket.
+#[test]
+fn http10_defaults_to_connection_close() {
+    let server = start_server(2, Duration::ZERO);
+    let addr = server.addr();
+
+    // Bare HTTP/1.0 request: one response, `Connection: close`, then EOF.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.0\r\nHost: qtx\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap(); // EOF only if the server closed
+    assert!(buf.starts_with("HTTP/1.1 200"), "{buf}");
+    assert!(buf.to_ascii_lowercase().contains("connection: close"), "{buf}");
+
+    // Explicit keep-alive opt-in: the connection survives two requests.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let req = b"GET /healthz HTTP/1.0\r\nHost: qtx\r\nConnection: keep-alive\r\n\r\n";
+    s.write_all(req).unwrap();
+    let first = read_one_response(&mut s);
+    assert!(first.starts_with("HTTP/1.1 200"), "{first}");
+    assert!(first.to_ascii_lowercase().contains("connection: keep-alive"), "{first}");
+    s.write_all(req).unwrap();
+    let second = read_one_response(&mut s);
+    assert!(second.starts_with("HTTP/1.1 200"), "second request on kept-alive 1.0: {second}");
+
+    server.stop();
+}
+
+/// Read exactly one HTTP response (head + Content-Length body) off a raw
+/// socket, returning it as text.
+fn read_one_response(s: &mut TcpStream) -> String {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    // Head: read to CRLFCRLF.
+    while !buf.ends_with(b"\r\n\r\n") {
+        match s.read(&mut byte) {
+            Ok(1) => buf.push(byte[0]),
+            other => panic!("connection ended mid-head: {other:?} after {buf:?}"),
+        }
+    }
+    let head = String::from_utf8_lossy(&buf).to_string();
+    let len: usize = head
+        .to_ascii_lowercase()
+        .lines()
+        .find_map(|l| l.strip_prefix("content-length:").map(|v| v.trim().parse().unwrap()))
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    head + &String::from_utf8_lossy(&body)
+}
+
+/// A client that stalls mid-request (here: promising a body it never
+/// sends) gets `408 Request Timeout` — not the silent close an *idle*
+/// keep-alive connection correctly gets.
+#[test]
+fn stalled_mid_request_gets_408_idle_close_stays_silent() {
+    let server = start_server_timeouts(
+        BatchPolicy::Continuous,
+        5,
+        128,
+        16,
+        Duration::ZERO,
+        Duration::from_millis(300), // short read timeout for the test
+    );
+    let addr = server.addr();
+
+    // Stalled mid-body: head promises 64 bytes, sends 5, then stalls.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"POST /v1/score HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"tok").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    assert!(buf.starts_with("HTTP/1.1 408"), "stalled client should see 408, got: {buf:?}");
+
+    // Stalled mid-head: same deal.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"POST /v1/score HT").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    assert!(buf.starts_with("HTTP/1.1 408"), "mid-head stall should see 408, got: {buf:?}");
+
+    // Idle connection (zero bytes sent): silent close — any bytes here
+    // would desynchronize a pipelining keep-alive client.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    assert!(buf.is_empty(), "idle close must not write bytes, got {buf:?}");
+
+    server.stop();
+}
+
 /// Doc conformance: `docs/API.md` lists every `/statz` key between the
 /// `statz-keys` markers; a live snapshot must expose exactly that set —
 /// a key the server drops fails the doc, a key the doc forgot fails the
@@ -367,6 +588,7 @@ fn continuous_beats_fixed_p95_queue_wait_under_open_loop() {
             seed: 11,
             timeout: Duration::from_secs(10),
             open_rate_rps: Some(rate),
+            gen: None,
         })
         .unwrap();
         server.stop();

@@ -131,6 +131,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
                 queue_cap: 64,
             },
             admit_window: Duration::ZERO,
+            read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(120),
         },
         EngineInfo {
@@ -138,6 +139,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
             max_batch,
             vocab: 256,
             causal,
+            decode: true,
             describe: format!("native-int8:{} W8A8 (test)", spec.config),
             mem: EngineMem::default(),
         },
