@@ -8,6 +8,8 @@
 #   make pytest      python compiler/kernel test suite
 #   make bench       GEMM kernel + serving benches; collects JSON lines
 #                    into BENCH_gemm.json + BENCH_serve.json
+#   make scrape      observability smoke: scrape a live mock server's
+#                    /metricz into METRICZ_snapshot.txt
 #   make ci          local mirror of .github/workflows/ci.yml
 #   make clean       drop generated artifacts/runs (not target/)
 
@@ -21,7 +23,7 @@ STEPS ?= 200
 # The three configs the integration tests load (see rust/tests/integration.rs).
 CONFIGS ?= bert_tiny_softmax,opt_tiny_softmax,bert_tiny_gated_linear
 
-.PHONY: artifacts verify fast pytest bench ci clean
+.PHONY: artifacts verify fast pytest bench scrape ci clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir $(abspath $(ARTIFACTS)) --configs $(CONFIGS)
@@ -49,8 +51,11 @@ bench:
 		| sed 's/^bench_serve JSON: //' > BENCH_serve.json
 	@echo "wrote BENCH_serve.json ($$(wc -l < BENCH_serve.json) rows)"
 
+scrape:
+	scripts/scrape_metricz.sh
+
 # Same jobs the workflow runs, in one command.
-ci: verify pytest bench
+ci: verify pytest bench scrape
 
 clean:
-	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json BENCH_gemm.json
+	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json BENCH_gemm.json METRICZ_snapshot.txt

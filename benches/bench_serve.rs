@@ -25,6 +25,11 @@
 //!    new tokens → generated tokens/s plus per-token and prefill p95
 //!    from `/statz`'s decode histograms, over slot-pinned sessions on the
 //!    continuous batcher.
+//! 5. **Observability overhead**: closed-loop req/s and decode tok/s with
+//!    request tracing on (`--trace-capacity 256`, the default) vs off
+//!    (capacity 0), on the mock engine — the serving-layer span/ring cost
+//!    in isolation. (Engine phase timers ride the native engine's forward
+//!    and are always on; their cost is inside `engine_compare`'s numbers.)
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -47,6 +52,7 @@ use qtx::metrics::table::render;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, LoadgenConfig, LoadgenReport};
+use qtx::serve::obs::TraceConfig;
 use qtx::serve::protocol::ScoreRequest;
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::serve::stats::EngineMem;
@@ -73,6 +79,7 @@ fn start_server(
     queue_cap: usize,
     max_connections: usize,
     cost_us: u64,
+    trace_capacity: usize,
 ) -> anyhow::Result<Server> {
     let factory: EngineFactory = Arc::new(move || {
         let mut e = MockEngine::new(max_batch.max(MODEL_BATCH), SEQ_LEN);
@@ -95,6 +102,7 @@ fn start_server(
             admit_window: Duration::ZERO,
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(60),
+            trace: TraceConfig { capacity: trace_capacity, slow_ms: 0 },
         },
         EngineInfo {
             seq_len: SEQ_LEN,
@@ -104,6 +112,7 @@ fn start_server(
             decode: true,
             describe: probe.describe(),
             mem: EngineMem::default(),
+            gemm_threads: 1,
         },
         factory,
     )?;
@@ -136,7 +145,7 @@ fn bench_closed(
     reqs: usize,
     cost_us: u64,
 ) -> anyhow::Result<ClosedRow> {
-    let server = start_server(BatchPolicy::Fixed, max_batch, 2, 1024, clients + 8, cost_us)?;
+    let server = start_server(BatchPolicy::Fixed, max_batch, 2, 1024, clients + 8, cost_us, 256)?;
     let addr = server.addr().to_string();
     let report = loadgen::run(&LoadgenConfig {
         addr: addr.clone(),
@@ -188,6 +197,7 @@ fn bench_open(
         4096,
         senders + 8,
         cost_us,
+        256,
     )?;
     let addr = server.addr().to_string();
     // ~1 s of offered load per cell, bounded so overload cells stay short.
@@ -241,6 +251,7 @@ fn bench_decode(
         1024,
         clients + 8,
         cost_us,
+        256,
     )?;
     let addr = server.addr().to_string();
     let report = loadgen::run(&LoadgenConfig {
@@ -276,6 +287,67 @@ fn bench_decode(
     drop(c);
     server.stop();
     Ok(row)
+}
+
+// ---------------------------------------------------------------------------
+// Section 5: observability overhead — request tracing on vs off
+// ---------------------------------------------------------------------------
+
+struct ObsRow {
+    mode: &'static str,
+    rps: f64,
+    tokens_per_s: f64,
+}
+
+/// One closed-loop scoring run and one closed-loop decode run on a server
+/// with the given trace-ring capacity (0 = tracing disabled).
+fn bench_obs(
+    mode: &'static str,
+    trace_capacity: usize,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<ObsRow> {
+    let common = |gen| LoadgenConfig {
+        addr: String::new(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen,
+    };
+    let server = start_server(
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        MATRIX_MAX_WAIT_MS,
+        1024,
+        clients + 8,
+        cost_us,
+        trace_capacity,
+    )?;
+    let score = loadgen::run(&LoadgenConfig { addr: server.addr().to_string(), ..common(None) })?;
+    anyhow::ensure!(score.errors == 0, "obs score loadgen errors: {}", score.errors);
+    server.stop();
+
+    let server = start_server(
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        MATRIX_MAX_WAIT_MS,
+        1024,
+        clients + 8,
+        cost_us,
+        trace_capacity,
+    )?;
+    let gen = loadgen::run(&LoadgenConfig {
+        addr: server.addr().to_string(),
+        ..common(Some(qtx::serve::loadgen::GenLoad { max_new_tokens: 16, prompt_len: 8 }))
+    })?;
+    anyhow::ensure!(gen.errors == 0, "obs decode loadgen errors: {}", gen.errors);
+    server.stop();
+    Ok(ObsRow { mode, rps: score.throughput_rps, tokens_per_s: gen.gen_tokens_per_s })
 }
 
 // ---------------------------------------------------------------------------
@@ -546,6 +618,48 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         decode_rows.iter().all(|r| r.tokens_per_s > 0.0),
         "decode matrix produced no tokens"
+    );
+
+    // -- observability overhead: tracing on vs off ---------------------------
+    let obs_rows = [
+        bench_obs("off", 0, clients, reqs, cost_us)?,
+        bench_obs("on", 256, clients, reqs, cost_us)?,
+    ];
+    let obs_base = &obs_rows[0];
+    for r in &obs_rows {
+        eprintln!(
+            "[bench_serve] obs tracing={}: {:.1} req/s, {:.1} decode tok/s",
+            r.mode, r.rps, r.tokens_per_s
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("section", Json::Str("obs_overhead".into())),
+                ("tracing", Json::Str(r.mode.into())),
+                ("clients", Json::Num(clients as f64)),
+                ("throughput_rps", Json::Num(r.rps)),
+                ("decode_tokens_per_s", Json::Num(r.tokens_per_s)),
+                ("rps_vs_off", Json::Num(r.rps / obs_base.rps)),
+                ("tokens_vs_off", Json::Num(r.tokens_per_s / obs_base.tokens_per_s)),
+            ])
+        );
+    }
+    let otable: Vec<Vec<String>> = obs_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.mode.to_string(),
+                format!("{:.1}", r.rps),
+                format!("{:.1}", r.tokens_per_s),
+                format!("{:.3}x", r.rps / obs_base.rps),
+                format!("{:.3}x", r.tokens_per_s / obs_base.tokens_per_s),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## observability overhead — request tracing on vs off (mock engine, \
+         continuous batching)\n\n{}",
+        render(&["tracing", "req/s", "decode tok/s", "req/s vs off", "tok/s vs off"], &otable)
     );
 
     // -- engine dimension: pjrt vs native-int8 -------------------------------

@@ -24,6 +24,13 @@
 //! shared by all `--engines N` workers (`Arc<Int8Weights>`), and
 //! `--gemm-threads K` sizes each worker's row-parallel GEMM thread set
 //! (1 disables; default a few cores).
+//!
+//! Observability (docs/OBSERVABILITY.md): `--trace-capacity N` sizes the
+//! completed-trace ring behind `GET /debug/traces` (0 disables tracing),
+//! `--trace-slow-ms N` warn-logs any request slower than N ms, and
+//! `--log-format {text,json}` switches the stderr log line format.
+//! `qtx loadgen --dump-traces FILE` scrapes the server's trace ring after
+//! the run and writes it as Chrome Trace Event Format.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -37,9 +44,11 @@ use crate::serve::engine::{
     EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
 use crate::serve::loadgen::{run as loadgen_run, render_report, GenLoad, LoadgenConfig};
-use crate::serve::server::{EngineInfo, Server, ServerConfig};
+use crate::serve::obs::{chrome_trace_events, TraceConfig};
+use crate::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use crate::serve::stats::EngineMem;
 use crate::util::cli::Args;
+use crate::util::log;
 
 /// Batcher/server knobs shared by `serve` and `bench_serve`.
 pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
@@ -61,10 +70,15 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         admit_window: Duration::from_micros(args.u64("admit-window-us", 0)?),
         read_timeout: Duration::from_millis(args.u64("read-timeout-ms", 60_000)?),
         request_timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
+        trace: TraceConfig {
+            capacity: args.usize("trace-capacity", 256)?,
+            slow_ms: args.u64("trace-slow-ms", 0)?,
+        },
     })
 }
 
 pub fn serve(args: &Args) -> Result<()> {
+    log::set_format(log::Format::parse(&args.str("log-format", "text"))?);
     let mut cfg = server_config_from_args(args)?;
     // `--mock` is shorthand for `--engine mock` (kept from PR 1).
     let engine_flag = EngineKind::parse(&args.str("engine", "pjrt"))?;
@@ -99,6 +113,7 @@ pub fn serve(args: &Args) -> Result<()> {
             decode: true,
             describe: probe.describe(),
             mem: EngineMem { workers: cfg.engines, ..EngineMem::default() },
+            gemm_threads: 1,
         };
         let factory: EngineFactory = Arc::new(move || {
             let mut e = MockEngine::new(model_batch, seq_len);
@@ -208,6 +223,7 @@ pub fn serve(args: &Args) -> Result<()> {
                 spec.label
             ),
             mem,
+            gemm_threads: if engine == EngineKind::NativeInt8 { gemm_threads } else { 1 },
         };
         (info, factory)
     };
@@ -216,7 +232,8 @@ pub fn serve(args: &Args) -> Result<()> {
     let server = Server::start(cfg, info, factory)?;
     server.wait_ready(ready_timeout)?;
     println!(
-        "serving on http://{} — POST /v1/score, POST /v1/generate, GET /healthz, GET /statz",
+        "serving on http://{} — POST /v1/score, POST /v1/generate, GET /healthz, \
+         GET /statz, GET /metricz, GET /debug/traces",
         server.addr()
     );
     server.run_forever();
@@ -255,10 +272,27 @@ pub fn loadgen(args: &Args) -> Result<()> {
         open_rate_rps: open_loop.then_some(rate),
         gen: generate.then_some(GenLoad { max_new_tokens, prompt_len }),
     };
+    // `--dump-traces FILE` scrapes the server's completed-trace ring after
+    // the run and writes Chrome Trace Event Format (chrome://tracing,
+    // ui.perfetto.dev). Needs the server started with tracing on
+    // (`--trace-capacity > 0`, the default).
+    let dump_traces = args.str_opt("dump-traces");
     args.finish()?;
     let report = loadgen_run(&cfg)?;
     println!("\n## loadgen {} \n\n{}", cfg.addr, render_report(&report));
     println!("loadgen JSON: {}", report.to_json());
+    if let Some(path) = dump_traces {
+        let mut client = Client::connect(&cfg.addr, cfg.timeout)?;
+        let doc = client.get_json("/debug/traces?n=4096")?;
+        let n = doc.get("traces").and_then(|t| t.as_arr()).map_or(0, |a| a.len());
+        if doc.get("enabled").and_then(|e| e.as_bool()) != Some(true) {
+            log::warn("server tracing is disabled (--trace-capacity 0); dump will be empty");
+        }
+        let chrome = chrome_trace_events(&doc);
+        std::fs::write(&path, chrome.to_string())
+            .with_context(|| format!("writing trace dump {path:?}"))?;
+        println!("wrote {n} traces to {path} (Chrome Trace Event Format)");
+    }
     if report.ok == 0 {
         anyhow::bail!("no successful requests ({} errors)", report.errors);
     }

@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::calibrator::{calibrate, CollectOptions};
 use crate::coordinator::quantize::quantize_weights;
-use crate::infer::model::{Int8Model, Int8Weights, KvCache, ModelOptions};
+use crate::infer::model::{EngineTelemetry, Int8Model, Int8Weights, KvCache, ModelOptions};
 use crate::serve::engine::{greedy_token, pack_batch_into, EngineSpec, ScoreEngine};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::util::log;
@@ -261,6 +261,15 @@ impl ScoreEngine for NativeInt8Engine {
             .with_context(|| format!("no generation session on slot {slot}"))?;
         model.decode_step(cache, last, gen_logits)?;
         Ok(greedy_token(gen_logits))
+    }
+
+    /// Fold the phase timers and quant-health counters the forward passes
+    /// accumulated in this worker's scratch into `into`, then zero them.
+    /// Called by the worker loop once per dispatch, off the zero-allocation
+    /// paths.
+    fn drain_telemetry(&mut self, into: &mut EngineTelemetry) -> bool {
+        self.model.drain_telemetry(into);
+        true
     }
 }
 

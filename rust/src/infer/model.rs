@@ -48,6 +48,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -349,6 +350,170 @@ impl Int8Weights {
     }
 }
 
+/// Number of engine phases the always-on profile timers distinguish.
+pub const N_PHASES: usize = 8;
+
+/// Phase names, index-aligned with [`EngineTelemetry::phase_ns`]. The
+/// same strings name the `/statz` `engine.profile` keys and the
+/// `/metricz` `phase` label values.
+pub const PHASE_NAMES: [&str; N_PHASES] = [
+    "embed",
+    "qkv_proj",
+    "attn_score",
+    "softmax",
+    "attn_ctx",
+    "out_proj",
+    "ffn",
+    "head",
+];
+
+const PH_EMBED: usize = 0;
+const PH_QKV: usize = 1;
+const PH_SCORE: usize = 2;
+const PH_SOFTMAX: usize = 3;
+const PH_CTX: usize = 4;
+const PH_OUT: usize = 5;
+const PH_FFN: usize = 6;
+const PH_HEAD: usize = 7;
+
+/// Gate probability below which a head counts as switched off ("doing
+/// nothing" in the paper's sense) for the `quant_health` gate-off
+/// fraction.
+pub const GATE_OFF_THRESHOLD: f32 = 0.1;
+
+/// Per-layer quantization-health counters (see docs/OBSERVABILITY.md):
+/// activation-code saturation on the layer's taps, clipped-softmax
+/// exact-zero / exact-one attention probabilities, and per-head gate-off
+/// events. All counts are cumulative since the last drain.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerHealth {
+    /// Activation codes that landed on the grid minimum (code 0).
+    pub sat_lo: u64,
+    /// Activation codes that landed on the grid maximum (code 255).
+    pub sat_hi: u64,
+    /// Total activation codes written on this layer's taps.
+    pub codes: u64,
+    /// Attention probabilities exactly 0.0 after the stretched clip
+    /// (masked positions excluded — only attendable columns count).
+    pub softmax_zero: u64,
+    /// Attention probabilities exactly 1.0 after the stretched clip.
+    pub softmax_one: u64,
+    /// Total attendable attention probabilities observed.
+    pub probs: u64,
+    /// Per head: rows whose gate probability fell below
+    /// [`GATE_OFF_THRESHOLD`].
+    pub gate_off: Vec<u64>,
+    /// Per head: rows where the gate was evaluated at all.
+    pub gate_total: Vec<u64>,
+}
+
+/// Engine phase-profile and quant-health counters. One lives inside each
+/// worker's [`Scratch`] (fixed-size, pre-allocated, so the steady-state
+/// zero-allocation contract holds); workers periodically drain it into a
+/// shared serving-stats aggregate via [`Int8Model::drain_telemetry`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineTelemetry {
+    /// Cumulative wall time per phase (nanoseconds), indexed by
+    /// [`PHASE_NAMES`].
+    pub phase_ns: [u64; N_PHASES],
+    /// How many times each phase timer fired.
+    pub phase_calls: [u64; N_PHASES],
+    /// Quant-health counters, one entry per transformer layer.
+    pub layers: Vec<LayerHealth>,
+}
+
+impl EngineTelemetry {
+    /// Counter tables sized for a model shape (all zeros).
+    pub fn new(n_layers: usize, n_heads: usize) -> EngineTelemetry {
+        EngineTelemetry {
+            phase_ns: [0; N_PHASES],
+            phase_calls: [0; N_PHASES],
+            layers: (0..n_layers)
+                .map(|_| LayerHealth {
+                    gate_off: vec![0; n_heads],
+                    gate_total: vec![0; n_heads],
+                    ..LayerHealth::default()
+                })
+                .collect(),
+        }
+    }
+
+    /// Close the current phase segment: charge `mark → now` to `phase`
+    /// and advance `mark`. No allocation, two counter adds.
+    #[inline]
+    fn tick(&mut self, phase: usize, mark: &mut Instant) {
+        let now = Instant::now();
+        self.phase_ns[phase] += now.duration_since(*mark).as_nanos() as u64;
+        self.phase_calls[phase] += 1;
+        *mark = now;
+    }
+
+    /// Add another telemetry block's counters into this one (growing the
+    /// layer tables if needed — only ever allocates on the first merge of
+    /// a larger model, never on the worker's hot path).
+    pub fn merge_from(&mut self, o: &EngineTelemetry) {
+        for i in 0..N_PHASES {
+            self.phase_ns[i] += o.phase_ns[i];
+            self.phase_calls[i] += o.phase_calls[i];
+        }
+        if self.layers.len() < o.layers.len() {
+            self.layers.resize_with(o.layers.len(), LayerHealth::default);
+        }
+        for (d, s) in self.layers.iter_mut().zip(&o.layers) {
+            d.sat_lo += s.sat_lo;
+            d.sat_hi += s.sat_hi;
+            d.codes += s.codes;
+            d.softmax_zero += s.softmax_zero;
+            d.softmax_one += s.softmax_one;
+            d.probs += s.probs;
+            if d.gate_off.len() < s.gate_off.len() {
+                d.gate_off.resize(s.gate_off.len(), 0);
+                d.gate_total.resize(s.gate_total.len(), 0);
+            }
+            for (a, b) in d.gate_off.iter_mut().zip(&s.gate_off) {
+                *a += b;
+            }
+            for (a, b) in d.gate_total.iter_mut().zip(&s.gate_total) {
+                *a += b;
+            }
+        }
+    }
+
+    /// Zero every counter, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.phase_ns = [0; N_PHASES];
+        self.phase_calls = [0; N_PHASES];
+        for l in &mut self.layers {
+            l.sat_lo = 0;
+            l.sat_hi = 0;
+            l.codes = 0;
+            l.softmax_zero = 0;
+            l.softmax_one = 0;
+            l.probs = 0;
+            l.gate_off.iter_mut().for_each(|x| *x = 0);
+            l.gate_total.iter_mut().for_each(|x| *x = 0);
+        }
+    }
+
+    /// Heap bytes of the layer tables (for the arena accounting in
+    /// [`Scratch::bytes`]).
+    fn bytes(&self) -> usize {
+        self.layers.len() * std::mem::size_of::<LayerHealth>()
+            + self
+                .layers
+                .iter()
+                .map(|l| (l.gate_off.len() + l.gate_total.len()) * std::mem::size_of::<u64>())
+                .sum::<usize>()
+    }
+
+    /// Arithmetic twin of [`EngineTelemetry::bytes`] for
+    /// [`Scratch::bytes_for`].
+    fn bytes_for(n_layers: usize, n_heads: usize) -> usize {
+        n_layers
+            * (std::mem::size_of::<LayerHealth>() + 2 * n_heads * std::mem::size_of::<u64>())
+    }
+}
+
 /// Per-worker scratch arena: every buffer the forward pass touches, sized
 /// once from the config so the steady-state dispatch never allocates.
 pub struct Scratch {
@@ -385,6 +550,10 @@ pub struct Scratch {
     vt: Vec<u8>,          // dh·t
     /// Row/column-sum scratch for [`gemm_q8q8`] (`t + max(t, dh)`).
     sums: Vec<i32>,
+    /// Always-on phase timers + quant-health counters, drained between
+    /// dispatches by [`Int8Model::drain_telemetry`]. Pre-allocated here so
+    /// instrumenting the forward stays allocation-free.
+    telem: EngineTelemetry,
     /// First dispatch done — from here on `score` must not allocate.
     warm: bool,
 }
@@ -428,6 +597,7 @@ impl Scratch {
             ctx_u8: vec![0; b * h * t * dh],
             vt: vec![0; dh * t],
             sums: vec![0; t + t.max(dh)],
+            telem: EngineTelemetry::new(cfg.n_layers, h),
             warm: false,
         }
     }
@@ -449,6 +619,7 @@ impl Scratch {
         f32_elems * std::mem::size_of::<f32>()
             + u8_elems
             + (t + t.max(dh)) * std::mem::size_of::<i32>()
+            + EngineTelemetry::bytes_for(cfg.n_layers, h)
     }
 
     /// Resident bytes of this arena — `/statz`'s
@@ -484,6 +655,7 @@ impl Scratch {
             + self.ctx_u8.len()
             + self.vt.len()
             + self.sums.len() * std::mem::size_of::<i32>()
+            + self.telem.bytes()
     }
 }
 
@@ -718,6 +890,21 @@ impl Int8Model {
         self.scratch.bytes()
     }
 
+    /// Counters accumulated since the last [`Int8Model::drain_telemetry`]
+    /// (phase profile + quant health).
+    pub fn telemetry(&self) -> &EngineTelemetry {
+        &self.scratch.telem
+    }
+
+    /// Merge the scratch-resident phase/quant-health counters into `into`
+    /// and reset them. Workers call this between dispatches — `into` is a
+    /// worker-local (or lock-guarded shared) aggregate, so the hot
+    /// forward/decode path itself never takes a lock or allocates.
+    pub fn drain_telemetry(&mut self, into: &mut EngineTelemetry) {
+        into.merge_from(&self.scratch.telem);
+        self.scratch.telem.clear();
+    }
+
     /// Score a packed batch: `x`/`targets` are `(b, t)` token ids, `mask`
     /// is the scored-position mask (all-zero rows are padding and score
     /// `(0, 0, 0)`). Appends one [`ScoreRow`] per batch row into `out`
@@ -862,6 +1049,8 @@ impl Int8Model {
         let ctx_u8 = &mut scratch.ctx_u8[..b * nh * t * dh];
         let vt = &mut scratch.vt[..dh * t];
         let sums = &mut scratch.sums[..];
+        let telem = &mut scratch.telem;
+        let mut ph_mark = Instant::now();
 
         // ---- embeddings: i8 gather + dequant add (not a GEMM) ----
         for (p, &tok) in x.data().iter().enumerate() {
@@ -887,6 +1076,7 @@ impl Int8Model {
         }
         dequant_codes(h_q, &w.embed_qp, h_f);
         let mut h_grid = w.embed_qp;
+        telem.tick(PH_EMBED, &mut ph_mark);
 
         for (li, lw) in w.layers.iter().enumerate() {
             let g = &lw.grids;
@@ -911,12 +1101,13 @@ impl Int8Model {
                 })
             };
             {
+                let lh = &mut telem.layers[li];
                 let mut proj = |wm: &Int8Weight, bias: &[f32], codes: &mut [u8], qp: &QParams| {
                     match xin_q {
                         Some(q) => par_gemm_q8(pool, q, m, wm, Some(bias), proj_f),
                         None => par_gemm_f32q8(pool, xin_f, m, wm, Some(bias), proj_f),
                     }
-                    quantize_codes(proj_f, qp, codes);
+                    quantize_tap(proj_f, qp, codes, lh);
                 };
                 proj(&lw.wq, &lw.bq, q_u8, &g.q);
                 proj(&lw.wk, &lw.bk, k_u8, &g.k);
@@ -935,6 +1126,7 @@ impl Int8Model {
             if let Some(gs) = &lw.gate {
                 gs.logits_into(xin_f, b, t, nh, dh, glog);
             }
+            telem.tick(PH_QKV, &mut ph_mark);
 
             // Scores Q·Kᵀ (u8×u8 integer GEMM per head) → clipped softmax
             // → requantize the probability matrix on its calibrated grid →
@@ -955,14 +1147,37 @@ impl Int8Model {
                         zero_point: g.k.zero_point as i32,
                     };
                     gemm_q8q8(qv, kv, t, t, dh, sums, scores);
+                    telem.tick(PH_SCORE, &mut ph_mark);
+                    let (mut sm_zero, mut sm_one, mut sm_probs) = (0u64, 0u64, 0u64);
                     for (ti, row) in scores.chunks_exact_mut(t).enumerate() {
                         for (si, sv) in row.iter_mut().enumerate() {
                             *sv = if cfg.causal && si > ti { NEG_INF } else { *sv * inv_sqrt };
                         }
                         softmax_stretch_clip(row, opts.gamma, opts.zeta);
+                        // Exact 0/1 probabilities over the *attendable*
+                        // columns only — masked positions would report the
+                        // causal structure, not the clip behavior.
+                        let valid = if cfg.causal { ti + 1 } else { t };
+                        for &p in &row[..valid] {
+                            sm_zero += (p == 0.0) as u64;
+                            sm_one += (p == 1.0) as u64;
+                        }
+                        sm_probs += valid as u64;
+                    }
+                    {
+                        let lh = &mut telem.layers[li];
+                        lh.softmax_zero += sm_zero;
+                        lh.softmax_one += sm_one;
+                        lh.probs += sm_probs;
                     }
                     let p_off = ((bi * nh + hi) * t) * t;
-                    quantize_codes(scores, &g.probs, &mut probs_u8[p_off..p_off + t * t]);
+                    quantize_tap(
+                        scores,
+                        &g.probs,
+                        &mut probs_u8[p_off..p_off + t * t],
+                        &mut telem.layers[li],
+                    );
+                    telem.tick(PH_SOFTMAX, &mut ph_mark);
 
                     let v_slice = &vh[off..off + t * dh];
                     for si in 0..t {
@@ -982,14 +1197,24 @@ impl Int8Model {
                     };
                     gemm_q8q8(pv, vv, t, dh, t, sums, ctx_f);
                     if cfg.use_gate {
+                        let mut off_ct = 0u64;
                         for (ti, c_row) in ctx_f.chunks_exact_mut(dh).enumerate() {
                             let gp = sigmoid(glog[(bi * nh + hi) * t + ti]);
+                            off_ct += (gp < GATE_OFF_THRESHOLD) as u64;
                             for o in c_row.iter_mut() {
                                 *o = opts.gate_scale * (gp * *o);
                             }
                         }
+                        telem.layers[li].gate_off[hi] += off_ct;
+                        telem.layers[li].gate_total[hi] += t as u64;
                     }
-                    quantize_codes(ctx_f, &g.ctx, &mut ctx_u8[off..off + t * dh]);
+                    quantize_tap(
+                        ctx_f,
+                        &g.ctx,
+                        &mut ctx_u8[off..off + t * dh],
+                        &mut telem.layers[li],
+                    );
+                    telem.tick(PH_CTX, &mut ph_mark);
                 }
             }
 
@@ -1002,22 +1227,23 @@ impl Int8Model {
                 zero_point: g.ctx.zero_point as i32,
             };
             par_gemm_q8(pool, ctx_view, m, &lw.wo, Some(&lw.bo), attn_f);
-            quantize_codes(attn_f, &g.attn_out, attn_u8);
+            quantize_tap(attn_f, &g.attn_out, attn_u8, &mut telem.layers[li]);
 
             // res1 = block input + requantized attention output, itself
             // requantized on its own grid.
             add_dequant(h_f, attn_u8, &g.attn_out, res_f);
-            quantize_codes(res_f, &g.res1, res1_u8);
+            quantize_tap(res_f, &g.res1, res1_u8, &mut telem.layers[li]);
             dequant_codes(res1_u8, &g.res1, res_f);
+            telem.tick(PH_OUT, &mut ph_mark);
 
             // FFN input (`fin`) and the residual base the FFN adds onto.
             if pre_ln {
                 layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
-                quantize_codes(ln_f, &g.fin, fin_u8);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
                 base_f.copy_from_slice(res_f);
             } else {
                 layernorm_rows(res_f, &lw.ln1_g, &lw.ln1_b, ln_f);
-                quantize_codes(ln_f, &g.fin, fin_u8);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
                 dequant_codes(fin_u8, &g.fin, base_f);
             }
 
@@ -1030,17 +1256,18 @@ impl Int8Model {
             for vv2 in ffn_f.iter_mut() {
                 *vv2 = gelu_tanh(*vv2);
             }
-            quantize_codes(ffn_f, &g.ffn_h, ffn_u8);
+            quantize_tap(ffn_f, &g.ffn_h, ffn_u8, &mut telem.layers[li]);
             let ffn_view = QView {
                 data: ffn_u8,
                 scale: g.ffn_h.scale,
                 zero_point: g.ffn_h.zero_point as i32,
             };
             par_gemm_q8(pool, ffn_view, m, &lw.w2, Some(&lw.b2), proj_f);
-            quantize_codes(proj_f, &g.ffn_out, attn_u8); // attn_u8 is free here
+            // attn_u8 is free here
+            quantize_tap(proj_f, &g.ffn_out, attn_u8, &mut telem.layers[li]);
 
             add_dequant(base_f, attn_u8, &g.ffn_out, res_f);
-            quantize_codes(res_f, &g.res2, res2_u8);
+            quantize_tap(res_f, &g.res2, res2_u8, &mut telem.layers[li]);
             if pre_ln {
                 h_q.copy_from_slice(res2_u8);
                 h_grid = g.res2;
@@ -1049,10 +1276,11 @@ impl Int8Model {
                 dequant_codes(res2_u8, &g.res2, res_f);
                 layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
                 let pg = g.post_ln2.expect("post-LN layer has an ln2_out grid");
-                quantize_codes(ln_f, &pg, h_q);
+                quantize_tap(ln_f, &pg, h_q, &mut telem.layers[li]);
                 h_grid = pg;
                 dequant_codes(h_q, &h_grid, h_f);
             }
+            telem.tick(PH_FFN, &mut ph_mark);
         }
 
         if let Some((g, bb)) = &w.final_ln {
@@ -1067,6 +1295,7 @@ impl Int8Model {
         par_rows(pool, m, v, MIN_PAR_ROWS, logits, |r0, r1, rows| {
             gemm_f32(&h_ro[r0 * d..r1 * d], &w.head_wt, Some(&w.head_b), r1 - r0, v, d, rows);
         });
+        telem.tick(PH_HEAD, &mut ph_mark);
         Ok((b, t))
     }
 
@@ -1228,6 +1457,8 @@ impl Int8Model {
         let res2_u8 = &mut scratch.res2_u8[..d];
         let ffn_u8 = &mut scratch.ffn_u8[..ff];
         let probs_u8 = &mut scratch.probs_u8[..n_keys];
+        let telem = &mut scratch.telem;
+        let mut ph_mark = Instant::now();
 
         // ---- embed the one token at its position ----
         {
@@ -1245,6 +1476,7 @@ impl Int8Model {
         }
         dequant_codes(h_q, &w.embed_qp, h_f);
         let mut h_grid = w.embed_qp;
+        telem.tick(PH_EMBED, &mut ph_mark);
 
         let inv_sqrt = 1.0 / (dh as f32).sqrt();
         for (li, lw) in w.layers.iter().enumerate() {
@@ -1265,12 +1497,13 @@ impl Int8Model {
                 })
             };
             {
+                let lh = &mut telem.layers[li];
                 let mut proj = |wm: &Int8Weight, bias: &[f32], codes: &mut [u8], qp: &QParams| {
                     match xin_q {
                         Some(q) => gemv_q8(q, wm, Some(bias), proj_f),
                         None => gemm_f32q8(xin_f, 1, wm, Some(bias), proj_f),
                     }
-                    quantize_codes(proj_f, qp, codes);
+                    quantize_tap(proj_f, qp, codes, lh);
                 };
                 proj(&lw.wq, &lw.bq, q_u8, &g.q);
                 proj(&lw.wk, &lw.bk, k_u8, &g.k);
@@ -1281,6 +1514,7 @@ impl Int8Model {
             if let Some(gs) = &lw.gate {
                 gs.logits_into(xin_f, 1, 1, nh, dh, glog);
             }
+            telem.tick(PH_QKV, &mut ph_mark);
 
             // Attention over the cache: q·Kᵀ (1×n_keys u8×u8 GEMM), clipped
             // softmax over the prefix (no mask needed — every cached key is
@@ -1310,11 +1544,22 @@ impl Int8Model {
                     dh,
                     scores,
                 );
+                telem.tick(PH_SCORE, &mut ph_mark);
                 for sv in scores.iter_mut() {
                     *sv *= inv_sqrt;
                 }
                 softmax_stretch_clip(scores, opts.gamma, opts.zeta);
-                quantize_codes(scores, &g.probs, probs_u8);
+                {
+                    // Every cached key is attendable at a decode step.
+                    let lh = &mut telem.layers[li];
+                    for &p in scores.iter() {
+                        lh.softmax_zero += (p == 0.0) as u64;
+                        lh.softmax_one += (p == 1.0) as u64;
+                    }
+                    lh.probs += n_keys as u64;
+                }
+                quantize_tap(scores, &g.probs, probs_u8, &mut telem.layers[li]);
+                telem.tick(PH_SOFTMAX, &mut ph_mark);
 
                 // p·V straight off the cache's pre-transposed V block —
                 // no per-token transpose of the prefix.
@@ -1339,13 +1584,21 @@ impl Int8Model {
                 );
                 if cfg.use_gate {
                     let gp = sigmoid(glog[hi]);
+                    telem.layers[li].gate_off[hi] += (gp < GATE_OFF_THRESHOLD) as u64;
+                    telem.layers[li].gate_total[hi] += 1;
                     for o in ctx_f.iter_mut() {
                         *o = opts.gate_scale * (gp * *o);
                     }
                 }
                 // Merging one position's heads is just writing each head's
                 // codes at its `hi·dh` offset.
-                quantize_codes(ctx_f, &g.ctx, &mut merged[hi * dh..(hi + 1) * dh]);
+                quantize_tap(
+                    ctx_f,
+                    &g.ctx,
+                    &mut merged[hi * dh..(hi + 1) * dh],
+                    &mut telem.layers[li],
+                );
+                telem.tick(PH_CTX, &mut ph_mark);
             }
 
             let ctx_view = QView {
@@ -1354,19 +1607,20 @@ impl Int8Model {
                 zero_point: g.ctx.zero_point as i32,
             };
             gemv_q8(ctx_view, &lw.wo, Some(&lw.bo), attn_f);
-            quantize_codes(attn_f, &g.attn_out, attn_u8);
+            quantize_tap(attn_f, &g.attn_out, attn_u8, &mut telem.layers[li]);
 
             add_dequant(h_f, attn_u8, &g.attn_out, res_f);
-            quantize_codes(res_f, &g.res1, res1_u8);
+            quantize_tap(res_f, &g.res1, res1_u8, &mut telem.layers[li]);
             dequant_codes(res1_u8, &g.res1, res_f);
+            telem.tick(PH_OUT, &mut ph_mark);
 
             if pre_ln {
                 layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
-                quantize_codes(ln_f, &g.fin, fin_u8);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
                 base_f.copy_from_slice(res_f);
             } else {
                 layernorm_rows(res_f, &lw.ln1_g, &lw.ln1_b, ln_f);
-                quantize_codes(ln_f, &g.fin, fin_u8);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
                 dequant_codes(fin_u8, &g.fin, base_f);
             }
 
@@ -1379,17 +1633,18 @@ impl Int8Model {
             for vv2 in ffn_f.iter_mut() {
                 *vv2 = gelu_tanh(*vv2);
             }
-            quantize_codes(ffn_f, &g.ffn_h, ffn_u8);
+            quantize_tap(ffn_f, &g.ffn_h, ffn_u8, &mut telem.layers[li]);
             let ffn_view = QView {
                 data: ffn_u8,
                 scale: g.ffn_h.scale,
                 zero_point: g.ffn_h.zero_point as i32,
             };
             gemv_q8(ffn_view, &lw.w2, Some(&lw.b2), proj_f);
-            quantize_codes(proj_f, &g.ffn_out, attn_u8); // attn_u8 is free here
+            // attn_u8 is free here
+            quantize_tap(proj_f, &g.ffn_out, attn_u8, &mut telem.layers[li]);
 
             add_dequant(base_f, attn_u8, &g.ffn_out, res_f);
-            quantize_codes(res_f, &g.res2, res2_u8);
+            quantize_tap(res_f, &g.res2, res2_u8, &mut telem.layers[li]);
             if pre_ln {
                 h_q.copy_from_slice(res2_u8);
                 h_grid = g.res2;
@@ -1398,10 +1653,11 @@ impl Int8Model {
                 dequant_codes(res2_u8, &g.res2, res_f);
                 layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
                 let pg = g.post_ln2.expect("post-LN layer has an ln2_out grid");
-                quantize_codes(ln_f, &pg, h_q);
+                quantize_tap(ln_f, &pg, h_q, &mut telem.layers[li]);
                 h_grid = pg;
                 dequant_codes(h_q, &h_grid, h_f);
             }
+            telem.tick(PH_FFN, &mut ph_mark);
         }
 
         if let Some((g, bb)) = &w.final_ln {
@@ -1412,6 +1668,7 @@ impl Int8Model {
         }
 
         gemm_f32(h_f, &w.head_wt, Some(&w.head_b), 1, v, d, logits_out);
+        telem.tick(PH_HEAD, &mut ph_mark);
         cache.len = pos + 1;
         Ok(())
     }
@@ -1478,12 +1735,30 @@ fn merge_heads_into(src: &[u8], out: &mut [u8], b: usize, t: usize, h: usize, dh
 }
 
 /// Quantize a scratch f32 buffer into pre-allocated `u8` codes
-/// ([`QParams::code`], the shared eq.-1 rounding rule).
-fn quantize_codes(x: &[f32], qp: &QParams, out: &mut [u8]) {
+/// ([`QParams::code`], the shared eq.-1 rounding rule). Returns how many
+/// codes landed on the grid extremes `(code 0, code 255)` — the
+/// saturation counters behind `/statz`'s `quant_health` (the native
+/// backend rejects non-8-bit grids at load, so 255 *is* the grid max).
+fn quantize_codes(x: &[f32], qp: &QParams, out: &mut [u8]) -> (u64, u64) {
     debug_assert_eq!(x.len(), out.len());
+    let (mut lo, mut hi) = (0u64, 0u64);
     for (o, &v) in out.iter_mut().zip(x) {
-        *o = qp.code(v) as u8;
+        let c = qp.code(v) as u8;
+        *o = c;
+        lo += (c == 0) as u64;
+        hi += (c == u8::MAX) as u64;
     }
+    (lo, hi)
+}
+
+/// [`quantize_codes`] onto a *layer tap*, folding the saturation counts
+/// into that layer's [`LayerHealth`]. The embed/final-LN taps use the
+/// plain variant — they have no owning layer.
+fn quantize_tap(x: &[f32], qp: &QParams, out: &mut [u8], lh: &mut LayerHealth) {
+    let (lo, hi) = quantize_codes(x, qp, out);
+    lh.sat_lo += lo;
+    lh.sat_hi += hi;
+    lh.codes += x.len() as u64;
 }
 
 /// Dequantize `u8` codes into a pre-allocated f32 buffer (the exact
@@ -2120,5 +2395,111 @@ mod tests {
             "steady-state score allocated on the dispatch thread"
         );
         assert_eq!(rows.len(), cfg.batch_size);
+    }
+
+    // -- telemetry (phase profile + quant health) ---------------------------
+
+    /// The paper tie-in, measured live on the artifact-free native engine:
+    /// a clipped-softmax config with γ < 0 must report exact-zero (and,
+    /// via the ζ stretch, exact-one) attention probabilities in
+    /// `quant_health`, and those clipped probabilities must land on the
+    /// extremes of the [0, 1]-calibrated probs grid (saturation counters).
+    #[test]
+    fn quant_health_records_clipped_softmax_zeros() {
+        let cfg = test_cfg("opt", "softmax");
+        let (gamma, zeta) = (-0.3, 1.05);
+        let (params, points, qps, (x, targets, mask)) = calibrated_setup(&cfg, gamma, zeta, 1.0);
+        let opts = ModelOptions { gamma, zeta, ..ModelOptions::default() };
+        let mut model = Int8Model::build(&cfg, &params, &points, &qps, opts).unwrap();
+        model.forward(&x, &targets, &mask).unwrap();
+        let telem = model.telemetry();
+        assert_eq!(telem.layers.len(), cfg.n_layers);
+        for (li, lh) in telem.layers.iter().enumerate() {
+            assert!(lh.probs > 0, "layer {li} saw attention probabilities");
+            assert!(lh.softmax_zero > 0, "layer {li}: γ < 0 must clip some probs to exactly 0");
+            assert!(lh.softmax_one > 0, "layer {li}: ζ > 1 must clip some probs to exactly 1");
+            assert!(lh.softmax_zero + lh.softmax_one <= lh.probs);
+            assert!(lh.codes > 0, "layer {li} wrote tap codes");
+            assert!(
+                lh.sat_lo > 0 && lh.sat_hi > 0,
+                "layer {li}: exact 0/1 probs must land on the probs grid extremes"
+            );
+            assert!(lh.sat_lo + lh.sat_hi <= lh.codes);
+            // Ungated model: the gate counters never move.
+            assert!(lh.gate_total.iter().all(|&n| n == 0));
+            assert!(lh.gate_off.iter().all(|&n| n == 0));
+        }
+        for (ph, &calls) in telem.phase_calls.iter().enumerate() {
+            assert!(calls > 0, "phase {:?} never ticked", PHASE_NAMES[ph]);
+        }
+    }
+
+    /// Gated attention reports per-head gate activity: every head's
+    /// denominator advances by the same row count, and off-counts stay
+    /// within it.
+    #[test]
+    fn quant_health_gate_fractions_recorded_per_head() {
+        let cfg = test_cfg("opt", "gated_linear");
+        let (params, points, qps, (x, targets, mask)) = calibrated_setup(&cfg, 0.0, 1.0, 1.0);
+        let mut model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        model.forward(&x, &targets, &mask).unwrap();
+        for (li, lh) in model.telemetry().layers.iter().enumerate() {
+            assert_eq!(lh.gate_off.len(), cfg.n_heads);
+            assert_eq!(lh.gate_total.len(), cfg.n_heads);
+            let per_head = lh.gate_total[0];
+            assert!(per_head > 0, "layer {li} recorded gate evaluations");
+            for hi in 0..cfg.n_heads {
+                assert_eq!(lh.gate_total[hi], per_head, "heads gate the same rows");
+                assert!(lh.gate_off[hi] <= lh.gate_total[hi]);
+            }
+        }
+    }
+
+    /// Draining moves the counters into an aggregate and zeroes the
+    /// scratch-resident block; repeated drains accumulate.
+    #[test]
+    fn telemetry_drain_resets_and_accumulates() {
+        let cfg = test_cfg("bert", "softmax");
+        let (params, points, qps, (x, targets, mask)) = calibrated_setup(&cfg, -0.3, 1.05, 1.0);
+        let opts = ModelOptions { gamma: -0.3, zeta: 1.05, ..ModelOptions::default() };
+        let mut model = Int8Model::build(&cfg, &params, &points, &qps, opts).unwrap();
+        model.forward(&x, &targets, &mask).unwrap();
+        let once = model.telemetry().clone();
+        let mut agg = EngineTelemetry::default();
+        model.drain_telemetry(&mut agg);
+        assert_eq!(agg, once, "a drain into an empty aggregate is a move");
+        let zeroed = model.telemetry();
+        assert!(zeroed.phase_calls.iter().all(|&c| c == 0));
+        assert!(zeroed.layers.iter().all(|l| l.codes == 0 && l.probs == 0));
+        // A second forward drained on top doubles the deterministic
+        // counters (timers differ run to run, counts cannot).
+        model.forward(&x, &targets, &mask).unwrap();
+        model.drain_telemetry(&mut agg);
+        assert_eq!(agg.phase_calls[0], 2 * once.phase_calls[0]);
+        assert_eq!(agg.layers[0].probs, 2 * once.layers[0].probs);
+        assert_eq!(agg.layers[0].codes, 2 * once.layers[0].codes);
+    }
+
+    /// Decode steps feed the same counters: one embed tick per token and
+    /// attendable-prefix probability counts per layer.
+    #[test]
+    fn decode_telemetry_counts_every_token() {
+        let weights = tiny_causal_weights();
+        let mut model = Int8Model::from_weights(weights);
+        let mut cache = KvCache::for_weights(model.weights());
+        let (v, nh, nl) =
+            (model.cfg().vocab_size, model.cfg().n_heads, model.cfg().n_layers);
+        let mut logits = vec![0.0f32; v];
+        model.prefill(&mut cache, &[1, 2, 3], &mut logits).unwrap();
+        let mut agg = EngineTelemetry::default();
+        model.drain_telemetry(&mut agg); // discard the prefill's forward pass
+        agg.clear();
+        model.decode_step(&mut cache, 4, &mut logits).unwrap(); // attends 4 keys
+        model.decode_step(&mut cache, 5, &mut logits).unwrap(); // attends 5 keys
+        model.drain_telemetry(&mut agg);
+        assert_eq!(agg.layers.len(), nl);
+        assert_eq!(agg.phase_calls[0], 2, "one embed tick per decode step");
+        assert_eq!(agg.layers[0].probs, (nh * (4 + 5)) as u64);
     }
 }

@@ -29,9 +29,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::infer::model::EngineTelemetry;
 use crate::serve::batcher::{
     BatchPolicy, BatchView, Batcher, Rejected, SlotAssignment, SlotOccupancy, SlotPool,
 };
+use crate::serve::obs::TraceTap;
 use crate::serve::protocol::{GenerateRequest, ScoreRequest, ScoreRow};
 use crate::serve::stats::ServeStats;
 use crate::util::log;
@@ -72,6 +74,14 @@ pub trait ScoreEngine {
     /// greedy token.
     fn gen_step(&mut self, _slot: usize, _last: i32) -> Result<i32> {
         bail!("this engine does not support generation")
+    }
+
+    /// Fold any phase-profile / quant-health counters the engine has
+    /// accumulated since the last drain into `into` and reset them;
+    /// returns whether the engine produces telemetry at all (`false`
+    /// default — the worker then skips the stats merge entirely).
+    fn drain_telemetry(&mut self, _into: &mut EngineTelemetry) -> bool {
+        false
     }
 }
 
@@ -679,12 +689,22 @@ impl ScoreEngine for PjrtEngine {
 pub struct Job {
     pub kind: JobKind,
     pub resp: mpsc::Sender<Result<JobOutcome, String>>,
+    /// Live trace handle (None when tracing is disabled): the worker adds
+    /// queue/claim/dispatch/engine spans; the HTTP handler that minted it
+    /// seals the trace after writing the reply.
+    pub trace: Option<Arc<TraceTap>>,
 }
 
 impl Job {
     /// Convenience constructor for scoring jobs (the common path).
     pub fn score(req: ScoreRequest, resp: mpsc::Sender<Result<JobOutcome, String>>) -> Job {
-        Job { kind: JobKind::Score(req), resp }
+        Job { kind: JobKind::Score(req), resp, trace: None }
+    }
+
+    /// Attach a trace handle (builder-style, keeps call sites short).
+    pub fn traced(mut self, trace: Option<Arc<TraceTap>>) -> Job {
+        self.trace = trace;
+        self
     }
 }
 
@@ -895,6 +915,8 @@ struct GenSession {
     queue_ms: f64,
     prefill_ms: f64,
     decode_ms: f64,
+    /// Per-token `step` spans land here; the handler seals the trace.
+    trace: Option<Arc<TraceTap>>,
 }
 
 /// The engine worker's serving loop.
@@ -916,8 +938,12 @@ fn run_worker(
     // Batch-view assembly buffers persist across dispatches (cleared, not
     // reallocated — capacities warm after the first full batch).
     let mut reqs: Vec<ScoreRequest> = Vec::new();
-    let mut replies: Vec<(mpsc::Sender<Result<JobOutcome, String>>, Duration)> = Vec::new();
+    type Reply = (mpsc::Sender<Result<JobOutcome, String>>, Duration, Option<Arc<TraceTap>>);
+    let mut replies: Vec<Reply> = Vec::new();
     let mut sessions: Vec<GenSession> = Vec::new();
+    // Telemetry shuttle: drained from the engine's scratch once per loop
+    // pass that did work, merged into the shared aggregate, reused.
+    let mut telem = EngineTelemetry::default();
     loop {
         let view = if sessions.is_empty() {
             match dispatch.next_batch(worker) {
@@ -927,6 +953,7 @@ fn run_worker(
         } else {
             dispatch.try_next_batch(worker)
         };
+        let did_work = view.is_some() || !sessions.is_empty();
 
         if let Some(view) = view {
             let launched = Instant::now();
@@ -934,13 +961,22 @@ fn run_worker(
             replies.clear();
             for a in view.assignments {
                 let wait = a.queued.waited(launched);
+                let admission = a.admission_wait();
                 stats.queue_wait.record(wait);
-                stats.admission_wait.record(a.admission_wait());
-                let Job { kind, resp } = a.queued.item;
+                stats.admission_wait.record(admission);
+                let Job { kind, resp, trace } = a.queued.item;
+                if let Some(tap) = &trace {
+                    // Reconstruct submit/claim instants from the measured
+                    // waits: submit = launch − wait, claim = submit +
+                    // admission (admission ≤ wait by construction).
+                    let submit = launched - wait;
+                    tap.span("queue", submit, submit + admission);
+                    tap.span("claim", submit + admission, launched);
+                }
                 match kind {
                     JobKind::Score(req) => {
                         reqs.push(req);
-                        replies.push((resp, wait));
+                        replies.push((resp, wait, trace));
                     }
                     JobKind::Generate(_) if dispatch.policy() == BatchPolicy::Fixed => {
                         // Defense in depth: the server rejects these with
@@ -956,6 +992,9 @@ fn run_worker(
                                 let prefill = t0.elapsed();
                                 stats.decode_session_started(prefill);
                                 dispatch.mark_generating(worker, a.slot);
+                                if let Some(tap) = &trace {
+                                    tap.span_since("prefill", t0);
+                                }
                                 let mut tokens = Vec::with_capacity(req.max_new_tokens);
                                 tokens.push(first);
                                 sessions.push(GenSession {
@@ -967,11 +1006,26 @@ fn run_worker(
                                     queue_ms: wait.as_secs_f64() * 1000.0,
                                     prefill_ms: prefill.as_secs_f64() * 1000.0,
                                     decode_ms: 0.0,
+                                    trace,
                                 });
                             }
                             Err(e) => {
                                 // Slot stays in-flight; the surrounding
                                 // complete/release frees it.
+                                log::warn_kv(
+                                    &format!("generate prefill failed: {e:#}"),
+                                    &[
+                                        ("worker", &worker.to_string()),
+                                        ("slot", &a.slot.to_string()),
+                                        (
+                                            "trace",
+                                            &trace
+                                                .as_ref()
+                                                .map(|t| t.id.to_string())
+                                                .unwrap_or_default(),
+                                        ),
+                                    ],
+                                );
                                 let _ = resp.send(Err(format!("generate: {e:#}")));
                             }
                         }
@@ -987,10 +1041,16 @@ fn run_worker(
             let result = if n > 0 { Some(engine.score(&reqs)) } else { None };
             let exec = t_score.elapsed();
             dispatch.complete(worker);
+            for (_, _, trace) in &replies {
+                if let Some(tap) = trace {
+                    tap.span("dispatch", launched, t_score);
+                    tap.span("engine_exec", t_score, t_score + exec);
+                }
+            }
             match result {
                 Some(Ok(rows)) => {
                     stats.record_batch(n, exec);
-                    for ((resp, wait), row) in replies.drain(..).zip(rows) {
+                    for ((resp, wait, _), row) in replies.drain(..).zip(rows) {
                         let _ = resp.send(Ok(JobOutcome::Score(ScoreOutcome {
                             row,
                             queue_ms: wait.as_secs_f64() * 1000.0,
@@ -1000,8 +1060,11 @@ fn run_worker(
                 }
                 Some(Err(e)) => {
                     let msg = format!("engine error: {e:#}");
-                    log::warn(&msg);
-                    for (resp, _) in replies.drain(..) {
+                    log::warn_kv(
+                        &msg,
+                        &[("worker", &worker.to_string()), ("batch", &n.to_string())],
+                    );
+                    for (resp, _, _) in replies.drain(..) {
                         let _ = resp.send(Err(msg.clone()));
                     }
                 }
@@ -1024,6 +1087,9 @@ fn run_worker(
                         stats.decode_token(step);
                         s.decode_ms += step.as_secs_f64() * 1000.0;
                         s.tokens.push(tok);
+                        if let Some(tap) = &s.trace {
+                            tap.span("step", t0, t0 + step);
+                        }
                     }
                     Err(e) => failed = Some(format!("decode: {e:#}")),
                 }
@@ -1038,7 +1104,20 @@ fn run_worker(
                 dispatch.finish_generating(worker, s.slot);
                 match failed {
                     Some(msg) => {
-                        log::warn(&msg);
+                        log::warn_kv(
+                            &msg,
+                            &[
+                                ("worker", &worker.to_string()),
+                                ("slot", &s.slot.to_string()),
+                                (
+                                    "trace",
+                                    &s.trace
+                                        .as_ref()
+                                        .map(|t| t.id.to_string())
+                                        .unwrap_or_default(),
+                                ),
+                            ],
+                        );
                         let _ = s.resp.send(Err(msg));
                     }
                     None => {
@@ -1053,6 +1132,15 @@ fn run_worker(
             } else {
                 i += 1;
             }
+        }
+
+        // Drain the phase timers / quant-health counters this pass
+        // accumulated in the engine's scratch into the shared aggregate —
+        // once per loop pass, never from inside the zero-allocation
+        // forward/decode paths themselves.
+        if did_work && engine.drain_telemetry(&mut telem) {
+            stats.merge_engine_telemetry(&telem);
+            telem.clear();
         }
     }
 }
@@ -1337,10 +1425,8 @@ mod tests {
         let mut gen_rxs = Vec::new();
         for g in 0..2 {
             let (tx, rx) = mpsc::channel();
-            dispatch
-                .submit(Job { kind: JobKind::Generate(gen_req(&[g, g + 1], 6)), resp: tx })
-                .map_err(|_| ())
-                .unwrap();
+            let kind = JobKind::Generate(gen_req(&[g, g + 1], 6));
+            dispatch.submit(Job { kind, resp: tx, trace: None }).map_err(|_| ()).unwrap();
             gen_rxs.push(rx);
         }
         let mut score_rxs = Vec::new();
@@ -1422,6 +1508,7 @@ mod tests {
                 admit_window: Duration::ZERO,
                 read_timeout: Duration::from_secs(60),
                 request_timeout: Duration::from_secs(30),
+                trace: crate::serve::obs::TraceConfig::default(),
             },
             EngineInfo {
                 seq_len: cfg.seq_len,
@@ -1431,6 +1518,7 @@ mod tests {
                 describe: "native-int8 (test)".into(),
                 decode: true,
                 mem: EngineMem::default(),
+                gemm_threads: 1,
             },
             factory,
         )
@@ -1465,6 +1553,77 @@ mod tests {
         assert_eq!(resp.id.as_deref(), Some("g"));
         drop(c);
         server.stop();
+    }
+
+    /// The native engine's phase timers and quant-health counters flow
+    /// from the worker's scratch into the shared `ServeStats` aggregate
+    /// (one drain per dispatch), and traced jobs pick up the worker-side
+    /// spans — no HTTP involved, artifact-free.
+    #[test]
+    fn worker_drains_native_telemetry_and_records_spans() {
+        use crate::infer::model::tests_support::tiny_weights;
+        use crate::infer::NativeInt8Engine;
+        use crate::serve::batcher::BatcherConfig;
+        use crate::serve::obs::{Obs, TraceConfig};
+
+        let weights = tiny_weights();
+        let n_layers = weights.cfg.n_layers;
+        let dispatch = Arc::new(Dispatch::Fixed(Batcher::new(BatcherConfig {
+            max_batch: weights.cfg.batch_size,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 16,
+        })));
+        let stats = Arc::new(ServeStats::new());
+        let ready = Arc::new(AtomicUsize::new(0));
+        let factory: EngineFactory = {
+            let weights = weights.clone();
+            Arc::new(move || {
+                Ok(Box::new(NativeInt8Engine::from_weights(weights.clone(), 1))
+                    as Box<dyn ScoreEngine>)
+            })
+        };
+        let handles = spawn_engine_pool(1, factory, dispatch.clone(), stats.clone(), ready.clone());
+
+        let obs = Obs::new(TraceConfig { capacity: 8, slow_ms: 0 });
+        let tap = obs.begin("score").unwrap();
+        let (tx, rx) = mpsc::channel();
+        dispatch
+            .submit(Job::score(req(&[1, 2, 3]), tx).traced(Some(tap.clone())))
+            .map_err(|_| ())
+            .unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        dispatch.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        obs.finish(&tap, "ok");
+        let doc = obs.to_json(1);
+        let spans = doc.req("traces").unwrap().as_arr().unwrap()[0]
+            .req("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.req("name").unwrap().as_str().unwrap().to_string())
+            .collect::<Vec<_>>();
+        for want in ["queue", "claim", "dispatch", "engine_exec"] {
+            assert!(spans.iter().any(|s| s == want), "missing {want} span in {spans:?}");
+        }
+
+        let snap = stats.snapshot("fixed", 0, None, crate::serve::stats::EngineMem::default(), 1);
+        let profile = snap.req("engine").unwrap().req("profile").unwrap();
+        assert!(
+            profile.req("embed").unwrap().req("calls").unwrap().as_usize().unwrap() >= 1,
+            "phase profile not drained: {snap}"
+        );
+        let layers = snap.req("quant_health").unwrap().req("layers").unwrap();
+        let layers = layers.as_arr().unwrap();
+        assert_eq!(layers.len(), n_layers, "one quant_health entry per layer");
+        for l in layers {
+            assert!(l.req("codes").unwrap().as_usize().unwrap() > 0, "no codes counted: {l}");
+            assert!(l.req("probs").unwrap().as_usize().unwrap() > 0, "no probs counted: {l}");
+        }
     }
 
     /// Slot views hand workers at most `slots_per_worker` requests, and the

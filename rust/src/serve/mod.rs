@@ -40,12 +40,6 @@
 //!   scoring dispatches (see [`batcher`]'s `Generating` lifecycle).
 //!   Multi-engine sharding (slot ranges) remains open.
 //!
-//! Observability (`GET /statz`): `batch_policy`, `queue.depth`,
-//! `queue.wait` (submit → batch launch) and `queue.admission` (submit →
-//! slot claim) histograms, per-state `slots` census (continuous mode),
-//! batch fill ratio, exec/latency histograms. `GET /healthz` reports the
-//! engine limits plus `batch_policy`.
-//!
 //! Measurement: `qtx loadgen` is closed-loop by default (each client fires
 //! on response). `qtx loadgen --open-loop --rate R` samples Poisson
 //! arrivals at `R` req/s across the `--threads` sender pool and measures
@@ -54,17 +48,28 @@
 //! that exposes convoy effects; `bench_serve` sweeps it over a
 //! fixed-vs-continuous × arrival-rate matrix.
 //!
+//! Observability (see docs/OBSERVABILITY.md): `GET /statz` (JSON
+//! registry), `GET /metricz` (the same registry as Prometheus text
+//! exposition), `GET /debug/traces` (per-request span traces from a
+//! fixed-capacity ring, exportable as Chrome Trace Event Format), engine
+//! phase profiling + quantization-health telemetry drained from workers,
+//! and a slow-request log (`--trace-slow-ms`).
+//!
 //! * [`protocol`] — request/response wire types over `util::json`.
 //! * [`batcher`]  — fixed FIFO batcher + slot allocator/admission queue.
 //! * [`engine`]   — `ScoreEngine` trait; PJRT session + mock; policy
 //!   dispatch; worker pool.
 //! * [`server`]   — hand-rolled HTTP/1.1 on `std::net` worker threads.
-//! * [`stats`]    — atomic counters + latency histograms (`/statz`).
+//! * [`stats`]    — atomic counters + latency histograms (`/statz`,
+//!   `/metricz`).
+//! * [`obs`]      — trace IDs, span taps, completed-trace ring
+//!   (`/debug/traces`).
 //! * [`loadgen`]  — closed-loop and open-loop (Poisson) load generators.
 
 pub mod batcher;
 pub mod engine;
 pub mod loadgen;
+pub mod obs;
 pub mod protocol;
 pub mod server;
 pub mod stats;
@@ -75,6 +80,7 @@ pub use batcher::{
 pub use engine::{
     Dispatch, EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
+pub use obs::{Obs, TraceConfig, TraceTap};
 pub use protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse, ScoreRow};
 pub use server::{EngineInfo, Server, ServerConfig};
 pub use stats::ServeStats;

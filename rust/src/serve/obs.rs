@@ -1,0 +1,441 @@
+//! Per-request tracing: trace IDs minted at accept, monotonic span
+//! timestamps threaded through the request lifecycle (read → parse →
+//! queue → claim → dispatch → engine_exec → reply; decode sessions add
+//! `prefill` and per-token `step` spans), and a fixed-capacity ring of
+//! completed traces behind `GET /debug/traces?n=K`.
+//!
+//! Design constraints, in order:
+//! 1. **Never block the request path.** The ring claims its slot with one
+//!    `fetch_add` and a `try_lock`; contention (a reader holding the slot)
+//!    drops the trace instead of waiting. Capacity overflow drops oldest.
+//! 2. **Zero cost when disabled.** `--trace-capacity 0` makes
+//!    [`Obs::begin`] return `None`, and every instrumentation site is an
+//!    `if let Some(tap)` over that Option.
+//! 3. **Two parties per trace, short critical sections.** A live trace is
+//!    shared by exactly the HTTP handler and one engine worker, so the
+//!    per-tap span list can be a plain `Mutex<Vec<Span>>` — each `span()`
+//!    holds it for one push.
+//!
+//! Traces export to Chrome Trace Event Format (`chrome://tracing`,
+//! <https://ui.perfetto.dev>) via [`chrome_trace_events`]; `qtx loadgen
+//! --dump-traces FILE` wires it to disk. See docs/OBSERVABILITY.md for the
+//! span glossary.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Hard cap on spans per trace: long decode sessions emit one `step` span
+/// per token, and a runaway session must not grow a trace without bound.
+pub const MAX_SPANS: usize = 512;
+
+/// One completed, named interval inside a trace. Offsets are µs from the
+/// trace's own start, so spans order and nest without clock arithmetic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// A sealed trace, as stored in the ring.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: u64,
+    /// Request kind: `score` | `generate`.
+    pub kind: &'static str,
+    /// Terminal status: `ok` | `error` | `timeout` | `rejected`.
+    pub status: &'static str,
+    /// µs since the server's tracing epoch (start-up).
+    pub start_us: u64,
+    pub total_us: u64,
+    /// Sorted by `start_us` at finish time.
+    pub spans: Vec<Span>,
+}
+
+/// A live trace: the handle the HTTP handler and the engine worker both
+/// hold (via `Arc`) while the request is in flight.
+pub struct TraceTap {
+    pub id: u64,
+    start: Instant,
+    kind: &'static str,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl TraceTap {
+    /// Record the interval `[start, end]` under `name`. Silently drops
+    /// spans past [`MAX_SPANS`] and clamps pre-trace instants to offset 0.
+    pub fn span(&self, name: &'static str, start: Instant, end: Instant) {
+        let Ok(mut spans) = self.spans.lock() else { return };
+        if spans.len() >= MAX_SPANS {
+            return;
+        }
+        spans.push(Span {
+            name,
+            start_us: start.saturating_duration_since(self.start).as_micros() as u64,
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+        });
+    }
+
+    /// Record `[start, now]` under `name` — the common "phase just ended"
+    /// call shape.
+    pub fn span_since(&self, name: &'static str, start: Instant) {
+        self.span(name, start, Instant::now());
+    }
+}
+
+/// Fixed-capacity ring of completed traces. `push` is wait-free for the
+/// writer (one atomic claim + one `try_lock`); overwriting the claimed
+/// slot is the drop-oldest policy.
+pub struct TraceRing {
+    slots: Vec<Mutex<Option<Trace>>>,
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store a completed trace; never blocks (see module doc).
+    pub fn push(&self, t: Trace) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        if let Ok(mut slot) = self.slots[i].try_lock() {
+            *slot = Some(t);
+        }
+    }
+
+    /// Up to `n` most recently completed traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Trace> {
+        let head = self.head.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let floor = head.saturating_sub(cap);
+        let mut out = Vec::new();
+        let mut i = head;
+        while i > floor && out.len() < n {
+            i -= 1;
+            if let Ok(slot) = self.slots[(i % cap) as usize].try_lock() {
+                if let Some(t) = slot.as_ref() {
+                    out.push(t.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Tracing configuration carried in `ServerConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Completed-trace ring capacity; 0 disables tracing entirely.
+    pub capacity: usize,
+    /// Warn-log any trace whose total exceeds this many ms (0 = off).
+    pub slow_ms: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: 256, slow_ms: 0 }
+    }
+}
+
+/// The server's tracing registry: mints trace IDs, seals finished traces
+/// into the ring, and renders `GET /debug/traces`.
+pub struct Obs {
+    epoch: Instant,
+    next_id: AtomicU64,
+    slow_ms: u64,
+    ring: Option<TraceRing>,
+}
+
+impl Obs {
+    pub fn new(cfg: TraceConfig) -> Obs {
+        Obs {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            slow_ms: cfg.slow_ms,
+            ring: (cfg.capacity > 0).then(|| TraceRing::new(cfg.capacity)),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Mint a trace for a new request; `None` when tracing is disabled
+    /// (callers thread the `Option` through, so the off path is a branch).
+    pub fn begin(&self, kind: &'static str) -> Option<Arc<TraceTap>> {
+        self.begin_at(kind, Instant::now())
+    }
+
+    /// Like [`Obs::begin`] but backdated to `start`: the HTTP handler only
+    /// learns the request kind after parsing, yet the trace's clock must
+    /// cover the socket read that preceded it.
+    pub fn begin_at(&self, kind: &'static str, start: Instant) -> Option<Arc<TraceTap>> {
+        self.ring.as_ref()?;
+        Some(Arc::new(TraceTap {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            start,
+            kind,
+            spans: Mutex::new(Vec::with_capacity(16)),
+        }))
+    }
+
+    /// Seal a finished request's trace: sort its spans, emit the
+    /// slow-request log line if over threshold, and push it into the ring.
+    pub fn finish(&self, tap: &TraceTap, status: &'static str) {
+        let Some(ring) = &self.ring else { return };
+        let total_us = tap.start.elapsed().as_micros() as u64;
+        let mut spans = tap.spans.lock().map(|s| s.clone()).unwrap_or_default();
+        spans.sort_by_key(|s| s.start_us);
+        let trace = Trace {
+            id: tap.id,
+            kind: tap.kind,
+            status,
+            start_us: tap.start.saturating_duration_since(self.epoch).as_micros() as u64,
+            total_us,
+            spans,
+        };
+        if self.slow_ms > 0 && total_us > self.slow_ms * 1000 {
+            crate::util::log::warn_kv(
+                "slow request",
+                &[
+                    ("trace", &tap.id.to_string()),
+                    ("kind", tap.kind),
+                    ("status", status),
+                    ("total_ms", &format!("{:.1}", total_us as f64 / 1000.0)),
+                ],
+            );
+        }
+        ring.push(trace);
+    }
+
+    /// The `GET /debug/traces?n=K` document.
+    pub fn to_json(&self, n: usize) -> Json {
+        let traces = self.ring.as_ref().map(|r| r.recent(n)).unwrap_or_default();
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled())),
+            ("traces", Json::Arr(traces.iter().map(trace_json).collect())),
+        ])
+    }
+}
+
+fn trace_json(t: &Trace) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(t.id as f64)),
+        ("kind", Json::Str(t.kind.to_string())),
+        ("status", Json::Str(t.status.to_string())),
+        ("start_us", Json::Num(t.start_us as f64)),
+        ("total_us", Json::Num(t.total_us as f64)),
+        (
+            "spans",
+            Json::Arr(
+                t.spans
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::Str(s.name.to_string())),
+                            ("start_us", Json::Num(s.start_us as f64)),
+                            ("dur_us", Json::Num(s.dur_us as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Convert a `/debug/traces` document into Chrome Trace Event Format
+/// (complete events, `ph: "X"`, timestamps in µs): one track (`tid`) per
+/// trace, so concurrent requests stack vertically in the viewer. Load the
+/// result in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace_events(doc: &Json) -> Json {
+    let mut events = Vec::new();
+    for t in doc.get("traces").and_then(Json::as_arr).unwrap_or(&[]) {
+        let id = t.get("id").and_then(Json::as_f64).unwrap_or(0.0);
+        let base = t.get("start_us").and_then(Json::as_f64).unwrap_or(0.0);
+        let kind = t.get("kind").and_then(Json::as_str).unwrap_or("?");
+        for s in t.get("spans").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = s.get("name").and_then(Json::as_str).unwrap_or("?");
+            events.push(Json::obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("cat", Json::Str(kind.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                (
+                    "ts",
+                    Json::Num(base + s.get("start_us").and_then(Json::as_f64).unwrap_or(0.0)),
+                ),
+                ("dur", Json::Num(s.get("dur_us").and_then(Json::as_f64).unwrap_or(0.0))),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(id)),
+            ]));
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_obs_mints_nothing_and_serves_empty() {
+        let obs = Obs::new(TraceConfig { capacity: 0, slow_ms: 0 });
+        assert!(!obs.enabled());
+        assert!(obs.begin("score").is_none());
+        let doc = obs.to_json(10);
+        assert_eq!(doc.req("enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(doc.req("traces").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn ring_is_fixed_capacity_and_drops_oldest() {
+        let obs = Obs::new(TraceConfig { capacity: 4, slow_ms: 0 });
+        for _ in 0..10 {
+            let tap = obs.begin("score").unwrap();
+            obs.finish(&tap, "ok");
+        }
+        // Only the 4 newest survive, newest first, and asking for more
+        // than capacity cannot return more than capacity.
+        let doc = obs.to_json(100);
+        let traces = doc.req("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 4);
+        let ids: Vec<usize> =
+            traces.iter().map(|t| t.req("id").unwrap().as_usize().unwrap()).collect();
+        assert_eq!(ids, vec![10, 9, 8, 7]);
+        // A smaller ask trims from the newest end.
+        let two = obs.to_json(2);
+        assert_eq!(two.req("traces").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn finish_sorts_spans_and_records_status() {
+        let obs = Obs::new(TraceConfig { capacity: 8, slow_ms: 0 });
+        let tap = obs.begin("generate").unwrap();
+        let t0 = tap.start;
+        // Record out of order; finish must sort by start offset.
+        tap.span("reply", t0 + Duration::from_micros(300), t0 + Duration::from_micros(350));
+        tap.span("read", t0, t0 + Duration::from_micros(100));
+        tap.span("queue", t0 + Duration::from_micros(100), t0 + Duration::from_micros(250));
+        obs.finish(&tap, "error");
+        let doc = obs.to_json(1);
+        let t = &doc.req("traces").unwrap().as_arr().unwrap()[0];
+        assert_eq!(t.req("kind").unwrap().as_str(), Some("generate"));
+        assert_eq!(t.req("status").unwrap().as_str(), Some("error"));
+        let spans = t.req("spans").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            spans.iter().map(|s| s.req("name").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, ["read", "queue", "reply"]);
+        assert_eq!(spans[0].req("start_us").unwrap().as_usize(), Some(0));
+        assert_eq!(spans[0].req("dur_us").unwrap().as_usize(), Some(100));
+    }
+
+    #[test]
+    fn span_cap_holds() {
+        let obs = Obs::new(TraceConfig { capacity: 2, slow_ms: 0 });
+        let tap = obs.begin("score").unwrap();
+        let now = Instant::now();
+        for _ in 0..(MAX_SPANS + 50) {
+            tap.span("step", now, now);
+        }
+        obs.finish(&tap, "ok");
+        let doc = obs.to_json(1);
+        let spans = doc.req("traces").unwrap().as_arr().unwrap()[0]
+            .req("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .len();
+        assert_eq!(spans, MAX_SPANS);
+    }
+
+    /// Trace invariants over arbitrary span soups: after finish, spans are
+    /// monotone in start offset, every span fits inside the trace's own
+    /// duration window (offsets clamp, never precede trace start), and the
+    /// ring never exceeds its capacity.
+    #[test]
+    fn prop_trace_span_ordering_and_ring_bounds() {
+        crate::util::proptest::check(
+            "trace_span_ordering",
+            |rng| {
+                let n_traces = 1 + rng.below(12) as usize;
+                let spans_per = rng.below(20) as usize;
+                let cap = 1 + rng.below(8) as usize;
+                let offsets: Vec<(u64, u64)> = (0..n_traces * spans_per)
+                    .map(|_| (u64::from(rng.below(5000)), u64::from(rng.below(900))))
+                    .collect();
+                (n_traces, spans_per, cap, offsets)
+            },
+            |(n_traces, spans_per, cap, offsets)| {
+                let obs = Obs::new(TraceConfig { capacity: *cap, slow_ms: 0 });
+                for ti in 0..*n_traces {
+                    let tap = obs.begin("score").unwrap();
+                    let base = tap.start;
+                    for si in 0..*spans_per {
+                        let (start, dur) = offsets[ti * spans_per + si];
+                        tap.span(
+                            "s",
+                            base + Duration::from_micros(start),
+                            base + Duration::from_micros(start + dur),
+                        );
+                    }
+                    obs.finish(&tap, "ok");
+                }
+                let doc = obs.to_json(usize::MAX);
+                let traces = doc.req("traces").unwrap().as_arr().unwrap();
+                if traces.len() > *cap || traces.len() > *n_traces {
+                    return Err(format!(
+                        "{} traces from ring of {} after {}",
+                        traces.len(),
+                        cap,
+                        n_traces
+                    ));
+                }
+                for t in traces {
+                    let spans = t.req("spans").unwrap().as_arr().unwrap();
+                    let mut prev = 0u64;
+                    for s in spans {
+                        let start = s.req("start_us").unwrap().as_usize().unwrap() as u64;
+                        if start < prev {
+                            return Err(format!("span starts regress: {start} < {prev}"));
+                        }
+                        prev = start;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn chrome_export_flattens_spans_to_complete_events() {
+        let obs = Obs::new(TraceConfig { capacity: 4, slow_ms: 0 });
+        let tap = obs.begin("score").unwrap();
+        let t0 = tap.start;
+        tap.span("read", t0, t0 + Duration::from_micros(40));
+        tap.span("engine_exec", t0 + Duration::from_micros(40), t0 + Duration::from_micros(90));
+        obs.finish(&tap, "ok");
+        let chrome = chrome_trace_events(&obs.to_json(10));
+        let events = chrome.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.req("ph").unwrap().as_str(), Some("X"));
+            assert_eq!(e.req("cat").unwrap().as_str(), Some("score"));
+            assert_eq!(e.req("tid").unwrap().as_usize(), Some(1));
+            assert!(e.req("ts").unwrap().as_f64().is_some());
+            assert!(e.req("dur").unwrap().as_f64().is_some());
+        }
+        assert_eq!(events[0].req("name").unwrap().as_str(), Some("read"));
+        assert_eq!(events[0].req("dur").unwrap().as_usize(), Some(40));
+    }
+}

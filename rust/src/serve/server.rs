@@ -12,7 +12,11 @@
 //!   503 with the last engine startup error (e.g. the manifest-version
 //!   mismatch message) while no engine worker is serving.
 //! * `GET /statz`    — counters, batch-fill ratio, latency percentiles,
-//!   decode telemetry.
+//!   decode telemetry, engine phase profile, quant health.
+//! * `GET /metricz`  — the same registry as Prometheus text exposition
+//!   (rendered from the `/statz` snapshot — the surfaces cannot drift).
+//! * `GET /debug/traces?n=K` — most recent completed request traces
+//!   (see [`crate::serve::obs`]).
 //!
 //! Threading model: the accept thread spawns one handler thread per
 //! connection (keep-alive connections would head-of-line block a fixed
@@ -34,6 +38,7 @@ use crate::serve::engine::{
     spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, Job, JobKind,
     JobOutcome,
 };
+use crate::serve::obs::{Obs, TraceConfig};
 use crate::serve::protocol::{
     error_json, GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse,
 };
@@ -67,6 +72,9 @@ pub struct ServerConfig {
     pub read_timeout: Duration,
     /// How long a handler waits for its batch result before answering 504.
     pub request_timeout: Duration,
+    /// Request tracing: ring capacity (0 disables) + slow-request log
+    /// threshold (`--trace-capacity` / `--trace-slow-ms`).
+    pub trace: TraceConfig,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +89,7 @@ impl Default for ServerConfig {
             admit_window: Duration::ZERO,
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(30),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -101,6 +110,9 @@ pub struct EngineInfo {
     /// Engine memory accounting for `/statz`'s `engine.mem` section
     /// (`EngineMem::default()` when unknown — mock/test servers).
     pub mem: EngineMem,
+    /// Per-worker row-parallel GEMM thread count, surfaced in `/statz`'s
+    /// `build` section (1 for engines without a GEMM pool).
+    pub gemm_threads: usize,
 }
 
 /// Decrements the live-connection counter when a handler thread exits.
@@ -156,6 +168,7 @@ impl Server {
             dispatch: dispatch.clone(),
             stats: stats.clone(),
             info: info.clone(),
+            obs: Arc::new(Obs::new(cfg.trace)),
             read_timeout: cfg.read_timeout,
             request_timeout: cfg.request_timeout,
             shutdown: shutdown.clone(),
@@ -280,6 +293,8 @@ struct HandlerCtx {
     dispatch: Arc<Dispatch>,
     stats: Arc<ServeStats>,
     info: EngineInfo,
+    /// Request tracing: ID minting, span taps, completed-trace ring.
+    obs: Arc<Obs>,
     read_timeout: Duration,
     request_timeout: Duration,
     shutdown: Arc<AtomicBool>,
@@ -454,6 +469,25 @@ pub fn write_json_response(
     w.flush()
 }
 
+/// Write an HTTP/1.1 plain-text response (`GET /metricz` exposition).
+pub fn write_text_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.flush()
+}
+
 /// Write an HTTP/1.1 request with a JSON body (the loadgen client side).
 pub fn write_json_request(
     w: &mut impl Write,
@@ -486,6 +520,10 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
         if ctx.shutdown.load(Ordering::SeqCst) {
             return Ok(()); // server stopping: drop the keep-alive connection
         }
+        // Read timing feeds the trace's `read` span. Caveat (documented in
+        // OBSERVABILITY.md): on a keep-alive connection this interval also
+        // contains the client's think time before it sent the request.
+        let t_read = Instant::now();
         let msg = match read_message(&mut reader) {
             Ok(Some(m)) => m,
             Ok(None) => return Ok(()), // clean close
@@ -518,6 +556,7 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                 return Ok(());
             }
         };
+        let t_read_end = Instant::now();
         let mut parts = msg.start_line.split_whitespace();
         let method = parts.next().unwrap_or("");
         let path_full = parts.next().unwrap_or("");
@@ -533,8 +572,12 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
         };
 
         match (method, path) {
-            ("POST", "/v1/score") => handle_score(&mut writer, &msg, ctx, keep_alive)?,
-            ("POST", "/v1/generate") => handle_generate(&mut writer, &msg, ctx, keep_alive)?,
+            ("POST", "/v1/score") => {
+                handle_score(&mut writer, &msg, ctx, keep_alive, t_read, t_read_end)?
+            }
+            ("POST", "/v1/generate") => {
+                handle_generate(&mut writer, &msg, ctx, keep_alive, t_read, t_read_end)?
+            }
             ("GET", "/healthz") => {
                 let ready = ctx.engines_ready.load(Ordering::SeqCst);
                 let mut doc = vec![
@@ -577,15 +620,31 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
                 }
             }
             ("GET", "/statz") => {
-                let doc = ctx.stats.snapshot(
-                    ctx.dispatch.policy().name(),
-                    ctx.dispatch.depth(),
-                    ctx.dispatch.occupancy(),
-                    ctx.info.mem,
-                );
-                write_json_response(&mut writer, 200, "OK", &doc, keep_alive)?;
+                write_json_response(&mut writer, 200, "OK", &statz_snapshot(ctx), keep_alive)?;
             }
-            (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz") => {
+            ("GET", "/metricz") => {
+                // Rendered from the same snapshot `/statz` serves — one
+                // registry, two surfaces (see `ServeStats::prometheus`).
+                let text = ctx.stats.prometheus(&statz_snapshot(ctx));
+                write_text_response(
+                    &mut writer,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4",
+                    &text,
+                    keep_alive,
+                )?;
+            }
+            ("GET", "/debug/traces") => {
+                let n = path_full
+                    .split_once('?')
+                    .and_then(|(_, q)| q.split('&').find_map(|kv| kv.strip_prefix("n=")))
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .unwrap_or(32);
+                write_json_response(&mut writer, 200, "OK", &ctx.obs.to_json(n), keep_alive)?;
+            }
+            (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz")
+            | (_, "/metricz") | (_, "/debug/traces") => {
                 write_json_response(
                     &mut writer,
                     405,
@@ -610,11 +669,25 @@ fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
     }
 }
 
+/// The `/statz` document. `/metricz` renders this same snapshot as
+/// Prometheus text, so the two surfaces can never drift.
+fn statz_snapshot(ctx: &HandlerCtx) -> Json {
+    ctx.stats.snapshot(
+        ctx.dispatch.policy().name(),
+        ctx.dispatch.depth(),
+        ctx.dispatch.occupancy(),
+        ctx.info.mem,
+        ctx.info.gemm_threads,
+    )
+}
+
 fn handle_score(
     w: &mut TcpStream,
     msg: &HttpMessage,
     ctx: &HandlerCtx,
     keep_alive: bool,
+    t_read: Instant,
+    t_read_end: Instant,
 ) -> Result<()> {
     let t0 = Instant::now();
     let req = match msg
@@ -625,13 +698,26 @@ fn handle_score(
         Ok(r) => r,
         Err(e) => {
             ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = ctx.obs.begin_at("score", t_read) {
+                t.span("read", t_read, t_read_end);
+                t.span_since("parse", t_read_end);
+                ctx.obs.finish(&t, "rejected");
+            }
             write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
             return Ok(());
         }
     };
+    let tap = ctx.obs.begin_at("score", t_read);
+    if let Some(t) = &tap {
+        t.span("read", t_read, t_read_end);
+        t.span("parse", t_read_end, Instant::now());
+    }
     let id = req.id.clone();
     let (tx, rx) = mpsc::channel();
-    if !submit_job(w, ctx, Job::score(req, tx), keep_alive)? {
+    if !submit_job(w, ctx, Job::score(req, tx).traced(tap.clone()), keep_alive)? {
+        if let Some(t) = &tap {
+            ctx.obs.finish(t, "rejected");
+        }
         return Ok(());
     }
     match rx.recv_timeout(ctx.request_timeout) {
@@ -644,9 +730,20 @@ fn handle_score(
             };
             ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
             ctx.stats.latency.record(t0.elapsed());
+            let t_reply = Instant::now();
             write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
+            if let Some(t) = &tap {
+                t.span_since("reply", t_reply);
+                ctx.obs.finish(t, "ok");
+            }
         }
-        other => reply_non_score(w, ctx, other, keep_alive, "scoring")?,
+        other => {
+            let status = if other.is_err() { "timeout" } else { "error" };
+            reply_non_score(w, ctx, other, keep_alive, "scoring")?;
+            if let Some(t) = &tap {
+                ctx.obs.finish(t, status);
+            }
+        }
     }
     Ok(())
 }
@@ -734,6 +831,8 @@ fn handle_generate(
     msg: &HttpMessage,
     ctx: &HandlerCtx,
     keep_alive: bool,
+    t_read: Instant,
+    t_read_end: Instant,
 ) -> Result<()> {
     let t0 = Instant::now();
     let req = match msg
@@ -744,6 +843,11 @@ fn handle_generate(
         Ok(r) => r,
         Err(e) => {
             ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = ctx.obs.begin_at("generate", t_read) {
+                t.span("read", t_read, t_read_end);
+                t.span_since("parse", t_read_end);
+                ctx.obs.finish(&t, "rejected");
+            }
             write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
             return Ok(());
         }
@@ -763,10 +867,19 @@ fn handle_generate(
         )?;
         return Ok(());
     }
+    let tap = ctx.obs.begin_at("generate", t_read);
+    if let Some(t) = &tap {
+        t.span("read", t_read, t_read_end);
+        t.span("parse", t_read_end, Instant::now());
+    }
     let id = req.id.clone();
     let prompt_len = req.tokens.len();
     let (tx, rx) = mpsc::channel();
-    if !submit_job(w, ctx, Job { kind: JobKind::Generate(req), resp: tx }, keep_alive)? {
+    let job = Job { kind: JobKind::Generate(req), resp: tx, trace: tap.clone() };
+    if !submit_job(w, ctx, job, keep_alive)? {
+        if let Some(t) = &tap {
+            ctx.obs.finish(t, "rejected");
+        }
         return Ok(());
     }
     match rx.recv_timeout(ctx.request_timeout) {
@@ -781,9 +894,20 @@ fn handle_generate(
             };
             ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
             ctx.stats.latency.record(t0.elapsed());
+            let t_reply = Instant::now();
             write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
+            if let Some(t) = &tap {
+                t.span_since("reply", t_reply);
+                ctx.obs.finish(t, "ok");
+            }
         }
-        other => reply_non_score(w, ctx, other, keep_alive, "generation")?,
+        other => {
+            let status = if other.is_err() { "timeout" } else { "error" };
+            reply_non_score(w, ctx, other, keep_alive, "generation")?;
+            if let Some(t) = &tap {
+                ctx.obs.finish(t, status);
+            }
+        }
     }
     Ok(())
 }

@@ -1,14 +1,24 @@
 //! Serving telemetry: lock-free counters and log-bucketed latency
-//! histograms, surfaced as JSON on `GET /statz`.
+//! histograms, surfaced as JSON on `GET /statz` and as Prometheus text
+//! exposition on `GET /metricz`.
 //!
 //! Everything is `AtomicU64` so the hot path (HTTP handlers, engine
 //! workers) never takes a lock; `/statz` reads are racy-but-consistent
-//! snapshots, which is all monitoring needs.
+//! snapshots, which is all monitoring needs. The engine phase-profile /
+//! quant-health aggregate is the one mutex here — workers merge into it
+//! once per dispatch, off the per-request path.
+//!
+//! **One registry, two surfaces**: [`ServeStats::prometheus`] renders the
+//! *same* [`ServeStats::snapshot`] document `/statz` serves (scalar leaves
+//! walked straight out of the JSON tree; histograms and telemetry
+//! re-rendered from their native counters as proper Prometheus families),
+//! so the two endpoints cannot drift apart.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::infer::model::{EngineTelemetry, PHASE_NAMES};
 use crate::serve::batcher::SlotOccupancy;
 use crate::util::json::Json;
 
@@ -163,14 +173,13 @@ impl EngineMem {
     }
 
     fn to_json(self) -> Json {
-        let mem = Json::obj(vec![
+        Json::obj(vec![
             ("weight_bytes", Json::Num(self.weight_bytes as f64)),
             ("scratch_bytes_per_worker", Json::Num(self.scratch_bytes_per_worker as f64)),
             ("kv_bytes_per_worker", Json::Num(self.kv_bytes_per_worker as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("resident_bytes", Json::Num(self.resident_bytes() as f64)),
-        ]);
-        Json::obj(vec![("mem", mem)])
+        ])
     }
 }
 
@@ -220,6 +229,10 @@ pub struct ServeStats {
     pub decode_prefill: LatencyHisto,
     /// Per-token incremental decode-step latency.
     pub decode_step: LatencyHisto,
+    /// Engine phase-profile + quant-health aggregate. Workers drain their
+    /// scratch-resident counters into this once per dispatch (never from
+    /// the zero-allocation forward itself), so a mutex is fine.
+    engine_telemetry: Mutex<EngineTelemetry>,
 }
 
 impl ServeStats {
@@ -245,6 +258,15 @@ impl ServeStats {
             decode_tokens_total: AtomicU64::new(0),
             decode_prefill: LatencyHisto::default(),
             decode_step: LatencyHisto::default(),
+            engine_telemetry: Mutex::new(EngineTelemetry::default()),
+        }
+    }
+
+    /// Fold a worker's drained phase/quant-health counters into the shared
+    /// aggregate (see [`crate::infer::model::Int8Model::drain_telemetry`]).
+    pub fn merge_engine_telemetry(&self, t: &EngineTelemetry) {
+        if let Ok(mut agg) = self.engine_telemetry.lock() {
+            agg.merge_from(t);
         }
     }
 
@@ -310,19 +332,37 @@ impl ServeStats {
         self.started.elapsed()
     }
 
-    /// The `/statz` document. `queue_depth` and `slots` are sampled by the
-    /// caller (the dispatch owns them); `slots` is `None` in fixed mode;
-    /// `mem` is the engine memory accounting (zeros when unknown).
+    /// The `/statz` document — also the registry `/metricz` renders from
+    /// ([`ServeStats::prometheus`]). `queue_depth` and `slots` are sampled
+    /// by the caller (the dispatch owns them); `slots` is `None` in fixed
+    /// mode; `mem` is the engine memory accounting (zeros when unknown);
+    /// `gemm_threads` is the per-worker row-parallel thread count.
     pub fn snapshot(
         &self,
         batch_policy: &str,
         queue_depth: usize,
         slots: Option<SlotOccupancy>,
         mem: EngineMem,
+        gemm_threads: usize,
     ) -> Json {
         let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        let telem = self.engine_telemetry.lock().map(|t| t.clone()).unwrap_or_default();
         let mut doc = vec![
-            ("uptime_s", Json::Num(round3(self.uptime().as_secs_f64()))),
+            (
+                "server",
+                Json::obj(vec![("uptime_s", Json::Num(round3(self.uptime().as_secs_f64())))]),
+            ),
+            (
+                "build",
+                Json::obj(vec![
+                    ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+                    (
+                        "simd",
+                        Json::Str(crate::infer::simd::active_tier().name().to_string()),
+                    ),
+                    ("gemm_threads", Json::Num(gemm_threads as f64)),
+                ]),
+            ),
             ("batch_policy", Json::Str(batch_policy.to_string())),
             (
                 "requests",
@@ -353,7 +393,11 @@ impl ServeStats {
                 ]),
             ),
             ("latency", self.latency.to_json()),
-            ("engine", mem.to_json()),
+            (
+                "engine",
+                Json::obj(vec![("mem", mem.to_json()), ("profile", profile_json(&telem))]),
+            ),
+            ("quant_health", quant_health_json(&telem)),
             (
                 "decode",
                 Json::obj(vec![
@@ -382,11 +426,253 @@ impl ServeStats {
         }
         Json::obj(doc)
     }
+
+    /// Prometheus text exposition (format 0.0.4) of `snap`, which must be
+    /// this instance's [`ServeStats::snapshot`] — the JSON document is the
+    /// registry, so `/statz` and `/metricz` cannot drift. Naming: `qtx_` +
+    /// the `/statz` path with dots as underscores. Scalar leaves become
+    /// `# TYPE`-annotated counters/gauges (strings ride in a `value`
+    /// label); histogram subtrees are re-rendered from the native bucket
+    /// counters as cumulative `_seconds` histograms; `engine.profile` and
+    /// `quant_health` become labelled families (`phase`, `layer`, `head`).
+    pub fn prometheus(&self, snap: &Json) -> String {
+        let mut out = String::with_capacity(16 * 1024);
+        if let Json::Obj(fields) = snap {
+            for (k, v) in fields {
+                self.prom_node(k, v, &mut out);
+            }
+        }
+        out
+    }
+
+    /// The native histogram behind a `/statz` subtree path, if any.
+    fn histo_for(&self, path: &str) -> Option<&LatencyHisto> {
+        match path {
+            "queue.wait" => Some(&self.queue_wait),
+            "queue.admission" => Some(&self.admission_wait),
+            "batches.exec" => Some(&self.exec),
+            "latency" => Some(&self.latency),
+            "decode.prefill" => Some(&self.decode_prefill),
+            "decode.step" => Some(&self.decode_step),
+            _ => None,
+        }
+    }
+
+    fn prom_node(&self, path: &str, node: &Json, out: &mut String) {
+        if let Some(h) = self.histo_for(path) {
+            prom_histo(&prom_name(path), h, out);
+            return;
+        }
+        match path {
+            "engine.profile" => return prom_profile(node, out),
+            "quant_health" => return prom_quant_health(node, out),
+            _ => {}
+        }
+        match node {
+            Json::Obj(fields) => {
+                for (k, v) in fields {
+                    self.prom_node(&format!("{path}.{k}"), v, out);
+                }
+            }
+            Json::Num(x) => {
+                let name = prom_name(path);
+                let kind = if is_counter(path) { "counter" } else { "gauge" };
+                out.push_str(&format!("# TYPE {name} {kind}\n{name} {}\n", Json::Num(*x)));
+            }
+            Json::Str(s) => {
+                // Info-style gauge: the string value rides in a label.
+                let name = prom_name(path);
+                out.push_str(&format!(
+                    "# TYPE {name} gauge\n{name}{{value=\"{}\"}} 1\n",
+                    prom_label_escape(s)
+                ));
+            }
+            _ => {}
+        }
+    }
 }
 
 impl Default for ServeStats {
     fn default() -> Self {
         ServeStats::new()
+    }
+}
+
+fn round6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
+
+/// `/statz` `engine.profile`: cumulative per-phase wall time and call
+/// counts from [`EngineTelemetry`] (zeros for engines without profiling).
+fn profile_json(t: &EngineTelemetry) -> Json {
+    Json::Obj(
+        PHASE_NAMES
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("calls", Json::Num(t.phase_calls[i] as f64)),
+                        ("total_ms", Json::Num(round3(t.phase_ns[i] as f64 / 1e6))),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// `/statz` `quant_health`: per-layer INT8 saturation pressure,
+/// clipped-softmax exact-0/exact-1 attention rates, and per-head gate-off
+/// fractions — the paper's "heads doing nothing", measured live. Engines
+/// without telemetry report an empty `layers` array.
+fn quant_health_json(t: &EngineTelemetry) -> Json {
+    let frac = |num: u64, den: u64| {
+        if den == 0 {
+            0.0
+        } else {
+            round6(num as f64 / den as f64)
+        }
+    };
+    let layers: Vec<Json> = t
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| {
+            Json::obj(vec![
+                ("layer", Json::Num(li as f64)),
+                ("codes", Json::Num(l.codes as f64)),
+                ("sat_extreme_ratio", Json::Num(frac(l.sat_lo + l.sat_hi, l.codes))),
+                ("probs", Json::Num(l.probs as f64)),
+                ("softmax_zero_ratio", Json::Num(frac(l.softmax_zero, l.probs))),
+                ("softmax_one_ratio", Json::Num(frac(l.softmax_one, l.probs))),
+                (
+                    "gate_off_ratio",
+                    Json::Arr(
+                        l.gate_off
+                            .iter()
+                            .zip(&l.gate_total)
+                            .map(|(&off, &n)| Json::Num(frac(off, n)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("layers", Json::Arr(layers))])
+}
+
+/// `/statz` path → Prometheus metric name.
+fn prom_name(path: &str) -> String {
+    format!("qtx_{}", path.replace('.', "_"))
+}
+
+/// Monotone counters; every other numeric leaf is a gauge.
+fn is_counter(path: &str) -> bool {
+    matches!(
+        path,
+        "requests.total"
+            | "requests.ok"
+            | "requests.bad"
+            | "requests.rejected_full"
+            | "requests.timeouts"
+            | "requests.engine_errors"
+            | "batches.total"
+            | "batches.rows"
+            | "decode.sessions_total"
+            | "decode.tokens_total"
+    )
+}
+
+fn prom_label_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// A [`LatencyHisto`] as a cumulative Prometheus histogram in seconds.
+/// `_count` is the final cumulative bucket value (not the separate `total`
+/// atomic), so `_bucket{le="+Inf"} == _count` holds even while samples land
+/// concurrently mid-render.
+fn prom_histo(name: &str, h: &LatencyHisto, out: &mut String) {
+    let bounds = bucket_bounds();
+    out.push_str(&format!("# TYPE {name}_seconds histogram\n"));
+    let mut cum = 0u64;
+    for i in 0..BUCKETS {
+        cum += h.counts[i].load(Ordering::Relaxed);
+        if bounds[i] == u64::MAX {
+            out.push_str(&format!("{name}_seconds_bucket{{le=\"+Inf\"}} {cum}\n"));
+        } else {
+            let le = bounds[i] as f64 / 1e6;
+            out.push_str(&format!("{name}_seconds_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+    }
+    let sum_s = h.sum_us.load(Ordering::Relaxed) as f64 / 1e6;
+    out.push_str(&format!("{name}_seconds_sum {sum_s}\n"));
+    out.push_str(&format!("{name}_seconds_count {cum}\n"));
+}
+
+/// `engine.profile` as two phase-labelled counter families.
+fn prom_profile(node: &Json, out: &mut String) {
+    out.push_str("# TYPE qtx_engine_profile_seconds_total counter\n");
+    if let Json::Obj(fields) = node {
+        for (phase, v) in fields {
+            if let Some(ms) = v.get("total_ms").and_then(Json::as_f64) {
+                out.push_str(&format!(
+                    "qtx_engine_profile_seconds_total{{phase=\"{phase}\"}} {}\n",
+                    Json::Num(ms / 1000.0)
+                ));
+            }
+        }
+    }
+    out.push_str("# TYPE qtx_engine_profile_calls_total counter\n");
+    if let Json::Obj(fields) = node {
+        for (phase, v) in fields {
+            if let Some(calls) = v.get("calls").and_then(Json::as_f64) {
+                out.push_str(&format!(
+                    "qtx_engine_profile_calls_total{{phase=\"{phase}\"}} {}\n",
+                    Json::Num(calls)
+                ));
+            }
+        }
+    }
+}
+
+/// `quant_health` as layer- (and head-)labelled gauge families. The
+/// `# TYPE` lines are emitted even with no layers so the family set is
+/// engine-independent (the mock engine reports an empty `layers`).
+fn prom_quant_health(node: &Json, out: &mut String) {
+    let empty: Vec<Json> = Vec::new();
+    let layers = node.get("layers").and_then(Json::as_arr).unwrap_or(&empty);
+    for (family, key) in [
+        ("qtx_quant_sat_extreme_ratio", "sat_extreme_ratio"),
+        ("qtx_quant_softmax_zero_ratio", "softmax_zero_ratio"),
+        ("qtx_quant_softmax_one_ratio", "softmax_one_ratio"),
+    ] {
+        out.push_str(&format!("# TYPE {family} gauge\n"));
+        for l in layers {
+            let li = l.get("layer").and_then(Json::as_f64).unwrap_or(0.0);
+            if let Some(x) = l.get(key).and_then(Json::as_f64) {
+                out.push_str(&format!(
+                    "{family}{{layer=\"{}\"}} {}\n",
+                    Json::Num(li),
+                    Json::Num(x)
+                ));
+            }
+        }
+    }
+    out.push_str("# TYPE qtx_quant_gate_off_ratio gauge\n");
+    for l in layers {
+        let li = l.get("layer").and_then(Json::as_f64).unwrap_or(0.0);
+        if let Some(heads) = l.get("gate_off_ratio").and_then(Json::as_arr) {
+            for (hi, hv) in heads.iter().enumerate() {
+                if let Some(x) = hv.as_f64() {
+                    out.push_str(&format!(
+                        "qtx_quant_gate_off_ratio{{layer=\"{}\",head=\"{hi}\"}} {}\n",
+                        Json::Num(li),
+                        Json::Num(x)
+                    ));
+                }
+            }
+        }
     }
 }
 
@@ -529,7 +815,7 @@ mod tests {
             kv_bytes_per_worker: 20,
             workers: 3,
         };
-        let doc = s.snapshot("fixed", 2, None, mem).to_string();
+        let doc = s.snapshot("fixed", 2, None, mem, 1).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("queue").unwrap().req("depth").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("fixed"));
@@ -549,6 +835,138 @@ mod tests {
             Some(3)
         );
         assert!(parsed.get("slots").is_none(), "fixed mode has no slot census");
+        // New observability sections: server uptime, build info, engine
+        // profile (all 8 phases present, zeroed without an engine), and
+        // quant_health (empty layer list without an engine).
+        assert!(parsed.req("server").unwrap().req("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        let build = parsed.req("build").unwrap();
+        assert_eq!(build.req("version").unwrap().as_str(), Some(env!("CARGO_PKG_VERSION")));
+        assert!(["scalar", "avx2"].contains(&build.req("simd").unwrap().as_str().unwrap()));
+        assert_eq!(build.req("gemm_threads").unwrap().as_usize(), Some(1));
+        let profile = parsed.req("engine").unwrap().req("profile").unwrap();
+        for phase in PHASE_NAMES {
+            let p = profile.req(phase).unwrap();
+            assert_eq!(p.req("calls").unwrap().as_usize(), Some(0));
+            assert_eq!(p.req("total_ms").unwrap().as_f64(), Some(0.0));
+        }
+        let layers = parsed.req("quant_health").unwrap().req("layers").unwrap();
+        assert_eq!(layers.as_arr().unwrap().len(), 0);
+    }
+
+    /// Build a telemetry blob with known values for rendering tests.
+    fn sample_telemetry() -> EngineTelemetry {
+        let mut t = EngineTelemetry::new(2, 2);
+        t.phase_ns[0] = 1_500_000; // embed: 1.5 ms
+        t.phase_calls[0] = 3;
+        t.layers[0].codes = 1000;
+        t.layers[0].sat_lo = 40;
+        t.layers[0].sat_hi = 10;
+        t.layers[0].probs = 200;
+        t.layers[0].softmax_zero = 100;
+        t.layers[0].softmax_one = 8;
+        t.layers[0].gate_off = vec![30, 0];
+        t.layers[0].gate_total = vec![60, 60];
+        t
+    }
+
+    #[test]
+    fn snapshot_reports_merged_engine_telemetry() {
+        let s = ServeStats::new();
+        s.merge_engine_telemetry(&sample_telemetry());
+        s.merge_engine_telemetry(&sample_telemetry());
+        let doc = s.snapshot("fixed", 0, None, EngineMem::default(), 1).to_string();
+        let parsed = Json::parse(&doc).unwrap();
+        let embed = parsed.req("engine").unwrap().req("profile").unwrap().req("embed").unwrap();
+        assert_eq!(embed.req("calls").unwrap().as_usize(), Some(6));
+        assert_eq!(embed.req("total_ms").unwrap().as_f64(), Some(3.0));
+        let layers = parsed.req("quant_health").unwrap().req("layers").unwrap();
+        let l0 = &layers.as_arr().unwrap()[0];
+        assert_eq!(l0.req("layer").unwrap().as_usize(), Some(0));
+        assert_eq!(l0.req("codes").unwrap().as_usize(), Some(2000));
+        assert_eq!(l0.req("sat_extreme_ratio").unwrap().as_f64(), Some(0.05));
+        assert_eq!(l0.req("softmax_zero_ratio").unwrap().as_f64(), Some(0.5));
+        assert_eq!(l0.req("softmax_one_ratio").unwrap().as_f64(), Some(0.04));
+        let gates = l0.req("gate_off_ratio").unwrap().as_arr().unwrap();
+        assert_eq!(gates[0].as_f64(), Some(0.5));
+        assert_eq!(gates[1].as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn prometheus_renders_every_statz_leaf_family() {
+        let s = ServeStats::new();
+        s.requests_total.fetch_add(3, Ordering::Relaxed);
+        s.latency.record(Duration::from_micros(800));
+        s.merge_engine_telemetry(&sample_telemetry());
+        let snap = s.snapshot("fixed", 2, None, EngineMem::default(), 4);
+        let text = s.prometheus(&snap);
+        for family in [
+            "qtx_server_uptime_s",
+            "qtx_build_version",
+            "qtx_build_simd",
+            "qtx_build_gemm_threads",
+            "qtx_batch_policy",
+            "qtx_requests_total",
+            "qtx_queue_depth",
+            "qtx_queue_wait_seconds",
+            "qtx_queue_admission_seconds",
+            "qtx_batches_total",
+            "qtx_batches_fill_ratio",
+            "qtx_batches_exec_seconds",
+            "qtx_latency_seconds",
+            "qtx_engine_mem_resident_bytes",
+            "qtx_engine_profile_seconds_total",
+            "qtx_engine_profile_calls_total",
+            "qtx_quant_sat_extreme_ratio",
+            "qtx_quant_softmax_zero_ratio",
+            "qtx_quant_softmax_one_ratio",
+            "qtx_quant_gate_off_ratio",
+            "qtx_decode_tokens_total",
+            "qtx_decode_prefill_seconds",
+            "qtx_decode_step_seconds",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {family}")),
+                "missing TYPE line for {family}\n{text}"
+            );
+        }
+        assert!(text.contains("qtx_requests_total 3\n"));
+        assert!(text.contains("qtx_batch_policy{value=\"fixed\"} 1\n"));
+        assert!(text.contains("qtx_engine_profile_calls_total{phase=\"embed\"} 3\n"));
+        assert!(text.contains("qtx_quant_gate_off_ratio{layer=\"0\",head=\"0\"} 0.5\n"));
+        // Histograms are monotone-cumulative and end at +Inf == _count.
+        let bucket_lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("qtx_latency_seconds_bucket"))
+            .collect();
+        assert_eq!(bucket_lines.len(), BUCKETS);
+        let mut prev = 0u64;
+        for line in &bucket_lines {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket: {line}");
+            prev = v;
+        }
+        assert!(bucket_lines.last().unwrap().contains("le=\"+Inf\""));
+        assert_eq!(prev, 1, "one latency sample recorded");
+        assert!(text.contains("qtx_latency_seconds_count 1\n"));
+    }
+
+    #[test]
+    fn prometheus_type_lines_are_engine_independent() {
+        // Zero-telemetry (mock engine) and populated telemetry must expose
+        // the identical set of metric families, so dashboards never break
+        // on engine choice.
+        let families = |s: &ServeStats| {
+            let snap = s.snapshot("fixed", 0, None, EngineMem::default(), 1);
+            s.prometheus(&snap)
+                .lines()
+                .filter(|l| l.starts_with("# TYPE"))
+                .map(str::to_string)
+                .collect::<Vec<_>>()
+        };
+        let bare = ServeStats::new();
+        let rich = ServeStats::new();
+        rich.merge_engine_telemetry(&sample_telemetry());
+        assert_eq!(families(&bare), families(&rich));
     }
 
     #[test]
@@ -563,7 +981,7 @@ mod tests {
             generating: 2,
             retired: 0,
         };
-        let doc = s.snapshot("continuous", 0, Some(occ), EngineMem::default()).to_string();
+        let doc = s.snapshot("continuous", 0, Some(occ), EngineMem::default(), 1).to_string();
         let parsed = Json::parse(&doc).unwrap();
         assert_eq!(parsed.req("batch_policy").unwrap().as_str(), Some("continuous"));
         let slots = parsed.req("slots").unwrap();
@@ -580,7 +998,7 @@ mod tests {
         s.decode_token(Duration::from_micros(400));
         s.decode_token(Duration::from_micros(500));
         s.decode_session_finished();
-        let doc = s.snapshot("continuous", 0, None, EngineMem::default()).to_string();
+        let doc = s.snapshot("continuous", 0, None, EngineMem::default(), 1).to_string();
         let d = Json::parse(&doc).unwrap();
         let d = d.req("decode").unwrap();
         assert_eq!(d.req("sessions_active").unwrap().as_usize(), Some(0));

@@ -1,14 +1,73 @@
 //! Leveled stderr logging with wall-clock timestamps relative to process
-//! start. Level from `QTX_LOG` (debug | info | warn, default info).
+//! start. Level from `QTX_LOG` (debug | info | warn, default info); line
+//! format from [`set_format`] (`--log-format {text,json}` on `qtx serve`).
+//!
+//! The `*_kv` variants attach structured context — trace IDs, worker
+//! indices, slot numbers — that renders as trailing `key=value` pairs in
+//! text mode and as first-class fields in json mode (one JSON object per
+//! line, string values escaped through [`crate::util::json::Json`]).
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(PartialEq, PartialOrd, Clone, Copy)]
 pub enum Level {
     Debug = 0,
     Info = 1,
     Warn = 2,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+        }
+    }
+}
+
+/// Line format: human-readable text (default) or one JSON object per line.
+#[derive(Debug, PartialEq, Clone, Copy)]
+pub enum Format {
+    Text = 0,
+    Json = 1,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> anyhow::Result<Format> {
+        match s {
+            "text" => Ok(Format::Text),
+            "json" => Ok(Format::Json),
+            _ => anyhow::bail!("unknown log format {s:?} (want text|json)"),
+        }
+    }
+}
+
+static FORMAT: AtomicU8 = AtomicU8::new(Format::Text as u8);
+
+/// Switch the process-wide line format (`--log-format json`).
+pub fn set_format(f: Format) {
+    FORMAT.store(f as u8, Ordering::Relaxed);
+}
+
+fn format() -> Format {
+    if FORMAT.load(Ordering::Relaxed) == Format::Json as u8 {
+        Format::Json
+    } else {
+        Format::Text
+    }
 }
 
 fn config() -> (Level, Instant) {
@@ -23,27 +82,101 @@ fn config() -> (Level, Instant) {
     })
 }
 
-pub fn log(level: Level, msg: &str) {
-    let (min, start) = config();
-    if level >= min {
-        let t = start.elapsed().as_secs_f64();
-        let tag = match level {
-            Level::Debug => "DBG",
-            Level::Info => "INF",
-            Level::Warn => "WRN",
-        };
-        eprintln!("[{t:8.2}s {tag}] {msg}");
+/// Render one log line (split from the eprintln so tests can pin the
+/// exact output of both formats).
+fn render(t_s: f64, level: Level, msg: &str, kv: &[(&str, &str)], fmt: Format) -> String {
+    match fmt {
+        Format::Text => {
+            let mut line = format!("[{t_s:8.2}s {}] {msg}", level.tag());
+            for (k, v) in kv {
+                line.push_str(&format!(" {k}={v}"));
+            }
+            line
+        }
+        Format::Json => {
+            let mut fields = vec![
+                ("t_s", Json::Num((t_s * 100.0).round() / 100.0)),
+                ("level", Json::Str(level.name().to_string())),
+                ("msg", Json::Str(msg.to_string())),
+            ];
+            for (k, v) in kv {
+                fields.push((k, Json::Str(v.to_string())));
+            }
+            Json::obj(fields).to_string()
+        }
     }
 }
 
+pub fn log_kv(level: Level, msg: &str, kv: &[(&str, &str)]) {
+    let (min, start) = config();
+    if level >= min {
+        eprintln!("{}", render(start.elapsed().as_secs_f64(), level, msg, kv, format()));
+    }
+}
+
+pub fn log(level: Level, msg: &str) {
+    log_kv(level, msg, &[]);
+}
+
 pub fn debug(msg: &str) {
-    log(Level::Debug, msg);
+    log_kv(Level::Debug, msg, &[]);
 }
 
 pub fn info(msg: &str) {
-    log(Level::Info, msg);
+    log_kv(Level::Info, msg, &[]);
 }
 
 pub fn warn(msg: &str) {
-    log(Level::Warn, msg);
+    log_kv(Level::Warn, msg, &[]);
+}
+
+pub fn info_kv(msg: &str, kv: &[(&str, &str)]) {
+    log_kv(Level::Info, msg, kv);
+}
+
+pub fn warn_kv(msg: &str, kv: &[(&str, &str)]) {
+    log_kv(Level::Warn, msg, kv);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_lines_carry_kv_pairs() {
+        let line = render(
+            1.5,
+            Level::Warn,
+            "slow request",
+            &[("trace", "7"), ("kind", "score")],
+            Format::Text,
+        );
+        assert_eq!(line, "[    1.50s WRN] slow request trace=7 kind=score");
+    }
+
+    #[test]
+    fn json_lines_are_parseable_and_escaped() {
+        let line = render(
+            0.25,
+            Level::Info,
+            "msg with \"quotes\" and a\nnewline",
+            &[("worker", "3")],
+            Format::Json,
+        );
+        let doc = Json::parse(&line).expect("log line must be valid json");
+        assert_eq!(doc.req("level").unwrap().as_str(), Some("info"));
+        assert_eq!(
+            doc.req("msg").unwrap().as_str(),
+            Some("msg with \"quotes\" and a\nnewline")
+        );
+        assert_eq!(doc.req("worker").unwrap().as_str(), Some("3"));
+        assert!(doc.req("t_s").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn format_parses_and_rejects() {
+        assert_eq!(Format::parse("text").unwrap(), Format::Text);
+        assert_eq!(Format::parse("json").unwrap(), Format::Json);
+        assert!(Format::parse("xml").is_err());
+    }
 }

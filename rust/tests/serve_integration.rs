@@ -12,6 +12,7 @@ use std::time::Duration;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, GenLoad, LoadgenConfig};
+use qtx::serve::obs::TraceConfig;
 use qtx::serve::protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse};
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::serve::stats::EngineMem;
@@ -51,6 +52,7 @@ fn start_server_timeouts(
         admit_window: Duration::ZERO,
         read_timeout,
         request_timeout: Duration::from_secs(10),
+        trace: TraceConfig::default(),
     };
     let info = EngineInfo {
         seq_len: SEQ_LEN,
@@ -60,6 +62,7 @@ fn start_server_timeouts(
         decode: true,
         describe: probe.describe(),
         mem: EngineMem::default(),
+        gemm_threads: 1,
     };
     let s = Server::start(cfg, info, mock_factory(cost)).unwrap();
     s.wait_ready(Duration::from_secs(10)).unwrap();
@@ -208,6 +211,7 @@ fn queue_full_returns_503() {
         admit_window: Duration::ZERO,
         read_timeout: Duration::from_secs(60),
         request_timeout: Duration::from_secs(10),
+        trace: TraceConfig::default(),
     };
     let info = EngineInfo {
         seq_len: SEQ_LEN,
@@ -217,6 +221,7 @@ fn queue_full_returns_503() {
         decode: true,
         describe: probe.describe(),
         mem: EngineMem::default(),
+        gemm_threads: 1,
     };
     let server = Server::start(
         cfg,
@@ -554,6 +559,209 @@ fn statz_matches_documented_contract() {
         live, documented,
         "live /statz keys (left) diverge from docs/API.md statz-keys list (right)"
     );
+
+    drop(c);
+    server.stop();
+}
+
+/// Families named by `# TYPE` lines in a Prometheus exposition, sorted
+/// and deduplicated.
+fn metricz_families(text: &str) -> Vec<String> {
+    let mut fams: Vec<String> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| l.split_whitespace().next().map(str::to_string))
+        .collect();
+    fams.sort();
+    fams.dedup();
+    fams
+}
+
+/// Doc conformance for `/metricz`, bidirectional like the `/statz` one:
+/// docs/API.md lists every metric family between the `metricz-names`
+/// markers; the live exposition must announce exactly that set via
+/// `# TYPE` lines. Both surfaces render one shared registry, so a family
+/// the server drops fails the doc and a family the doc forgot fails the
+/// change that added it.
+#[test]
+fn metricz_matches_documented_contract() {
+    let api = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/API.md"))
+        .expect("docs/API.md exists");
+    let begin = api
+        .find("<!-- metricz-names:begin -->")
+        .expect("docs/API.md has a <!-- metricz-names:begin --> marker");
+    let end = api.find("<!-- metricz-names:end -->").expect("metricz-names end marker");
+    let mut documented: Vec<String> = api[begin..end]
+        .lines()
+        .filter_map(|l| l.trim().strip_prefix("- `")?.strip_suffix('`').map(str::to_string))
+        .collect();
+    documented.sort();
+    assert!(!documented.is_empty(), "no families documented between the markers");
+
+    // Continuous mode exposes the full family set (slot census included).
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::ZERO);
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(5)).unwrap();
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let (status, text) = c.request("GET", "/metricz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(
+        metricz_families(&text),
+        documented,
+        "live /metricz families (left) diverge from docs/API.md metricz-names list (right)"
+    );
+
+    drop(c);
+    server.stop();
+}
+
+/// `/metricz` is well-formed Prometheus text exposition, and its numbers
+/// agree with the `/statz` snapshot it was rendered from: every sample
+/// line parses, histogram buckets are cumulative and end in `+Inf`,
+/// `_count` equals the `+Inf` bucket and the `/statz` count, counters
+/// match the JSON surface.
+#[test]
+fn metricz_exposition_is_valid_and_consistent_with_statz() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::ZERO);
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(5)).unwrap();
+    for i in 0..3 {
+        let req = ScoreRequest { id: None, tokens: vec![i, i + 1, i + 2], targets: None };
+        let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+        assert_eq!(status, 200);
+    }
+    // Same keep-alive connection, no concurrent traffic: the two scrapes
+    // see identical registry contents.
+    let statz = c.get_json("/statz").unwrap();
+    let (status, text) = c.request("GET", "/metricz", None).unwrap();
+    assert_eq!(status, 200);
+
+    // Line grammar: `# HELP|TYPE ...` comments or `name[{labels}] value`.
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value on line {line:?}"));
+        assert!(value.parse::<f64>().is_ok(), "unparseable value on {line:?}");
+        let name = name_part.split('{').next().unwrap();
+        assert!(name.starts_with("qtx_"), "unprefixed metric: {line:?}");
+        assert!(
+            name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_'),
+            "bad metric name: {line:?}"
+        );
+        if name_part.contains('{') {
+            assert!(name_part.ends_with('}'), "unterminated label set: {line:?}");
+        }
+    }
+
+    // Histogram shape: cumulative monotone buckets, `+Inf` last and equal
+    // to `_count`, `_count` equal to the JSON surface.
+    let mut cum_prev = -1.0;
+    let mut bucket_lines = 0;
+    let mut inf_cum = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("qtx_latency_seconds_bucket{le=\"") {
+            let (le, rest) = rest.split_once('"').expect("closing quote on le label");
+            let cum: f64 = rest.trim_start_matches('}').trim().parse().unwrap();
+            assert!(cum >= cum_prev, "buckets must be cumulative: {line}");
+            cum_prev = cum;
+            bucket_lines += 1;
+            assert!(inf_cum.is_none(), "+Inf must be the last bucket");
+            if le == "+Inf" {
+                inf_cum = Some(cum);
+            }
+        }
+    }
+    assert!(bucket_lines > 10, "expected the full bucket table, got {bucket_lines} lines");
+    let sample = |prefix: &str| -> f64 {
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(prefix) && !l.starts_with('#'))
+            .unwrap_or_else(|| panic!("no {prefix} sample"));
+        line.rsplit(' ').next().unwrap().parse().unwrap()
+    };
+    let count = sample("qtx_latency_seconds_count ");
+    assert_eq!(Some(count), inf_cum, "+Inf bucket must equal _count");
+    let statz_count = statz.req("latency").unwrap().req("count").unwrap().as_f64().unwrap();
+    assert_eq!(count, statz_count);
+    assert_eq!(count, 3.0);
+    assert!(sample("qtx_latency_seconds_sum ") >= 0.0);
+    // Counter + gauge spot-checks against the shared registry.
+    assert_eq!(sample("qtx_requests_ok "), 3.0);
+    assert_eq!(sample("qtx_slots_total "), MODEL_BATCH as f64);
+
+    drop(c);
+    server.stop();
+}
+
+/// `GET /debug/traces` end-to-end: one score and one generate request
+/// leave two sealed traces whose spans cover the documented lifecycle
+/// (read → parse → queue → claim → dispatch/engine_exec or prefill/step →
+/// reply), sorted by start offset, newest trace first.
+#[test]
+fn debug_traces_record_request_lifecycle() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::ZERO);
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(5)).unwrap();
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let gen = GenerateRequest { id: None, tokens: vec![3, 1, 4], max_new_tokens: 4 };
+    let (status, _) = c.request("POST", "/v1/generate", Some(&gen.to_json())).unwrap();
+    assert_eq!(status, 200);
+
+    // Same keep-alive connection: the handler sealed each trace before it
+    // could read this request, so both are in the ring.
+    let doc = c.get_json("/debug/traces?n=8").unwrap();
+    assert_eq!(doc.req("enabled").unwrap().as_bool(), Some(true));
+    let traces = doc.req("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 2, "two requests, two traces");
+    let span_names = |t: &Json| -> Vec<String> {
+        t.req("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.req("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    };
+
+    // Newest first: the generate session, then the score.
+    let (gen_t, score_t) = (&traces[0], &traces[1]);
+    assert_eq!(gen_t.req("kind").unwrap().as_str(), Some("generate"));
+    assert_eq!(gen_t.req("status").unwrap().as_str(), Some("ok"));
+    let gen_spans = span_names(gen_t);
+    for want in ["read", "parse", "queue", "claim", "prefill", "reply"] {
+        let hit = gen_spans.iter().any(|s| s == want);
+        assert!(hit, "generate trace missing {want}: {gen_spans:?}");
+    }
+    assert_eq!(
+        gen_spans.iter().filter(|s| *s == "step").count(),
+        3,
+        "4 tokens = 1 prefill + 3 decode steps: {gen_spans:?}"
+    );
+    assert_eq!(score_t.req("kind").unwrap().as_str(), Some("score"));
+    assert_eq!(score_t.req("status").unwrap().as_str(), Some("ok"));
+    let score_spans = span_names(score_t);
+    for want in ["read", "parse", "queue", "claim", "dispatch", "engine_exec", "reply"] {
+        let hit = score_spans.iter().any(|s| s == want);
+        assert!(hit, "score trace missing {want}: {score_spans:?}");
+    }
+
+    // Spans come back sorted by start offset, and totals cover the spans.
+    for t in traces {
+        let mut prev = 0;
+        for s in t.req("spans").unwrap().as_arr().unwrap() {
+            let start = s.req("start_us").unwrap().as_usize().unwrap();
+            assert!(start >= prev, "span offsets regress");
+            prev = start;
+        }
+        assert!(t.req("total_us").unwrap().as_usize().unwrap() > 0);
+    }
+
+    // `?n=1` trims to the newest trace.
+    let one = c.get_json("/debug/traces?n=1").unwrap();
+    assert_eq!(one.req("traces").unwrap().as_arr().unwrap().len(), 1);
 
     drop(c);
     server.stop();

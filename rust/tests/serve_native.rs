@@ -133,6 +133,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
             admit_window: Duration::ZERO,
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(120),
+            trace: qtx::serve::obs::TraceConfig::default(),
         },
         EngineInfo {
             seq_len,
@@ -142,6 +143,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
             decode: true,
             describe: format!("native-int8:{} W8A8 (test)", spec.config),
             mem: EngineMem::default(),
+            gemm_threads: 1,
         },
         factory,
     )

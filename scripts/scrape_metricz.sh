@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Observability smoke for CI: start a mock `qtx serve`, push a little
+# traffic through it, scrape `GET /metricz`, and keep the exposition as
+# METRICZ_snapshot.txt (uploaded as a CI artifact next to BENCH_*.json).
+# Fails if the exposition is missing the expected families/samples.
+#
+#   scripts/scrape_metricz.sh [OUT.txt]    (default: METRICZ_snapshot.txt)
+#
+# Pure bash + /dev/tcp — the CI toolchain image carries no curl.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-METRICZ_snapshot.txt}"
+PORT="${QTX_SCRAPE_PORT:-8791}"
+BIN=target/release/qtx
+[[ -x "$BIN" ]] || cargo build --release
+
+"$BIN" serve --mock --port "$PORT" &
+SERVER=$!
+trap 'kill "$SERVER" 2>/dev/null || true; wait "$SERVER" 2>/dev/null || true' EXIT
+
+# One-shot HTTP over /dev/tcp; HTTP/1.0 so the server closes for us.
+# Prints the response body (headers stripped at the blank line).
+http_get() {
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'GET %s HTTP/1.0\r\nHost: localhost\r\n\r\n' "$1" >&3
+    sed $'1,/^\r*$/d' <&3
+    exec 3<&- 3>&-
+}
+
+http_post() {
+    local body=$2
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'POST %s HTTP/1.0\r\nHost: localhost\r\nContent-Length: %d\r\n\r\n%s' \
+        "$1" "${#body}" "$body" >&3
+    sed $'1,/^\r*$/d' <&3
+    exec 3<&- 3>&-
+}
+
+# The server binds before its engine workers report ready — poll /healthz.
+ready=0
+for _ in $(seq 1 100); do
+    if body=$(http_get /healthz 2>/dev/null) && [[ "$body" == *'"ok"'* ]]; then
+        ready=1
+        break
+    fi
+    sleep 0.1
+done
+[[ "$ready" == 1 ]] || { echo "scrape_metricz: server never became healthy" >&2; exit 1; }
+
+# Traffic so counters, histograms, and decode telemetry are non-trivial.
+http_post /v1/score '{"tokens": [1, 2, 3]}' >/dev/null
+http_post /v1/generate '{"tokens": [3, 1, 4], "max_new_tokens": 4}' >/dev/null
+
+http_get /metricz >"$OUT"
+
+# Sanity: families announced, counters carry the traffic we sent.
+grep -q '^# TYPE qtx_requests_total counter$' "$OUT"
+grep -q '^# TYPE qtx_latency_seconds histogram$' "$OUT"
+grep -q '^# TYPE qtx_quant_gate_off_ratio gauge$' "$OUT"
+grep -q '^qtx_requests_ok 2$' "$OUT"
+echo "scrape_metricz: wrote $OUT ($(wc -l <"$OUT") lines)"
