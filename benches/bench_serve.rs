@@ -1,6 +1,6 @@
 //! Serving throughput/latency benches.
 //!
-//! Four sections. All but the engine comparison run on the deterministic
+//! Six sections. All but the engine comparison run on the deterministic
 //! mock engine (set QTX_BENCH_SERVE_COST_US to change the simulated
 //! per-dispatch cost; default 3000µs ≈ a tiny-config serve_score
 //! invocation):
@@ -30,6 +30,12 @@
 //!    (capacity 0), on the mock engine — the serving-layer span/ring cost
 //!    in isolation. (Engine phase timers ride the native engine's forward
 //!    and are always on; their cost is inside `engine_compare`'s numbers.)
+//! 6. **Decode scaling** (the batched-decode trajectory): generated tok/s
+//!    at {1, 4, 8, 16} concurrent sessions, batched multi-session decode
+//!    vs the per-session GEMV loop (`QTX_DECODE=gemv`). The mock engine
+//!    charges `step_cost` once per batched pass vs once per session, so
+//!    the table isolates exactly the amortization the batched worker pass
+//!    buys (docs/GENERATION.md "Batched decode").
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -39,6 +45,7 @@
 //!      QTX_BENCH_ENGINE_ITERS   engine-compare dispatches (default 10)
 //!      QTX_BENCH_GEN_REQS       decode sessions per client (default 8)
 //!      QTX_BENCH_GEN_CLIENTS    decode closed-loop clients (default 8)
+//!      QTX_BENCH_SCALE_REQS     decode-scaling sessions per client (default 4)
 //!
 //! Output: markdown tables (the repo's bench idiom) plus one
 //! `bench_serve JSON: {...}` line per row — CI collects these lines into
@@ -263,10 +270,7 @@ fn bench_decode(
         seed: 42,
         timeout: Duration::from_secs(60),
         open_rate_rps: None,
-        gen: Some(qtx::serve::loadgen::GenLoad {
-            max_new_tokens: new_tokens,
-            prompt_len: prefill_len,
-        }),
+        gen: Some(qtx::serve::loadgen::GenLoad::greedy(new_tokens, prefill_len)),
     })?;
     anyhow::ensure!(report.errors == 0, "decode loadgen errors: {}", report.errors);
     let mut c = Client::connect(&addr, Duration::from_secs(5))?;
@@ -287,6 +291,80 @@ fn bench_decode(
     drop(c);
     server.stop();
     Ok(row)
+}
+
+// ---------------------------------------------------------------------------
+// Section 6: decode scaling — batched multi-session step vs GEMV loop
+// ---------------------------------------------------------------------------
+
+struct ScaleRow {
+    mode: &'static str,
+    sessions: usize,
+    tokens_per_s: f64,
+    inter_token_p95_ms: f64,
+}
+
+/// One decode-scaling cell: `sessions` closed-loop clients each running
+/// back-to-back generation sessions, so up to `sessions` slots decode
+/// concurrently. `gemv: true` sets `QTX_DECODE=gemv` for the server's
+/// lifetime (the worker reads it once at startup), forcing the per-session
+/// step loop the batched pass replaced.
+fn bench_decode_scale(
+    sessions: usize,
+    gemv: bool,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<ScaleRow> {
+    if gemv {
+        std::env::set_var("QTX_DECODE", "gemv");
+    }
+    let run = || -> anyhow::Result<ScaleRow> {
+        let server = start_server(
+            BatchPolicy::Continuous,
+            MODEL_BATCH,
+            MATRIX_MAX_WAIT_MS,
+            1024,
+            sessions + 8,
+            cost_us,
+            0,
+        )?;
+        let addr = server.addr().to_string();
+        let report = loadgen::run(&LoadgenConfig {
+            addr: addr.clone(),
+            clients: sessions,
+            requests_per_client: reqs,
+            vocab: 256,
+            seq_len: SEQ_LEN,
+            seed: 42,
+            timeout: Duration::from_secs(60),
+            open_rate_rps: None,
+            gen: Some(qtx::serve::loadgen::GenLoad::greedy(24, 8)),
+        })?;
+        anyhow::ensure!(report.errors == 0, "decode_scaling loadgen errors: {}", report.errors);
+        let mut c = Client::connect(&addr, Duration::from_secs(5))?;
+        let statz = c.get_json("/statz")?;
+        let inter_p95 = statz
+            .req("decode")?
+            .req("inter_token")?
+            .req("p95_ms")?
+            .as_f64()
+            .unwrap_or(0.0);
+        drop(c);
+        server.stop();
+        Ok(ScaleRow {
+            mode: if gemv { "gemv" } else { "batched" },
+            sessions,
+            tokens_per_s: report.gen_tokens_per_s,
+            inter_token_p95_ms: inter_p95,
+        })
+    };
+    let row = run();
+    // Always restore the env — the batched cells (and later sections) must
+    // not inherit the GEMV escape hatch.
+    if gemv {
+        std::env::remove_var("QTX_DECODE");
+    }
+    row
 }
 
 // ---------------------------------------------------------------------------
@@ -343,7 +421,7 @@ fn bench_obs(
     )?;
     let gen = loadgen::run(&LoadgenConfig {
         addr: server.addr().to_string(),
-        ..common(Some(qtx::serve::loadgen::GenLoad { max_new_tokens: 16, prompt_len: 8 }))
+        ..common(Some(qtx::serve::loadgen::GenLoad::greedy(16, 8)))
     })?;
     anyhow::ensure!(gen.errors == 0, "obs decode loadgen errors: {}", gen.errors);
     server.stop();
@@ -618,6 +696,74 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         decode_rows.iter().all(|r| r.tokens_per_s > 0.0),
         "decode matrix produced no tokens"
+    );
+
+    // -- decode scaling: batched multi-session step vs GEMV loop -------------
+    let scale_reqs = env_usize("QTX_BENCH_SCALE_REQS", 4);
+    let mut scale_rows: Vec<(ScaleRow, ScaleRow)> = Vec::new();
+    for sessions in [1usize, 4, 8, 16] {
+        let gemv = bench_decode_scale(sessions, true, scale_reqs, cost_us)?;
+        let batched = bench_decode_scale(sessions, false, scale_reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] decode_scaling sessions={}: batched {:.1} tok/s vs gemv {:.1} tok/s \
+             ({:.2}x)",
+            sessions,
+            batched.tokens_per_s,
+            gemv.tokens_per_s,
+            batched.tokens_per_s / gemv.tokens_per_s
+        );
+        for r in [&gemv, &batched] {
+            println!(
+                "bench_serve JSON: {}",
+                Json::obj(vec![
+                    ("section", Json::Str("decode_scaling".into())),
+                    ("policy", Json::Str("continuous".into())),
+                    ("mode", Json::Str(r.mode.into())),
+                    ("sessions", Json::Num(r.sessions as f64)),
+                    ("prefill_len", Json::Num(8.0)),
+                    ("new_tokens", Json::Num(24.0)),
+                    ("tokens_per_s", Json::Num(r.tokens_per_s)),
+                    ("inter_token_p95_ms", Json::Num(r.inter_token_p95_ms)),
+                ])
+            );
+        }
+        scale_rows.push((gemv, batched));
+    }
+    let stable: Vec<Vec<String>> = scale_rows
+        .iter()
+        .map(|(g, b)| {
+            vec![
+                b.sessions.to_string(),
+                format!("{:.1}", b.tokens_per_s),
+                format!("{:.1}", g.tokens_per_s),
+                format!("{:.2}x", b.tokens_per_s / g.tokens_per_s),
+                format!("{:.2}", b.inter_token_p95_ms),
+                format!("{:.2}", g.inter_token_p95_ms),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## decode scaling — batched multi-session step vs per-session GEMV loop \
+         (mock engine, step cost charged once per batched pass)\n\n{}",
+        render(
+            &[
+                "sessions",
+                "batched tok/s",
+                "gemv tok/s",
+                "speedup",
+                "batched it p95 ms",
+                "gemv it p95 ms",
+            ],
+            &stable
+        )
+    );
+    let (g16, b16) = scale_rows.last().unwrap();
+    anyhow::ensure!(
+        b16.tokens_per_s > g16.tokens_per_s,
+        "batched decode at {} sessions ({:.1} tok/s) did not beat the GEMV loop ({:.1} tok/s)",
+        b16.sessions,
+        b16.tokens_per_s,
+        g16.tokens_per_s
     );
 
     // -- observability overhead: tracing on vs off ---------------------------

@@ -8,6 +8,7 @@
 //! qtx loadgen --port 8787 --threads 4 --requests 64
 //! qtx loadgen --port 8787 --open-loop --rate 500 --threads 32
 //! qtx loadgen --port 8787 --generate --max-new-tokens 16 --requests 8
+//! qtx loadgen --port 8787 --generate --stream --temperature 0.8 --top-p 0.95
 //! ```
 //!
 //! `serve` resolves the checkpoint with the same recipe flags as `train`
@@ -258,8 +259,25 @@ pub fn loadgen(args: &Args) -> Result<()> {
         crate::serve::protocol::GenerateRequest::DEFAULT_MAX_NEW_TOKENS,
     )?;
     let prompt_len = args.usize("prompt-len", 0)?;
-    if !generate && (args.str_opt("max-new-tokens").is_some() || prompt_len > 0) {
-        anyhow::bail!("--max-new-tokens/--prompt-len only apply with --generate");
+    // Sampling + streaming knobs forwarded verbatim to the server (see
+    // docs/GENERATION.md): `--stream` consumes the chunked token events,
+    // `--temperature/--top-k/--top-p` shape the sampled distribution.
+    let stream = args.bool("stream", false)?;
+    let temperature = args.f64("temperature", 0.0)? as f32;
+    let top_k = args.usize("top-k", 0)?;
+    let top_p = args.f64("top-p", 1.0)? as f32;
+    if !generate
+        && (args.str_opt("max-new-tokens").is_some()
+            || prompt_len > 0
+            || stream
+            || temperature != 0.0
+            || top_k > 0
+            || top_p != 1.0)
+    {
+        anyhow::bail!(
+            "--max-new-tokens/--prompt-len/--stream/--temperature/--top-k/--top-p \
+             only apply with --generate"
+        );
     }
     let cfg = LoadgenConfig {
         addr: format!("{host}:{}", args.port(8787)?),
@@ -270,7 +288,7 @@ pub fn loadgen(args: &Args) -> Result<()> {
         seed: args.u64("seed", 0)?,
         timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
         open_rate_rps: open_loop.then_some(rate),
-        gen: generate.then_some(GenLoad { max_new_tokens, prompt_len }),
+        gen: generate.then_some(GenLoad { max_new_tokens, prompt_len, stream, temperature, top_k, top_p }),
     };
     // `--dump-traces FILE` scrapes the server's completed-trace ring after
     // the run and writes Chrome Trace Event Format (chrome://tracing,

@@ -32,6 +32,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::calibrator::{calibrate, CollectOptions};
 use crate::coordinator::quantize::quantize_weights;
 use crate::infer::model::{EngineTelemetry, Int8Model, Int8Weights, KvCache, ModelOptions};
+use crate::infer::sample::{SampleParams, Sampler};
 use crate::serve::engine::{greedy_token, pack_batch_into, EngineSpec, ScoreEngine};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::util::log;
@@ -52,12 +53,29 @@ pub struct NativeInt8Engine {
     /// session), allocated lazily on a slot's first prefill and then
     /// reused — a steady-state decode step touches no allocator.
     caches: Vec<Option<KvCache>>,
-    /// Reused next-token logits buffer (`vocab_size`).
+    /// Per-slot samplers for non-greedy sessions (`None` ⇒ greedy argmax),
+    /// installed at prefill from the request's [`SampleParams`].
+    samplers: Vec<Option<Sampler>>,
+    /// Reused next-token logits buffer, sized `max_batch · vocab_size` so
+    /// the batched multi-session step writes every row without allocating;
+    /// single-session calls use the first `vocab_size` slice.
     gen_logits: Vec<f32>,
+    vocab: usize,
     max_batch: usize,
     seq_len: usize,
     causal: bool,
     config: String,
+}
+
+/// Pick the next token for `slot` from its logits row: the slot's sampler
+/// if the session is non-greedy, first-max argmax otherwise. A free
+/// function (not a method) so callers can split-borrow the logits buffer
+/// alongside the sampler table.
+fn pick_token(samplers: &mut [Option<Sampler>], slot: usize, logits: &[f32]) -> i32 {
+    match samplers[slot].as_mut() {
+        None => greedy_token(logits),
+        Some(s) => s.pick(logits) as i32,
+    }
 }
 
 impl NativeInt8Engine {
@@ -160,7 +178,9 @@ impl NativeInt8Engine {
             mask: Tensor::zeros(&[max_batch, seq_len]),
             rows: Vec::with_capacity(max_batch),
             caches: (0..max_batch).map(|_| None).collect(),
-            gen_logits: vec![0.0; vocab],
+            samplers: (0..max_batch).map(|_| None).collect(),
+            gen_logits: vec![0.0; max_batch * vocab],
+            vocab,
             max_batch,
             seq_len,
             causal,
@@ -235,32 +255,58 @@ impl ScoreEngine for NativeInt8Engine {
         true
     }
 
-    /// Prefill slot `slot`'s KV cache from `prompt` (one batched forward)
-    /// and return the first greedy token. The cache itself is allocated on
-    /// the slot's first session and reused afterwards; prefill still
-    /// allocates transient prompt-padding buffers (once per session) — the
-    /// zero-allocation contract covers the per-token `gen_step` path.
-    fn gen_prefill(&mut self, slot: usize, prompt: &[i32]) -> Result<i32> {
+    /// Prefill slot `slot`'s KV cache from `prompt` (one batched forward),
+    /// install the session's sampler, and return the first token under
+    /// `params`. The cache itself is allocated on the slot's first session
+    /// and reused afterwards; prefill still allocates transient
+    /// prompt-padding buffers (once per session) — the zero-allocation
+    /// contract covers the per-token `gen_step`/`gen_step_batch` paths.
+    fn gen_prefill(&mut self, slot: usize, prompt: &[i32], params: &SampleParams) -> Result<i32> {
         if slot >= self.max_batch {
             bail!("slot {slot} outside batch {}", self.max_batch);
         }
-        let NativeInt8Engine { model, caches, gen_logits, .. } = self;
+        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
+        samplers[slot] = if params.is_greedy() { None } else { Some(Sampler::new(*params)) };
         let cache = caches[slot].get_or_insert_with(|| KvCache::for_weights(model.weights()));
-        model.prefill(cache, prompt, gen_logits)?;
-        Ok(greedy_token(gen_logits))
+        let logits = &mut gen_logits[..*vocab];
+        model.prefill(cache, prompt, logits)?;
+        Ok(pick_token(samplers, slot, logits))
     }
 
     /// One incremental decode step on slot `slot`'s session: zero-copy
     /// over the cached codes, zero-allocation, bit-exact against a full
-    /// re-score of the prefix ([`Int8Model::decode_step`]).
+    /// re-score of the prefix ([`Int8Model::decode_step`]). This is the
+    /// single-session path (`QTX_DECODE=gemv` baseline); the worker's
+    /// default is `gen_step_batch`.
     fn gen_step(&mut self, slot: usize, last: i32) -> Result<i32> {
-        let NativeInt8Engine { model, caches, gen_logits, .. } = self;
+        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
         let cache = caches
             .get_mut(slot)
             .and_then(Option::as_mut)
             .with_context(|| format!("no generation session on slot {slot}"))?;
-        model.decode_step(cache, last, gen_logits)?;
-        Ok(greedy_token(gen_logits))
+        let logits = &mut gen_logits[..*vocab];
+        model.decode_step(cache, last, logits)?;
+        Ok(pick_token(samplers, slot, logits))
+    }
+
+    /// Advance every listed session with **one batched forward** — one
+    /// `m = steps.len()` GEMM per projection/FFN/head matmul instead of
+    /// `steps.len()` GEMV passes ([`Int8Model::decode_step_batch`], which
+    /// is `==`-bit-exact against the per-session path, so each row's
+    /// logits — and therefore each sampled token — are identical to what
+    /// `gen_step` would have produced). Validation is atomic (a bad slot
+    /// fails the call before any cache or sampler advances) and the
+    /// steady state allocates nothing: the logits buffer already spans
+    /// `max_batch` rows.
+    fn gen_step_batch(&mut self, steps: &mut [(usize, i32)]) -> Result<()> {
+        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
+        let v = *vocab;
+        let logits = &mut gen_logits[..steps.len() * v];
+        model.decode_step_batch(caches, steps, logits)?;
+        for (i, s) in steps.iter_mut().enumerate() {
+            s.1 = pick_token(samplers, s.0, &logits[i * v..(i + 1) * v]);
+        }
+        Ok(())
     }
 
     /// Fold the phase timers and quant-health counters the forward passes
@@ -301,5 +347,53 @@ mod tests {
         drop(engines);
         drop(factory);
         assert_eq!(Arc::strong_count(&weights), 1);
+    }
+
+    /// Batched and per-session decode agree token-for-token on the real
+    /// integer model, for greedy and seeded-sampled sessions alike — the
+    /// engine-level face of `decode_step_batch`'s `==`-bit-exactness
+    /// (identical logits rows ⇒ identical argmax ⇒ identical sampler
+    /// draws, since the sampler consumes logits and its own RNG only).
+    #[test]
+    fn native_gen_step_batch_matches_gen_step_exactly() {
+        use crate::infer::model::tests_support::tiny_causal_weights;
+        let weights = tiny_causal_weights();
+        let sampled = SampleParams { temperature: 0.9, top_k: 5, top_p: 0.9, seed: 42 };
+        let prompts: [&[i32]; 3] = [&[1], &[2, 3, 4], &[5, 6]];
+        let params = [SampleParams::greedy(), sampled, SampleParams { seed: 7, ..sampled }];
+        // Oracle: every session alone, through single-session gen_step.
+        let mut want = Vec::new();
+        for (p, prm) in prompts.iter().zip(params.iter()) {
+            let mut e = NativeInt8Engine::from_weights(weights.clone(), 1);
+            let mut toks = vec![e.gen_prefill(0, p, prm).unwrap()];
+            for _ in 0..4 {
+                let last = *toks.last().unwrap();
+                toks.push(e.gen_step(0, last).unwrap());
+            }
+            want.push(toks);
+        }
+        // All three sessions interleaved through the batched step.
+        let mut e = NativeInt8Engine::from_weights(weights, 1);
+        let mut got: Vec<Vec<i32>> = prompts
+            .iter()
+            .zip(params.iter())
+            .enumerate()
+            .map(|(s, (p, prm))| vec![e.gen_prefill(s, p, prm).unwrap()])
+            .collect();
+        for _ in 0..4 {
+            let mut steps: Vec<(usize, i32)> =
+                got.iter().enumerate().map(|(s, t)| (s, *t.last().unwrap())).collect();
+            e.gen_step_batch(&mut steps).unwrap();
+            for (s, st) in steps.iter().enumerate() {
+                got[s].push(st.1);
+            }
+        }
+        assert_eq!(want, got, "batched decode must reproduce per-session tokens exactly");
+        // A batch naming a slot with no session fails atomically: nothing
+        // advanced, and the live sessions continue from where they were.
+        let mut bad = vec![(0usize, *got[0].last().unwrap()), (3usize, 0)];
+        assert!(e.gen_step_batch(&mut bad).is_err());
+        let mut ok = vec![(0usize, *got[0].last().unwrap())];
+        assert!(e.gen_step_batch(&mut ok).is_ok());
     }
 }

@@ -627,6 +627,38 @@ mod tests {
         }
     }
 
+    /// The f32 kernels are m-invariant per row: row `i` of an m-row
+    /// [`gemm_f32`] / [`gemm_f32q8`] call is bit-identical to an `m = 1`
+    /// call on that row alone (both iterate rows independently inside each
+    /// NC column tile, so the per-row accumulation order never depends on
+    /// m). This is the f32 half of the batched-decode bit-exactness
+    /// argument: `decode_step_batch` may fuse n sessions' head / pre-LN
+    /// projection matmuls into one GEMM only because each output row is
+    /// the row the per-session `decode_step` would have produced.
+    #[test]
+    fn f32_gemm_rows_are_m_invariant() {
+        let (m, k, n) = (6, 40, NC + 5);
+        let mut rng = Rng::new(31);
+        let a = rand_vec(&mut rng, m * k, 0.9);
+        let btv = rand_vec(&mut rng, n * k, 0.07);
+        let bias = rand_vec(&mut rng, n, 0.2);
+        let mut batched = vec![0.0f32; m * n];
+        gemm_f32(&a, &btv, Some(&bias), m, n, k, &mut batched);
+        let mut row_out = vec![0.0f32; n];
+        for i in 0..m {
+            gemm_f32(&a[i * k..(i + 1) * k], &btv, Some(&bias), 1, n, k, &mut row_out);
+            assert_eq!(&batched[i * n..(i + 1) * n], &row_out[..], "gemm_f32 row {i}");
+        }
+
+        let w = Tensor::new(vec![k, n], rand_vec(&mut rng, k * n, 0.05)).unwrap();
+        let wq = Int8Weight::from_int8(&quantize_weight_int8(&w, EstimatorKind::MinMax)).unwrap();
+        gemm_f32q8(&a, m, &wq, Some(&bias), &mut batched);
+        for i in 0..m {
+            gemm_f32q8(&a[i * k..(i + 1) * k], 1, &wq, Some(&bias), &mut row_out);
+            assert_eq!(&batched[i * n..(i + 1) * n], &row_out[..], "gemm_f32q8 row {i}");
+        }
+    }
+
     /// The pre-summed strided u8×u8 GEMV (decode's attention products
     /// over the KV cache) is bit-identical to the dense [`gemm_q8q8`] on
     /// the packed equivalent, across stride > k and boundary shapes.

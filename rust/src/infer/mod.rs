@@ -40,8 +40,13 @@
 //!   across serve workers) + [`model::Int8Model`] (per-worker scratch
 //!   arena; zero-allocation steady-state `score`), plus the incremental
 //!   decode path: [`model::KvCache`] (per-session K/V codes on the
-//!   calibrated grids), `prefill` and `decode_step` — bit-exact against
+//!   calibrated grids), `prefill`, `decode_step`, and the batched
+//!   multi-session `decode_step_batch` (one m=n_sessions GEMM per layer,
+//!   `==`-bit-exact against per-session steps) — all bit-exact against
 //!   the full-sequence forward, zero-allocation per token.
+//! * [`sample`]    — [`sample::Sampler`]: temperature / top-k / top-p
+//!   token sampling with a seeded reproducible PRNG, one sampler per
+//!   generation slot.
 //! * [`engine`]    — [`engine::NativeInt8Engine`]: artifact + checkpoint
 //!   loading, PJRT-shared calibration, `ScoreEngine` impl.
 //! * [`reference`] — f32 fake-quant oracle used by the artifact-free
@@ -53,7 +58,9 @@ mod math;
 pub mod model;
 pub mod pool;
 pub mod reference;
+pub mod sample;
 pub mod simd;
 
 pub use engine::NativeInt8Engine;
 pub use model::{Int8Model, Int8Weights, KvCache, ModelOptions, Scratch};
+pub use sample::{SampleParams, Sampler};

@@ -1672,6 +1672,361 @@ impl Int8Model {
         cache.len = pos + 1;
         Ok(())
     }
+
+    /// Advance `steps.len()` independent generation sessions one token each
+    /// in a single batched pass: every row-dense kernel — the Q/K/V and
+    /// output projections, both FFN matmuls, and the vocab head — runs as
+    /// **one `m = n_sessions` GEMM per layer** instead of n GEMV calls,
+    /// while attention over each session's cache stays per-session (prefix
+    /// lengths are ragged, so there is no shared attention shape to batch).
+    ///
+    /// `steps[i] = (slot, token)` feeds `token` to the session whose
+    /// [`KvCache`] lives at `caches[slot]`; row `i` of `logits_out`
+    /// (`n · vocab`) receives that session's next-token logits. Slots must
+    /// be distinct — a session can only advance one position per pass.
+    ///
+    /// **Bit-exactness contract** (pinned by the batched parity tests
+    /// below): row `i` of the output is `==`-equal to what a standalone
+    /// [`Int8Model::decode_step`] on `caches[slot]` would produce, for
+    /// every batch composition including ragged prefix lengths. The
+    /// argument is m-invariance end to end: the integer kernels compute
+    /// row `i` of an m-row call bit-identically to an m=1 call on that row
+    /// ([`gemm_q8`] row blocks, pinned by
+    /// `gemv_q8_equals_gemm_rows_bit_exactly`), the f32 kernels iterate
+    /// rows independently ([`gemm_f32`]/[`gemm_f32q8`], pinned by
+    /// `f32_gemm_rows_are_m_invariant`), and all remaining glue
+    /// (layernorm, requant taps, gate logits, per-session attention) is
+    /// row-local and runs the same per-row operations in the same order.
+    ///
+    /// Steady-state contract: **zero heap allocations** — the batch reuses
+    /// the same [`Scratch`] arena rows `score` uses (sized for
+    /// `batch_size · seq_len ≥ n` rows at construction), asserted under
+    /// the `alloc-counter` feature. Validation is atomic: on `Err`, no
+    /// cache has been touched.
+    pub fn decode_step_batch(
+        &mut self,
+        caches: &mut [Option<KvCache>],
+        steps: &[(usize, i32)],
+        logits_out: &mut [f32],
+    ) -> Result<()> {
+        #[cfg(feature = "alloc-counter")]
+        let allocs0 = crate::util::alloc::allocations();
+        self.decode_step_batch_inner(caches, steps, logits_out)?;
+        #[cfg(feature = "alloc-counter")]
+        debug_assert_eq!(
+            crate::util::alloc::allocations(),
+            allocs0,
+            "decode_step_batch allocated on the dispatch thread"
+        );
+        Ok(())
+    }
+
+    fn decode_step_batch_inner(
+        &mut self,
+        caches: &mut [Option<KvCache>],
+        steps: &[(usize, i32)],
+        logits_out: &mut [f32],
+    ) -> Result<()> {
+        self.check_decode_supported()?;
+        let n = steps.len();
+        if n == 0 {
+            return Ok(());
+        }
+        // Validate every session up front so a bad row cannot leave the
+        // batch half-stepped: after this block the body only `expect`s.
+        {
+            let v = self.weights.cfg.vocab_size;
+            if n > self.scratch.b {
+                bail!(
+                    "batched decode of {n} sessions exceeds the scratch batch {}",
+                    self.scratch.b
+                );
+            }
+            if logits_out.len() != n * v {
+                bail!("logits buffer of {} (want {n}·vocab = {})", logits_out.len(), n * v);
+            }
+            for (i, &(ci, token)) in steps.iter().enumerate() {
+                let cache = match caches.get(ci).and_then(|c| c.as_ref()) {
+                    Some(c) => c,
+                    None => bail!("batch row {i}: no KV cache bound to slot {ci}"),
+                };
+                self.check_cache(cache)?;
+                if cache.len >= cache.cap {
+                    bail!(
+                        "batch row {i}: KV cache full ({}/{} positions)",
+                        cache.len,
+                        cache.cap
+                    );
+                }
+                if token < 0 || token as usize >= v {
+                    bail!("batch row {i}: token id {token} outside vocab {v}");
+                }
+                if steps[..i].iter().any(|&(cj, _)| cj == ci) {
+                    bail!("batch row {i}: slot {ci} appears twice in one batched step");
+                }
+            }
+        }
+
+        let Int8Model { weights, scratch, .. } = self;
+        let w: &Int8Weights = weights;
+        let cfg = &w.cfg;
+        let (d, nh, v) = (cfg.d_model, cfg.n_heads, cfg.vocab_size);
+        let dh = d / nh;
+        let ff = w.ff_dim();
+        let pre_ln = !is_post_ln(cfg);
+        let opts = &w.opts;
+
+        // n-row slices of the shared scratch arena: the arena holds
+        // `batch_size · seq_len` rows, so n ≤ batch_size sessions reuse the
+        // buffers `score` owns — batched decode adds no storage of its own.
+        // Attention scratch (`scores`/`probs`/`ctx`) is per-session
+        // sequential, sliced to each session's prefix inside the loop.
+        let h_f = &mut scratch.h_f[..n * d];
+        let ln_f = &mut scratch.ln_f[..n * d];
+        let proj_f = &mut scratch.proj_f[..n * d];
+        let attn_f = &mut scratch.attn_f[..n * d];
+        let res_f = &mut scratch.res_f[..n * d];
+        let base_f = &mut scratch.base_f[..n * d];
+        let ffn_f = &mut scratch.ffn_f[..n * ff];
+        let glog = &mut scratch.glog[..n * nh];
+        let scores_buf = &mut scratch.scores[..];
+        let ctx_f = &mut scratch.ctx_f[..dh];
+        let h_q = &mut scratch.h_q[..n * d];
+        let q_u8 = &mut scratch.q_u8[..n * d];
+        let k_u8 = &mut scratch.k_u8[..n * d];
+        let v_u8 = &mut scratch.v_u8[..n * d];
+        let merged = &mut scratch.merged[..n * d];
+        let attn_u8 = &mut scratch.attn_u8[..n * d];
+        let res1_u8 = &mut scratch.res1_u8[..n * d];
+        let fin_u8 = &mut scratch.fin_u8[..n * d];
+        let res2_u8 = &mut scratch.res2_u8[..n * d];
+        let ffn_u8 = &mut scratch.ffn_u8[..n * ff];
+        let probs_buf = &mut scratch.probs_u8[..];
+        let telem = &mut scratch.telem;
+        let mut ph_mark = Instant::now();
+
+        // ---- embed each session's token at its own position ----
+        for (i, &(ci, token)) in steps.iter().enumerate() {
+            let pos = caches[ci].as_ref().expect("validated").len;
+            let tok = token as usize;
+            let te = &w.tok_emb.data[tok * d..(tok + 1) * d];
+            let pe = &w.pos_emb.data[pos * d..(pos + 1) * d];
+            let row = &mut proj_f[i * d..(i + 1) * d];
+            for ((o, &tw), &pw) in row.iter_mut().zip(te).zip(pe) {
+                *o = w.tok_emb.scale * tw as f32 + w.pos_emb.scale * pw as f32;
+            }
+        }
+        if let Some((g, bb)) = &w.emb_ln {
+            layernorm_rows(proj_f, g, bb, ln_f);
+            quantize_codes(ln_f, &w.embed_qp, h_q);
+        } else {
+            quantize_codes(proj_f, &w.embed_qp, h_q);
+        }
+        dequant_codes(h_q, &w.embed_qp, h_f);
+        let mut h_grid = w.embed_qp;
+        telem.tick(PH_EMBED, &mut ph_mark);
+
+        let inv_sqrt = 1.0 / (dh as f32).sqrt();
+        for (li, lw) in w.layers.iter().enumerate() {
+            let g = &lw.grids;
+            let xin_f: &[f32] = if pre_ln {
+                layernorm_rows(h_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                ln_f
+            } else {
+                h_f
+            };
+            let xin_q: Option<QView<'_>> = if pre_ln {
+                None
+            } else {
+                Some(QView {
+                    data: h_q,
+                    scale: h_grid.scale,
+                    zero_point: h_grid.zero_point as i32,
+                })
+            };
+            {
+                let lh = &mut telem.layers[li];
+                let mut proj = |wm: &Int8Weight, bias: &[f32], codes: &mut [u8], qp: &QParams| {
+                    match xin_q {
+                        Some(q) => gemm_q8(q, n, wm, Some(bias), proj_f),
+                        None => gemm_f32q8(xin_f, n, wm, Some(bias), proj_f),
+                    }
+                    quantize_tap(proj_f, qp, codes, lh);
+                };
+                proj(&lw.wq, &lw.bq, q_u8, &g.q);
+                proj(&lw.wk, &lw.bk, k_u8, &g.k);
+                proj(&lw.wv, &lw.bv, v_u8, &g.v);
+            }
+            for (i, &(ci, _)) in steps.iter().enumerate() {
+                let cache = caches[ci].as_mut().expect("validated");
+                let pos = cache.len;
+                cache.store_token(
+                    li,
+                    pos,
+                    &k_u8[i * d..(i + 1) * d],
+                    &v_u8[i * d..(i + 1) * d],
+                );
+            }
+
+            if let Some(gs) = &lw.gate {
+                gs.logits_into(xin_f, n, 1, nh, dh, glog);
+            }
+            telem.tick(PH_QKV, &mut ph_mark);
+
+            // Attention stays per-session: each cache has its own prefix
+            // length, so q·Kᵀ / p·V are the same 1×n_keys kernels a
+            // standalone decode_step runs, in the same order per row.
+            for (i, &(ci, _)) in steps.iter().enumerate() {
+                let cache = caches[ci].as_ref().expect("validated");
+                let n_keys = cache.len + 1;
+                let scores = &mut scores_buf[..n_keys];
+                let probs_u8 = &mut probs_buf[..n_keys];
+                for hi in 0..nh {
+                    let qv = QView {
+                        data: &q_u8[i * d + hi * dh..i * d + (hi + 1) * dh],
+                        scale: g.q.scale,
+                        zero_point: g.q.zero_point as i32,
+                    };
+                    let kv = QView {
+                        data: cache.head_k(li, hi, n_keys),
+                        scale: g.k.scale,
+                        zero_point: g.k.zero_point as i32,
+                    };
+                    gemv_q8q8_presummed(
+                        qv,
+                        kv,
+                        dh,
+                        cache.head_k_sums(li, hi, n_keys),
+                        n_keys,
+                        dh,
+                        scores,
+                    );
+                    telem.tick(PH_SCORE, &mut ph_mark);
+                    for sv in scores.iter_mut() {
+                        *sv *= inv_sqrt;
+                    }
+                    softmax_stretch_clip(scores, opts.gamma, opts.zeta);
+                    {
+                        let lh = &mut telem.layers[li];
+                        for &p in scores.iter() {
+                            lh.softmax_zero += (p == 0.0) as u64;
+                            lh.softmax_one += (p == 1.0) as u64;
+                        }
+                        lh.probs += n_keys as u64;
+                    }
+                    quantize_tap(scores, &g.probs, probs_u8, &mut telem.layers[li]);
+                    telem.tick(PH_SOFTMAX, &mut ph_mark);
+
+                    let pv = QView {
+                        data: probs_u8,
+                        scale: g.probs.scale,
+                        zero_point: g.probs.zero_point as i32,
+                    };
+                    let vv = QView {
+                        data: cache.head_v_t(li, hi),
+                        scale: g.v.scale,
+                        zero_point: g.v.zero_point as i32,
+                    };
+                    gemv_q8q8_presummed(
+                        pv,
+                        vv,
+                        cache.cap,
+                        cache.head_v_sums(li, hi),
+                        dh,
+                        n_keys,
+                        ctx_f,
+                    );
+                    if cfg.use_gate {
+                        let gp = sigmoid(glog[i * nh + hi]);
+                        telem.layers[li].gate_off[hi] += (gp < GATE_OFF_THRESHOLD) as u64;
+                        telem.layers[li].gate_total[hi] += 1;
+                        for o in ctx_f.iter_mut() {
+                            *o = opts.gate_scale * (gp * *o);
+                        }
+                    }
+                    quantize_tap(
+                        ctx_f,
+                        &g.ctx,
+                        &mut merged[i * d + hi * dh..i * d + (hi + 1) * dh],
+                        &mut telem.layers[li],
+                    );
+                    telem.tick(PH_CTX, &mut ph_mark);
+                }
+            }
+
+            let ctx_view = QView {
+                data: merged,
+                scale: g.ctx.scale,
+                zero_point: g.ctx.zero_point as i32,
+            };
+            gemm_q8(ctx_view, n, &lw.wo, Some(&lw.bo), attn_f);
+            quantize_tap(attn_f, &g.attn_out, attn_u8, &mut telem.layers[li]);
+
+            add_dequant(h_f, attn_u8, &g.attn_out, res_f);
+            quantize_tap(res_f, &g.res1, res1_u8, &mut telem.layers[li]);
+            dequant_codes(res1_u8, &g.res1, res_f);
+            telem.tick(PH_OUT, &mut ph_mark);
+
+            if pre_ln {
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
+                base_f.copy_from_slice(res_f);
+            } else {
+                layernorm_rows(res_f, &lw.ln1_g, &lw.ln1_b, ln_f);
+                quantize_tap(ln_f, &g.fin, fin_u8, &mut telem.layers[li]);
+                dequant_codes(fin_u8, &g.fin, base_f);
+            }
+
+            let fin_view = QView {
+                data: fin_u8,
+                scale: g.fin.scale,
+                zero_point: g.fin.zero_point as i32,
+            };
+            gemm_q8(fin_view, n, &lw.w1, Some(&lw.b1), ffn_f);
+            for vv2 in ffn_f.iter_mut() {
+                *vv2 = gelu_tanh(*vv2);
+            }
+            quantize_tap(ffn_f, &g.ffn_h, ffn_u8, &mut telem.layers[li]);
+            let ffn_view = QView {
+                data: ffn_u8,
+                scale: g.ffn_h.scale,
+                zero_point: g.ffn_h.zero_point as i32,
+            };
+            gemm_q8(ffn_view, n, &lw.w2, Some(&lw.b2), proj_f);
+            // attn_u8 is free here
+            quantize_tap(proj_f, &g.ffn_out, attn_u8, &mut telem.layers[li]);
+
+            add_dequant(base_f, attn_u8, &g.ffn_out, res_f);
+            quantize_tap(res_f, &g.res2, res2_u8, &mut telem.layers[li]);
+            if pre_ln {
+                h_q.copy_from_slice(res2_u8);
+                h_grid = g.res2;
+                dequant_codes(h_q, &h_grid, h_f);
+            } else {
+                dequant_codes(res2_u8, &g.res2, res_f);
+                layernorm_rows(res_f, &lw.ln2_g, &lw.ln2_b, ln_f);
+                let pg = g.post_ln2.expect("post-LN layer has an ln2_out grid");
+                quantize_tap(ln_f, &pg, h_q, &mut telem.layers[li]);
+                h_grid = pg;
+                dequant_codes(h_q, &h_grid, h_f);
+            }
+            telem.tick(PH_FFN, &mut ph_mark);
+        }
+
+        if let Some((g, bb)) = &w.final_ln {
+            layernorm_rows(h_f, g, bb, ln_f);
+            let fq = w.final_qp.expect("pre-LN model has a final_out grid");
+            quantize_codes(ln_f, &fq, h_q);
+            dequant_codes(h_q, &fq, h_f);
+        }
+
+        gemm_f32(h_f, &w.head_wt, Some(&w.head_b), n, v, d, logits_out);
+        telem.tick(PH_HEAD, &mut ph_mark);
+        for &(ci, _) in steps {
+            caches[ci].as_mut().expect("validated").len += 1;
+        }
+        Ok(())
+    }
 }
 
 /// Row-parallel [`gemm_q8`]: split `m` across the pool (row results are
@@ -2283,6 +2638,147 @@ mod tests {
         run_decode_parity(&causal_bert_cfg("gated_mlp"), -0.03, 1.0, 1.0);
     }
 
+    /// Batched-vs-single-step parity: for a composition of sessions with
+    /// **ragged prefix lengths**, every `decode_step_batch` output row must
+    /// be `==`-equal to the standalone `decode_step` trajectory of that
+    /// session (integer kernels are exact and every f32 kernel is
+    /// m-invariant per row). Sessions drop out of the batch as they hit
+    /// `seq_len`, and the slot order is rotated every step, so the test
+    /// sweeps batch sizes n..1 and row orders ≠ slot orders.
+    fn run_batched_decode_parity(cfg: &ConfigInfo, gamma: f32, zeta: f32, gate_scale: f32) {
+        let (params, points, qps, _) = calibrated_setup(cfg, gamma, zeta, gate_scale);
+        let opts = ModelOptions { gamma, zeta, gate_scale, w_est: EstimatorKind::MinMax };
+        let mut model = Int8Model::build(cfg, &params, &points, &qps, opts).unwrap();
+        let (t, v) = (cfg.seq_len, cfg.vocab_size);
+        let mut rng = Rng::new(123);
+        let prefix_lens = [1usize, t / 2, t - 2];
+        let n = prefix_lens.len();
+        assert!(n <= cfg.batch_size, "composition must fit the scratch batch");
+        let streams: Vec<Vec<i32>> = (0..n)
+            .map(|_| (0..t).map(|_| rng.below(v as u32) as i32).collect())
+            .collect();
+
+        // Oracle: each session advanced alone with single-token steps.
+        let mut oracle: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (s, stream) in streams.iter().enumerate() {
+            let mut cache = KvCache::for_weights(model.weights());
+            let mut logits = vec![0.0f32; v];
+            model.prefill(&mut cache, &stream[..prefix_lens[s]], &mut logits).unwrap();
+            let mut rows = Vec::new();
+            for p in prefix_lens[s]..t {
+                model.decode_step(&mut cache, stream[p], &mut logits).unwrap();
+                rows.push(logits.clone());
+            }
+            oracle.push(rows);
+        }
+
+        // Batched: the same sessions advanced together.
+        let mut caches: Vec<Option<KvCache>> =
+            (0..n).map(|_| Some(KvCache::for_weights(model.weights()))).collect();
+        let mut pos = prefix_lens;
+        {
+            let mut logits = vec![0.0f32; v];
+            for s in 0..n {
+                let c = caches[s].as_mut().unwrap();
+                model.prefill(c, &streams[s][..prefix_lens[s]], &mut logits).unwrap();
+            }
+        }
+        let mut logits = vec![0.0f32; n * v];
+        let mut round = 0usize;
+        loop {
+            let mut steps: Vec<(usize, i32)> =
+                (0..n).filter(|&s| pos[s] < t).map(|s| (s, streams[s][pos[s]])).collect();
+            if steps.is_empty() {
+                break;
+            }
+            steps.rotate_left(round % steps.len());
+            model
+                .decode_step_batch(&mut caches, &steps, &mut logits[..steps.len() * v])
+                .unwrap();
+            for (i, &(s, _)) in steps.iter().enumerate() {
+                let k = pos[s] - prefix_lens[s];
+                assert_eq!(
+                    logits[i * v..(i + 1) * v],
+                    oracle[s][k][..],
+                    "session {s} position {} (batch of {})",
+                    pos[s],
+                    steps.len()
+                );
+                pos[s] += 1;
+            }
+            round += 1;
+        }
+        for (s, c) in caches.iter().enumerate() {
+            assert_eq!(c.as_ref().unwrap().len(), t, "session {s} cache length");
+        }
+    }
+
+    #[test]
+    fn batched_decode_parity_opt_vanilla_softmax() {
+        run_batched_decode_parity(&test_cfg("opt", "softmax"), 0.0, 1.0, 1.0);
+    }
+
+    #[test]
+    fn batched_decode_parity_opt_clipped_softmax() {
+        run_batched_decode_parity(&test_cfg("opt", "softmax"), -0.08, 1.05, 1.0);
+    }
+
+    #[test]
+    fn batched_decode_parity_opt_gated_linear_with_gate_scale() {
+        run_batched_decode_parity(&test_cfg("opt", "gated_linear"), 0.0, 1.0, 2.0);
+    }
+
+    #[test]
+    fn batched_decode_parity_postln_bert_gated_mlp() {
+        run_batched_decode_parity(&causal_bert_cfg("gated_mlp"), -0.03, 1.0, 1.0);
+    }
+
+    /// Bad batch rows must fail atomically: no cache advances, and the
+    /// same composition succeeds once the bad row is removed.
+    #[test]
+    fn decode_step_batch_validates_atomically() {
+        let weights = tiny_causal_weights();
+        let mut model = Int8Model::from_weights(weights);
+        let v = model.cfg().vocab_size;
+        let mut caches: Vec<Option<KvCache>> = vec![
+            Some(KvCache::for_weights(model.weights())),
+            Some(KvCache::for_weights(model.weights())),
+            None,
+        ];
+        let mut row = vec![0.0f32; v];
+        model.prefill(caches[0].as_mut().unwrap(), &[1, 2], &mut row).unwrap();
+        model.prefill(caches[1].as_mut().unwrap(), &[3], &mut row).unwrap();
+        let mut logits = vec![0.0f32; 2 * v];
+
+        // Empty batch is a no-op.
+        model.decode_step_batch(&mut caches, &[], &mut []).unwrap();
+        // A slot may not appear twice in one pass.
+        assert!(model.decode_step_batch(&mut caches, &[(0, 1), (0, 2)], &mut logits).is_err());
+        // Unbound slot.
+        assert!(model.decode_step_batch(&mut caches, &[(0, 1), (2, 2)], &mut logits).is_err());
+        // Out-of-vocab token in any row poisons the whole batch.
+        assert!(model
+            .decode_step_batch(&mut caches, &[(0, 1), (1, v as i32)], &mut logits)
+            .is_err());
+        // Logits buffer must be exactly n·vocab.
+        assert!(model
+            .decode_step_batch(&mut caches, &[(0, 1), (1, 2)], &mut logits[..v])
+            .is_err());
+        // More sessions than the scratch batch was sized for.
+        let too_many: Vec<(usize, i32)> =
+            (0..model.cfg().batch_size + 1).map(|s| (s, 1)).collect();
+        let mut big = vec![0.0f32; too_many.len() * v];
+        assert!(model.decode_step_batch(&mut caches, &too_many, &mut big).is_err());
+
+        // Atomicity: every failure above left both caches untouched …
+        assert_eq!(caches[0].as_ref().unwrap().len(), 2);
+        assert_eq!(caches[1].as_ref().unwrap().len(), 1);
+        // … and the cleaned-up composition still advances both sessions.
+        model.decode_step_batch(&mut caches, &[(0, 4), (1, 5)], &mut logits).unwrap();
+        assert_eq!(caches[0].as_ref().unwrap().len(), 3);
+        assert_eq!(caches[1].as_ref().unwrap().len(), 2);
+    }
+
     #[test]
     fn decode_rejects_non_causal_and_positive_gamma() {
         // Bidirectional model: no decode.
@@ -2353,6 +2849,38 @@ mod tests {
             crate::util::alloc::allocations(),
             before,
             "steady-state decode_step allocated on the dispatch thread"
+        );
+    }
+
+    /// The batched decode path holds the same contract: after warm-up, a
+    /// multi-session `decode_step_batch` performs no heap allocation on
+    /// the dispatch thread (the batch reuses `score`'s scratch rows).
+    #[cfg(feature = "alloc-counter")]
+    #[test]
+    fn steady_state_decode_step_batch_is_allocation_free() {
+        let cfg = test_cfg("opt", "softmax");
+        let (params, points, qps, _) = calibrated_setup(&cfg, 0.0, 1.0, 1.0);
+        let mut model =
+            Int8Model::build(&cfg, &params, &points, &qps, ModelOptions::default()).unwrap();
+        let v = cfg.vocab_size;
+        let mut caches: Vec<Option<KvCache>> =
+            (0..3).map(|_| Some(KvCache::for_weights(model.weights()))).collect();
+        let mut row = vec![0.0f32; v];
+        let prompts: [&[i32]; 3] = [&[1, 2], &[3], &[4, 5, 6]];
+        for (s, prompt) in prompts.iter().enumerate() {
+            model.prefill(caches[s].as_mut().unwrap(), prompt, &mut row).unwrap();
+        }
+        let mut logits = vec![0.0f32; 3 * v];
+        model.decode_step_batch(&mut caches, &[(0, 7), (1, 8), (2, 9)], &mut logits).unwrap();
+        let before = crate::util::alloc::allocations();
+        for tok in [4i32, 5, 6] {
+            let steps = [(0usize, tok), (1, tok), (2, tok)];
+            model.decode_step_batch(&mut caches, &steps, &mut logits).unwrap();
+        }
+        assert_eq!(
+            crate::util::alloc::allocations(),
+            before,
+            "steady-state decode_step_batch allocated on the dispatch thread"
         );
     }
 

@@ -1,0 +1,289 @@
+//! Token sampling for the decode path: temperature / top-k / top-p over a
+//! logits row, with a seeded, reproducible PRNG ([`crate::util::rng::Rng`]).
+//!
+//! # Exact semantics (the wire contract of `/v1/generate`'s sampling knobs)
+//!
+//! Given a logits row and [`SampleParams`] `{temperature, top_k, top_p,
+//! seed}`:
+//!
+//! 1. **Greedy short-circuit** — `temperature == 0.0` returns
+//!    [`argmax`] (first-max tie-breaking, matching `jnp.argmax` and the
+//!    scoring epilogue) and consumes **no** randomness.
+//! 2. **Temperature softmax** — probabilities are
+//!    `softmax(logits / temperature)` over the full vocabulary (computed
+//!    max-shifted, so any finite logits are safe).
+//! 3. **Ordering + tie-breaking** — candidates are ordered by probability
+//!    descending, ties broken by token id ascending. This total order is
+//!    what "top" means below, so runs are reproducible even with exactly
+//!    tied probabilities.
+//! 4. **top-k** — keep the first `top_k` candidates of that order
+//!    (`0` disables). `top_k == 1` is exactly [`argmax`].
+//! 5. **top-p (nucleus)** — keep the smallest prefix of the (post-top-k)
+//!    order whose cumulative probability **in the full-softmax measure**
+//!    reaches `top_p`; the candidate that crosses the threshold is
+//!    included, and at least one candidate always survives (`1.0`
+//!    disables). If top-k removed so much mass that `top_p` is
+//!    unreachable, the whole top-k set is kept.
+//! 6. **Renormalize + draw** — the surviving candidates are renormalized
+//!    and one uniform draw ([`Rng::f64`]) walks their cumulative sums.
+//!
+//! # Seed reproducibility contract
+//!
+//! A [`Sampler`] is seeded from `SampleParams::seed` alone and consumes
+//! exactly **one** `f64` draw per sampled token (none on the greedy
+//! path). Token choices are therefore a pure function of
+//! `(logits history, params)` — independent of which batcher slot the
+//! session landed on, what other sessions share its batched decode step,
+//! and of wall-clock time. Replaying a request with the same seed (echoed
+//! in the response) reproduces the continuation bit-for-bit.
+//!
+//! Steady-state allocation: the candidate buffer is grown on the first
+//! [`Sampler::pick`] call and reused afterwards, keeping the per-token
+//! serving loop allocation-free once warm.
+
+use crate::util::rng::Rng;
+
+/// Per-request sampling parameters (defaults are fully greedy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleParams {
+    /// Softmax temperature; `0.0` means greedy argmax (the default).
+    pub temperature: f32,
+    /// Keep only the `top_k` most probable tokens (`0` disables).
+    pub top_k: usize,
+    /// Nucleus threshold in `(0, 1]`; `1.0` disables.
+    pub top_p: f32,
+    /// PRNG seed; the whole continuation is a pure function of it.
+    pub seed: u64,
+}
+
+impl Default for SampleParams {
+    fn default() -> Self {
+        SampleParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SampleParams {
+    /// Greedy decoding (the `/v1/generate` default — no randomness).
+    pub fn greedy() -> SampleParams {
+        SampleParams::default()
+    }
+
+    /// Whether these parameters decode greedily (no sampler state needed;
+    /// the response then omits the `seed` echo unless one was supplied).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+}
+
+/// First-max argmax over a logits row (ties break to the lowest token id,
+/// matching `jnp.argmax` — the tie rule the scoring epilogue and the
+/// greedy serving path share).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// One generation session's sampling state: the seeded PRNG plus a reused
+/// candidate buffer. Engines keep one per live slot (`slot = session`);
+/// greedy sessions keep none.
+pub struct Sampler {
+    params: SampleParams,
+    rng: Rng,
+    /// `(probability weight, token id)` candidates, reused across tokens.
+    cand: Vec<(f32, u32)>,
+}
+
+impl Sampler {
+    /// Seed a sampler from `params` (see the module docs for the
+    /// reproducibility contract).
+    pub fn new(params: SampleParams) -> Sampler {
+        Sampler { params, rng: Rng::new(params.seed), cand: Vec::new() }
+    }
+
+    /// The parameters this sampler was built from.
+    pub fn params(&self) -> &SampleParams {
+        &self.params
+    }
+
+    /// Sample one token id from `logits` under the module-doc semantics.
+    pub fn pick(&mut self, logits: &[f32]) -> usize {
+        debug_assert!(!logits.is_empty());
+        if self.params.is_greedy() {
+            return argmax(logits);
+        }
+        let t = self.params.temperature;
+        // Max-shifted temperature softmax (unnormalized weights; `total`
+        // carries the normalizer so nothing is divided until the draw).
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        self.cand.clear();
+        self.cand.reserve(logits.len());
+        let mut total = 0.0f64;
+        for (j, &l) in logits.iter().enumerate() {
+            let w = ((l - max) / t).exp();
+            total += w as f64;
+            self.cand.push((w, j as u32));
+        }
+        // Probability descending, token id ascending on ties — the total
+        // order that makes top-k/top-p deterministic. `total_cmp` gives a
+        // total order on f32, and `sort_unstable` allocates nothing.
+        self.cand.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut kept = self.cand.len();
+        if self.params.top_k > 0 {
+            kept = kept.min(self.params.top_k);
+        }
+        if self.params.top_p < 1.0 {
+            // Smallest prefix reaching `top_p` of the full-softmax mass;
+            // the crossing candidate is included.
+            let threshold = self.params.top_p as f64 * total;
+            let mut cum = 0.0f64;
+            for (i, &(w, _)) in self.cand[..kept].iter().enumerate() {
+                cum += w as f64;
+                if cum >= threshold {
+                    kept = i + 1;
+                    break;
+                }
+            }
+        }
+        let kept_total: f64 = self.cand[..kept].iter().map(|&(w, _)| w as f64).sum();
+        // One uniform draw walks the renormalized cumulative sums. The
+        // last survivor always catches the draw (`r < kept_total`).
+        let r = self.rng.f64() * kept_total;
+        let mut cum = 0.0f64;
+        for &(w, j) in &self.cand[..kept] {
+            cum += w as f64;
+            if r < cum {
+                return j as usize;
+            }
+        }
+        self.cand[kept - 1].1 as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_params_pick_argmax_without_randomness() {
+        let logits = [0.1, 2.0, -1.0, 2.0];
+        assert_eq!(argmax(&logits), 1, "first max wins the tie");
+        let mut s = Sampler::new(SampleParams::greedy());
+        for _ in 0..5 {
+            assert_eq!(s.pick(&logits), 1);
+        }
+        // The greedy path consumed no randomness: a fresh sampler's rng
+        // stream is untouched, so a later sampled pick is reproducible
+        // against a sampler that never took the greedy path.
+        let mut a = Sampler::new(SampleParams { temperature: 0.7, seed: 9, ..SampleParams::greedy() });
+        let mut b = Sampler::new(SampleParams { temperature: 0.7, seed: 9, ..SampleParams::greedy() });
+        assert_eq!(a.pick(&logits), b.pick(&logits));
+    }
+
+    #[test]
+    fn same_seed_same_sequence_different_seed_diverges() {
+        let params = SampleParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 42 };
+        let logits: Vec<f32> = (0..50).map(|i| ((i * 7919) % 23) as f32 * 0.13).collect();
+        let run = |params: SampleParams| {
+            let mut s = Sampler::new(params);
+            (0..32).map(|_| s.pick(&logits)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(params), run(params), "same seed must replay exactly");
+        let other = run(SampleParams { seed: 43, ..params });
+        assert_ne!(run(params), other, "different seeds must diverge");
+    }
+
+    #[test]
+    fn top_k_one_is_argmax_for_any_temperature() {
+        let logits: Vec<f32> = (0..40).map(|i| ((i * 31) % 17) as f32 - 8.0).collect();
+        let want = argmax(&logits);
+        for temp in [0.1f32, 0.7, 1.0, 4.0] {
+            let mut s =
+                Sampler::new(SampleParams { temperature: temp, top_k: 1, top_p: 1.0, seed: 5 });
+            for _ in 0..20 {
+                assert_eq!(s.pick(&logits), want, "top_k=1 at temperature {temp}");
+            }
+        }
+    }
+
+    #[test]
+    fn temperature_to_zero_converges_to_greedy() {
+        // Distinct logits: as t → 0 the max's softmax weight → 1, so every
+        // draw lands on the argmax long before t reaches 0 exactly.
+        let logits = [0.5f32, 3.0, -1.0, 2.4, 0.0];
+        let want = argmax(&logits);
+        let mut s =
+            Sampler::new(SampleParams { temperature: 1e-3, top_k: 0, top_p: 1.0, seed: 77 });
+        for _ in 0..100 {
+            assert_eq!(s.pick(&logits), want);
+        }
+    }
+
+    #[test]
+    fn top_p_keeps_smallest_prefix_including_crossing_token() {
+        // Softmax of [ln 8, ln 4, ln 2, ln 1] = [8/15, 4/15, 2/15, 1/15].
+        let logits = [8.0f32.ln(), 4.0f32.ln(), 2.0f32.ln(), 1.0f32.ln()];
+        // top_p = 0.6: 8/15 ≈ 0.533 < 0.6 ≤ 12/15 — the nucleus is
+        // {token 0, token 1}; tokens 2 and 3 must never appear.
+        let mut s =
+            Sampler::new(SampleParams { temperature: 1.0, top_k: 0, top_p: 0.6, seed: 3 });
+        let mut seen = [0usize; 4];
+        for _ in 0..400 {
+            seen[s.pick(&logits)] += 1;
+        }
+        assert_eq!(seen[2] + seen[3], 0, "outside the nucleus: {seen:?}");
+        assert!(seen[0] > 0 && seen[1] > 0, "nucleus under-sampled: {seen:?}");
+        // A tiny top_p still keeps the single most probable token.
+        let mut s =
+            Sampler::new(SampleParams { temperature: 1.0, top_k: 0, top_p: 1e-6, seed: 3 });
+        for _ in 0..10 {
+            assert_eq!(s.pick(&logits), 0);
+        }
+    }
+
+    #[test]
+    fn exact_probability_ties_break_by_token_id() {
+        // Four exactly-tied logits: the sorted candidate order is by token
+        // id, so top_k = 2 restricts to tokens {0, 1} deterministically.
+        let logits = [1.5f32, 1.5, 1.5, 1.5];
+        let mut s =
+            Sampler::new(SampleParams { temperature: 1.0, top_k: 2, top_p: 1.0, seed: 21 });
+        let mut seen = [0usize; 4];
+        for _ in 0..200 {
+            seen[s.pick(&logits)] += 1;
+        }
+        assert_eq!(seen[2] + seen[3], 0, "tie-break must prefer low ids: {seen:?}");
+        assert!(seen[0] > 0 && seen[1] > 0);
+    }
+
+    #[test]
+    fn sampling_distribution_tracks_softmax_weights() {
+        // Two tokens with weights 0.9 / 0.1 at t = 1: the heavy one must
+        // dominate roughly 9:1 (loose bounds — this is a sanity check on
+        // the cumulative walk, not a statistical test).
+        let logits = [9.0f32.ln(), 1.0f32.ln()];
+        let mut s =
+            Sampler::new(SampleParams { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 101 });
+        let n = 2000;
+        let heavy = (0..n).filter(|_| s.pick(&logits) == 0).count();
+        let frac = heavy as f64 / n as f64;
+        assert!((0.85..0.95).contains(&frac), "P(heavy) = {frac}");
+    }
+
+    #[test]
+    fn steady_state_pick_reuses_the_candidate_buffer() {
+        let logits: Vec<f32> = (0..64).map(|i| (i % 13) as f32 * 0.21).collect();
+        let mut s =
+            Sampler::new(SampleParams { temperature: 0.8, top_k: 8, top_p: 0.9, seed: 7 });
+        s.pick(&logits); // warm-up grows the buffer once
+        let cap = s.cand.capacity();
+        for _ in 0..50 {
+            s.pick(&logits);
+        }
+        assert_eq!(s.cand.capacity(), cap, "pick must not regrow its buffer");
+    }
+}

@@ -26,10 +26,13 @@
 //!
 //! The `generating` branch is the KV-cache decode lifecycle (slot =
 //! session): a generation request's slot is pinned via `mark_generating`
-//! when its session prefills, survives every subsequent dispatch (each one
-//! advances the session a token), and only `finish_generating` returns it
-//! to admission. Workers with live sessions poll `try_next_batch` between
-//! token steps instead of blocking in `next_batch`.
+//! when its session prefills, survives every subsequent dispatch (each
+//! worker-loop pass advances *all* pinned sessions one token in one
+//! batched engine call — `docs/GENERATION.md`), and only
+//! `finish_generating` returns it to admission — whether the session
+//! completed, failed, or its streaming client disconnected. Workers with
+//! live sessions poll `try_next_batch` between decode passes instead of
+//! blocking in `next_batch`.
 //!
 //! An optional `admit_window` tops up partially-filled launches: a worker
 //! that frees with `0 < claimed < slots_per_worker` waits up to the window

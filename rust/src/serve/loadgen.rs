@@ -39,6 +39,29 @@ pub struct GenLoad {
     pub max_new_tokens: usize,
     /// Exact prompt length; 0 = random in `[1, seq_len - max_new_tokens]`.
     pub prompt_len: usize,
+    /// Request `"stream": true` and consume the chunked token events
+    /// (latency still measured to the terminal `done` event).
+    pub stream: bool,
+    /// Sampling temperature forwarded to the server; 0.0 = greedy.
+    pub temperature: f32,
+    /// Top-k forwarded to the server; 0 disables.
+    pub top_k: usize,
+    /// Top-p forwarded to the server; 1.0 disables.
+    pub top_p: f32,
+}
+
+impl GenLoad {
+    /// Greedy, non-streaming defaults (the PR-5 shape).
+    pub fn greedy(max_new_tokens: usize, prompt_len: usize) -> GenLoad {
+        GenLoad {
+            max_new_tokens,
+            prompt_len,
+            stream: false,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -212,6 +235,14 @@ fn synth_generate(
         id: Some(format!("{label}-{i}")),
         tokens: (0..len).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: gen.max_new_tokens,
+        stream: gen.stream,
+        temperature: gen.temperature,
+        top_k: gen.top_k,
+        top_p: gen.top_p,
+        // Pin an explicit per-request seed when sampling so reruns of the
+        // same schedule generate identical continuations; greedy requests
+        // omit it and stay byte-identical to the pre-sampling wire shape.
+        seed: (gen.temperature > 0.0).then(|| u64::from(rng.next_u32()) | 1),
     }
 }
 
@@ -231,6 +262,40 @@ fn synth_body(
     }
 }
 
+/// Consume one streamed generation on an established connection: count
+/// `token` events, then build the sample from the terminal `done` event
+/// (which carries the full response body, `queue_ms` included). Returns
+/// `None` on any error or early termination — the caller must then drop
+/// the connection, since mid-stream chunk state cannot be resynced.
+fn stream_one(c: &mut Client, path: &str, body: &Json, sent: Instant) -> Option<Sample> {
+    let (status, _head) = c.request_streaming("POST", path, Some(body)).ok()?;
+    if status != 200 {
+        return None;
+    }
+    let mut streamed = 0u32;
+    loop {
+        let chunk = c.next_chunk().ok()??;
+        let ev = Json::parse(chunk.trim()).ok()?;
+        match ev.get("event").and_then(Json::as_str) {
+            Some("token") => streamed += 1,
+            Some("done") => {
+                // Drain the terminal zero-chunk so the keep-alive
+                // connection is aligned for the next request.
+                if c.next_chunk().ok()?.is_some() {
+                    return None;
+                }
+                let resp = GenerateResponse::parse(&chunk).ok()?;
+                let lat_ms = sent.elapsed().as_secs_f64() as f32 * 1000.0;
+                if resp.tokens.len() as u32 != streamed {
+                    return None;
+                }
+                return Some(Sample { lat_ms, queue_ms: resp.queue_ms as f32, tokens: streamed });
+            }
+            _ => return None, // error event (or garbage): count as a failure
+        }
+    }
+}
+
 /// Send one request on `client`, reconnecting once on transport errors.
 /// Returns the sample on 200, `None` on any error (counted by the caller).
 /// The response type follows from the path, so the two cannot disagree.
@@ -240,12 +305,21 @@ fn send_one(
     timeout: Duration,
     path: &str,
     body: &Json,
+    stream: bool,
     sent: Instant,
 ) -> Option<Sample> {
     if client.is_none() {
         *client = Client::connect(addr, timeout).ok();
     }
     let c = client.as_mut()?;
+    if stream && path == "/v1/generate" {
+        let sample = stream_one(c, path, body, sent);
+        if sample.is_none() {
+            // Chunked state may be desynced; force a redial next time.
+            *client = None;
+        }
+        return sample;
+    }
     match c.request("POST", path, Some(body)) {
         Ok((200, body)) => {
             // An unparseable 200 body is an error, not a 0 ms queue wait —
@@ -325,9 +399,10 @@ fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 return samples;
             }
             let label = format!("c{client_id}");
+            let stream = gen.map_or(false, |g| g.stream);
             for i in 0..n {
                 let (path, body) = synth_body(seed, &label, i, seq_len, vocab, gen);
-                match send_one(&mut client, &addr, timeout, path, &body, Instant::now()) {
+                match send_one(&mut client, &addr, timeout, path, &body, stream, Instant::now()) {
                     Some(s) => samples.push(s),
                     None => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -415,7 +490,8 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
                 let (path, body) = synth_body(seed, "o", i, seq_len, vocab, gen);
                 // Latency clock starts at the *scheduled* arrival: sender
                 // lag and server time both count (open-loop semantics).
-                match send_one(&mut client, &addr, timeout, path, &body, due) {
+                let stream = gen.map_or(false, |g| g.stream);
+                match send_one(&mut client, &addr, timeout, path, &body, stream, due) {
                     Some(s) => samples.push(s),
                     None => {
                         errors.fetch_add(1, Ordering::Relaxed);
@@ -565,20 +641,29 @@ mod tests {
 
     #[test]
     fn synth_generate_fits_cache_and_is_deterministic() {
-        let g = GenLoad { max_new_tokens: 8, prompt_len: 0 };
+        let g = GenLoad::greedy(8, 0);
         for i in 0..20 {
             let r = synth_generate(7, "o", i, 32, 100, g);
             assert!(!r.tokens.is_empty());
             assert!(r.tokens.len() + r.max_new_tokens <= 32, "{}", r.tokens.len());
             assert_eq!(r, synth_generate(7, "o", i, 32, 100, g));
+            // Greedy requests never pin a seed (wire shape stays minimal).
+            assert_eq!(r.seed, None);
+            assert!(!r.stream);
         }
         // Exact prompt length is honored (and clamped to fit the cache).
-        let fixed =
-            synth_generate(7, "o", 0, 32, 100, GenLoad { max_new_tokens: 8, prompt_len: 12 });
+        let fixed = synth_generate(7, "o", 0, 32, 100, GenLoad::greedy(8, 12));
         assert_eq!(fixed.tokens.len(), 12);
-        let clamped =
-            synth_generate(7, "o", 0, 32, 100, GenLoad { max_new_tokens: 30, prompt_len: 12 });
+        let clamped = synth_generate(7, "o", 0, 32, 100, GenLoad::greedy(30, 12));
         assert_eq!(clamped.tokens.len(), 2);
+        // Sampled requests pin a deterministic per-index seed.
+        let sampled = GenLoad { temperature: 0.8, top_k: 5, ..GenLoad::greedy(8, 0) };
+        let a = synth_generate(7, "o", 3, 32, 100, sampled);
+        let b = synth_generate(7, "o", 3, 32, 100, sampled);
+        assert_eq!(a.seed, b.seed);
+        assert!(a.seed.is_some());
+        assert_eq!(a.temperature, 0.8);
+        assert_eq!(a.top_k, 5);
     }
 
     #[test]

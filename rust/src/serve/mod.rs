@@ -36,8 +36,14 @@
 //!   over-saturation. Slots are also the unit generation shards on:
 //!   `POST /v1/generate` pins a session to a slot (slot = session) whose
 //!   KV cache lives on the native engine; every worker loop pass advances
-//!   each live session one greedily-decoded token, interleaved with
+//!   *all* live sessions one token through a single batched
+//!   multi-session engine call (one `m = n_sessions` GEMM per layer;
+//!   bit-exact vs. decoding each session alone), interleaved with
 //!   scoring dispatches (see [`batcher`]'s `Generating` lifecycle).
+//!   Tokens are greedy by default or seeded-sampled per request
+//!   (`temperature`/`top_k`/`top_p`/`seed`), and `"stream": true`
+//!   streams one chunked JSON event per token — `docs/GENERATION.md`
+//!   is the reference for lifecycle, sampling and wire format.
 //!   Multi-engine sharding (slot ranges) remains open.
 //!
 //! Measurement: `qtx loadgen` is closed-loop by default (each client fires

@@ -23,11 +23,16 @@
 //!
 //! `POST /v1/generate` ([`GenerateRequest`]/[`GenerateResponse`]) carries
 //! the KV-cache decode sessions: a prompt plus `max_new_tokens`, answered
-//! with the greedy continuation and per-phase (queue/prefill/decode)
-//! timings. See `docs/API.md` for the full contract.
+//! with the continuation and per-phase (queue/prefill/decode) timings.
+//! Decoding is greedy by default; `temperature`/`top_k`/`top_p`/`seed`
+//! select seeded sampling ([`crate::infer::sample`]), and `"stream": true`
+//! switches the response to chunked transfer-encoding with one JSON event
+//! per token ([`stream_token_event`] … [`stream_done_event`]). See
+//! `docs/API.md` and `docs/GENERATION.md` for the full contract.
 
 use anyhow::{bail, Result};
 
+use crate::infer::sample::SampleParams;
 use crate::util::json::Json;
 
 /// One scoring request (the unit the dynamic batcher packs).
@@ -149,21 +154,62 @@ impl ScoreResponse {
     }
 }
 
-/// One generation request (`POST /v1/generate`): greedy-decode
-/// `max_new_tokens` continuations of `tokens`, pinned to one batcher slot
-/// for the session's lifetime.
+/// One generation request (`POST /v1/generate`): decode `max_new_tokens`
+/// continuations of `tokens`, pinned to one batcher slot for the
+/// session's lifetime. Greedy by default; the sampling knobs mirror
+/// [`SampleParams`] and are validated server-side (400 on bad ranges).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenerateRequest {
     pub id: Option<String>,
     /// Prompt token ids (≥ 1; `len + max_new_tokens` ≤ the model's
     /// `seq_len`, the KV-cache capacity).
     pub tokens: Vec<i32>,
-    /// New tokens to generate (greedy argmax; default 16).
+    /// New tokens to generate (default 16).
     pub max_new_tokens: usize,
+    /// Stream one chunked JSON event per token instead of a single
+    /// response body (default `false`).
+    pub stream: bool,
+    /// Softmax temperature; `0.0` (the default) is greedy argmax.
+    pub temperature: f32,
+    /// Keep the `top_k` most probable tokens (`0`, the default, disables).
+    pub top_k: usize,
+    /// Nucleus threshold in `(0, 1]`; `1.0` (the default) disables.
+    pub top_p: f32,
+    /// Sampling seed. Omitted ⇒ the server picks one; the seed actually
+    /// used is echoed in the response whenever it matters (sampling
+    /// requested, or an explicit seed was sent).
+    pub seed: Option<u64>,
 }
 
 impl GenerateRequest {
     pub const DEFAULT_MAX_NEW_TOKENS: usize = 16;
+
+    /// A greedy request for `tokens` — every sampling field at its
+    /// default, matching the PR-5 wire shape exactly.
+    pub fn greedy(id: Option<String>, tokens: Vec<i32>, max_new_tokens: usize) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            tokens,
+            max_new_tokens,
+            stream: false,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: None,
+        }
+    }
+
+    /// The [`SampleParams`] this request resolves to once the server has
+    /// fixed `seed` (requests without one get a server-assigned seed).
+    pub fn sample_params(&self, seed: u64) -> SampleParams {
+        SampleParams { temperature: self.temperature, top_k: self.top_k, top_p: self.top_p, seed }
+    }
+
+    /// Whether this request decodes greedily (no sampler, no seed echo
+    /// unless one was explicitly sent).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
 
     pub fn from_json(j: &Json) -> Result<GenerateRequest> {
         let id = match j.get("id") {
@@ -185,7 +231,43 @@ impl GenerateRequest {
                 n as usize
             }
         };
-        Ok(GenerateRequest { id, tokens, max_new_tokens })
+        let stream = match j.get("stream") {
+            None | Some(Json::Null) => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("\"stream\" must be a boolean"))?,
+        };
+        let temperature = match j.get("temperature") {
+            None | Some(Json::Null) => 0.0,
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("\"temperature\" must be a number"))?
+                as f32,
+        };
+        let top_k = match j.get("top_k") {
+            None | Some(Json::Null) => 0,
+            Some(v) => v
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| anyhow::anyhow!("\"top_k\" must be an integer >= 0"))?
+                as usize,
+        };
+        let top_p = match j.get("top_p") {
+            None | Some(Json::Null) => 1.0,
+            Some(v) => {
+                v.as_f64().ok_or_else(|| anyhow::anyhow!("\"top_p\" must be a number"))? as f32
+            }
+        };
+        let seed = match j.get("seed") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_i64()
+                    .filter(|&n| n >= 0)
+                    .ok_or_else(|| anyhow::anyhow!("\"seed\" must be an integer >= 0"))?
+                    as u64,
+            ),
+        };
+        Ok(GenerateRequest { id, tokens, max_new_tokens, stream, temperature, top_k, top_p, seed })
     }
 
     pub fn parse(text: &str) -> Result<GenerateRequest> {
@@ -203,6 +285,24 @@ impl GenerateRequest {
             Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
         ));
         kv.push(("max_new_tokens".into(), Json::Num(self.max_new_tokens as f64)));
+        // Sampling/streaming fields are emitted only when they differ from
+        // their defaults, keeping greedy request bodies byte-identical to
+        // the pre-sampling wire shape.
+        if self.stream {
+            kv.push(("stream".into(), Json::Bool(true)));
+        }
+        if self.temperature != 0.0 {
+            kv.push(("temperature".into(), Json::Num(self.temperature as f64)));
+        }
+        if self.top_k != 0 {
+            kv.push(("top_k".into(), Json::Num(self.top_k as f64)));
+        }
+        if self.top_p != 1.0 {
+            kv.push(("top_p".into(), Json::Num(self.top_p as f64)));
+        }
+        if let Some(seed) = self.seed {
+            kv.push(("seed".into(), Json::Num(seed as f64)));
+        }
         Json::Obj(kv)
     }
 }
@@ -222,6 +322,11 @@ pub struct GenerateResponse {
     pub prefill_ms: f64,
     /// Total incremental-decode time across the generated tokens.
     pub decode_ms: f64,
+    /// The sampling seed actually used. `Some` whenever it is meaningful
+    /// for replay (sampling was requested, or the client sent an explicit
+    /// seed); omitted on the wire for plain greedy requests, keeping those
+    /// responses byte-identical to the pre-sampling contract.
+    pub seed: Option<u64>,
 }
 
 impl GenerateResponse {
@@ -238,6 +343,9 @@ impl GenerateResponse {
         kv.push(("queue_ms".into(), Json::Num(self.queue_ms)));
         kv.push(("prefill_ms".into(), Json::Num(self.prefill_ms)));
         kv.push(("decode_ms".into(), Json::Num(self.decode_ms)));
+        if let Some(seed) = self.seed {
+            kv.push(("seed".into(), Json::Num(seed as f64)));
+        }
         Json::Obj(kv)
     }
 
@@ -252,6 +360,7 @@ impl GenerateResponse {
             queue_ms: num("queue_ms")?,
             prefill_ms: num("prefill_ms")?,
             decode_ms: num("decode_ms")?,
+            seed: j.get("seed").and_then(Json::as_i64).map(|n| n as u64),
         })
     }
 
@@ -259,6 +368,46 @@ impl GenerateResponse {
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
         GenerateResponse::from_json(&j)
     }
+}
+
+// ---- streaming event bodies (`"stream": true`) ---------------------------
+//
+// Each chunked-transfer chunk carries exactly one of these JSON events,
+// newline-terminated. The grammar (machine-checked against docs/API.md by
+// the integration tests): zero or more `token` events, then exactly one
+// terminal event — `done` on success, `error` on a mid-stream failure.
+
+/// `{"event":"token","index":i,"token":t}` — the `i`-th generated token
+/// (0-based over the continuation, prompt excluded).
+pub fn stream_token_event(index: usize, token: i32) -> Json {
+    Json::obj(vec![
+        ("event", Json::Str("token".into())),
+        ("index", Json::Num(index as f64)),
+        ("token", Json::Num(token as f64)),
+    ])
+}
+
+/// `{"event":"done", …}` — the terminal event: the full
+/// [`GenerateResponse`] body (same fields as the non-streaming response)
+/// with `"event":"done"` prepended.
+pub fn stream_done_event(resp: &GenerateResponse) -> Json {
+    match resp.to_json() {
+        Json::Obj(kv) => {
+            let mut out = vec![("event".to_string(), Json::Str("done".into()))];
+            out.extend(kv);
+            Json::Obj(out)
+        }
+        other => other,
+    }
+}
+
+/// `{"event":"error","error":"…"}` — terminal event when the session dies
+/// after streaming began (before that, errors use plain status codes).
+pub fn stream_error_event(msg: &str) -> Json {
+    Json::obj(vec![
+        ("event", Json::Str("error".into())),
+        ("error", Json::Str(msg.to_string())),
+    ])
 }
 
 /// Error body: `{"error": "..."}` (all non-2xx responses use this shape).
@@ -361,17 +510,48 @@ mod tests {
 
     #[test]
     fn generate_request_roundtrip_and_default() {
-        let r = GenerateRequest { id: Some("g1".into()), tokens: vec![3, 1, 4], max_new_tokens: 7 };
+        let r = GenerateRequest::greedy(Some("g1".into()), vec![3, 1, 4], 7);
         let back = GenerateRequest::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(r, back);
-        // max_new_tokens defaults when omitted.
+        // All optional fields default when omitted (greedy, non-streaming).
         let d = GenerateRequest::parse(r#"{"tokens":[5,6]}"#).unwrap();
         assert_eq!(d.max_new_tokens, GenerateRequest::DEFAULT_MAX_NEW_TOKENS);
         assert!(d.id.is_none());
+        assert!(!d.stream && d.is_greedy());
+        assert_eq!((d.temperature, d.top_k, d.top_p, d.seed), (0.0, 0, 1.0, None));
         // Bad shapes are rejected.
         assert!(GenerateRequest::parse(r#"{"tokens":[1],"max_new_tokens":-2}"#).is_err());
         assert!(GenerateRequest::parse(r#"{"tokens":"x"}"#).is_err());
         assert!(GenerateRequest::parse(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn generate_request_sampling_fields_roundtrip() {
+        let r = GenerateRequest {
+            stream: true,
+            temperature: 0.75,
+            top_k: 12,
+            top_p: 0.9,
+            seed: Some(987),
+            ..GenerateRequest::greedy(None, vec![2, 7], 3)
+        };
+        let text = r.to_json().to_string();
+        let back = GenerateRequest::parse(&text).unwrap();
+        assert_eq!(r, back);
+        assert!(!back.is_greedy());
+        assert_eq!(
+            back.sample_params(987),
+            SampleParams { temperature: 0.75, top_k: 12, top_p: 0.9, seed: 987 }
+        );
+        // A greedy request serializes without any sampling keys — the
+        // PR-5 wire shape, byte-identical.
+        let g = GenerateRequest::greedy(None, vec![2, 7], 3);
+        assert_eq!(g.to_json().to_string(), r#"{"tokens":[2,7],"max_new_tokens":3}"#);
+        // Type errors on the new fields are rejected.
+        assert!(GenerateRequest::parse(r#"{"tokens":[1],"stream":"yes"}"#).is_err());
+        assert!(GenerateRequest::parse(r#"{"tokens":[1],"temperature":"hot"}"#).is_err());
+        assert!(GenerateRequest::parse(r#"{"tokens":[1],"top_k":-1}"#).is_err());
+        assert!(GenerateRequest::parse(r#"{"tokens":[1],"seed":-5}"#).is_err());
     }
 
     #[test]
@@ -383,8 +563,38 @@ mod tests {
             queue_ms: 0.5,
             prefill_ms: 1.25,
             decode_ms: 3.75,
+            seed: None,
         };
-        let back = GenerateResponse::parse(&r.to_json().to_string()).unwrap();
+        let text = r.to_json().to_string();
+        assert!(!text.contains("seed"), "greedy responses must not grow a seed key");
+        let back = GenerateResponse::parse(&text).unwrap();
         assert_eq!(r, back);
+        let seeded = GenerateResponse { seed: Some(41), ..r };
+        let back = GenerateResponse::parse(&seeded.to_json().to_string()).unwrap();
+        assert_eq!(seeded, back);
+    }
+
+    #[test]
+    fn stream_event_shapes() {
+        assert_eq!(
+            stream_token_event(2, 19).to_string(),
+            r#"{"event":"token","index":2,"token":19}"#
+        );
+        let resp = GenerateResponse {
+            id: Some("s1".into()),
+            tokens: vec![4, 2],
+            prompt_len: 3,
+            queue_ms: 0.0,
+            prefill_ms: 1.0,
+            decode_ms: 2.0,
+            seed: Some(7),
+        };
+        let done = stream_done_event(&resp).to_string();
+        assert!(done.starts_with(r#"{"event":"done","id":"s1","#), "{done}");
+        assert!(done.contains(r#""seed":7"#), "{done}");
+        assert_eq!(
+            stream_error_event("boom").to_string(),
+            r#"{"event":"error","error":"boom"}"#
+        );
     }
 }

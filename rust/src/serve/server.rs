@@ -5,9 +5,12 @@
 //! Endpoints (written contract: `docs/API.md`):
 //! * `POST /v1/score` — score one token sequence (queued into the dynamic
 //!   batcher; see [`crate::serve::protocol`] for the wire shapes).
-//! * `POST /v1/generate` — greedy generation over the slot-pinned KV-cache
+//! * `POST /v1/generate` — generation over the slot-pinned KV-cache
 //!   decode path (continuous policy + a decode-capable engine; 501
-//!   otherwise).
+//!   otherwise). Greedy by default; `temperature`/`top_k`/`top_p`/`seed`
+//!   select seeded sampling, and `"stream": true` switches the response
+//!   to chunked transfer-encoding with one JSON event per token (see
+//!   `docs/GENERATION.md` for the wire format).
 //! * `GET /healthz`  — liveness + engine description and limits; answers
 //!   503 with the last engine startup error (e.g. the manifest-version
 //!   mismatch message) while no engine worker is serving.
@@ -27,7 +30,7 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -35,12 +38,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::serve::batcher::{BatchPolicy, Batcher, BatcherConfig, Rejected, SlotConfig, SlotPool};
 use crate::serve::engine::{
-    spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, Job, JobKind,
-    JobOutcome,
+    spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, GenEvent,
+    Job, JobKind, JobOutcome,
 };
-use crate::serve::obs::{Obs, TraceConfig};
+use crate::serve::obs::{Obs, TraceConfig, TraceTap};
 use crate::serve::protocol::{
-    error_json, GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse,
+    error_json, stream_done_event, stream_error_event, stream_token_event, GenerateRequest,
+    GenerateResponse, ScoreRequest, ScoreResponse,
 };
 use crate::serve::stats::{EngineMem, ServeStats};
 use crate::util::json::Json;
@@ -488,6 +492,34 @@ pub fn write_text_response(
     w.flush()
 }
 
+/// Open a streaming (`Transfer-Encoding: chunked`) response. The body is
+/// newline-delimited JSON, one event object per chunk — see
+/// `docs/GENERATION.md` for the event grammar and a raw transcript.
+pub fn write_stream_head(w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.flush()
+}
+
+/// Write one chunk of a chunked response (hex size line + payload + CRLF),
+/// flushed immediately so each token event reaches the client as it is
+/// decoded, not when the OS buffer fills.
+pub fn write_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n{payload}\r\n", payload.len())?;
+    w.flush()
+}
+
+/// Terminate a chunked response (the zero-length chunk). The connection
+/// stays usable for the next keep-alive request.
+pub fn write_stream_end(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
 /// Write an HTTP/1.1 request with a JSON body (the loadgen client side).
 pub fn write_json_request(
     w: &mut impl Write,
@@ -825,7 +857,8 @@ fn reply_non_score(
 }
 
 /// `POST /v1/generate`: queue a generation session into the continuous
-/// batcher (slot = session) and answer with the greedy continuation.
+/// batcher (slot = session) and answer with the continuation — buffered
+/// JSON by default, a chunked event stream under `"stream": true`.
 fn handle_generate(
     w: &mut TcpStream,
     msg: &HttpMessage,
@@ -835,7 +868,7 @@ fn handle_generate(
     t_read_end: Instant,
 ) -> Result<()> {
     let t0 = Instant::now();
-    let req = match msg
+    let mut req = match msg
         .body_str()
         .and_then(GenerateRequest::parse)
         .and_then(|r| validate_generate(&r, ctx.info.seq_len, ctx.info.vocab).map(|_| r))
@@ -872,15 +905,38 @@ fn handle_generate(
         t.span("read", t_read, t_read_end);
         t.span("parse", t_read_end, Instant::now());
     }
+    // Resolve the seed before queueing so the response can echo the value
+    // that actually drove the sampler: an explicit client seed is used
+    // verbatim; a sampled request without one gets a server-assigned seed
+    // from a process-wide counter. The response carries `seed` whenever
+    // the request sampled (or sent one explicitly) — never for plain
+    // greedy requests, whose wire shape stays byte-identical to earlier
+    // releases.
+    static NEXT_SEED: AtomicU64 = AtomicU64::new(1);
+    let explicit_seed = req.seed.is_some();
+    if req.seed.is_none() && !req.is_greedy() {
+        req.seed = Some(NEXT_SEED.fetch_add(1, Ordering::Relaxed));
+    }
+    let echo_seed = if explicit_seed || !req.is_greedy() { req.seed } else { None };
     let id = req.id.clone();
     let prompt_len = req.tokens.len();
+    let stream = req.stream;
     let (tx, rx) = mpsc::channel();
-    let job = Job { kind: JobKind::Generate(req), resp: tx, trace: tap.clone() };
+    let (etx, erx) = if stream {
+        let (etx, erx) = mpsc::channel();
+        (Some(etx), Some(erx))
+    } else {
+        (None, None)
+    };
+    let job = Job { kind: JobKind::Generate(req), resp: tx, trace: tap.clone(), events: etx };
     if !submit_job(w, ctx, job, keep_alive)? {
         if let Some(t) = &tap {
             ctx.obs.finish(t, "rejected");
         }
         return Ok(());
+    }
+    if let Some(erx) = erx {
+        return stream_generate(w, ctx, id, prompt_len, echo_seed, erx, keep_alive, t0, tap);
     }
     match rx.recv_timeout(ctx.request_timeout) {
         Ok(Ok(JobOutcome::Generate(out))) => {
@@ -891,6 +947,7 @@ fn handle_generate(
                 queue_ms: out.queue_ms,
                 prefill_ms: out.prefill_ms,
                 decode_ms: out.decode_ms,
+                seed: echo_seed,
             };
             ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
             ctx.stats.latency.record(t0.elapsed());
@@ -910,6 +967,102 @@ fn handle_generate(
         }
     }
     Ok(())
+}
+
+/// The streaming tail of `/v1/generate`: forward worker [`GenEvent`]s to
+/// the socket as chunks. Headers are deferred until the first event so a
+/// prefill failure (or timeout) before any token still answers with a
+/// plain JSON status; after the stream opens, failures become a terminal
+/// `error` event. A socket write failure propagates `Err` — the
+/// connection thread exits, the event receiver drops, and the worker's
+/// next send fails, which retires the session and frees its slot.
+#[allow(clippy::too_many_arguments)]
+fn stream_generate(
+    w: &mut TcpStream,
+    ctx: &HandlerCtx,
+    id: Option<String>,
+    prompt_len: usize,
+    seed: Option<u64>,
+    erx: mpsc::Receiver<GenEvent>,
+    keep_alive: bool,
+    t0: Instant,
+    tap: Option<Arc<TraceTap>>,
+) -> Result<()> {
+    let mut started = false;
+    loop {
+        let ev = match erx.recv_timeout(ctx.request_timeout) {
+            Ok(ev) => ev,
+            Err(_) => {
+                ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                if started {
+                    write_chunk(w, &format!("{}\n", stream_error_event("generation timed out")))?;
+                    write_stream_end(w)?;
+                } else {
+                    write_json_response(
+                        w,
+                        504,
+                        "Gateway Timeout",
+                        &error_json("generation timed out"),
+                        keep_alive,
+                    )?;
+                }
+                if let Some(t) = &tap {
+                    ctx.obs.finish(t, "timeout");
+                }
+                return Ok(());
+            }
+        };
+        match ev {
+            GenEvent::Token { index, token } => {
+                if !started {
+                    write_stream_head(w, keep_alive)?;
+                    started = true;
+                }
+                write_chunk(w, &format!("{}\n", stream_token_event(index, token)))?;
+            }
+            GenEvent::Done(out) => {
+                let resp = GenerateResponse {
+                    id,
+                    tokens: out.tokens,
+                    prompt_len,
+                    queue_ms: out.queue_ms,
+                    prefill_ms: out.prefill_ms,
+                    decode_ms: out.decode_ms,
+                    seed,
+                };
+                ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+                ctx.stats.latency.record(t0.elapsed());
+                if !started {
+                    write_stream_head(w, keep_alive)?;
+                }
+                write_chunk(w, &format!("{}\n", stream_done_event(&resp)))?;
+                write_stream_end(w)?;
+                if let Some(t) = &tap {
+                    ctx.obs.finish(t, "ok");
+                }
+                return Ok(());
+            }
+            GenEvent::Error(msg) => {
+                ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+                if started {
+                    write_chunk(w, &format!("{}\n", stream_error_event(&msg)))?;
+                    write_stream_end(w)?;
+                } else {
+                    write_json_response(
+                        w,
+                        500,
+                        "Internal Server Error",
+                        &error_json(&msg),
+                        keep_alive,
+                    )?;
+                }
+                if let Some(t) = &tap {
+                    ctx.obs.finish(t, "error");
+                }
+                return Ok(());
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -950,6 +1103,47 @@ impl Client {
             .and_then(|s| s.parse().ok())
             .with_context(|| format!("bad status line {:?}", msg.start_line))?;
         Ok((status, msg.body_str()?.to_string()))
+    }
+
+    /// Send a request expecting a streaming reply. Returns the status and
+    /// the response head: when `Transfer-Encoding: chunked`, the body is
+    /// empty and the caller drains chunks with [`Client::next_chunk`];
+    /// non-streaming replies (validation errors, 5xx) arrive with their
+    /// Content-Length body already read, and there are no chunks to drain.
+    pub fn request_streaming(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, HttpMessage)> {
+        write_json_request(&mut self.writer, method, path, body)?;
+        let msg = read_message(&mut self.reader)?.context("server closed connection")?;
+        let status: u16 = msg
+            .start_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line {:?}", msg.start_line))?;
+        Ok((status, msg))
+    }
+
+    /// Read one chunk of a chunked response: `Some(payload)` per data
+    /// chunk, `None` at the terminal zero-length chunk (stream complete;
+    /// the connection is ready for its next keep-alive request).
+    pub fn next_chunk(&mut self) -> Result<Option<String>> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).context("reading chunk size")?;
+        let n = usize::from_str_radix(line.trim(), 16)
+            .with_context(|| format!("bad chunk size line {line:?}"))?;
+        // Payload (n bytes) plus its trailing CRLF; the terminal chunk has
+        // no payload but the same final CRLF.
+        let mut buf = vec![0u8; n + 2];
+        self.reader.read_exact(&mut buf).context("reading chunk payload")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        buf.truncate(n);
+        String::from_utf8(buf).context("chunk not utf-8").map(Some)
     }
 
     /// Convenience: GET returning parsed JSON (errors on non-200).

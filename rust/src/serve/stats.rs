@@ -229,6 +229,13 @@ pub struct ServeStats {
     pub decode_prefill: LatencyHisto,
     /// Per-token incremental decode-step latency.
     pub decode_step: LatencyHisto,
+    /// Time-to-first-token per session: queue wait + prefill, i.e. how long
+    /// a client waited from submit to the first streamed token.
+    pub decode_ttft: LatencyHisto,
+    /// Gap between consecutive tokens of one session as the *client*
+    /// observes it (wall time between token emissions, which under batched
+    /// decode includes the other sessions' share of the step).
+    pub decode_inter_token: LatencyHisto,
     /// Engine phase-profile + quant-health aggregate. Workers drain their
     /// scratch-resident counters into this once per dispatch (never from
     /// the zero-allocation forward itself), so a mutex is fine.
@@ -258,6 +265,8 @@ impl ServeStats {
             decode_tokens_total: AtomicU64::new(0),
             decode_prefill: LatencyHisto::default(),
             decode_step: LatencyHisto::default(),
+            decode_ttft: LatencyHisto::default(),
+            decode_inter_token: LatencyHisto::default(),
             engine_telemetry: Mutex::new(EngineTelemetry::default()),
         }
     }
@@ -287,6 +296,17 @@ impl ServeStats {
     pub fn decode_token(&self, step: Duration) {
         self.decode_tokens_total.fetch_add(1, Ordering::Relaxed);
         self.decode_step.record(step);
+    }
+
+    /// A session's first token became available (TTFT = queue wait +
+    /// prefill, measured at prefill completion).
+    pub fn decode_first_token(&self, ttft: Duration) {
+        self.decode_ttft.record(ttft);
+    }
+
+    /// Wall-clock gap between one session's consecutive token emissions.
+    pub fn decode_inter_token(&self, gap: Duration) {
+        self.decode_inter_token.record(gap);
     }
 
     /// Lifetime-average generated tokens per second (prefill + decode
@@ -407,6 +427,8 @@ impl ServeStats {
                     ("tokens_per_s", Json::Num(round3(self.decode_tokens_per_s()))),
                     ("prefill", self.decode_prefill.to_json()),
                     ("step", self.decode_step.to_json()),
+                    ("ttft", self.decode_ttft.to_json()),
+                    ("inter_token", self.decode_inter_token.to_json()),
                 ]),
             ),
         ];
@@ -454,6 +476,8 @@ impl ServeStats {
             "latency" => Some(&self.latency),
             "decode.prefill" => Some(&self.decode_prefill),
             "decode.step" => Some(&self.decode_step),
+            "decode.ttft" => Some(&self.decode_ttft),
+            "decode.inter_token" => Some(&self.decode_inter_token),
             _ => None,
         }
     }
@@ -923,6 +947,8 @@ mod tests {
             "qtx_decode_tokens_total",
             "qtx_decode_prefill_seconds",
             "qtx_decode_step_seconds",
+            "qtx_decode_ttft_seconds",
+            "qtx_decode_inter_token_seconds",
         ] {
             assert!(
                 text.contains(&format!("# TYPE {family}")),
@@ -995,8 +1021,11 @@ mod tests {
     fn decode_section_tracks_sessions_and_tokens() {
         let s = ServeStats::new();
         s.decode_session_started(Duration::from_millis(2));
+        s.decode_first_token(Duration::from_millis(3));
         s.decode_token(Duration::from_micros(400));
+        s.decode_inter_token(Duration::from_micros(450));
         s.decode_token(Duration::from_micros(500));
+        s.decode_inter_token(Duration::from_micros(550));
         s.decode_session_finished();
         let doc = s.snapshot("continuous", 0, None, EngineMem::default(), 1).to_string();
         let d = Json::parse(&doc).unwrap();
@@ -1008,5 +1037,7 @@ mod tests {
         assert!(d.req("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(d.req("step").unwrap().req("count").unwrap().as_usize(), Some(2));
         assert_eq!(d.req("prefill").unwrap().req("count").unwrap().as_usize(), Some(1));
+        assert_eq!(d.req("ttft").unwrap().req("count").unwrap().as_usize(), Some(1));
+        assert_eq!(d.req("inter_token").unwrap().req("count").unwrap().as_usize(), Some(2));
     }
 }

@@ -7,8 +7,9 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use qtx::infer::SampleParams;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
 use qtx::serve::loadgen::{self, GenLoad, LoadgenConfig};
@@ -320,7 +321,7 @@ fn generate_roundtrip_matches_offline_decode() {
     let addr = server.addr().to_string();
     let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
 
-    let req = GenerateRequest { id: Some("g1".into()), tokens: vec![3, 1, 4], max_new_tokens: 5 };
+    let req = GenerateRequest::greedy(Some("g1".into()), vec![3, 1, 4], 5);
     let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
     assert_eq!(status, 200, "{body}");
     let resp = GenerateResponse::parse(&body).unwrap();
@@ -328,12 +329,15 @@ fn generate_roundtrip_matches_offline_decode() {
     assert_eq!(resp.tokens.len(), 5);
     assert_eq!(resp.prompt_len, 3);
     assert!(resp.prefill_ms >= 0.0 && resp.decode_ms >= 0.0);
+    // Greedy requests echo no seed — the response shape predates sampling.
+    assert_eq!(resp.seed, None);
+    assert!(!body.contains("seed"), "greedy response must not grow a seed field: {body}");
 
     // Offline greedy replay on a fresh engine must agree exactly —
     // generation is a pure function of the prompt, not of slot/batching.
     let mut offline = MockEngine::new(MODEL_BATCH, SEQ_LEN);
     offline.step_cost = Duration::ZERO;
-    let mut want = vec![offline.gen_prefill(0, &req.tokens).unwrap()];
+    let mut want = vec![offline.gen_prefill(0, &req.tokens, &SampleParams::greedy()).unwrap()];
     for _ in 1..5 {
         let last = *want.last().unwrap();
         want.push(offline.gen_step(0, last).unwrap());
@@ -345,7 +349,7 @@ fn generate_roundtrip_matches_offline_decode() {
     assert_eq!(GenerateResponse::parse(&body2).unwrap().tokens, want);
 
     // Oversized sessions are rejected up front with 400.
-    let too_big = GenerateRequest { id: None, tokens: vec![1; SEQ_LEN - 2], max_new_tokens: 8 };
+    let too_big = GenerateRequest::greedy(None, vec![1; SEQ_LEN - 2], 8);
     let (status, _) = c.request("POST", "/v1/generate", Some(&too_big.to_json())).unwrap();
     assert_eq!(status, 400);
 
@@ -368,7 +372,7 @@ fn generate_rejected_on_fixed_policy() {
     let server = start_server(2, Duration::ZERO);
     let addr = server.addr().to_string();
     let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
-    let req = GenerateRequest { id: None, tokens: vec![1, 2], max_new_tokens: 4 };
+    let req = GenerateRequest::greedy(None, vec![1, 2], 4);
     let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
     assert_eq!(status, 501, "{body}");
     assert!(body.contains("continuous"), "{body}");
@@ -392,7 +396,7 @@ fn loadgen_generate_smoke() {
         seed: 9,
         timeout: Duration::from_secs(10),
         open_rate_rps: None,
-        gen: Some(GenLoad { max_new_tokens: 6, prompt_len: 0 }),
+        gen: Some(GenLoad::greedy(6, 0)),
     })
     .unwrap();
     assert_eq!(report.ok, 32, "errors: {}", report.errors);
@@ -706,7 +710,7 @@ fn debug_traces_record_request_lifecycle() {
     let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
     let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
     assert_eq!(status, 200);
-    let gen = GenerateRequest { id: None, tokens: vec![3, 1, 4], max_new_tokens: 4 };
+    let gen = GenerateRequest::greedy(None, vec![3, 1, 4], 4);
     let (status, _) = c.request("POST", "/v1/generate", Some(&gen.to_json())).unwrap();
     assert_eq!(status, 200);
 
@@ -762,6 +766,299 @@ fn debug_traces_record_request_lifecycle() {
     // `?n=1` trims to the newest trace.
     let one = c.get_json("/debug/traces?n=1").unwrap();
     assert_eq!(one.req("traces").unwrap().as_arr().unwrap().len(), 1);
+
+    drop(c);
+    server.stop();
+}
+
+/// `POST /v1/generate` with sampling knobs, end to end: explicit seeds
+/// replay bit-identically regardless of what else shares the decode batch,
+/// omitted seeds are picked and echoed by the server, `temperature: 0`
+/// short-circuits to greedy, and out-of-range knobs get 400 up front.
+#[test]
+fn sampled_generation_is_seed_deterministic_e2e() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::from_millis(1));
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let mut req = GenerateRequest::greedy(Some("s1".into()), vec![2, 7, 1], 8);
+    req.temperature = 0.8;
+    req.top_k = 6;
+    req.top_p = 0.95;
+    req.seed = Some(11);
+    let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let first = GenerateResponse::parse(&body).unwrap();
+    assert_eq!(first.seed, Some(11), "explicit seed echoed back");
+    assert_eq!(first.tokens.len(), 8);
+
+    // Replay under a different batch composition: three sampled background
+    // sessions share the decode batch while the replay runs. Same seed,
+    // same continuation — the batched step is composition-invariant.
+    let background: Vec<_> = (0..3)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+                let mut r = GenerateRequest::greedy(None, vec![9 + i, 4, 2], 20);
+                r.temperature = 1.2;
+                let (status, body) =
+                    c.request("POST", "/v1/generate", Some(&r.to_json())).unwrap();
+                assert_eq!(status, 200, "{body}");
+                // Omitted seed: the server picks one and must echo it.
+                assert!(GenerateResponse::parse(&body).unwrap().seed.is_some());
+            })
+        })
+        .collect();
+    let (_, body2) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(
+        GenerateResponse::parse(&body2).unwrap().tokens,
+        first.tokens,
+        "same seed must replay identically under any batch composition"
+    );
+    for h in background {
+        h.join().unwrap();
+    }
+
+    // A different seed explores a different continuation.
+    req.seed = Some(12);
+    let (_, body3) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_ne!(GenerateResponse::parse(&body3).unwrap().tokens, first.tokens);
+
+    // Omitted seed: picked, echoed, and replayable.
+    req.seed = None;
+    let (_, body4) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    let picked = GenerateResponse::parse(&body4).unwrap();
+    let picked_seed = picked.seed.expect("server must echo the seed it picked");
+    req.seed = Some(picked_seed);
+    let (_, body5) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(GenerateResponse::parse(&body5).unwrap().tokens, picked.tokens);
+
+    // temperature 0 is greedy no matter the other knobs: identical to a
+    // plain greedy request for the same prompt.
+    let greedy = GenerateRequest::greedy(None, vec![2, 7, 1], 8);
+    let (_, gb) = c.request("POST", "/v1/generate", Some(&greedy.to_json())).unwrap();
+    let mut zero = greedy.clone();
+    zero.temperature = 0.0;
+    zero.top_k = 3;
+    zero.top_p = 0.5;
+    zero.seed = Some(77);
+    let (_, zb) = c.request("POST", "/v1/generate", Some(&zero.to_json())).unwrap();
+    assert_eq!(
+        GenerateResponse::parse(&zb).unwrap().tokens,
+        GenerateResponse::parse(&gb).unwrap().tokens,
+        "temperature 0 must be exactly greedy"
+    );
+
+    // Out-of-range knobs are rejected before queueing (the docs/API.md
+    // validation table).
+    for (bad, why) in [
+        (GenerateRequest { temperature: -0.5, ..req.clone() }, "negative temperature"),
+        (GenerateRequest { top_p: 0.0, ..req.clone() }, "top_p 0"),
+        (GenerateRequest { top_p: 1.5, ..req.clone() }, "top_p > 1"),
+    ] {
+        let (status, body) = c.request("POST", "/v1/generate", Some(&bad.to_json())).unwrap();
+        assert_eq!(status, 400, "{why}: {body}");
+    }
+
+    drop(c);
+    server.stop();
+}
+
+/// Streaming wire format over a real socket: chunked transfer-encoding,
+/// one newline-terminated JSON event per chunk, indices in order, a
+/// terminal `done` event carrying the full response, and a keep-alive
+/// connection that serves further requests afterwards.
+#[test]
+fn streaming_generate_emits_chunked_events_and_keeps_alive() {
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::from_millis(1));
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(5)).unwrap();
+
+    // Reference: the buffered run of the same prompt.
+    let req = GenerateRequest::greedy(Some("st".into()), vec![3, 1, 4], 5);
+    let (_, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    let want = GenerateResponse::parse(&body).unwrap().tokens;
+
+    let mut sreq = req.clone();
+    sreq.stream = true;
+    let (status, head) =
+        c.request_streaming("POST", "/v1/generate", Some(&sreq.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let h = |name: &str| {
+        head.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.to_ascii_lowercase())
+    };
+    assert_eq!(h("transfer-encoding").as_deref(), Some("chunked"));
+    assert_eq!(h("content-type").as_deref(), Some("application/x-ndjson"));
+    assert_eq!(h("connection").as_deref(), Some("keep-alive"));
+
+    let mut streamed: Vec<i32> = Vec::new();
+    let mut done: Option<String> = None;
+    while let Some(chunk) = c.next_chunk().unwrap() {
+        assert!(chunk.ends_with('\n'), "one newline-terminated event per chunk: {chunk:?}");
+        let ev = Json::parse(chunk.trim()).unwrap();
+        match ev.req("event").unwrap().as_str().unwrap() {
+            "token" => {
+                assert!(done.is_none(), "token event after the terminal event");
+                assert_eq!(ev.req("index").unwrap().as_usize(), Some(streamed.len()));
+                streamed.push(ev.req("token").unwrap().as_usize().unwrap() as i32);
+            }
+            "done" => done = Some(chunk.clone()),
+            other => panic!("unexpected event {other:?} in {chunk:?}"),
+        }
+    }
+    let done = done.expect("stream must end with a done event");
+    let resp = GenerateResponse::parse(&done).unwrap();
+    assert_eq!(resp.tokens, want, "streamed continuation == buffered continuation");
+    assert_eq!(streamed, want, "token events == the final token list");
+    assert_eq!(resp.prompt_len, 3);
+
+    // The connection stays usable for buffered requests after the stream.
+    let (status, body2) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(GenerateResponse::parse(&body2).unwrap().tokens, want);
+
+    // TTFT / inter-token histograms populated: 3 sessions, 4 gaps each.
+    let statz = c.get_json("/statz").unwrap();
+    let d = statz.req("decode").unwrap();
+    assert_eq!(d.req("ttft").unwrap().req("count").unwrap().as_usize(), Some(3));
+    assert_eq!(d.req("inter_token").unwrap().req("count").unwrap().as_usize(), Some(12));
+
+    drop(c);
+    server.stop();
+}
+
+/// Continuous-mode server whose mock engine decodes slowly against a huge
+/// seq_len, so streaming sessions live long enough to observe concurrent
+/// interleaving and mid-stream disconnects.
+fn start_slow_decode_server(step: Duration) -> Server {
+    let slow_seq = 4096;
+    let probe = MockEngine::new(MODEL_BATCH, slow_seq);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig {
+            max_batch: MODEL_BATCH,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 128,
+        },
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+    };
+    let info = EngineInfo {
+        seq_len: slow_seq,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let s = Server::start(
+        cfg,
+        info,
+        Arc::new(move || {
+            let mut e = MockEngine::new(MODEL_BATCH, slow_seq);
+            e.batch_cost = Duration::ZERO;
+            e.step_cost = step;
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        }),
+    )
+    .unwrap();
+    s.wait_ready(Duration::from_secs(10)).unwrap();
+    s
+}
+
+/// Two concurrent streams make progress together (the batched worker pass
+/// steps every live session per iteration), and a client that disconnects
+/// mid-stream has its session retired and slot freed long before the
+/// session could have run to completion.
+#[test]
+fn streaming_sessions_interleave_and_disconnect_frees_the_slot() {
+    let server = start_slow_decode_server(Duration::from_millis(5));
+    let addr = server.addr().to_string();
+
+    // Interleave: both 30-token streams must be in flight at once.
+    let run = |prompt: Vec<i32>| {
+        let addr = addr.clone();
+        std::thread::spawn(move || -> (Instant, Instant) {
+            let mut c = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+            let mut req = GenerateRequest::greedy(None, prompt, 30);
+            req.stream = true;
+            let (status, _) =
+                c.request_streaming("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+            assert_eq!(status, 200);
+            let mut times: Vec<Instant> = Vec::new();
+            let mut toks: Vec<i32> = Vec::new();
+            while let Some(chunk) = c.next_chunk().unwrap() {
+                let ev = Json::parse(chunk.trim()).unwrap();
+                match ev.req("event").unwrap().as_str().unwrap() {
+                    "token" => {
+                        times.push(Instant::now());
+                        toks.push(ev.req("token").unwrap().as_usize().unwrap() as i32);
+                    }
+                    "done" => {
+                        assert_eq!(GenerateResponse::parse(&chunk).unwrap().tokens, toks);
+                    }
+                    other => panic!("unexpected event {other:?}"),
+                }
+            }
+            assert_eq!(toks.len(), 30);
+            (*times.first().unwrap(), *times.last().unwrap())
+        })
+    };
+    let a = run(vec![1, 2, 3]);
+    let b = run(vec![4, 5, 6]);
+    let (a0, a1) = a.join().unwrap();
+    let (b0, b1) = b.join().unwrap();
+    assert!(
+        a1 > b0 && b1 > a0,
+        "the two streams did not overlap — sessions are serialized, not batched"
+    );
+
+    // Mid-stream disconnect: take one token, then drop the socket. The
+    // worker's next event send fails and must retire the session.
+    {
+        let mut c = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+        let mut req = GenerateRequest::greedy(None, vec![9, 9, 9], 2000);
+        req.stream = true;
+        let (status, _) =
+            c.request_streaming("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+        assert_eq!(status, 200);
+        let first = c.next_chunk().unwrap().expect("first streamed event");
+        assert!(first.contains("\"token\""), "{first}");
+        // Dropping the client closes the TCP stream mid-stream.
+    }
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let mut freed = false;
+    for _ in 0..100 {
+        let statz = c.get_json("/statz").unwrap();
+        let d = statz.req("decode").unwrap();
+        if d.req("sessions_active").unwrap().as_usize() == Some(0) {
+            assert_eq!(
+                statz.req("slots").unwrap().req("generating").unwrap().as_usize(),
+                Some(0)
+            );
+            let toks = d.req("tokens_total").unwrap().as_usize().unwrap();
+            // 2 full streams (31 tokens each incl. prefill) + the aborted
+            // session, which must die far short of its 2001-token budget.
+            assert!((62..500).contains(&toks), "tokens_total {toks}");
+            freed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(freed, "disconnected session never released its slot");
+
+    // The pool still serves fresh sessions afterwards.
+    let req = GenerateRequest::greedy(None, vec![8, 8], 3);
+    let (status, body) = c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body}");
 
     drop(c);
     server.stop();
