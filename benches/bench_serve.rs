@@ -1,6 +1,6 @@
 //! Serving throughput/latency benches.
 //!
-//! Six sections. All but the engine comparison run on the deterministic
+//! Seven sections. All but the engine comparison run on the deterministic
 //! mock engine (set QTX_BENCH_SERVE_COST_US to change the simulated
 //! per-dispatch cost; default 3000µs ≈ a tiny-config serve_score
 //! invocation):
@@ -36,6 +36,11 @@
 //!    charges `step_cost` once per batched pass vs once per session, so
 //!    the table isolates exactly the amortization the batched worker pass
 //!    buys (docs/GENERATION.md "Batched decode").
+//! 7. **Latency vs open connections** (the event-loop front-end
+//!    trajectory): a fixed closed-loop score load measured while
+//!    {16, 256, 1024} extra keep-alive connections sit idle on the
+//!    single-threaded poll loop — p95 must stay flat because idle
+//!    sockets cost a poll-set entry, not a thread.
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -58,8 +63,9 @@ use qtx::infer::NativeInt8Engine;
 use qtx::metrics::table::render;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine};
-use qtx::serve::loadgen::{self, LoadgenConfig, LoadgenReport};
+use qtx::serve::loadgen::{self, ConnectionHold, LoadgenConfig, LoadgenReport};
 use qtx::serve::obs::TraceConfig;
+use qtx::serve::poll::raise_nofile_limit;
 use qtx::serve::protocol::ScoreRequest;
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use qtx::serve::stats::EngineMem;
@@ -426,6 +432,74 @@ fn bench_obs(
     anyhow::ensure!(gen.errors == 0, "obs decode loadgen errors: {}", gen.errors);
     server.stop();
     Ok(ObsRow { mode, rps: score.throughput_rps, tokens_per_s: gen.gen_tokens_per_s })
+}
+
+// ---------------------------------------------------------------------------
+// Section 7: latency vs open connections (event-loop front-end)
+// ---------------------------------------------------------------------------
+
+struct ConnRow {
+    held: usize,
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    io_threads: usize,
+}
+
+/// A fixed closed-loop score load measured while `held` extra keep-alive
+/// connections sit idle on the event loop, with an occasional trickle
+/// request proving they are serviceable, not just open. The p95-vs-held
+/// curve is the front-end's scalability claim: an idle connection costs
+/// a poll-set entry, not a thread.
+fn bench_connections(
+    held: usize,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<ConnRow> {
+    let server = start_server(
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        MATRIX_MAX_WAIT_MS,
+        1024,
+        held + clients + 16,
+        cost_us,
+        0,
+    )?;
+    let addr = server.addr().to_string();
+    let mut hold = ConnectionHold::open(&addr, held, Duration::from_secs(10))?;
+    let score = ScoreRequest { id: None, tokens: vec![1, 2, 3, 4], targets: None }.to_json();
+    for i in 0..held.min(16) {
+        let status = hold.trickle(i * 61, "POST", "/v1/score", Some(&score))?;
+        anyhow::ensure!(status == 200, "trickle over a held connection got {status}");
+    }
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: None,
+    })?;
+    anyhow::ensure!(report.errors == 0, "connection-sweep loadgen errors: {}", report.errors);
+    let mut c = Client::connect(&addr, Duration::from_secs(5))?;
+    let statz = c.get_json("/statz")?;
+    let io_threads = statz.req("server")?.req("io_threads")?.as_usize().unwrap_or(0);
+    let open = statz.req("connections")?.req("open")?.as_usize().unwrap_or(0);
+    anyhow::ensure!(open >= held, "expected >= {held} open connections, /statz says {open}");
+    drop(c);
+    drop(hold);
+    server.stop();
+    Ok(ConnRow {
+        held,
+        rps: report.throughput_rps,
+        p50: report.p50_ms,
+        p95: report.p95_ms,
+        io_threads,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -806,6 +880,48 @@ fn main() -> anyhow::Result<()> {
         "\n## observability overhead — request tracing on vs off (mock engine, \
          continuous batching)\n\n{}",
         render(&["tracing", "req/s", "decode tok/s", "req/s vs off", "tok/s vs off"], &otable)
+    );
+
+    // -- latency vs open connections (event-loop front-end) ------------------
+    raise_nofile_limit(4096);
+    let mut conn_rows = Vec::new();
+    for held in [16usize, 256, 1024] {
+        let r = bench_connections(held, clients, reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] connections held={}: {:.1} req/s, p95 {:.2} ms ({} io thread)",
+            r.held, r.rps, r.p95, r.io_threads
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("section", Json::Str("open_connections".into())),
+                ("policy", Json::Str("continuous".into())),
+                ("held_connections", Json::Num(r.held as f64)),
+                ("clients", Json::Num(clients as f64)),
+                ("throughput_rps", Json::Num(r.rps)),
+                ("p50_ms", Json::Num(r.p50)),
+                ("p95_ms", Json::Num(r.p95)),
+                ("io_threads", Json::Num(r.io_threads as f64)),
+            ])
+        );
+        conn_rows.push(r);
+    }
+    let ctable: Vec<Vec<String>> = conn_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.held.to_string(),
+                format!("{:.1}", r.rps),
+                format!("{:.2}", r.p50),
+                format!("{:.2}", r.p95),
+                r.io_threads.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## latency vs open connections — {clients} closed-loop clients while the \
+         event-loop front-end holds idle keep-alive sockets\n\n{}",
+        render(&["held conns", "req/s", "p50 ms", "p95 ms", "io threads"], &ctable)
     );
 
     // -- engine dimension: pjrt vs native-int8 -------------------------------

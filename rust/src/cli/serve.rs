@@ -9,6 +9,7 @@
 //! qtx loadgen --port 8787 --open-loop --rate 500 --threads 32
 //! qtx loadgen --port 8787 --generate --max-new-tokens 16 --requests 8
 //! qtx loadgen --port 8787 --generate --stream --temperature 0.8 --top-p 0.95
+//! qtx loadgen --port 8787 --connections 1000 --requests 16
 //! ```
 //!
 //! `serve` resolves the checkpoint with the same recipe flags as `train`
@@ -44,7 +45,9 @@ use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{
     EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
-use crate::serve::loadgen::{run as loadgen_run, render_report, GenLoad, LoadgenConfig};
+use crate::serve::loadgen::{
+    run as loadgen_run, render_report, ConnectionHold, GenLoad, LoadgenConfig,
+};
 use crate::serve::obs::{chrome_trace_events, TraceConfig};
 use crate::serve::server::{Client, EngineInfo, Server, ServerConfig};
 use crate::serve::stats::EngineMem;
@@ -56,7 +59,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     Ok(ServerConfig {
         host: args.str("host", "127.0.0.1"),
         port: args.port(8787)?,
-        // --threads caps concurrent connections (one handler thread each).
+        // --threads caps concurrent open sockets (enforced at the accept
+        // stage by the event loop; connection cap+1 gets an immediate 503).
         max_connections: args.threads(64)?,
         engines: args.usize("engines", 1)?,
         // Continuous (slot-based) batching is the default; `fixed` keeps the
@@ -295,8 +299,28 @@ pub fn loadgen(args: &Args) -> Result<()> {
     // ui.perfetto.dev). Needs the server started with tracing on
     // (`--trace-capacity > 0`, the default).
     let dump_traces = args.str_opt("dump-traces");
+    // `--connections N` holds N extra mostly-idle keep-alive connections
+    // open across the whole run (the event-loop front-end serves them at
+    // zero thread cost). After the load, a trickle of requests through a
+    // few held sockets verifies they stayed serviceable.
+    let connections = args.usize("connections", 0)?;
     args.finish()?;
+    let mut hold = if connections > 0 {
+        Some(ConnectionHold::open(&cfg.addr, connections, cfg.timeout)?)
+    } else {
+        None
+    };
     let report = loadgen_run(&cfg)?;
+    if let Some(h) = hold.as_mut() {
+        for i in 0..h.len().min(8) {
+            let status = h.trickle(i, "GET", "/healthz", None)?;
+            anyhow::ensure!(
+                status == 200 || status == 503,
+                "held connection answered status {status}"
+            );
+        }
+        println!("held {} keep-alive connections through the run (trickle ok)", h.len());
+    }
     println!("\n## loadgen {} \n\n{}", cfg.addr, render_report(&report));
     println!("loadgen JSON: {}", report.to_json());
     if let Some(path) = dump_traces {

@@ -1,0 +1,714 @@
+//! Pure per-connection HTTP/1.1 state machine for the event-driven
+//! front-end.
+//!
+//! [`HttpConn`] is the sans-I/O core of `server.rs`: bytes and clock
+//! readings go in, [`ConnEvent`] actions come out, and no socket is ever
+//! touched — which is what makes the HTTP semantics (keep-alive
+//! defaults, 408 stall classification, idle close, pipelining, size
+//! caps) directly unit-testable and lets the conformance table in
+//! `rust/tests/serve_conformance.rs` assert the same cases twice, once
+//! here and once over raw sockets.
+//!
+//! State diagram (deadlines apply only to the reading states):
+//!
+//! ```text
+//! Idle ──bytes──▶ ReadingHead ──blank line──▶ ReadingBody
+//!   │                  │                          │
+//!   │ (deadline:       │ (deadline: 408)          │ (deadline: 408)
+//!   │  silent close)   ▼                          ▼
+//!   │             WaitingOnSlot ──▶ Replying | Streaming
+//!   │                                   │
+//!   └──────◀── response_complete(keep_alive=true) ──┘
+//!                        │ keep_alive=false
+//!                        ▼
+//!                      Closed
+//! ```
+//!
+//! The byte-level behavior is kept deliberately identical to the
+//! blocking [`crate::serve::server::read_message`] parser (which the
+//! test [`Client`](crate::serve::server::Client) still uses), including
+//! its quirks: a partial line is promoted to a complete one at EOF
+//! (`read_until` semantics), blank-line padding between keep-alive
+//! messages is tolerated and does not count as message progress, and
+//! the terminating blank line counts toward the head-size cap.
+
+use std::time::{Duration, Instant};
+
+/// Maximum bytes of start line + headers (matches the threaded parser).
+pub const MAX_HEAD_BYTES: usize = 32 * 1024;
+/// Maximum `Content-Length` a request may declare.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// Where a connection is in its request/response lifecycle — the label
+/// the `connections.{reading,waiting,streaming}` gauges aggregate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnState {
+    /// Keep-alive connection between messages (zero bytes of the next
+    /// request seen). Deadline expiry closes silently.
+    Idle,
+    /// Mid start-line or mid-headers. Deadline expiry is a 408.
+    ReadingHead,
+    /// Head complete, body incomplete. Deadline expiry is a 408.
+    ReadingBody,
+    /// A request was emitted and dispatched; no reply queued yet. No
+    /// read deadline — the request timeout governs, on the server side.
+    WaitingOnSlot,
+    /// A buffered reply is being produced/written.
+    Replying,
+    /// A chunked token stream is open on the wire.
+    Streaming,
+    /// Terminal; the machine ignores further input.
+    Closed,
+}
+
+/// One fully-parsed request, with the derived keep-alive decision
+/// (RFC 9112 §9.3: 1.1 persists unless `Connection: close`, 1.0 closes
+/// unless `Connection: keep-alive`).
+#[derive(Debug)]
+pub struct ParsedRequest {
+    pub method: String,
+    /// Path as sent, query string included.
+    pub path_full: String,
+    pub http10: bool,
+    pub keep_alive: bool,
+    /// Header names lowercased, values trimmed, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// When the read span of this request began: connection establish or
+    /// the previous `response_complete` — includes client think time on
+    /// a keep-alive connection, exactly like the threaded server's
+    /// `read` trace span (the caveat OBSERVABILITY.md documents).
+    pub read_start: Instant,
+}
+
+impl ParsedRequest {
+    /// Path with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.path_full.split('?').next().unwrap_or("")
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        use anyhow::Context as _;
+        std::str::from_utf8(&self.body).context("body not utf-8")
+    }
+}
+
+/// What the server must do next, as decided by the pure machine.
+#[derive(Debug)]
+pub enum ConnEvent {
+    /// A complete request. The machine pauses (buffering any pipelined
+    /// bytes unparsed) until [`HttpConn::response_complete`].
+    Request(ParsedRequest),
+    /// Protocol failure: write this JSON error response with
+    /// `Connection: close` and then close. `status` is 400 or 408.
+    Error { status: u16, reason: &'static str, message: String },
+    /// Close without writing a byte: clean EOF between messages, or an
+    /// idle keep-alive deadline (writing anything would desynchronize a
+    /// client that sends its next request around the same moment).
+    CloseSilent,
+}
+
+/// The 408 body the threaded server produced: the stalled read's
+/// `EAGAIN` formatted through `timed out reading request: {e}`.
+fn stall_message() -> String {
+    format!("timed out reading request: {}", std::io::Error::from_raw_os_error(11))
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Phase {
+    StartLine,
+    Headers,
+    Body { need: usize },
+}
+
+/// The connection state machine. Drive it with [`HttpConn::on_bytes`],
+/// [`HttpConn::on_eof`] and [`HttpConn::on_tick`]; acknowledge each
+/// emitted [`ConnEvent::Request`] with [`HttpConn::response_complete`]
+/// once the reply bytes are queued.
+pub struct HttpConn {
+    state: ConnState,
+    phase: Phase,
+    /// Raw received-but-unparsed bytes; `pos` marks the consumed prefix
+    /// (compacted after every parse pass).
+    buf: Vec<u8>,
+    pos: usize,
+    start_line: String,
+    headers: Vec<(String, String)>,
+    head_bytes: usize,
+    read_start: Instant,
+    last_activity: Instant,
+    read_timeout: Duration,
+    eof: bool,
+}
+
+impl HttpConn {
+    pub fn new(now: Instant, read_timeout: Duration) -> HttpConn {
+        HttpConn {
+            state: ConnState::Idle,
+            phase: Phase::StartLine,
+            buf: Vec::new(),
+            pos: 0,
+            start_line: String::new(),
+            headers: Vec::new(),
+            head_bytes: 0,
+            read_start: now,
+            last_activity: now,
+            read_timeout,
+            eof: false,
+        }
+    }
+
+    pub fn state(&self) -> ConnState {
+        self.state
+    }
+
+    /// Bytes arrived from the socket. While paused (a request is in
+    /// flight) or closed they are buffered/ignored without parsing;
+    /// otherwise the parser advances and may emit an event.
+    pub fn on_bytes(&mut self, data: &[u8], now: Instant) -> Option<ConnEvent> {
+        match self.state {
+            ConnState::Closed => None,
+            ConnState::WaitingOnSlot | ConnState::Replying | ConnState::Streaming => {
+                self.buf.extend_from_slice(data);
+                None
+            }
+            _ => {
+                self.buf.extend_from_slice(data);
+                self.last_activity = now;
+                self.parse()
+            }
+        }
+    }
+
+    /// The peer shut down its write side. In a reading state this
+    /// finalizes the current message (promoting any partial line, like
+    /// `read_until` hitting EOF); while paused it is only recorded —
+    /// `response_complete` will observe it when the reply is out.
+    pub fn on_eof(&mut self, now: Instant) -> Option<ConnEvent> {
+        self.eof = true;
+        match self.state {
+            ConnState::Closed => None,
+            ConnState::WaitingOnSlot | ConnState::Replying | ConnState::Streaming => None,
+            _ => {
+                self.last_activity = now;
+                if let Some(ev) = self.parse() {
+                    return Some(ev);
+                }
+                Some(self.finish_eof())
+            }
+        }
+    }
+
+    /// Clock tick: enforce the read deadline. Zero bytes of the next
+    /// message ⇒ routine idle close; a partial message ⇒ 408.
+    pub fn on_tick(&mut self, now: Instant) -> Option<ConnEvent> {
+        match self.state {
+            ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody => {}
+            _ => return None,
+        }
+        if now < self.last_activity + self.read_timeout {
+            return None;
+        }
+        self.state = ConnState::Closed;
+        if self.progressed() {
+            Some(ConnEvent::Error {
+                status: 408,
+                reason: "Request Timeout",
+                message: stall_message(),
+            })
+        } else {
+            Some(ConnEvent::CloseSilent)
+        }
+    }
+
+    /// The instant [`HttpConn::on_tick`] would act, for poll-timeout
+    /// computation. `None` outside the reading states.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        match self.state {
+            ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody => {
+                Some(self.last_activity + self.read_timeout)
+            }
+            _ => None,
+        }
+    }
+
+    /// A buffered (non-streaming) reply is being produced.
+    pub fn replying(&mut self) {
+        if self.state != ConnState::Closed {
+            self.state = ConnState::Replying;
+        }
+    }
+
+    /// A chunked stream opened on this connection.
+    pub fn streaming(&mut self) {
+        if self.state != ConnState::Closed {
+            self.state = ConnState::Streaming;
+        }
+    }
+
+    /// The response for the last emitted request has been queued. With
+    /// `keep_alive` false the connection closes; otherwise the parser
+    /// resets and immediately consumes any pipelined bytes, which may
+    /// emit the next event right away.
+    pub fn response_complete(&mut self, keep_alive: bool, now: Instant) -> Option<ConnEvent> {
+        if self.state == ConnState::Closed {
+            return None;
+        }
+        if !keep_alive {
+            self.state = ConnState::Closed;
+            return None;
+        }
+        self.state = ConnState::Idle;
+        self.phase = Phase::StartLine;
+        self.start_line.clear();
+        self.headers.clear();
+        self.head_bytes = 0;
+        self.read_start = now;
+        self.last_activity = now;
+        if let Some(ev) = self.parse() {
+            return Some(ev);
+        }
+        if self.eof && matches!(self.state, ConnState::Idle | ConnState::ReadingHead) {
+            return Some(self.finish_eof());
+        }
+        None
+    }
+
+    /// Force-close (write error, shutdown).
+    pub fn close(&mut self) {
+        self.state = ConnState::Closed;
+    }
+
+    /// Whether any byte of the *current* message has been consumed or is
+    /// pending — the stalled-vs-idle distinction behind 408 vs silent
+    /// close. Blank-line padding does not count (it was consumed and
+    /// discarded); a partial unterminated line does.
+    fn progressed(&self) -> bool {
+        !matches!(self.phase, Phase::StartLine) || self.pos < self.buf.len()
+    }
+
+    /// Classify EOF with an incomplete message, mirroring the blocking
+    /// parser's branches exactly.
+    fn finish_eof(&mut self) -> ConnEvent {
+        self.state = ConnState::Closed;
+        match self.phase {
+            // At EOF every partial line was promoted, so StartLine means
+            // nothing (or only blank padding) remained: clean close.
+            Phase::StartLine => ConnEvent::CloseSilent,
+            Phase::Headers => ConnEvent::Error {
+                status: 400,
+                reason: "Bad Request",
+                message: "eof in headers".into(),
+            },
+            Phase::Body { .. } => ConnEvent::Error {
+                status: 400,
+                reason: "Bad Request",
+                message: "reading body: failed to fill whole buffer".into(),
+            },
+        }
+    }
+
+    fn fail(&mut self, message: String) -> ConnEvent {
+        self.state = ConnState::Closed;
+        ConnEvent::Error { status: 400, reason: "Bad Request", message }
+    }
+
+    /// Advance the parser over the unconsumed buffer, then compact it
+    /// and refresh the reading-state label.
+    fn parse(&mut self) -> Option<ConnEvent> {
+        let ev = self.parse_inner();
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        if matches!(
+            self.state,
+            ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody
+        ) {
+            self.state = match self.phase {
+                Phase::Body { .. } => ConnState::ReadingBody,
+                _ if self.progressed() => ConnState::ReadingHead,
+                _ => ConnState::Idle,
+            };
+        }
+        ev
+    }
+
+    fn parse_inner(&mut self) -> Option<ConnEvent> {
+        loop {
+            match self.phase {
+                Phase::StartLine => {
+                    let line = self.take_line()?;
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim_end_matches(['\r', '\n']);
+                    if text.is_empty() {
+                        // Tolerate blank-line padding between keep-alive
+                        // messages (consumed, not message progress).
+                        continue;
+                    }
+                    self.start_line = text.to_string();
+                    self.head_bytes = self.start_line.len();
+                    self.phase = Phase::Headers;
+                }
+                Phase::Headers => {
+                    let line = self.take_line()?;
+                    self.head_bytes += line.len();
+                    if self.head_bytes > MAX_HEAD_BYTES {
+                        return Some(
+                            self.fail(format!("header section exceeds {MAX_HEAD_BYTES} bytes")),
+                        );
+                    }
+                    let text = String::from_utf8_lossy(&line);
+                    let text = text.trim_end_matches(['\r', '\n']);
+                    if text.is_empty() {
+                        let need = match self.content_length() {
+                            Ok(n) => n,
+                            Err(msg) => return Some(self.fail(msg)),
+                        };
+                        if need > MAX_BODY_BYTES {
+                            return Some(
+                                self.fail(format!("body of {need} bytes exceeds {MAX_BODY_BYTES}")),
+                            );
+                        }
+                        self.phase = Phase::Body { need };
+                    } else if let Some((k, v)) = text.split_once(':') {
+                        self.headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+                    }
+                    // Lines without a colon are silently skipped, like the
+                    // blocking parser.
+                }
+                Phase::Body { need } => {
+                    if self.buf.len() - self.pos < need {
+                        return None;
+                    }
+                    let body = self.buf[self.pos..self.pos + need].to_vec();
+                    self.pos += need;
+                    return Some(self.emit_request(body));
+                }
+            }
+        }
+    }
+
+    /// One raw line (terminator included) off the unconsumed buffer;
+    /// at EOF the remaining partial line is promoted, mirroring
+    /// `read_until` returning an unterminated tail.
+    fn take_line(&mut self) -> Option<Vec<u8>> {
+        let rest = &self.buf[self.pos..];
+        let end = match rest.iter().position(|&b| b == b'\n') {
+            Some(i) => i + 1,
+            None if self.eof && !rest.is_empty() => rest.len(),
+            None => return None,
+        };
+        let line = rest[..end].to_vec();
+        self.pos += end;
+        Some(line)
+    }
+
+    fn content_length(&self) -> Result<usize, String> {
+        match self.headers.iter().find(|(k, _)| k == "content-length") {
+            Some((_, v)) => v.parse::<usize>().map_err(|e| format!("bad content-length: {e}")),
+            None => Ok(0),
+        }
+    }
+
+    fn emit_request(&mut self, body: Vec<u8>) -> ConnEvent {
+        let mut parts = self.start_line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path_full = parts.next().unwrap_or("").to_string();
+        let http10 = parts.next().unwrap_or("HTTP/1.1").eq_ignore_ascii_case("HTTP/1.0");
+        let headers = std::mem::take(&mut self.headers);
+        let connection = headers.iter().find(|(k, _)| k == "connection").map(|(_, v)| v.as_str());
+        let keep_alive = match connection {
+            Some(v) if http10 => v.eq_ignore_ascii_case("keep-alive"),
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => !http10,
+        };
+        self.state = ConnState::WaitingOnSlot;
+        self.phase = Phase::StartLine;
+        self.start_line.clear();
+        self.head_bytes = 0;
+        ConnEvent::Request(ParsedRequest {
+            method,
+            path_full,
+            http10,
+            keep_alive,
+            headers,
+            body,
+            read_start: self.read_start,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn(timeout_ms: u64) -> (HttpConn, Instant) {
+        let now = Instant::now();
+        (HttpConn::new(now, Duration::from_millis(timeout_ms)), now)
+    }
+
+    fn expect_request(ev: Option<ConnEvent>) -> ParsedRequest {
+        match ev {
+            Some(ConnEvent::Request(r)) => r,
+            other => panic!("expected Request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_pauses() {
+        let (mut c, now) = conn(1000);
+        assert_eq!(c.state(), ConnState::Idle);
+        let wire = b"POST /v1/score HTTP/1.1\r\nContent-Type: application/json\r\n\
+                     Content-Length: 5\r\n\r\nhello";
+        assert!(c.on_bytes(&wire[..10], now).is_none());
+        assert_eq!(c.state(), ConnState::ReadingHead);
+        let req = expect_request(c.on_bytes(&wire[10..], now));
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/score");
+        assert_eq!(req.header("content-length"), Some("5"));
+        assert_eq!(req.body, b"hello");
+        assert!(req.keep_alive && !req.http10);
+        assert_eq!(c.state(), ConnState::WaitingOnSlot);
+        // Paused: further bytes buffer without parsing.
+        assert!(c.on_bytes(b"GET /healthz HTTP/1.1\r\n\r\n", now).is_none());
+        assert_eq!(c.state(), ConnState::WaitingOnSlot);
+        // Completing the response immediately surfaces the pipelined one.
+        let req2 = expect_request(c.response_complete(true, now));
+        assert_eq!(req2.method, "GET");
+        assert_eq!(req2.path(), "/healthz");
+        assert_eq!(c.state(), ConnState::WaitingOnSlot);
+        assert!(c.response_complete(true, now).is_none());
+        assert_eq!(c.state(), ConnState::Idle);
+    }
+
+    #[test]
+    fn query_string_and_header_normalization() {
+        let (mut c, now) = conn(1000);
+        let req = expect_request(c.on_bytes(
+            b"GET /debug/traces?n=1 HTTP/1.1\r\nX-Custom:  padded \r\n\r\n",
+            now,
+        ));
+        assert_eq!(req.path_full, "/debug/traces?n=1");
+        assert_eq!(req.path(), "/debug/traces");
+        assert_eq!(req.header("x-custom"), Some("padded"));
+    }
+
+    #[test]
+    fn response_complete_with_close_closes() {
+        let (mut c, now) = conn(1000);
+        expect_request(c.on_bytes(b"GET /statz HTTP/1.0\r\n\r\n", now));
+        assert!(c.response_complete(false, now).is_none());
+        assert_eq!(c.state(), ConnState::Closed);
+        assert!(c.on_bytes(b"GET /statz HTTP/1.1\r\n\r\n", now).is_none());
+    }
+
+    #[test]
+    fn idle_deadline_closes_silently_and_partial_head_gets_408() {
+        // Idle: no bytes at all.
+        let (mut c, now) = conn(100);
+        assert!(c.on_tick(now + Duration::from_millis(99)).is_none());
+        match c.on_tick(now + Duration::from_millis(100)) {
+            Some(ConnEvent::CloseSilent) => {}
+            other => panic!("idle deadline must close silently, got {other:?}"),
+        }
+        // Mid-head: a partial start line is progress.
+        let (mut c, now) = conn(100);
+        assert!(c.on_bytes(b"POST /v1/score HT", now).is_none());
+        match c.on_tick(now + Duration::from_millis(150)) {
+            Some(ConnEvent::Error { status: 408, message, .. }) => {
+                assert!(message.starts_with("timed out reading request:"), "{message}");
+            }
+            other => panic!("mid-head stall must 408, got {other:?}"),
+        }
+        // Activity resets the deadline.
+        let (mut c, now) = conn(100);
+        assert!(c.on_bytes(b"POST", now).is_none());
+        let later = now + Duration::from_millis(80);
+        assert!(c.on_bytes(b" /v1/score", later).is_none());
+        assert!(c.on_tick(now + Duration::from_millis(150)).is_none());
+        assert_eq!(c.next_deadline(), Some(later + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn mid_body_stall_gets_408() {
+        let (mut c, now) = conn(100);
+        let ev = c.on_bytes(b"POST /v1/score HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"tok", now);
+        assert!(ev.is_none());
+        assert_eq!(c.state(), ConnState::ReadingBody);
+        match c.on_tick(now + Duration::from_millis(100)) {
+            Some(ConnEvent::Error { status: 408, .. }) => {}
+            other => panic!("mid-body stall must 408, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blank_line_padding_is_not_progress() {
+        let (mut c, now) = conn(100);
+        assert!(c.on_bytes(b"\r\n\r\n", now).is_none());
+        assert_eq!(c.state(), ConnState::Idle, "blank padding keeps the connection idle");
+        match c.on_tick(now + Duration::from_millis(100)) {
+            Some(ConnEvent::CloseSilent) => {}
+            other => panic!("blank padding then timeout closes silently, got {other:?}"),
+        }
+        // A lone partial \r *is* progress (read_until would block holding it).
+        let (mut c, now) = conn(100);
+        assert!(c.on_bytes(b"\r", now).is_none());
+        match c.on_tick(now + Duration::from_millis(100)) {
+            Some(ConnEvent::Error { status: 408, .. }) => {}
+            other => panic!("partial line then timeout must 408, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eof_classification_matches_blocking_parser() {
+        // Clean EOF with nothing: silent close.
+        let (mut c, now) = conn(1000);
+        match c.on_eof(now) {
+            Some(ConnEvent::CloseSilent) => {}
+            other => panic!("clean EOF closes silently, got {other:?}"),
+        }
+        // EOF after only blank padding (even a partial one): still clean.
+        let (mut c, now) = conn(1000);
+        assert!(c.on_bytes(b"\r\n\r", now).is_none());
+        match c.on_eof(now) {
+            Some(ConnEvent::CloseSilent) => {}
+            other => panic!("blank padding then EOF closes silently, got {other:?}"),
+        }
+        // EOF mid start line: the partial line is promoted to a complete
+        // start line, then the missing headers fail — "eof in headers".
+        let (mut c, now) = conn(1000);
+        assert!(c.on_bytes(b"GET /healthz HTTP/1.1", now).is_none());
+        match c.on_eof(now) {
+            Some(ConnEvent::Error { status: 400, message, .. }) => {
+                assert_eq!(message, "eof in headers");
+            }
+            other => panic!("EOF mid-head must 400, got {other:?}"),
+        }
+        // EOF mid body.
+        let (mut c, now) = conn(1000);
+        assert!(c.on_bytes(b"POST /x HTTP/1.1\r\nContent-Length: 9\r\n\r\nabc", now).is_none());
+        match c.on_eof(now) {
+            Some(ConnEvent::Error { status: 400, message, .. }) => {
+                assert_eq!(message, "reading body: failed to fill whole buffer");
+            }
+            other => panic!("EOF mid-body must 400, got {other:?}"),
+        }
+        // EOF promoting the final blank header line completes the head.
+        let (mut c, now) = conn(1000);
+        assert!(c.on_bytes(b"GET /healthz HTTP/1.1\r\n\r", now).is_none());
+        let req = expect_request(c.on_eof(now));
+        assert_eq!(req.path(), "/healthz");
+    }
+
+    #[test]
+    fn keep_alive_table_matches_rfc9112() {
+        let cases: &[(&[u8], bool, bool)] = &[
+            (b"GET /healthz HTTP/1.1\r\n\r\n", false, true),
+            (b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n", false, false),
+            (b"GET /healthz HTTP/1.1\r\nConnection: Keep-Alive\r\n\r\n", false, true),
+            (b"GET /healthz HTTP/1.0\r\n\r\n", true, false),
+            (b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", true, true),
+            (b"GET /healthz HTTP/1.0\r\nConnection: close\r\n\r\n", true, false),
+            (b"GET /healthz http/1.0\r\n\r\n", true, false),
+        ];
+        for (wire, http10, keep) in cases {
+            let (mut c, now) = conn(1000);
+            let req = expect_request(c.on_bytes(wire, now));
+            assert_eq!(req.http10, *http10, "{}", String::from_utf8_lossy(wire));
+            assert_eq!(req.keep_alive, *keep, "{}", String::from_utf8_lossy(wire));
+        }
+    }
+
+    #[test]
+    fn size_caps_and_bad_content_length() {
+        // Oversized head: rejected the moment a completed header line
+        // pushes the running head-byte count past the cap.
+        let (mut c, now) = conn(1000);
+        let mut wire = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        wire.resize(wire.len() + MAX_HEAD_BYTES, b'x');
+        wire.extend_from_slice(b"\r\n");
+        let ev = c.on_bytes(&wire, now);
+        match ev {
+            Some(ConnEvent::Error { status: 400, message, .. }) => {
+                assert!(message.contains("header section exceeds"), "{message}");
+            }
+            other => panic!("oversized head must 400, got {other:?}"),
+        }
+        // Oversized declared body.
+        let (mut c, now) = conn(1000);
+        let wire = format!(
+            "POST /v1/score HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        match c.on_bytes(wire.as_bytes(), now) {
+            Some(ConnEvent::Error { status: 400, message, .. }) => {
+                assert!(message.contains("exceeds"), "{message}");
+            }
+            other => panic!("oversized body must 400, got {other:?}"),
+        }
+        // Unparseable content-length.
+        let (mut c, now) = conn(1000);
+        match c.on_bytes(b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", now) {
+            Some(ConnEvent::Error { status: 400, message, .. }) => {
+                assert!(message.starts_with("bad content-length:"), "{message}");
+            }
+            other => panic!("bad content-length must 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lf_only_line_endings_parse() {
+        let (mut c, now) = conn(1000);
+        let req =
+            expect_request(c.on_bytes(b"POST /v1/score HTTP/1.1\nContent-Length: 2\n\nok", now));
+        assert_eq!(req.path(), "/v1/score");
+        assert_eq!(req.body, b"ok");
+    }
+
+    #[test]
+    fn byte_at_a_time_parse_is_identical() {
+        let wire = b"POST /v1/score HTTP/1.1\r\nContent-Type: application/json\r\n\
+                     Content-Length: 4\r\nConnection: close\r\n\r\nbody";
+        let (mut c, now) = conn(1000);
+        let mut got = None;
+        for (i, b) in wire.iter().enumerate() {
+            let ev = c.on_bytes(std::slice::from_ref(b), now);
+            if let Some(ev) = ev {
+                assert_eq!(i, wire.len() - 1, "event before the last byte");
+                got = Some(ev);
+            }
+        }
+        let req = expect_request(got);
+        assert_eq!(req.body, b"body");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn headers_without_colon_are_skipped() {
+        let (mut c, now) = conn(1000);
+        let req = expect_request(
+            c.on_bytes(b"GET / HTTP/1.1\r\ngarbage line\r\nX-Ok: 1\r\n\r\n", now),
+        );
+        assert_eq!(req.headers.len(), 1);
+        assert_eq!(req.header("x-ok"), Some("1"));
+    }
+
+    #[test]
+    fn streaming_states_and_deadlines() {
+        let (mut c, now) = conn(1000);
+        expect_request(c.on_bytes(b"POST /v1/generate HTTP/1.1\r\n\r\n", now));
+        assert_eq!(c.state(), ConnState::WaitingOnSlot);
+        assert!(c.next_deadline().is_none(), "no read deadline while a request is in flight");
+        assert!(c.on_tick(now + Duration::from_secs(10)).is_none());
+        c.streaming();
+        assert_eq!(c.state(), ConnState::Streaming);
+        assert!(c.response_complete(true, now).is_none());
+        assert_eq!(c.state(), ConnState::Idle);
+        assert!(c.next_deadline().is_some());
+    }
+}

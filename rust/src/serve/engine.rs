@@ -768,13 +768,83 @@ impl ScoreEngine for PjrtEngine {
 // Engine pool
 // ---------------------------------------------------------------------------
 
+/// A job's reply channel: an mpsc sender plus an optional poll-loop
+/// [`Waker`](crate::serve::poll::Waker). Engine workers run on their own
+/// threads while the event-driven front-end sleeps in `poll(2)`; the
+/// waker attached by the server makes every reply poke that loop awake
+/// so results are written the moment they exist. Bare-channel callers
+/// (worker unit tests, offline drivers) get one via `From` with no
+/// waker attached.
+#[derive(Clone)]
+pub struct ReplyTx {
+    tx: mpsc::Sender<Result<JobOutcome, String>>,
+    waker: Option<Arc<crate::serve::poll::Waker>>,
+}
+
+impl ReplyTx {
+    /// Attach the front-end waker (builder-style).
+    pub fn with_waker(mut self, waker: Arc<crate::serve::poll::Waker>) -> ReplyTx {
+        self.waker = Some(waker);
+        self
+    }
+
+    /// Send-then-wake. The send result is surfaced so callers can detect
+    /// a gone receiver, exactly like a bare `mpsc::Sender`.
+    pub fn send(
+        &self,
+        msg: Result<JobOutcome, String>,
+    ) -> std::result::Result<(), mpsc::SendError<Result<JobOutcome, String>>> {
+        let r = self.tx.send(msg);
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+        r
+    }
+}
+
+impl From<mpsc::Sender<Result<JobOutcome, String>>> for ReplyTx {
+    fn from(tx: mpsc::Sender<Result<JobOutcome, String>>) -> ReplyTx {
+        ReplyTx { tx, waker: None }
+    }
+}
+
+/// A streaming job's event channel — same send-then-wake contract as
+/// [`ReplyTx`], carrying per-token [`GenEvent`]s.
+#[derive(Clone)]
+pub struct EventTx {
+    tx: mpsc::Sender<GenEvent>,
+    waker: Option<Arc<crate::serve::poll::Waker>>,
+}
+
+impl EventTx {
+    /// Attach the front-end waker (builder-style).
+    pub fn with_waker(mut self, waker: Arc<crate::serve::poll::Waker>) -> EventTx {
+        self.waker = Some(waker);
+        self
+    }
+
+    pub fn send(&self, ev: GenEvent) -> std::result::Result<(), mpsc::SendError<GenEvent>> {
+        let r = self.tx.send(ev);
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+        r
+    }
+}
+
+impl From<mpsc::Sender<GenEvent>> for EventTx {
+    fn from(tx: mpsc::Sender<GenEvent>) -> EventTx {
+        EventTx { tx, waker: None }
+    }
+}
+
 /// One queued job: the work item plus its reply channel. Scoring and
 /// generation ride the same admission queue and slot pool — a slot either
 /// hosts one scoring row for one dispatch or one generation session for
 /// many.
 pub struct Job {
     pub kind: JobKind,
-    pub resp: mpsc::Sender<Result<JobOutcome, String>>,
+    pub resp: ReplyTx,
     /// Live trace handle (None when tracing is disabled): the worker adds
     /// queue/claim/dispatch/engine spans; the HTTP handler that minted it
     /// seals the trace after writing the reply.
@@ -784,13 +854,13 @@ pub struct Job {
     /// `Done`/`Error`. A send failure means the HTTP handler is gone
     /// (client disconnect) — the worker then abandons the session and
     /// frees its slot immediately.
-    pub events: Option<mpsc::Sender<GenEvent>>,
+    pub events: Option<EventTx>,
 }
 
 impl Job {
     /// Convenience constructor for scoring jobs (the common path).
-    pub fn score(req: ScoreRequest, resp: mpsc::Sender<Result<JobOutcome, String>>) -> Job {
-        Job { kind: JobKind::Score(req), resp, trace: None, events: None }
+    pub fn score(req: ScoreRequest, resp: impl Into<ReplyTx>) -> Job {
+        Job { kind: JobKind::Score(req), resp: resp.into(), trace: None, events: None }
     }
 
     /// Attach a trace handle (builder-style, keeps call sites short).
@@ -800,7 +870,7 @@ impl Job {
     }
 
     /// Attach a streaming event channel (builder-style).
-    pub fn streaming(mut self, events: Option<mpsc::Sender<GenEvent>>) -> Job {
+    pub fn streaming(mut self, events: Option<EventTx>) -> Job {
         self.events = events;
         self
     }
@@ -1020,7 +1090,7 @@ pub fn spawn_engine_pool(
 struct GenSession {
     slot: usize,
     row: usize,
-    resp: mpsc::Sender<Result<JobOutcome, String>>,
+    resp: ReplyTx,
     tokens: Vec<i32>,
     max_new: usize,
     queue_ms: f64,
@@ -1029,7 +1099,7 @@ struct GenSession {
     /// Per-token `step` spans land here; the handler seals the trace.
     trace: Option<Arc<TraceTap>>,
     /// Streaming event channel (None for buffered requests).
-    events: Option<mpsc::Sender<GenEvent>>,
+    events: Option<EventTx>,
     /// When the previous token was produced — feeds the
     /// `decode.inter_token` latency histogram.
     last_token: Instant,
@@ -1078,7 +1148,7 @@ fn run_worker(
     // Batch-view assembly buffers persist across dispatches (cleared, not
     // reallocated — capacities warm after the first full batch).
     let mut reqs: Vec<ScoreRequest> = Vec::new();
-    type Reply = (mpsc::Sender<Result<JobOutcome, String>>, Duration, Option<Arc<TraceTap>>);
+    type Reply = (ReplyTx, Duration, Option<Arc<TraceTap>>);
     let mut replies: Vec<Reply> = Vec::new();
     let mut sessions: Vec<GenSession> = Vec::new();
     // Gathered (row, last_token) pairs for the batched multi-session step
@@ -1779,7 +1849,7 @@ mod tests {
             let (tx, rx) = mpsc::channel();
             let kind = JobKind::Generate(gen_req(&[g, g + 1], 6));
             dispatch
-                .submit(Job { kind, resp: tx, trace: None, events: None })
+                .submit(Job { kind, resp: tx.into(), trace: None, events: None })
                 .map_err(|_| ())
                 .unwrap();
             gen_rxs.push(rx);
@@ -1863,7 +1933,7 @@ mod tests {
         let (etx, erx) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![7, 8], 5));
         dispatch
-            .submit(Job { kind, resp: tx, trace: None, events: Some(etx) })
+            .submit(Job { kind, resp: tx.into(), trace: None, events: Some(etx.into()) })
             .map_err(|_| ())
             .unwrap();
         let mut streamed = Vec::new();
@@ -1887,7 +1957,7 @@ mod tests {
         let (etx2, erx2) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![1, 2, 3], 2000));
         dispatch
-            .submit(Job { kind, resp: tx2, trace: None, events: Some(etx2) })
+            .submit(Job { kind, resp: tx2.into(), trace: None, events: Some(etx2.into()) })
             .map_err(|_| ())
             .unwrap();
         let first = erx2.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -1901,7 +1971,7 @@ mod tests {
         let (tx4, rx4) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![9], 3));
         dispatch
-            .submit(Job { kind, resp: tx4, trace: None, events: None })
+            .submit(Job { kind, resp: tx4.into(), trace: None, events: None })
             .map_err(|_| ())
             .unwrap();
         rx4.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();

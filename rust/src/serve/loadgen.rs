@@ -105,6 +105,56 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// A block of held keep-alive connections — the fixture behind
+/// `qtx loadgen --connections N` and the 1k-connection smoke. All `n`
+/// sockets are opened up front and sit mostly idle (the event-loop
+/// server keeps them at zero thread cost); [`ConnectionHold::trickle`]
+/// pushes a request through a rotating member to prove held sockets stay
+/// serviceable. Dropping the hold closes every socket.
+pub struct ConnectionHold {
+    conns: Vec<Client>,
+}
+
+impl ConnectionHold {
+    /// Open `n` keep-alive connections to `addr`. Fails on the first
+    /// connect error — a partial hold would silently weaken the test.
+    pub fn open(addr: &str, n: usize, timeout: Duration) -> Result<ConnectionHold> {
+        let mut conns = Vec::with_capacity(n);
+        for i in 0..n {
+            conns.push(
+                Client::connect(addr, timeout)
+                    .with_context(|| format!("opening held connection {i} of {n}"))?,
+            );
+        }
+        Ok(ConnectionHold { conns })
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    /// Send one request through held connection `i % n` (a trickle over
+    /// otherwise-idle sockets) and return the response status.
+    pub fn trickle(
+        &mut self,
+        i: usize,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<u16> {
+        anyhow::ensure!(!self.conns.is_empty(), "no held connections");
+        let k = i % self.conns.len();
+        let (status, _body) = self.conns[k]
+            .request(method, path, body)
+            .with_context(|| format!("trickle request over held connection {k}"))?;
+        Ok(status)
+    }
+}
+
 /// Aggregated results from one loadgen run.
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {

@@ -65,7 +65,13 @@
 //! * [`batcher`]  — fixed FIFO batcher + slot allocator/admission queue.
 //! * [`engine`]   — `ScoreEngine` trait; PJRT session + mock; policy
 //!   dispatch; worker pool.
-//! * [`server`]   — hand-rolled HTTP/1.1 on `std::net` worker threads.
+//! * [`server`]   — hand-rolled HTTP/1.1 served by one non-blocking
+//!   event-loop thread over [`poll`] + [`conn`] (engine work stays on
+//!   the worker pool's threads).
+//! * [`conn`]     — pure per-connection HTTP state machine (bytes +
+//!   clock in, actions out; the conformance-test surface).
+//! * [`poll`]     — minimal `poll(2)` wrapper, cross-thread waker, fd
+//!   rlimit helper (no libc/tokio in the vendor set).
 //! * [`stats`]    — atomic counters + latency histograms (`/statz`,
 //!   `/metricz`).
 //! * [`obs`]      — trace IDs, span taps, completed-trace ring
@@ -73,9 +79,11 @@
 //! * [`loadgen`]  — closed-loop and open-loop (Poisson) load generators.
 
 pub mod batcher;
+pub mod conn;
 pub mod engine;
 pub mod loadgen;
 pub mod obs;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 pub mod stats;

@@ -1,0 +1,266 @@
+//! Minimal readiness polling for the event-driven HTTP front-end.
+//!
+//! The vendor set has no `libc`/`mio`/`tokio`, and the front-end needs
+//! exactly three syscalls, so they are declared here directly: `poll(2)`
+//! for socket readiness, and `getrlimit`/`setrlimit(2)` so
+//! high-connection runs (the 1k-connection smoke) can raise the fd soft
+//! limit toward the hard cap before holding a thousand sockets open.
+//! Linux-only by construction — the serve stack already assumes it (CI
+//! and the toolchain image are Linux containers); the declarations match
+//! the 64-bit glibc ABI (`nfds_t` = unsigned long, `rlim_t` = u64).
+//!
+//! [`Poller`] is deliberately stateless between passes: the event loop
+//! rebuilds the interest set every iteration (`clear` + `register`),
+//! which keeps registration bookkeeping trivial and is nowhere near the
+//! bottleneck at the connection counts a single engine host serves —
+//! `poll(2)` itself is O(n) per call regardless.
+
+use std::io;
+use std::io::{Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// Readable (or a peer hangup pending read — see `poll(2)`).
+pub const POLLIN: i16 = 0x001;
+/// Writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (revents only).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (revents only).
+pub const POLLHUP: i16 = 0x010;
+/// Fd not open (revents only).
+pub const POLLNVAL: i16 = 0x020;
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+const RLIMIT_NOFILE: i32 = 7;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout_ms: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+}
+
+/// A rebuilt-per-pass `poll(2)` interest set. Register `(fd, token,
+/// interest)` triples, call [`Poller::poll`], and get back the tokens
+/// whose fds have pending readiness.
+#[derive(Default)]
+pub struct Poller {
+    fds: Vec<PollFd>,
+    tokens: Vec<usize>,
+    ready: Vec<(usize, i16)>,
+}
+
+impl Poller {
+    pub fn new() -> Poller {
+        Poller::default()
+    }
+
+    /// Drop all registrations (buffers are retained, not freed).
+    pub fn clear(&mut self) {
+        self.fds.clear();
+        self.tokens.clear();
+    }
+
+    /// Watch `fd` for `interest` (a `POLLIN`/`POLLOUT` mask); readiness is
+    /// reported under `token`. Tokens need not be unique or dense.
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: i16) {
+        self.fds.push(PollFd { fd, events: interest, revents: 0 });
+        self.tokens.push(token);
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// elapses (`None` = wait indefinitely). Returns `(token, revents)`
+    /// pairs; empty on timeout or `EINTR`. The timeout is rounded *up*
+    /// to whole milliseconds so a sub-millisecond deadline cannot spin.
+    pub fn poll(&mut self, timeout: Option<Duration>) -> io::Result<&[(usize, i16)]> {
+        self.ready.clear();
+        let timeout_ms = match timeout {
+            None => -1,
+            Some(d) => {
+                let ms = d.as_nanos().div_ceil(1_000_000);
+                ms.min(i32::MAX as u128) as i32
+            }
+        };
+        for f in self.fds.iter_mut() {
+            f.revents = 0;
+        }
+        let rc = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as u64, timeout_ms) };
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                return Ok(&self.ready);
+            }
+            return Err(err);
+        }
+        if rc > 0 {
+            for (f, &token) in self.fds.iter().zip(self.tokens.iter()) {
+                if f.revents != 0 {
+                    self.ready.push((token, f.revents));
+                }
+            }
+        }
+        Ok(&self.ready)
+    }
+}
+
+/// Cross-thread wakeup for a thread parked in [`Poller::poll`]: a
+/// nonblocking socketpair where [`Waker::wake`] makes the read end
+/// readable. Engine workers hold the write end (via the reply channels)
+/// and poke the I/O thread whenever a result lands.
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    /// Build the waker and its read end. The caller registers the read
+    /// end with its poller (conventionally at token 0) and calls
+    /// [`drain_wakes`] whenever it fires.
+    pub fn pair() -> io::Result<(Waker, UnixStream)> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok((Waker { tx }, rx))
+    }
+
+    /// Make the read end readable. Infallible by design: `WouldBlock`
+    /// means a wake is already pending (the buffer holds unread bytes),
+    /// and any other failure means the poll loop is gone — either way
+    /// there is nothing useful for the sender to do about it.
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1]);
+    }
+}
+
+/// Consume all pending wake bytes so the read end goes quiet until the
+/// next [`Waker::wake`].
+pub fn drain_wakes(rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    let mut rx = rx;
+    while matches!(rx.read(&mut buf), Ok(n) if n > 0) {}
+}
+
+/// Best-effort: raise the soft `RLIMIT_NOFILE` toward `target` (capped
+/// at the hard limit). Returns the soft limit in effect afterwards — 0
+/// if it could not even be read, which callers treat as "unknown, carry
+/// on".
+pub fn raise_nofile_limit(target: u64) -> u64 {
+    unsafe {
+        let mut r = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 0;
+        }
+        if r.cur >= target {
+            return r.cur;
+        }
+        let want = Rlimit { cur: target.min(r.max), max: r.max };
+        let _ = setrlimit(RLIMIT_NOFILE, &want);
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 0;
+        }
+        r.cur
+    }
+}
+
+/// `fd` is readable per a one-off zero-timeout poll — a convenience for
+/// tests and shutdown paths that do not want a full [`Poller`].
+pub fn is_readable(fd: RawFd) -> bool {
+    let mut p = PollFd { fd, events: POLLIN, revents: 0 };
+    let rc = unsafe { poll(&mut p, 1, 0) };
+    rc > 0 && p.revents & POLLIN != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    #[test]
+    fn waker_makes_read_end_ready_and_drain_quiets_it() {
+        let (waker, rx) = Waker::pair().unwrap();
+        let mut poller = Poller::new();
+        poller.register(rx.as_raw_fd(), 0, POLLIN);
+        // Nothing pending: a short poll times out empty.
+        assert!(poller.poll(Some(Duration::from_millis(10))).unwrap().is_empty());
+        // A wake (from another thread, as in production) makes it ready.
+        let w = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            waker.wake();
+            waker
+        });
+        let t0 = Instant::now();
+        let ready = poller.poll(Some(Duration::from_secs(5))).unwrap().to_vec();
+        assert_eq!(ready.len(), 1, "waker did not wake the poll");
+        assert_eq!(ready[0].0, 0);
+        assert!(t0.elapsed() < Duration::from_secs(4), "poll should return on wake, not timeout");
+        let waker = w.join().unwrap();
+        // Coalescing: many wakes, one drain, quiet afterwards.
+        waker.wake();
+        waker.wake();
+        drain_wakes(&rx);
+        assert!(poller.poll(Some(Duration::from_millis(10))).unwrap().is_empty());
+    }
+
+    #[test]
+    fn timeout_elapses_without_fds() {
+        let mut poller = Poller::new();
+        let t0 = Instant::now();
+        assert!(poller.poll(Some(Duration::from_millis(50))).unwrap().is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(40), "poll returned too early");
+    }
+
+    #[test]
+    fn tcp_accept_and_read_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new();
+        poller.register(listener.as_raw_fd(), 7, POLLIN);
+        assert!(poller.poll(Some(Duration::from_millis(10))).unwrap().is_empty());
+
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let ready = poller.poll(Some(Duration::from_secs(5))).unwrap().to_vec();
+        assert_eq!(ready[0].0, 7, "pending accept must report POLLIN");
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+
+        poller.clear();
+        poller.register(server_side.as_raw_fd(), 9, POLLIN | POLLOUT);
+        let ready = poller.poll(Some(Duration::from_secs(5))).unwrap().to_vec();
+        assert!(
+            ready.iter().any(|&(t, re)| t == 9 && re & POLLOUT != 0),
+            "fresh socket must be writable"
+        );
+        assert!(!is_readable(server_side.as_raw_fd()));
+        client.write_all(b"x").unwrap();
+        let ready = poller.poll(Some(Duration::from_secs(5))).unwrap().to_vec();
+        assert!(
+            ready.iter().any(|&(t, re)| t == 9 && re & POLLIN != 0),
+            "byte in flight must report POLLIN"
+        );
+        assert!(is_readable(server_side.as_raw_fd()));
+    }
+
+    #[test]
+    fn nofile_limit_is_monotone_and_readable() {
+        let before = raise_nofile_limit(0);
+        assert!(before > 0, "soft RLIMIT_NOFILE should be readable");
+        // Asking for less than the current soft limit never lowers it.
+        assert_eq!(raise_nofile_limit(1), before);
+        // Asking for more either raises it (≤ hard cap) or leaves it.
+        assert!(raise_nofile_limit(before + 64) >= before);
+    }
+}

@@ -1,5 +1,5 @@
-//! Hand-rolled HTTP/1.1 server on `std::net::TcpListener` + worker threads
-//! (the offline vendor set has no tokio/hyper; this follows the repo's
+//! Hand-rolled HTTP/1.1 server on `std::net::TcpListener` (the offline
+//! vendor set has no tokio/hyper; this follows the repo's
 //! hand-rolled-substrate idiom — see `util/`).
 //!
 //! Endpoints (written contract: `docs/API.md`):
@@ -15,21 +15,30 @@
 //!   503 with the last engine startup error (e.g. the manifest-version
 //!   mismatch message) while no engine worker is serving.
 //! * `GET /statz`    — counters, batch-fill ratio, latency percentiles,
-//!   decode telemetry, engine phase profile, quant health.
+//!   decode telemetry, engine phase profile, quant health, connection
+//!   gauges.
 //! * `GET /metricz`  — the same registry as Prometheus text exposition
 //!   (rendered from the `/statz` snapshot — the surfaces cannot drift).
 //! * `GET /debug/traces?n=K` — most recent completed request traces
 //!   (see [`crate::serve::obs`]).
 //!
-//! Threading model: the accept thread spawns one handler thread per
-//! connection (keep-alive connections would head-of-line block a fixed
-//! pool), bounded by `max_connections` — beyond the cap new connections
-//! get an immediate 503 instead of silently queueing. Handler threads
-//! block on the reply channel of each scoring job; a separate engine pool
-//! (one PJRT session per worker) drains the batcher.
+//! Threading model: a single `qtx-http` thread runs a non-blocking event
+//! loop (`poll(2)` via [`crate::serve::poll`]) over the listener and
+//! every open connection; each connection is a pure state machine
+//! ([`crate::serve::conn`]) fed bytes and clock readings. Requests are
+//! dispatched into the batcher over the existing mpsc channels and the
+//! loop resumes polling — replies (and per-token stream events) poke the
+//! loop awake through a [`Waker`] attached to the channels, so neither
+//! scoring waits nor whole decode sessions park a thread. The
+//! `max_connections` cap is enforced by *socket count* at the accept
+//! stage: connection 'cap+1' gets an immediate 503 before any slot or
+//! loop state is consumed. A separate engine pool (one PJRT session per
+//! worker) drains the batcher, exactly as before.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -37,11 +46,16 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::serve::batcher::{BatchPolicy, Batcher, BatcherConfig, Rejected, SlotConfig, SlotPool};
+use crate::serve::conn::{ConnEvent, ConnState, HttpConn, ParsedRequest};
+pub use crate::serve::conn::{MAX_BODY_BYTES, MAX_HEAD_BYTES};
 use crate::serve::engine::{
-    spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, GenEvent,
-    Job, JobKind, JobOutcome,
+    spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, EventTx,
+    GenEvent, Job, JobKind, JobOutcome, ReplyTx,
 };
 use crate::serve::obs::{Obs, TraceConfig, TraceTap};
+use crate::serve::poll::{
+    drain_wakes, raise_nofile_limit, Poller, Waker, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT,
+};
 use crate::serve::protocol::{
     error_json, stream_done_event, stream_error_event, stream_token_event, GenerateRequest,
     GenerateResponse, ScoreRequest, ScoreResponse,
@@ -50,16 +64,14 @@ use crate::serve::stats::{EngineMem, ServeStats};
 use crate::util::json::Json;
 use crate::util::log;
 
-const MAX_HEAD_BYTES: usize = 32 * 1024;
-const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
-
 /// Server-side knobs (the batcher policy rides along).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub host: String,
     /// 0 picks an ephemeral port (tests/benches).
     pub port: u16,
-    /// Concurrent-connection cap; excess connections get an immediate 503.
+    /// Concurrent-connection cap (open sockets, counted at the accept
+    /// stage); excess connections get an immediate 503.
     pub max_connections: usize,
     pub engines: usize,
     /// Fixed micro-batches vs slot-based continuous admission.
@@ -70,11 +82,12 @@ pub struct ServerConfig {
     /// Continuous mode: top-up window for partially-filled launches
     /// (0 = strictly work-conserving). Ignored in fixed mode.
     pub admit_window: Duration,
-    /// Socket read timeout per connection: an idle keep-alive connection
-    /// is closed silently after this long; a connection that stalls
-    /// *mid-request* gets a 408 instead (see `handle_connection`).
+    /// Read deadline per connection: an idle keep-alive connection is
+    /// closed silently after this long; a connection that stalls
+    /// *mid-request* gets a 408 instead (see [`crate::serve::conn`]).
     pub read_timeout: Duration,
-    /// How long a handler waits for its batch result before answering 504.
+    /// How long a dispatched request waits for its batch result before
+    /// answering 504.
     pub request_timeout: Duration,
     /// Request tracing: ring capacity (0 disables) + slow-request log
     /// threshold (`--trace-capacity` / `--trace-slow-ms`).
@@ -119,23 +132,15 @@ pub struct EngineInfo {
     pub gemm_threads: usize,
 }
 
-/// Decrements the live-connection counter when a handler thread exits.
-struct ConnGuard(Arc<AtomicUsize>);
-
-impl Drop for ConnGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-/// A running server: accept thread + per-connection handlers + engine pool.
+/// A running server: one event-loop thread + the engine pool.
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     dispatch: Arc<Dispatch>,
     pub stats: Arc<ServeStats>,
     engines_ready: Arc<AtomicUsize>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    waker: Arc<Waker>,
+    io_handle: Option<std::thread::JoinHandle<()>>,
     engine_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -145,8 +150,14 @@ impl Server {
     pub fn start(cfg: ServerConfig, info: EngineInfo, factory: EngineFactory) -> Result<Server> {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        listener.set_nonblocking(true).context("setting listener non-blocking")?;
         let addr = listener.local_addr()?;
+        // Best-effort: make sure the fd soft limit clears the connection
+        // cap (the 1k-connection smoke relies on this; headroom covers
+        // the listener, waker, engine artifacts, stdio).
+        let _ = raise_nofile_limit(cfg.max_connections as u64 + 64);
         let stats = Arc::new(ServeStats::new());
+        stats.io_threads.store(1, Ordering::Relaxed);
         let engines = cfg.engines.max(1);
         let dispatch = Arc::new(match cfg.policy {
             BatchPolicy::Fixed => Dispatch::Fixed(Batcher::new(cfg.batcher)),
@@ -168,6 +179,8 @@ impl Server {
             engines_ready.clone(),
         );
 
+        let (waker, wake_rx) = Waker::pair().context("creating event-loop waker")?;
+        let waker = Arc::new(waker);
         let ctx = Arc::new(HandlerCtx {
             dispatch: dispatch.clone(),
             stats: stats.clone(),
@@ -177,53 +190,26 @@ impl Server {
             request_timeout: cfg.request_timeout,
             shutdown: shutdown.clone(),
             engines_ready: engines_ready.clone(),
+            waker: waker.clone(),
         });
-        let accept_handle = {
-            let shutdown = shutdown.clone();
+        let io_handle = {
+            let ctx = ctx.clone();
             let max_conns = cfg.max_connections.max(1);
-            let active = Arc::new(AtomicUsize::new(0));
             std::thread::Builder::new()
-                .name("qtx-accept".into())
+                .name("qtx-http".into())
                 .spawn(move || {
-                    for stream in listener.incoming() {
-                        if shutdown.load(Ordering::SeqCst) {
-                            break;
-                        }
-                        let mut s = match stream {
-                            Ok(s) => s,
-                            Err(e) => {
-                                log::debug(&format!("accept error: {e}"));
-                                continue;
-                            }
-                        };
-                        if active.load(Ordering::SeqCst) >= max_conns {
-                            // Shed load fast rather than queueing connections
-                            // a keep-alive handler will never reach.
-                            let _ = write_json_response(
-                                &mut s,
-                                503,
-                                "Service Unavailable",
-                                &error_json("connection limit reached"),
-                                false,
-                            );
-                            continue;
-                        }
-                        active.fetch_add(1, Ordering::SeqCst);
-                        let guard = ConnGuard(active.clone());
-                        let ctx = ctx.clone();
-                        // Detached: connection threads outlive stop() by at
-                        // most the socket read timeout.
-                        let _ = std::thread::Builder::new()
-                            .name("qtx-conn".into())
-                            .spawn(move || {
-                                let _guard = guard;
-                                if let Err(e) = handle_connection(s, &ctx) {
-                                    log::debug(&format!("connection error: {e:#}"));
-                                }
-                            });
+                    EventLoop {
+                        ctx,
+                        listener,
+                        wake_rx,
+                        max_conns,
+                        conns: Vec::new(),
+                        poller: Poller::new(),
+                        scratch: vec![0u8; READ_CHUNK],
                     }
+                    .run()
                 })
-                .expect("spawn accept thread")
+                .expect("spawn http event-loop thread")
         };
 
         log::info(&format!(
@@ -237,7 +223,8 @@ impl Server {
             dispatch,
             stats,
             engines_ready,
-            accept_handle: Some(accept_handle),
+            waker,
+            io_handle: Some(io_handle),
             engine_handles,
         })
     }
@@ -268,16 +255,14 @@ impl Server {
         }
     }
 
-    /// Graceful stop: close the batcher, unblock accept, join the accept
-    /// thread and engine pool. Per-connection handler threads are detached;
-    /// open keep-alive connections see the shutdown flag after their
-    /// current request (or their socket read timeout) and close.
+    /// Graceful stop: close the batcher, wake the event loop (which sees
+    /// the shutdown flag, drops every open connection, and exits), join
+    /// it and the engine pool.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.dispatch.close();
-        // Nudge the blocking accept() with a throwaway connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept_handle.take() {
+        self.waker.wake();
+        if let Some(h) = self.io_handle.take() {
             let _ = h.join();
         }
         for h in self.engine_handles.drain(..) {
@@ -305,6 +290,8 @@ struct HandlerCtx {
     /// Engine workers that reached their serving loop (`/healthz` turns
     /// 503 while this is zero).
     engines_ready: Arc<AtomicUsize>,
+    /// Pokes the event loop awake; attached to every reply/event channel.
+    waker: Arc<Waker>,
 }
 
 // ---------------------------------------------------------------------------
@@ -388,7 +375,10 @@ fn read_err(e: std::io::Error, consumed: bool, what: &str) -> ReadError {
 
 /// Read one HTTP message (head + Content-Length body). `Ok(None)` on clean
 /// EOF before any byte (peer closed a keep-alive connection); errors are
-/// classified by [`ReadError`].
+/// classified by [`ReadError`]. This is the *blocking* parser — the
+/// loadgen/test [`Client`] reads responses with it; the server side now
+/// parses requests through the byte-identical non-blocking
+/// [`crate::serve::conn::HttpConn`].
 pub fn read_message(
     r: &mut BufReader<TcpStream>,
 ) -> std::result::Result<Option<HttpMessage>, ReadError> {
@@ -537,170 +527,6 @@ pub fn write_json_request(
     w.flush()
 }
 
-// ---------------------------------------------------------------------------
-// Request handling
-// ---------------------------------------------------------------------------
-
-fn handle_connection(stream: TcpStream, ctx: &HandlerCtx) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // A read timeout bounds half-open connections; generous (configurable)
-    // so a keep-alive client may idle briefly between requests.
-    stream.set_read_timeout(Some(ctx.read_timeout)).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    loop {
-        if ctx.shutdown.load(Ordering::SeqCst) {
-            return Ok(()); // server stopping: drop the keep-alive connection
-        }
-        // Read timing feeds the trace's `read` span. Caveat (documented in
-        // OBSERVABILITY.md): on a keep-alive connection this interval also
-        // contains the client's think time before it sent the request.
-        let t_read = Instant::now();
-        let msg = match read_message(&mut reader) {
-            Ok(Some(m)) => m,
-            Ok(None) => return Ok(()), // clean close
-            // An idle keep-alive connection hitting the socket read timeout
-            // (zero bytes of a next message) is a normal close, not a
-            // protocol error — writing anything would desynchronize a
-            // client that sends its next request around the same moment.
-            Err(ReadError::IdleTimeout) => return Ok(()),
-            // A timeout *mid-message* is a stalled client: tell it what
-            // happened (408) and close, rather than silently dropping a
-            // half-read request.
-            Err(ReadError::Stalled(e)) => {
-                let _ = write_json_response(
-                    &mut writer,
-                    408,
-                    "Request Timeout",
-                    &error_json(&format!("timed out reading request: {e}")),
-                    false,
-                );
-                return Ok(());
-            }
-            Err(ReadError::Bad(e)) => {
-                let _ = write_json_response(
-                    &mut writer,
-                    400,
-                    "Bad Request",
-                    &error_json(&format!("{e:#}")),
-                    false,
-                );
-                return Ok(());
-            }
-        };
-        let t_read_end = Instant::now();
-        let mut parts = msg.start_line.split_whitespace();
-        let method = parts.next().unwrap_or("");
-        let path_full = parts.next().unwrap_or("");
-        let path = path_full.split('?').next().unwrap_or("");
-        // Keep-alive default is version-dependent (RFC 9112 §9.3): 1.1
-        // persists unless `Connection: close`; 1.0 closes unless the
-        // client explicitly asked `Connection: keep-alive`.
-        let http10 = parts.next().unwrap_or("HTTP/1.1").eq_ignore_ascii_case("HTTP/1.0");
-        let keep_alive = match msg.header("connection") {
-            Some(v) if http10 => v.eq_ignore_ascii_case("keep-alive"),
-            Some(v) => !v.eq_ignore_ascii_case("close"),
-            None => !http10,
-        };
-
-        match (method, path) {
-            ("POST", "/v1/score") => {
-                handle_score(&mut writer, &msg, ctx, keep_alive, t_read, t_read_end)?
-            }
-            ("POST", "/v1/generate") => {
-                handle_generate(&mut writer, &msg, ctx, keep_alive, t_read, t_read_end)?
-            }
-            ("GET", "/healthz") => {
-                let ready = ctx.engines_ready.load(Ordering::SeqCst);
-                let mut doc = vec![
-                    (
-                        "status",
-                        Json::Str(if ready > 0 { "ok" } else { "unavailable" }.into()),
-                    ),
-                    ("engine", Json::Str(ctx.info.describe.clone())),
-                    ("engines_ready", Json::Num(ready as f64)),
-                    ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
-                    ("seq_len", Json::Num(ctx.info.seq_len as f64)),
-                    ("max_batch", Json::Num(ctx.info.max_batch as f64)),
-                    ("vocab", Json::Num(ctx.info.vocab as f64)),
-                    ("causal", Json::Bool(ctx.info.causal)),
-                    ("decode", Json::Bool(ctx.info.decode)),
-                    ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
-                ];
-                if ready > 0 {
-                    write_json_response(&mut writer, 200, "OK", &Json::obj(doc), keep_alive)?;
-                } else {
-                    // Failure payload: name the reason (e.g. the manifest
-                    // found-vs-required version message) so a probe reads
-                    // the fix without grepping server logs.
-                    let err = ctx
-                        .stats
-                        .startup_error()
-                        .unwrap_or_else(|| "engines still warming up".into());
-                    doc.push(("error", Json::Str(err)));
-                    doc.push((
-                        "startup_failures",
-                        Json::Num(ctx.stats.startup_failures.load(Ordering::Relaxed) as f64),
-                    ));
-                    write_json_response(
-                        &mut writer,
-                        503,
-                        "Service Unavailable",
-                        &Json::obj(doc),
-                        keep_alive,
-                    )?;
-                }
-            }
-            ("GET", "/statz") => {
-                write_json_response(&mut writer, 200, "OK", &statz_snapshot(ctx), keep_alive)?;
-            }
-            ("GET", "/metricz") => {
-                // Rendered from the same snapshot `/statz` serves — one
-                // registry, two surfaces (see `ServeStats::prometheus`).
-                let text = ctx.stats.prometheus(&statz_snapshot(ctx));
-                write_text_response(
-                    &mut writer,
-                    200,
-                    "OK",
-                    "text/plain; version=0.0.4",
-                    &text,
-                    keep_alive,
-                )?;
-            }
-            ("GET", "/debug/traces") => {
-                let n = path_full
-                    .split_once('?')
-                    .and_then(|(_, q)| q.split('&').find_map(|kv| kv.strip_prefix("n=")))
-                    .and_then(|v| v.parse::<usize>().ok())
-                    .unwrap_or(32);
-                write_json_response(&mut writer, 200, "OK", &ctx.obs.to_json(n), keep_alive)?;
-            }
-            (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz")
-            | (_, "/metricz") | (_, "/debug/traces") => {
-                write_json_response(
-                    &mut writer,
-                    405,
-                    "Method Not Allowed",
-                    &error_json("method not allowed"),
-                    keep_alive,
-                )?;
-            }
-            _ => {
-                write_json_response(
-                    &mut writer,
-                    404,
-                    "Not Found",
-                    &error_json(&format!("no route {path:?}")),
-                    keep_alive,
-                )?;
-            }
-        }
-        if !keep_alive {
-            return Ok(());
-        }
-    }
-}
-
 /// The `/statz` document. `/metricz` renders this same snapshot as
 /// Prometheus text, so the two surfaces can never drift.
 fn statz_snapshot(ctx: &HandlerCtx) -> Json {
@@ -713,16 +539,411 @@ fn statz_snapshot(ctx: &HandlerCtx) -> Json {
     )
 }
 
-fn handle_score(
-    w: &mut TcpStream,
-    msg: &HttpMessage,
-    ctx: &HandlerCtx,
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+const TOKEN_WAKE: usize = 0;
+const TOKEN_LISTEN: usize = 1;
+/// Connection slab index `i` polls under token `TOKEN_CONN0 + i`.
+const TOKEN_CONN0: usize = 2;
+/// Per-pass socket read buffer.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// A buffered (non-streaming) request in flight: everything needed to
+/// produce the response when the reply channel fires or the deadline
+/// passes. `prompt_len`/`seed` are meaningful for generate only.
+struct PendingReply {
+    rx: mpsc::Receiver<std::result::Result<JobOutcome, String>>,
+    id: Option<String>,
+    prompt_len: usize,
+    seed: Option<u64>,
     keep_alive: bool,
-    t_read: Instant,
-    t_read_end: Instant,
-) -> Result<()> {
+    t0: Instant,
+    deadline: Instant,
+    tap: Option<Arc<TraceTap>>,
+}
+
+/// A streaming generation in flight: chunks are queued from [`GenEvent`]
+/// readiness; the deadline restarts at every event (matching the
+/// threaded server's per-event `recv_timeout`).
+struct PendingStream {
+    erx: mpsc::Receiver<GenEvent>,
+    id: Option<String>,
+    prompt_len: usize,
+    seed: Option<u64>,
+    keep_alive: bool,
+    t0: Instant,
+    deadline: Instant,
+    started: bool,
+    tap: Option<Arc<TraceTap>>,
+}
+
+enum Pending {
+    Idle,
+    Score(PendingReply),
+    Generate(PendingReply),
+    Stream(PendingStream),
+}
+
+/// One open connection: its socket, parser state machine, queued-but-
+/// unwritten response bytes, and any in-flight dispatched request.
+/// Dropping the entry closes the socket — and with it any `erx`, whose
+/// disconnect tells the engine worker to retire the session.
+struct ConnEntry {
+    stream: TcpStream,
+    machine: HttpConn,
+    out: Vec<u8>,
+    out_pos: usize,
+    pending: Pending,
+    close_after_flush: bool,
+}
+
+fn wants_read(c: &ConnEntry) -> bool {
+    matches!(
+        c.machine.state(),
+        ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody
+    )
+}
+
+/// The instant this connection next needs clock service: its read
+/// deadline while parsing, its request deadline while waiting on the
+/// engine.
+fn conn_deadline(c: &ConnEntry) -> Option<Instant> {
+    match &c.pending {
+        Pending::Idle => c.machine.next_deadline(),
+        Pending::Score(p) | Pending::Generate(p) => Some(p.deadline),
+        Pending::Stream(p) => Some(p.deadline),
+    }
+}
+
+struct EventLoop {
+    ctx: Arc<HandlerCtx>,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    max_conns: usize,
+    /// Connection slab; `None` slots are reused by the next accept.
+    conns: Vec<Option<ConnEntry>>,
+    poller: Poller,
+    scratch: Vec<u8>,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        loop {
+            if self.ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            self.publish_gauges();
+            self.poller.clear();
+            self.poller.register(self.wake_rx.as_raw_fd(), TOKEN_WAKE, POLLIN);
+            self.poller.register(self.listener.as_raw_fd(), TOKEN_LISTEN, POLLIN);
+            let mut next_deadline: Option<Instant> = None;
+            for (i, slot) in self.conns.iter().enumerate() {
+                let Some(c) = slot else { continue };
+                let mut interest = 0i16;
+                if c.out_pos < c.out.len() {
+                    interest |= POLLOUT;
+                }
+                if wants_read(c) {
+                    interest |= POLLIN;
+                }
+                if interest != 0 {
+                    self.poller.register(c.stream.as_raw_fd(), TOKEN_CONN0 + i, interest);
+                }
+                if let Some(d) = conn_deadline(c) {
+                    next_deadline = Some(match next_deadline {
+                        Some(t) => t.min(d),
+                        None => d,
+                    });
+                }
+            }
+            let wait = next_deadline.map(|t| t.saturating_duration_since(Instant::now()));
+            let ready = match self.poller.poll(wait) {
+                Ok(r) => r.to_vec(),
+                Err(e) => {
+                    log::debug(&format!("poll error: {e}"));
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+            };
+            if self.ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+            for (token, revents) in ready {
+                match token {
+                    TOKEN_WAKE => drain_wakes(&self.wake_rx),
+                    TOKEN_LISTEN => self.accept_ready(now),
+                    t => {
+                        let i = t - TOKEN_CONN0;
+                        let alive = match self.conns.get_mut(i).and_then(|s| s.as_mut()) {
+                            Some(c) => conn_ready(c, &self.ctx, &mut self.scratch, revents),
+                            None => true,
+                        };
+                        if !alive {
+                            self.conns[i] = None;
+                        }
+                    }
+                }
+            }
+            // Service every connection: drain reply channels, enforce
+            // deadlines, flush queued bytes.
+            let now = Instant::now();
+            for slot in self.conns.iter_mut() {
+                if let Some(c) = slot.as_mut() {
+                    if !step_conn(c, &self.ctx, now) {
+                        *slot = None;
+                    }
+                }
+            }
+        }
+        // Shutdown: drop every connection (sockets close, in-flight
+        // event receivers disconnect) and zero the gauges.
+        self.conns.clear();
+        self.publish_gauges();
+    }
+
+    /// Drain the accept backlog. The connection cap is enforced here, by
+    /// socket count: connection `cap+1` gets its 503 written on the
+    /// still-blocking fresh socket and is dropped — deterministic, and
+    /// without consuming a slab slot.
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((mut s, _)) => {
+                    let open = self.conns.iter().filter(|c| c.is_some()).count();
+                    if open >= self.max_conns {
+                        let _ = write_json_response(
+                            &mut s,
+                            503,
+                            "Service Unavailable",
+                            &error_json("connection limit reached"),
+                            false,
+                        );
+                        continue;
+                    }
+                    s.set_nodelay(true).ok();
+                    if s.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let entry = ConnEntry {
+                        stream: s,
+                        machine: HttpConn::new(now, self.ctx.read_timeout),
+                        out: Vec::new(),
+                        out_pos: 0,
+                        pending: Pending::Idle,
+                        close_after_flush: false,
+                    };
+                    match self.conns.iter_mut().position(|c| c.is_none()) {
+                        Some(i) => self.conns[i] = Some(entry),
+                        None => self.conns.push(Some(entry)),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::debug(&format!("accept error: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Refresh the `connections.*` gauges from the slab (once per pass —
+    /// `/statz`/`/metricz` snapshots read whatever the latest pass saw).
+    fn publish_gauges(&self) {
+        let (mut open, mut reading, mut waiting, mut streaming) = (0u64, 0u64, 0u64, 0u64);
+        for c in self.conns.iter().flatten() {
+            open += 1;
+            match c.machine.state() {
+                ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody => reading += 1,
+                ConnState::WaitingOnSlot | ConnState::Replying => waiting += 1,
+                ConnState::Streaming => streaming += 1,
+                ConnState::Closed => {}
+            }
+        }
+        let s = &self.ctx.stats;
+        s.conn_open.store(open, Ordering::Relaxed);
+        s.conn_reading.store(reading, Ordering::Relaxed);
+        s.conn_waiting.store(waiting, Ordering::Relaxed);
+        s.conn_streaming.store(streaming, Ordering::Relaxed);
+    }
+}
+
+/// Socket readiness for one connection. Returns whether it survives.
+fn conn_ready(c: &mut ConnEntry, ctx: &HandlerCtx, scratch: &mut [u8], revents: i16) -> bool {
+    if revents & POLLNVAL != 0 {
+        return false;
+    }
+    if revents & (POLLIN | POLLHUP | POLLERR) != 0 && wants_read(c) {
+        return conn_readable(c, ctx, scratch);
+    }
+    // POLLOUT (or an error on a paused connection) needs no action here:
+    // the step phase flushes — and observes the write error — this pass.
+    true
+}
+
+/// Read until `WouldBlock`, EOF, or the machine pauses (request in
+/// flight: bytes stay in the kernel buffer until the response is out,
+/// exactly like the threaded server between `read_message` calls).
+fn conn_readable(c: &mut ConnEntry, ctx: &HandlerCtx, scratch: &mut [u8]) -> bool {
+    loop {
+        if !wants_read(c) {
+            return true;
+        }
+        match c.stream.read(scratch) {
+            Ok(0) => {
+                let now = Instant::now();
+                let ev = c.machine.on_eof(now);
+                return process_event(c, ctx, ev, now);
+            }
+            Ok(n) => {
+                let now = Instant::now();
+                let ev = c.machine.on_bytes(&scratch[..n], now);
+                if !process_event(c, ctx, ev, now) {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::debug(&format!("connection read error: {e}"));
+                return false;
+            }
+        }
+    }
+}
+
+/// Act on a machine event, chasing pipelined follow-ups (a completed
+/// response may surface the next buffered request immediately). Returns
+/// whether the connection survives.
+fn process_event(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    mut ev: Option<ConnEvent>,
+    now: Instant,
+) -> bool {
+    while let Some(e) = ev.take() {
+        match e {
+            // Close without writing; any already-queued response bytes
+            // still drain first (the "silent" part is writing nothing
+            // *further* — e.g. half-close after a pipelined request).
+            ConnEvent::CloseSilent => {
+                c.machine.close();
+                if c.out_pos < c.out.len() {
+                    c.close_after_flush = true;
+                    return true;
+                }
+                return false;
+            }
+            ConnEvent::Error { status, reason, message } => {
+                queue_json(c, status, reason, &error_json(&message), false);
+                c.machine.close();
+                c.close_after_flush = true;
+                return true;
+            }
+            ConnEvent::Request(req) => ev = dispatch_request(c, ctx, req, now),
+        }
+    }
+    true
+}
+
+/// Route one parsed request. Synchronous endpoints queue their response
+/// and complete immediately (possibly surfacing a pipelined successor);
+/// `/v1/score` and `/v1/generate` dispatch into the batcher and leave
+/// the connection paused with a [`Pending`] reply.
+fn dispatch_request(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    req: ParsedRequest,
+    now: Instant,
+) -> Option<ConnEvent> {
+    if req.method == "POST" && req.path() == "/v1/score" {
+        return dispatch_score(c, ctx, req, now);
+    }
+    if req.method == "POST" && req.path() == "/v1/generate" {
+        return dispatch_generate(c, ctx, req, now);
+    }
+    let keep_alive = req.keep_alive;
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => {
+            let ready = ctx.engines_ready.load(Ordering::SeqCst);
+            let mut doc = vec![
+                (
+                    "status",
+                    Json::Str(if ready > 0 { "ok" } else { "unavailable" }.into()),
+                ),
+                ("engine", Json::Str(ctx.info.describe.clone())),
+                ("engines_ready", Json::Num(ready as f64)),
+                ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
+                ("seq_len", Json::Num(ctx.info.seq_len as f64)),
+                ("max_batch", Json::Num(ctx.info.max_batch as f64)),
+                ("vocab", Json::Num(ctx.info.vocab as f64)),
+                ("causal", Json::Bool(ctx.info.causal)),
+                ("decode", Json::Bool(ctx.info.decode)),
+                ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
+            ];
+            if ready > 0 {
+                queue_json(c, 200, "OK", &Json::obj(doc), keep_alive);
+            } else {
+                // Failure payload: name the reason (e.g. the manifest
+                // found-vs-required version message) so a probe reads
+                // the fix without grepping server logs.
+                let err = ctx
+                    .stats
+                    .startup_error()
+                    .unwrap_or_else(|| "engines still warming up".into());
+                doc.push(("error", Json::Str(err)));
+                doc.push((
+                    "startup_failures",
+                    Json::Num(ctx.stats.startup_failures.load(Ordering::Relaxed) as f64),
+                ));
+                queue_json(c, 503, "Service Unavailable", &Json::obj(doc), keep_alive);
+            }
+        }
+        ("GET", "/statz") => {
+            queue_json(c, 200, "OK", &statz_snapshot(ctx), keep_alive);
+        }
+        ("GET", "/metricz") => {
+            // Rendered from the same snapshot `/statz` serves — one
+            // registry, two surfaces (see `ServeStats::prometheus`).
+            let text = ctx.stats.prometheus(&statz_snapshot(ctx));
+            queue_text(c, 200, "OK", "text/plain; version=0.0.4", &text, keep_alive);
+        }
+        ("GET", "/debug/traces") => {
+            let n = req
+                .path_full
+                .split_once('?')
+                .and_then(|(_, q)| q.split('&').find_map(|kv| kv.strip_prefix("n=")))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(32);
+            queue_json(c, 200, "OK", &ctx.obs.to_json(n), keep_alive);
+        }
+        (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz")
+        | (_, "/metricz") | (_, "/debug/traces") => {
+            queue_json(c, 405, "Method Not Allowed", &error_json("method not allowed"), keep_alive);
+        }
+        (_, path) => {
+            queue_json(c, 404, "Not Found", &error_json(&format!("no route {path:?}")), keep_alive);
+        }
+    }
+    complete_response(c, keep_alive, now)
+}
+
+/// `POST /v1/score`: validate, dispatch into the batcher, leave the
+/// connection waiting on its reply channel.
+fn dispatch_score(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    req: ParsedRequest,
+    now: Instant,
+) -> Option<ConnEvent> {
+    let keep_alive = req.keep_alive;
+    let t_read = req.read_start;
+    let t_read_end = now;
     let t0 = Instant::now();
-    let req = match msg
+    let sreq = match req
         .body_str()
         .and_then(ScoreRequest::parse)
         .and_then(|r| validate_request(&r, ctx.info.seq_len, ctx.info.vocab).map(|_| r))
@@ -735,8 +956,8 @@ fn handle_score(
                 t.span_since("parse", t_read_end);
                 ctx.obs.finish(&t, "rejected");
             }
-            write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
-            return Ok(());
+            queue_json(c, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive);
+            return complete_response(c, keep_alive, now);
         }
     };
     let tap = ctx.obs.begin_at("score", t_read);
@@ -744,131 +965,43 @@ fn handle_score(
         t.span("read", t_read, t_read_end);
         t.span("parse", t_read_end, Instant::now());
     }
-    let id = req.id.clone();
+    let id = sreq.id.clone();
     let (tx, rx) = mpsc::channel();
-    if !submit_job(w, ctx, Job::score(req, tx).traced(tap.clone()), keep_alive)? {
+    let resp = ReplyTx::from(tx).with_waker(ctx.waker.clone());
+    let job = Job::score(sreq, resp).traced(tap.clone());
+    if let Err(keep) = submit_queued(c, ctx, job, keep_alive) {
         if let Some(t) = &tap {
             ctx.obs.finish(t, "rejected");
         }
-        return Ok(());
+        return complete_response(c, keep, now);
     }
-    match rx.recv_timeout(ctx.request_timeout) {
-        Ok(Ok(JobOutcome::Score(out))) => {
-            let resp = ScoreResponse {
-                id,
-                row: out.row,
-                queue_ms: out.queue_ms,
-                batch_size: out.batch_size,
-            };
-            ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
-            ctx.stats.latency.record(t0.elapsed());
-            let t_reply = Instant::now();
-            write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
-            if let Some(t) = &tap {
-                t.span_since("reply", t_reply);
-                ctx.obs.finish(t, "ok");
-            }
-        }
-        other => {
-            let status = if other.is_err() { "timeout" } else { "error" };
-            reply_non_score(w, ctx, other, keep_alive, "scoring")?;
-            if let Some(t) = &tap {
-                ctx.obs.finish(t, status);
-            }
-        }
-    }
-    Ok(())
+    c.pending = Pending::Score(PendingReply {
+        rx,
+        id,
+        prompt_len: 0,
+        seed: None,
+        keep_alive,
+        t0,
+        deadline: Instant::now() + ctx.request_timeout,
+        tap,
+    });
+    None
 }
 
-/// Submit a job, answering 503 on rejection. Returns whether it queued.
-fn submit_job(w: &mut TcpStream, ctx: &HandlerCtx, job: Job, keep_alive: bool) -> Result<bool> {
-    match ctx.dispatch.submit(job) {
-        Ok(()) => {
-            ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
-            Ok(true)
-        }
-        Err(Rejected::Full(_)) => {
-            ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
-            write_json_response(
-                w,
-                503,
-                "Service Unavailable",
-                &error_json("queue full, retry later"),
-                keep_alive,
-            )?;
-            Ok(false)
-        }
-        Err(Rejected::Closed(_)) => {
-            write_json_response(
-                w,
-                503,
-                "Service Unavailable",
-                &error_json("server shutting down"),
-                false,
-            )?;
-            Ok(false)
-        }
-    }
-}
-
-/// Shared non-200 tail of the reply wait: engine errors → 500, reply
-/// timeout → 504, and a kind-mismatched outcome → 500 (a bug, not a
-/// client problem).
-fn reply_non_score(
-    w: &mut TcpStream,
+/// `POST /v1/generate`: validate, resolve the sampling seed, dispatch a
+/// generation session, and leave the connection waiting — on the reply
+/// channel (buffered) or the per-token event channel (`"stream": true`).
+fn dispatch_generate(
+    c: &mut ConnEntry,
     ctx: &HandlerCtx,
-    outcome: std::result::Result<std::result::Result<JobOutcome, String>, mpsc::RecvTimeoutError>,
-    keep_alive: bool,
-    what: &str,
-) -> Result<()> {
-    match outcome {
-        Ok(Ok(_)) => {
-            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
-            write_json_response(
-                w,
-                500,
-                "Internal Server Error",
-                &error_json("engine returned a mismatched outcome kind"),
-                keep_alive,
-            )?;
-        }
-        Ok(Err(engine_msg)) => {
-            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
-            write_json_response(
-                w,
-                500,
-                "Internal Server Error",
-                &error_json(&engine_msg),
-                keep_alive,
-            )?;
-        }
-        Err(_) => {
-            ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
-            write_json_response(
-                w,
-                504,
-                "Gateway Timeout",
-                &error_json(&format!("{what} timed out")),
-                keep_alive,
-            )?;
-        }
-    }
-    Ok(())
-}
-
-/// `POST /v1/generate`: queue a generation session into the continuous
-/// batcher (slot = session) and answer with the continuation — buffered
-/// JSON by default, a chunked event stream under `"stream": true`.
-fn handle_generate(
-    w: &mut TcpStream,
-    msg: &HttpMessage,
-    ctx: &HandlerCtx,
-    keep_alive: bool,
-    t_read: Instant,
-    t_read_end: Instant,
-) -> Result<()> {
+    req: ParsedRequest,
+    now: Instant,
+) -> Option<ConnEvent> {
+    let keep_alive = req.keep_alive;
+    let t_read = req.read_start;
+    let t_read_end = now;
     let t0 = Instant::now();
-    let mut req = match msg
+    let mut greq = match req
         .body_str()
         .and_then(GenerateRequest::parse)
         .and_then(|r| validate_generate(&r, ctx.info.seq_len, ctx.info.vocab).map(|_| r))
@@ -881,24 +1014,24 @@ fn handle_generate(
                 t.span_since("parse", t_read_end);
                 ctx.obs.finish(&t, "rejected");
             }
-            write_json_response(w, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive)?;
-            return Ok(());
+            queue_json(c, 400, "Bad Request", &error_json(&format!("{e:#}")), keep_alive);
+            return complete_response(c, keep_alive, now);
         }
     };
     if !ctx.info.decode {
         let why = "this engine does not support generation (use --engine native-int8 or mock)";
-        write_json_response(w, 501, "Not Implemented", &error_json(why), keep_alive)?;
-        return Ok(());
+        queue_json(c, 501, "Not Implemented", &error_json(why), keep_alive);
+        return complete_response(c, keep_alive, now);
     }
     if ctx.dispatch.policy() != BatchPolicy::Continuous {
-        write_json_response(
-            w,
+        queue_json(
+            c,
             501,
             "Not Implemented",
             &error_json("generation requires --batch-policy continuous (slot = session)"),
             keep_alive,
-        )?;
-        return Ok(());
+        );
+        return complete_response(c, keep_alive, now);
     }
     let tap = ctx.obs.begin_at("generate", t_read);
     if let Some(t) = &tap {
@@ -913,156 +1046,414 @@ fn handle_generate(
     // greedy requests, whose wire shape stays byte-identical to earlier
     // releases.
     static NEXT_SEED: AtomicU64 = AtomicU64::new(1);
-    let explicit_seed = req.seed.is_some();
-    if req.seed.is_none() && !req.is_greedy() {
-        req.seed = Some(NEXT_SEED.fetch_add(1, Ordering::Relaxed));
+    let explicit_seed = greq.seed.is_some();
+    if greq.seed.is_none() && !greq.is_greedy() {
+        greq.seed = Some(NEXT_SEED.fetch_add(1, Ordering::Relaxed));
     }
-    let echo_seed = if explicit_seed || !req.is_greedy() { req.seed } else { None };
-    let id = req.id.clone();
-    let prompt_len = req.tokens.len();
-    let stream = req.stream;
+    let echo_seed = if explicit_seed || !greq.is_greedy() { greq.seed } else { None };
+    let id = greq.id.clone();
+    let prompt_len = greq.tokens.len();
+    let stream = greq.stream;
     let (tx, rx) = mpsc::channel();
     let (etx, erx) = if stream {
         let (etx, erx) = mpsc::channel();
-        (Some(etx), Some(erx))
+        (Some(EventTx::from(etx).with_waker(ctx.waker.clone())), Some(erx))
     } else {
         (None, None)
     };
-    let job = Job { kind: JobKind::Generate(req), resp: tx, trace: tap.clone(), events: etx };
-    if !submit_job(w, ctx, job, keep_alive)? {
+    let job = Job {
+        kind: JobKind::Generate(greq),
+        resp: ReplyTx::from(tx).with_waker(ctx.waker.clone()),
+        trace: tap.clone(),
+        events: etx,
+    };
+    if let Err(keep) = submit_queued(c, ctx, job, keep_alive) {
         if let Some(t) = &tap {
             ctx.obs.finish(t, "rejected");
         }
-        return Ok(());
+        return complete_response(c, keep, now);
     }
-    if let Some(erx) = erx {
-        return stream_generate(w, ctx, id, prompt_len, echo_seed, erx, keep_alive, t0, tap);
+    let deadline = Instant::now() + ctx.request_timeout;
+    c.pending = match erx {
+        Some(erx) => Pending::Stream(PendingStream {
+            erx,
+            id,
+            prompt_len,
+            seed: echo_seed,
+            keep_alive,
+            t0,
+            deadline,
+            started: false,
+            tap,
+        }),
+        None => Pending::Generate(PendingReply {
+            rx,
+            id,
+            prompt_len,
+            seed: echo_seed,
+            keep_alive,
+            t0,
+            deadline,
+            tap,
+        }),
+    };
+    None
+}
+
+/// Submit a job; on rejection the 503 is queued here and `Err` carries
+/// the connection's keep-alive disposition after it (forced close when
+/// the server is shutting down, like the threaded server).
+fn submit_queued(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    job: Job,
+    keep_alive: bool,
+) -> std::result::Result<(), bool> {
+    match ctx.dispatch.submit(job) {
+        Ok(()) => {
+            ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        Err(Rejected::Full(_)) => {
+            ctx.stats.rejected_full.fetch_add(1, Ordering::Relaxed);
+            queue_json(
+                c,
+                503,
+                "Service Unavailable",
+                &error_json("queue full, retry later"),
+                keep_alive,
+            );
+            Err(keep_alive)
+        }
+        Err(Rejected::Closed(_)) => {
+            queue_json(
+                c,
+                503,
+                "Service Unavailable",
+                &error_json("server shutting down"),
+                false,
+            );
+            Err(false)
+        }
     }
-    match rx.recv_timeout(ctx.request_timeout) {
-        Ok(Ok(JobOutcome::Generate(out))) => {
-            let resp = GenerateResponse {
-                id,
-                tokens: out.tokens,
-                prompt_len,
+}
+
+/// Per-pass connection service: drain the pending reply (if any), tick
+/// the read deadline, flush queued bytes. Returns whether it survives.
+fn step_conn(c: &mut ConnEntry, ctx: &HandlerCtx, now: Instant) -> bool {
+    if !pump_pending(c, ctx, now) {
+        return false;
+    }
+    if matches!(c.pending, Pending::Idle) {
+        let ev = c.machine.on_tick(now);
+        if ev.is_some() && !process_event(c, ctx, ev, now) {
+            return false;
+        }
+    }
+    flush_out(c)
+}
+
+/// Poll the in-flight request's channel without blocking; produce the
+/// response on completion, engine error, or deadline expiry (504 — a
+/// vanished worker counts as one too, matching `recv_timeout`).
+fn pump_pending(c: &mut ConnEntry, ctx: &HandlerCtx, now: Instant) -> bool {
+    let pending = std::mem::replace(&mut c.pending, Pending::Idle);
+    match pending {
+        Pending::Idle => true,
+        Pending::Score(p) => match p.rx.try_recv() {
+            Ok(outcome) => {
+                let ev = finish_score(c, ctx, p, Some(outcome), now);
+                process_event(c, ctx, ev, now)
+            }
+            Err(mpsc::TryRecvError::Empty) if now < p.deadline => {
+                c.pending = Pending::Score(p);
+                true
+            }
+            Err(_) => {
+                let ev = finish_score(c, ctx, p, None, now);
+                process_event(c, ctx, ev, now)
+            }
+        },
+        Pending::Generate(p) => match p.rx.try_recv() {
+            Ok(outcome) => {
+                let ev = finish_generate(c, ctx, p, Some(outcome), now);
+                process_event(c, ctx, ev, now)
+            }
+            Err(mpsc::TryRecvError::Empty) if now < p.deadline => {
+                c.pending = Pending::Generate(p);
+                true
+            }
+            Err(_) => {
+                let ev = finish_generate(c, ctx, p, None, now);
+                process_event(c, ctx, ev, now)
+            }
+        },
+        Pending::Stream(p) => pump_stream(c, ctx, p, now),
+    }
+}
+
+/// Build the `/v1/score` response. `outcome` is `None` on deadline
+/// expiry or a dead worker (the 504 path).
+fn finish_score(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    p: PendingReply,
+    outcome: Option<std::result::Result<JobOutcome, String>>,
+    now: Instant,
+) -> Option<ConnEvent> {
+    c.machine.replying();
+    match outcome {
+        Some(Ok(JobOutcome::Score(out))) => {
+            let resp = ScoreResponse {
+                id: p.id,
+                row: out.row,
                 queue_ms: out.queue_ms,
-                prefill_ms: out.prefill_ms,
-                decode_ms: out.decode_ms,
-                seed: echo_seed,
+                batch_size: out.batch_size,
             };
             ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
-            ctx.stats.latency.record(t0.elapsed());
+            ctx.stats.latency.record(p.t0.elapsed());
             let t_reply = Instant::now();
-            write_json_response(w, 200, "OK", &resp.to_json(), keep_alive)?;
-            if let Some(t) = &tap {
+            queue_json(c, 200, "OK", &resp.to_json(), p.keep_alive);
+            if let Some(t) = &p.tap {
                 t.span_since("reply", t_reply);
                 ctx.obs.finish(t, "ok");
             }
         }
         other => {
-            let status = if other.is_err() { "timeout" } else { "error" };
-            reply_non_score(w, ctx, other, keep_alive, "generation")?;
-            if let Some(t) = &tap {
+            let status = if other.is_none() { "timeout" } else { "error" };
+            queue_non_200(c, ctx, other, p.keep_alive, "scoring");
+            if let Some(t) = &p.tap {
                 ctx.obs.finish(t, status);
             }
         }
     }
-    Ok(())
+    complete_response(c, p.keep_alive, now)
 }
 
-/// The streaming tail of `/v1/generate`: forward worker [`GenEvent`]s to
-/// the socket as chunks. Headers are deferred until the first event so a
-/// prefill failure (or timeout) before any token still answers with a
-/// plain JSON status; after the stream opens, failures become a terminal
-/// `error` event. A socket write failure propagates `Err` — the
-/// connection thread exits, the event receiver drops, and the worker's
-/// next send fails, which retires the session and frees its slot.
-#[allow(clippy::too_many_arguments)]
-fn stream_generate(
-    w: &mut TcpStream,
+/// Build the buffered `/v1/generate` response.
+fn finish_generate(
+    c: &mut ConnEntry,
     ctx: &HandlerCtx,
-    id: Option<String>,
-    prompt_len: usize,
-    seed: Option<u64>,
-    erx: mpsc::Receiver<GenEvent>,
-    keep_alive: bool,
-    t0: Instant,
-    tap: Option<Arc<TraceTap>>,
-) -> Result<()> {
-    let mut started = false;
-    loop {
-        let ev = match erx.recv_timeout(ctx.request_timeout) {
-            Ok(ev) => ev,
-            Err(_) => {
-                ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
-                if started {
-                    write_chunk(w, &format!("{}\n", stream_error_event("generation timed out")))?;
-                    write_stream_end(w)?;
-                } else {
-                    write_json_response(
-                        w,
-                        504,
-                        "Gateway Timeout",
-                        &error_json("generation timed out"),
-                        keep_alive,
-                    )?;
-                }
-                if let Some(t) = &tap {
-                    ctx.obs.finish(t, "timeout");
-                }
-                return Ok(());
+    p: PendingReply,
+    outcome: Option<std::result::Result<JobOutcome, String>>,
+    now: Instant,
+) -> Option<ConnEvent> {
+    c.machine.replying();
+    match outcome {
+        Some(Ok(JobOutcome::Generate(out))) => {
+            let resp = GenerateResponse {
+                id: p.id,
+                tokens: out.tokens,
+                prompt_len: p.prompt_len,
+                queue_ms: out.queue_ms,
+                prefill_ms: out.prefill_ms,
+                decode_ms: out.decode_ms,
+                seed: p.seed,
+            };
+            ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+            ctx.stats.latency.record(p.t0.elapsed());
+            let t_reply = Instant::now();
+            queue_json(c, 200, "OK", &resp.to_json(), p.keep_alive);
+            if let Some(t) = &p.tap {
+                t.span_since("reply", t_reply);
+                ctx.obs.finish(t, "ok");
             }
-        };
-        match ev {
-            GenEvent::Token { index, token } => {
-                if !started {
-                    write_stream_head(w, keep_alive)?;
-                    started = true;
-                }
-                write_chunk(w, &format!("{}\n", stream_token_event(index, token)))?;
-            }
-            GenEvent::Done(out) => {
-                let resp = GenerateResponse {
-                    id,
-                    tokens: out.tokens,
-                    prompt_len,
-                    queue_ms: out.queue_ms,
-                    prefill_ms: out.prefill_ms,
-                    decode_ms: out.decode_ms,
-                    seed,
-                };
-                ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
-                ctx.stats.latency.record(t0.elapsed());
-                if !started {
-                    write_stream_head(w, keep_alive)?;
-                }
-                write_chunk(w, &format!("{}\n", stream_done_event(&resp)))?;
-                write_stream_end(w)?;
-                if let Some(t) = &tap {
-                    ctx.obs.finish(t, "ok");
-                }
-                return Ok(());
-            }
-            GenEvent::Error(msg) => {
-                ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
-                if started {
-                    write_chunk(w, &format!("{}\n", stream_error_event(&msg)))?;
-                    write_stream_end(w)?;
-                } else {
-                    write_json_response(
-                        w,
-                        500,
-                        "Internal Server Error",
-                        &error_json(&msg),
-                        keep_alive,
-                    )?;
-                }
-                if let Some(t) = &tap {
-                    ctx.obs.finish(t, "error");
-                }
-                return Ok(());
+        }
+        other => {
+            let status = if other.is_none() { "timeout" } else { "error" };
+            queue_non_200(c, ctx, other, p.keep_alive, "generation");
+            if let Some(t) = &p.tap {
+                ctx.obs.finish(t, status);
             }
         }
     }
+    complete_response(c, p.keep_alive, now)
+}
+
+/// Shared non-200 tail of the reply wait: engine errors → 500, deadline
+/// expiry → 504, and a kind-mismatched outcome → 500 (a bug, not a
+/// client problem).
+fn queue_non_200(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    outcome: Option<std::result::Result<JobOutcome, String>>,
+    keep_alive: bool,
+    what: &str,
+) {
+    match outcome {
+        Some(Ok(_)) => {
+            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+            queue_json(
+                c,
+                500,
+                "Internal Server Error",
+                &error_json("engine returned a mismatched outcome kind"),
+                keep_alive,
+            );
+        }
+        Some(Err(engine_msg)) => {
+            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+            queue_json(c, 500, "Internal Server Error", &error_json(&engine_msg), keep_alive);
+        }
+        None => {
+            ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+            queue_json(
+                c,
+                504,
+                "Gateway Timeout",
+                &error_json(&format!("{what} timed out")),
+                keep_alive,
+            );
+        }
+    }
+}
+
+/// The streaming tail of `/v1/generate`, driven by [`GenEvent`]
+/// readiness instead of a parked thread. Headers are deferred until the
+/// first event so a prefill failure (or timeout) before any token still
+/// answers with a plain JSON status; after the stream opens, failures
+/// become a terminal `error` event. A socket write failure drops the
+/// connection entry, the event receiver with it — the worker's next
+/// send fails, which retires the session and frees its slot.
+fn pump_stream(c: &mut ConnEntry, ctx: &HandlerCtx, mut p: PendingStream, now: Instant) -> bool {
+    loop {
+        match p.erx.try_recv() {
+            Ok(GenEvent::Token { index, token }) => {
+                if !p.started {
+                    queue_stream_head(c, p.keep_alive);
+                    p.started = true;
+                    c.machine.streaming();
+                }
+                queue_chunk(c, &format!("{}\n", stream_token_event(index, token)));
+                p.deadline = now + ctx.request_timeout;
+            }
+            Ok(GenEvent::Done(out)) => {
+                let resp = GenerateResponse {
+                    id: p.id,
+                    tokens: out.tokens,
+                    prompt_len: p.prompt_len,
+                    queue_ms: out.queue_ms,
+                    prefill_ms: out.prefill_ms,
+                    decode_ms: out.decode_ms,
+                    seed: p.seed,
+                };
+                ctx.stats.responses_ok.fetch_add(1, Ordering::Relaxed);
+                ctx.stats.latency.record(p.t0.elapsed());
+                if !p.started {
+                    queue_stream_head(c, p.keep_alive);
+                }
+                queue_chunk(c, &format!("{}\n", stream_done_event(&resp)));
+                queue_stream_end(c);
+                if let Some(t) = &p.tap {
+                    ctx.obs.finish(t, "ok");
+                }
+                let ev = complete_response(c, p.keep_alive, now);
+                return process_event(c, ctx, ev, now);
+            }
+            Ok(GenEvent::Error(msg)) => {
+                ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+                if p.started {
+                    queue_chunk(c, &format!("{}\n", stream_error_event(&msg)));
+                    queue_stream_end(c);
+                } else {
+                    c.machine.replying();
+                    queue_json(c, 500, "Internal Server Error", &error_json(&msg), p.keep_alive);
+                }
+                if let Some(t) = &p.tap {
+                    ctx.obs.finish(t, "error");
+                }
+                let ev = complete_response(c, p.keep_alive, now);
+                return process_event(c, ctx, ev, now);
+            }
+            Err(mpsc::TryRecvError::Empty) if now < p.deadline => {
+                c.pending = Pending::Stream(p);
+                return true;
+            }
+            Err(_) => {
+                // Deadline passed with no event, or the worker vanished:
+                // the threaded server's `recv_timeout` classified both
+                // as a generation timeout.
+                ctx.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                if p.started {
+                    queue_chunk(c, &format!("{}\n", stream_error_event("generation timed out")));
+                    queue_stream_end(c);
+                } else {
+                    c.machine.replying();
+                    queue_json(
+                        c,
+                        504,
+                        "Gateway Timeout",
+                        &error_json("generation timed out"),
+                        p.keep_alive,
+                    );
+                }
+                if let Some(t) = &p.tap {
+                    ctx.obs.finish(t, "timeout");
+                }
+                let ev = complete_response(c, p.keep_alive, now);
+                return process_event(c, ctx, ev, now);
+            }
+        }
+    }
+}
+
+/// Mark the response for the connection's current request as fully
+/// queued; schedule the close when it is not keep-alive. May surface a
+/// pipelined next request.
+fn complete_response(c: &mut ConnEntry, keep_alive: bool, now: Instant) -> Option<ConnEvent> {
+    if !keep_alive {
+        c.close_after_flush = true;
+    }
+    c.machine.response_complete(keep_alive, now)
+}
+
+/// Write as much queued output as the socket accepts. Returns whether
+/// the connection survives (a fully-drained buffer on a
+/// `close_after_flush` connection retires it).
+fn flush_out(c: &mut ConnEntry) -> bool {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => c.out_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    c.out.clear();
+    c.out_pos = 0;
+    !c.close_after_flush
+}
+
+// Responses are composed into the connection's output buffer through the
+// same writer functions the threaded server used on sockets directly —
+// the wire bytes cannot drift. `Vec<u8>`'s `Write` is infallible.
+
+fn queue_json(c: &mut ConnEntry, status: u16, reason: &str, body: &Json, keep_alive: bool) {
+    let _ = write_json_response(&mut c.out, status, reason, body, keep_alive);
+}
+
+fn queue_text(
+    c: &mut ConnEntry,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) {
+    let _ = write_text_response(&mut c.out, status, reason, content_type, body, keep_alive);
+}
+
+fn queue_stream_head(c: &mut ConnEntry, keep_alive: bool) {
+    let _ = write_stream_head(&mut c.out, keep_alive);
+}
+
+fn queue_chunk(c: &mut ConnEntry, payload: &str) {
+    let _ = write_chunk(&mut c.out, payload);
+}
+
+fn queue_stream_end(c: &mut ConnEntry) {
+    let _ = write_stream_end(&mut c.out);
 }
 
 // ---------------------------------------------------------------------------

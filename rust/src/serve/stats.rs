@@ -199,6 +199,18 @@ pub struct ServeStats {
     pub timeouts: AtomicU64,
     /// Engine-side failures (→ 500).
     pub engine_errors: AtomicU64,
+    /// Open sockets the event loop is servicing (gauge, published once
+    /// per loop pass).
+    pub conn_open: AtomicU64,
+    /// Connections idle between requests or mid-read (gauge).
+    pub conn_reading: AtomicU64,
+    /// Connections with a dispatched request awaiting its reply (gauge).
+    pub conn_waiting: AtomicU64,
+    /// Connections with an open chunked token stream (gauge).
+    pub conn_streaming: AtomicU64,
+    /// HTTP I/O threads (gauge; 1 for the event loop — the invariant the
+    /// bounded-thread conformance test checks, vs thread-per-connection).
+    pub io_threads: AtomicU64,
     /// Program invocations.
     pub batches_total: AtomicU64,
     /// Real (non-padding) rows across all invocations.
@@ -252,6 +264,11 @@ impl ServeStats {
             rejected_full: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             engine_errors: AtomicU64::new(0),
+            conn_open: AtomicU64::new(0),
+            conn_reading: AtomicU64::new(0),
+            conn_waiting: AtomicU64::new(0),
+            conn_streaming: AtomicU64::new(0),
+            io_threads: AtomicU64::new(0),
             batches_total: AtomicU64::new(0),
             batch_rows_total: AtomicU64::new(0),
             startup_failures: AtomicU64::new(0),
@@ -370,7 +387,10 @@ impl ServeStats {
         let mut doc = vec![
             (
                 "server",
-                Json::obj(vec![("uptime_s", Json::Num(round3(self.uptime().as_secs_f64())))]),
+                Json::obj(vec![
+                    ("uptime_s", Json::Num(round3(self.uptime().as_secs_f64()))),
+                    ("io_threads", g(&self.io_threads)),
+                ]),
             ),
             (
                 "build",
@@ -393,6 +413,15 @@ impl ServeStats {
                     ("rejected_full", g(&self.rejected_full)),
                     ("timeouts", g(&self.timeouts)),
                     ("engine_errors", g(&self.engine_errors)),
+                ]),
+            ),
+            (
+                "connections",
+                Json::obj(vec![
+                    ("open", g(&self.conn_open)),
+                    ("reading", g(&self.conn_reading)),
+                    ("waiting", g(&self.conn_waiting)),
+                    ("streaming", g(&self.conn_streaming)),
                 ]),
             ),
             (
@@ -925,6 +954,11 @@ mod tests {
         let text = s.prometheus(&snap);
         for family in [
             "qtx_server_uptime_s",
+            "qtx_server_io_threads",
+            "qtx_connections_open",
+            "qtx_connections_reading",
+            "qtx_connections_waiting",
+            "qtx_connections_streaming",
             "qtx_build_version",
             "qtx_build_simd",
             "qtx_build_gemm_threads",
