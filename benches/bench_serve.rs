@@ -1,6 +1,6 @@
 //! Serving throughput/latency benches.
 //!
-//! Seven sections. All but the engine comparison run on the deterministic
+//! Eight sections. All but the engine comparison run on the deterministic
 //! mock engine (set QTX_BENCH_SERVE_COST_US to change the simulated
 //! per-dispatch cost; default 3000µs ≈ a tiny-config serve_score
 //! invocation):
@@ -41,6 +41,13 @@
 //!    {16, 256, 1024} extra keep-alive connections sit idle on the
 //!    single-threaded poll loop — p95 must stay flat because idle
 //!    sockets cost a poll-set entry, not a thread.
+//! 8. **Routing** (the multi-replica trajectory): score rows/s, p95 and
+//!    decode tok/s through `qtx route` at {1, 2, 4} replicas, then a
+//!    recovery drill — one of two replicas kills its front-end mid-run
+//!    (`--fault kill-after:8`) and the row records detection time,
+//!    half-open rejoin time and score retries; deliberate 503 sheds are
+//!    tolerated, any other failure aborts the bench (zero lost requests,
+//!    the docs/ROUTING.md contract).
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -51,6 +58,7 @@
 //!      QTX_BENCH_GEN_REQS       decode sessions per client (default 8)
 //!      QTX_BENCH_GEN_CLIENTS    decode closed-loop clients (default 8)
 //!      QTX_BENCH_SCALE_REQS     decode-scaling sessions per client (default 4)
+//!      QTX_BENCH_ROUTE_REQS     routing-section requests per client (default 16)
 //!
 //! Output: markdown tables (the repo's bench idiom) plus one
 //! `bench_serve JSON: {...}` line per row — CI collects these lines into
@@ -63,8 +71,10 @@ use qtx::infer::NativeInt8Engine;
 use qtx::metrics::table::render;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
 use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine};
-use qtx::serve::loadgen::{self, ConnectionHold, LoadgenConfig, LoadgenReport};
+use qtx::serve::fault::FaultSpec;
+use qtx::serve::loadgen::{self, ConnectionHold, GenLoad, LoadgenConfig, LoadgenReport};
 use qtx::serve::obs::TraceConfig;
+use qtx::serve::route::{Router, RouterConfig};
 use qtx::serve::poll::raise_nofile_limit;
 use qtx::serve::protocol::ScoreRequest;
 use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
@@ -94,6 +104,34 @@ fn start_server(
     cost_us: u64,
     trace_capacity: usize,
 ) -> anyhow::Result<Server> {
+    start_server_at(
+        0,
+        FaultSpec::default(),
+        policy,
+        max_batch,
+        max_wait_ms,
+        queue_cap,
+        max_connections,
+        cost_us,
+        trace_capacity,
+    )
+}
+
+/// `start_server` with an explicit port (0 = ephemeral; the routing
+/// recovery bench restarts a replica at its advertised address) and a
+/// fault spec (the routing section drills `kill-after`).
+#[allow(clippy::too_many_arguments)]
+fn start_server_at(
+    port: u16,
+    fault: FaultSpec,
+    policy: BatchPolicy,
+    max_batch: usize,
+    max_wait_ms: u64,
+    queue_cap: usize,
+    max_connections: usize,
+    cost_us: u64,
+    trace_capacity: usize,
+) -> anyhow::Result<Server> {
     let factory: EngineFactory = Arc::new(move || {
         let mut e = MockEngine::new(max_batch.max(MODEL_BATCH), SEQ_LEN);
         e.batch_cost = Duration::from_micros(cost_us);
@@ -103,7 +141,7 @@ fn start_server(
     let server = Server::start(
         ServerConfig {
             host: "127.0.0.1".into(),
-            port: 0,
+            port,
             max_connections,
             engines: 1,
             policy,
@@ -116,6 +154,7 @@ fn start_server(
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(60),
             trace: TraceConfig { capacity: trace_capacity, slow_ms: 0 },
+            fault,
         },
         EngineInfo {
             seq_len: SEQ_LEN,
@@ -500,6 +539,226 @@ fn bench_connections(
         p95: report.p95_ms,
         io_threads,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Section 8: routing — `qtx route` fronting 1/2/4 replicas + fault recovery
+// ---------------------------------------------------------------------------
+
+struct RouteRow {
+    replicas: usize,
+    rps: f64,
+    p95: f64,
+    shed: u64,
+    tok_s: f64,
+}
+
+/// Router with bench-speed probe cadence over `n` continuous replicas.
+fn start_fleet(n: usize, cost_us: u64) -> anyhow::Result<(Vec<Server>, Router, String)> {
+    let mut servers = Vec::new();
+    for _ in 0..n {
+        servers.push(start_server(BatchPolicy::Continuous, MATRIX_BATCH, 5, 128, 256, cost_us, 0)?);
+    }
+    let router = Router::start(RouterConfig {
+        backends: servers.iter().map(|s| s.addr().to_string()).collect(),
+        probe_interval: Duration::from_millis(25),
+        eject_after: 2,
+        halfopen_interval: Duration::from_millis(50),
+        retry_backoff: Duration::from_millis(5),
+        ..RouterConfig::default()
+    })?;
+    anyhow::ensure!(router.wait_ready(Duration::from_secs(10)), "no replica came up");
+    let addr = router.addr().to_string();
+    Ok((servers, router, addr))
+}
+
+/// Deliberate sheds (503, counted as `http_503`) are the admission
+/// contract under saturation — anything else (resets, 502s, timeouts)
+/// is a lost request and fails the bench.
+fn ensure_only_shed(r: &LoadgenReport, label: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(r.ok > 0, "{label}: no successful requests ({:?})", r.errors_by_cause);
+    for (cause, n) in &r.errors_by_cause {
+        anyhow::ensure!(cause == "http_503", "{label}: non-shed failures: {cause}={n}");
+    }
+    Ok(())
+}
+
+fn route_statz(addr: &str) -> anyhow::Result<Json> {
+    let mut c = Client::connect(addr, Duration::from_secs(5))?;
+    c.get_json("/statz")
+}
+
+fn route_num(statz: &Json, dotted: &str) -> anyhow::Result<f64> {
+    let mut cur = statz;
+    for part in dotted.split('.') {
+        cur = cur.req(part)?;
+    }
+    cur.as_f64().ok_or_else(|| anyhow::anyhow!("{dotted} not a number"))
+}
+
+/// Poll the router's `/statz` until `pred` holds; returns how long it
+/// took (the observable the recovery row is built from).
+fn wait_route(addr: &str, what: &str, pred: impl Fn(&Json) -> bool) -> anyhow::Result<Duration> {
+    let t0 = Instant::now();
+    loop {
+        let statz = route_statz(addr)?;
+        if pred(&statz) {
+            return Ok(t0.elapsed());
+        }
+        anyhow::ensure!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Score rows/s and decode tok/s through the router at `n` replicas —
+/// the fleet-scaling trajectory a single `qtx serve` cannot offer.
+fn bench_route_scale(
+    n: usize,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<RouteRow> {
+    let (servers, router, addr) = start_fleet(n, cost_us)?;
+    let score = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 42,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: None,
+    })?;
+    ensure_only_shed(&score, "route score")?;
+    let gen = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: clients.min(4),
+        requests_per_client: 4,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 43,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: Some(GenLoad::greedy(16, 8)),
+    })?;
+    ensure_only_shed(&gen, "route decode")?;
+    router.stop();
+    for s in servers {
+        s.stop();
+    }
+    Ok(RouteRow {
+        replicas: n,
+        rps: score.throughput_rps,
+        p95: score.p95_ms,
+        shed: score.errors + gen.errors,
+        tok_s: gen.gen_tokens_per_s,
+    })
+}
+
+struct RecoveryRow {
+    requests: u64,
+    retries: f64,
+    detect_ms: f64,
+    rejoin_ms: f64,
+}
+
+/// The fault drill as a measurement: how fast the router notices a
+/// killed replica (detect = run start → ejection observed) and how fast
+/// an ejected replica folds back in through the half-open probe (rejoin
+/// = replica restart → census Up). Requests lost across the kill: zero
+/// tolerated, same bar as the e2e test.
+fn bench_route_recovery(clients: usize, reqs: usize, cost_us: u64) -> anyhow::Result<RecoveryRow> {
+    // Phase 1 — detection: one of two replicas kills its front-end after
+    // its 8th dispatched request, mid-run.
+    let healthy = start_server(BatchPolicy::Continuous, MATRIX_BATCH, 5, 128, 256, cost_us, 0)?;
+    let doomed = start_server_at(
+        0,
+        FaultSpec::parse("kill-after:8").expect("static spec"),
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        5,
+        128,
+        256,
+        cost_us,
+        0,
+    )?;
+    let router = Router::start(RouterConfig {
+        backends: vec![healthy.addr().to_string(), doomed.addr().to_string()],
+        probe_interval: Duration::from_millis(25),
+        eject_after: 2,
+        halfopen_interval: Duration::from_millis(50),
+        retry_backoff: Duration::from_millis(5),
+        ..RouterConfig::default()
+    })?;
+    anyhow::ensure!(router.wait_ready(Duration::from_secs(10)), "fleet never came up");
+    let addr = router.addr().to_string();
+    let t0 = Instant::now();
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 44,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: None,
+    })?;
+    ensure_only_shed(&report, "route recovery")?;
+    wait_route(&addr, "ejection", |s| {
+        route_num(s, "route.replicas.ejected").unwrap_or(0.0) == 1.0
+    })?;
+    // detect = run start → ejection visible in the census. The kill fires
+    // mid-run, so this folds in the requests served before the fault; it
+    // is the client-observable outage window, not the probe latency.
+    let detect_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let statz = route_statz(&addr)?;
+    let retries = route_num(&statz, "route.requests.retries")?;
+    router.stop();
+    healthy.stop();
+    doomed.stop();
+
+    // Phase 2 — rejoin: a replica address with nothing listening ejects,
+    // then a server starts there; the half-open probe folds it back in.
+    let live = start_server(BatchPolicy::Continuous, MATRIX_BATCH, 5, 128, 256, cost_us, 0)?;
+    let reserved = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+        l.local_addr()?
+    };
+    let router = Router::start(RouterConfig {
+        backends: vec![live.addr().to_string(), reserved.to_string()],
+        probe_interval: Duration::from_millis(25),
+        eject_after: 2,
+        halfopen_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })?;
+    let addr = router.addr().to_string();
+    wait_route(&addr, "dead-address ejection", |s| {
+        route_num(s, "route.replicas.ejected").unwrap_or(0.0) == 1.0
+    })?;
+    let t1 = Instant::now();
+    let revived = start_server_at(
+        reserved.port(),
+        FaultSpec::default(),
+        BatchPolicy::Continuous,
+        MATRIX_BATCH,
+        5,
+        128,
+        256,
+        cost_us,
+        0,
+    )?;
+    wait_route(&addr, "replica rejoin", |s| {
+        route_num(s, "route.replicas.up").unwrap_or(0.0) == 2.0
+    })?;
+    // rejoin = replica restart → census Up (server startup + half-open
+    // probe success), the window where the fleet runs a replica short.
+    let rejoin_ms = t1.elapsed().as_secs_f64() * 1000.0;
+    router.stop();
+    live.stop();
+    revived.stop();
+    Ok(RecoveryRow { requests: report.sent, retries, detect_ms, rejoin_ms })
 }
 
 // ---------------------------------------------------------------------------
@@ -922,6 +1181,78 @@ fn main() -> anyhow::Result<()> {
         "\n## latency vs open connections — {clients} closed-loop clients while the \
          event-loop front-end holds idle keep-alive sockets\n\n{}",
         render(&["held conns", "req/s", "p50 ms", "p95 ms", "io threads"], &ctable)
+    );
+
+    // -- routing: fleet scale + fault recovery -------------------------------
+    let route_reqs = env_usize("QTX_BENCH_ROUTE_REQS", 16);
+    let route_clients = 4usize;
+    let mut route_rows = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let r = bench_route_scale(replicas, route_clients, route_reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] routing replicas={}: {:.1} req/s, p95 {:.2} ms, {:.1} tok/s \
+             ({} shed)",
+            r.replicas, r.rps, r.p95, r.tok_s, r.shed
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("section", Json::Str("routing".into())),
+                ("row", Json::Str("scale".into())),
+                ("replicas", Json::Num(r.replicas as f64)),
+                ("clients", Json::Num(route_clients as f64)),
+                ("requests", Json::Num((route_clients * route_reqs) as f64)),
+                ("throughput_rps", Json::Num(r.rps)),
+                ("p95_ms", Json::Num(r.p95)),
+                ("decode_tokens_per_s", Json::Num(r.tok_s)),
+                ("shed", Json::Num(r.shed as f64)),
+            ])
+        );
+        route_rows.push(r);
+    }
+    let rbase = route_rows[0].rps;
+    let rtable: Vec<Vec<String>> = route_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.replicas.to_string(),
+                format!("{:.1}", r.rps),
+                format!("{:.2}", r.p95),
+                format!("{:.1}", r.tok_s),
+                r.shed.to_string(),
+                format!("{:.2}x", r.rps / rbase),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## routing — `qtx route` fronting N serve replicas ({route_clients} closed-loop \
+         clients, mock engine)\n\n{}",
+        render(&["replicas", "req/s", "p95 ms", "decode tok/s", "shed", "vs 1"], &rtable)
+    );
+
+    let rec = bench_route_recovery(route_clients, route_reqs, cost_us)?;
+    eprintln!(
+        "[bench_serve] routing recovery: {} reqs over a mid-run kill ({:.0} retries), \
+         detect {:.0} ms, rejoin {:.0} ms",
+        rec.requests, rec.retries, rec.detect_ms, rec.rejoin_ms
+    );
+    println!(
+        "bench_serve JSON: {}",
+        Json::obj(vec![
+            ("section", Json::Str("routing".into())),
+            ("row", Json::Str("recovery".into())),
+            ("replicas", Json::Num(2.0)),
+            ("clients", Json::Num(route_clients as f64)),
+            ("requests", Json::Num(rec.requests as f64)),
+            ("retries", Json::Num(rec.retries)),
+            ("detect_ms", Json::Num(rec.detect_ms)),
+            ("rejoin_ms", Json::Num(rec.rejoin_ms)),
+        ])
+    );
+    println!(
+        "\nrecovery drill (kill-after:8 on one of two replicas): detect {:.0} ms, \
+         half-open rejoin {:.0} ms, {:.0} score retries, zero lost requests.",
+        rec.detect_ms, rec.rejoin_ms, rec.retries
     );
 
     // -- engine dimension: pjrt vs native-int8 -------------------------------

@@ -3,5 +3,6 @@
 
 pub mod analyze;
 pub mod basic;
+pub mod route;
 pub mod serve;
 pub mod tables;

@@ -1,0 +1,54 @@
+//! `qtx route` — front N `qtx serve` replicas behind one address.
+//!
+//! ```text
+//! qtx serve --mock --port 8801 &
+//! qtx serve --mock --port 8802 &
+//! qtx route --port 8787 --backends 127.0.0.1:8801,127.0.0.1:8802
+//! qtx loadgen --port 8787 --threads 4 --requests 64     # unchanged
+//! ```
+//!
+//! Flags map 1:1 onto [`RouterConfig`]; `docs/ROUTING.md` is the
+//! reference for the replica state machine, retry/stickiness semantics,
+//! and the shed contract.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::serve::route::{Router, RouterConfig};
+use crate::util::cli::Args;
+use crate::util::log;
+
+pub fn route(args: &Args) -> Result<()> {
+    log::set_format(log::Format::parse(&args.str("log-format", "text"))?);
+    let backends = args.list("backends", &[]);
+    if backends.is_empty() {
+        bail!("qtx route: --backends HOST:PORT[,HOST:PORT...] is required");
+    }
+    let cfg = RouterConfig {
+        host: args.str("host", "127.0.0.1"),
+        port: args.port(8787)?,
+        backends,
+        // --threads caps concurrent client sockets, like `qtx serve`.
+        max_connections: args.threads(256)?,
+        probe_interval: Duration::from_millis(args.u64("probe-interval-ms", 150)?),
+        probe_timeout: Duration::from_millis(args.u64("probe-timeout-ms", 500)?),
+        eject_after: args.u64("eject-after", 3)? as u32,
+        halfopen_interval: Duration::from_millis(args.u64("halfopen-ms", 400)?),
+        retry_max: args.u64("retry-max", 3)? as u32,
+        retry_backoff: Duration::from_millis(args.u64("retry-backoff-ms", 25)?),
+        connect_timeout: Duration::from_millis(args.u64("connect-timeout-ms", 250)?),
+        read_timeout: Duration::from_millis(args.u64("read-timeout-ms", 60_000)?),
+        request_timeout: Duration::from_millis(args.u64("timeout-ms", 30_000)?),
+        seed: args.u64("seed", 0x7013)?,
+    };
+    args.finish()?;
+    let router = Router::start(cfg)?;
+    // Wait briefly for the first replica so the startup log reflects
+    // fleet state; traffic is served (and shed) either way.
+    if !router.wait_ready(Duration::from_secs(5)) {
+        log::info("qtx route: no replica ready yet (serving anyway; probes continue)");
+    }
+    router.join();
+    Ok(())
+}

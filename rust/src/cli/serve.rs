@@ -45,6 +45,7 @@ use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{
     EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
+use crate::serve::fault::FaultSpec;
 use crate::serve::loadgen::{
     run as loadgen_run, render_report, ConnectionHold, GenLoad, LoadgenConfig,
 };
@@ -78,6 +79,13 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         trace: TraceConfig {
             capacity: args.usize("trace-capacity", 256)?,
             slow_ms: args.u64("trace-slow-ms", 0)?,
+        },
+        // Deterministic fault injection for robustness tests and the
+        // route smoke (grammar: docs/ROUTING.md), e.g.
+        // `--fault kill-after:100,stall:p=0.05:ms=2000`.
+        fault: match args.str_opt("fault") {
+            Some(spec) => FaultSpec::parse(&spec)?,
+            None => FaultSpec::default(),
         },
     })
 }

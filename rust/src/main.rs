@@ -5,6 +5,7 @@
 //!   qtx train --config X [...]       train one model
 //!   qtx eval  --config X [...]       FP + quantized eval of a cached run
 //!   qtx serve --config X [...]       INT8 inference server on a trained run
+//!   qtx route --backends A,B [...]   fault-tolerant router over serve replicas
 //!   qtx loadgen --port P [...]        closed-loop load generator
 //!   qtx analyze --config X           outlier / attention analysis (Figs 1-3)
 //!   qtx table{1,2,3,4,5,6,7,8,10} / fig{6,7} / table9
@@ -40,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd::basic::train(args),
         "eval" => cmd::basic::eval(args),
         "serve" => cmd::serve::serve(args),
+        "route" => cmd::route::route(args),
         "loadgen" => cmd::serve::loadgen(args),
         "list-configs" => cmd::basic::list_configs(args),
         "analyze" | "fig1" | "fig2" | "fig3" => cmd::analyze::run(cmd, args),
@@ -69,7 +71,12 @@ commands:
                          --port, --threads, --engines, --batch-policy {continuous|fixed},
                          --max-batch, --max-wait-ms FIXED_FLUSH, --admit-window-us,
                          --ckpt PATH | same recipe flags as train)
-  loadgen               HTTP load generator against a running server
+  route                 fault-tolerant reverse proxy over N serve replicas
+                        (--backends HOST:PORT,...; --port, --threads,
+                         --probe-interval-ms, --eject-after, --halfopen-ms,
+                         --retry-max, --retry-backoff-ms, --timeout-ms;
+                         same HTTP surface as serve — see docs/ROUTING.md)
+  loadgen               HTTP load generator against a running server or router
                         (--host, --port, --threads CLIENTS, --requests N;
                          --open-loop --rate REQ_PER_S for Poisson arrivals)
   analyze|fig1|fig2|fig3  outlier & attention analysis dumps

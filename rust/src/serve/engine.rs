@@ -22,7 +22,7 @@
 //! thread *constructs* its own engine via an [`EngineFactory`] and requests
 //! cross threads as plain host data.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -855,12 +855,23 @@ pub struct Job {
     /// (client disconnect) — the worker then abandons the session and
     /// frees its slot immediately.
     pub events: Option<EventTx>,
+    /// Set by the event loop when the client hangs up while the job is
+    /// still queued (`WaitingOnSlot`). The worker checks it at claim time
+    /// and skips the work entirely — the claim is freed by the normal
+    /// complete/release cycle and no engine call is made for it.
+    pub cancelled: Option<Arc<AtomicBool>>,
 }
 
 impl Job {
     /// Convenience constructor for scoring jobs (the common path).
     pub fn score(req: ScoreRequest, resp: impl Into<ReplyTx>) -> Job {
-        Job { kind: JobKind::Score(req), resp: resp.into(), trace: None, events: None }
+        Job {
+            kind: JobKind::Score(req),
+            resp: resp.into(),
+            trace: None,
+            events: None,
+            cancelled: None,
+        }
     }
 
     /// Attach a trace handle (builder-style, keeps call sites short).
@@ -872,6 +883,12 @@ impl Job {
     /// Attach a streaming event channel (builder-style).
     pub fn streaming(mut self, events: Option<EventTx>) -> Job {
         self.events = events;
+        self
+    }
+
+    /// Attach a cancellation flag (builder-style).
+    pub fn cancellable(mut self, cancelled: Arc<AtomicBool>) -> Job {
+        self.cancelled = Some(cancelled);
         self
     }
 }
@@ -1181,7 +1198,15 @@ fn run_worker(
                 let admission = a.admission_wait();
                 stats.queue_wait.record(wait);
                 stats.admission_wait.record(admission);
-                let Job { kind, resp, trace, events } = a.queued.item;
+                let Job { kind, resp, trace, events, cancelled } = a.queued.item;
+                if cancelled.is_some_and(|c| c.load(Ordering::Relaxed)) {
+                    // Client hung up while the job was queued: skip it.
+                    // Dropping `resp` here is fine (nobody listens), and
+                    // the claim is freed by complete/release below. If
+                    // every assignment in the view was cancelled, no
+                    // engine call happens at all (`n == 0`).
+                    continue;
+                }
                 if let Some(tap) = &trace {
                     // Reconstruct submit/claim instants from the measured
                     // waits: submit = launch − wait, claim = submit +
@@ -1849,7 +1874,7 @@ mod tests {
             let (tx, rx) = mpsc::channel();
             let kind = JobKind::Generate(gen_req(&[g, g + 1], 6));
             dispatch
-                .submit(Job { kind, resp: tx.into(), trace: None, events: None })
+                .submit(Job { kind, resp: tx.into(), trace: None, events: None, cancelled: None })
                 .map_err(|_| ())
                 .unwrap();
             gen_rxs.push(rx);
@@ -1933,7 +1958,13 @@ mod tests {
         let (etx, erx) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![7, 8], 5));
         dispatch
-            .submit(Job { kind, resp: tx.into(), trace: None, events: Some(etx.into()) })
+            .submit(Job {
+                kind,
+                resp: tx.into(),
+                trace: None,
+                events: Some(etx.into()),
+                cancelled: None,
+            })
             .map_err(|_| ())
             .unwrap();
         let mut streamed = Vec::new();
@@ -1957,7 +1988,13 @@ mod tests {
         let (etx2, erx2) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![1, 2, 3], 2000));
         dispatch
-            .submit(Job { kind, resp: tx2.into(), trace: None, events: Some(etx2.into()) })
+            .submit(Job {
+                kind,
+                resp: tx2.into(),
+                trace: None,
+                events: Some(etx2.into()),
+                cancelled: None,
+            })
             .map_err(|_| ())
             .unwrap();
         let first = erx2.recv_timeout(Duration::from_secs(10)).unwrap();
@@ -1971,7 +2008,7 @@ mod tests {
         let (tx4, rx4) = mpsc::channel();
         let kind = JobKind::Generate(GenerateRequest::greedy(None, vec![9], 3));
         dispatch
-            .submit(Job { kind, resp: tx4.into(), trace: None, events: None })
+            .submit(Job { kind, resp: tx4.into(), trace: None, events: None, cancelled: None })
             .map_err(|_| ())
             .unwrap();
         rx4.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
@@ -2029,6 +2066,7 @@ mod tests {
                 read_timeout: Duration::from_secs(60),
                 request_timeout: Duration::from_secs(30),
                 trace: crate::serve::obs::TraceConfig::default(),
+                fault: Default::default(),
             },
             EngineInfo {
                 seq_len: cfg.seq_len,

@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the serving stack (`qtx serve
+//! --fault <spec>`).
+//!
+//! The router's robustness claims (retry on a different replica, Up →
+//! Degraded → Ejected with half-open rejoin, fleet-full shed) are only
+//! testable in tier-1 if a replica can be made to fail *on demand and
+//! deterministically*. A [`FaultSpec`] is parsed from a small
+//! comma-separated grammar and threaded through [`crate::serve::server`]'s
+//! event loop, which consults the runtime [`FaultState`] at three points:
+//! request dispatch (`kill-after`, `reset`), response completion
+//! (`stall`), and the `/healthz` handler (`slow-healthz`). Probabilistic
+//! clauses draw from one seeded [`Rng`], so a given (spec, request order)
+//! pair always produces the same fault sequence.
+//!
+//! Grammar — clauses comma-separated, each `name` or `name:arg:...`
+//! (full reference: `docs/ROUTING.md`):
+//!
+//! * `kill-after:N` — the N-th dispatched `/v1/score`+`/v1/generate`
+//!   request trips the kill: the listener closes, every open connection
+//!   (including live decode sessions) drops, and nothing is accepted
+//!   again. The *process* stays up — tests model recovery by starting a
+//!   fresh server on the same port.
+//! * `stall:p=P:ms=M` — with probability P, hold a completed response's
+//!   bytes for M milliseconds before flushing (a slow replica).
+//! * `reset:p=P` — with probability P, drop the connection at dispatch
+//!   without writing a byte (the client sees a reset/EOF).
+//! * `slow-healthz` / `slow-healthz:ms=M` — delay every `/healthz`
+//!   response by M milliseconds (default 2000), so probe deadlines trip
+//!   while scoring traffic still flows.
+//! * `seed:N` — reseed the fault RNG (default `0x5eed`).
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Parsed `--fault` clauses. `Default` is a no-op spec (every clause
+/// disabled) — the event loop skips fault bookkeeping entirely for it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Kill the front-end when this many score/generate requests have
+    /// been dispatched (the tripping request is not answered).
+    pub kill_after: Option<u64>,
+    /// Probability of holding a response flush, and for how long.
+    pub stall_p: f32,
+    pub stall: Duration,
+    /// Probability of dropping a connection at dispatch, replyless.
+    pub reset_p: f32,
+    /// Delay applied to every `/healthz` response.
+    pub slow_healthz: Option<Duration>,
+    /// Fault RNG seed (deterministic per spec + request order).
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            kill_after: None,
+            stall_p: 0.0,
+            stall: Duration::ZERO,
+            reset_p: 0.0,
+            slow_healthz: None,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// No clause enabled — the server behaves exactly as without `--fault`.
+    pub fn is_noop(&self) -> bool {
+        self.kill_after.is_none()
+            && self.stall_p <= 0.0
+            && self.reset_p <= 0.0
+            && self.slow_healthz.is_none()
+    }
+
+    /// Parse the comma-separated clause grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let name = parts.next().unwrap_or_default();
+            match name {
+                "kill-after" => {
+                    let n: u64 = parse_arg(clause, parts.next())?;
+                    if n == 0 {
+                        bail!("fault clause {clause:?}: kill-after wants N >= 1");
+                    }
+                    out.kill_after = Some(n);
+                }
+                "stall" => {
+                    let (mut p, mut ms) = (None, None);
+                    for kv in parts {
+                        match kv.split_once('=') {
+                            Some(("p", v)) => p = Some(parse_arg::<f32>(clause, Some(v))?),
+                            Some(("ms", v)) => ms = Some(parse_arg::<u64>(clause, Some(v))?),
+                            _ => bail!("fault clause {clause:?}: want stall:p=P:ms=M"),
+                        }
+                    }
+                    out.stall_p = probability(clause, p)?;
+                    out.stall = Duration::from_millis(
+                        ms.ok_or_else(|| anyhow::anyhow!("fault clause {clause:?}: missing ms="))?,
+                    );
+                }
+                "reset" => {
+                    let p = match parts.next().and_then(|kv| kv.strip_prefix("p=")) {
+                        Some(v) => Some(parse_arg::<f32>(clause, Some(v))?),
+                        None => None,
+                    };
+                    out.reset_p = probability(clause, p)?;
+                }
+                "slow-healthz" => {
+                    let ms = match parts.next() {
+                        Some(kv) => match kv.strip_prefix("ms=") {
+                            Some(v) => parse_arg::<u64>(clause, Some(v))?,
+                            None => bail!("fault clause {clause:?}: want slow-healthz[:ms=M]"),
+                        },
+                        None => 2000,
+                    };
+                    out.slow_healthz = Some(Duration::from_millis(ms));
+                }
+                "seed" => out.seed = parse_arg(clause, parts.next())?,
+                _ => bail!(
+                    "unknown fault clause {clause:?} \
+                     (want kill-after/stall/reset/slow-healthz/seed)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn parse_arg<T: std::str::FromStr>(clause: &str, arg: Option<&str>) -> Result<T> {
+    arg.and_then(|a| a.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("fault clause {clause:?}: bad or missing argument"))
+}
+
+fn probability(clause: &str, p: Option<f32>) -> Result<f32> {
+    let p = p.ok_or_else(|| anyhow::anyhow!("fault clause {clause:?}: missing p="))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("fault clause {clause:?}: p must be in [0, 1]");
+    }
+    Ok(p)
+}
+
+/// What the fault layer decided for one dispatched request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Serve normally.
+    None,
+    /// Serve, but hold the completed response's flush for this long.
+    Stall(Duration),
+    /// Drop the connection without writing a reply.
+    Reset,
+    /// The kill threshold tripped: the whole front-end goes dark.
+    Kill,
+}
+
+/// Runtime fault bookkeeping — one per server, owned behind a mutex in
+/// the handler context (dispatch decisions are rare enough that a lock
+/// is fine, and it keeps the event-loop plumbing untouched when no
+/// fault is configured).
+#[derive(Debug)]
+pub struct FaultState {
+    spec: FaultSpec,
+    rng: Rng,
+    dispatched: u64,
+    killed: bool,
+}
+
+impl FaultState {
+    pub fn new(spec: FaultSpec) -> FaultState {
+        let rng = Rng::new(spec.seed).fork("fault");
+        FaultState { spec, rng, dispatched: 0, killed: false }
+    }
+
+    /// Decide the fate of one dispatched score/generate request.
+    /// Priority: kill > reset > stall (a dead server can't stall).
+    pub fn on_dispatch(&mut self) -> FaultAction {
+        if self.killed {
+            return FaultAction::Kill;
+        }
+        self.dispatched += 1;
+        if let Some(n) = self.spec.kill_after {
+            if self.dispatched >= n {
+                self.killed = true;
+                return FaultAction::Kill;
+            }
+        }
+        if self.spec.reset_p > 0.0 && self.rng.bernoulli(self.spec.reset_p) {
+            return FaultAction::Reset;
+        }
+        if self.spec.stall_p > 0.0 && self.rng.bernoulli(self.spec.stall_p) {
+            return FaultAction::Stall(self.spec.stall);
+        }
+        FaultAction::None
+    }
+
+    /// Whether `kill-after` has tripped (the event loop polls this once
+    /// per pass and tears the listener + connections down when it turns
+    /// true).
+    pub fn killed(&self) -> bool {
+        self.killed
+    }
+
+    /// Extra delay for a `/healthz` response, if configured.
+    pub fn healthz_delay(&self) -> Option<Duration> {
+        self.spec.slow_healthz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let f = FaultSpec::parse("kill-after:100,stall:p=0.05:ms=2000,reset:p=0.02,slow-healthz")
+            .unwrap();
+        assert_eq!(f.kill_after, Some(100));
+        assert!((f.stall_p - 0.05).abs() < 1e-6);
+        assert_eq!(f.stall, Duration::from_millis(2000));
+        assert!((f.reset_p - 0.02).abs() < 1e-6);
+        assert_eq!(f.slow_healthz, Some(Duration::from_millis(2000)));
+        assert!(!f.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        for bad in [
+            "explode",
+            "kill-after",
+            "kill-after:0",
+            "kill-after:x",
+            "stall:p=0.5",
+            "stall:ms=10",
+            "stall:p=1.5:ms=10",
+            "reset:p=-0.1",
+            "slow-healthz:2000",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_noop() {
+        let f = FaultSpec::parse("").unwrap();
+        assert!(f.is_noop());
+        assert_eq!(f, FaultSpec::default());
+    }
+
+    #[test]
+    fn slow_healthz_ms_override_and_seed() {
+        let f = FaultSpec::parse("slow-healthz:ms=250,seed:7").unwrap();
+        assert_eq!(f.slow_healthz, Some(Duration::from_millis(250)));
+        assert_eq!(f.seed, 7);
+    }
+
+    #[test]
+    fn kill_after_trips_on_nth_dispatch_and_latches() {
+        let mut st = FaultState::new(FaultSpec::parse("kill-after:3").unwrap());
+        assert_eq!(st.on_dispatch(), FaultAction::None);
+        assert_eq!(st.on_dispatch(), FaultAction::None);
+        assert!(!st.killed());
+        assert_eq!(st.on_dispatch(), FaultAction::Kill);
+        assert!(st.killed());
+        assert_eq!(st.on_dispatch(), FaultAction::Kill, "kill latches");
+    }
+
+    #[test]
+    fn probabilistic_clauses_are_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let spec = FaultSpec::parse(&format!("reset:p=0.3,seed:{seed}")).unwrap();
+            let mut st = FaultState::new(spec);
+            (0..64).map(|_| st.on_dispatch() == FaultAction::Reset).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(1), "same seed, same fault sequence");
+        assert_ne!(run(1), run(2), "different seeds diverge");
+        let resets = run(1).iter().filter(|&&r| r).count();
+        assert!(resets > 0, "p=0.3 over 64 draws should reset at least once");
+    }
+
+    #[test]
+    fn stall_draw_returns_configured_hold() {
+        let mut st = FaultState::new(FaultSpec::parse("stall:p=1:ms=40").unwrap());
+        assert_eq!(st.on_dispatch(), FaultAction::Stall(Duration::from_millis(40)));
+        assert_eq!(st.healthz_delay(), None);
+    }
+}

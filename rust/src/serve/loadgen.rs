@@ -19,8 +19,15 @@
 //! Both shapes parse each `200` body and aggregate the server-reported
 //! `queue_ms` (time queued before the batch launched) alongside wall-clock
 //! latency percentiles.
+//!
+//! Failures never abort a run: connection refusals, resets, timeouts and
+//! non-200 statuses are counted per cause (`errors_by_cause`) and the
+//! schedule continues — the shape a router fault drill needs, where
+//! replicas are killed mid-run on purpose and the interesting result is
+//! exactly how many requests were lost and why.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -166,6 +173,11 @@ pub struct LoadgenReport {
     pub sent: u64,
     pub ok: u64,
     pub errors: u64,
+    /// `errors` broken down by cause (`refused`, `reset`, `timeout`,
+    /// `http_503`, ...), sorted by cause name. Empty when `errors == 0`.
+    /// Resets and refusals are *counted* here, never aborted on — a
+    /// router drill kills replicas mid-run on purpose.
+    pub errors_by_cause: Vec<(String, u64)>,
     pub elapsed_s: f64,
     /// Successful requests per second, wall-clock.
     pub throughput_rps: f64,
@@ -198,6 +210,15 @@ impl LoadgenReport {
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            (
+                "errors_by_cause",
+                Json::obj(
+                    self.errors_by_cause
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("p50_ms", Json::Num(self.p50_ms)),
@@ -346,8 +367,34 @@ fn stream_one(c: &mut Client, path: &str, body: &Json, sent: Instant) -> Option<
     }
 }
 
-/// Send one request on `client`, reconnecting once on transport errors.
-/// Returns the sample on 200, `None` on any error (counted by the caller).
+/// Map a transport error onto the cause key it is counted under in
+/// `errors_by_cause`. Walks the anyhow chain for the underlying
+/// `io::Error`; a clean server-side close surfaces as a contextual
+/// message with no io error underneath, which is still a reset as far
+/// as the client is concerned.
+fn classify_err(e: &anyhow::Error) -> &'static str {
+    use std::io::ErrorKind;
+    if let Some(io) = e.chain().find_map(|c| c.downcast_ref::<std::io::Error>()) {
+        return match io.kind() {
+            ErrorKind::ConnectionRefused => "refused",
+            ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::UnexpectedEof => "reset",
+            ErrorKind::TimedOut | ErrorKind::WouldBlock => "timeout",
+            _ => "io",
+        };
+    }
+    if format!("{e:#}").contains("server closed connection") {
+        return "reset";
+    }
+    "protocol"
+}
+
+/// Send one request on `client`, reconnecting on transport errors.
+/// Returns the sample on 200, or the failure cause (counted — never
+/// aborted on — by the caller; a router drill kills replicas mid-run on
+/// purpose, so resets and refusals are data, not fatal errors).
 /// The response type follows from the path, so the two cannot disagree.
 fn send_one(
     client: &mut Option<Client>,
@@ -357,18 +404,23 @@ fn send_one(
     body: &Json,
     stream: bool,
     sent: Instant,
-) -> Option<Sample> {
+) -> Result<Sample, &'static str> {
     if client.is_none() {
-        *client = Client::connect(addr, timeout).ok();
-    }
-    let c = client.as_mut()?;
-    if stream && path == "/v1/generate" {
-        let sample = stream_one(c, path, body, sent);
-        if sample.is_none() {
-            // Chunked state may be desynced; force a redial next time.
-            *client = None;
+        match Client::connect(addr, timeout) {
+            Ok(c) => *client = Some(c),
+            Err(e) => return Err(classify_err(&e)),
         }
-        return sample;
+    }
+    let c = client.as_mut().expect("connected above");
+    if stream && path == "/v1/generate" {
+        return match stream_one(c, path, body, sent) {
+            Some(s) => Ok(s),
+            None => {
+                // Chunked state may be desynced; force a redial next time.
+                *client = None;
+                Err("stream")
+            }
+        };
     }
     match c.request("POST", path, Some(body)) {
         Ok((200, body)) => {
@@ -377,22 +429,26 @@ fn send_one(
             // policies are compared on.
             let lat_ms = sent.elapsed().as_secs_f64() as f32 * 1000.0;
             if path == "/v1/generate" {
-                let resp = GenerateResponse::parse(&body).ok()?;
-                Some(Sample {
+                let resp = GenerateResponse::parse(&body).map_err(|_| "parse")?;
+                Ok(Sample {
                     lat_ms,
                     queue_ms: resp.queue_ms as f32,
                     tokens: resp.tokens.len() as u32,
                 })
             } else {
-                let resp = ScoreResponse::parse(&body).ok()?;
-                Some(Sample { lat_ms, queue_ms: resp.queue_ms as f32, tokens: 0 })
+                let resp = ScoreResponse::parse(&body).map_err(|_| "parse")?;
+                Ok(Sample { lat_ms, queue_ms: resp.queue_ms as f32, tokens: 0 })
             }
         }
-        Ok((_status, _body)) => None,
-        Err(_) => {
+        // 503s get their own bucket: under a router they are the shed
+        // contract (deliberate), unlike other 5xx which are failures.
+        Ok((503, _body)) => Err("http_503"),
+        Ok((status, _body)) if status < 500 => Err("http_4xx"),
+        Ok((_status, _body)) => Err("http_5xx"),
+        Err(e) => {
             // Transport error: drop the connection so the next call redials.
             *client = None;
-            None
+            Err(classify_err(&e))
         }
     }
 }
@@ -429,9 +485,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     }
 }
 
+/// Per-cause error tally (cause key → count). Threads each keep their
+/// own and the driver merges at join — no shared mutex on the hot path.
+type CauseCounts = BTreeMap<&'static str, u64>;
+
+fn merge_causes(into: &mut CauseCounts, from: CauseCounts) {
+    for (k, v) in from {
+        *into.entry(k).or_insert(0) += v;
+    }
+}
+
 fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let (seq_len, vocab) = resolve_limits(cfg)?;
-    let errors = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for client_id in 0..cfg.clients.max(1) {
@@ -440,53 +505,34 @@ fn run_closed(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         let n = cfg.requests_per_client;
         let seed = cfg.seed;
         let gen = cfg.gen;
-        let errors = errors.clone();
-        handles.push(std::thread::spawn(move || -> Vec<Sample> {
+        handles.push(std::thread::spawn(move || -> (Vec<Sample>, CauseCounts) {
             let mut samples = Vec::with_capacity(n);
-            let mut client = Client::connect(&addr, timeout).ok();
-            if client.is_none() {
-                errors.fetch_add(n as u64, Ordering::Relaxed);
-                return samples;
-            }
+            let mut causes = CauseCounts::new();
+            // `send_one` dials lazily and redials after transport errors,
+            // so a replica dying (or not yet listening) costs exactly the
+            // requests that failed — the rest of the schedule still runs.
+            let mut client: Option<Client> = None;
             let label = format!("c{client_id}");
             let stream = gen.map_or(false, |g| g.stream);
             for i in 0..n {
                 let (path, body) = synth_body(seed, &label, i, seq_len, vocab, gen);
                 match send_one(&mut client, &addr, timeout, path, &body, stream, Instant::now()) {
-                    Some(s) => samples.push(s),
-                    None => {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                        if client.is_none() {
-                            // Redial once; keep the connection if it works,
-                            // give up on this client if the server is gone.
-                            match Client::connect(&addr, timeout) {
-                                Ok(c) => client = Some(c),
-                                Err(_) => {
-                                    errors.fetch_add((n - i - 1) as u64, Ordering::Relaxed);
-                                    break;
-                                }
-                            }
-                        }
-                    }
+                    Ok(s) => samples.push(s),
+                    Err(cause) => *causes.entry(cause).or_insert(0) += 1,
                 }
             }
-            samples
+            (samples, causes)
         }));
     }
     let mut samples: Vec<Sample> = Vec::new();
+    let mut causes = CauseCounts::new();
     for h in handles {
-        samples.extend(h.join().expect("loadgen client panicked"));
+        let (s, c) = h.join().expect("loadgen client panicked");
+        samples.extend(s);
+        merge_causes(&mut causes, c);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
-    Ok(build_report(
-        "closed",
-        0.0,
-        cfg.clients.max(1),
-        samples,
-        Vec::new(),
-        errors.load(Ordering::Relaxed),
-        elapsed_s,
-    ))
+    Ok(build_report("closed", 0.0, cfg.clients.max(1), samples, Vec::new(), causes, elapsed_s))
 }
 
 /// Cumulative Poisson arrival offsets: `n` exponential inter-arrivals at
@@ -510,7 +556,6 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
     let total = clients * cfg.requests_per_client;
     let sched = Arc::new(poisson_schedule(cfg.seed, rate, total));
 
-    let errors = Arc::new(AtomicU64::new(0));
     let next = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -519,12 +564,12 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
         let timeout = cfg.timeout;
         let seed = cfg.seed;
         let gen = cfg.gen;
-        let errors = errors.clone();
         let next = next.clone();
         let sched = sched.clone();
-        handles.push(std::thread::spawn(move || -> (Vec<Sample>, Vec<f32>) {
+        handles.push(std::thread::spawn(move || -> (Vec<Sample>, Vec<f32>, CauseCounts) {
             let mut samples = Vec::new();
             let mut lags = Vec::new();
+            let mut causes = CauseCounts::new();
             let mut client: Option<Client> = Client::connect(&addr, timeout).ok();
             loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
@@ -542,32 +587,24 @@ fn run_open(cfg: &LoadgenConfig, rate: f64) -> Result<LoadgenReport> {
                 // lag and server time both count (open-loop semantics).
                 let stream = gen.map_or(false, |g| g.stream);
                 match send_one(&mut client, &addr, timeout, path, &body, stream, due) {
-                    Some(s) => samples.push(s),
-                    None => {
-                        errors.fetch_add(1, Ordering::Relaxed);
-                    }
+                    Ok(s) => samples.push(s),
+                    Err(cause) => *causes.entry(cause).or_insert(0) += 1,
                 }
             }
-            (samples, lags)
+            (samples, lags, causes)
         }));
     }
     let mut samples: Vec<Sample> = Vec::new();
     let mut lags: Vec<f32> = Vec::new();
+    let mut causes = CauseCounts::new();
     for h in handles {
-        let (s, l) = h.join().expect("loadgen sender panicked");
+        let (s, l, c) = h.join().expect("loadgen sender panicked");
         samples.extend(s);
         lags.extend(l);
+        merge_causes(&mut causes, c);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
-    Ok(build_report(
-        "open",
-        rate,
-        clients,
-        samples,
-        lags,
-        errors.load(Ordering::Relaxed),
-        elapsed_s,
-    ))
+    Ok(build_report("open", rate, clients, samples, lags, causes, elapsed_s))
 }
 
 fn pcts(values: &mut [f32]) -> (f64, f64, f64) {
@@ -588,10 +625,13 @@ fn build_report(
     clients: usize,
     samples: Vec<Sample>,
     mut lags: Vec<f32>,
-    errors: u64,
+    causes: CauseCounts,
     elapsed_s: f64,
 ) -> LoadgenReport {
     let ok = samples.len() as u64;
+    let errors: u64 = causes.values().sum();
+    let errors_by_cause: Vec<(String, u64)> =
+        causes.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
     let mut lat: Vec<f32> = samples.iter().map(|s| s.lat_ms).collect();
     let mut queue: Vec<f32> = samples.iter().map(|s| s.queue_ms).collect();
     let mean_ms = if lat.is_empty() { 0.0 } else { crate::util::stats::mean(&lat) };
@@ -606,6 +646,7 @@ fn build_report(
         sent: ok + errors,
         ok,
         errors,
+        errors_by_cause,
         elapsed_s,
         throughput_rps: if elapsed_s > 0.0 { ok as f64 / elapsed_s } else { 0.0 },
         p50_ms: p50,
@@ -649,6 +690,11 @@ pub fn render_report(r: &LoadgenReport) -> String {
             r.gen_tokens_total, r.gen_tokens_per_s
         ));
     }
+    if r.errors > 0 {
+        let causes: Vec<String> =
+            r.errors_by_cause.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        out.push_str(&format!("\nerrors by cause: {}", causes.join(" ")));
+    }
     out
 }
 
@@ -665,6 +711,7 @@ mod tests {
             sent: 10,
             ok: 9,
             errors: 1,
+            errors_by_cause: vec![("reset".to_string(), 1)],
             elapsed_s: 1.5,
             throughput_rps: 6.0,
             p50_ms: 1.0,
@@ -684,9 +731,48 @@ mod tests {
         assert_eq!(j.req("offered_rps").unwrap().as_usize(), Some(500));
         assert_eq!(j.req("gen_tokens_total").unwrap().as_usize(), Some(72));
         assert!(j.req("queue_p95_ms").unwrap().as_f64().unwrap() > 0.0);
+        let by_cause = j.req("errors_by_cause").unwrap();
+        assert_eq!(by_cause.req("reset").unwrap().as_usize(), Some(1));
         assert!(render_report(&r).contains("req/s"));
         assert!(render_report(&r).contains("open@500rps"));
         assert!(render_report(&r).contains("48.0 tok/s"));
+        assert!(render_report(&r).contains("errors by cause: reset=1"));
+    }
+
+    #[test]
+    fn error_causes_merge_and_total_into_the_report() {
+        let mut a = CauseCounts::new();
+        a.insert("reset", 2);
+        a.insert("refused", 1);
+        let mut b = CauseCounts::new();
+        b.insert("reset", 1);
+        b.insert("http_503", 4);
+        merge_causes(&mut a, b);
+        let r = build_report("closed", 0.0, 1, Vec::new(), Vec::new(), a, 1.0);
+        assert_eq!(r.errors, 8);
+        assert_eq!(r.sent, 8);
+        // BTreeMap keeps causes sorted, so the report order is stable.
+        let names: Vec<&str> = r.errors_by_cause.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["http_503", "refused", "reset"]);
+        assert_eq!(r.errors_by_cause[2], ("reset".to_string(), 3));
+    }
+
+    #[test]
+    fn classify_err_buckets_io_kinds_and_message_shapes() {
+        use std::io::{Error, ErrorKind};
+        let io = |k: ErrorKind| anyhow::Error::from(Error::new(k, "boom"));
+        assert_eq!(classify_err(&io(ErrorKind::ConnectionRefused)), "refused");
+        assert_eq!(classify_err(&io(ErrorKind::ConnectionReset)), "reset");
+        assert_eq!(classify_err(&io(ErrorKind::BrokenPipe)), "reset");
+        assert_eq!(classify_err(&io(ErrorKind::UnexpectedEof)), "reset");
+        assert_eq!(classify_err(&io(ErrorKind::TimedOut)), "timeout");
+        assert_eq!(classify_err(&io(ErrorKind::PermissionDenied)), "io");
+        // Context-wrapped io errors still classify by the inner kind.
+        let wrapped = io(ErrorKind::ConnectionReset).context("reading chunk size");
+        assert_eq!(classify_err(&wrapped), "reset");
+        // A clean server-side close has no io error in the chain.
+        assert_eq!(classify_err(&anyhow::anyhow!("server closed connection")), "reset");
+        assert_eq!(classify_err(&anyhow::anyhow!("bad status line")), "protocol");
     }
 
     #[test]

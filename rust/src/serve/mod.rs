@@ -77,14 +77,21 @@
 //! * [`obs`]      — trace IDs, span taps, completed-trace ring
 //!   (`/debug/traces`).
 //! * [`loadgen`]  — closed-loop and open-loop (Poisson) load generators.
+//! * [`route`]    — `qtx route`: fault-tolerant multi-replica reverse
+//!   proxy (health-aware admission, retry/backoff, shed) behind the
+//!   same HTTP surface (see docs/ROUTING.md).
+//! * [`fault`]    — deterministic fault injection (`--fault kill-after`,
+//!   `stall`, `reset`, `slow-healthz`) for drilling the router.
 
 pub mod batcher;
 pub mod conn;
 pub mod engine;
+pub mod fault;
 pub mod loadgen;
 pub mod obs;
 pub mod poll;
 pub mod protocol;
+pub mod route;
 pub mod server;
 pub mod stats;
 
@@ -94,7 +101,9 @@ pub use batcher::{
 pub use engine::{
     Dispatch, EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
 };
+pub use fault::{FaultAction, FaultSpec, FaultState};
 pub use obs::{Obs, TraceConfig, TraceTap};
 pub use protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse, ScoreRow};
+pub use route::{Health, Router, RouterConfig};
 pub use server::{EngineInfo, Server, ServerConfig};
 pub use stats::ServeStats;

@@ -31,6 +31,11 @@ pub const POLLERR: i16 = 0x008;
 pub const POLLHUP: i16 = 0x010;
 /// Fd not open (revents only).
 pub const POLLNVAL: i16 = 0x020;
+/// Peer sent FIN (half-close) — Linux-specific, and unlike `POLLHUP` it
+/// must be *requested* in `events` to be reported. A connection parked
+/// with no read interest (e.g. a request already parsed, reply pending)
+/// only learns its client hung up if it asks for this.
+pub const POLLRDHUP: i16 = 0x2000;
 
 #[repr(C)]
 struct PollFd {

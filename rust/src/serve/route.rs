@@ -1,0 +1,1852 @@
+//! `qtx route` — a fault-tolerant reverse proxy fronting N `qtx serve`
+//! replicas behind the *same* HTTP surface (`/v1/score`, `/v1/generate`
+//! incl. streaming, `/healthz`, `/statz`, `/metricz`).
+//!
+//! The serving story so far scales one process; this subsystem makes the
+//! quantized model a *fleet* property: replicas fail, restart, and warm
+//! up while clients keep one stable address. Reference: `docs/ROUTING.md`.
+//!
+//! ```text
+//! clients ── HTTP ──> router ──┬──> replica 0 (qtx serve)
+//!            (one io thread,   ├──> replica 1
+//!             poll(2) + conn)  └──> replica 2
+//!                     ▲
+//!               probe thread: /healthz + /statz census per replica
+//! ```
+//!
+//! Design points, in the order a request meets them:
+//!
+//! * **Health**: a probe thread polls each replica's `/healthz` (liveness
+//!   + readiness) and `/statz` (slot census). Replicas walk a three-state
+//!   machine — `Up` → `Degraded` → `Ejected` — where "503 + ready:false"
+//!   (warming up) is `Degraded`, never `Ejected`; only failed probes
+//!   (connect/read errors) accumulate toward ejection. Ejected replicas
+//!   are re-probed on a slower half-open cadence and rejoin on the first
+//!   successful probe.
+//! * **Admission**: weighted least-loaded over each backend's
+//!   `slots.free` census minus the router's own outstanding count. When
+//!   every Up replica's weight is zero the fleet is saturated: the router
+//!   sheds deterministically with `503` + `Retry-After: 1` instead of
+//!   queueing unboundedly.
+//! * **Score** requests are idempotent: they carry a per-request deadline
+//!   and are retried against a *different* replica with jittered
+//!   exponential backoff (bounded by `retry_max` and the deadline).
+//! * **Generate** requests are sticky to the replica that owns the decode
+//!   slot (slot = session) and are **never silently retried** — a replica
+//!   dying mid-generation surfaces as a distinguishable
+//!   `503 {"error":"replica lost"}` (or a terminal `error` stream event
+//!   if tokens were already streaming).
+//! * The io side reuses the PR-8 event-loop primitives: one non-blocking
+//!   thread over [`crate::serve::poll`] + the sans-I/O
+//!   [`crate::serve::conn`] machine for the client side, plus a small
+//!   upstream HTTP/1.1 response parser ([`RespParser`]) that re-frames
+//!   chunked token events toward the client as they arrive.
+//!
+//! Deterministic fault drills against this layer live in
+//! [`crate::serve::fault`] (`qtx serve --fault kill-after:N`, …); the
+//! fleet-failure e2e is `rust/tests/serve_route.rs`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serve::conn::{ConnEvent, ConnState, HttpConn, ParsedRequest};
+use crate::serve::poll::{
+    drain_wakes, raise_nofile_limit, Poller, Waker, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT,
+    POLLRDHUP,
+};
+use crate::serve::protocol::{error_json, stream_error_event};
+use crate::serve::server::{
+    write_chunk, write_json_response, write_stream_end, write_stream_head, write_text_response,
+    Client,
+};
+use crate::serve::stats::{prom_histo, prom_name, LatencyHisto};
+use crate::util::json::Json;
+use crate::util::log;
+use crate::util::rng::Rng;
+
+const TOKEN_WAKE: usize = 0;
+const TOKEN_LISTEN: usize = 1;
+const TOKEN_CONN0: usize = 2;
+const READ_CHUNK: usize = 16 * 1024;
+
+// ---------------------------------------------------------------------------
+// Replica health state machine (pure; unit-tested without sockets)
+// ---------------------------------------------------------------------------
+
+/// Three-state replica health. `Degraded` covers both "warming up"
+/// (probed alive but `ready: false`) and "recently flaky"; only repeated
+/// probe *failures* eject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Probed ready: in the admission rotation.
+    Up,
+    /// Alive but not admitting new work by preference (warming up, or
+    /// under `eject_after` consecutive probe failures). Used as a
+    /// fallback pool when no Up replica is eligible.
+    Degraded,
+    /// `eject_after` consecutive probe failures: out of rotation, probed
+    /// on the slower half-open cadence until a probe succeeds.
+    Ejected,
+}
+
+impl Health {
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Up => "up",
+            Health::Degraded => "degraded",
+            Health::Ejected => "ejected",
+        }
+    }
+}
+
+/// Slot census scraped from a replica's `/statz` (`slots.free/total`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaCensus {
+    pub slots_free: usize,
+    pub slots_total: usize,
+}
+
+/// Model limits scraped from a replica's `/healthz` — re-served by the
+/// router's own `/healthz` so `qtx loadgen` can front a fleet unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaLimits {
+    pub seq_len: usize,
+    pub max_batch: usize,
+    pub vocab: usize,
+    pub causal: bool,
+    pub decode: bool,
+}
+
+/// What one probe pass learned about a replica.
+#[derive(Debug)]
+pub enum ProbeOutcome {
+    /// `/healthz` 200 + `ready: true`; census from `/statz`.
+    Ready { census: ReplicaCensus, limits: ReplicaLimits },
+    /// Alive but `ready: false` (e.g. engines still warming): Degraded,
+    /// never Ejected — restarting a fleet must not eject it.
+    NotReady { limits: Option<ReplicaLimits> },
+    /// Connect/read/parse failure: counts toward ejection.
+    Failed,
+}
+
+/// One backend replica, as the router sees it. The probe thread writes
+/// health + census; the io thread reads them and tracks `outstanding`.
+#[derive(Debug)]
+pub struct Replica {
+    pub addr: String,
+    pub sock: SocketAddr,
+    pub health: Health,
+    pub consecutive_failures: u32,
+    pub census: ReplicaCensus,
+    /// Requests this router currently has in flight against the replica
+    /// (the census only refreshes once per probe interval, so live
+    /// admission subtracts this to avoid dogpiling one backend).
+    pub outstanding: usize,
+    pub probes_ok: u64,
+    pub probes_failed: u64,
+    pub limits: Option<ReplicaLimits>,
+}
+
+impl Replica {
+    pub fn new(addr: String, sock: SocketAddr) -> Replica {
+        Replica {
+            addr,
+            sock,
+            // Unknown until first probed: eligible only as a fallback.
+            health: Health::Degraded,
+            consecutive_failures: 0,
+            census: ReplicaCensus::default(),
+            outstanding: 0,
+            probes_ok: 0,
+            probes_failed: 0,
+            limits: None,
+        }
+    }
+
+    /// Fold one probe outcome into the state machine.
+    pub fn on_probe(&mut self, outcome: ProbeOutcome, eject_after: u32) {
+        match outcome {
+            ProbeOutcome::Ready { census, limits } => {
+                self.health = Health::Up;
+                self.consecutive_failures = 0;
+                self.census = census;
+                self.limits = Some(limits);
+                self.probes_ok += 1;
+            }
+            ProbeOutcome::NotReady { limits } => {
+                self.health = Health::Degraded;
+                self.consecutive_failures = 0;
+                self.census = ReplicaCensus::default();
+                if let Some(l) = limits {
+                    self.limits = Some(l);
+                }
+                self.probes_ok += 1;
+            }
+            ProbeOutcome::Failed => {
+                self.probes_failed += 1;
+                self.consecutive_failures += 1;
+                self.census = ReplicaCensus::default();
+                self.health = if self.consecutive_failures >= eject_after {
+                    Health::Ejected
+                } else {
+                    Health::Degraded
+                };
+            }
+        }
+    }
+}
+
+/// Why admission could not place a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Every replica is Ejected.
+    NoReplica,
+    /// Up replicas exist but all are at capacity: deterministic shed.
+    FleetFull,
+}
+
+fn admit_weight(r: &Replica) -> usize {
+    r.census.slots_free.saturating_sub(r.outstanding)
+}
+
+/// Weighted least-loaded admission. Prefers Up replicas not in `tried`
+/// (the retry path excludes replicas that already failed this request),
+/// falls back to Degraded ones, and re-admits tried replicas only when
+/// nothing else is alive. Degraded picks are allowed at weight zero —
+/// their census is unknown and the backend's own 503 is authoritative —
+/// but an all-Up pool at weight zero is a saturated fleet.
+pub fn pick_replica(replicas: &[Replica], tried: &[usize]) -> Result<usize, AdmitError> {
+    let alive: Vec<usize> =
+        (0..replicas.len()).filter(|&i| replicas[i].health != Health::Ejected).collect();
+    if alive.is_empty() {
+        return Err(AdmitError::NoReplica);
+    }
+    let fresh: Vec<usize> = alive.iter().copied().filter(|i| !tried.contains(i)).collect();
+    let pool = if fresh.is_empty() { alive } else { fresh };
+    let ups: Vec<usize> =
+        pool.iter().copied().filter(|&i| replicas[i].health == Health::Up).collect();
+    let (pool, all_up) = if ups.is_empty() { (pool, false) } else { (ups, true) };
+    let mut best = pool[0];
+    let mut best_w = admit_weight(&replicas[best]);
+    for &i in &pool[1..] {
+        let w = admit_weight(&replicas[i]);
+        if w > best_w {
+            best = i;
+            best_w = w;
+        }
+    }
+    if all_up && best_w == 0 {
+        return Err(AdmitError::FleetFull);
+    }
+    Ok(best)
+}
+
+// ---------------------------------------------------------------------------
+// Configuration + handle
+// ---------------------------------------------------------------------------
+
+/// `qtx route` knobs (CLI flags map 1:1; see `docs/ROUTING.md`).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub host: String,
+    pub port: u16,
+    /// Backend `host:port` addresses, one per replica.
+    pub backends: Vec<String>,
+    pub max_connections: usize,
+    /// Probe cadence for non-ejected replicas.
+    pub probe_interval: Duration,
+    /// Per-probe connect + read budget.
+    pub probe_timeout: Duration,
+    /// Consecutive probe failures before ejection.
+    pub eject_after: u32,
+    /// Half-open re-probe cadence for ejected replicas.
+    pub halfopen_interval: Duration,
+    /// Total attempts per score request (1 = no retry).
+    pub retry_max: u32,
+    /// Base backoff before a retry; doubled per attempt, jittered ±50%.
+    pub retry_backoff: Duration,
+    /// Backend dial budget (loopback dials resolve in microseconds; a
+    /// refused connect returns immediately).
+    pub connect_timeout: Duration,
+    /// Client-side idle/read timeout (mirrors `qtx serve`).
+    pub read_timeout: Duration,
+    /// End-to-end deadline per proxied request, retries included.
+    pub request_timeout: Duration,
+    /// Seed for retry jitter.
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            backends: Vec::new(),
+            max_connections: 256,
+            probe_interval: Duration::from_millis(150),
+            probe_timeout: Duration::from_millis(500),
+            eject_after: 3,
+            halfopen_interval: Duration::from_millis(400),
+            retry_max: 3,
+            retry_backoff: Duration::from_millis(25),
+            connect_timeout: Duration::from_millis(250),
+            read_timeout: Duration::from_secs(60),
+            request_timeout: Duration::from_secs(30),
+            seed: 0x7013,
+        }
+    }
+}
+
+/// Running router: one io thread + one probe thread, stopped via
+/// [`Router::stop`].
+pub struct Router {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    replicas: Arc<Mutex<Vec<Replica>>>,
+    io: Option<thread::JoinHandle<()>>,
+    probe: Option<thread::JoinHandle<()>>,
+}
+
+impl Router {
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        if cfg.backends.is_empty() {
+            bail!("qtx route: need at least one --backends address");
+        }
+        let mut reps = Vec::new();
+        for b in &cfg.backends {
+            let sock: SocketAddr =
+                b.parse().with_context(|| format!("bad backend address {b:?} (want host:port)"))?;
+            reps.push(Replica::new(b.clone(), sock));
+        }
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let addr = listener.local_addr()?;
+        raise_nofile_limit((cfg.max_connections as u64 + reps.len() as u64) * 2 + 64);
+        let (waker, wake_rx) = Waker::pair().context("waker pair")?;
+        let waker = Arc::new(waker);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let replicas = Arc::new(Mutex::new(reps));
+
+        let probe = {
+            let (replicas, shutdown, cfg) = (replicas.clone(), shutdown.clone(), cfg.clone());
+            thread::Builder::new()
+                .name("qtx-probe".into())
+                .spawn(move || probe_loop(&cfg, &replicas, &shutdown))
+                .context("spawning probe thread")?
+        };
+        let io = {
+            let (replicas, shutdown) = (replicas.clone(), shutdown.clone());
+            let cfg = cfg.clone();
+            thread::Builder::new()
+                .name("qtx-route".into())
+                .spawn(move || {
+                    let mut lp = RouterLoop {
+                        rng: Rng::new(cfg.seed).fork("route"),
+                        cfg,
+                        listener,
+                        wake_rx,
+                        shutdown,
+                        replicas,
+                        started: Instant::now(),
+                        stats: RouteStats::default(),
+                        slots: Vec::new(),
+                        poller: Poller::new(),
+                    };
+                    lp.run();
+                })
+                .context("spawning route io thread")?
+        };
+        log::info(&format!(
+            "qtx route listening on {addr} fronting {} replica(s)",
+            cfg.backends.len()
+        ));
+        Ok(Router { addr, shutdown, waker, replicas, io: Some(io), probe: Some(probe) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until at least one replica probes Up (or the timeout lapses).
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            let any_up = self
+                .replicas
+                .lock()
+                .expect("replica table poisoned")
+                .iter()
+                .any(|r| r.health == Health::Up);
+            if any_up {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    /// Park the caller until the router is stopped (the CLI's foreground
+    /// mode: the io thread only exits on shutdown).
+    pub fn join(mut self) {
+        if let Some(io) = self.io.take() {
+            io.join().ok();
+        }
+        if let Some(p) = self.probe.take() {
+            p.join().ok();
+        }
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(io) = self.io.take() {
+            io.join().ok();
+        }
+        if let Some(p) = self.probe.take() {
+            p.join().ok();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(io) = self.io.take() {
+            io.join().ok();
+        }
+        if let Some(p) = self.probe.take() {
+            p.join().ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe thread
+// ---------------------------------------------------------------------------
+
+fn probe_loop(cfg: &RouterConfig, replicas: &Mutex<Vec<Replica>>, shutdown: &AtomicBool) {
+    let n = replicas.lock().expect("replica table poisoned").len();
+    // Probe everything immediately at start, then per-health cadence.
+    let mut next: Vec<Instant> = vec![Instant::now(); n];
+    while !shutdown.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        for i in 0..n {
+            if now < next[i] {
+                continue;
+            }
+            let addr = {
+                let reps = replicas.lock().expect("replica table poisoned");
+                reps[i].addr.clone()
+            };
+            // Blocking with cfg.probe_timeout on connect and read — the
+            // lock is NOT held across the probe.
+            let outcome = probe_replica(&addr, cfg.probe_timeout);
+            let mut reps = replicas.lock().expect("replica table poisoned");
+            let before = reps[i].health;
+            reps[i].on_probe(outcome, cfg.eject_after);
+            let after = reps[i].health;
+            if before != after {
+                log::info(&format!(
+                    "replica {addr}: {} -> {}",
+                    before.name(),
+                    after.name()
+                ));
+            }
+            next[i] = now
+                + if after == Health::Ejected { cfg.halfopen_interval } else { cfg.probe_interval };
+        }
+        thread::sleep(Duration::from_millis(15));
+    }
+}
+
+fn parse_limits(doc: &Json) -> Option<ReplicaLimits> {
+    Some(ReplicaLimits {
+        seq_len: doc.get("seq_len")?.as_usize()?,
+        max_batch: doc.get("max_batch")?.as_usize()?,
+        vocab: doc.get("vocab")?.as_usize()?,
+        causal: doc.get("causal")?.as_bool()?,
+        decode: doc.get("decode")?.as_bool()?,
+    })
+}
+
+/// One blocking probe: `/healthz` decides liveness + readiness,
+/// `/statz` refreshes the slot census for admission weighting.
+fn probe_replica(addr: &str, timeout: Duration) -> ProbeOutcome {
+    let mut c = match Client::connect(addr, timeout) {
+        Ok(c) => c,
+        Err(_) => return ProbeOutcome::Failed,
+    };
+    let (status, body) = match c.request("GET", "/healthz", None) {
+        Ok(r) => r,
+        Err(_) => return ProbeOutcome::Failed,
+    };
+    let doc = match Json::parse(&body) {
+        Ok(d) => d,
+        Err(_) => return ProbeOutcome::Failed,
+    };
+    let limits = parse_limits(&doc);
+    let ready = doc.get("ready").and_then(Json::as_bool).unwrap_or(status == 200);
+    if status == 503 || !ready {
+        // Warming up (`"status": "starting"`) or startup-failed: alive
+        // either way, so Degraded — never a step toward ejection.
+        return ProbeOutcome::NotReady { limits };
+    }
+    if status != 200 {
+        return ProbeOutcome::Failed;
+    }
+    let limits = limits.unwrap_or_default();
+    // Census: continuous-mode backends publish a top-level `slots`
+    // object; fixed-mode ones don't, so fall back to max_batch (the
+    // backend's own queue is then the authority).
+    let census = match c.request("GET", "/statz", None).ok().and_then(|(s, b)| {
+        if s != 200 {
+            return None;
+        }
+        let d = Json::parse(&b).ok()?;
+        let slots = d.get("slots")?;
+        Some(ReplicaCensus {
+            slots_free: slots.get("free")?.as_usize()?,
+            slots_total: slots.get("total")?.as_usize()?,
+        })
+    }) {
+        Some(c) => c,
+        None => ReplicaCensus { slots_free: limits.max_batch, slots_total: limits.max_batch },
+    };
+    ProbeOutcome::Ready { census, limits }
+}
+
+// ---------------------------------------------------------------------------
+// io loop: one poll(2) thread over a slab of client + upstream slots
+// ---------------------------------------------------------------------------
+
+/// Router-side counters + latency, owned by the io thread (single
+/// writer; `/statz` and `/metricz` are served from that same thread).
+#[derive(Default)]
+struct RouteStats {
+    requests_total: u64,
+    ok: u64,
+    retries: u64,
+    shed: u64,
+    replica_lost: u64,
+    bad_gateway: u64,
+    timeouts: u64,
+    cancelled: u64,
+    latency: LatencyHisto,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JobClass {
+    Score,
+    Generate,
+}
+
+/// Non-chunked upstream response head, held until the body completes so
+/// relay-vs-retry can be decided from the status code.
+struct RespHead {
+    status: u16,
+    reason: String,
+    content_type: String,
+}
+
+/// One proxied request's lifecycle, owned by its client connection.
+struct ProxyJob {
+    kind: JobClass,
+    path: &'static str,
+    body: Vec<u8>,
+    keep_alive: bool,
+    deadline: Instant,
+    t0: Instant,
+    attempts: u32,
+    retry_at: Option<Instant>,
+    tried: Vec<usize>,
+    /// A stream head was already queued toward the client: past the
+    /// point of no retry.
+    streaming: bool,
+    head: Option<RespHead>,
+    /// Last backend 503 body; relayed (with Retry-After) if retries dry up.
+    last_503_body: Option<String>,
+}
+
+struct ClientConn {
+    stream: TcpStream,
+    machine: HttpConn,
+    out: Vec<u8>,
+    out_pos: usize,
+    close_after_flush: bool,
+    job: Option<ProxyJob>,
+    upstream: Option<usize>,
+}
+
+impl ClientConn {
+    fn new(stream: TcpStream, now: Instant, read_timeout: Duration) -> ClientConn {
+        ClientConn {
+            stream,
+            machine: HttpConn::new(now, read_timeout),
+            out: Vec::new(),
+            out_pos: 0,
+            close_after_flush: false,
+            job: None,
+            upstream: None,
+        }
+    }
+}
+
+struct UpstreamConn {
+    stream: TcpStream,
+    client: usize,
+    replica: usize,
+    out: Vec<u8>,
+    out_pos: usize,
+    resp: RespParser,
+}
+
+enum Slot {
+    Empty,
+    Client(ClientConn),
+    Upstream(UpstreamConn),
+}
+
+fn wants_read(c: &ClientConn) -> bool {
+    matches!(
+        c.machine.state(),
+        ConnState::Idle | ConnState::ReadingHead | ConnState::ReadingBody
+    )
+}
+
+fn queue_json(c: &mut ClientConn, status: u16, reason: &str, body: &Json, keep_alive: bool) {
+    c.machine.replying();
+    let _ = write_json_response(&mut c.out, status, reason, body, keep_alive);
+}
+
+/// 503 with `Retry-After` — the deterministic shed surface (the
+/// router's own admission verdict, or a relayed backend 503).
+fn queue_shed(c: &mut ClientConn, body: &str, keep_alive: bool) {
+    c.machine.replying();
+    let _ = write!(
+        c.out,
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\n\
+         Retry-After: 1\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+        body
+    );
+}
+
+fn flush_buf(stream: &mut TcpStream, out: &mut Vec<u8>, pos: &mut usize) -> std::io::Result<()> {
+    while *pos < out.len() {
+        match stream.write(&out[*pos..]) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => *pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if *pos == out.len() {
+        out.clear();
+        *pos = 0;
+    }
+    Ok(())
+}
+
+struct RouterLoop {
+    cfg: RouterConfig,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    shutdown: Arc<AtomicBool>,
+    replicas: Arc<Mutex<Vec<Replica>>>,
+    started: Instant,
+    stats: RouteStats,
+    slots: Vec<Slot>,
+    poller: Poller,
+    rng: Rng,
+}
+
+impl RouterLoop {
+    fn run(&mut self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            let reg_now = Instant::now();
+            self.poller.clear();
+            self.poller.register(self.wake_rx.as_raw_fd(), TOKEN_WAKE, POLLIN);
+            self.poller.register(self.listener.as_raw_fd(), TOKEN_LISTEN, POLLIN);
+            let mut next_deadline: Option<Instant> = None;
+            for (i, slot) in self.slots.iter().enumerate() {
+                match slot {
+                    Slot::Empty => {}
+                    Slot::Client(c) => {
+                        let mut interest = 0i16;
+                        if c.out_pos < c.out.len() {
+                            interest |= POLLOUT;
+                        }
+                        if wants_read(c) {
+                            interest |= POLLIN;
+                        }
+                        if c.job.is_some() {
+                            // A proxied request has no read interest; ask
+                            // for peer-FIN so a client hangup cancels the
+                            // upstream leg instead of going unseen.
+                            interest |= POLLRDHUP;
+                        }
+                        if interest != 0 {
+                            self.poller.register(c.stream.as_raw_fd(), TOKEN_CONN0 + i, interest);
+                        }
+                        let deadlines = [
+                            c.machine.next_deadline(),
+                            c.job.as_ref().map(|j| j.deadline),
+                            c.job.as_ref().and_then(|j| j.retry_at),
+                        ];
+                        for d in deadlines.into_iter().flatten() {
+                            next_deadline = Some(match next_deadline {
+                                Some(t) => t.min(d),
+                                None => d,
+                            });
+                        }
+                    }
+                    Slot::Upstream(u) => {
+                        let mut interest = POLLIN;
+                        if u.out_pos < u.out.len() {
+                            interest |= POLLOUT;
+                        }
+                        self.poller.register(u.stream.as_raw_fd(), TOKEN_CONN0 + i, interest);
+                    }
+                }
+            }
+            let timeout = match next_deadline {
+                Some(d) => d.saturating_duration_since(reg_now).min(Duration::from_secs(1)),
+                None => Duration::from_secs(1),
+            };
+            let ready: Vec<(usize, i16)> = match self.poller.poll(Some(timeout)) {
+                Ok(r) => r.to_vec(),
+                Err(_) => continue,
+            };
+            let now = Instant::now();
+            for (token, revents) in ready {
+                match token {
+                    TOKEN_WAKE => drain_wakes(&self.wake_rx),
+                    TOKEN_LISTEN => self.accept_ready(now),
+                    t => {
+                        let idx = t - TOKEN_CONN0;
+                        match self.slots.get(idx) {
+                            Some(Slot::Client(_)) => self.client_ready(idx, revents, now),
+                            Some(Slot::Upstream(_)) => self.upstream_ready(idx, revents, now),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            self.sweep(Instant::now());
+        }
+    }
+
+    fn open_clients(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Client(_))).count()
+    }
+
+    fn open_upstreams(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Upstream(_))).count()
+    }
+
+    fn free_slot(&mut self) -> usize {
+        for (i, s) in self.slots.iter().enumerate() {
+            if matches!(s, Slot::Empty) {
+                return i;
+            }
+        }
+        self.slots.push(Slot::Empty);
+        self.slots.len() - 1
+    }
+
+    fn accept_ready(&mut self, now: Instant) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    let mut c = ClientConn::new(stream, now, self.cfg.read_timeout);
+                    if self.open_clients() >= self.cfg.max_connections {
+                        // Over the connection cap: shed without parsing
+                        // (mirrors qtx serve's accept-time 503).
+                        self.stats.shed += 1;
+                        let body = error_json("router at connection capacity").to_string();
+                        queue_shed(&mut c, &body, false);
+                        c.close_after_flush = true;
+                        c.machine.close();
+                    }
+                    let idx = self.free_slot();
+                    self.slots[idx] = Slot::Client(c);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn drop_client(&mut self, ci: usize, _now: Instant) {
+        let up = match std::mem::replace(&mut self.slots[ci], Slot::Empty) {
+            Slot::Client(c) => c.upstream,
+            other => {
+                self.slots[ci] = other;
+                None
+            }
+        };
+        if let Some(ui) = up {
+            self.close_upstream(ui);
+        }
+    }
+
+    /// Retire an upstream leg: free the slot, release the replica's
+    /// outstanding count (exactly once), unlink the owning client.
+    fn close_upstream(&mut self, ui: usize) {
+        if let Slot::Upstream(u) = std::mem::replace(&mut self.slots[ui], Slot::Empty) {
+            let mut reps = self.replicas.lock().expect("replica table poisoned");
+            if let Some(rep) = reps.get_mut(u.replica) {
+                rep.outstanding = rep.outstanding.saturating_sub(1);
+            }
+            drop(reps);
+            if let Some(Slot::Client(c)) = self.slots.get_mut(u.client) {
+                if c.upstream == Some(ui) {
+                    c.upstream = None;
+                }
+            }
+        }
+    }
+
+    fn client_ready(&mut self, ci: usize, revents: i16, now: Instant) {
+        if revents & POLLNVAL != 0 {
+            self.drop_client(ci, now);
+            return;
+        }
+        let in_flight = matches!(&self.slots[ci], Slot::Client(c) if c.job.is_some());
+        if in_flight && revents & (POLLRDHUP | POLLHUP | POLLERR) != 0 {
+            // The client vanished while its request is on a backend:
+            // cancel the upstream leg instead of relaying to nobody.
+            self.stats.cancelled += 1;
+            self.drop_client(ci, now);
+            return;
+        }
+        if revents & POLLIN != 0 {
+            let mut events = Vec::new();
+            {
+                let Slot::Client(c) = &mut self.slots[ci] else { return };
+                let mut buf = [0u8; READ_CHUNK];
+                loop {
+                    match c.stream.read(&mut buf) {
+                        Ok(0) => {
+                            if let Some(ev) = c.machine.on_eof(now) {
+                                events.push(ev);
+                            }
+                            break;
+                        }
+                        Ok(n) => {
+                            if let Some(ev) = c.machine.on_bytes(&buf[..n], now) {
+                                events.push(ev);
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            c.machine.close();
+                            break;
+                        }
+                    }
+                }
+            }
+            for ev in events {
+                if !self.handle_client_event(ci, ev, now) {
+                    self.drop_client(ci, now);
+                    return;
+                }
+            }
+        }
+        if revents & POLLOUT != 0 {
+            let err = {
+                let Slot::Client(c) = &mut self.slots[ci] else { return };
+                flush_buf(&mut c.stream, &mut c.out, &mut c.out_pos).is_err()
+            };
+            if err {
+                self.drop_client(ci, now);
+            }
+        }
+    }
+
+    fn handle_client_event(&mut self, ci: usize, ev: ConnEvent, now: Instant) -> bool {
+        match ev {
+            ConnEvent::CloseSilent => false,
+            ConnEvent::Error { status, reason, message } => {
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_json(c, status, reason, &error_json(&message), false);
+                    c.close_after_flush = true;
+                }
+                true
+            }
+            ConnEvent::Request(req) => self.route_request(ci, req, now),
+        }
+    }
+
+    fn route_request(&mut self, ci: usize, req: ParsedRequest, now: Instant) -> bool {
+        let keep_alive = req.keep_alive;
+        if req.method == "POST" && req.path() == "/v1/score" {
+            return self.start_proxy(ci, JobClass::Score, "/v1/score", req, now);
+        }
+        if req.method == "POST" && req.path() == "/v1/generate" {
+            return self.start_proxy(ci, JobClass::Generate, "/v1/generate", req, now);
+        }
+        match (req.method.as_str(), req.path()) {
+            ("GET", "/healthz") => {
+                let (ready, doc) = self.healthz_doc();
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    if ready {
+                        queue_json(c, 200, "OK", &doc, keep_alive);
+                    } else {
+                        queue_json(c, 503, "Service Unavailable", &doc, keep_alive);
+                    }
+                }
+            }
+            ("GET", "/statz") => {
+                let doc = self.statz_doc();
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_json(c, 200, "OK", &doc, keep_alive);
+                }
+            }
+            ("GET", "/metricz") => {
+                let text = self.prometheus();
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    c.machine.replying();
+                    let _ = write_text_response(
+                        &mut c.out,
+                        200,
+                        "OK",
+                        "text/plain; version=0.0.4",
+                        &text,
+                        keep_alive,
+                    );
+                }
+            }
+            (_, "/v1/score" | "/v1/generate" | "/healthz" | "/statz" | "/metricz") => {
+                let body = error_json("method not allowed");
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_json(c, 405, "Method Not Allowed", &body, keep_alive);
+                }
+            }
+            _ => {
+                let body = error_json("no such endpoint");
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_json(c, 404, "Not Found", &body, keep_alive);
+                }
+            }
+        }
+        self.finish_response(ci, keep_alive, now)
+    }
+
+    fn start_proxy(
+        &mut self,
+        ci: usize,
+        kind: JobClass,
+        path: &'static str,
+        req: ParsedRequest,
+        now: Instant,
+    ) -> bool {
+        self.stats.requests_total += 1;
+        {
+            let Slot::Client(c) = &mut self.slots[ci] else { return false };
+            c.job = Some(ProxyJob {
+                kind,
+                path,
+                body: req.body,
+                keep_alive: req.keep_alive,
+                deadline: now + self.cfg.request_timeout,
+                t0: now,
+                attempts: 0,
+                retry_at: None,
+                tried: Vec::new(),
+                streaming: false,
+                head: None,
+                last_503_body: None,
+            });
+        }
+        self.start_attempt(ci, now)
+    }
+
+    /// Pick a replica, dial it, and launch the upstream leg. Admission
+    /// failures shed; dial failures go through the retry machinery.
+    fn start_attempt(&mut self, ci: usize, now: Instant) -> bool {
+        let tried = {
+            let Slot::Client(c) = &self.slots[ci] else { return false };
+            match &c.job {
+                Some(j) => j.tried.clone(),
+                None => return true,
+            }
+        };
+        let pick = {
+            let reps = self.replicas.lock().expect("replica table poisoned");
+            pick_replica(&reps, &tried)
+        };
+        let r = match pick {
+            Err(AdmitError::NoReplica) => {
+                return self.shed_request(ci, "no replicas available", now)
+            }
+            Err(AdmitError::FleetFull) => {
+                return self.shed_request(ci, "fleet full, retry later", now)
+            }
+            Ok(r) => r,
+        };
+        let sock = self.replicas.lock().expect("replica table poisoned")[r].sock;
+        let wire = {
+            let Slot::Client(c) = &mut self.slots[ci] else { return false };
+            let Some(job) = &mut c.job else { return true };
+            job.attempts += 1;
+            job.tried.push(r);
+            let mut out = Vec::with_capacity(job.body.len() + 128);
+            let _ = write!(
+                out,
+                "POST {} HTTP/1.1\r\nHost: qtx\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n",
+                job.path,
+                job.body.len()
+            );
+            out.extend_from_slice(&job.body);
+            out
+        };
+        // Blocking dial, bounded by connect_timeout: loopback resolves in
+        // microseconds and a refused connect (killed replica) is instant.
+        match TcpStream::connect_timeout(&sock, self.cfg.connect_timeout) {
+            Err(e) => self.attempt_failed(ci, now, None, &format!("connect {sock}: {e}")),
+            Ok(stream) => {
+                stream.set_nonblocking(true).ok();
+                stream.set_nodelay(true).ok();
+                {
+                    let mut reps = self.replicas.lock().expect("replica table poisoned");
+                    if let Some(rep) = reps.get_mut(r) {
+                        rep.outstanding += 1;
+                    }
+                }
+                let u = UpstreamConn {
+                    stream,
+                    client: ci,
+                    replica: r,
+                    out: wire,
+                    out_pos: 0,
+                    resp: RespParser::new(),
+                };
+                let ui = self.free_slot();
+                self.slots[ui] = Slot::Upstream(u);
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    c.upstream = Some(ui);
+                }
+                true
+            }
+        }
+    }
+
+    /// One attempt died (dial error, transport error, or backend 503).
+    /// Scores retry on a different replica with jittered exponential
+    /// backoff while budget + deadline allow; generates never do.
+    fn attempt_failed(
+        &mut self,
+        ci: usize,
+        now: Instant,
+        relay_503: Option<String>,
+        why: &str,
+    ) -> bool {
+        let (kind, keep_alive, streaming, attempts, deadline) = {
+            let Slot::Client(c) = &mut self.slots[ci] else { return false };
+            let Some(job) = &mut c.job else { return true };
+            if let Some(b) = relay_503 {
+                job.last_503_body = Some(b);
+            }
+            (job.kind, job.keep_alive, job.streaming, job.attempts, job.deadline)
+        };
+        if kind == JobClass::Score && !streaming && attempts < self.cfg.retry_max {
+            let shift = attempts.saturating_sub(1).min(8);
+            let exp = self.cfg.retry_backoff.mul_f64(f64::from(1u32 << shift));
+            let backoff = exp.mul_f64(0.5 + f64::from(self.rng.f32()));
+            if now + backoff < deadline {
+                self.stats.retries += 1;
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    if let Some(job) = &mut c.job {
+                        job.retry_at = Some(now + backoff);
+                    }
+                }
+                return true;
+            }
+        }
+        match kind {
+            JobClass::Generate => {
+                // Sticky by design: the decode session lived on the dead
+                // replica, so surface a *distinguishable* failure.
+                self.stats.replica_lost += 1;
+                if streaming {
+                    if let Slot::Client(c) = &mut self.slots[ci] {
+                        let ev = stream_error_event("replica lost").to_string();
+                        let _ = write_chunk(&mut c.out, &ev);
+                        let _ = write_stream_end(&mut c.out);
+                    }
+                    return self.finish_response(ci, false, now);
+                }
+                let body = error_json("replica lost");
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_json(c, 503, "Service Unavailable", &body, keep_alive);
+                }
+                self.finish_response(ci, keep_alive, now)
+            }
+            JobClass::Score => {
+                let relay = {
+                    let Slot::Client(c) = &mut self.slots[ci] else { return false };
+                    c.job.as_mut().and_then(|j| j.last_503_body.take())
+                };
+                if let Some(body) = relay {
+                    // Fleet pushback, not router failure: relay the
+                    // backend's own 503 as a shed.
+                    self.stats.shed += 1;
+                    if let Slot::Client(c) = &mut self.slots[ci] {
+                        queue_shed(c, &body, keep_alive);
+                    }
+                } else {
+                    self.stats.bad_gateway += 1;
+                    let body = error_json(&format!("upstream failed: {why}"));
+                    if let Slot::Client(c) = &mut self.slots[ci] {
+                        queue_json(c, 502, "Bad Gateway", &body, keep_alive);
+                    }
+                }
+                self.finish_response(ci, keep_alive, now)
+            }
+        }
+    }
+
+    fn shed_request(&mut self, ci: usize, msg: &str, now: Instant) -> bool {
+        self.stats.shed += 1;
+        let keep_alive = {
+            let Slot::Client(c) = &self.slots[ci] else { return false };
+            c.job.as_ref().map(|j| j.keep_alive).unwrap_or(false)
+        };
+        let body = error_json(msg).to_string();
+        if let Slot::Client(c) = &mut self.slots[ci] {
+            queue_shed(c, &body, keep_alive);
+        }
+        self.finish_response(ci, keep_alive, now)
+    }
+
+    /// The end-to-end deadline lapsed (retries included): 504, or a
+    /// terminal stream error if tokens were already flowing.
+    fn expire_job(&mut self, ci: usize, now: Instant) -> bool {
+        self.stats.timeouts += 1;
+        let (keep_alive, streaming, up) = {
+            let Slot::Client(c) = &mut self.slots[ci] else { return false };
+            let Some(job) = &c.job else { return true };
+            (job.keep_alive, job.streaming, c.upstream)
+        };
+        if let Some(ui) = up {
+            self.close_upstream(ui);
+        }
+        if streaming {
+            if let Slot::Client(c) = &mut self.slots[ci] {
+                let ev = stream_error_event("deadline exceeded").to_string();
+                let _ = write_chunk(&mut c.out, &ev);
+                let _ = write_stream_end(&mut c.out);
+            }
+            return self.finish_response(ci, false, now);
+        }
+        let body = error_json("deadline exceeded");
+        if let Slot::Client(c) = &mut self.slots[ci] {
+            queue_json(c, 504, "Gateway Timeout", &body, keep_alive);
+        }
+        self.finish_response(ci, keep_alive, now)
+    }
+
+    fn upstream_ready(&mut self, ui: usize, revents: i16, now: Instant) {
+        let mut events: Vec<UpEvent> = Vec::new();
+        let mut failed: Option<String> = None;
+        let (ci, done) = {
+            let Slot::Upstream(u) = &mut self.slots[ui] else { return };
+            let ci = u.client;
+            if revents & POLLNVAL != 0 {
+                failed = Some("upstream fd invalid".into());
+            }
+            if failed.is_none() && revents & POLLOUT != 0 {
+                if let Err(e) = flush_buf(&mut u.stream, &mut u.out, &mut u.out_pos) {
+                    failed = Some(format!("write: {e}"));
+                }
+            }
+            if failed.is_none() && revents & (POLLIN | POLLHUP | POLLERR) != 0 {
+                let mut buf = [0u8; READ_CHUNK];
+                loop {
+                    match u.stream.read(&mut buf) {
+                        Ok(0) => {
+                            if let Err(e) = u.resp.on_eof(&mut events) {
+                                failed = Some(e);
+                            }
+                            break;
+                        }
+                        Ok(n) => {
+                            if let Err(e) = u.resp.feed(&buf[..n], &mut events) {
+                                failed = Some(e);
+                                break;
+                            }
+                            if u.resp.done {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            failed = Some(format!("read: {e}"));
+                            break;
+                        }
+                    }
+                }
+            }
+            (ci, u.resp.done)
+        };
+        if failed.is_some() || done {
+            self.close_upstream(ui);
+        }
+        self.apply_upstream(ci, events, failed, now);
+    }
+
+    /// Fold upstream parse events into the owning client connection.
+    fn apply_upstream(
+        &mut self,
+        ci: usize,
+        events: Vec<UpEvent>,
+        failed: Option<String>,
+        now: Instant,
+    ) {
+        for ev in events {
+            if !matches!(self.slots.get(ci), Some(Slot::Client(_))) {
+                return;
+            }
+            match ev {
+                UpEvent::Head { status, reason, content_type, chunked } => {
+                    let Slot::Client(c) = &mut self.slots[ci] else { return };
+                    let Some(job) = &mut c.job else { continue };
+                    if chunked {
+                        // Streaming generate: open our own chunked
+                        // response and relay events as they land.
+                        job.streaming = true;
+                        c.machine.streaming();
+                        let _ = write_stream_head(&mut c.out, job.keep_alive);
+                    } else {
+                        job.head = Some(RespHead { status, reason, content_type });
+                    }
+                }
+                UpEvent::Chunk(payload) => {
+                    let Slot::Client(c) = &mut self.slots[ci] else { return };
+                    if c.job.is_some() {
+                        let _ = write_chunk(&mut c.out, &String::from_utf8_lossy(&payload));
+                    }
+                }
+                UpEvent::Done(body) => self.upstream_done(ci, body, now),
+            }
+        }
+        if let Some(why) = failed {
+            self.upstream_failed(ci, &why, now);
+        }
+    }
+
+    /// A complete upstream response: relay, retry, or shed by status.
+    fn upstream_done(&mut self, ci: usize, body: Vec<u8>, now: Instant) {
+        let (kind, keep_alive, streaming, t0, head) = {
+            let Some(Slot::Client(c)) = self.slots.get_mut(ci) else { return };
+            let Some(job) = &mut c.job else { return };
+            (job.kind, job.keep_alive, job.streaming, job.t0, job.head.take())
+        };
+        if streaming {
+            if let Slot::Client(c) = &mut self.slots[ci] {
+                let _ = write_stream_end(&mut c.out);
+            }
+            self.stats.ok += 1;
+            self.stats.latency.record(t0.elapsed());
+            if !self.finish_response(ci, keep_alive, now) {
+                self.drop_client(ci, now);
+            }
+            return;
+        }
+        let head = head.unwrap_or(RespHead {
+            status: 502,
+            reason: "Bad Gateway".into(),
+            content_type: "application/json".into(),
+        });
+        let body_s = String::from_utf8_lossy(&body).into_owned();
+        let ok = if head.status == 503 {
+            if kind == JobClass::Score {
+                // Backend pushback on an idempotent request: retryable.
+                self.attempt_failed(ci, now, Some(body_s), "replica answered 503")
+            } else {
+                self.stats.shed += 1;
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    queue_shed(c, &body_s, keep_alive);
+                }
+                self.finish_response(ci, keep_alive, now)
+            }
+        } else {
+            if head.status < 500 {
+                self.stats.ok += 1;
+                self.stats.latency.record(t0.elapsed());
+            } else {
+                self.stats.bad_gateway += 1;
+            }
+            if let Slot::Client(c) = &mut self.slots[ci] {
+                c.machine.replying();
+                let _ = write_text_response(
+                    &mut c.out,
+                    head.status,
+                    &head.reason,
+                    &head.content_type,
+                    &body_s,
+                    keep_alive,
+                );
+            }
+            self.finish_response(ci, keep_alive, now)
+        };
+        if !ok {
+            self.drop_client(ci, now);
+        }
+    }
+
+    fn upstream_failed(&mut self, ci: usize, why: &str, now: Instant) {
+        let ok = match self.slots.get(ci) {
+            Some(Slot::Client(c)) if c.job.is_some() => self.attempt_failed(ci, now, None, why),
+            _ => return,
+        };
+        if !ok {
+            self.drop_client(ci, now);
+        }
+    }
+
+    /// The response for the client's current request is fully queued:
+    /// reset the machine (which may immediately surface a pipelined
+    /// successor) and clear the job.
+    fn finish_response(&mut self, ci: usize, keep_alive: bool, now: Instant) -> bool {
+        let ev = {
+            let Some(Slot::Client(c)) = self.slots.get_mut(ci) else { return false };
+            c.job = None;
+            if !keep_alive {
+                c.close_after_flush = true;
+            }
+            c.machine.response_complete(keep_alive, now)
+        };
+        match ev {
+            None => true,
+            Some(ev) => self.handle_client_event(ci, ev, now),
+        }
+    }
+
+    /// Per-pass clock service: due retries, lapsed deadlines, machine
+    /// read timeouts, then flush + reap.
+    fn sweep(&mut self, now: Instant) {
+        for ci in 0..self.slots.len() {
+            if !matches!(self.slots[ci], Slot::Client(_)) {
+                continue;
+            }
+            let retry_due = matches!(
+                &self.slots[ci],
+                Slot::Client(c)
+                    if c.job.as_ref().and_then(|j| j.retry_at).is_some_and(|t| now >= t)
+            );
+            if retry_due {
+                if let Slot::Client(c) = &mut self.slots[ci] {
+                    if let Some(j) = &mut c.job {
+                        j.retry_at = None;
+                    }
+                }
+                if !self.start_attempt(ci, now) {
+                    self.drop_client(ci, now);
+                    continue;
+                }
+            }
+            let expired = matches!(
+                &self.slots[ci],
+                Slot::Client(c) if c.job.as_ref().is_some_and(|j| now >= j.deadline)
+            );
+            if expired && !self.expire_job(ci, now) {
+                self.drop_client(ci, now);
+                continue;
+            }
+            let ev = {
+                let Slot::Client(c) = &mut self.slots[ci] else { continue };
+                c.machine.on_tick(now)
+            };
+            if let Some(ev) = ev {
+                if !self.handle_client_event(ci, ev, now) {
+                    self.drop_client(ci, now);
+                    continue;
+                }
+            }
+            let drop_now = {
+                let Slot::Client(c) = &mut self.slots[ci] else { continue };
+                match flush_buf(&mut c.stream, &mut c.out, &mut c.out_pos) {
+                    Err(_) => true,
+                    Ok(()) => {
+                        let drained = c.out_pos == c.out.len();
+                        (drained && c.close_after_flush)
+                            || (drained
+                                && c.machine.state() == ConnState::Closed
+                                && c.job.is_none())
+                    }
+                }
+            };
+            if drop_now {
+                self.drop_client(ci, now);
+            }
+        }
+    }
+
+    /// Router `/healthz`: ready when any replica is Up. Mirrors the
+    /// fleet's model limits so a probing client (`qtx loadgen`) can
+    /// front the router exactly like a single `qtx serve`.
+    fn healthz_doc(&self) -> (bool, Json) {
+        let reps = self.replicas.lock().expect("replica table poisoned");
+        let total = reps.len();
+        let up = reps.iter().filter(|r| r.health == Health::Up).count();
+        let ready = up > 0;
+        let limits = reps
+            .iter()
+            .filter(|r| r.health == Health::Up)
+            .find_map(|r| r.limits)
+            .or_else(|| reps.iter().find_map(|r| r.limits))
+            .unwrap_or_default();
+        drop(reps);
+        let doc = Json::obj(vec![
+            ("status", Json::Str(if ready { "ok" } else { "starting" }.into())),
+            ("ready", Json::Bool(ready)),
+            ("role", Json::Str("router".into())),
+            ("replicas", Json::Num(total as f64)),
+            ("replicas_up", Json::Num(up as f64)),
+            ("seq_len", Json::Num(limits.seq_len as f64)),
+            ("max_batch", Json::Num(limits.max_batch as f64)),
+            ("vocab", Json::Num(limits.vocab as f64)),
+            ("causal", Json::Bool(limits.causal)),
+            ("decode", Json::Bool(limits.decode)),
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+        ]);
+        (ready, doc)
+    }
+
+    /// Router `/statz`: fleet census + request counters + latency.
+    /// `replica_detail` is a JSON-only array (per-replica rows); the
+    /// scalar leaves are the machine-checked registry (docs/API.md).
+    fn statz_doc(&self) -> Json {
+        let reps = self.replicas.lock().expect("replica table poisoned");
+        let (mut up, mut degraded, mut ejected) = (0u64, 0u64, 0u64);
+        let mut detail = Vec::new();
+        for r in reps.iter() {
+            match r.health {
+                Health::Up => up += 1,
+                Health::Degraded => degraded += 1,
+                Health::Ejected => ejected += 1,
+            }
+            detail.push(Json::obj(vec![
+                ("addr", Json::Str(r.addr.clone())),
+                ("health", Json::Str(r.health.name().into())),
+                ("slots_free", Json::Num(r.census.slots_free as f64)),
+                ("slots_total", Json::Num(r.census.slots_total as f64)),
+                ("outstanding", Json::Num(r.outstanding as f64)),
+                ("probes_ok", Json::Num(r.probes_ok as f64)),
+                ("probes_failed", Json::Num(r.probes_failed as f64)),
+                ("consecutive_failures", Json::Num(f64::from(r.consecutive_failures))),
+            ]));
+        }
+        let total = reps.len();
+        drop(reps);
+        let s = &self.stats;
+        Json::obj(vec![
+            (
+                "server",
+                Json::obj(vec![
+                    ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+                    ("io_threads", Json::Num(1.0)),
+                ]),
+            ),
+            (
+                "route",
+                Json::obj(vec![
+                    (
+                        "replicas",
+                        Json::obj(vec![
+                            ("total", Json::Num(total as f64)),
+                            ("up", Json::Num(up as f64)),
+                            ("degraded", Json::Num(degraded as f64)),
+                            ("ejected", Json::Num(ejected as f64)),
+                        ]),
+                    ),
+                    (
+                        "requests",
+                        Json::obj(vec![
+                            ("total", Json::Num(s.requests_total as f64)),
+                            ("ok", Json::Num(s.ok as f64)),
+                            ("retries", Json::Num(s.retries as f64)),
+                            ("shed", Json::Num(s.shed as f64)),
+                            ("replica_lost", Json::Num(s.replica_lost as f64)),
+                            ("bad_gateway", Json::Num(s.bad_gateway as f64)),
+                            ("timeouts", Json::Num(s.timeouts as f64)),
+                            ("cancelled", Json::Num(s.cancelled as f64)),
+                        ]),
+                    ),
+                    (
+                        "connections",
+                        Json::obj(vec![
+                            ("open", Json::Num(self.open_clients() as f64)),
+                            ("upstream", Json::Num(self.open_upstreams() as f64)),
+                        ]),
+                    ),
+                    ("latency", s.latency.to_json()),
+                ]),
+            ),
+            ("replica_detail", Json::Arr(detail)),
+        ])
+    }
+
+    /// `/metricz`: rendered from the same snapshot `/statz` serves — one
+    /// registry, two surfaces. `route.latency` becomes a native
+    /// histogram; `replica_detail` stays JSON-only.
+    fn prometheus(&self) -> String {
+        let doc = self.statz_doc();
+        let mut out = String::new();
+        walk_metrics("", &doc, &mut out);
+        prom_histo(&prom_name("route.latency"), &self.stats.latency, &mut out);
+        out
+    }
+}
+
+fn walk_metrics(prefix: &str, j: &Json, out: &mut String) {
+    if prefix == "replica_detail" || prefix == "route.latency" {
+        return;
+    }
+    match j {
+        Json::Obj(kv) => {
+            for (k, v) in kv {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                walk_metrics(&p, v, out);
+            }
+        }
+        Json::Num(n) => {
+            let name = prom_name(prefix);
+            let kind = if prefix.starts_with("route.requests.") { "counter" } else { "gauge" };
+            out.push_str(&format!("# TYPE {name} {kind}\n{name} {n}\n"));
+        }
+        _ => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Upstream HTTP/1.1 response parser (sans-I/O; unit-tested below)
+// ---------------------------------------------------------------------------
+
+/// Upstream response event, produced by [`RespParser::feed`].
+#[derive(Debug, PartialEq)]
+enum UpEvent {
+    Head { status: u16, reason: String, content_type: String, chunked: bool },
+    /// One de-framed chunk payload (a streaming token event).
+    Chunk(Vec<u8>),
+    /// Response complete; the accumulated body (empty for chunked).
+    Done(Vec<u8>),
+}
+
+const MAX_UP_HEAD: usize = 64 * 1024;
+const MAX_UP_BODY: usize = 8 * 1024 * 1024;
+
+/// Incremental parser for the upstream leg: head, then a Content-Length
+/// body, a chunked stream (de-framed so the router can re-frame toward
+/// the client as events arrive), or read-to-EOF.
+struct RespParser {
+    buf: Vec<u8>,
+    head_done: bool,
+    chunked: bool,
+    content_length: Option<usize>,
+    read_to_eof: bool,
+    done: bool,
+}
+
+impl RespParser {
+    fn new() -> RespParser {
+        RespParser {
+            buf: Vec::new(),
+            head_done: false,
+            chunked: false,
+            content_length: None,
+            read_to_eof: false,
+            done: false,
+        }
+    }
+
+    fn feed(&mut self, data: &[u8], out: &mut Vec<UpEvent>) -> Result<(), String> {
+        if self.done {
+            return Ok(());
+        }
+        self.buf.extend_from_slice(data);
+        if !self.head_done {
+            let Some(pos) = find_bytes(&self.buf, b"\r\n\r\n") else {
+                if self.buf.len() > MAX_UP_HEAD {
+                    return Err("upstream response head too large".into());
+                }
+                return Ok(());
+            };
+            let head = String::from_utf8_lossy(&self.buf[..pos]).into_owned();
+            self.buf.drain(..pos + 4);
+            let mut lines = head.split("\r\n");
+            let status_line = lines.next().unwrap_or("");
+            let mut parts = status_line.splitn(3, ' ');
+            let _version = parts.next();
+            let status: u16 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad upstream status line {status_line:?}"))?;
+            let reason = parts.next().unwrap_or("").to_string();
+            let mut content_type = String::from("application/json");
+            for line in lines {
+                let Some((k, v)) = line.split_once(':') else { continue };
+                let v = v.trim();
+                match k.to_ascii_lowercase().as_str() {
+                    "content-type" => content_type = v.to_string(),
+                    "transfer-encoding" => self.chunked = v.eq_ignore_ascii_case("chunked"),
+                    "content-length" => self.content_length = v.parse().ok(),
+                    _ => {}
+                }
+            }
+            self.head_done = true;
+            self.read_to_eof = !self.chunked && self.content_length.is_none();
+            out.push(UpEvent::Head { status, reason, content_type, chunked: self.chunked });
+        }
+        if self.chunked {
+            loop {
+                let Some(nl) = find_bytes(&self.buf, b"\r\n") else { break };
+                let size_text = String::from_utf8_lossy(&self.buf[..nl]).into_owned();
+                let size_text = size_text.split(';').next().unwrap_or("").trim().to_string();
+                let size = usize::from_str_radix(&size_text, 16)
+                    .map_err(|_| format!("bad upstream chunk size {size_text:?}"))?;
+                if size > MAX_UP_BODY {
+                    return Err("upstream chunk too large".into());
+                }
+                if self.buf.len() < nl + 2 + size + 2 {
+                    break;
+                }
+                if size == 0 {
+                    self.buf.clear();
+                    self.done = true;
+                    out.push(UpEvent::Done(Vec::new()));
+                    return Ok(());
+                }
+                let payload = self.buf[nl + 2..nl + 2 + size].to_vec();
+                self.buf.drain(..nl + 2 + size + 2);
+                out.push(UpEvent::Chunk(payload));
+            }
+        } else if let Some(len) = self.content_length {
+            if len > MAX_UP_BODY {
+                return Err("upstream body too large".into());
+            }
+            if self.buf.len() >= len {
+                let body = self.buf[..len].to_vec();
+                self.buf.clear();
+                self.done = true;
+                out.push(UpEvent::Done(body));
+            }
+        } else if self.read_to_eof && self.buf.len() > MAX_UP_BODY {
+            return Err("upstream body too large".into());
+        }
+        Ok(())
+    }
+
+    fn on_eof(&mut self, out: &mut Vec<UpEvent>) -> Result<(), String> {
+        if self.done {
+            return Ok(());
+        }
+        if self.head_done && self.read_to_eof {
+            self.done = true;
+            out.push(UpEvent::Done(std::mem::take(&mut self.buf)));
+            return Ok(());
+        }
+        Err("upstream closed mid-response".into())
+    }
+}
+
+fn find_bytes(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(health: Health, free: usize, outstanding: usize) -> Replica {
+        let mut r = Replica::new("127.0.0.1:1".into(), "127.0.0.1:1".parse().unwrap());
+        r.health = health;
+        r.census = ReplicaCensus { slots_free: free, slots_total: free.max(1) };
+        r.outstanding = outstanding;
+        r
+    }
+
+    fn ready(free: usize) -> ProbeOutcome {
+        ProbeOutcome::Ready {
+            census: ReplicaCensus { slots_free: free, slots_total: free },
+            limits: ReplicaLimits::default(),
+        }
+    }
+
+    #[test]
+    fn replica_starts_degraded_and_comes_up_on_first_ready_probe() {
+        let mut r = rep(Health::Degraded, 0, 0);
+        assert_eq!(r.health, Health::Degraded);
+        r.on_probe(ready(4), 3);
+        assert_eq!(r.health, Health::Up);
+        assert_eq!(r.census.slots_free, 4);
+        assert_eq!(r.probes_ok, 1);
+    }
+
+    #[test]
+    fn not_ready_probe_degrades_but_never_ejects() {
+        // Satellite 2: a warming-up replica (503 + ready:false) must sit
+        // out as Degraded, not accumulate toward ejection.
+        let mut r = rep(Health::Up, 4, 0);
+        for _ in 0..20 {
+            r.on_probe(ProbeOutcome::NotReady { limits: None }, 3);
+            assert_eq!(r.health, Health::Degraded);
+            assert_eq!(r.consecutive_failures, 0);
+        }
+        r.on_probe(ready(2), 3);
+        assert_eq!(r.health, Health::Up);
+    }
+
+    #[test]
+    fn consecutive_failures_eject_and_halfopen_success_rejoins() {
+        let mut r = rep(Health::Up, 4, 0);
+        r.on_probe(ProbeOutcome::Failed, 3);
+        assert_eq!(r.health, Health::Degraded, "first failure only degrades");
+        r.on_probe(ProbeOutcome::Failed, 3);
+        assert_eq!(r.health, Health::Degraded);
+        r.on_probe(ProbeOutcome::Failed, 3);
+        assert_eq!(r.health, Health::Ejected, "third consecutive failure ejects");
+        assert_eq!(r.probes_failed, 3);
+        // Half-open probe succeeds: back in rotation, counters reset.
+        r.on_probe(ready(4), 3);
+        assert_eq!(r.health, Health::Up);
+        assert_eq!(r.consecutive_failures, 0);
+    }
+
+    #[test]
+    fn failure_streak_resets_on_success() {
+        let mut r = rep(Health::Up, 4, 0);
+        r.on_probe(ProbeOutcome::Failed, 3);
+        r.on_probe(ProbeOutcome::Failed, 3);
+        r.on_probe(ready(4), 3);
+        r.on_probe(ProbeOutcome::Failed, 3);
+        assert_eq!(r.health, Health::Degraded, "streak restarted, not cumulative");
+    }
+
+    #[test]
+    fn admission_prefers_least_loaded_up_replica() {
+        let reps = vec![rep(Health::Up, 2, 1), rep(Health::Up, 8, 1), rep(Health::Up, 4, 3)];
+        assert_eq!(pick_replica(&reps, &[]), Ok(1), "weight 7 beats 1 and 1");
+    }
+
+    #[test]
+    fn admission_excludes_tried_replicas_on_retry() {
+        let reps = vec![rep(Health::Up, 8, 0), rep(Health::Up, 2, 0)];
+        assert_eq!(pick_replica(&reps, &[0]), Ok(1), "retry must pick a different replica");
+    }
+
+    #[test]
+    fn admission_falls_back_to_degraded_then_to_tried() {
+        let reps = vec![rep(Health::Degraded, 0, 0), rep(Health::Ejected, 0, 0)];
+        assert_eq!(pick_replica(&reps, &[]), Ok(0), "degraded is a legal fallback");
+        // Everything alive already tried: re-admit rather than fail.
+        assert_eq!(pick_replica(&reps, &[0]), Ok(0));
+    }
+
+    #[test]
+    fn admission_sheds_when_fleet_saturated_and_fails_when_all_ejected() {
+        let full = vec![rep(Health::Up, 2, 2), rep(Health::Up, 0, 0)];
+        assert_eq!(pick_replica(&full, &[]), Err(AdmitError::FleetFull));
+        let dead = vec![rep(Health::Ejected, 4, 0), rep(Health::Ejected, 4, 0)];
+        assert_eq!(pick_replica(&dead, &[]), Err(AdmitError::NoReplica));
+    }
+
+    #[test]
+    fn resp_parser_content_length_body_across_feeds() {
+        let mut p = RespParser::new();
+        let mut ev = Vec::new();
+        p.feed(b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nConte", &mut ev).unwrap();
+        assert!(ev.is_empty(), "no event until the head terminator");
+        p.feed(b"nt-Length: 10\r\n\r\n{\"ok\"", &mut ev).unwrap();
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(
+            &ev[0],
+            UpEvent::Head { status: 200, chunked: false, .. }
+        ));
+        p.feed(b":true}", &mut ev).unwrap();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[1], UpEvent::Done(b"{\"ok\":true}"[..10].to_vec()));
+        assert!(p.done);
+    }
+
+    #[test]
+    fn resp_parser_deframes_chunked_stream_split_anywhere() {
+        let wire = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n\
+                     5\r\nhello\r\n6\r\nworld!\r\n0\r\n\r\n";
+        // Feed one byte at a time: framing must not depend on read sizes.
+        let mut p = RespParser::new();
+        let mut ev = Vec::new();
+        for b in wire.iter() {
+            p.feed(std::slice::from_ref(b), &mut ev).unwrap();
+        }
+        assert!(matches!(&ev[0], UpEvent::Head { chunked: true, .. }));
+        assert_eq!(ev[1], UpEvent::Chunk(b"hello".to_vec()));
+        assert_eq!(ev[2], UpEvent::Chunk(b"world!".to_vec()));
+        assert_eq!(ev[3], UpEvent::Done(Vec::new()));
+        assert!(p.done);
+    }
+
+    #[test]
+    fn resp_parser_eof_mid_response_is_an_error() {
+        let mut p = RespParser::new();
+        let mut ev = Vec::new();
+        p.feed(b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\n\r\nonly4", &mut ev).unwrap();
+        assert!(p.on_eof(&mut ev).is_err(), "truncated body must not look complete");
+    }
+
+    #[test]
+    fn resp_parser_reads_to_eof_without_length() {
+        let mut p = RespParser::new();
+        let mut ev = Vec::new();
+        p.feed(b"HTTP/1.1 200 OK\r\nConnection: close\r\n\r\npayload", &mut ev).unwrap();
+        p.on_eof(&mut ev).unwrap();
+        assert_eq!(ev[1], UpEvent::Done(b"payload".to_vec()));
+    }
+
+    #[test]
+    fn resp_parser_rejects_garbage_status_line() {
+        let mut p = RespParser::new();
+        let mut ev = Vec::new();
+        assert!(p.feed(b"NOT-HTTP nonsense\r\n\r\n", &mut ev).is_err());
+    }
+
+    #[test]
+    fn metrics_walk_marks_request_counters_and_skips_detail() {
+        let doc = Json::obj(vec![
+            (
+                "route",
+                Json::obj(vec![
+                    ("requests", Json::obj(vec![("ok", Json::Num(3.0))])),
+                    ("replicas", Json::obj(vec![("up", Json::Num(2.0))])),
+                ]),
+            ),
+            ("replica_detail", Json::Arr(vec![Json::obj(vec![("x", Json::Num(1.0))])])),
+        ]);
+        let mut out = String::new();
+        walk_metrics("", &doc, &mut out);
+        assert!(out.contains("# TYPE qtx_route_requests_ok counter\nqtx_route_requests_ok 3"));
+        assert!(out.contains("# TYPE qtx_route_replicas_up gauge\nqtx_route_replicas_up 2"));
+        assert!(!out.contains("replica_detail"), "per-replica rows are JSON-only");
+    }
+}

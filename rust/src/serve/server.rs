@@ -40,7 +40,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -52,9 +52,11 @@ use crate::serve::engine::{
     spawn_engine_pool, validate_generate, validate_request, Dispatch, EngineFactory, EventTx,
     GenEvent, Job, JobKind, JobOutcome, ReplyTx,
 };
+use crate::serve::fault::{FaultAction, FaultSpec, FaultState};
 use crate::serve::obs::{Obs, TraceConfig, TraceTap};
 use crate::serve::poll::{
     drain_wakes, raise_nofile_limit, Poller, Waker, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT,
+    POLLRDHUP,
 };
 use crate::serve::protocol::{
     error_json, stream_done_event, stream_error_event, stream_token_event, GenerateRequest,
@@ -92,6 +94,9 @@ pub struct ServerConfig {
     /// Request tracing: ring capacity (0 disables) + slow-request log
     /// threshold (`--trace-capacity` / `--trace-slow-ms`).
     pub trace: TraceConfig,
+    /// Deterministic fault injection (`--fault <spec>`); the default is a
+    /// no-op spec and adds no per-request work. See [`crate::serve::fault`].
+    pub fault: FaultSpec,
 }
 
 impl Default for ServerConfig {
@@ -107,6 +112,7 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(30),
             trace: TraceConfig::default(),
+            fault: FaultSpec::default(),
         }
     }
 }
@@ -191,6 +197,12 @@ impl Server {
             shutdown: shutdown.clone(),
             engines_ready: engines_ready.clone(),
             waker: waker.clone(),
+            fault: if cfg.fault.is_noop() {
+                None
+            } else {
+                log::info(&format!("fault injection armed: {:?}", cfg.fault));
+                Some(Mutex::new(FaultState::new(cfg.fault.clone())))
+            },
         });
         let io_handle = {
             let ctx = ctx.clone();
@@ -200,7 +212,7 @@ impl Server {
                 .spawn(move || {
                     EventLoop {
                         ctx,
-                        listener,
+                        listener: Some(listener),
                         wake_rx,
                         max_conns,
                         conns: Vec::new(),
@@ -292,6 +304,23 @@ struct HandlerCtx {
     engines_ready: Arc<AtomicUsize>,
     /// Pokes the event loop awake; attached to every reply/event channel.
     waker: Arc<Waker>,
+    /// Fault-injection state (`--fault`); `None` when no fault is
+    /// configured, so the common path pays one pointer check.
+    fault: Option<Mutex<FaultState>>,
+}
+
+/// Consult the fault layer for one dispatched request (`None` when no
+/// fault is configured — the overwhelmingly common case).
+fn fault_on_dispatch(ctx: &HandlerCtx) -> FaultAction {
+    let Some(f) = &ctx.fault else { return FaultAction::None };
+    let action = f.lock().expect("fault state poisoned").on_dispatch();
+    if action == FaultAction::Kill {
+        // Make sure the event loop starts a fresh pass promptly — the
+        // kill teardown happens at the top of the pass, and poll may
+        // otherwise sit in a long timeout.
+        ctx.waker.wake();
+    }
+    action
 }
 
 // ---------------------------------------------------------------------------
@@ -597,6 +626,30 @@ struct ConnEntry {
     out_pos: usize,
     pending: Pending,
     close_after_flush: bool,
+    /// Fault injection: a `stall`/`slow-healthz` draw recorded at dispatch
+    /// time, turned into `hold_until` when the response is queued.
+    stall_pending: Option<Duration>,
+    /// Fault injection: queued response bytes are not flushed before this.
+    hold_until: Option<Instant>,
+    /// Shared with the dispatched [`Job`]: set when the client hangs up
+    /// while the request is still queued, so the engine worker skips it.
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+impl ConnEntry {
+    fn new(stream: TcpStream, now: Instant, read_timeout: Duration) -> ConnEntry {
+        ConnEntry {
+            stream,
+            machine: HttpConn::new(now, read_timeout),
+            out: Vec::new(),
+            out_pos: 0,
+            pending: Pending::Idle,
+            close_after_flush: false,
+            stall_pending: None,
+            hold_until: None,
+            cancel: None,
+        }
+    }
 }
 
 fn wants_read(c: &ConnEntry) -> bool {
@@ -610,16 +663,23 @@ fn wants_read(c: &ConnEntry) -> bool {
 /// deadline while parsing, its request deadline while waiting on the
 /// engine.
 fn conn_deadline(c: &ConnEntry) -> Option<Instant> {
-    match &c.pending {
+    let d = match &c.pending {
         Pending::Idle => c.machine.next_deadline(),
         Pending::Score(p) | Pending::Generate(p) => Some(p.deadline),
         Pending::Stream(p) => Some(p.deadline),
+    };
+    // A fault-injected flush hold also needs clock service when it lapses.
+    match (d, c.hold_until) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
     }
 }
 
 struct EventLoop {
     ctx: Arc<HandlerCtx>,
-    listener: TcpListener,
+    /// `None` after a `kill-after` fault trips: the listening socket is
+    /// closed (connects get refused) and nothing is accepted again.
+    listener: Option<TcpListener>,
     wake_rx: UnixStream,
     max_conns: usize,
     /// Connection slab; `None` slots are reused by the next accept.
@@ -634,19 +694,41 @@ impl EventLoop {
             if self.ctx.shutdown.load(Ordering::SeqCst) {
                 break;
             }
+            if let Some(f) = &self.ctx.fault {
+                if self.listener.is_some() && f.lock().expect("fault state poisoned").killed() {
+                    // `kill-after` tripped: go dark. Listener closes (new
+                    // connects are refused), every open connection drops
+                    // (in-flight requests and decode sessions die with
+                    // them). The process stays up; tests model recovery
+                    // by starting a fresh server on the same port.
+                    log::info("fault injection: kill-after tripped, front-end going dark");
+                    self.listener = None;
+                    self.conns.clear();
+                }
+            }
             self.publish_gauges();
             self.poller.clear();
             self.poller.register(self.wake_rx.as_raw_fd(), TOKEN_WAKE, POLLIN);
-            self.poller.register(self.listener.as_raw_fd(), TOKEN_LISTEN, POLLIN);
+            if let Some(l) = &self.listener {
+                self.poller.register(l.as_raw_fd(), TOKEN_LISTEN, POLLIN);
+            }
             let mut next_deadline: Option<Instant> = None;
+            let reg_now = Instant::now();
             for (i, slot) in self.conns.iter().enumerate() {
                 let Some(c) = slot else { continue };
+                let held = c.hold_until.is_some_and(|h| reg_now < h);
                 let mut interest = 0i16;
-                if c.out_pos < c.out.len() {
+                if c.out_pos < c.out.len() && !held {
                     interest |= POLLOUT;
                 }
                 if wants_read(c) {
                     interest |= POLLIN;
+                }
+                if !matches!(c.pending, Pending::Idle) {
+                    // A dispatched request has no read interest, so a
+                    // client hangup would go unseen until reply time
+                    // without explicitly asking for peer-FIN events.
+                    interest |= POLLRDHUP;
                 }
                 if interest != 0 {
                     self.poller.register(c.stream.as_raw_fd(), TOKEN_CONN0 + i, interest);
@@ -709,8 +791,9 @@ impl EventLoop {
     /// still-blocking fresh socket and is dropped — deterministic, and
     /// without consuming a slab slot.
     fn accept_ready(&mut self, now: Instant) {
+        let Some(listener) = &self.listener else { return };
         loop {
-            match self.listener.accept() {
+            match listener.accept() {
                 Ok((mut s, _)) => {
                     let open = self.conns.iter().filter(|c| c.is_some()).count();
                     if open >= self.max_conns {
@@ -727,14 +810,7 @@ impl EventLoop {
                     if s.set_nonblocking(true).is_err() {
                         continue;
                     }
-                    let entry = ConnEntry {
-                        stream: s,
-                        machine: HttpConn::new(now, self.ctx.read_timeout),
-                        out: Vec::new(),
-                        out_pos: 0,
-                        pending: Pending::Idle,
-                        close_after_flush: false,
-                    };
+                    let entry = ConnEntry::new(s, now, self.ctx.read_timeout);
                     match self.conns.iter_mut().position(|c| c.is_none()) {
                         Some(i) => self.conns[i] = Some(entry),
                         None => self.conns.push(Some(entry)),
@@ -774,6 +850,17 @@ impl EventLoop {
 /// Socket readiness for one connection. Returns whether it survives.
 fn conn_ready(c: &mut ConnEntry, ctx: &HandlerCtx, scratch: &mut [u8], revents: i16) -> bool {
     if revents & POLLNVAL != 0 {
+        return false;
+    }
+    if !matches!(c.pending, Pending::Idle) && revents & (POLLRDHUP | POLLHUP | POLLERR) != 0 {
+        // The client hung up while its request is still in flight.
+        // Flag the job so the engine worker skips it if it is still
+        // queued (`WaitingOnSlot`), count the cancellation, and drop
+        // the connection — nothing would read the reply anyway.
+        if let Some(cancel) = &c.cancel {
+            cancel.store(true, Ordering::Relaxed);
+        }
+        ctx.stats.requests_cancelled.fetch_add(1, Ordering::Relaxed);
         return false;
     }
     if revents & (POLLIN | POLLHUP | POLLERR) != 0 && wants_read(c) {
@@ -868,12 +955,22 @@ fn dispatch_request(
     let keep_alive = req.keep_alive;
     match (req.method.as_str(), req.path()) {
         ("GET", "/healthz") => {
+            // Liveness vs readiness: answering at all is liveness; the
+            // `ready` flag + status distinguish "warming up" (`starting`,
+            // a healthy transient — probes treat it as Degraded) from
+            // "startup failed" (`unavailable`, with the error payload).
             let ready = ctx.engines_ready.load(Ordering::SeqCst);
+            let startup_error = ctx.stats.startup_error();
+            let status = if ready > 0 {
+                "ok"
+            } else if startup_error.is_none() {
+                "starting"
+            } else {
+                "unavailable"
+            };
             let mut doc = vec![
-                (
-                    "status",
-                    Json::Str(if ready > 0 { "ok" } else { "unavailable" }.into()),
-                ),
+                ("status", Json::Str(status.into())),
+                ("ready", Json::Bool(ready > 0)),
                 ("engine", Json::Str(ctx.info.describe.clone())),
                 ("engines_ready", Json::Num(ready as f64)),
                 ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
@@ -884,21 +981,26 @@ fn dispatch_request(
                 ("decode", Json::Bool(ctx.info.decode)),
                 ("uptime_s", Json::Num(ctx.stats.uptime().as_secs_f64())),
             ];
+            if let Some(f) = &ctx.fault {
+                // `slow-healthz`: hold the response so probe deadlines
+                // trip while request traffic still flows.
+                if let Some(d) = f.lock().expect("fault state poisoned").healthz_delay() {
+                    c.stall_pending = Some(d);
+                }
+            }
             if ready > 0 {
                 queue_json(c, 200, "OK", &Json::obj(doc), keep_alive);
             } else {
-                // Failure payload: name the reason (e.g. the manifest
-                // found-vs-required version message) so a probe reads
-                // the fix without grepping server logs.
-                let err = ctx
-                    .stats
-                    .startup_error()
-                    .unwrap_or_else(|| "engines still warming up".into());
-                doc.push(("error", Json::Str(err)));
-                doc.push((
-                    "startup_failures",
-                    Json::Num(ctx.stats.startup_failures.load(Ordering::Relaxed) as f64),
-                ));
+                if let Some(err) = startup_error {
+                    // Failure payload: name the reason (e.g. the manifest
+                    // found-vs-required version message) so a probe reads
+                    // the fix without grepping server logs.
+                    doc.push(("error", Json::Str(err)));
+                    doc.push((
+                        "startup_failures",
+                        Json::Num(ctx.stats.startup_failures.load(Ordering::Relaxed) as f64),
+                    ));
+                }
                 queue_json(c, 503, "Service Unavailable", &Json::obj(doc), keep_alive);
             }
         }
@@ -939,6 +1041,13 @@ fn dispatch_score(
     req: ParsedRequest,
     now: Instant,
 ) -> Option<ConnEvent> {
+    match fault_on_dispatch(ctx) {
+        // Drop replyless: the client sees a reset/EOF. For `Kill` the
+        // event loop tears the whole front-end down on its next pass.
+        FaultAction::Kill | FaultAction::Reset => return Some(ConnEvent::CloseSilent),
+        FaultAction::Stall(d) => c.stall_pending = Some(d),
+        FaultAction::None => {}
+    }
     let keep_alive = req.keep_alive;
     let t_read = req.read_start;
     let t_read_end = now;
@@ -968,13 +1077,15 @@ fn dispatch_score(
     let id = sreq.id.clone();
     let (tx, rx) = mpsc::channel();
     let resp = ReplyTx::from(tx).with_waker(ctx.waker.clone());
-    let job = Job::score(sreq, resp).traced(tap.clone());
+    let cancel = Arc::new(AtomicBool::new(false));
+    let job = Job::score(sreq, resp).traced(tap.clone()).cancellable(cancel.clone());
     if let Err(keep) = submit_queued(c, ctx, job, keep_alive) {
         if let Some(t) = &tap {
             ctx.obs.finish(t, "rejected");
         }
         return complete_response(c, keep, now);
     }
+    c.cancel = Some(cancel);
     c.pending = Pending::Score(PendingReply {
         rx,
         id,
@@ -997,6 +1108,11 @@ fn dispatch_generate(
     req: ParsedRequest,
     now: Instant,
 ) -> Option<ConnEvent> {
+    match fault_on_dispatch(ctx) {
+        FaultAction::Kill | FaultAction::Reset => return Some(ConnEvent::CloseSilent),
+        FaultAction::Stall(d) => c.stall_pending = Some(d),
+        FaultAction::None => {}
+    }
     let keep_alive = req.keep_alive;
     let t_read = req.read_start;
     let t_read_end = now;
@@ -1061,11 +1177,13 @@ fn dispatch_generate(
     } else {
         (None, None)
     };
+    let cancel = Arc::new(AtomicBool::new(false));
     let job = Job {
         kind: JobKind::Generate(greq),
         resp: ReplyTx::from(tx).with_waker(ctx.waker.clone()),
         trace: tap.clone(),
         events: etx,
+        cancelled: Some(cancel.clone()),
     };
     if let Err(keep) = submit_queued(c, ctx, job, keep_alive) {
         if let Some(t) = &tap {
@@ -1073,6 +1191,7 @@ fn dispatch_generate(
         }
         return complete_response(c, keep, now);
     }
+    c.cancel = Some(cancel);
     let deadline = Instant::now() + ctx.request_timeout;
     c.pending = match erx {
         Some(erx) => Pending::Stream(PendingStream {
@@ -1149,6 +1268,13 @@ fn step_conn(c: &mut ConnEntry, ctx: &HandlerCtx, now: Instant) -> bool {
         if ev.is_some() && !process_event(c, ctx, ev, now) {
             return false;
         }
+    }
+    // Fault injection: a `stall`/`slow-healthz` hold parks queued bytes.
+    if let Some(h) = c.hold_until {
+        if now < h {
+            return true;
+        }
+        c.hold_until = None;
     }
     flush_out(c)
 }
@@ -1403,6 +1529,13 @@ fn pump_stream(c: &mut ConnEntry, ctx: &HandlerCtx, mut p: PendingStream, now: I
 fn complete_response(c: &mut ConnEntry, keep_alive: bool, now: Instant) -> Option<ConnEvent> {
     if !keep_alive {
         c.close_after_flush = true;
+    }
+    // Request settled: its cancel flag is dead weight from here on.
+    c.cancel = None;
+    // Fault injection: a stall drawn at dispatch time starts now, holding
+    // the fully-queued response bytes.
+    if let Some(d) = c.stall_pending.take() {
+        c.hold_until = Some(now + d);
     }
     c.machine.response_complete(keep_alive, now)
 }

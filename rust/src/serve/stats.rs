@@ -125,7 +125,7 @@ impl LatencyHisto {
         max_us / 1000.0
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", Json::Num(self.count() as f64)),
             ("mean_ms", Json::Num(round3(self.mean_ms()))),
@@ -199,6 +199,9 @@ pub struct ServeStats {
     pub timeouts: AtomicU64,
     /// Engine-side failures (→ 500).
     pub engine_errors: AtomicU64,
+    /// Requests cancelled because the client hung up while still queued
+    /// (`WaitingOnSlot`); the claim is freed before the engine runs.
+    pub requests_cancelled: AtomicU64,
     /// Open sockets the event loop is servicing (gauge, published once
     /// per loop pass).
     pub conn_open: AtomicU64,
@@ -264,6 +267,7 @@ impl ServeStats {
             rejected_full: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             engine_errors: AtomicU64::new(0),
+            requests_cancelled: AtomicU64::new(0),
             conn_open: AtomicU64::new(0),
             conn_reading: AtomicU64::new(0),
             conn_waiting: AtomicU64::new(0),
@@ -413,6 +417,7 @@ impl ServeStats {
                     ("rejected_full", g(&self.rejected_full)),
                     ("timeouts", g(&self.timeouts)),
                     ("engine_errors", g(&self.engine_errors)),
+                    ("cancelled", g(&self.requests_cancelled)),
                 ]),
             ),
             (
@@ -616,7 +621,7 @@ fn quant_health_json(t: &EngineTelemetry) -> Json {
 }
 
 /// `/statz` path → Prometheus metric name.
-fn prom_name(path: &str) -> String {
+pub(crate) fn prom_name(path: &str) -> String {
     format!("qtx_{}", path.replace('.', "_"))
 }
 
@@ -630,6 +635,7 @@ fn is_counter(path: &str) -> bool {
             | "requests.rejected_full"
             | "requests.timeouts"
             | "requests.engine_errors"
+            | "requests.cancelled"
             | "batches.total"
             | "batches.rows"
             | "decode.sessions_total"
@@ -637,7 +643,7 @@ fn is_counter(path: &str) -> bool {
     )
 }
 
-fn prom_label_escape(s: &str) -> String {
+pub(crate) fn prom_label_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
@@ -645,7 +651,7 @@ fn prom_label_escape(s: &str) -> String {
 /// `_count` is the final cumulative bucket value (not the separate `total`
 /// atomic), so `_bucket{le="+Inf"} == _count` holds even while samples land
 /// concurrently mid-render.
-fn prom_histo(name: &str, h: &LatencyHisto, out: &mut String) {
+pub(crate) fn prom_histo(name: &str, h: &LatencyHisto, out: &mut String) {
     let bounds = bucket_bounds();
     out.push_str(&format!("# TYPE {name}_seconds histogram\n"));
     let mut cum = 0u64;

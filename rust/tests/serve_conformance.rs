@@ -54,6 +54,7 @@ fn server_config(read_timeout: Duration, max_connections: usize) -> ServerConfig
         read_timeout,
         request_timeout: Duration::from_secs(10),
         trace: TraceConfig::default(),
+        fault: Default::default(),
     }
 }
 

@@ -54,6 +54,7 @@ fn start_server_timeouts(
         read_timeout,
         request_timeout: Duration::from_secs(10),
         trace: TraceConfig::default(),
+        fault: Default::default(),
     };
     let info = EngineInfo {
         seq_len: SEQ_LEN,
@@ -213,6 +214,7 @@ fn queue_full_returns_503() {
         read_timeout: Duration::from_secs(60),
         request_timeout: Duration::from_secs(10),
         trace: TraceConfig::default(),
+        fault: Default::default(),
     };
     let info = EngineInfo {
         seq_len: SEQ_LEN,
@@ -948,6 +950,7 @@ fn start_slow_decode_server(step: Duration) -> Server {
         read_timeout: Duration::from_secs(60),
         request_timeout: Duration::from_secs(30),
         trace: TraceConfig::default(),
+        fault: Default::default(),
     };
     let info = EngineInfo {
         seq_len: slow_seq,
@@ -1138,4 +1141,245 @@ fn continuous_beats_fixed_p95_queue_wait_under_open_loop() {
         cont.queue_p95_ms,
         cont.p95_ms
     );
+}
+
+/// One-slot continuous server for cancellation tests: the single slot is
+/// trivially saturated by one in-flight request, so a second request
+/// deterministically parks in `WaitingOnSlot`.
+fn start_one_slot_server(batch_cost: Duration) -> Server {
+    let probe = MockEngine::new(1, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(5), queue_cap: 8 },
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: 1,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let s = Server::start(
+        cfg,
+        info,
+        Arc::new(move || {
+            let mut e = MockEngine::new(1, SEQ_LEN);
+            e.batch_cost = batch_cost;
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        }),
+    )
+    .unwrap();
+    s.wait_ready(Duration::from_secs(10)).unwrap();
+    s
+}
+
+fn statz_num(statz: &Json, dotted: &str) -> f64 {
+    let mut cur = statz;
+    for part in dotted.split('.') {
+        cur = cur.req(part).unwrap_or_else(|e| panic!("{dotted}: {e}"));
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("{dotted} not a number"))
+}
+
+fn wait_for_statz(addr: &str, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let mut c = Client::connect(addr, Duration::from_secs(5)).unwrap();
+        let statz = c.get_json("/statz").unwrap();
+        if pred(&statz) {
+            return statz;
+        }
+        if t0.elapsed() > Duration::from_secs(5) {
+            panic!("timed out waiting for {what}; last /statz: {statz}");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Regression: a client that hangs up while its request is parked in
+/// `WaitingOnSlot` must be cancelled — the engine never scores a row
+/// nobody will read. Before the fix the abandoned job rode the next
+/// batch and burned a full engine call.
+#[test]
+fn disconnect_while_waiting_on_slot_cancels_without_engine_call() {
+    let server = start_one_slot_server(Duration::from_millis(300));
+    let addr = server.addr().to_string();
+
+    // A claims the only slot and scores for ~300 ms.
+    let a_addr = addr.clone();
+    let a = std::thread::spawn(move || {
+        let mut c = Client::connect(&a_addr, Duration::from_secs(10)).unwrap();
+        let req = ScoreRequest { id: Some("a".into()), tokens: vec![1, 2, 3], targets: None };
+        c.request("POST", "/v1/score", Some(&req.to_json())).unwrap()
+    });
+    wait_for_statz(&addr, "slot claimed", |s| statz_num(s, "slots.free") == 0.0);
+
+    // B parks in WaitingOnSlot behind A, then hangs up.
+    let req = ScoreRequest { id: Some("b".into()), tokens: vec![4, 5, 6], targets: None };
+    let payload = req.to_json().to_string();
+    let mut b = TcpStream::connect(&addr).unwrap();
+    write!(
+        b,
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{}",
+        payload.len(),
+        payload
+    )
+    .unwrap();
+    wait_for_statz(&addr, "b waiting on slot", |s| statz_num(s, "connections.waiting") >= 2.0);
+    drop(b);
+    wait_for_statz(&addr, "cancellation counted", |s| {
+        statz_num(s, "requests.cancelled") == 1.0
+    });
+
+    let (status, _) = a.join().unwrap();
+    assert_eq!(status, 200, "the live request is unaffected by the cancellation");
+
+    // C proves the slot recovered, then the census shows the engine
+    // scored exactly A and C — B's row never launched.
+    let mut c = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+    let req = ScoreRequest { id: Some("c".into()), tokens: vec![7, 8, 9], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let statz = c.get_json("/statz").unwrap();
+    assert_eq!(statz_num(&statz, "requests.cancelled"), 1.0);
+    assert_eq!(statz_num(&statz, "requests.ok"), 2.0);
+    assert_eq!(statz_num(&statz, "batches.rows"), 2.0, "cancelled row must not be scored");
+    assert_eq!(statz_num(&statz, "slots.free"), 1.0);
+    drop(c);
+    server.stop();
+}
+
+/// `/healthz` distinguishes liveness from readiness: a warming-up server
+/// answers 503 `starting` (no error payload) with `ready: false`, and
+/// flips to 200 `ok` when the first engine reaches its serving loop.
+#[test]
+fn healthz_reports_starting_until_engines_ready() {
+    let gate = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig::default(),
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let factory_gate = gate.clone();
+    let server = Server::start(
+        cfg,
+        info,
+        Arc::new(move || {
+            // Hold engine construction until the test has observed the
+            // warming-up healthz (deterministic, no sleep race).
+            while !factory_gate.load(std::sync::atomic::Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Ok(Box::new(MockEngine::new(MODEL_BATCH, SEQ_LEN)) as Box<dyn ScoreEngine>)
+        }),
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, body) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 503);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.req("status").unwrap().as_str(), Some("starting"));
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(false));
+    assert!(doc.get("error").is_none(), "a healthy warm-up carries no error: {body}");
+
+    gate.store(true, std::sync::atomic::Ordering::SeqCst);
+    server.wait_ready(Duration::from_secs(10)).unwrap();
+    let (status, body) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.req("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(true));
+    drop(c);
+    server.stop();
+}
+
+/// When every engine worker fails at startup, `/healthz` answers 503
+/// `unavailable` with the failure reason — distinguishable from the
+/// `starting` transient so probes (and humans) stop waiting.
+#[test]
+fn healthz_reports_unavailable_with_reason_after_startup_failure() {
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig::default(),
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let server = Server::start(
+        cfg,
+        info,
+        Arc::new(|| anyhow::bail!("engine exploded: checkpoint manifest unreadable")),
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    assert!(server.wait_ready(Duration::from_secs(5)).is_err(), "startup must fail");
+
+    let t0 = Instant::now();
+    let doc = loop {
+        let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+        let (status, body) = c.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 503);
+        let doc = Json::parse(&body).unwrap();
+        if doc.req("status").unwrap().as_str() == Some("unavailable") {
+            break doc;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "never turned unavailable: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(false));
+    let err = doc.req("error").unwrap().as_str().unwrap();
+    assert!(err.contains("engine exploded"), "reason surfaces to probes: {err}");
+    assert!(doc.req("startup_failures").unwrap().as_f64().unwrap() >= 1.0);
+    server.stop();
 }

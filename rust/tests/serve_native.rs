@@ -134,6 +134,7 @@ fn native_int8_serves_http_through_continuous_batcher() {
             read_timeout: Duration::from_secs(60),
             request_timeout: Duration::from_secs(120),
             trace: qtx::serve::obs::TraceConfig::default(),
+            fault: Default::default(),
         },
         EngineInfo {
             seq_len,

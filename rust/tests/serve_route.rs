@@ -1,0 +1,420 @@
+//! Fleet-level e2e tests of `qtx route` over real TCP: router + N mock
+//! `qtx serve` replicas, with the deterministic fault harness
+//! (`FaultSpec`) standing in for real crashes. Tier-1: no artifacts, no
+//! PJRT, no sleeps-as-synchronization (every wait polls an observable).
+//!
+//! The headline scenario is the ISSUE's acceptance drill: kill one of
+//! three replicas mid-run and require *zero lost score requests* (every
+//! response a 200 or a deliberate shed — never a 502/504), a
+//! distinguishable `replica lost` 503 for decode sessions pinned to the
+//! dead replica, and the replica rejoining the rotation after a
+//! half-open probe once it comes back.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
+use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
+use qtx::serve::fault::FaultSpec;
+use qtx::serve::loadgen::{self, LoadgenConfig};
+use qtx::serve::obs::TraceConfig;
+use qtx::serve::protocol::{GenerateRequest, ScoreRequest};
+use qtx::serve::route::{Router, RouterConfig};
+use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
+use qtx::serve::stats::EngineMem;
+use qtx::util::json::Json;
+
+const SEQ_LEN: usize = 512;
+const MODEL_BATCH: usize = 8;
+
+fn mock_factory(step_cost: Duration) -> EngineFactory {
+    Arc::new(move || {
+        let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+        e.batch_cost = Duration::ZERO;
+        e.step_cost = step_cost;
+        Ok(Box::new(e) as Box<dyn ScoreEngine>)
+    })
+}
+
+/// One continuous-mode mock replica. `port` 0 for ephemeral; an explicit
+/// port models restarting a crashed replica at its old address.
+fn start_replica(port: u16, fault: FaultSpec, step_cost: Duration) -> Server {
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port,
+        max_connections: 64,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig {
+            max_batch: MODEL_BATCH,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 128,
+        },
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+        fault,
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let s = Server::start(cfg, info, mock_factory(step_cost)).unwrap();
+    s.wait_ready(Duration::from_secs(10)).unwrap();
+    s
+}
+
+/// Router with test-speed probe cadence (the defaults are tuned for
+/// production loopback, not for a test that waits out three eject
+/// cycles).
+fn start_router(backends: Vec<String>) -> Router {
+    Router::start(RouterConfig {
+        backends,
+        probe_interval: Duration::from_millis(25),
+        probe_timeout: Duration::from_millis(250),
+        eject_after: 2,
+        halfopen_interval: Duration::from_millis(50),
+        retry_max: 3,
+        retry_backoff: Duration::from_millis(5),
+        ..RouterConfig::default()
+    })
+    .unwrap()
+}
+
+fn get_json(addr: &str, path: &str) -> Json {
+    let mut c = Client::connect(addr, Duration::from_secs(5)).unwrap();
+    c.get_json(path).unwrap()
+}
+
+fn num(j: &Json, dotted: &str) -> f64 {
+    let mut cur = j;
+    for part in dotted.split('.') {
+        cur = cur.req(part).unwrap_or_else(|e| panic!("{dotted}: {e}"));
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("{dotted} not a number"))
+}
+
+/// Poll the router's `/statz` until `pred` holds (or fail loudly with the
+/// last snapshot). Replica health converges via the probe thread, so
+/// tests wait on the census instead of sleeping a guessed interval.
+fn wait_statz(addr: &str, what: &str, timeout: Duration, pred: impl Fn(&Json) -> bool) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let statz = get_json(addr, "/statz");
+        if pred(&statz) {
+            return statz;
+        }
+        if t0.elapsed() > timeout {
+            panic!("timed out waiting for {what}; last /statz: {statz}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The acceptance drill: three replicas, one rigged to kill its
+/// front-end after 5 dispatches, a closed-loop score run through the
+/// router across the crash. Every score request must land a 200 — the
+/// kill costs retries, never responses — and the fleet census must track
+/// the ejection.
+#[test]
+fn scores_survive_replica_kill_mid_run() {
+    let healthy0 = start_replica(0, FaultSpec::default(), Duration::ZERO);
+    let doomed = start_replica(0, FaultSpec::parse("kill-after:5").unwrap(), Duration::ZERO);
+    let healthy1 = start_replica(0, FaultSpec::default(), Duration::ZERO);
+    let backends =
+        vec![healthy0.addr().to_string(), doomed.addr().to_string(), healthy1.addr().to_string()];
+    let router = start_router(backends);
+    assert!(router.wait_ready(Duration::from_secs(5)), "no replica came up");
+    let addr = router.addr().to_string();
+
+    // 120 requests across 4 closed-loop clients; the kill trips on the
+    // doomed replica's 5th dispatch, well inside the run.
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: 4,
+        requests_per_client: 30,
+        vocab: 1024,
+        seq_len: 64,
+        seed: 7,
+        timeout: Duration::from_secs(10),
+        open_rate_rps: None,
+        gen: None,
+    })
+    .unwrap();
+    assert_eq!(
+        report.errors, 0,
+        "score requests were lost across the kill: {:?}",
+        report.errors_by_cause
+    );
+    assert_eq!(report.ok, 120);
+
+    // The router retried the requests the kill interrupted, silently.
+    let statz = wait_statz(&addr, "doomed replica ejection", Duration::from_secs(5), |s| {
+        num(s, "route.replicas.ejected") == 1.0
+    });
+    assert_eq!(num(&statz, "route.replicas.total"), 3.0);
+    assert_eq!(num(&statz, "route.replicas.up"), 2.0);
+    assert_eq!(num(&statz, "route.requests.total"), 120.0);
+    assert_eq!(num(&statz, "route.requests.ok"), 120.0);
+    assert!(num(&statz, "route.requests.retries") >= 1.0, "kill should have cost retries");
+    assert_eq!(num(&statz, "route.requests.bad_gateway"), 0.0);
+    assert_eq!(num(&statz, "route.requests.timeouts"), 0.0);
+    assert_eq!(num(&statz, "route.latency.count"), 120.0);
+
+    router.stop();
+    doomed.stop();
+    healthy0.stop();
+    healthy1.stop();
+}
+
+/// An ejected replica rejoins through the half-open probe with no router
+/// intervention. The "crashed" replica is modeled as a reserved port with
+/// nothing listening (probes see connection-refused, exactly like a dead
+/// process); starting a fresh server on that port is the recovery —
+/// binding the same port a killed server's sockets still hold in
+/// TIME_WAIT would need SO_REUSEADDR, which std's listener doesn't set.
+#[test]
+fn ejected_replica_rejoins_after_halfopen_probe() {
+    let live = start_replica(0, FaultSpec::default(), Duration::ZERO);
+    // Reserve a port for the not-yet-started replica, then free it.
+    let reserved = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let router = start_router(vec![live.addr().to_string(), reserved.to_string()]);
+    assert!(router.wait_ready(Duration::from_secs(5)));
+    let addr = router.addr().to_string();
+
+    // The dead address ejects after `eject_after` refused probes.
+    wait_statz(&addr, "dead replica ejection", Duration::from_secs(5), |s| {
+        num(s, "route.replicas.ejected") == 1.0 && num(s, "route.replicas.up") == 1.0
+    });
+
+    // Recovery: the replica comes up on its advertised port. Only the
+    // half-open re-probe can fold it back in.
+    let revived = start_replica(reserved.port(), FaultSpec::default(), Duration::ZERO);
+    let statz = wait_statz(&addr, "replica rejoin", Duration::from_secs(5), |s| {
+        num(s, "route.replicas.up") == 2.0
+    });
+    assert_eq!(num(&statz, "route.replicas.ejected"), 0.0);
+
+    // The rejoined fleet serves a burst with zero errors.
+    let report = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients: 2,
+        requests_per_client: 8,
+        vocab: 1024,
+        seq_len: 64,
+        seed: 8,
+        timeout: Duration::from_secs(10),
+        open_rate_rps: None,
+        gen: None,
+    })
+    .unwrap();
+    assert_eq!(report.errors, 0, "rejoined fleet dropped requests: {:?}", report.errors_by_cause);
+
+    router.stop();
+    revived.stop();
+    live.stop();
+}
+
+/// Decode sessions are sticky — a replica dying mid-generation cannot be
+/// silently retried (the KV cache died with it). The client must see a
+/// *distinguishable* 503 (`replica lost`), and once the fleet is empty,
+/// *new* requests get the shed contract (503 + `Retry-After`) with a
+/// different message — lost state vs. no capacity are different events.
+#[test]
+fn decode_session_on_dead_replica_gets_distinguishable_503() {
+    // ~10 ms per decode step keeps the session alive long enough to kill
+    // the replica under it.
+    let backend = start_replica(0, FaultSpec::default(), Duration::from_millis(10));
+    let router = start_router(vec![backend.addr().to_string()]);
+    assert!(router.wait_ready(Duration::from_secs(5)));
+    let addr = router.addr().to_string();
+
+    let gen_addr = addr.clone();
+    let gen = std::thread::spawn(move || {
+        let mut c = Client::connect(&gen_addr, Duration::from_secs(30)).unwrap();
+        let req = GenerateRequest::greedy(Some("doomed-session".into()), vec![1, 2, 3], 400);
+        c.request("POST", "/v1/generate", Some(&req.to_json())).unwrap()
+    });
+
+    // Wait until the session's proxied connection is actually open, then
+    // pull the replica out from under it.
+    wait_statz(&addr, "decode session in flight", Duration::from_secs(5), |s| {
+        num(s, "route.connections.upstream") >= 1.0
+    });
+    backend.stop();
+
+    let (status, body) = gen.join().unwrap();
+    assert_eq!(status, 503, "lost decode session should 503: {body}");
+    assert!(body.contains("replica lost"), "distinguishable error body, got: {body}");
+
+    // Fleet is now empty. Once probes eject the dead replica, new
+    // requests shed — different message, Retry-After header present.
+    wait_statz(&addr, "dead replica ejection", Duration::from_secs(5), |s| {
+        num(s, "route.replicas.ejected") == 1.0
+    });
+    let score = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None }.to_json();
+    let payload = score.to_string();
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    write!(
+        raw,
+        "POST /v1/score HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        payload.len(),
+        payload
+    )
+    .unwrap();
+    let mut resp = String::new();
+    raw.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 503 "), "shed status, got: {resp}");
+    assert!(resp.contains("Retry-After: 1"), "shed carries Retry-After: {resp}");
+    assert!(resp.contains("no replicas available"), "shed message: {resp}");
+
+    let statz = get_json(&addr, "/statz");
+    assert_eq!(num(&statz, "route.requests.replica_lost"), 1.0);
+    assert!(num(&statz, "route.requests.shed") >= 1.0);
+
+    router.stop();
+}
+
+/// Router `/healthz` is the same contract `qtx serve` exposes (loadgen
+/// probes it blind): `ready` flips on the first Up replica, and the
+/// model limits are mirrored from the fleet so clients can size
+/// requests without knowing a replica address.
+#[test]
+fn router_healthz_mirrors_fleet_and_reports_starting() {
+    // A listener that never answers HTTP: probes fail, nothing comes Up.
+    let dead = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let router = Router::start(RouterConfig {
+        backends: vec![dead.local_addr().unwrap().to_string()],
+        probe_interval: Duration::from_millis(25),
+        probe_timeout: Duration::from_millis(100),
+        ..RouterConfig::default()
+    })
+    .unwrap();
+    let addr = router.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, body) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 503);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.req("status").unwrap().as_str(), Some("starting"));
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(false));
+    assert_eq!(doc.req("role").unwrap().as_str(), Some("router"));
+    assert_eq!(doc.req("replicas").unwrap().as_usize(), Some(1));
+    assert_eq!(doc.req("replicas_up").unwrap().as_usize(), Some(0));
+    drop(c);
+    router.stop();
+
+    // With a live replica the router is ready and mirrors its limits.
+    let backend = start_replica(0, FaultSpec::default(), Duration::ZERO);
+    let router = start_router(vec![backend.addr().to_string()]);
+    assert!(router.wait_ready(Duration::from_secs(5)));
+    let addr = router.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, body) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.req("seq_len").unwrap().as_usize(), Some(SEQ_LEN));
+    assert_eq!(doc.req("max_batch").unwrap().as_usize(), Some(MODEL_BATCH));
+    assert_eq!(doc.req("vocab").unwrap().as_usize(), Some(1024));
+    // Unknown paths / methods follow the serve conventions.
+    let (status, _) = c.request("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = c.request("PUT", "/v1/score", Some(&Json::obj(vec![]))).unwrap();
+    assert_eq!(status, 405);
+    drop(c);
+    router.stop();
+    backend.stop();
+}
+
+fn leaf_paths(j: &Json, prefix: &str, out: &mut Vec<String>) {
+    if prefix == "replica_detail" {
+        return; // JSON-only per-replica rows, excluded from the contract
+    }
+    match j {
+        Json::Obj(kv) => {
+            for (k, v) in kv {
+                let p =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                leaf_paths(v, &p, out);
+            }
+        }
+        _ => out.push(prefix.to_string()),
+    }
+}
+
+fn documented_list(marker: &str) -> Vec<String> {
+    let api = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/API.md"))
+        .expect("docs/API.md exists");
+    let begin = api
+        .find(&format!("<!-- {marker}:begin -->"))
+        .unwrap_or_else(|| panic!("docs/API.md has a {marker}:begin marker"));
+    let end = api
+        .find(&format!("<!-- {marker}:end -->"))
+        .unwrap_or_else(|| panic!("docs/API.md has a {marker}:end marker"));
+    let mut out: Vec<String> = api[begin..end]
+        .lines()
+        .filter_map(|l| l.trim().strip_prefix("- `")?.strip_suffix('`').map(str::to_string))
+        .collect();
+    out.sort();
+    assert!(!out.is_empty(), "no entries documented between the {marker} markers");
+    out
+}
+
+/// Bidirectional doc conformance for the router's `/statz` and
+/// `/metricz`, in the same style as the serve-side contract tests: the
+/// live surfaces must expose exactly the keys/families docs/API.md
+/// lists between the route markers.
+#[test]
+fn route_statz_and_metricz_match_documented_contract() {
+    let backend = start_replica(0, FaultSpec::default(), Duration::ZERO);
+    let router = start_router(vec![backend.addr().to_string()]);
+    assert!(router.wait_ready(Duration::from_secs(5)));
+    let addr = router.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "one scored request fills the histograms");
+
+    let statz = c.get_json("/statz").unwrap();
+    let mut live = Vec::new();
+    leaf_paths(&statz, "", &mut live);
+    live.sort();
+    assert_eq!(
+        live,
+        documented_list("route-statz-keys"),
+        "live router /statz keys (left) diverge from docs/API.md route-statz-keys (right)"
+    );
+
+    let (status, text) = c.request("GET", "/metricz", None).unwrap();
+    assert_eq!(status, 200);
+    let mut families: Vec<String> = text
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| l.split_whitespace().next().map(str::to_string))
+        .collect();
+    families.sort();
+    families.dedup();
+    assert_eq!(
+        families,
+        documented_list("route-metricz-names"),
+        "live router /metricz families (left) diverge from docs/API.md route-metricz-names"
+    );
+
+    drop(c);
+    router.stop();
+    backend.stop();
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# Routing smoke for CI: a three-replica mock fleet behind `qtx route`,
+# one replica rigged to kill its front-end mid-run (`--fault
+# kill-after:20`), and a closed-loop `qtx loadgen` drill through the
+# router. The acceptance bar is the ROUTING.md contract: every score
+# request lands a 200 or a deliberate 503 shed — any other failure cause
+# (reset, refused, timeout, 5xx) means a request was lost and the step
+# fails. Afterwards the router's /metricz is scraped (attach mode of
+# scrape_metricz.sh) and archived as ROUTE_METRICZ_snapshot.txt.
+#
+#   scripts/route_smoke.sh
+#
+# Ports: QTX_ROUTE_SMOKE_PORT (router, default 8793) and the next three
+# for replicas. Pure bash + /dev/tcp — no curl in the toolchain image.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ROUTER_PORT="${QTX_ROUTE_SMOKE_PORT:-8793}"
+R1=$((ROUTER_PORT + 1)); R2=$((ROUTER_PORT + 2)); R3=$((ROUTER_PORT + 3))
+BIN=target/release/qtx
+[[ -x "$BIN" ]] || cargo build --release
+
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]}"; do kill "$pid" 2>/dev/null || true; done
+    for pid in "${PIDS[@]}"; do wait "$pid" 2>/dev/null || true; done
+}
+trap cleanup EXIT
+
+"$BIN" serve --mock --port "$R1" & PIDS+=($!)
+# The doomed replica: its 20th dispatched request (well inside the 120
+# the drill sends) closes the listener and drops every connection.
+"$BIN" serve --mock --port "$R2" --fault kill-after:20 & PIDS+=($!)
+"$BIN" serve --mock --port "$R3" & PIDS+=($!)
+# Test-speed probe cadence (the production defaults would make CI wait
+# out multi-second eject cycles for nothing).
+"$BIN" route --port "$ROUTER_PORT" \
+    --backends "127.0.0.1:$R1,127.0.0.1:$R2,127.0.0.1:$R3" \
+    --probe-interval-ms 25 --probe-timeout-ms 250 --eject-after 2 \
+    --halfopen-ms 50 --retry-backoff-ms 5 & PIDS+=($!)
+
+http_get() { # http_get PORT PATH
+    exec 3<>"/dev/tcp/127.0.0.1/$1"
+    printf 'GET %s HTTP/1.0\r\nHost: localhost\r\n\r\n' "$2" >&3
+    sed $'1,/^\r*$/d' <&3
+    exec 3<&- 3>&-
+}
+
+ready=0
+for _ in $(seq 1 100); do
+    if body=$(http_get "$ROUTER_PORT" /healthz 2>/dev/null) \
+        && [[ "$body" == *'"ok"'* ]]; then
+        ready=1
+        break
+    fi
+    sleep 0.1
+done
+[[ "$ready" == 1 ]] || { echo "route_smoke: router never became ready" >&2; exit 1; }
+
+# 120 closed-loop scores across the kill; loadgen counts failures per
+# cause instead of aborting, so the report is the verdict.
+LOADGEN_OUT=$("$BIN" loadgen --port "$ROUTER_PORT" --threads 4 --requests 30)
+echo "$LOADGEN_OUT"
+json=$(grep '^loadgen JSON:' <<<"$LOADGEN_OUT" | sed 's/^loadgen JSON: //')
+[[ -n "$json" ]] || { echo "route_smoke: no loadgen JSON line" >&2; exit 1; }
+
+# Fail on any non-shed failure cause. 503 sheds are the admission
+# contract under saturation; everything else is a lost request.
+causes=$(sed -n 's/.*"errors_by_cause":{\([^}]*\)}.*/\1/p' <<<"$json")
+non_shed=$(tr ',' '\n' <<<"$causes" | grep -v '^[[:space:]]*$' \
+    | grep -v '"http_503"' || true)
+if [[ -n "$non_shed" ]]; then
+    echo "route_smoke: non-shed failures through the router: $non_shed" >&2
+    exit 1
+fi
+
+# The kill must actually have happened and been noticed: poll the fleet
+# census until the doomed replica shows up ejected.
+ejected=0
+for _ in $(seq 1 100); do
+    if statz=$(http_get "$ROUTER_PORT" /statz 2>/dev/null) \
+        && [[ "$statz" == *'"ejected":1'* ]]; then
+        ejected=1
+        break
+    fi
+    sleep 0.1
+done
+[[ "$ejected" == 1 ]] || {
+    echo "route_smoke: doomed replica was never ejected" >&2
+    http_get "$ROUTER_PORT" /statz >&2 || true
+    exit 1
+}
+
+# Archive the router's exposition next to the serve-side snapshot.
+scripts/scrape_metricz.sh ROUTE_METRICZ_snapshot.txt "$ROUTER_PORT"
+grep -q '^# TYPE qtx_route_replicas_ejected gauge$' ROUTE_METRICZ_snapshot.txt
+grep -q '^# TYPE qtx_route_requests_retries counter$' ROUTE_METRICZ_snapshot.txt
+echo "route_smoke: 120 requests over a mid-run replica kill, no lost requests"

@@ -4,7 +4,11 @@
 # METRICZ_snapshot.txt (uploaded as a CI artifact next to BENCH_*.json).
 # Fails if the exposition is missing the expected families/samples.
 #
-#   scripts/scrape_metricz.sh [OUT.txt]    (default: METRICZ_snapshot.txt)
+#   scripts/scrape_metricz.sh [OUT.txt]         (default: METRICZ_snapshot.txt)
+#   scripts/scrape_metricz.sh OUT.txt PORT      attach mode: scrape an
+#       already-running server (a `qtx route` fleet, say) at PORT instead
+#       of starting a mock — no traffic is sent and only generic
+#       exposition sanity is checked (the caller owns the surface).
 #
 # Pure bash + /dev/tcp — the CI toolchain image carries no curl.
 
@@ -12,13 +16,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 OUT="${1:-METRICZ_snapshot.txt}"
-PORT="${QTX_SCRAPE_PORT:-8791}"
+ATTACH="${2:-}"
+PORT="${ATTACH:-${QTX_SCRAPE_PORT:-8791}}"
 BIN=target/release/qtx
 [[ -x "$BIN" ]] || cargo build --release
 
-"$BIN" serve --mock --port "$PORT" &
-SERVER=$!
-trap 'kill "$SERVER" 2>/dev/null || true; wait "$SERVER" 2>/dev/null || true' EXIT
+SERVER=""
+if [[ -z "$ATTACH" ]]; then
+    "$BIN" serve --mock --port "$PORT" &
+    SERVER=$!
+    trap 'kill "$SERVER" 2>/dev/null || true; wait "$SERVER" 2>/dev/null || true' EXIT
+fi
 
 # One-shot HTTP over /dev/tcp; HTTP/1.0 so the server closes for us.
 # Prints the response body (headers stripped at the blank line).
@@ -49,15 +57,23 @@ for _ in $(seq 1 100); do
 done
 [[ "$ready" == 1 ]] || { echo "scrape_metricz: server never became healthy" >&2; exit 1; }
 
-# Traffic so counters, histograms, and decode telemetry are non-trivial.
-http_post /v1/score '{"tokens": [1, 2, 3]}' >/dev/null
-http_post /v1/generate '{"tokens": [3, 1, 4], "max_new_tokens": 4}' >/dev/null
+if [[ -z "$ATTACH" ]]; then
+    # Traffic so counters, histograms, and decode telemetry are non-trivial.
+    http_post /v1/score '{"tokens": [1, 2, 3]}' >/dev/null
+    http_post /v1/generate '{"tokens": [3, 1, 4], "max_new_tokens": 4}' >/dev/null
+fi
 
 http_get /metricz >"$OUT"
 
-# Sanity: families announced, counters carry the traffic we sent.
-grep -q '^# TYPE qtx_requests_total counter$' "$OUT"
-grep -q '^# TYPE qtx_latency_seconds histogram$' "$OUT"
-grep -q '^# TYPE qtx_quant_gate_off_ratio gauge$' "$OUT"
-grep -q '^qtx_requests_ok 2$' "$OUT"
+if [[ -z "$ATTACH" ]]; then
+    # Sanity: families announced, counters carry the traffic we sent.
+    grep -q '^# TYPE qtx_requests_total counter$' "$OUT"
+    grep -q '^# TYPE qtx_latency_seconds histogram$' "$OUT"
+    grep -q '^# TYPE qtx_quant_gate_off_ratio gauge$' "$OUT"
+    grep -q '^qtx_requests_ok 2$' "$OUT"
+else
+    # Attach mode: the surface varies (serve vs route) — require a
+    # well-formed, non-empty exposition.
+    grep -q '^# TYPE qtx_' "$OUT"
+fi
 echo "scrape_metricz: wrote $OUT ($(wc -l <"$OUT") lines)"
