@@ -10,6 +10,8 @@
 #                    into BENCH_gemm.json + BENCH_serve.json
 #   make scrape      observability smoke: scrape a live mock server's
 #                    /metricz into METRICZ_snapshot.txt
+#   make artifact-smoke  pack/doctor/install lifecycle + hot-reload drill
+#                    (transcript in ARTIFACT_DOCTOR_transcript.txt)
 #   make ci          local mirror of .github/workflows/ci.yml
 #   make clean       drop generated artifacts/runs (not target/)
 
@@ -23,7 +25,7 @@ STEPS ?= 200
 # The three configs the integration tests load (see rust/tests/integration.rs).
 CONFIGS ?= bert_tiny_softmax,opt_tiny_softmax,bert_tiny_gated_linear
 
-.PHONY: artifacts verify fast pytest bench scrape ci clean
+.PHONY: artifacts verify fast pytest bench scrape artifact-smoke ci clean
 
 artifacts:
 	cd python && python -m compile.aot --out-dir $(abspath $(ARTIFACTS)) --configs $(CONFIGS)
@@ -54,8 +56,12 @@ bench:
 scrape:
 	scripts/scrape_metricz.sh
 
+artifact-smoke:
+	scripts/artifact_smoke.sh
+
 # Same jobs the workflow runs, in one command.
-ci: verify pytest bench scrape
+ci: verify pytest bench scrape artifact-smoke
 
 clean:
-	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json BENCH_gemm.json METRICZ_snapshot.txt
+	rm -rf $(ARTIFACTS) $(RUNS) BENCH_serve.json BENCH_gemm.json METRICZ_snapshot.txt \
+		ARTIFACT_DOCTOR_transcript.txt

@@ -1,6 +1,6 @@
 //! Serving throughput/latency benches.
 //!
-//! Eight sections. All but the engine comparison run on the deterministic
+//! Nine sections. All but the engine comparison run on the deterministic
 //! mock engine (set QTX_BENCH_SERVE_COST_US to change the simulated
 //! per-dispatch cost; default 3000µs ≈ a tiny-config serve_score
 //! invocation):
@@ -48,6 +48,12 @@
 //!    half-open rejoin time and score retries; deliberate 503 sheds are
 //!    tolerated, any other failure aborts the bench (zero lost requests,
 //!    the docs/ROUTING.md contract).
+//! 9. **Hot reload** (the operable-artifacts trajectory): closed-loop
+//!    score load straight at one server and through `qtx route` over two
+//!    replicas while `POST /admin/reload` swaps the weight generation
+//!    mid-run — the row records admin round-trip time and the final
+//!    `/statz` generation, and any lost request aborts the bench (the
+//!    docs/ARTIFACTS.md zero-downtime contract).
 //!
 //! Run: cargo bench --bench bench_serve
 //! Env: QTX_BENCH_REQS     closed-loop requests per client (default 64)
@@ -70,15 +76,17 @@ use std::time::{Duration, Instant};
 use qtx::infer::NativeInt8Engine;
 use qtx::metrics::table::render;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
-use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine};
+use qtx::serve::engine::{EngineFactory, EngineSpec, MockEngine, PjrtEngine, ScoreEngine, WeightHub};
 use qtx::serve::fault::FaultSpec;
 use qtx::serve::loadgen::{self, ConnectionHold, GenLoad, LoadgenConfig, LoadgenReport};
 use qtx::serve::obs::TraceConfig;
 use qtx::serve::route::{Router, RouterConfig};
 use qtx::serve::poll::raise_nofile_limit;
 use qtx::serve::protocol::ScoreRequest;
-use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
-use qtx::serve::stats::EngineMem;
+use qtx::serve::server::{
+    AdminHooks, Client, EngineInfo, ReloadFn, ReloadOutcome, Server, ServerConfig,
+};
+use qtx::serve::stats::{ArtifactId, EngineMem};
 use qtx::util::json::Json;
 
 const SEQ_LEN: usize = 64;
@@ -762,6 +770,183 @@ fn bench_route_recovery(clients: usize, reqs: usize, cost_us: u64) -> anyhow::Re
 }
 
 // ---------------------------------------------------------------------------
+// Section 9: hot reload — /admin/reload under closed-loop load
+// ---------------------------------------------------------------------------
+
+struct ReloadRow {
+    mode: &'static str,
+    requests: u64,
+    rps: f64,
+    p95: f64,
+    reloads: u64,
+    reload_ms: f64,
+    generation: f64,
+}
+
+/// A continuous-batching replica whose mock engine tracks a `WeightHub`,
+/// with the admin reload hook wired: each `POST /admin/reload` publishes a
+/// fresh weight generation (the mock stand-in for the native engine's
+/// `load_weights` + `hub.publish` path in `qtx serve`).
+fn start_reload_server(cost_us: u64) -> anyhow::Result<Server> {
+    let hub = Arc::new(WeightHub::new(Arc::new(())));
+    let factory: EngineFactory = {
+        let hub = hub.clone();
+        Arc::new(move || {
+            let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN).with_hub(hub.clone());
+            e.batch_cost = Duration::from_micros(cost_us);
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        })
+    };
+    let reload: ReloadFn = {
+        let hub = hub.clone();
+        Arc::new(move |_dir| {
+            Ok(ReloadOutcome { generation: hub.publish(Arc::new(())), artifact: None })
+        })
+    };
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let server = Server::start_with_admin(
+        ServerConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            max_connections: 256,
+            engines: 1,
+            policy: BatchPolicy::Continuous,
+            batcher: BatcherConfig {
+                max_batch: MATRIX_BATCH,
+                max_wait: Duration::from_millis(5),
+                queue_cap: 1024,
+            },
+            admit_window: Duration::ZERO,
+            read_timeout: Duration::from_secs(60),
+            request_timeout: Duration::from_secs(60),
+            trace: TraceConfig { capacity: 0, slow_ms: 0 },
+            fault: FaultSpec::default(),
+        },
+        EngineInfo {
+            seq_len: SEQ_LEN,
+            max_batch: MATRIX_BATCH,
+            vocab: 256,
+            causal: probe.causal,
+            decode: true,
+            describe: probe.describe(),
+            mem: EngineMem::default(),
+            gemm_threads: 1,
+        },
+        factory,
+        AdminHooks {
+            reload: Some(reload),
+            artifact: Some(ArtifactId {
+                schema: 2,
+                install_id: "bench-seed".into(),
+                sha256_short: "0123456789ab".into(),
+            }),
+        },
+    )?;
+    server.wait_ready(Duration::from_secs(10))?;
+    Ok(server)
+}
+
+/// The zero-downtime contract as a measurement: closed-loop score load —
+/// straight at one replica (`routed = false`) or through `qtx route` over
+/// two (`routed = true`) — while `/admin/reload` swaps the weight
+/// generation mid-run, twice. Any lost request aborts the bench; the row
+/// records the admin round-trip and the final `/statz` generation.
+fn bench_reload(
+    routed: bool,
+    clients: usize,
+    reqs: usize,
+    cost_us: u64,
+) -> anyhow::Result<ReloadRow> {
+    let mut servers = vec![start_reload_server(cost_us)?];
+    let mut router = None;
+    let addr = if routed {
+        servers.push(start_reload_server(cost_us)?);
+        let r = Router::start(RouterConfig {
+            backends: servers.iter().map(|s| s.addr().to_string()).collect(),
+            probe_interval: Duration::from_millis(25),
+            eject_after: 2,
+            halfopen_interval: Duration::from_millis(50),
+            retry_backoff: Duration::from_millis(5),
+            ..RouterConfig::default()
+        })?;
+        anyhow::ensure!(r.wait_ready(Duration::from_secs(10)), "reload fleet never came up");
+        let addr = r.addr().to_string();
+        router = Some(r);
+        addr
+    } else {
+        servers[0].addr().to_string()
+    };
+    // Reloads always target replica 0 directly: /admin is a per-replica
+    // surface, not a routed one.
+    let admin_addr = servers[0].addr().to_string();
+
+    let load_cfg = LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        requests_per_client: reqs,
+        vocab: 256,
+        seq_len: SEQ_LEN,
+        seed: 45,
+        timeout: Duration::from_secs(60),
+        open_rate_rps: None,
+        gen: None,
+    };
+    let load = std::thread::spawn(move || loadgen::run(&load_cfg));
+
+    let n_reloads = 2u64;
+    let mut admin_ms = 0.0;
+    let mut last_gen = 0.0;
+    let body = Json::obj(vec![("dir", Json::Str("/tmp/qtx-bench-reload".into()))]);
+    for _ in 0..n_reloads {
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        let mut c = Client::connect(&admin_addr, Duration::from_secs(10))?;
+        let (status, resp) = c.request("POST", "/admin/reload", Some(&body))?;
+        admin_ms += t0.elapsed().as_secs_f64() * 1000.0;
+        anyhow::ensure!(status == 200, "/admin/reload: status {status}: {resp}");
+        let j = Json::parse(&resp).map_err(|e| anyhow::anyhow!("reload response: {e}"))?;
+        last_gen = j.req("generation")?.as_f64().unwrap_or(0.0);
+    }
+
+    let report = load.join().expect("reload loadgen thread panicked")?;
+    if routed {
+        ensure_only_shed(&report, "reload routed")?;
+    } else {
+        anyhow::ensure!(
+            report.errors == 0,
+            "reload drill lost requests: {:?}",
+            report.errors_by_cause
+        );
+    }
+
+    let mut c = Client::connect(&admin_addr, Duration::from_secs(5))?;
+    let statz = c.get_json("/statz")?;
+    let weights = statz.req("weights")?;
+    let generation = weights.req("generation")?.as_f64().unwrap_or(0.0);
+    let reloads = weights.req("reloads")?.as_f64().unwrap_or(0.0) as u64;
+    anyhow::ensure!(
+        generation == last_gen && reloads == n_reloads,
+        "statz says generation {generation} / reloads {reloads}, expected {last_gen} / {n_reloads}"
+    );
+    drop(c);
+    if let Some(r) = router {
+        r.stop();
+    }
+    for s in servers {
+        s.stop();
+    }
+    Ok(ReloadRow {
+        mode: if routed { "routed" } else { "direct" },
+        requests: report.sent,
+        rps: report.throughput_rps,
+        p95: report.p95_ms,
+        reloads: n_reloads,
+        reload_ms: admin_ms / n_reloads as f64,
+        generation,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Section 3: engine dimension — pjrt (fake-quant f32) vs native-int8
 // ---------------------------------------------------------------------------
 
@@ -1253,6 +1438,54 @@ fn main() -> anyhow::Result<()> {
         "\nrecovery drill (kill-after:8 on one of two replicas): detect {:.0} ms, \
          half-open rejoin {:.0} ms, {:.0} score retries, zero lost requests.",
         rec.detect_ms, rec.rejoin_ms, rec.retries
+    );
+
+    // -- hot reload: /admin/reload under closed-loop load --------------------
+    let mut reload_rows = Vec::new();
+    for routed in [false, true] {
+        let r = bench_reload(routed, route_clients, route_reqs, cost_us)?;
+        eprintln!(
+            "[bench_serve] hot_reload {}: {} reqs across {} reloads, admin {:.1} ms, \
+             generation {:.0}, zero lost",
+            r.mode, r.requests, r.reloads, r.reload_ms, r.generation
+        );
+        println!(
+            "bench_serve JSON: {}",
+            Json::obj(vec![
+                ("section", Json::Str("hot_reload".into())),
+                ("mode", Json::Str(r.mode.into())),
+                ("clients", Json::Num(route_clients as f64)),
+                ("requests", Json::Num(r.requests as f64)),
+                ("reloads", Json::Num(r.reloads as f64)),
+                ("throughput_rps", Json::Num(r.rps)),
+                ("p95_ms", Json::Num(r.p95)),
+                ("reload_ms", Json::Num(r.reload_ms)),
+                ("final_generation", Json::Num(r.generation)),
+            ])
+        );
+        reload_rows.push(r);
+    }
+    let reload_table: Vec<Vec<String>> = reload_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.mode.to_string(),
+                r.requests.to_string(),
+                r.reloads.to_string(),
+                format!("{:.1}", r.rps),
+                format!("{:.2}", r.p95),
+                format!("{:.1}", r.reload_ms),
+                format!("{:.0}", r.generation),
+            ]
+        })
+        .collect();
+    println!(
+        "\n## hot reload — `POST /admin/reload` under closed-loop load \
+         ({route_clients} clients, mock engine; zero lost requests enforced)\n\n{}",
+        render(
+            &["mode", "reqs", "reloads", "req/s", "p95 ms", "admin ms", "final gen"],
+            &reload_table
+        )
     );
 
     // -- engine dimension: pjrt vs native-int8 -------------------------------

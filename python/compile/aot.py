@@ -45,7 +45,64 @@ def to_hlo_text(lowered) -> str:
 # Bump when the manifest *document* changes shape without a program/config
 # change (fingerprint-matched artifact dirs skip rebuild, so a new manifest
 # key needs this to reach existing artifacts). schema 2: + "version" key.
-MANIFEST_SCHEMA = 2
+# schema 3: + "package" block (checksummed entries + provenance).
+MANIFEST_SCHEMA = 3
+
+# Version of the "package" block itself (mirrors
+# rust/src/runtime/package.rs::PACKAGE_SCHEMA — the rust side fail-closed
+# rejects any other value, and treats manifests without the block as the
+# read-only legacy tier).
+PACKAGE_SCHEMA = 2
+
+
+def _sha256_file(path: Path) -> tuple[str, int]:
+    h = hashlib.sha256()
+    data = path.read_bytes()
+    h.update(data)
+    return h.hexdigest(), len(data)
+
+
+def _entry_kind(name: str) -> str:
+    # Mirrors rust/src/runtime/package.rs::kind_of.
+    if name.endswith(".hlo.txt"):
+        return "program"
+    if name.endswith(".ckpt"):
+        return "checkpoint"
+    if name.endswith(".json"):
+        return "meta"
+    return "data"
+
+
+def package_block(cfg: ModelConfig, cdir: Path, fp: str,
+                  quant_points: list[str]) -> dict:
+    """The manifest-v2 "package" block: per-entry {path, kind, bytes,
+    sha256} over every payload file (the manifest itself is excluded, so
+    writing it cannot invalidate checksums) plus a provenance record."""
+    entries = []
+    for path in sorted(cdir.iterdir()):
+        if not path.is_file() or path.name.startswith("."):
+            continue
+        if path.name == "manifest.json":
+            continue
+        sha, size = _sha256_file(path)
+        entries.append({"path": path.name, "kind": _entry_kind(path.name),
+                        "bytes": size, "sha256": sha})
+    install_blob = "".join(
+        f"{e['path']} {e['bytes']} {e['sha256']}\n" for e in entries)
+    variant = f"{cfg.attention}+gate" if cfg.use_gate else cfg.attention
+    return {
+        "schema": PACKAGE_SCHEMA,
+        "install_id": hashlib.sha256(install_blob.encode()).hexdigest()[:16],
+        "entries": entries,
+        "provenance": {
+            "fingerprint": fp,
+            "config": cfg.name,
+            "variant": variant,
+            "calibration_id": hashlib.sha256(
+                ",".join(quant_points).encode()).hexdigest()[:16],
+            "toolchain": f"aot.py jax-{jax.__version__}",
+        },
+    }
 
 
 def config_fingerprint(cfg: ModelConfig) -> str:
@@ -109,6 +166,9 @@ def lower_config(cfg: ModelConfig, out_dir: Path, force: bool = False) -> bool:
             flush=True,
         )
 
+    # Computed last: every program file is on disk, so the entry checksums
+    # cover the final payload bytes.
+    manifest["package"] = package_block(cfg, cdir, fp, manifest["quant_points"])
     manifest_path.write_text(json.dumps(manifest, indent=1))
     return True
 

@@ -69,6 +69,37 @@ def test_hlo_parameter_count_matches_manifest(built):
         )
 
 
+def test_package_block_covers_every_payload_file(built):
+    """Manifest v2: the "package" block must checksum every payload file
+    (manifest excluded) and carry the provenance record the serving side
+    surfaces in /statz (see rust/src/runtime/package.rs)."""
+    import hashlib
+
+    cfg, cdir = built
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    pkg = manifest["package"]
+    assert pkg["schema"] == aot.PACKAGE_SCHEMA
+    assert len(pkg["install_id"]) == 16
+
+    payload = sorted(
+        p.name for p in cdir.iterdir()
+        if p.is_file() and p.name != "manifest.json" and not p.name.startswith(".")
+    )
+    assert [e["path"] for e in pkg["entries"]] == payload
+    for entry in pkg["entries"]:
+        data = (cdir / entry["path"]).read_bytes()
+        assert entry["bytes"] == len(data)
+        assert entry["sha256"] == hashlib.sha256(data).hexdigest()
+        assert entry["kind"] == "program"  # aot emits only .hlo.txt payloads
+
+    prov = pkg["provenance"]
+    assert prov["config"] == cfg.name
+    assert prov["fingerprint"] == manifest["fingerprint"]
+    assert prov["variant"].startswith(cfg.attention)
+    assert len(prov["calibration_id"]) == 16
+    assert prov["toolchain"].startswith("aot.py")
+
+
 def test_fingerprint_skips_rebuild(built, tmp_path):
     cfg, _ = built
     assert aot.lower_config(cfg, tmp_path) is True

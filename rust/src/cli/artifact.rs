@@ -1,0 +1,75 @@
+//! `qtx pack` / `qtx install` / `qtx doctor` — the operable-artifact
+//! lifecycle (see `docs/ARTIFACTS.md`).
+//!
+//! * `pack --dir DIR` — checksum every payload file and write the
+//!   manifest-v2 `"package"` block in place.
+//! * `install --from SRC --to DEST` — staging-dir + checksum verify +
+//!   atomic `rename(2)` under a lockfile; a crashed install never leaves
+//!   a half-written destination.
+//! * `doctor --dir DIR` — diagnose a dir against this binary's required
+//!   schema. Exit codes: 0 ok, 1 fixable, 2 fail (scriptable, used by
+//!   `scripts/artifact_smoke.sh`).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::package::{self, DoctorVerdict};
+use crate::util::cli::Args;
+
+fn dir_flag(args: &Args, key: &str) -> Result<PathBuf> {
+    Ok(PathBuf::from(
+        args.str_opt(key).with_context(|| format!("--{key} DIR is required"))?,
+    ))
+}
+
+pub fn pack(args: &Args) -> Result<()> {
+    let dir = dir_flag(args, "dir")?;
+    args.finish()?;
+    let info = package::pack(&dir)?;
+    println!(
+        "packed {}: schema {}, install_id {}, {} entries / {} bytes ({} · {})",
+        dir.display(),
+        info.schema,
+        info.install_id,
+        info.entries.len(),
+        info.payload_bytes(),
+        info.provenance.config,
+        info.provenance.variant,
+    );
+    Ok(())
+}
+
+pub fn install(args: &Args) -> Result<()> {
+    let src = dir_flag(args, "from")?;
+    let dest = dir_flag(args, "to")?;
+    args.finish()?;
+    let info = package::install(&src, &dest)?;
+    println!(
+        "installed {} -> {}: install_id {}, {} entries verified",
+        src.display(),
+        dest.display(),
+        info.install_id,
+        info.entries.len(),
+    );
+    Ok(())
+}
+
+pub fn doctor(args: &Args) -> Result<()> {
+    let dir = dir_flag(args, "dir")?;
+    args.finish()?;
+    let report = package::doctor(&dir);
+    let (verdict, code) = match report.verdict {
+        DoctorVerdict::Ok => ("ok", 0),
+        DoctorVerdict::Fixable => ("fixable", 1),
+        DoctorVerdict::Fail => ("fail", 2),
+    };
+    println!("doctor {}: {verdict}", dir.display());
+    for note in &report.notes {
+        println!("  - {note}");
+    }
+    if code != 0 {
+        std::process::exit(code);
+    }
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //! bench targets, which drive the same table/figure code paths).
 
 pub mod analyze;
+pub mod artifact;
 pub mod basic;
 pub mod route;
 pub mod serve;

@@ -41,19 +41,46 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::basic::{paths_from_args, spec_from_args};
 use crate::infer::{KvCache, NativeInt8Engine, Scratch};
+use crate::runtime::package::{self, PackageInfo};
 use crate::serve::batcher::{BatchPolicy, BatcherConfig};
 use crate::serve::engine::{
-    EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
+    EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine, WeightHub,
 };
 use crate::serve::fault::FaultSpec;
 use crate::serve::loadgen::{
     run as loadgen_run, render_report, ConnectionHold, GenLoad, LoadgenConfig,
 };
 use crate::serve::obs::{chrome_trace_events, TraceConfig};
-use crate::serve::server::{Client, EngineInfo, Server, ServerConfig};
-use crate::serve::stats::EngineMem;
+use crate::serve::server::{
+    AdminHooks, Client, EngineInfo, ReloadFn, ReloadOutcome, Server, ServerConfig,
+};
+use crate::serve::stats::{ArtifactId, EngineMem};
 use crate::util::cli::Args;
 use crate::util::log;
+
+/// The `/statz` identity of a verified package.
+fn artifact_id(pkg: &PackageInfo) -> ArtifactId {
+    ArtifactId {
+        schema: pkg.schema,
+        install_id: pkg.install_id.clone(),
+        sha256_short: pkg.sha256_short(),
+    }
+}
+
+/// Split an artifact dir path into the `(artifacts_root, config_name)`
+/// pair [`EngineSpec`] addresses artifacts by.
+fn split_artifact_dir(dir: &std::path::Path) -> Result<(std::path::PathBuf, String)> {
+    let name = dir
+        .file_name()
+        .and_then(|n| n.to_str())
+        .map(str::to_string)
+        .with_context(|| format!("artifact dir {dir:?} has no usable name component"))?;
+    let root = match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    Ok((root, name))
+}
 
 /// Batcher/server knobs shared by `serve` and `bench_serve`.
 pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
@@ -105,10 +132,14 @@ pub fn serve(args: &Args) -> Result<()> {
     };
     let mock = engine == EngineKind::Mock;
 
-    let (info, factory): (EngineInfo, EngineFactory) = if mock {
+    let (info, factory, admin): (EngineInfo, EngineFactory, AdminHooks) = if mock {
         let seq_len = args.usize("seq-len", 64)?;
         let model_batch = args.usize("model-batch", 32)?;
         let cost_us = args.u64("mock-cost-us", 3_000)?;
+        // `--artifact-dir DIR`: serve a *packaged* artifact dir's identity
+        // (verified at startup, shown in `/statz`) and accept
+        // `POST /admin/reload` — the operability drill path without PJRT.
+        let artifact_dir = args.str_opt("artifact-dir").map(std::path::PathBuf::from);
         args.finish()?;
         let max_batch = if cfg.batcher.max_batch == 0 {
             model_batch
@@ -128,12 +159,40 @@ pub fn serve(args: &Args) -> Result<()> {
             mem: EngineMem { workers: cfg.engines, ..EngineMem::default() },
             gemm_threads: 1,
         };
-        let factory: EngineFactory = Arc::new(move || {
-            let mut e = MockEngine::new(model_batch, seq_len);
-            e.batch_cost = Duration::from_micros(cost_us);
-            Ok(Box::new(e) as Box<dyn ScoreEngine>)
-        });
-        (info, factory)
+        // The mock has no weights; its hub carries only the generation
+        // counter (folded into every scored hash, so a reload visibly —
+        // and deterministically — changes new sessions' outputs).
+        let hub = Arc::new(WeightHub::new(Arc::new(())));
+        let factory: EngineFactory = {
+            let hub = hub.clone();
+            Arc::new(move || {
+                let mut e = MockEngine::new(model_batch, seq_len).with_hub(hub.clone());
+                e.batch_cost = Duration::from_micros(cost_us);
+                Ok(Box::new(e) as Box<dyn ScoreEngine>)
+            })
+        };
+        let admin = match artifact_dir {
+            Some(dir) => {
+                let pkg = package::verify_dir(&dir)
+                    .with_context(|| format!("verifying --artifact-dir {dir:?}"))?;
+                log::info(&format!(
+                    "artifact {} verified: schema {}, {} entries, {} bytes",
+                    dir.display(),
+                    pkg.schema,
+                    pkg.entries.len(),
+                    pkg.payload_bytes()
+                ));
+                let reload: ReloadFn = Arc::new(move |dir: &std::path::Path| {
+                    let pkg = package::verify_dir(dir)
+                        .with_context(|| format!("verifying reload dir {dir:?}"))?;
+                    let generation = hub.publish(Arc::new(()));
+                    Ok(ReloadOutcome { generation, artifact: Some(artifact_id(&pkg)) })
+                });
+                AdminHooks { reload: Some(reload), artifact: Some(artifact_id(&pkg)) }
+            }
+            None => AdminHooks::default(),
+        };
+        (info, factory, admin)
     } else {
         let (artifacts, runs) = paths_from_args(args);
         let spec = spec_from_args(args, "bert_tiny_softmax", 1000)?;
@@ -147,14 +206,32 @@ pub fn serve(args: &Args) -> Result<()> {
         let gemm_threads = args.usize("gemm-threads", NativeInt8Engine::default_gemm_threads())?;
         args.finish()?;
         // Manifest facts without touching PJRT (pure JSON).
-        let manifest =
-            crate::runtime::Manifest::load(&artifacts.join(&spec.config))
-                .with_context(|| format!("loading manifest for {}", spec.config))?;
+        let art_dir = artifacts.join(&spec.config);
+        let manifest = crate::runtime::Manifest::load(&art_dir)
+            .with_context(|| format!("loading manifest for {}", spec.config))?;
         if engine == EngineKind::Pjrt {
-            // Fail before binding the port: the error names the found vs.
-            // required manifest version.
-            manifest.require_serve_score()?;
+            // Fail before binding the port: the error names the artifact
+            // dir, its package schema, and the found vs. required
+            // manifest version.
+            manifest.require_serve_score_at(&art_dir)?;
         }
+        // Packaged dirs get full content verification before serving
+        // (fail closed on corruption); legacy dirs load but carry no
+        // identity in `/statz`.
+        let startup_artifact = if manifest.package.is_some() {
+            let pkg = package::verify_dir(&art_dir)
+                .with_context(|| format!("verifying packaged artifact {art_dir:?}"))?;
+            log::info(&format!(
+                "artifact {} verified: schema {}, {} entries, {} bytes",
+                art_dir.display(),
+                pkg.schema,
+                pkg.entries.len(),
+                pkg.payload_bytes()
+            ));
+            Some(artifact_id(&pkg))
+        } else {
+            None
+        };
         let mcfg = &manifest.config;
         if !ckpt.exists() {
             bail!(
@@ -178,7 +255,7 @@ pub fn serve(args: &Args) -> Result<()> {
             gate_scale: spec.gate_scale,
             calib_seed: seed.wrapping_mul(1000).wrapping_add(1),
         };
-        let (factory, mem): (EngineFactory, EngineMem) = match engine {
+        let (factory, mem, reload): (EngineFactory, EngineMem, Option<ReloadFn>) = match engine {
             EngineKind::NativeInt8 => {
                 // Calibrate + extract i8 weights ONCE, up front; every
                 // engine worker shares the same `Arc<Int8Weights>` copy
@@ -193,11 +270,66 @@ pub fn serve(args: &Args) -> Result<()> {
                     kv_bytes_per_worker: max_batch * KvCache::bytes_for(&weights),
                     workers: cfg.engines,
                 };
-                let factory: EngineFactory = Arc::new(move || {
-                    let e = NativeInt8Engine::from_weights(weights.clone(), gemm_threads);
-                    Ok(Box::new(e) as Box<dyn ScoreEngine>)
-                });
-                (factory, mem)
+                // All workers draw from one hub: `/admin/reload` publishes
+                // once and every worker picks the new generation up at its
+                // next loop pass (in-flight sessions stay pinned to theirs).
+                let hub = Arc::new(WeightHub::new(weights));
+                let factory: EngineFactory = {
+                    let hub = hub.clone();
+                    Arc::new(move || {
+                        let e = NativeInt8Engine::from_hub(hub.clone(), gemm_threads);
+                        Ok(Box::new(e) as Box<dyn ScoreEngine>)
+                    })
+                };
+                let reload: ReloadFn = {
+                    let base = espec.clone();
+                    let shape =
+                        (mcfg.batch_size, mcfg.seq_len, mcfg.vocab_size, mcfg.causal);
+                    Arc::new(move |dir: &std::path::Path| {
+                        // Packaged reload dirs are content-verified before
+                        // any bytes are trusted; legacy dirs load via the
+                        // compat shim but publish no identity.
+                        let new_manifest = crate::runtime::Manifest::load(dir)?;
+                        let pkg = if new_manifest.package.is_some() {
+                            Some(package::verify_dir(dir).with_context(|| {
+                                format!("verifying reload dir {dir:?}")
+                            })?)
+                        } else {
+                            None
+                        };
+                        // The serving shape (slot pool, validation limits,
+                        // wire contract) is fixed at startup — a reload
+                        // may swap weights, never the shape.
+                        let c = &new_manifest.config;
+                        if (c.batch_size, c.seq_len, c.vocab_size, c.causal) != shape {
+                            bail!(
+                                "reload rejected: {} serves (batch {}, seq {}, vocab {}, \
+                                 causal {}) but this server was started with (batch {}, \
+                                 seq {}, vocab {}, causal {})",
+                                c.name,
+                                c.batch_size,
+                                c.seq_len,
+                                c.vocab_size,
+                                c.causal,
+                                shape.0,
+                                shape.1,
+                                shape.2,
+                                shape.3
+                            );
+                        }
+                        let (root, config) = split_artifact_dir(dir)?;
+                        let mut spec = base.clone();
+                        spec.artifacts_root = root;
+                        spec.config = config;
+                        let next = NativeInt8Engine::load_weights(&spec)?;
+                        let generation = hub.publish(next);
+                        Ok(ReloadOutcome {
+                            generation,
+                            artifact: pkg.map(|p| artifact_id(&p)),
+                        })
+                    })
+                };
+                (factory, mem, Some(reload))
             }
             _ => {
                 // PJRT holds every parameter as an f32 literal per worker:
@@ -216,7 +348,9 @@ pub fn serve(args: &Args) -> Result<()> {
                 let factory: EngineFactory = Arc::new(move || {
                     Ok(Box::new(PjrtEngine::new(&espec)?) as Box<dyn ScoreEngine>)
                 });
-                (factory, mem)
+                // The PJRT session bakes weights into program literals at
+                // construction — no hot-reload path (501).
+                (factory, mem, None)
             }
         };
         let info = EngineInfo {
@@ -238,15 +372,16 @@ pub fn serve(args: &Args) -> Result<()> {
             mem,
             gemm_threads: if engine == EngineKind::NativeInt8 { gemm_threads } else { 1 },
         };
-        (info, factory)
+        (info, factory, AdminHooks { reload, artifact: startup_artifact })
     };
 
     let ready_timeout = if mock { Duration::from_secs(10) } else { Duration::from_secs(600) };
-    let server = Server::start(cfg, info, factory)?;
+    let server = Server::start_with_admin(cfg, info, factory, admin)?;
     server.wait_ready(ready_timeout)?;
     println!(
         "serving on http://{} — POST /v1/score, POST /v1/generate, GET /healthz, \
-         GET /statz, GET /metricz, GET /debug/traces",
+         GET /statz, GET /metricz, GET /debug/traces, POST /admin/reload, \
+         POST /admin/drain",
         server.addr()
     );
     server.run_forever();

@@ -33,7 +33,7 @@ use crate::coordinator::calibrator::{calibrate, CollectOptions};
 use crate::coordinator::quantize::quantize_weights;
 use crate::infer::model::{EngineTelemetry, Int8Model, Int8Weights, KvCache, ModelOptions};
 use crate::infer::sample::{SampleParams, Sampler};
-use crate::serve::engine::{greedy_token, pack_batch_into, EngineSpec, ScoreEngine};
+use crate::serve::engine::{greedy_token, pack_batch_into, EngineSpec, ScoreEngine, WeightHub};
 use crate::serve::protocol::{ScoreRequest, ScoreRow};
 use crate::util::log;
 use crate::util::tensor::{IntTensor, Tensor};
@@ -65,6 +65,30 @@ pub struct NativeInt8Engine {
     seq_len: usize,
     causal: bool,
     config: String,
+    /// Hot-reload plumbing. `hub` is the shared weight slot the reload
+    /// hook publishes into; [`ScoreEngine::poll_reload`] snapshots it and
+    /// swaps `model` for a fresh one over the new `Arc<Int8Weights>`
+    /// (cheap: a scratch arena, no weight copy). The displaced model is
+    /// parked in `old_models` until the last in-flight session pinned to
+    /// its generation retires, so pre-reload sessions finish **bit-exact**
+    /// on the weights they prefilled with.
+    hub: Option<Arc<WeightHub<Int8Weights>>>,
+    /// Generation serving *new* admissions (1 until the first reload).
+    generation: u64,
+    /// Retired `(generation, model)` pairs still pinned by live sessions.
+    old_models: Vec<(u64, Int8Model)>,
+    /// Per-slot weights generation the slot's KV cache was built for
+    /// (0 = unstamped); steps route to the matching model.
+    slot_gen: Vec<u64>,
+    /// Per-slot session liveness (prefill sets, `gen_finish` clears) —
+    /// what keeps an `old_models` entry alive is a *live* slot on it, not
+    /// a warm cache left by a finished session.
+    live: Vec<bool>,
+    /// Worker-local GEMM pool width, re-applied to reload-built models.
+    gemm_threads: usize,
+    /// Last generation rejected for changing the serving shape (warn once,
+    /// keep serving the old weights instead of spamming per loop pass).
+    skipped_gen: u64,
 }
 
 /// Pick the next token for `slot` from its logits row: the slot's sampler
@@ -163,11 +187,27 @@ impl NativeInt8Engine {
     pub fn from_weights(weights: Arc<Int8Weights>, gemm_threads: usize) -> NativeInt8Engine {
         let mut model = Int8Model::from_weights(weights);
         model.set_gemm_threads(gemm_threads);
-        NativeInt8Engine::from_model(model)
+        NativeInt8Engine::from_model_threaded(model, gemm_threads)
+    }
+
+    /// Wrap a shared weight *hub* — the hot-reloadable flavor of
+    /// [`NativeInt8Engine::from_weights`]. The engine starts on the hub's
+    /// current `(generation, weights)` snapshot and picks up every later
+    /// [`WeightHub::publish`] at its next [`ScoreEngine::poll_reload`].
+    pub fn from_hub(hub: Arc<WeightHub<Int8Weights>>, gemm_threads: usize) -> NativeInt8Engine {
+        let (generation, weights) = hub.snapshot();
+        let mut e = NativeInt8Engine::from_weights(weights, gemm_threads);
+        e.generation = generation;
+        e.hub = Some(hub);
+        e
     }
 
     /// Wrap an already-built model (tests; no PJRT involved).
     pub fn from_model(model: Int8Model) -> NativeInt8Engine {
+        NativeInt8Engine::from_model_threaded(model, 1)
+    }
+
+    fn from_model_threaded(model: Int8Model, gemm_threads: usize) -> NativeInt8Engine {
         let cfg = model.cfg();
         let (max_batch, seq_len, causal) = (cfg.batch_size, cfg.seq_len, cfg.causal);
         let vocab = cfg.vocab_size;
@@ -186,6 +226,13 @@ impl NativeInt8Engine {
             causal,
             config,
             model,
+            hub: None,
+            generation: 1,
+            old_models: Vec::new(),
+            slot_gen: vec![0; max_batch],
+            live: vec![false; max_batch],
+            gemm_threads,
+            skipped_gen: 0,
         }
     }
 
@@ -208,6 +255,20 @@ impl NativeInt8Engine {
     pub fn scratch_bytes(&self) -> usize {
         self.model.scratch_bytes()
     }
+
+    /// Retired generations this worker still holds (tests / introspection).
+    pub fn retired_generations(&self) -> Vec<u64> {
+        self.old_models.iter().map(|(g, _)| *g).collect()
+    }
+}
+
+/// Drop every parked old model no *live* session is pinned to anymore — a
+/// free function so callers can split-borrow it next to the cache/sampler
+/// tables.
+fn gc_old_models(old_models: &mut Vec<(u64, Int8Model)>, slot_gen: &[u64], live: &[bool]) {
+    old_models.retain(|(g, _)| {
+        slot_gen.iter().zip(live.iter()).any(|(&sg, &l)| l && sg == *g)
+    });
 }
 
 impl ScoreEngine for NativeInt8Engine {
@@ -265,7 +326,16 @@ impl ScoreEngine for NativeInt8Engine {
         if slot >= self.max_batch {
             bail!("slot {slot} outside batch {}", self.max_batch);
         }
-        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
+        let NativeInt8Engine {
+            model, caches, samplers, gen_logits, vocab, generation, slot_gen, live, ..
+        } = self;
+        // New sessions always bind to the *current* generation: a cache
+        // warmed under an older grid is rebuilt for the new weights.
+        if slot_gen[slot] != *generation {
+            caches[slot] = None;
+            slot_gen[slot] = *generation;
+        }
+        live[slot] = true;
         samplers[slot] = if params.is_greedy() { None } else { Some(Sampler::new(*params)) };
         let cache = caches[slot].get_or_insert_with(|| KvCache::for_weights(model.weights()));
         let logits = &mut gen_logits[..*vocab];
@@ -279,13 +349,29 @@ impl ScoreEngine for NativeInt8Engine {
     /// single-session path (`QTX_DECODE=gemv` baseline); the worker's
     /// default is `gen_step_batch`.
     fn gen_step(&mut self, slot: usize, last: i32) -> Result<i32> {
-        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
+        let NativeInt8Engine {
+            model, old_models, caches, samplers, gen_logits, vocab, generation, slot_gen, ..
+        } = self;
         let cache = caches
             .get_mut(slot)
             .and_then(Option::as_mut)
             .with_context(|| format!("no generation session on slot {slot}"))?;
+        // Route the step to the weights the session prefilled with —
+        // in-flight sessions stay bit-exact across a hot reload.
+        let g = slot_gen[slot];
+        let m = if g == *generation {
+            &mut *model
+        } else {
+            old_models
+                .iter_mut()
+                .find(|(og, _)| *og == g)
+                .map(|(_, m)| m)
+                .with_context(|| {
+                    format!("weights generation {g} for slot {slot} already released")
+                })?
+        };
         let logits = &mut gen_logits[..*vocab];
-        model.decode_step(cache, last, logits)?;
+        m.decode_step(cache, last, logits)?;
         Ok(pick_token(samplers, slot, logits))
     }
 
@@ -299,14 +385,106 @@ impl ScoreEngine for NativeInt8Engine {
     /// steady state allocates nothing: the logits buffer already spans
     /// `max_batch` rows.
     fn gen_step_batch(&mut self, steps: &mut [(usize, i32)]) -> Result<()> {
-        let NativeInt8Engine { model, caches, samplers, gen_logits, vocab, .. } = self;
+        let NativeInt8Engine {
+            model, old_models, caches, samplers, gen_logits, vocab, generation, slot_gen, ..
+        } = self;
         let v = *vocab;
-        let logits = &mut gen_logits[..steps.len() * v];
-        model.decode_step_batch(caches, steps, logits)?;
-        for (i, s) in steps.iter_mut().enumerate() {
-            s.1 = pick_token(samplers, s.0, &logits[i * v..(i + 1) * v]);
+        // Fast path (the steady state, and the whole story until a reload
+        // lands): every listed session is on the current generation — one
+        // batched forward, no allocation.
+        if steps.iter().all(|&(s, _)| slot_gen.get(s).copied() == Some(*generation)) {
+            let logits = &mut gen_logits[..steps.len() * v];
+            model.decode_step_batch(caches, steps, logits)?;
+            for (i, s) in steps.iter_mut().enumerate() {
+                s.1 = pick_token(samplers, s.0, &logits[i * v..(i + 1) * v]);
+            }
+            return Ok(());
+        }
+        // Mixed generations: a reload landed while sessions were in
+        // flight. Validate the whole batch up front (atomic with respect
+        // to the cheap failure modes), then run one batched step per
+        // generation group. The transient Vecs below are fine — mixed
+        // batches exist only for the remaining lifetime of pre-reload
+        // sessions.
+        for &(slot, _) in steps.iter() {
+            if caches.get(slot).and_then(Option::as_ref).is_none() {
+                bail!("no generation session on slot {slot}");
+            }
+            let g = slot_gen[slot];
+            if g != *generation && !old_models.iter().any(|(og, _)| *og == g) {
+                bail!("weights generation {g} for slot {slot} already released");
+            }
+        }
+        let mut gens: Vec<u64> = steps.iter().map(|&(s, _)| slot_gen[s]).collect();
+        gens.sort_unstable();
+        gens.dedup();
+        for g in gens {
+            let idx: Vec<usize> =
+                (0..steps.len()).filter(|&i| slot_gen[steps[i].0] == g).collect();
+            let mut sub: Vec<(usize, i32)> = idx.iter().map(|&i| steps[i]).collect();
+            let m = if g == *generation {
+                &mut *model
+            } else {
+                &mut old_models.iter_mut().find(|(og, _)| *og == g).expect("validated").1
+            };
+            let logits = &mut gen_logits[..sub.len() * v];
+            m.decode_step_batch(caches, &mut sub, logits)?;
+            for (j, &i) in idx.iter().enumerate() {
+                steps[i].1 = pick_token(samplers, sub[j].0, &logits[j * v..(j + 1) * v]);
+            }
         }
         Ok(())
+    }
+
+    fn poll_reload(&mut self) -> u64 {
+        let Some(hub) = self.hub.clone() else {
+            return self.generation;
+        };
+        // Cheap staleness probe first: the atomic mirror, no lock.
+        if hub.generation() == self.generation {
+            return self.generation;
+        }
+        let (gen, weights) = hub.snapshot();
+        if gen == self.generation || gen == self.skipped_gen {
+            return self.generation;
+        }
+        let mut next = Int8Model::from_weights(weights);
+        next.set_gemm_threads(self.gemm_threads);
+        let cfg = next.cfg();
+        if (cfg.batch_size, cfg.seq_len, cfg.vocab_size, cfg.causal)
+            != (self.max_batch, self.seq_len, self.vocab, self.causal)
+        {
+            // The reload hook verifies config compatibility before
+            // publishing; this is the engine-side backstop. Warn once and
+            // keep serving the generation we have.
+            log::warn_kv(
+                "reload rejected: published weights change the serving shape",
+                &[("config", &cfg.name), ("generation", &gen.to_string())],
+            );
+            self.skipped_gen = gen;
+            return self.generation;
+        }
+        let prev = std::mem::replace(&mut self.model, next);
+        self.old_models.push((self.generation, prev));
+        self.generation = gen;
+        // A reload with no live pre-reload sessions releases immediately.
+        gc_old_models(&mut self.old_models, &self.slot_gen, &self.live);
+        self.generation
+    }
+
+    fn gen_finish(&mut self, row: usize) {
+        let NativeInt8Engine { old_models, caches, generation, slot_gen, live, .. } = self;
+        let Some(l) = live.get_mut(row) else { return };
+        *l = false;
+        if slot_gen[row] != *generation && slot_gen[row] != 0 {
+            // The session was pinned to a retired generation: its cache
+            // was built for a grid that is no longer current, so drop it
+            // (the next session on this slot rebuilds against the new
+            // weights) and release any old model nobody references.
+            caches[row] = None;
+            slot_gen[row] = 0;
+            gc_old_models(old_models, slot_gen, live);
+        }
     }
 
     /// Fold the phase timers and quant-health counters the forward passes
@@ -395,5 +573,69 @@ mod tests {
         assert!(e.gen_step_batch(&mut bad).is_err());
         let mut ok = vec![(0usize, *got[0].last().unwrap())];
         assert!(e.gen_step_batch(&mut ok).is_ok());
+    }
+
+    /// The hot-reload contract on the real integer model: a weight copy
+    /// published mid-session changes *new* admissions only — the in-flight
+    /// session finishes bit-exact on the weights it prefilled with (even
+    /// through the mixed-generation batched step), and the parked old
+    /// model is released the moment its last pinned session retires.
+    #[test]
+    fn native_reload_pins_inflight_sessions_and_releases_old_weights() {
+        use crate::infer::model::tests_support::tiny_causal_weights_seeded;
+        let w1 = tiny_causal_weights_seeded(5);
+        let w2 = tiny_causal_weights_seeded(6);
+        let greedy = SampleParams::greedy();
+        // Oracles: hubless single-generation engines over each copy.
+        let decode = |w: &Arc<Int8Weights>| {
+            let mut e = NativeInt8Engine::from_weights(w.clone(), 1);
+            let mut toks = vec![e.gen_prefill(0, &[1, 2], &greedy).unwrap()];
+            for _ in 0..4 {
+                let last = *toks.last().unwrap();
+                toks.push(e.gen_step(0, last).unwrap());
+            }
+            toks
+        };
+        let want_old = decode(&w1);
+        let want_new = decode(&w2);
+        assert_ne!(want_old, want_new, "reseeded weights must change the decode stream");
+
+        let hub = Arc::new(WeightHub::new(w1.clone()));
+        let mut e = NativeInt8Engine::from_hub(hub.clone(), 1);
+        assert_eq!(e.poll_reload(), 1);
+        // Prefill + 2 steps at generation 1 …
+        let mut inflight = vec![e.gen_prefill(0, &[1, 2], &greedy).unwrap()];
+        for _ in 0..2 {
+            let last = *inflight.last().unwrap();
+            inflight.push(e.gen_step(0, last).unwrap());
+        }
+        // … the reload lands mid-session …
+        assert_eq!(hub.publish(w2.clone()), 2);
+        assert_eq!(e.poll_reload(), 2);
+        assert_eq!(e.retired_generations(), vec![1]);
+        // … a new session is admitted on the new weights, and both drive
+        // through the mixed-generation batched step.
+        let mut fresh = vec![e.gen_prefill(1, &[1, 2], &greedy).unwrap()];
+        for _ in 0..2 {
+            let mut steps =
+                vec![(0usize, *inflight.last().unwrap()), (1usize, *fresh.last().unwrap())];
+            e.gen_step_batch(&mut steps).unwrap();
+            inflight.push(steps[0].1);
+            fresh.push(steps[1].1);
+        }
+        for _ in 0..2 {
+            let last = *fresh.last().unwrap();
+            fresh.push(e.gen_step(1, last).unwrap());
+        }
+        assert_eq!(inflight, want_old, "in-flight session must finish bit-exact on gen 1");
+        assert_eq!(fresh, want_new, "new sessions must decode on the published weights");
+        // Retiring the new-generation session keeps gen 1 parked (slot 0
+        // is still pinned to it); retiring slot 0 releases it, down to the
+        // test's own Arc.
+        e.gen_finish(1);
+        assert_eq!(e.retired_generations(), vec![1]);
+        e.gen_finish(0);
+        assert!(e.retired_generations().is_empty());
+        assert_eq!(Arc::strong_count(&w1), 1);
     }
 }

@@ -2271,8 +2271,15 @@ pub(crate) mod tests_support {
     /// A causal (OPT-style) sibling of [`tiny_weights`] for decode tests
     /// across modules (the serve engine's generate-path tests use it).
     pub(crate) fn tiny_causal_weights() -> Arc<Int8Weights> {
+        tiny_causal_weights_seeded(5)
+    }
+
+    /// Same shape, different parameters: the hot-reload tests publish a
+    /// differently-seeded copy to prove new sessions pick it up while
+    /// in-flight sessions finish on the original.
+    pub(crate) fn tiny_causal_weights_seeded(seed: u64) -> Arc<Int8Weights> {
         let cfg = test_cfg("opt", "softmax");
-        let params = test_params(&cfg, 5);
+        let params = test_params(&cfg, seed);
         let points = test_quant_points(&cfg);
         let qps = vec![QParams::asymmetric(-4.0, 4.0, 8); points.len()];
         Arc::new(

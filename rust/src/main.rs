@@ -7,6 +7,7 @@
 //!   qtx serve --config X [...]       INT8 inference server on a trained run
 //!   qtx route --backends A,B [...]   fault-tolerant router over serve replicas
 //!   qtx loadgen --port P [...]        closed-loop load generator
+//!   qtx pack/install/doctor           operable-artifact lifecycle (docs/ARTIFACTS.md)
 //!   qtx analyze --config X           outlier / attention analysis (Figs 1-3)
 //!   qtx table{1,2,3,4,5,6,7,8,10} / fig{6,7} / table9
 //!                                     regenerate a paper table/figure
@@ -43,6 +44,9 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd::serve::serve(args),
         "route" => cmd::route::route(args),
         "loadgen" => cmd::serve::loadgen(args),
+        "pack" => cmd::artifact::pack(args),
+        "install" => cmd::artifact::install(args),
+        "doctor" => cmd::artifact::doctor(args),
         "list-configs" => cmd::basic::list_configs(args),
         "analyze" | "fig1" | "fig2" | "fig3" => cmd::analyze::run(cmd, args),
         "table1" | "table2" | "table3" | "table4" | "table5" | "table6"
@@ -70,7 +74,10 @@ commands:
                          native integer-GEMM backend vs artifact-free mock (--mock);
                          --port, --threads, --engines, --batch-policy {continuous|fixed},
                          --max-batch, --max-wait-ms FIXED_FLUSH, --admit-window-us,
-                         --ckpt PATH | same recipe flags as train)
+                         --ckpt PATH | same recipe flags as train;
+                         --artifact-dir DIR with --mock serves a packaged dir's
+                         identity; POST /admin/reload hot-swaps weights and
+                         POST /admin/drain stops admissions — docs/ARTIFACTS.md)
   route                 fault-tolerant reverse proxy over N serve replicas
                         (--backends HOST:PORT,...; --port, --threads,
                          --probe-interval-ms, --eject-after, --halfopen-ms,
@@ -79,6 +86,13 @@ commands:
   loadgen               HTTP load generator against a running server or router
                         (--host, --port, --threads CLIENTS, --requests N;
                          --open-loop --rate REQ_PER_S for Poisson arrivals)
+  pack                  write the manifest-v2 package block for an artifact
+                        dir (--dir DIR; checksums every payload file)
+  install               atomic install of a packaged artifact dir
+                        (--from SRC --to DEST; staging + lockfile + rename)
+  doctor                diagnose an artifact dir against this binary's
+                        required schema (--dir DIR; exit 0 ok / 1 fixable
+                        / 2 fail) — see docs/ARTIFACTS.md
   analyze|fig1|fig2|fig3  outlier & attention analysis dumps
   table1..table10       regenerate the paper table  (see DESIGN.md index)
   fig6 fig7             regenerate the paper figure sweeps

@@ -17,6 +17,7 @@ use std::rc::Rc;
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::client::Runtime;
+use crate::runtime::package::PackageInfo;
 use crate::runtime::program::Program;
 use crate::util::json::Json;
 
@@ -92,6 +93,12 @@ pub struct Manifest {
     pub params: Vec<ParamInfo>,
     pub programs: HashMap<String, ProgramDesc>,
     pub quant_points: Vec<String>,
+    /// Manifest-v2 package block (checksummed entries + provenance).
+    /// `None` is the explicit compat shim for legacy dirs: they load
+    /// read-only, but `qtx install` / `/admin/reload` refuse them and
+    /// `qtx doctor` reports *fixable*. A present-but-malformed block is
+    /// a parse error — fail-closed, never a partial load.
+    pub package: Option<PackageInfo>,
 }
 
 impl Manifest {
@@ -170,7 +177,15 @@ impl Manifest {
         // rather than failing the parse.
         let version = j.get("version").and_then(Json::as_usize).unwrap_or(0) as u32;
 
-        Ok(Manifest { version, config, params, programs, quant_points })
+        // Absent package block = legacy compat shim. Present = must parse
+        // cleanly (unknown schema / duplicate paths / missing fields are
+        // descriptive errors, see runtime::package).
+        let package = match j.get("package") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(PackageInfo::from_json(p).context("manifest package block")?),
+        };
+
+        Ok(Manifest { version, config, params, programs, quant_points, package })
     }
 
     /// Human-readable version for error messages and `/healthz` payloads.
@@ -179,6 +194,15 @@ impl Manifest {
             "unversioned (pre-v5)".to_string()
         } else {
             format!("v{}", self.version)
+        }
+    }
+
+    /// Human-readable package-schema tier for error messages and the
+    /// `/healthz` startup-failure payload.
+    pub fn schema_label(&self) -> String {
+        match &self.package {
+            Some(p) => format!("package schema {}", p.schema),
+            None => "legacy manifest (no package block)".to_string(),
         }
     }
 
@@ -195,6 +219,16 @@ impl Manifest {
             self.config.name,
             self.version_label()
         )
+    }
+
+    /// [`Manifest::require_serve_score`] with the artifact directory and
+    /// package-schema tier in the message, so the `/healthz`
+    /// startup-failure payload names exactly which on-disk dir (and which
+    /// manifest generation) the operator has to fix.
+    pub fn require_serve_score_at(&self, dir: &Path) -> Result<()> {
+        self.require_serve_score().with_context(|| {
+            format!("artifact dir {} ({})", dir.display(), self.schema_label())
+        })
     }
 
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -333,5 +367,65 @@ mod tests {
         // reports the parsed version.
         let err5 = m5.require_serve_score().unwrap_err().to_string();
         assert!(err5.contains("manifest v5"), "{err5}");
+    }
+
+    /// Manifests without a package block load through the compat shim;
+    /// a present block must parse fail-closed.
+    #[test]
+    fn package_block_is_optional_but_fail_closed() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.package.is_none());
+        assert_eq!(m.schema_label(), "legacy manifest (no package block)");
+
+        let sha = crate::runtime::package::sha256_hex(b"payload");
+        let block = format!(
+            r#"{{
+  "package": {{"schema": {schema}, "install_id": "abc123",
+    "entries": [{{"path":"init.hlo.txt","kind":"program","bytes":7,"sha256":"{sha}"}}],
+    "provenance": {{"fingerprint":"x","config":"c","variant":"softmax",
+      "calibration_id":"q","toolchain":"t"}}}},"#,
+            schema = crate::runtime::package::PACKAGE_SCHEMA
+        );
+        let packaged = MINI.replacen("{", &block, 1);
+        let mp = Manifest::parse(&packaged).unwrap();
+        let pkg = mp.package.expect("package block parsed");
+        assert_eq!(pkg.install_id, "abc123");
+        assert_eq!(pkg.entries.len(), 1);
+        assert_eq!(mp.schema_label(), "package schema 2");
+
+        // Unknown schema: the whole manifest parse fails with a
+        // descriptive error — never a partial load.
+        let future = packaged.replacen("\"schema\": 2", "\"schema\": 9", 1);
+        assert_ne!(future, packaged);
+        let err = format!("{:#}", Manifest::parse(&future).unwrap_err());
+        assert!(err.contains("unsupported package schema 9"), "{err}");
+
+        // Duplicate entry paths: same fail-closed contract.
+        let dup = packaged.replacen(
+            "\"entries\": [{",
+            &format!(
+                "\"entries\": [{{\"path\":\"init.hlo.txt\",\"kind\":\"program\",\
+                 \"bytes\":7,\"sha256\":\"{sha}\"}},{{"
+            ),
+            1,
+        );
+        assert_ne!(dup, packaged);
+        let err = format!("{:#}", Manifest::parse(&dup).unwrap_err());
+        assert!(err.contains("duplicate package entry path"), "{err}");
+    }
+
+    /// The serve gate's `_at` variant names the artifact dir and the
+    /// package-schema tier — the `/healthz` startup-failure contract.
+    #[test]
+    fn serve_gate_at_names_dir_and_schema() {
+        let m = Manifest::parse(MINI).unwrap();
+        let err = format!(
+            "{:#}",
+            m.require_serve_score_at(Path::new("/data/artifacts/c")).unwrap_err()
+        );
+        assert!(err.contains("/data/artifacts/c"), "{err}");
+        assert!(err.contains("legacy manifest (no package block)"), "{err}");
+        assert!(err.contains("serve_score"), "{err}");
+        assert!(err.contains("make artifacts"), "{err}");
     }
 }

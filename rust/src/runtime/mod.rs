@@ -8,8 +8,13 @@
 
 pub mod artifact;
 pub mod client;
+pub mod package;
 pub mod program;
 
 pub use artifact::{Artifact, IoDesc, Manifest, ParamInfo, ProgramDesc, SERVE_MANIFEST_VERSION};
 pub use client::Runtime;
+pub use package::{
+    DoctorReport, DoctorVerdict, PackageEntry, PackageInfo, Provenance, StagedInstall,
+    PACKAGE_SCHEMA,
+};
 pub use program::{Program, Value};

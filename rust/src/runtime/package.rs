@@ -1,0 +1,1015 @@
+//! Operable artifact packages: the `"package"` block of manifest v2 and
+//! the `qtx pack` / `qtx install` / `qtx doctor` machinery behind it.
+//!
+//! An artifact directory becomes *operable* when its `manifest.json`
+//! carries a package block: a schema version, a deterministic install id,
+//! a checksummed entry list covering every payload file, and a provenance
+//! record (config fingerprint, softmax/gate variant, calibration id,
+//! toolchain). With that block present the directory can be verified
+//! byte-for-byte ([`verify_dir`]), copied atomically ([`stage`] +
+//! [`commit`]) and hot-reloaded into a running `qtx serve`
+//! (`POST /admin/reload`, see `docs/ARTIFACTS.md`).
+//!
+//! Parsing is fail-closed: an unknown package schema, a missing field, a
+//! duplicate entry path or a checksum mismatch is a descriptive error,
+//! never a partial load. Manifests that predate packaging (aot.py schema
+//! 1/2 documents, no `"package"` key) still load read-only through the
+//! explicit compat shim (`Manifest::package == None`); `qtx doctor`
+//! reports them as *fixable*, not broken.
+//!
+//! Install is crash-safe by construction: entries are copied into a
+//! sibling `.staging-<name>` directory under a `create_new` lockfile,
+//! re-checksummed there, and the single commit point is one
+//! `rename(2)` of the staging dir onto the destination. A crash at any
+//! earlier point leaves the old destination untouched and a staging
+//! leftover that `doctor` flags.
+//!
+//! SHA-256 is hand-rolled (FIPS 180-4) because the offline vendor set has
+//! no hashing crate; the implementation is pinned by the standard test
+//! vectors below.
+
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Package schema this binary reads and writes. Pre-package manifests
+/// (no `"package"` key) are the legacy tier; an explicit schema other
+/// than this value is fail-closed rejected.
+pub const PACKAGE_SCHEMA: u32 = 2;
+
+/// Hex digits of the full sha256 kept in `install_id` / `calibration_id`.
+const ID_HEX: usize = 16;
+/// Hex digits reported as `artifact.sha256_short` in `/statz`.
+const SHORT_HEX: usize = 12;
+
+// ---- SHA-256 (FIPS 180-4) -------------------------------------------------
+
+const SHA256_INIT: [u32; 8] = [
+    0x6a09_e667, 0xbb67_ae85, 0x3c6e_f372, 0xa54f_f53a,
+    0x510e_527f, 0x9b05_688c, 0x1f83_d9ab, 0x5be0_cd19,
+];
+
+#[rustfmt::skip]
+const SHA256_K: [u32; 64] = [
+    0x428a_2f98, 0x7137_4491, 0xb5c0_fbcf, 0xe9b5_dba5,
+    0x3956_c25b, 0x59f1_11f1, 0x923f_82a4, 0xab1c_5ed5,
+    0xd807_aa98, 0x1283_5b01, 0x2431_85be, 0x550c_7dc3,
+    0x72be_5d74, 0x80de_b1fe, 0x9bdc_06a7, 0xc19b_f174,
+    0xe49b_69c1, 0xefbe_4786, 0x0fc1_9dc6, 0x240c_a1cc,
+    0x2de9_2c6f, 0x4a74_84aa, 0x5cb0_a9dc, 0x76f9_88da,
+    0x983e_5152, 0xa831_c66d, 0xb003_27c8, 0xbf59_7fc7,
+    0xc6e0_0bf3, 0xd5a7_9147, 0x06ca_6351, 0x1429_2967,
+    0x27b7_0a85, 0x2e1b_2138, 0x4d2c_6dfc, 0x5338_0d13,
+    0x650a_7354, 0x766a_0abb, 0x81c2_c92e, 0x9272_2c85,
+    0xa2bf_e8a1, 0xa81a_664b, 0xc24b_8b70, 0xc76c_51a3,
+    0xd192_e819, 0xd699_0624, 0xf40e_3585, 0x106a_a070,
+    0x19a4_c116, 0x1e37_6c08, 0x2748_774c, 0x34b0_bcb5,
+    0x391c_0cb3, 0x4ed8_aa4a, 0x5b9c_ca4f, 0x682e_6ff3,
+    0x748f_82ee, 0x78a5_636f, 0x84c8_7814, 0x8cc7_0208,
+    0x90be_fffa, 0xa450_6ceb, 0xbef9_a3f7, 0xc671_78f2,
+];
+
+/// Incremental SHA-256 hasher (streams files without loading them whole).
+pub struct Sha256 {
+    h: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Sha256::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 { h: SHA256_INIT, buf: [0; 64], buf_len: 0, total: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total = self.total.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                compress(&mut self.h, &block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let block: [u8; 64] = data[..64].try_into().expect("64-byte chunk");
+            compress(&mut self.h, &block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    /// Consume the hasher and return the 64-char lowercase hex digest.
+    pub fn finish_hex(mut self) -> String {
+        let bits = self.total.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Length block: update() would re-count these 8 bytes, so compress
+        // the final block directly.
+        self.buf[56..64].copy_from_slice(&bits.to_be_bytes());
+        let block = self.buf;
+        compress(&mut self.h, &block);
+        let mut out = String::with_capacity(64);
+        for word in self.h {
+            for b in word.to_be_bytes() {
+                out.push_str(&format!("{b:02x}"));
+            }
+        }
+        out
+    }
+}
+
+fn compress(h: &mut [u32; 8], block: &[u8; 64]) {
+    let mut w = [0u32; 64];
+    for (i, chunk) in block.chunks_exact(4).enumerate() {
+        w[i] = u32::from_be_bytes(chunk.try_into().expect("4-byte chunk"));
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = *h;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = hh
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(SHA256_K[i])
+            .wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        hh = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    for (slot, v) in h.iter_mut().zip([a, b, c, d, e, f, g, hh]) {
+        *slot = slot.wrapping_add(v);
+    }
+}
+
+/// One-shot digest of an in-memory byte string.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut s = Sha256::new();
+    s.update(data);
+    s.finish_hex()
+}
+
+/// Streaming digest + size of a file on disk.
+pub fn sha256_file(path: &Path) -> Result<(String, u64)> {
+    let mut f = fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut hasher = Sha256::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut total = 0u64;
+    loop {
+        let n = f.read(&mut buf).with_context(|| format!("reading {path:?}"))?;
+        if n == 0 {
+            break;
+        }
+        hasher.update(&buf[..n]);
+        total += n as u64;
+    }
+    Ok((hasher.finish_hex(), total))
+}
+
+// ---- package block types --------------------------------------------------
+
+/// One payload file of a packaged artifact: relative path (always `/`
+/// separated), coarse kind, exact size and content digest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackageEntry {
+    pub path: String,
+    pub kind: String,
+    pub bytes: u64,
+    pub sha256: String,
+}
+
+/// Where the package came from: enough to answer "which config, which
+/// outlier-removal variant, which calibration, built by what" without
+/// reopening the payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// `aot.py` config fingerprint (empty for hand-built dirs).
+    pub fingerprint: String,
+    /// Config name (`bert_tiny_softmax`, ...).
+    pub config: String,
+    /// Softmax/gate variant, e.g. `softmax`, `clipped_softmax+gate`.
+    pub variant: String,
+    /// Digest of the ordered activation quant-point list.
+    pub calibration_id: String,
+    /// Producing tool, e.g. `qtx/0.1.0` or `aot.py`.
+    pub toolchain: String,
+}
+
+/// The `"package"` block of a v2 manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackageInfo {
+    pub schema: u32,
+    /// Deterministic content id over the sorted entry list.
+    pub install_id: String,
+    pub entries: Vec<PackageEntry>,
+    pub provenance: Provenance,
+}
+
+impl PackageInfo {
+    /// Fail-closed parse of a `"package"` block: unknown schema, missing
+    /// fields and duplicate entry paths are descriptive errors.
+    pub fn from_json(j: &Json) -> Result<PackageInfo> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_usize)
+            .context("package.schema must be an integer")? as u32;
+        if schema != PACKAGE_SCHEMA {
+            bail!(
+                "unsupported package schema {schema} (this binary supports schema \
+                 {PACKAGE_SCHEMA}) — refusing to load"
+            );
+        }
+        let install_id = j
+            .req("install_id")?
+            .as_str()
+            .context("package.install_id must be a string")?
+            .to_string();
+        let mut entries = Vec::new();
+        for (i, e) in j.req("entries")?.as_arr().context("package.entries")?.iter().enumerate() {
+            let field = |k: &str| -> Result<String> {
+                Ok(e.req(k)?
+                    .as_str()
+                    .with_context(|| format!("package.entries[{i}].{k} must be a string"))?
+                    .to_string())
+            };
+            let bytes = e
+                .req("bytes")?
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .with_context(|| format!("package.entries[{i}].bytes must be an integer >= 0"))?
+                as u64;
+            let entry = PackageEntry {
+                path: field("path")?,
+                kind: field("kind")?,
+                bytes,
+                sha256: field("sha256")?,
+            };
+            if entry.path.is_empty() || entry.path.starts_with('/') || entry.path.contains("..") {
+                bail!("package.entries[{i}]: invalid path {:?}", entry.path);
+            }
+            if entry.sha256.len() != 64 || !entry.sha256.bytes().all(|b| b.is_ascii_hexdigit()) {
+                bail!(
+                    "package.entries[{i}] ({}): sha256 must be 64 hex chars, got {:?}",
+                    entry.path,
+                    entry.sha256
+                );
+            }
+            if let Some(dup) = entries.iter().find(|p: &&PackageEntry| p.path == entry.path) {
+                bail!("duplicate package entry path {:?}", dup.path);
+            }
+            entries.push(entry);
+        }
+        let p = j.req("provenance")?;
+        let ps = |k: &str| -> Result<String> {
+            Ok(p.req(k)?
+                .as_str()
+                .with_context(|| format!("package.provenance.{k} must be a string"))?
+                .to_string())
+        };
+        let provenance = Provenance {
+            fingerprint: ps("fingerprint")?,
+            config: ps("config")?,
+            variant: ps("variant")?,
+            calibration_id: ps("calibration_id")?,
+            toolchain: ps("toolchain")?,
+        };
+        Ok(PackageInfo { schema, install_id, entries, provenance })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("path", Json::Str(e.path.clone())),
+                    ("kind", Json::Str(e.kind.clone())),
+                    ("bytes", Json::Num(e.bytes as f64)),
+                    ("sha256", Json::Str(e.sha256.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Num(self.schema as f64)),
+            ("install_id", Json::Str(self.install_id.clone())),
+            ("entries", Json::Arr(entries)),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("fingerprint", Json::Str(self.provenance.fingerprint.clone())),
+                    ("config", Json::Str(self.provenance.config.clone())),
+                    ("variant", Json::Str(self.provenance.variant.clone())),
+                    ("calibration_id", Json::Str(self.provenance.calibration_id.clone())),
+                    ("toolchain", Json::Str(self.provenance.toolchain.clone())),
+                ]),
+            ),
+        ])
+    }
+
+    /// Total payload bytes across entries.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// First [`SHORT_HEX`] chars of the install id — the `/statz`
+    /// `artifact.sha256_short` value.
+    pub fn sha256_short(&self) -> String {
+        self.install_id.chars().take(SHORT_HEX).collect()
+    }
+}
+
+/// Deterministic install id: digest of the sorted `path bytes sha` lines.
+fn install_id_for(entries: &[PackageEntry]) -> String {
+    let mut h = Sha256::new();
+    for e in entries {
+        h.update(format!("{} {} {}\n", e.path, e.bytes, e.sha256).as_bytes());
+    }
+    h.finish_hex().chars().take(ID_HEX).collect()
+}
+
+/// Coarse payload classification, mirrored by `aot.py`.
+fn kind_of(path: &str) -> &'static str {
+    if path.ends_with(".hlo.txt") {
+        "program"
+    } else if path.ends_with(".ckpt") {
+        "checkpoint"
+    } else if path.ends_with(".json") {
+        "meta"
+    } else {
+        "data"
+    }
+}
+
+// ---- pack -----------------------------------------------------------------
+
+/// Walk `dir` collecting payload files (everything except the manifest
+/// itself and dotfiles — staging dirs and lockfiles start with `.`),
+/// relative `/`-separated, sorted.
+fn payload_files(dir: &Path) -> Result<Vec<String>> {
+    fn walk(root: &Path, sub: &Path, out: &mut Vec<String>) -> Result<()> {
+        for entry in fs::read_dir(sub).with_context(|| format!("listing {sub:?}"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with('.') {
+                continue;
+            }
+            let path = entry.path();
+            if path.is_dir() {
+                walk(root, &path, out)?;
+            } else {
+                let rel = path
+                    .strip_prefix(root)
+                    .expect("walked path under root")
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                if rel != "manifest.json" {
+                    out.push(rel);
+                }
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(dir, dir, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Package an artifact directory in place: checksum every payload file,
+/// derive provenance from the manifest, and write the `"package"` block
+/// back into `manifest.json` (replacing any previous block). The manifest
+/// itself is never an entry, so rewriting it cannot invalidate checksums.
+pub fn pack(dir: &Path) -> Result<PackageInfo> {
+    let manifest_path = dir.join("manifest.json");
+    let text = fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?} — not an artifact dir?"))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {manifest_path:?}: {e}"))?;
+
+    let mut entries = Vec::new();
+    for rel in payload_files(dir)? {
+        let (sha256, bytes) = sha256_file(&dir.join(&rel))?;
+        entries.push(PackageEntry { kind: kind_of(&rel).to_string(), path: rel, bytes, sha256 });
+    }
+    if entries.is_empty() {
+        bail!("{dir:?} has no payload files to pack");
+    }
+
+    let config = j
+        .get("config")
+        .and_then(|c| c.get("name"))
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+    let attention = j
+        .get("config")
+        .and_then(|c| c.get("attention"))
+        .and_then(Json::as_str)
+        .unwrap_or("unknown");
+    let gated = j
+        .get("config")
+        .and_then(|c| c.get("use_gate"))
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let variant = if gated { format!("{attention}+gate") } else { attention.to_string() };
+    let quant_points: Vec<&str> = j
+        .get("quant_points")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_str).collect())
+        .unwrap_or_default();
+    let calibration_id: String =
+        sha256_hex(quant_points.join(",").as_bytes()).chars().take(ID_HEX).collect();
+
+    let info = PackageInfo {
+        schema: PACKAGE_SCHEMA,
+        install_id: install_id_for(&entries),
+        entries,
+        provenance: Provenance {
+            fingerprint: j.get("fingerprint").and_then(Json::as_str).unwrap_or("").to_string(),
+            config,
+            variant,
+            calibration_id,
+            toolchain: concat!("qtx/", env!("CARGO_PKG_VERSION")).to_string(),
+        },
+    };
+
+    let Json::Obj(mut kv) = j else { bail!("{manifest_path:?}: manifest is not a JSON object") };
+    kv.retain(|(k, _)| k != "package");
+    kv.push(("package".to_string(), info.to_json()));
+    fs::write(&manifest_path, Json::Obj(kv).to_string())
+        .with_context(|| format!("writing {manifest_path:?}"))?;
+    Ok(info)
+}
+
+// ---- verify ---------------------------------------------------------------
+
+/// Read the package block of `dir` without content verification. Errors
+/// on legacy (pre-package) manifests — callers that tolerate those should
+/// go through `Manifest::load` and the compat shim instead.
+pub fn read_package(dir: &Path) -> Result<PackageInfo> {
+    let manifest_path = dir.join("manifest.json");
+    let text = fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?}"))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {manifest_path:?}: {e}"))?;
+    match j.get("package") {
+        None | Some(Json::Null) => bail!(
+            "{dir:?} has a legacy manifest (no package block) — run `qtx pack --dir {}` to \
+             package it",
+            dir.display()
+        ),
+        Some(p) => {
+            PackageInfo::from_json(p).with_context(|| format!("package block of {manifest_path:?}"))
+        }
+    }
+}
+
+/// Full content verification of a packaged dir: every entry must exist
+/// with the exact recorded size and sha256. Returns the verified info;
+/// any deviation is a descriptive error naming the entry.
+pub fn verify_dir(dir: &Path) -> Result<PackageInfo> {
+    let info = read_package(dir)?;
+    for e in &info.entries {
+        let path = dir.join(&e.path);
+        if !path.is_file() {
+            bail!("entry {:?} is missing from {dir:?}", e.path);
+        }
+        let (sha, bytes) = sha256_file(&path)?;
+        if bytes != e.bytes {
+            bail!(
+                "entry {:?} is truncated or resized: {} bytes on disk, {} in the manifest",
+                e.path,
+                bytes,
+                e.bytes
+            );
+        }
+        if sha != e.sha256 {
+            bail!(
+                "entry {:?} fails its checksum: sha256 {} on disk, {} in the manifest",
+                e.path,
+                &sha[..SHORT_HEX],
+                &e.sha256[..SHORT_HEX]
+            );
+        }
+    }
+    Ok(info)
+}
+
+// ---- doctor ---------------------------------------------------------------
+
+/// Diagnosis severity, ordered: `Ok < Fixable < Fail`. CLI exit codes
+/// follow the variant index (0 / 1 / 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DoctorVerdict {
+    Ok,
+    Fixable,
+    Fail,
+}
+
+/// `qtx doctor` result: the worst verdict plus one human line per check.
+#[derive(Debug)]
+pub struct DoctorReport {
+    pub verdict: DoctorVerdict,
+    pub notes: Vec<String>,
+}
+
+impl DoctorReport {
+    fn note(&mut self, verdict: DoctorVerdict, msg: String) {
+        self.verdict = self.verdict.max(verdict);
+        self.notes.push(msg);
+    }
+}
+
+/// Diagnose an artifact dir against this binary's required schema.
+/// Never errors: I/O and parse failures are `Fail` notes.
+pub fn doctor(dir: &Path) -> DoctorReport {
+    let mut report = DoctorReport { verdict: DoctorVerdict::Ok, notes: Vec::new() };
+
+    // Crashed-install leftovers live next to the dir, not inside it.
+    if let (Some(parent), Some(name)) = (dir.parent(), dir.file_name()) {
+        let name = name.to_string_lossy();
+        let staging = parent.join(format!(".staging-{name}"));
+        if staging.exists() {
+            report.note(
+                DoctorVerdict::Fixable,
+                format!("leftover staging dir {staging:?} from a crashed install — remove it"),
+            );
+        }
+        let lock = parent.join(format!(".{name}.install.lock"));
+        if lock.exists() {
+            report.note(
+                DoctorVerdict::Fixable,
+                format!("stale install lockfile {lock:?} — remove it if no install is running"),
+            );
+        }
+    }
+
+    let manifest_path = dir.join("manifest.json");
+    let text = match fs::read_to_string(&manifest_path) {
+        Ok(t) => t,
+        Err(e) => {
+            report.note(DoctorVerdict::Fail, format!("cannot read {manifest_path:?}: {e}"));
+            return report;
+        }
+    };
+    let j = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            report.note(DoctorVerdict::Fail, format!("cannot parse {manifest_path:?}: {e}"));
+            return report;
+        }
+    };
+    let pkg = match j.get("package") {
+        None | Some(Json::Null) => {
+            report.note(
+                DoctorVerdict::Fixable,
+                "legacy manifest (no package block): loads read-only via the compat shim — \
+                 run `qtx pack` to make it installable"
+                    .to_string(),
+            );
+            return report;
+        }
+        Some(p) => match PackageInfo::from_json(p) {
+            Ok(info) => info,
+            Err(e) => {
+                report.note(DoctorVerdict::Fail, format!("package block rejected: {e:#}"));
+                return report;
+            }
+        },
+    };
+
+    let mut bad = 0usize;
+    for e in &pkg.entries {
+        let path = dir.join(&e.path);
+        if !path.is_file() {
+            report.note(DoctorVerdict::Fail, format!("missing entry {:?}", e.path));
+            bad += 1;
+            continue;
+        }
+        match sha256_file(&path) {
+            Err(err) => {
+                report.note(DoctorVerdict::Fail, format!("unreadable entry {:?}: {err:#}", e.path));
+                bad += 1;
+            }
+            Ok((_, bytes)) if bytes != e.bytes => {
+                report.note(
+                    DoctorVerdict::Fail,
+                    format!(
+                        "entry {:?} truncated or resized ({bytes} bytes on disk, {} expected)",
+                        e.path, e.bytes
+                    ),
+                );
+                bad += 1;
+            }
+            Ok((sha, _)) if sha != e.sha256 => {
+                report.note(
+                    DoctorVerdict::Fail,
+                    format!(
+                        "entry {:?} fails its checksum ({} on disk, {} expected)",
+                        e.path,
+                        &sha[..SHORT_HEX],
+                        &e.sha256[..SHORT_HEX]
+                    ),
+                );
+                bad += 1;
+            }
+            Ok(_) => {}
+        }
+    }
+    if bad == 0 {
+        report.notes.push(format!(
+            "package schema {}, install_id {}, {} entries / {} bytes verified ({} · {})",
+            pkg.schema,
+            pkg.install_id,
+            pkg.entries.len(),
+            pkg.payload_bytes(),
+            pkg.provenance.config,
+            pkg.provenance.variant,
+        ));
+    }
+    report
+}
+
+// ---- atomic install -------------------------------------------------------
+
+/// An install staged but not yet committed. Holds the staging dir and
+/// lockfile paths; dropping it WITHOUT [`commit`] or [`abort`] models a
+/// crashed install (leftovers stay on disk for `doctor` to flag).
+#[derive(Debug)]
+pub struct StagedInstall {
+    pub staging: PathBuf,
+    pub dest: PathBuf,
+    pub lock: PathBuf,
+    pub info: PackageInfo,
+}
+
+fn dest_parts(dest: &Path) -> Result<(PathBuf, String)> {
+    let name = dest
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .with_context(|| format!("install destination {dest:?} has no directory name"))?;
+    let parent = match dest.parent() {
+        Some(p) if p.as_os_str().is_empty() => PathBuf::from("."),
+        Some(p) => p.to_path_buf(),
+        None => PathBuf::from("."),
+    };
+    Ok((parent, name))
+}
+
+/// Stage `src` for installation at `dest`: verify the source package,
+/// take the lockfile, copy manifest + entries into `.staging-<name>`,
+/// and re-checksum every staged copy. The destination is untouched.
+pub fn stage(src: &Path, dest: &Path) -> Result<StagedInstall> {
+    let info = verify_dir(src).with_context(|| format!("source artifact {src:?}"))?;
+    let (parent, name) = dest_parts(dest)?;
+    fs::create_dir_all(&parent).with_context(|| format!("creating {parent:?}"))?;
+
+    let lock = parent.join(format!(".{name}.install.lock"));
+    fs::File::options().write(true).create_new(true).open(&lock).with_context(|| {
+        format!(
+            "taking install lock {lock:?} — another install is running, or a crashed one \
+             left the lock behind (run `qtx doctor` and remove it)"
+        )
+    })?;
+
+    let staging = parent.join(format!(".staging-{name}"));
+    let staged = (|| -> Result<()> {
+        if staging.exists() {
+            bail!(
+                "leftover staging dir {staging:?} from a crashed install — remove it and retry"
+            );
+        }
+        fs::create_dir_all(&staging)?;
+        fs::copy(src.join("manifest.json"), staging.join("manifest.json"))
+            .context("copying manifest.json")?;
+        for e in &info.entries {
+            let to = staging.join(&e.path);
+            if let Some(dir) = to.parent() {
+                fs::create_dir_all(dir)?;
+            }
+            fs::copy(src.join(&e.path), &to)
+                .with_context(|| format!("copying entry {:?}", e.path))?;
+            let (sha, bytes) = sha256_file(&to)?;
+            if bytes != e.bytes || sha != e.sha256 {
+                bail!("staged copy of {:?} fails its checksum — unreliable disk?", e.path);
+            }
+        }
+        Ok(())
+    })();
+    if let Err(e) = staged {
+        let _ = fs::remove_file(&lock);
+        return Err(e);
+    }
+    Ok(StagedInstall { staging, dest: dest.to_path_buf(), lock, info })
+}
+
+/// Commit a staged install: one `rename(2)` of the staging dir onto the
+/// destination is the only point where `dest` changes. An existing
+/// destination is parked aside first and deleted after the swap.
+pub fn commit(staged: &StagedInstall) -> Result<()> {
+    let (parent, name) = dest_parts(&staged.dest)?;
+    let previous = parent.join(format!(".previous-{name}"));
+    if previous.exists() {
+        fs::remove_dir_all(&previous).with_context(|| format!("clearing {previous:?}"))?;
+    }
+    let had_previous = staged.dest.exists();
+    if had_previous {
+        fs::rename(&staged.dest, &previous)
+            .with_context(|| format!("parking old {:?}", staged.dest))?;
+    }
+    if let Err(e) = fs::rename(&staged.staging, &staged.dest) {
+        // Roll the old dir back so a failed commit still leaves a
+        // working destination.
+        if had_previous {
+            let _ = fs::rename(&previous, &staged.dest);
+        }
+        return Err(e).with_context(|| {
+            format!("renaming {:?} -> {:?}", staged.staging, staged.dest)
+        });
+    }
+    if had_previous {
+        let _ = fs::remove_dir_all(&previous);
+    }
+    fs::remove_file(&staged.lock).with_context(|| format!("releasing {:?}", staged.lock))?;
+    Ok(())
+}
+
+/// Best-effort cleanup of an install that will not be committed.
+pub fn abort(staged: &StagedInstall) {
+    let _ = fs::remove_dir_all(&staged.staging);
+    let _ = fs::remove_file(&staged.lock);
+}
+
+/// `stage` + `commit` with cleanup on failure. Returns the installed
+/// package info.
+pub fn install(src: &Path, dest: &Path) -> Result<PackageInfo> {
+    let staged = stage(src, dest)?;
+    if let Err(e) = commit(&staged) {
+        abort(&staged);
+        return Err(e);
+    }
+    Ok(staged.info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("qtx-package-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A minimal but structurally real artifact dir: manifest + two
+    /// payload files.
+    fn fake_artifact(root: &Path, name: &str) -> PathBuf {
+        let dir = root.join(name);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("init.hlo.txt"), b"HloModule init\nROOT r = f32[] constant(0)\n")
+            .unwrap();
+        fs::write(dir.join("weights.bin"), [7u8; 300]).unwrap();
+        fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":5,"fingerprint":"fp123","config":{"name":"c","attention":"clipped_softmax","use_gate":true},"quant_points":["embed","L0.q"]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn sha256_standard_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // One million 'a' bytes exercises multi-block streaming.
+        let mut h = Sha256::new();
+        let chunk = [b'a'; 997]; // deliberately not 64-aligned
+        let mut left = 1_000_000usize;
+        while left > 0 {
+            let n = left.min(chunk.len());
+            h.update(&chunk[..n]);
+            left -= n;
+        }
+        assert_eq!(
+            h.finish_hex(),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn pack_then_verify_roundtrips() {
+        let root = tmpdir("pack");
+        let dir = fake_artifact(&root, "c");
+        let info = pack(&dir).unwrap();
+        assert_eq!(info.schema, PACKAGE_SCHEMA);
+        assert_eq!(info.entries.len(), 2);
+        assert_eq!(info.entries[0].path, "init.hlo.txt");
+        assert_eq!(info.entries[0].kind, "program");
+        assert_eq!(info.entries[1].path, "weights.bin");
+        assert_eq!(info.entries[1].kind, "data");
+        assert_eq!(info.provenance.config, "c");
+        assert_eq!(info.provenance.variant, "clipped_softmax+gate");
+        assert_eq!(info.provenance.fingerprint, "fp123");
+        assert_eq!(info.install_id.len(), 16);
+
+        let verified = verify_dir(&dir).unwrap();
+        assert_eq!(verified, info);
+        // Repacking an unchanged dir is a fixpoint (same install id).
+        let again = pack(&dir).unwrap();
+        assert_eq!(again.install_id, info.install_id);
+
+        let report = doctor(&dir);
+        assert_eq!(report.verdict, DoctorVerdict::Ok, "{:?}", report.notes);
+    }
+
+    #[test]
+    fn corrupted_byte_fails_closed() {
+        let root = tmpdir("corrupt");
+        let dir = fake_artifact(&root, "c");
+        pack(&dir).unwrap();
+        let mut bytes = fs::read(dir.join("weights.bin")).unwrap();
+        bytes[17] ^= 0xFF;
+        fs::write(dir.join("weights.bin"), bytes).unwrap();
+
+        let err = verify_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("weights.bin") && err.contains("checksum"), "{err}");
+        let report = doctor(&dir);
+        assert_eq!(report.verdict, DoctorVerdict::Fail);
+        assert!(report.notes.iter().any(|n| n.contains("weights.bin")), "{:?}", report.notes);
+    }
+
+    #[test]
+    fn truncated_entry_fails_closed() {
+        let root = tmpdir("trunc");
+        let dir = fake_artifact(&root, "c");
+        pack(&dir).unwrap();
+        fs::write(dir.join("weights.bin"), [7u8; 100]).unwrap();
+        let err = verify_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        fs::remove_file(dir.join("weights.bin")).unwrap();
+        let err = verify_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+        assert_eq!(doctor(&dir).verdict, DoctorVerdict::Fail);
+    }
+
+    #[test]
+    fn unknown_schema_fails_closed() {
+        let root = tmpdir("schema");
+        let dir = fake_artifact(&root, "c");
+        pack(&dir).unwrap();
+        let text = fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let bumped = text.replace(
+            &format!("\"schema\":{PACKAGE_SCHEMA}"),
+            &format!("\"schema\":{}", PACKAGE_SCHEMA + 7),
+        );
+        assert_ne!(text, bumped, "schema key must be present to rewrite");
+        fs::write(dir.join("manifest.json"), bumped).unwrap();
+
+        let err = verify_dir(&dir).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(
+            chain.contains(&format!("unsupported package schema {}", PACKAGE_SCHEMA + 7)),
+            "{chain}"
+        );
+        assert!(chain.contains(&format!("supports schema {PACKAGE_SCHEMA}")), "{chain}");
+        assert_eq!(doctor(&dir).verdict, DoctorVerdict::Fail);
+    }
+
+    #[test]
+    fn duplicate_entry_paths_fail_closed() {
+        let j = Json::parse(&format!(
+            r#"{{"schema":{PACKAGE_SCHEMA},"install_id":"x","entries":[
+                {{"path":"a.bin","kind":"data","bytes":1,"sha256":"{0}"}},
+                {{"path":"a.bin","kind":"data","bytes":1,"sha256":"{0}"}}],
+               "provenance":{{"fingerprint":"","config":"c","variant":"softmax",
+                 "calibration_id":"","toolchain":"t"}}}}"#,
+            sha256_hex(b"x")
+        ))
+        .unwrap();
+        let err = PackageInfo::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("duplicate package entry path") && err.contains("a.bin"), "{err}");
+    }
+
+    #[test]
+    fn legacy_dir_is_fixable_not_broken() {
+        let root = tmpdir("legacy");
+        let dir = fake_artifact(&root, "c");
+        // Never packed: read_package refuses, doctor says fixable.
+        let err = read_package(&dir).unwrap_err().to_string();
+        assert!(err.contains("legacy manifest") && err.contains("qtx pack"), "{err}");
+        let report = doctor(&dir);
+        assert_eq!(report.verdict, DoctorVerdict::Fixable);
+        assert!(report.notes.iter().any(|n| n.contains("compat shim")), "{:?}", report.notes);
+    }
+
+    #[test]
+    fn install_roundtrip_and_lock_release() {
+        let root = tmpdir("install");
+        let src = fake_artifact(&root, "src");
+        pack(&src).unwrap();
+        let dest = root.join("installed/c");
+        let info = install(&src, &dest).unwrap();
+        assert_eq!(verify_dir(&dest).unwrap(), info);
+        // No leftovers: lock released, staging renamed away.
+        assert!(!root.join("installed/.staging-c").exists());
+        assert!(!root.join("installed/.c.install.lock").exists());
+        assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+
+        // Re-install over the existing dir replaces it atomically.
+        fs::write(src.join("weights.bin"), [9u8; 300]).unwrap();
+        pack(&src).unwrap();
+        let info2 = install(&src, &dest).unwrap();
+        assert_ne!(info.install_id, info2.install_id);
+        assert_eq!(verify_dir(&dest).unwrap().install_id, info2.install_id);
+    }
+
+    #[test]
+    fn crashed_install_leaves_old_dir_intact_and_doctor_flags_leftovers() {
+        let root = tmpdir("crash");
+        let src = fake_artifact(&root, "src");
+        pack(&src).unwrap();
+        let dest = root.join("installed/c");
+        let first = install(&src, &dest).unwrap();
+
+        // New payload staged but never committed: the "kill mid-install".
+        fs::write(src.join("weights.bin"), [1u8; 300]).unwrap();
+        pack(&src).unwrap();
+        let staged = stage(&src, &dest).unwrap();
+        assert!(staged.staging.exists() && staged.lock.exists());
+        // Old destination is byte-for-byte intact.
+        assert_eq!(verify_dir(&dest).unwrap().install_id, first.install_id);
+
+        // Doctor flags the leftovers as fixable, not broken.
+        let report = doctor(&dest);
+        assert_eq!(report.verdict, DoctorVerdict::Fixable, "{:?}", report.notes);
+        assert!(report.notes.iter().any(|n| n.contains("staging")), "{:?}", report.notes);
+        assert!(report.notes.iter().any(|n| n.contains("lock")), "{:?}", report.notes);
+
+        // A second install attempt refuses while the lock is held.
+        let err = stage(&src, &dest).unwrap_err();
+        assert!(format!("{err:#}").contains("install lock"), "{err:#}");
+
+        // Abort cleans up; install then succeeds and swaps the payload.
+        abort(&staged);
+        assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+        let second = install(&src, &dest).unwrap();
+        assert_ne!(second.install_id, first.install_id);
+        assert_eq!(verify_dir(&dest).unwrap().install_id, second.install_id);
+    }
+
+    #[test]
+    fn stage_refuses_unpacked_source() {
+        let root = tmpdir("unpacked");
+        let src = fake_artifact(&root, "src");
+        let err = format!("{:#}", stage(&src, &root.join("d")).unwrap_err());
+        assert!(err.contains("legacy manifest"), "{err}");
+        // Refusal must not leave a lock behind.
+        assert!(!root.join(".d.install.lock").exists());
+    }
+}

@@ -22,9 +22,9 @@
 //! thread *constructs* its own engine via an [`EngineFactory`] and requests
 //! cross threads as plain host data.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -102,6 +102,64 @@ pub trait ScoreEngine {
     /// default — the worker then skips the stats merge entirely).
     fn drain_telemetry(&mut self, _into: &mut EngineTelemetry) -> bool {
         false
+    }
+
+    /// Called once per worker-loop pass, *before* new admissions are
+    /// prefilled: engines fronting a [`WeightHub`] pick up a published
+    /// weight reload here and return the generation that will serve new
+    /// sessions from now on. In-flight sessions keep decoding on the
+    /// weights they prefilled with (their KV caches are grid-bound to
+    /// that generation). Default: static engines stay on generation 1.
+    fn poll_reload(&mut self) -> u64 {
+        1
+    }
+
+    /// A generation session on batch row `row` retired (finished, failed
+    /// or disconnected). Engines holding per-slot state bound to a weights
+    /// generation drop it here, so the last session off an old generation
+    /// releases that weight copy. Default: nothing to release.
+    fn gen_finish(&mut self, _row: usize) {}
+}
+
+/// Hand-rolled `ArcSwap`-style weight slot: the `/admin/reload` hook
+/// *publishes* a new weights `Arc` (built and calibrated off-thread), and
+/// each engine worker *snapshots* it at the top of its loop via
+/// [`ScoreEngine::poll_reload`]. The mutex is held only for the pointer
+/// exchange — never across a forward pass — and the generation counter is
+/// mirrored in an atomic so `/statz` and cheap staleness checks need no
+/// lock at all. Old weight copies drop when the last in-flight session
+/// bound to them retires ([`ScoreEngine::gen_finish`]).
+pub struct WeightHub<T> {
+    gen: AtomicU64,
+    slot: Mutex<(u64, Arc<T>)>,
+}
+
+impl<T> WeightHub<T> {
+    /// Wrap the initial weights as generation 1.
+    pub fn new(initial: Arc<T>) -> WeightHub<T> {
+        WeightHub { gen: AtomicU64::new(1), slot: Mutex::new((1, initial)) }
+    }
+
+    /// The currently published generation (lock-free).
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// Clone out the current `(generation, weights)` pair.
+    pub fn snapshot(&self) -> (u64, Arc<T>) {
+        let g = self.slot.lock().expect("weight hub lock poisoned");
+        (g.0, g.1.clone())
+    }
+
+    /// Swap in new weights; returns the new generation. The old `Arc` is
+    /// released by this hub immediately — engines still decoding on it
+    /// keep it alive until their last session finishes.
+    pub fn publish(&self, next: Arc<T>) -> u64 {
+        let mut g = self.slot.lock().expect("weight hub lock poisoned");
+        g.0 += 1;
+        g.1 = next;
+        self.gen.store(g.0, Ordering::Release);
+        g.0
     }
 }
 
@@ -312,6 +370,13 @@ pub struct MockEngine {
     /// Per-slot sampler for non-greedy sessions (`None` ⇒ greedy, the
     /// byte-identical pre-sampling behavior).
     samplers: Vec<Option<Sampler>>,
+    /// Optional shared weight slot: [`ScoreEngine::poll_reload`] snapshots
+    /// its generation, and sessions prefilled at generation g > 1 fold g
+    /// into the session hash. Generation-1 output stays bit-identical to a
+    /// hubless engine, so offline replays of served transcripts need no
+    /// hub at all.
+    hub: Option<Arc<WeightHub<()>>>,
+    generation: u64,
 }
 
 impl MockEngine {
@@ -324,7 +389,24 @@ impl MockEngine {
             step_cost: Duration::from_micros(100),
             gen: vec![None; max_batch],
             samplers: std::iter::repeat_with(|| None).take(max_batch).collect(),
+            hub: None,
+            generation: 1,
         }
+    }
+
+    /// Front a [`WeightHub`]; the engine picks up published generations at
+    /// each [`ScoreEngine::poll_reload`].
+    pub fn with_hub(mut self, hub: Arc<WeightHub<()>>) -> MockEngine {
+        self.generation = hub.generation();
+        self.hub = Some(hub);
+        self
+    }
+
+    /// Pin the weights generation directly — offline replay of sessions a
+    /// served (hub-fronted) engine admitted at generation `g`.
+    pub fn at_generation(mut self, generation: u64) -> MockEngine {
+        self.generation = generation;
+        self
     }
 
     fn mix(h: u64, v: u64) -> u64 {
@@ -452,6 +534,12 @@ impl ScoreEngine for MockEngine {
         self.samplers[slot] =
             if params.is_greedy() { None } else { Some(Sampler::new(*params)) };
         let mut h = 0xC0FF_EEu64;
+        if self.generation != 1 {
+            // Post-reload weights produce different (but equally
+            // deterministic) continuations; generation 1 keeps the exact
+            // historical hash so hubless replays stay bit-identical.
+            h = Self::mix(h, self.generation);
+        }
         for &t in prompt {
             h = Self::mix(h, t as u64);
         }
@@ -496,6 +584,13 @@ impl ScoreEngine for MockEngine {
             s.1 = self.advance(s.0, s.1);
         }
         Ok(())
+    }
+
+    fn poll_reload(&mut self) -> u64 {
+        if let Some(hub) = &self.hub {
+            self.generation = hub.generation();
+        }
+        self.generation
     }
 }
 
@@ -1187,6 +1282,11 @@ fn run_worker(
         } else {
             dispatch.try_next_batch(worker)
         };
+        // Pick up a hot weight reload before prefilling new admissions:
+        // sessions already in `sessions` keep decoding on the generation
+        // they prefilled with (bit-exact); everything admitted from here
+        // on uses the freshly published weights.
+        let _ = engine.poll_reload();
         let did_work = view.is_some() || !sessions.is_empty();
 
         if let Some(view) = view {
@@ -1416,6 +1516,9 @@ fn run_worker(
             // active-session gauge decremented.
             stats.decode_session_finished();
             dispatch.finish_generating(worker, s.slot);
+            // Let the engine drop per-row state pinned to an old weights
+            // generation — the last session off a generation releases it.
+            engine.gen_finish(s.row);
             match s.failed {
                 Some(msg) => {
                     log::warn_kv(
@@ -1544,6 +1647,75 @@ mod tests {
         assert_eq!(a[0], b[1]);
         assert_eq!(b.len(), 3);
         assert!(a[0].nll > 0.0 && a[0].count == 2.0);
+    }
+
+    #[test]
+    fn weight_hub_publishes_monotonic_generations() {
+        let hub = WeightHub::new(Arc::new(7u32));
+        assert_eq!(hub.generation(), 1);
+        let (g, w) = hub.snapshot();
+        assert_eq!((g, *w), (1, 7));
+        assert_eq!(hub.publish(Arc::new(8)), 2);
+        assert_eq!(hub.publish(Arc::new(9)), 3);
+        assert_eq!(hub.generation(), 3);
+        let (g, w) = hub.snapshot();
+        assert_eq!((g, *w), (3, 9));
+    }
+
+    /// The hot-reload decode contract at the engine layer: sessions
+    /// prefilled before a publish finish bit-exact on their original
+    /// generation; sessions admitted after it decode on the new one, and
+    /// both streams replay offline via a hubless engine pinned with
+    /// [`MockEngine::at_generation`].
+    #[test]
+    fn mock_reload_changes_new_sessions_only() {
+        let greedy = SampleParams::greedy();
+        let decode = |e: &mut MockEngine, slot: usize, prompt: &[i32]| {
+            let mut toks = vec![e.gen_prefill(slot, prompt, &greedy).unwrap()];
+            for _ in 0..4 {
+                let last = *toks.last().unwrap();
+                toks.push(e.gen_step(slot, last).unwrap());
+            }
+            toks
+        };
+
+        let hub = Arc::new(WeightHub::new(Arc::new(())));
+        let mut e = MockEngine::new(4, 16).with_hub(hub.clone());
+        e.batch_cost = Duration::ZERO;
+        e.step_cost = Duration::ZERO;
+        assert_eq!(e.poll_reload(), 1);
+
+        // In-flight session: prefill + 2 steps at generation 1 …
+        let mut inflight = vec![e.gen_prefill(0, &[3, 1, 4], &greedy).unwrap()];
+        for _ in 0..2 {
+            let last = *inflight.last().unwrap();
+            inflight.push(e.gen_step(0, last).unwrap());
+        }
+
+        // … reload lands mid-session …
+        hub.publish(Arc::new(()));
+        assert_eq!(e.poll_reload(), 2);
+
+        // … and the in-flight session still finishes on generation-1
+        // weights (its hash was captured at prefill), bit-exact with a
+        // hubless replay.
+        for _ in 0..2 {
+            let last = *inflight.last().unwrap();
+            inflight.push(e.gen_step(0, last).unwrap());
+        }
+        let mut offline = MockEngine::new(4, 16);
+        offline.batch_cost = Duration::ZERO;
+        offline.step_cost = Duration::ZERO;
+        assert_eq!(inflight, decode(&mut offline, 2, &[3, 1, 4]));
+
+        // New admissions decode on generation 2: different from the gen-1
+        // stream, equal to an offline engine pinned at generation 2.
+        let fresh = decode(&mut e, 1, &[3, 1, 4]);
+        assert_ne!(fresh, inflight);
+        let mut pinned = MockEngine::new(4, 16).at_generation(2);
+        pinned.batch_cost = Duration::ZERO;
+        pinned.step_cost = Duration::ZERO;
+        assert_eq!(fresh, decode(&mut pinned, 3, &[3, 1, 4]));
     }
 
     /// Drive the worker pool end-to-end under either policy.

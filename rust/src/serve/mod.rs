@@ -100,10 +100,11 @@ pub use batcher::{
 };
 pub use engine::{
     Dispatch, EngineFactory, EngineKind, EngineSpec, MockEngine, PjrtEngine, ScoreEngine,
+    WeightHub,
 };
 pub use fault::{FaultAction, FaultSpec, FaultState};
 pub use obs::{Obs, TraceConfig, TraceTap};
 pub use protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse, ScoreRow};
 pub use route::{Health, Router, RouterConfig};
-pub use server::{EngineInfo, Server, ServerConfig};
-pub use stats::ServeStats;
+pub use server::{AdminHooks, EngineInfo, ReloadFn, ReloadOutcome, Server, ServerConfig};
+pub use stats::{ArtifactId, ServeStats};

@@ -21,6 +21,14 @@
 //!   (rendered from the `/statz` snapshot — the surfaces cannot drift).
 //! * `GET /debug/traces?n=K` — most recent completed request traces
 //!   (see [`crate::serve::obs`]).
+//! * `POST /admin/reload {"dir": ...}` — zero-downtime weight reload: the
+//!   configured [`ReloadFn`] verifies + loads the artifact dir off the io
+//!   loop and publishes it through the engines' `WeightHub`; in-flight
+//!   decode sessions finish bit-exact on their original weights, new
+//!   admissions pick up the new generation. 501 without a hook.
+//! * `POST /admin/drain` — stop admitting score/generate work (503 before
+//!   dispatch) while in-flight requests finish; `/healthz` flips to
+//!   `ready: false` so probes route around the replica.
 //!
 //! Threading model: a single `qtx-http` thread runs a non-blocking event
 //! loop (`poll(2)` via [`crate::serve::poll`]) over the listener and
@@ -62,9 +70,41 @@ use crate::serve::protocol::{
     error_json, stream_done_event, stream_error_event, stream_token_event, GenerateRequest,
     GenerateResponse, ScoreRequest, ScoreResponse,
 };
-use crate::serve::stats::{EngineMem, ServeStats};
+use crate::serve::stats::{ArtifactId, EngineMem, ServeStats};
 use crate::util::json::Json;
 use crate::util::log;
+
+/// What a successful `/admin/reload` hook reports back: the weights
+/// generation now serving new sessions, plus the identity of the reloaded
+/// artifact when its dir is packaged (manifest v2).
+#[derive(Debug, Clone)]
+pub struct ReloadOutcome {
+    pub generation: u64,
+    pub artifact: Option<ArtifactId>,
+}
+
+/// The `/admin/reload` implementation: verify the artifact dir, build +
+/// calibrate new weights, publish them into the engines'
+/// [`crate::serve::engine::WeightHub`], and report the new generation.
+/// Always invoked on a dedicated thread — never the io loop — so serving
+/// continues while the (potentially long) rebuild runs.
+pub type ReloadFn = Arc<dyn Fn(&std::path::Path) -> Result<ReloadOutcome> + Send + Sync>;
+
+/// Admin-surface wiring for [`Server::start_with_admin`]. The default has
+/// no reload hook (`POST /admin/reload` answers 501) and no artifact
+/// identity (`/statz` reports `artifact.schema: 0`).
+#[derive(Clone, Default)]
+pub struct AdminHooks {
+    pub reload: Option<ReloadFn>,
+    /// Identity of the artifact served at startup.
+    pub artifact: Option<ArtifactId>,
+}
+
+/// How long `/admin/reload` may run before the request answers 504 (the
+/// hook itself keeps running; a completed reload still publishes). Reload
+/// covers weight building and activation calibration, so the ordinary
+/// request timeout would be far too tight.
+const ADMIN_RELOAD_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// Server-side knobs (the batcher policy rides along).
 #[derive(Debug, Clone)]
@@ -154,6 +194,18 @@ impl Server {
     /// Bind, spawn everything, return immediately. Engines warm up in the
     /// background; use [`Server::wait_ready`] before sending traffic.
     pub fn start(cfg: ServerConfig, info: EngineInfo, factory: EngineFactory) -> Result<Server> {
+        Self::start_with_admin(cfg, info, factory, AdminHooks::default())
+    }
+
+    /// [`Server::start`] plus the admin surface: a reload hook backing
+    /// `POST /admin/reload` and the identity of the artifact served at
+    /// startup (`/statz`'s `artifact` section).
+    pub fn start_with_admin(
+        cfg: ServerConfig,
+        info: EngineInfo,
+        factory: EngineFactory,
+        admin: AdminHooks,
+    ) -> Result<Server> {
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
         listener.set_nonblocking(true).context("setting listener non-blocking")?;
@@ -164,6 +216,9 @@ impl Server {
         let _ = raise_nofile_limit(cfg.max_connections as u64 + 64);
         let stats = Arc::new(ServeStats::new());
         stats.io_threads.store(1, Ordering::Relaxed);
+        if let Some(id) = admin.artifact.clone() {
+            stats.set_artifact(id);
+        }
         let engines = cfg.engines.max(1);
         let dispatch = Arc::new(match cfg.policy {
             BatchPolicy::Fixed => Dispatch::Fixed(Batcher::new(cfg.batcher)),
@@ -203,6 +258,8 @@ impl Server {
                 log::info(&format!("fault injection armed: {:?}", cfg.fault));
                 Some(Mutex::new(FaultState::new(cfg.fault.clone())))
             },
+            reload: admin.reload.clone(),
+            draining: Arc::new(AtomicBool::new(false)),
         });
         let io_handle = {
             let ctx = ctx.clone();
@@ -307,6 +364,12 @@ struct HandlerCtx {
     /// Fault-injection state (`--fault`); `None` when no fault is
     /// configured, so the common path pays one pointer check.
     fault: Option<Mutex<FaultState>>,
+    /// `POST /admin/reload` implementation; `None` ⇒ 501.
+    reload: Option<ReloadFn>,
+    /// Drain mode (`POST /admin/drain`): stop admitting score/generate
+    /// work (503 before dispatch, not counted as shed load) while in-flight
+    /// requests finish; `/healthz` reports `ready: false`.
+    draining: Arc<AtomicBool>,
 }
 
 /// Consult the fault layer for one dispatched request (`None` when no
@@ -608,11 +671,21 @@ struct PendingStream {
     tap: Option<Arc<TraceTap>>,
 }
 
+/// An `/admin/reload` in flight: the hook runs on a dedicated `qtx-reload`
+/// thread and reports `(result, how long the hook took)` back over this
+/// channel, then pokes the waker.
+struct PendingAdmin {
+    rx: mpsc::Receiver<(std::result::Result<ReloadOutcome, String>, Duration)>,
+    keep_alive: bool,
+    deadline: Instant,
+}
+
 enum Pending {
     Idle,
     Score(PendingReply),
     Generate(PendingReply),
     Stream(PendingStream),
+    Admin(PendingAdmin),
 }
 
 /// One open connection: its socket, parser state machine, queued-but-
@@ -667,6 +740,7 @@ fn conn_deadline(c: &ConnEntry) -> Option<Instant> {
         Pending::Idle => c.machine.next_deadline(),
         Pending::Score(p) | Pending::Generate(p) => Some(p.deadline),
         Pending::Stream(p) => Some(p.deadline),
+        Pending::Admin(p) => Some(p.deadline),
     };
     // A fault-injected flush hold also needs clock service when it lapses.
     match (d, c.hold_until) {
@@ -946,10 +1020,19 @@ fn dispatch_request(
     req: ParsedRequest,
     now: Instant,
 ) -> Option<ConnEvent> {
-    if req.method == "POST" && req.path() == "/v1/score" {
-        return dispatch_score(c, ctx, req, now);
-    }
-    if req.method == "POST" && req.path() == "/v1/generate" {
+    if req.method == "POST" && (req.path() == "/v1/score" || req.path() == "/v1/generate") {
+        // Drain mode refuses *before* dispatch: nothing reaches the
+        // batcher, and the refusal is deliberate back-pressure, not shed
+        // load — `rejected_full` stays untouched so capacity alerts don't
+        // fire during a planned drain.
+        if ctx.draining.load(Ordering::SeqCst) {
+            let keep_alive = req.keep_alive;
+            queue_json(c, 503, "Service Unavailable", &error_json("draining"), keep_alive);
+            return complete_response(c, keep_alive, now);
+        }
+        if req.path() == "/v1/score" {
+            return dispatch_score(c, ctx, req, now);
+        }
         return dispatch_generate(c, ctx, req, now);
     }
     let keep_alive = req.keep_alive;
@@ -961,8 +1044,16 @@ fn dispatch_request(
             // "startup failed" (`unavailable`, with the error payload).
             let ready = ctx.engines_ready.load(Ordering::SeqCst);
             let startup_error = ctx.stats.startup_error();
+            let draining = ctx.draining.load(Ordering::SeqCst);
             let status = if ready > 0 {
-                "ok"
+                // A draining server is healthy but must fall out of
+                // rotation: probes read `ready: false` / 503 and route
+                // around it without ejecting the replica.
+                if draining {
+                    "draining"
+                } else {
+                    "ok"
+                }
             } else if startup_error.is_none() {
                 "starting"
             } else {
@@ -970,7 +1061,8 @@ fn dispatch_request(
             };
             let mut doc = vec![
                 ("status", Json::Str(status.into())),
-                ("ready", Json::Bool(ready > 0)),
+                ("ready", Json::Bool(ready > 0 && !draining)),
+                ("draining", Json::Bool(draining)),
                 ("engine", Json::Str(ctx.info.describe.clone())),
                 ("engines_ready", Json::Num(ready as f64)),
                 ("batch_policy", Json::Str(ctx.dispatch.policy().name().into())),
@@ -988,8 +1080,10 @@ fn dispatch_request(
                     c.stall_pending = Some(d);
                 }
             }
-            if ready > 0 {
+            if ready > 0 && !draining {
                 queue_json(c, 200, "OK", &Json::obj(doc), keep_alive);
+            } else if ready > 0 {
+                queue_json(c, 503, "Service Unavailable", &Json::obj(doc), keep_alive);
             } else {
                 if let Some(err) = startup_error {
                     // Failure payload: name the reason (e.g. the manifest
@@ -1022,8 +1116,47 @@ fn dispatch_request(
                 .unwrap_or(32);
             queue_json(c, 200, "OK", &ctx.obs.to_json(n), keep_alive);
         }
+        ("POST", "/admin/reload") => {
+            return dispatch_admin_reload(c, ctx, req, now);
+        }
+        ("POST", "/admin/drain") => {
+            // Optional body `{"enable": bool}`; empty body / `{}` means
+            // enable. Idempotent toggle, answered synchronously.
+            let body = req.body_str().map(|b| b.trim().to_string()).unwrap_or_default();
+            let enable = if body.is_empty() {
+                Some(true)
+            } else {
+                match Json::parse(&body) {
+                    Ok(j) => Some(j.get("enable").and_then(Json::as_bool).unwrap_or(true)),
+                    Err(_) => None,
+                }
+            };
+            match enable {
+                Some(enable) => {
+                    ctx.draining.store(enable, Ordering::SeqCst);
+                    log::info(&format!("admin: drain mode {}", if enable { "on" } else { "off" }));
+                    queue_json(
+                        c,
+                        200,
+                        "OK",
+                        &Json::obj(vec![("draining", Json::Bool(enable))]),
+                        keep_alive,
+                    );
+                }
+                None => {
+                    ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    queue_json(
+                        c,
+                        400,
+                        "Bad Request",
+                        &error_json("body must be empty or {\"enable\": bool}"),
+                        keep_alive,
+                    );
+                }
+            }
+        }
         (_, "/v1/score") | (_, "/v1/generate") | (_, "/healthz") | (_, "/statz")
-        | (_, "/metricz") | (_, "/debug/traces") => {
+        | (_, "/metricz") | (_, "/debug/traces") | (_, "/admin/reload") | (_, "/admin/drain") => {
             queue_json(c, 405, "Method Not Allowed", &error_json("method not allowed"), keep_alive);
         }
         (_, path) => {
@@ -1031,6 +1164,71 @@ fn dispatch_request(
         }
     }
     complete_response(c, keep_alive, now)
+}
+
+/// `POST /admin/reload {"dir": ...}`: run the configured reload hook on a
+/// dedicated thread (weight building + calibration are far too slow for
+/// the io loop) and leave the connection waiting on the result channel.
+fn dispatch_admin_reload(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    req: ParsedRequest,
+    now: Instant,
+) -> Option<ConnEvent> {
+    let keep_alive = req.keep_alive;
+    let dir = req
+        .body_str()
+        .ok()
+        .and_then(|b| Json::parse(b).ok())
+        .and_then(|j| j.get("dir").and_then(Json::as_str).map(str::to_string));
+    let Some(dir) = dir else {
+        ctx.stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+        queue_json(
+            c,
+            400,
+            "Bad Request",
+            &error_json("body must be {\"dir\": \"/path/to/artifact\"}"),
+            keep_alive,
+        );
+        return complete_response(c, keep_alive, now);
+    };
+    let Some(hook) = ctx.reload.clone() else {
+        queue_json(
+            c,
+            501,
+            "Not Implemented",
+            &error_json("this server has no reload hook"),
+            keep_alive,
+        );
+        return complete_response(c, keep_alive, now);
+    };
+    log::info(&format!("admin: reload requested from {dir}"));
+    let (tx, rx) = mpsc::channel();
+    let waker = ctx.waker.clone();
+    let spawned = std::thread::Builder::new()
+        .name("qtx-reload".into())
+        .spawn(move || {
+            let t0 = Instant::now();
+            let out = hook(std::path::Path::new(&dir)).map_err(|e| format!("{e:#}"));
+            let _ = tx.send((out, t0.elapsed()));
+            waker.wake();
+        });
+    if spawned.is_err() {
+        queue_json(
+            c,
+            500,
+            "Internal Server Error",
+            &error_json("failed to spawn reload thread"),
+            keep_alive,
+        );
+        return complete_response(c, keep_alive, now);
+    }
+    c.pending = Pending::Admin(PendingAdmin {
+        rx,
+        keep_alive,
+        deadline: Instant::now() + ADMIN_RELOAD_TIMEOUT.max(ctx.request_timeout),
+    });
+    None
 }
 
 /// `POST /v1/score`: validate, dispatch into the batcher, leave the
@@ -1315,7 +1513,69 @@ fn pump_pending(c: &mut ConnEntry, ctx: &HandlerCtx, now: Instant) -> bool {
             }
         },
         Pending::Stream(p) => pump_stream(c, ctx, p, now),
+        Pending::Admin(p) => match p.rx.try_recv() {
+            Ok((result, took)) => {
+                let ev = finish_admin_reload(c, ctx, p, Some((result, took)), now);
+                process_event(c, ctx, ev, now)
+            }
+            Err(mpsc::TryRecvError::Empty) if now < p.deadline => {
+                c.pending = Pending::Admin(p);
+                true
+            }
+            Err(_) => {
+                let ev = finish_admin_reload(c, ctx, p, None, now);
+                process_event(c, ctx, ev, now)
+            }
+        },
     }
+}
+
+/// Build the `/admin/reload` response. A successful hook bumps the
+/// `/statz` weights counters (and artifact identity, when the reloaded
+/// dir is packaged) before answering. `result` is `None` on deadline
+/// expiry — the hook thread keeps running and a late success still
+/// publishes, but the caller is told to poll `/statz` instead.
+fn finish_admin_reload(
+    c: &mut ConnEntry,
+    ctx: &HandlerCtx,
+    p: PendingAdmin,
+    result: Option<(std::result::Result<ReloadOutcome, String>, Duration)>,
+    now: Instant,
+) -> Option<ConnEvent> {
+    c.machine.replying();
+    match result {
+        Some((Ok(out), took)) => {
+            ctx.stats.record_reload(out.generation, took);
+            if let Some(id) = out.artifact {
+                ctx.stats.set_artifact(id);
+            }
+            log::info(&format!(
+                "admin: reload complete, weights generation {} ({} ms)",
+                out.generation,
+                took.as_millis()
+            ));
+            let doc = vec![
+                ("ok", Json::Bool(true)),
+                ("generation", Json::Num(out.generation as f64)),
+                ("took_ms", Json::Num(took.as_millis() as f64)),
+            ];
+            queue_json(c, 200, "OK", &Json::obj(doc), p.keep_alive);
+        }
+        Some((Err(msg), _)) => {
+            log::info(&format!("admin: reload failed: {msg}"));
+            queue_json(c, 500, "Internal Server Error", &error_json(&msg), p.keep_alive);
+        }
+        None => {
+            queue_json(
+                c,
+                504,
+                "Gateway Timeout",
+                &error_json("reload still running; poll /statz weights.generation"),
+                p.keep_alive,
+            );
+        }
+    }
+    complete_response(c, p.keep_alive, now)
 }
 
 /// Build the `/v1/score` response. `outcome` is `None` on deadline

@@ -183,6 +183,17 @@ impl EngineMem {
     }
 }
 
+/// Identity of the artifact currently being served, from its manifest-v2
+/// package block (`rust/src/runtime/package.rs`). `schema: 0` means the
+/// server runs without a packaged artifact (mock engine, or a legacy
+/// pre-package dir through the compat shim) — the strings are then empty.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactId {
+    pub schema: u32,
+    pub install_id: String,
+    pub sha256_short: String,
+}
+
 /// All serving counters, shared by HTTP handlers and engine workers.
 #[derive(Debug)]
 pub struct ServeStats {
@@ -255,6 +266,17 @@ pub struct ServeStats {
     /// scratch-resident counters into this once per dispatch (never from
     /// the zero-allocation forward itself), so a mutex is fine.
     engine_telemetry: Mutex<EngineTelemetry>,
+    /// Weights generation serving *new* sessions (starts at 1; bumped by
+    /// each successful `/admin/reload`).
+    pub weights_generation: AtomicU64,
+    /// Successful hot reloads since startup.
+    pub weights_reloads: AtomicU64,
+    /// Wall time of the most recent reload (build + calibrate + publish),
+    /// in milliseconds.
+    pub last_reload_ms: AtomicU64,
+    /// Identity of the artifact currently served — set at startup and
+    /// replaced on reload (admin path, off the per-request path).
+    artifact: Mutex<ArtifactId>,
 }
 
 impl ServeStats {
@@ -289,7 +311,26 @@ impl ServeStats {
             decode_ttft: LatencyHisto::default(),
             decode_inter_token: LatencyHisto::default(),
             engine_telemetry: Mutex::new(EngineTelemetry::default()),
+            weights_generation: AtomicU64::new(1),
+            weights_reloads: AtomicU64::new(0),
+            last_reload_ms: AtomicU64::new(0),
+            artifact: Mutex::new(ArtifactId::default()),
         }
+    }
+
+    /// Install (or replace, after a reload) the served-artifact identity.
+    pub fn set_artifact(&self, id: ArtifactId) {
+        if let Ok(mut slot) = self.artifact.lock() {
+            *slot = id;
+        }
+    }
+
+    /// A hot reload completed: `generation` now serves new sessions.
+    pub fn record_reload(&self, generation: u64, took: Duration) {
+        self.weights_generation.store(generation, Ordering::Relaxed);
+        self.weights_reloads.fetch_add(1, Ordering::Relaxed);
+        self.last_reload_ms
+            .store(took.as_millis().min(u128::from(u64::MAX)) as u64, Ordering::Relaxed);
     }
 
     /// Fold a worker's drained phase/quant-health counters into the shared
@@ -388,6 +429,7 @@ impl ServeStats {
     ) -> Json {
         let g = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
         let telem = self.engine_telemetry.lock().map(|t| t.clone()).unwrap_or_default();
+        let art = self.artifact.lock().map(|a| a.clone()).unwrap_or_default();
         let mut doc = vec![
             (
                 "server",
@@ -463,6 +505,23 @@ impl ServeStats {
                     ("step", self.decode_step.to_json()),
                     ("ttft", self.decode_ttft.to_json()),
                     ("inter_token", self.decode_inter_token.to_json()),
+                ]),
+            ),
+            (
+                "artifact",
+                Json::obj(vec![
+                    ("schema", Json::Num(art.schema as f64)),
+                    ("install_id", Json::Str(art.install_id)),
+                    ("sha256_short", Json::Str(art.sha256_short)),
+                    ("generation", g(&self.weights_generation)),
+                ]),
+            ),
+            (
+                "weights",
+                Json::obj(vec![
+                    ("generation", g(&self.weights_generation)),
+                    ("reloads", g(&self.weights_reloads)),
+                    ("last_reload_ms", g(&self.last_reload_ms)),
                 ]),
             ),
         ];
@@ -640,6 +699,7 @@ fn is_counter(path: &str) -> bool {
             | "batches.rows"
             | "decode.sessions_total"
             | "decode.tokens_total"
+            | "weights.reloads"
     )
 }
 
@@ -989,6 +1049,13 @@ mod tests {
             "qtx_decode_step_seconds",
             "qtx_decode_ttft_seconds",
             "qtx_decode_inter_token_seconds",
+            "qtx_artifact_schema",
+            "qtx_artifact_install_id",
+            "qtx_artifact_sha256_short",
+            "qtx_artifact_generation",
+            "qtx_weights_generation",
+            "qtx_weights_reloads",
+            "qtx_weights_last_reload_ms",
         ] {
             assert!(
                 text.contains(&format!("# TYPE {family}")),
@@ -1055,6 +1122,46 @@ mod tests {
         assert_eq!(slots.req("free").unwrap().as_usize(), Some(7));
         assert_eq!(slots.req("in_flight").unwrap().as_usize(), Some(4));
         assert_eq!(slots.req("generating").unwrap().as_usize(), Some(2));
+    }
+
+    /// The artifact identity and hot-reload counters `/statz` surfaces:
+    /// schema 0 / generation 1 before anything is installed, then the
+    /// packaged identity after `set_artifact` and the bumped generation +
+    /// reload count after `record_reload` — and `weights.reloads` renders
+    /// as a Prometheus counter.
+    #[test]
+    fn artifact_and_weights_sections_track_reloads() {
+        let s = ServeStats::new();
+        let doc = Json::parse(&s.snapshot("fixed", 0, None, EngineMem::default(), 1).to_string())
+            .unwrap();
+        let a = doc.req("artifact").unwrap();
+        assert_eq!(a.req("schema").unwrap().as_usize(), Some(0));
+        assert_eq!(a.req("install_id").unwrap().as_str(), Some(""));
+        assert_eq!(a.req("generation").unwrap().as_usize(), Some(1));
+        let w = doc.req("weights").unwrap();
+        assert_eq!(w.req("generation").unwrap().as_usize(), Some(1));
+        assert_eq!(w.req("reloads").unwrap().as_usize(), Some(0));
+
+        s.set_artifact(ArtifactId {
+            schema: 2,
+            install_id: "deadbeef00112233".into(),
+            sha256_short: "deadbeef0011".into(),
+        });
+        s.record_reload(2, Duration::from_millis(37));
+        let snap = s.snapshot("fixed", 0, None, EngineMem::default(), 1);
+        let doc = Json::parse(&snap.to_string()).unwrap();
+        let a = doc.req("artifact").unwrap();
+        assert_eq!(a.req("schema").unwrap().as_usize(), Some(2));
+        assert_eq!(a.req("install_id").unwrap().as_str(), Some("deadbeef00112233"));
+        assert_eq!(a.req("sha256_short").unwrap().as_str(), Some("deadbeef0011"));
+        assert_eq!(a.req("generation").unwrap().as_usize(), Some(2));
+        let w = doc.req("weights").unwrap();
+        assert_eq!(w.req("generation").unwrap().as_usize(), Some(2));
+        assert_eq!(w.req("reloads").unwrap().as_usize(), Some(1));
+        assert_eq!(w.req("last_reload_ms").unwrap().as_usize(), Some(37));
+        let text = s.prometheus(&snap);
+        assert!(text.contains("# TYPE qtx_weights_reloads counter\n"));
+        assert!(text.contains("qtx_artifact_install_id{value=\"deadbeef00112233\"} 1\n"));
     }
 
     #[test]

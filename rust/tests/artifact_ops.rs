@@ -1,0 +1,189 @@
+//! Integration tests for the operable-artifact lifecycle
+//! (docs/ARTIFACTS.md): pack → verify → corrupt → doctor → repair →
+//! atomic install, plus the crashed-install ("kill -9 mid-install")
+//! contract that the tentpole promises: the old destination stays
+//! intact and byte-verifiable, and `qtx doctor` flags the leftovers.
+//!
+//! These drive the same library calls the `qtx pack|install|doctor`
+//! subcommands wrap (`runtime::package`), so the CLI exit-code mapping
+//! (0 = Ok, 1 = Fixable, 2 = Fail) is pinned here via `DoctorVerdict`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use qtx::runtime::package::{
+    self, doctor, install, pack, read_package, stage, verify_dir, DoctorVerdict, PACKAGE_SCHEMA,
+};
+
+/// Fresh per-test temp root (removed and recreated so reruns are clean).
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("qtx-artifact-ops-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A minimal but structurally real artifact dir: a program file, a data
+/// file, and a legacy (pre-package) manifest — the state `qtx pack`
+/// starts from.
+fn fake_artifact(root: &Path, name: &str) -> PathBuf {
+    let dir = root.join(name);
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(dir.join("serve.hlo.txt"), b"HloModule serve\nROOT r = f32[] constant(0)\n").unwrap();
+    fs::write(dir.join("weights.bin"), [7u8; 300]).unwrap();
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":5,"fingerprint":"fp_ops","config":{"name":"c","attention":"clipped_softmax","use_gate":true},"quant_points":["embed","L0.q"]}"#,
+    )
+    .unwrap();
+    dir
+}
+
+fn notes_joined(report: &package::DoctorReport) -> String {
+    report.notes.join("\n")
+}
+
+#[test]
+fn pack_verify_corrupt_doctor_repair_install_lifecycle() {
+    let root = tmpdir("lifecycle");
+    let src = fake_artifact(&root, "src");
+
+    // Legacy dir: read_package fails closed and points at the fix.
+    let err = format!("{:#}", read_package(&src).unwrap_err());
+    assert!(err.contains("legacy manifest"), "unexpected error: {err}");
+    assert!(err.contains("qtx pack"), "error should name the fix: {err}");
+    let report = doctor(&src);
+    assert_eq!(report.verdict, DoctorVerdict::Fixable);
+    assert!(notes_joined(&report).contains("legacy manifest"));
+
+    // Pack, then full content verification round-trips.
+    let info = pack(&src).unwrap();
+    assert_eq!(info.schema, PACKAGE_SCHEMA);
+    assert_eq!(info.entries.len(), 2);
+    let verified = verify_dir(&src).unwrap();
+    assert_eq!(verified.install_id, info.install_id);
+    assert_eq!(doctor(&src).verdict, DoctorVerdict::Ok);
+
+    // One flipped byte (same size): verify names the entry and the
+    // checksum; doctor reaches the Fail verdict (CLI exit 2).
+    let mut corrupt = fs::read(src.join("weights.bin")).unwrap();
+    corrupt[150] ^= 0xff;
+    fs::write(src.join("weights.bin"), &corrupt).unwrap();
+    let err = format!("{:#}", verify_dir(&src).unwrap_err());
+    assert!(err.contains("weights.bin"), "error should name the entry: {err}");
+    assert!(err.contains("checksum"), "error should say why: {err}");
+    let report = doctor(&src);
+    assert_eq!(report.verdict, DoctorVerdict::Fail);
+    assert!(notes_joined(&report).contains("checksum"));
+
+    // Truncation is a distinct, size-based diagnosis.
+    fs::write(src.join("weights.bin"), [7u8; 120]).unwrap();
+    let err = format!("{:#}", verify_dir(&src).unwrap_err());
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+    let report = doctor(&src);
+    assert_eq!(report.verdict, DoctorVerdict::Fail);
+    assert!(notes_joined(&report).contains("truncated"));
+
+    // A missing entry is also Fail.
+    fs::remove_file(src.join("weights.bin")).unwrap();
+    assert_eq!(doctor(&src).verdict, DoctorVerdict::Fail);
+    assert!(notes_joined(&doctor(&src)).contains("missing"));
+
+    // Repair = restore the payload and repack (re-checksums in place).
+    fs::write(src.join("weights.bin"), [7u8; 300]).unwrap();
+    let repacked = pack(&src).unwrap();
+    assert_eq!(repacked.install_id, info.install_id, "same bytes => same install_id");
+    assert_eq!(doctor(&src).verdict, DoctorVerdict::Ok);
+
+    // Atomic install to a fresh destination; the installed copy passes
+    // the same full verification and carries the same identity.
+    let dest = root.join("installed").join("c");
+    let installed = install(&src, &dest).unwrap();
+    assert_eq!(installed.install_id, repacked.install_id);
+    let at_dest = verify_dir(&dest).unwrap();
+    assert_eq!(at_dest.install_id, repacked.install_id);
+    assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+
+    // No staging/lock leftovers after a clean install.
+    let parent = dest.parent().unwrap();
+    assert!(!parent.join(".staging-c").exists());
+    assert!(!parent.join(".c.install.lock").exists());
+    assert!(!parent.join(".previous-c").exists());
+}
+
+#[test]
+fn crashed_install_keeps_old_dest_and_doctor_flags_leftovers() {
+    let root = tmpdir("crash");
+    let src = fake_artifact(&root, "src");
+    let v1 = pack(&src).unwrap();
+
+    // v1 is live at dest.
+    let dest = root.join("live").join("c");
+    install(&src, &dest).unwrap();
+    assert_eq!(verify_dir(&dest).unwrap().install_id, v1.install_id);
+
+    // Build v2 in the source dir (different bytes => different id).
+    fs::write(src.join("weights.bin"), [9u8; 300]).unwrap();
+    let v2 = pack(&src).unwrap();
+    assert_ne!(v2.install_id, v1.install_id);
+
+    // Stage v2 over the live dest, then "crash" before commit: dropping
+    // the StagedInstall leaves the staging dir + lockfile on disk.
+    let staged = stage(&src, &dest).unwrap();
+    let (staging_path, lock_path) = (staged.staging.clone(), staged.lock.clone());
+    drop(staged);
+    assert!(staging_path.exists(), "crash must leave the staging dir");
+    assert!(lock_path.exists(), "crash must leave the lockfile");
+
+    // The destination never changed: still v1, still fully verifiable.
+    assert_eq!(verify_dir(&dest).unwrap().install_id, v1.install_id);
+
+    // Doctor on the destination flags both leftovers as Fixable (CLI
+    // exit 1), not Fail — the live artifact itself is healthy.
+    let report = doctor(&dest);
+    assert_eq!(report.verdict, DoctorVerdict::Fixable);
+    let notes = notes_joined(&report);
+    assert!(notes.contains("staging"), "doctor should flag the staging dir: {notes}");
+    assert!(notes.contains("lockfile"), "doctor should flag the lock: {notes}");
+
+    // A second install is blocked by the stale lock, with a message
+    // that routes the operator to doctor.
+    let err = format!("{:#}", stage(&src, &dest).unwrap_err());
+    assert!(err.contains("install lock"), "unexpected error: {err}");
+    assert!(err.contains("qtx doctor"), "error should route to doctor: {err}");
+
+    // Operator remediation per the doctor notes: remove the leftovers.
+    fs::remove_dir_all(&staging_path).unwrap();
+    fs::remove_file(&lock_path).unwrap();
+    assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+
+    // Retry succeeds and swaps dest to v2; the parked v1 copy is gone.
+    install(&src, &dest).unwrap();
+    assert_eq!(verify_dir(&dest).unwrap().install_id, v2.install_id);
+    assert!(!dest.parent().unwrap().join(".previous-c").exists());
+    assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+}
+
+#[test]
+fn abort_cleans_up_and_unpacked_source_is_refused() {
+    let root = tmpdir("abort");
+    let src = fake_artifact(&root, "src");
+
+    // install() of a legacy (unpacked) source fails closed before
+    // touching the destination.
+    let dest = root.join("out").join("c");
+    let err = format!("{:#}", install(&src, &dest).unwrap_err());
+    assert!(err.contains("legacy manifest"), "unexpected error: {err}");
+    assert!(!dest.exists());
+
+    // A deliberate abort removes staging + lock so a retry is clean.
+    pack(&src).unwrap();
+    let staged = stage(&src, &dest).unwrap();
+    let (staging_path, lock_path) = (staged.staging.clone(), staged.lock.clone());
+    package::abort(&staged);
+    assert!(!staging_path.exists());
+    assert!(!lock_path.exists());
+    assert!(!dest.exists(), "abort must not create the destination");
+    install(&src, &dest).unwrap();
+    assert_eq!(doctor(&dest).verdict, DoctorVerdict::Ok);
+}

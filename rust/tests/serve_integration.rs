@@ -11,12 +11,12 @@ use std::time::{Duration, Instant};
 
 use qtx::infer::SampleParams;
 use qtx::serve::batcher::{BatchPolicy, BatcherConfig};
-use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine};
+use qtx::serve::engine::{EngineFactory, MockEngine, ScoreEngine, WeightHub};
 use qtx::serve::loadgen::{self, GenLoad, LoadgenConfig};
 use qtx::serve::obs::TraceConfig;
 use qtx::serve::protocol::{GenerateRequest, GenerateResponse, ScoreRequest, ScoreResponse};
-use qtx::serve::server::{Client, EngineInfo, Server, ServerConfig};
-use qtx::serve::stats::EngineMem;
+use qtx::serve::server::{AdminHooks, Client, EngineInfo, ReloadOutcome, Server, ServerConfig};
+use qtx::serve::stats::{ArtifactId, EngineMem};
 use qtx::util::json::Json;
 
 const SEQ_LEN: usize = 32;
@@ -1381,5 +1381,427 @@ fn healthz_reports_unavailable_with_reason_after_startup_failure() {
     let err = doc.req("error").unwrap().as_str().unwrap();
     assert!(err.contains("engine exploded"), "reason surfaces to probes: {err}");
     assert!(doc.req("startup_failures").unwrap().as_f64().unwrap() >= 1.0);
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Operable artifacts: /admin/reload + /admin/drain
+// ---------------------------------------------------------------------------
+
+/// A continuous-mode server whose mock engines draw from a shared
+/// [`WeightHub`], with a reload hook that publishes a new generation and
+/// reports a fresh artifact identity — the serving-side shape `qtx serve
+/// --mock --artifact-dir` wires up, minus the on-disk package.
+fn start_hub_server(batch_cost: Duration, step_cost: Duration) -> (Server, Arc<WeightHub<()>>) {
+    let hub = Arc::new(WeightHub::new(Arc::new(())));
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 32,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig {
+            max_batch: MODEL_BATCH,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 128,
+        },
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(10),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let factory: EngineFactory = {
+        let hub = hub.clone();
+        Arc::new(move || {
+            let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN).with_hub(hub.clone());
+            e.batch_cost = batch_cost;
+            e.step_cost = step_cost;
+            Ok(Box::new(e) as Box<dyn ScoreEngine>)
+        })
+    };
+    let admin = AdminHooks {
+        reload: Some({
+            let hub = hub.clone();
+            Arc::new(move |dir: &std::path::Path| {
+                let generation = hub.publish(Arc::new(()));
+                Ok(ReloadOutcome {
+                    generation,
+                    artifact: Some(ArtifactId {
+                        schema: 2,
+                        install_id: format!("reload-{}", dir.display()),
+                        sha256_short: "feedface0011".into(),
+                    }),
+                })
+            })
+        }),
+        artifact: Some(ArtifactId {
+            schema: 2,
+            install_id: "seed-install".into(),
+            sha256_short: "aaaabbbbcccc".into(),
+        }),
+    };
+    let s = Server::start_with_admin(cfg, info, factory, admin).unwrap();
+    s.wait_ready(Duration::from_secs(10)).unwrap();
+    (s, hub)
+}
+
+/// Offline greedy replay at a pinned weights generation — the oracle the
+/// served transcripts must match bit-exactly.
+fn offline_greedy(generation: u64, prompt: &[i32], steps: usize) -> Vec<i32> {
+    let mut e = MockEngine::new(MODEL_BATCH, SEQ_LEN).at_generation(generation);
+    e.step_cost = Duration::ZERO;
+    let mut toks = vec![e.gen_prefill(0, prompt, &SampleParams::greedy()).unwrap()];
+    for _ in 1..steps {
+        let last = *toks.last().unwrap();
+        toks.push(e.gen_step(0, last).unwrap());
+    }
+    toks
+}
+
+/// The hot-reload contract, end to end over TCP: a decode session that
+/// was admitted before `POST /admin/reload` finishes bit-exact on its
+/// admission-time weights (== a hubless generation-1 offline replay), a
+/// session admitted after decodes on the new generation, and `/statz`
+/// tracks the generation, reload count, and new artifact identity.
+#[test]
+fn admin_reload_pins_inflight_sessions_and_switches_new_ones() {
+    let (server, _hub) = start_hub_server(Duration::ZERO, Duration::from_millis(2));
+    let addr = server.addr().to_string();
+    let mut a = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+    let mut b = Client::connect(&addr, Duration::from_secs(10)).unwrap();
+
+    // Startup identity: the AdminHooks artifact, generation 1, no reloads.
+    let statz = b.get_json("/statz").unwrap();
+    let art = statz.req("artifact").unwrap();
+    assert_eq!(art.req("install_id").unwrap().as_str(), Some("seed-install"));
+    assert_eq!(art.req("sha256_short").unwrap().as_str(), Some("aaaabbbbcccc"));
+    assert_eq!(art.req("schema").unwrap().as_usize(), Some(2));
+    let w = statz.req("weights").unwrap();
+    assert_eq!(w.req("generation").unwrap().as_usize(), Some(1));
+    assert_eq!(w.req("reloads").unwrap().as_usize(), Some(0));
+
+    // Admit a streaming session and read its first token, so its prefill
+    // provably happened on generation 1...
+    let prompt = vec![3, 1, 4];
+    let steps = 16usize;
+    let mut sreq = GenerateRequest::greedy(None, prompt.clone(), steps);
+    sreq.stream = true;
+    let (status, _head) =
+        a.request_streaming("POST", "/v1/generate", Some(&sreq.to_json())).unwrap();
+    assert_eq!(status, 200);
+    let first = a.next_chunk().unwrap().expect("first stream event");
+    let ev = Json::parse(first.trim()).unwrap();
+    assert_eq!(ev.req("event").unwrap().as_str(), Some("token"));
+    let mut streamed = vec![ev.req("token").unwrap().as_usize().unwrap() as i32];
+
+    // ...then hot-reload mid-session.
+    let body = Json::obj(vec![("dir", Json::Str("/tmp/qtx-next".into()))]);
+    let (status, rbody) = b.request("POST", "/admin/reload", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{rbody}");
+    let rdoc = Json::parse(&rbody).unwrap();
+    assert_eq!(rdoc.req("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(rdoc.req("generation").unwrap().as_usize(), Some(2));
+
+    // The in-flight session finishes bit-exact on its admission weights.
+    while let Some(chunk) = a.next_chunk().unwrap() {
+        let ev = Json::parse(chunk.trim()).unwrap();
+        match ev.req("event").unwrap().as_str().unwrap() {
+            "token" => streamed.push(ev.req("token").unwrap().as_usize().unwrap() as i32),
+            "done" => {}
+            other => panic!("unexpected event {other:?} in {chunk:?}"),
+        }
+    }
+    let want_old = offline_greedy(1, &prompt, steps);
+    assert_eq!(streamed, want_old, "in-flight session must finish on generation-1 weights");
+
+    // A session admitted after the reload decodes on generation 2.
+    let req = GenerateRequest::greedy(None, prompt.clone(), steps);
+    let (status, body2) = b.request("POST", "/v1/generate", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200, "{body2}");
+    let fresh = GenerateResponse::parse(&body2).unwrap().tokens;
+    let want_new = offline_greedy(2, &prompt, steps);
+    assert_eq!(fresh, want_new, "post-reload sessions must decode on generation-2 weights");
+    assert_ne!(fresh, want_old, "the reload must actually change new sessions");
+
+    // `/statz` tracked the swap.
+    let statz = b.get_json("/statz").unwrap();
+    let w = statz.req("weights").unwrap();
+    assert_eq!(w.req("generation").unwrap().as_usize(), Some(2));
+    assert_eq!(w.req("reloads").unwrap().as_usize(), Some(1));
+    let art = statz.req("artifact").unwrap();
+    assert_eq!(art.req("install_id").unwrap().as_str(), Some("reload-/tmp/qtx-next"));
+    assert_eq!(art.req("generation").unwrap().as_usize(), Some(2));
+
+    drop(a);
+    drop(b);
+    server.stop();
+}
+
+/// Reload under score load: every request that was in flight or arrives
+/// during the swap completes — zero failures — and the server ends on the
+/// new generation.
+#[test]
+fn admin_reload_under_load_drops_no_requests() {
+    let (server, _hub) = start_hub_server(Duration::from_millis(2), Duration::from_micros(100));
+    let addr = server.addr().to_string();
+
+    let load = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            loadgen::run(&LoadgenConfig {
+                addr,
+                clients: 4,
+                requests_per_client: 60,
+                vocab: 128,
+                seq_len: 0, // probe /healthz
+                seed: 11,
+                timeout: Duration::from_secs(10),
+                open_rate_rps: None,
+                gen: None,
+            })
+            .unwrap()
+        })
+    };
+    // Land the reload inside the run (the batch cost paces it to >100ms);
+    // even a reload that misses the window must drop nothing.
+    std::thread::sleep(Duration::from_millis(30));
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+    let body = Json::obj(vec![("dir", Json::Str("/tmp/qtx-next".into()))]);
+    let (status, rbody) = c.request("POST", "/admin/reload", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{rbody}");
+
+    let report = load.join().unwrap();
+    assert_eq!(report.errors, 0, "a hot reload must not fail any request");
+    assert_eq!(report.ok, 240);
+
+    let statz = c.get_json("/statz").unwrap();
+    assert_eq!(statz.req("weights").unwrap().req("generation").unwrap().as_usize(), Some(2));
+    drop(c);
+    server.stop();
+}
+
+/// Drain mode: `POST /admin/drain` refuses new score/generate work with
+/// 503 *before* dispatch (deliberate back-pressure — `rejected_full`
+/// stays zero), flips `/healthz` to `draining`/`ready: false` so probes
+/// route around the replica, and re-enabling restores service on the same
+/// connection. Also pins the admin surface's error contract: reload
+/// without a hook is 501, a bodyless reload is 400, GET on either admin
+/// route is 405.
+#[test]
+fn admin_drain_stops_admissions_until_reenabled() {
+    // Plain server, no admin hooks: drain must work everywhere.
+    let server = start_server_with(BatchPolicy::Continuous, 5, 128, 16, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+
+    // `{}` body: enable is the default.
+    let (status, body) = c.request("POST", "/admin/drain", Some(&Json::obj(vec![]))).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(Json::parse(&body).unwrap().req("draining").unwrap().as_bool(), Some(true));
+
+    // Alive but out of rotation.
+    let (status, body) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 503);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.req("status").unwrap().as_str(), Some("draining"));
+    assert_eq!(doc.req("ready").unwrap().as_bool(), Some(false));
+    assert_eq!(doc.req("draining").unwrap().as_bool(), Some(true));
+
+    // New work refused before dispatch...
+    let (status, body) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 503);
+    assert!(body.contains("draining"), "{body}");
+    let g = GenerateRequest::greedy(None, vec![1, 2], 4);
+    let (status, _) = c.request("POST", "/v1/generate", Some(&g.to_json())).unwrap();
+    assert_eq!(status, 503);
+    // ...and counted as back-pressure, not shed load.
+    let statz = c.get_json("/statz").unwrap();
+    assert_eq!(
+        statz.req("requests").unwrap().req("rejected_full").unwrap().as_usize(),
+        Some(0),
+        "drain refusals must not count as queue-full sheds"
+    );
+
+    // Disable: straight back into rotation on the same keep-alive socket.
+    let off = Json::obj(vec![("enable", Json::Bool(false))]);
+    let (status, body) = c.request("POST", "/admin/drain", Some(&off)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(Json::parse(&body).unwrap().req("draining").unwrap().as_bool(), Some(false));
+    let (status, _) = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+
+    // Admin error contract.
+    let rbody = Json::obj(vec![("dir", Json::Str("/tmp/x".into()))]);
+    let (status, _) = c.request("POST", "/admin/reload", Some(&rbody)).unwrap();
+    assert_eq!(status, 501, "no reload hook configured");
+    let (status, _) = c.request("POST", "/admin/reload", Some(&Json::obj(vec![]))).unwrap();
+    assert_eq!(status, 400, "reload needs a dir");
+    let (status, _) = c.request("GET", "/admin/reload", None).unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = c.request("GET", "/admin/drain", None).unwrap();
+    assert_eq!(status, 405);
+
+    drop(c);
+    server.stop();
+}
+
+/// A failing reload hook answers 500 with the hook's error text, keeps
+/// the old generation serving, and leaves the connection usable.
+#[test]
+fn admin_reload_failure_keeps_serving_old_generation() {
+    let hub = Arc::new(WeightHub::new(Arc::new(())));
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig {
+            max_batch: MODEL_BATCH,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 128,
+        },
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(10),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let factory: EngineFactory = {
+        let hub = hub.clone();
+        Arc::new(move || {
+            Ok(Box::new(MockEngine::new(MODEL_BATCH, SEQ_LEN).with_hub(hub.clone()))
+                as Box<dyn ScoreEngine>)
+        })
+    };
+    let admin = AdminHooks {
+        reload: Some(Arc::new(|dir: &std::path::Path| {
+            anyhow::bail!("entry \"params.bin\" fails its checksum in {dir:?}")
+        })),
+        artifact: None,
+    };
+    let server = Server::start_with_admin(cfg, info, factory, admin).unwrap();
+    server.wait_ready(Duration::from_secs(10)).unwrap();
+    let mut c = Client::connect(&server.addr().to_string(), Duration::from_secs(5)).unwrap();
+
+    let body = Json::obj(vec![("dir", Json::Str("/tmp/corrupt".into()))]);
+    let (status, rbody) = c.request("POST", "/admin/reload", Some(&body)).unwrap();
+    assert_eq!(status, 500, "{rbody}");
+    assert!(rbody.contains("checksum"), "hook error must reach the caller: {rbody}");
+
+    // Nothing swapped; the connection still serves.
+    let statz = c.get_json("/statz").unwrap();
+    let w = statz.req("weights").unwrap();
+    assert_eq!(w.req("generation").unwrap().as_usize(), Some(1));
+    assert_eq!(w.req("reloads").unwrap().as_usize(), Some(0));
+    let req = ScoreRequest { id: None, tokens: vec![1, 2, 3], targets: None };
+    let (status, _) = c.request("POST", "/v1/score", Some(&req.to_json())).unwrap();
+    assert_eq!(status, 200);
+
+    drop(c);
+    server.stop();
+}
+
+/// The startup-failure `/healthz` payload names the artifact dir and its
+/// package schema when the engine factory fails the manifest serve gate —
+/// the operator reads the fix from the probe, not the server log.
+#[test]
+fn healthz_startup_failure_names_artifact_dir_and_schema() {
+    // A real legacy manifest (no serve_score program, no package block),
+    // gated exactly like `qtx serve --engine pjrt` does it.
+    const LEGACY: &str = r#"{
+      "fingerprint": "x",
+      "config": {"name":"c","family":"bert","attention":"softmax",
+        "n_layers":2,"d_model":8,"n_heads":2,"seq_len":4,"vocab_size":16,
+        "n_classes":0,"patch_dim":0,"batch_size":2,"causal":false,
+        "use_gate":false,"objective":"mlm","d_head":4,"ln_placement":"post",
+        "patch_ln":false,"gate_hidden":4,"init_std":0.02,"adam_b1":0.9,
+        "adam_b2":0.999,"weight_decay":0.01,"grad_clip":1.0,"d_ff":32},
+      "params": [],
+      "programs": {},
+      "quant_points": []
+    }"#;
+    let probe = MockEngine::new(MODEL_BATCH, SEQ_LEN);
+    let cfg = ServerConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        max_connections: 16,
+        engines: 1,
+        policy: BatchPolicy::Continuous,
+        batcher: BatcherConfig::default(),
+        admit_window: Duration::ZERO,
+        read_timeout: Duration::from_secs(60),
+        request_timeout: Duration::from_secs(30),
+        trace: TraceConfig::default(),
+        fault: Default::default(),
+    };
+    let info = EngineInfo {
+        seq_len: SEQ_LEN,
+        max_batch: MODEL_BATCH,
+        vocab: 1024,
+        causal: probe.causal,
+        decode: true,
+        describe: probe.describe(),
+        mem: EngineMem::default(),
+        gemm_threads: 1,
+    };
+    let server = Server::start(
+        cfg,
+        info,
+        Arc::new(|| {
+            let m = qtx::runtime::Manifest::parse(LEGACY).expect("fixture parses");
+            m.require_serve_score_at(std::path::Path::new("/srv/artifacts/bert_tiny_softmax"))?;
+            unreachable!("the legacy manifest has no serve_score program")
+        }),
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    assert!(server.wait_ready(Duration::from_secs(5)).is_err(), "startup must fail");
+
+    let t0 = Instant::now();
+    let doc = loop {
+        let mut c = Client::connect(&addr, Duration::from_secs(5)).unwrap();
+        let (status, body) = c.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 503);
+        let doc = Json::parse(&body).unwrap();
+        if doc.req("status").unwrap().as_str() == Some("unavailable") {
+            break doc;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "never turned unavailable: {body}");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let err = doc.req("error").unwrap().as_str().unwrap();
+    assert!(err.contains("/srv/artifacts/bert_tiny_softmax"), "dir in payload: {err}");
+    assert!(err.contains("legacy manifest (no package block)"), "schema label in payload: {err}");
+    assert!(err.contains("serve_score"), "root cause in payload: {err}");
     server.stop();
 }

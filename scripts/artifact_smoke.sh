@@ -1,0 +1,174 @@
+#!/usr/bin/env bash
+# Artifact-lifecycle smoke for CI: synthesize an artifact dir, walk it
+# through `qtx pack` → corruption → `qtx doctor` (exit 2) → repair →
+# `qtx install` → `qtx serve --mock --artifact-dir`, then hot-swap the
+# weight generation with `POST /admin/reload` while `qtx loadgen` runs
+# and drill `POST /admin/drain`. The acceptance bar is the
+# docs/ARTIFACTS.md contract: doctor's exit codes match its verdicts,
+# install never disturbs a live dir, and the reload loses zero requests.
+# Every doctor run is appended to ARTIFACT_DOCTOR_transcript.txt, which
+# CI archives next to the bench trajectories.
+#
+#   scripts/artifact_smoke.sh
+#
+# Port: QTX_ARTIFACT_SMOKE_PORT (default 8797). Pure bash + /dev/tcp —
+# no curl in the toolchain image.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PORT="${QTX_ARTIFACT_SMOKE_PORT:-8797}"
+BIN=target/release/qtx
+[[ -x "$BIN" ]] || cargo build --release
+
+WORK=target/artifact_smoke
+rm -rf "$WORK"
+mkdir -p "$WORK"
+SRC="$WORK/src/bert_tiny_softmax"
+DEST="$WORK/installed/bert_tiny_softmax"
+TRANSCRIPT=ARTIFACT_DOCTOR_transcript.txt
+: > "$TRANSCRIPT"
+
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]}"; do kill "$pid" 2>/dev/null || true; done
+    for pid in "${PIDS[@]}"; do wait "$pid" 2>/dev/null || true; done
+}
+trap cleanup EXIT
+
+# doctor_expect RC LABEL DIR: run `qtx doctor`, append the transcript,
+# fail unless the exit code matches the expected verdict.
+doctor_expect() {
+    local want="$1" label="$2" dir="$3" rc=0 out
+    out=$("$BIN" doctor --dir "$dir" 2>&1) || rc=$?
+    {
+        echo "== qtx doctor --dir $dir ($label; exit $rc, expected $want) =="
+        echo "$out"
+        echo
+    } >> "$TRANSCRIPT"
+    if [[ "$rc" != "$want" ]]; then
+        echo "artifact_smoke: doctor($label) exited $rc, expected $want:" >&2
+        echo "$out" >&2
+        exit 1
+    fi
+}
+
+# A minimal but structurally real artifact dir (same shape the package
+# unit tests use): one program file, one 300-byte payload, a legacy
+# manifest for `qtx pack` to upgrade in place.
+make_payload() {
+    mkdir -p "$SRC"
+    printf 'HloModule serve\nROOT r = f32[] constant(0)\n' > "$SRC/serve.hlo.txt"
+    head -c 300 /dev/zero | tr '\0' 'A' > "$SRC/weights.bin"
+}
+make_payload
+cat > "$SRC/manifest.json" <<'EOF'
+{"version":5,"fingerprint":"fp_smoke","config":{"name":"bert_tiny_softmax","attention":"clipped_softmax","use_gate":false},"quant_points":["embed","L0.q"]}
+EOF
+
+# Legacy dir: fixable (exit 1) — doctor names `qtx pack` as the fix.
+doctor_expect 1 "legacy manifest" "$SRC"
+
+"$BIN" pack --dir "$SRC"
+doctor_expect 0 "freshly packed" "$SRC"
+
+# One flipped byte, same size: checksum failure, exit 2.
+printf 'B' | dd of="$SRC/weights.bin" bs=1 seek=10 count=1 conv=notrunc status=none
+doctor_expect 2 "corrupted payload" "$SRC"
+
+# Repair = restore the payload and repack.
+make_payload
+"$BIN" pack --dir "$SRC"
+doctor_expect 0 "repaired" "$SRC"
+
+"$BIN" install --from "$SRC" --to "$DEST"
+doctor_expect 0 "installed" "$DEST"
+
+# Serve the installed dir's identity on the mock engine; /admin/reload
+# re-verifies it and publishes the next weight generation.
+"$BIN" serve --mock --port "$PORT" --artifact-dir "$DEST" & PIDS+=($!)
+
+http_get() { # http_get PATH -> body
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'GET %s HTTP/1.0\r\nHost: localhost\r\n\r\n' "$1" >&3
+    sed $'1,/^\r*$/d' <&3
+    exec 3<&- 3>&-
+}
+
+http_post() { # http_post PATH BODY -> status line + body on separate lines
+    local body="$2"
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'POST %s HTTP/1.0\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: %s\r\n\r\n%s' \
+        "$1" "${#body}" "$body" >&3
+    awk 'NR==1{print; next} blank{print} /^\r?$/{blank=1}' <&3
+    exec 3<&- 3>&-
+}
+
+ready=0
+for _ in $(seq 1 100); do
+    if body=$(http_get /healthz 2>/dev/null) && [[ "$body" == *'"ok"'* ]]; then
+        ready=1
+        break
+    fi
+    sleep 0.1
+done
+[[ "$ready" == 1 ]] || { echo "artifact_smoke: server never became ready" >&2; exit 1; }
+
+# Startup identity: /statz carries the installed package's schema.
+statz=$(http_get /statz)
+[[ "$statz" == *'"artifact"'* && "$statz" == *'"schema":2'* ]] || {
+    echo "artifact_smoke: /statz missing the artifact identity block:" >&2
+    echo "$statz" >&2
+    exit 1
+}
+
+# Hot reload under load: 120 closed-loop scores with a mid-run swap.
+"$BIN" loadgen --port "$PORT" --threads 4 --requests 30 > "$WORK/loadgen.out" & LG=$!
+PIDS+=($LG)
+sleep 0.3
+reload=$(http_post /admin/reload "{\"dir\": \"$DEST\"}")
+[[ "$reload" == *" 200 "* && "$reload" == *'"generation":2'* ]] || {
+    echo "artifact_smoke: /admin/reload failed: $reload" >&2
+    exit 1
+}
+wait "$LG"
+cat "$WORK/loadgen.out"
+json=$(grep '^loadgen JSON:' "$WORK/loadgen.out" | sed 's/^loadgen JSON: //')
+[[ -n "$json" ]] || { echo "artifact_smoke: no loadgen JSON line" >&2; exit 1; }
+causes=$(sed -n 's/.*"errors_by_cause":{\([^}]*\)}.*/\1/p' <<<"$json")
+if [[ -n "$(tr -d '[:space:]' <<<"$causes")" ]]; then
+    echo "artifact_smoke: requests lost across the reload: $causes" >&2
+    exit 1
+fi
+
+statz=$(http_get /statz)
+[[ "$statz" == *'"reloads":1'* ]] || {
+    echo "artifact_smoke: /statz does not show the reload:" >&2
+    echo "$statz" >&2
+    exit 1
+}
+
+# Drain drill: admissions stop (healthz degrades to draining), then
+# re-enabling restores service.
+drain=$(http_post /admin/drain '{}')
+[[ "$drain" == *'"draining":true'* ]] || {
+    echo "artifact_smoke: /admin/drain did not engage: $drain" >&2
+    exit 1
+}
+health=$(http_get /healthz)
+[[ "$health" == *'"draining"'* ]] || {
+    echo "artifact_smoke: draining server still reports healthy: $health" >&2
+    exit 1
+}
+undrain=$(http_post /admin/drain '{"enable": false}')
+[[ "$undrain" == *'"draining":false'* ]] || {
+    echo "artifact_smoke: /admin/drain did not release: $undrain" >&2
+    exit 1
+}
+health=$(http_get /healthz)
+[[ "$health" == *'"ok"'* ]] || {
+    echo "artifact_smoke: server did not recover from drain: $health" >&2
+    exit 1
+}
+
+echo "artifact_smoke: pack/doctor/install lifecycle + 120 requests over a hot reload, no lost requests"
